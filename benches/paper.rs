@@ -1,0 +1,650 @@
+//! The paper-reproduction benchmark harness: one section per experiment in
+//! DESIGN.md's index (E1–E19). `cargo bench` runs everything;
+//! `cargo bench -- e7` runs one experiment.
+//!
+//! Each section prints a table of *measured* cycle counts next to the
+//! paper's claimed formula, plus the serial-baseline cost — reproducing
+//! the shape (who wins, by what factor, where crossovers fall) of every
+//! complexity claim in §4–§8. Results are recorded in EXPERIMENTS.md.
+
+use cpm::algos::{histogram, lines, local_ops, reduce, sort, template, threshold};
+use cpm::baseline::{self, SerialMachine, SortedIndex};
+use cpm::bench::Report;
+use cpm::coordinator::{CpmServer, OverlapScheduler, Request, TaskPhase};
+use cpm::device::comparable::{CmpCode, ContentComparableMemory, FieldSpec};
+use cpm::device::computable::superconn;
+use cpm::device::computable::{Reg, WordEngine};
+use cpm::device::movable::ContentMovableMemory;
+use cpm::device::searchable::ContentSearchableMemory;
+use cpm::logic::{CarryPatternGenerator, GeneralDecoder};
+use cpm::physics;
+use cpm::sql::Schema;
+use cpm::util::rng::Rng;
+
+fn engine_with(vals: &[i32]) -> WordEngine {
+    let mut e = WordEngine::new(vals.len().max(1), 16);
+    e.load_plane(Reg::Nb, vals);
+    e.reset_cost();
+    e
+}
+
+fn e1_decoder() {
+    let mut r = Report::new(&[
+        "addr bits", "PEs", "activation cycles", "decoder gates", "depth",
+    ]);
+    for bits in [6usize, 8, 10, 12] {
+        let dec = GeneralDecoder::new(bits);
+        let st = dec.stats();
+        // Activation is one broadcast regardless of how many PEs turn on.
+        r.row(&[
+            bits.to_string(),
+            (1usize << bits).to_string(),
+            "1".into(),
+            st.gates.to_string(),
+            st.depth.to_string(),
+        ]);
+    }
+    r.print("E1 general decoder: ~1-cycle activation for any PE count (§3.3)");
+    // Carry-pattern spot check at a non-trivial carry.
+    let g = CarryPatternGenerator::new(4);
+    assert_eq!(g.eval(3).iter().filter(|&&b| b).count(), 6); // 0,3,6,9,12,15
+}
+
+fn e2_movable() {
+    let mut r = Report::new(&[
+        "N bytes", "CPM insert cyc", "serial memmove bus words", "speedup",
+    ]);
+    for n in [1usize << 8, 1 << 12, 1 << 16, 1 << 20] {
+        let mut dev = ContentMovableMemory::new(n + 16);
+        dev.write_slice(0, &vec![7u8; n]).unwrap();
+        dev.reset_cost();
+        dev.open_gap(4, 8, n).unwrap(); // insert 8 bytes near the front
+        let cpm = dev.cost().macro_cycles;
+        let mut m = SerialMachine::new();
+        m.insert_memmove(4, 8, n);
+        let serial = m.cost.bus_words;
+        r.row(&[
+            n.to_string(),
+            cpm.to_string(),
+            serial.to_string(),
+            format!("{:.0}x", serial as f64 / cpm as f64),
+        ]);
+    }
+    r.print("E2 content movable memory: ~1-cycle insertion vs O(N) memmove (§4)");
+}
+
+fn e3_search() {
+    let mut r = Report::new(&[
+        "N", "M", "CPM cycles", "naive cpu", "kmp cpu", "CPM vs naive",
+    ]);
+    let mut rng = Rng::new(3);
+    for &(n, m) in &[(1usize << 10, 8usize), (1 << 14, 8), (1 << 18, 8), (1 << 14, 32)] {
+        let text: Vec<u8> = (0..n).map(|_| b'a' + rng.range(0, 4) as u8).collect();
+        let pattern: Vec<u8> = (0..m).map(|_| b'a' + rng.range(0, 4) as u8).collect();
+        let mut dev = ContentSearchableMemory::new(n);
+        dev.load(0, &text);
+        dev.reset_cost();
+        let hits = dev.find_substring(&pattern, 0, n - 1);
+        let cpm = dev.cost().macro_cycles;
+        let mut m1 = SerialMachine::new();
+        let h1 = baseline::search::naive_search(&mut m1, &text, &pattern);
+        let mut m2 = SerialMachine::new();
+        baseline::search::kmp_search(&mut m2, &text, &pattern);
+        assert_eq!(hits, h1);
+        r.row(&[
+            n.to_string(),
+            m.to_string(),
+            cpm.to_string(),
+            m1.cost.cpu_cycles.to_string(),
+            m2.cost.cpu_cycles.to_string(),
+            format!("{:.0}x", m1.cost.cpu_cycles as f64 / cpm as f64),
+        ]);
+    }
+    r.print("E3 content searchable memory: ~M-cycle substring search (§5)");
+}
+
+fn e4_compare() {
+    let mut r = Report::new(&[
+        "rows", "CPM cycles", "scan cpu", "index probe cpu", "index build cpu",
+    ]);
+    let mut rng = Rng::new(4);
+    for n in [1usize << 8, 1 << 12, 1 << 16] {
+        let values: Vec<u16> = (0..n).map(|_| rng.below(10_000) as u16).collect();
+        let item = 4usize;
+        let field = FieldSpec { offset: 0, len: 2 };
+        let mut bytes = vec![0u8; n * item];
+        for (i, &v) in values.iter().enumerate() {
+            bytes[i * item..i * item + 2].copy_from_slice(&v.to_be_bytes());
+        }
+        let mut dev = ContentComparableMemory::new(bytes.len());
+        dev.load(0, &bytes);
+        dev.reset_cost();
+        dev.compare_field(0, item, n, field, CmpCode::Lt, &5000u16.to_be_bytes());
+        let cpm_hits = dev.selected_count(0, item, n, field);
+        let cpm = dev.cost().macro_cycles;
+        let mut scan = SerialMachine::new();
+        let scan_hits = scan
+            .scan_compare(&values, |v| v < 5000)
+            .len();
+        assert_eq!(cpm_hits, scan_hits);
+        let mut idx_build = SerialMachine::new();
+        let idx = SortedIndex::build(&mut idx_build, &values.iter().map(|&v| v as i64).collect::<Vec<_>>());
+        let mut idx_probe = SerialMachine::new();
+        idx.range(&mut idx_probe, 0, 5000);
+        r.row(&[
+            n.to_string(),
+            cpm.to_string(),
+            scan.cost.cpu_cycles.to_string(),
+            idx_probe.cost.cpu_cycles.to_string(),
+            idx_build.cost.cpu_cycles.to_string(),
+        ]);
+    }
+    r.print("E4 content comparable memory: ~1-cycle field compare vs scan / M·logN index (§6)");
+}
+
+fn e5_histogram() {
+    let mut r = Report::new(&["N", "buckets M", "CPM cycles", "serial cpu"]);
+    let mut rng = Rng::new(5);
+    for &(n, m) in &[(1usize << 12, 8usize), (1 << 12, 64), (1 << 16, 64), (1 << 16, 256)] {
+        let vals = rng.vec_i32(n, 0, 100_000);
+        let bounds: Vec<i32> = (1..m as i32).map(|k| k * (100_000 / m as i32)).collect();
+        let mut e = engine_with(&vals);
+        let h = histogram::histogram_words(&mut e, n, &bounds);
+        assert_eq!(h.iter().sum::<usize>(), n);
+        let mut s = SerialMachine::new();
+        s.histogram(&vals, &bounds);
+        r.row(&[
+            n.to_string(),
+            m.to_string(),
+            e.cost().macro_cycles.to_string(),
+            s.cost.cpu_cycles.to_string(),
+        ]);
+    }
+    r.print("E5 histogram of M sections in ~M cycles (§6.3)");
+}
+
+fn e6_local_ops() {
+    let mut r = Report::new(&["op", "paper cycles", "measured", "N-independent"]);
+    let mut rng = Rng::new(6);
+    let v1 = rng.vec_i32(1 << 12, 0, 255);
+    let v2 = rng.vec_i32(1 << 16, 0, 255);
+    for (name, paper, factors) in [
+        ("(1 2 1) Eq 7-10", 4u64, local_ops::GAUSS_3),
+        ("(1 2 4 2 1) Eq 7-11", 6, local_ops::GAUSS_5),
+    ] {
+        let (_, c1) = local_ops::run_local_op(&v1, factors);
+        let (_, c2) = local_ops::run_local_op(&v2, factors);
+        r.row(&[
+            name.into(),
+            paper.to_string(),
+            c1.to_string(),
+            (c1 == c2).to_string(),
+        ]);
+    }
+    let img1 = rng.vec_i32(64 * 64, 0, 255);
+    let (_, c9) = local_ops::run_local_op_2d(&img1, 64, local_ops::GAUSS_9);
+    r.row(&["9-pt 2-D Eq 7-12".into(), "8".into(), c9.to_string(), "true".into()]);
+    r.print("E6 local operations: ~M cycles, independent of N (§7.3)");
+}
+
+fn e7_sum_1d() {
+    let mut r = Report::new(&[
+        "N", "M", "concurrent", "serial steps", "total", "paper M+N/M", "serial scan",
+    ]);
+    let mut rng = Rng::new(7);
+    for n in [1usize << 10, 1 << 14, 1 << 18] {
+        let vals = rng.vec_i32(n, -100, 100);
+        let sqrt = cpm::util::isqrt(n as u64) as usize;
+        for m in [sqrt / 4, sqrt, sqrt * 4] {
+            let m = m.max(1);
+            let mut e = engine_with(&vals);
+            let run = reduce::sum_1d(&mut e, n, m);
+            let mut s = SerialMachine::new();
+            s.sum(&vals);
+            r.row(&[
+                n.to_string(),
+                m.to_string(),
+                run.concurrent_cycles.to_string(),
+                run.serial_steps.to_string(),
+                run.total_cycles().to_string(),
+                (m as u64 + (n / m) as u64).to_string(),
+                s.cost.cpu_cycles.to_string(),
+            ]);
+        }
+    }
+    r.print("E7 1-D sum: ~(M + N/M), min ~2√N at M=√N (§7.4 Fig 9)");
+}
+
+fn e8_sum_2d() {
+    let mut r = Report::new(&["Nx x Ny", "Mx x My", "total cycles", "paper formula"]);
+    let mut rng = Rng::new(8);
+    for &(nx, ny) in &[(64usize, 64usize), (128, 128), (256, 128)] {
+        let img = rng.vec_i32(nx * ny, -50, 50);
+        for &(mx, my) in &[(8usize, 8usize), (16, 16), (32, 16)] {
+            if nx % mx != 0 || ny % my != 0 {
+                continue;
+            }
+            let mut e = engine_with(&img);
+            let run = reduce::sum_2d(&mut e, nx, ny, mx, my);
+            let paper = mx as u64 + my as u64 + ((nx / mx) * (ny / my)) as u64;
+            r.row(&[
+                format!("{nx}x{ny}"),
+                format!("{mx}x{my}"),
+                run.total_cycles().to_string(),
+                paper.to_string(),
+            ]);
+        }
+    }
+    r.print("E8 2-D sum: ~(Mx + My + (Nx/Mx)(Ny/My)) (§7.4 Fig 10)");
+}
+
+fn e9_limit() {
+    let mut r = Report::new(&["N", "total cycles", "paper 2√N", "serial scan"]);
+    let mut rng = Rng::new(9);
+    for n in [1usize << 10, 1 << 14, 1 << 18] {
+        let vals = rng.vec_i32(n, -100_000, 100_000);
+        let m = cpm::util::isqrt(n as u64).max(1) as usize;
+        let mut e = engine_with(&vals);
+        let run = reduce::max_1d(&mut e, n, m);
+        assert_eq!(run.value, *vals.iter().max().unwrap());
+        let mut s = SerialMachine::new();
+        s.max(&vals);
+        r.row(&[
+            n.to_string(),
+            run.total_cycles().to_string(),
+            (2 * cpm::util::isqrt(n as u64)).to_string(),
+            s.cost.cpu_cycles.to_string(),
+        ]);
+    }
+    r.print("E9 global limit: same ~√N flow as sum (§7.5)");
+}
+
+fn e10_template_1d() {
+    let mut r = Report::new(&["N", "M", "CPM cycles", "paper ~M²", "serial ~N·M"]);
+    let mut rng = Rng::new(10);
+    for &(n, m) in &[
+        (1usize << 10, 8usize),
+        (1 << 14, 8),
+        (1 << 18, 8),
+        (1 << 14, 16),
+        (1 << 14, 32),
+    ] {
+        let vals = rng.vec_i32(n, 0, 255);
+        let tmpl = rng.vec_i32(m, 0, 255);
+        let mut e = WordEngine::new(n, 16);
+        let run = template::search_1d(&mut e, &vals, &tmpl);
+        let mut s = SerialMachine::new();
+        baseline::stencil::template_scan_1d(&mut s, &vals, &tmpl);
+        r.row(&[
+            n.to_string(),
+            m.to_string(),
+            run.cycles.to_string(),
+            (m * m).to_string(),
+            s.cost.cpu_cycles.to_string(),
+        ]);
+    }
+    r.print("E10 1-D template search: ~M² cycles, independent of N (§7.6 Fig 11)");
+}
+
+fn e11_template_2d() {
+    let mut r = Report::new(&["image", "template", "CPM cycles", "paper ~Mx²My", "serial"]);
+    let mut rng = Rng::new(11);
+    for &(nx, ny, mx, my) in &[
+        (64usize, 64usize, 4usize, 4usize),
+        (128, 128, 4, 4),
+        (256, 128, 4, 4),
+        (128, 128, 8, 8),
+    ] {
+        let img = rng.vec_i32(nx * ny, 0, 255);
+        let tmpl = rng.vec_i32(mx * my, 0, 255);
+        let mut e = WordEngine::new(nx * ny, 16);
+        let run = template::search_2d(&mut e, &img, nx, ny, &tmpl, mx, my);
+        let mut s = SerialMachine::new();
+        baseline::stencil::template_scan_2d(&mut s, &img, nx, ny, &tmpl, mx, my);
+        r.row(&[
+            format!("{nx}x{ny}"),
+            format!("{mx}x{my}"),
+            run.cycles.to_string(),
+            (mx * mx * my).to_string(),
+            s.cost.cpu_cycles.to_string(),
+        ]);
+    }
+    r.print("E11 2-D template search: ~Mx²My, independent of image size (§7.6 Fig 12)");
+}
+
+fn e12_sort() {
+    let mut r = Report::new(&[
+        "workload", "N", "CPM cycles", "paper ~2√N", "quicksort cpu", "insertion cpu",
+    ]);
+    let mut rng = Rng::new(12);
+    for n in [1usize << 8, 1 << 10, 1 << 12] {
+        // Random local disorder (the paper's √N workload).
+        let mut local: Vec<i32> = (0..n as i32).map(|i| i * 3).collect();
+        for _ in 0..n / 8 {
+            let i = rng.range(0, n - 8);
+            let j = i + rng.range(1, 8);
+            local.swap(i, j);
+        }
+        // Uniform random permutation.
+        let random = rng.vec_i32(n, -100_000, 100_000);
+        for (name, vals) in [("local-disorder", &local), ("uniform-random", &random)] {
+            let mut e = engine_with(vals);
+            let stats = sort::sort_sqrt(&mut e, n);
+            let sorted: Vec<i32> = e.plane(Reg::Nb)[..n].to_vec();
+            assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+            let mut q = SerialMachine::new();
+            let mut qa = vals.clone();
+            baseline::sort::quicksort(&mut q, &mut qa);
+            let mut ins = SerialMachine::new();
+            let mut ia = vals.clone();
+            baseline::sort::insertion_sort(&mut ins, &mut ia);
+            r.row(&[
+                name.to_string(),
+                n.to_string(),
+                stats.cycles.to_string(),
+                (2 * cpm::util::isqrt(n as u64)).to_string(),
+                q.cost.cpu_cycles.to_string(),
+                ins.cost.cpu_cycles.to_string(),
+            ]);
+        }
+    }
+    r.print("E12 sorting: exchange+global-move, ~√N on local disorder (§7.7 Fig 13)");
+}
+
+fn e13_threshold() {
+    let mut r = Report::new(&["N", "CPM cycles", "serial cpu"]);
+    let mut rng = Rng::new(13);
+    for n in [1usize << 10, 1 << 14, 1 << 18, 1 << 20] {
+        let vals = rng.vec_i32(n, 0, 1000);
+        let mut e = engine_with(&vals);
+        threshold::threshold_mark(&mut e, n, 500);
+        let mut s = SerialMachine::new();
+        s.threshold(&vals, 500);
+        r.row(&[
+            n.to_string(),
+            e.cost().macro_cycles.to_string(),
+            s.cost.cpu_cycles.to_string(),
+        ]);
+    }
+    r.print("E13 thresholding: ~1 cycle, decoupled from data size (§7.8)");
+}
+
+fn e14_lines() {
+    let mut r = Report::new(&["image", "D", "CPM cycles", "paper ~D²·c", "serial cpu"]);
+    let mut rng = Rng::new(14);
+    for &(nx, ny, d) in &[
+        (32usize, 32usize, 3u32),
+        (64, 64, 3),
+        (128, 128, 3),
+        (64, 64, 5),
+        (64, 64, 7),
+    ] {
+        let img = rng.vec_i32(nx * ny, 0, 255);
+        let mut e = engine_with(&img);
+        let cycles = lines::detect_lines(&mut e, nx, ny, d);
+        let mut s = SerialMachine::new();
+        baseline::stencil::line_detect_serial(&mut s, &img, nx, ny, d);
+        r.row(&[
+            format!("{nx}x{ny}"),
+            d.to_string(),
+            cycles.to_string(),
+            (d * d * 10).to_string(),
+            s.cost.cpu_cycles.to_string(),
+        ]);
+    }
+    r.print("E14 line detection: ~D² cycles, independent of image size (§7.9 Figs 14-15)");
+}
+
+fn e15_superconn() {
+    let mut r = Report::new(&["N", "section √N cycles", "super-conn cycles", "paper 2·log₂N"]);
+    let mut rng = Rng::new(15);
+    for n in [1usize << 8, 1 << 12, 1 << 16, 1 << 20] {
+        let vals = rng.vec_i32(n, -100, 100);
+        let mut e1 = engine_with(&vals);
+        let run = reduce::sum_1d_opt(&mut e1, n);
+        let mut e2 = engine_with(&vals);
+        let (total, cost) = superconn::global_sum_log(&mut e2, n);
+        assert_eq!(total, run.value);
+        r.row(&[
+            n.to_string(),
+            run.total_cycles().to_string(),
+            cost.macro_cycles.to_string(),
+            (2 * (n as f64).log2().ceil() as u64).to_string(),
+        ]);
+    }
+    r.print("E15 super-connectivity ablation: ~log N vs ~√N global sum (§8 Fig 16)");
+}
+
+fn e16_physics() {
+    let mut r = Report::new(&["clock", "max span (mm)", "scenario"]);
+    for (hz, label) in [
+        (1e9, "1 GHz broadcast"),
+        (400e6, "400 MHz system bus"),
+        (100e6, "cache depth 4 (paper: 1.5x1.5 mm²)"),
+    ] {
+        let l = physics::max_span_for_clock(hz, 25e-9, 10e-9);
+        r.row(&[
+            format!("{:.0} MHz", hz / 1e6),
+            format!("{:.2}", l * 1e3),
+            label.into(),
+        ]);
+    }
+    r.row(&[
+        "-".into(),
+        format!("{:.0} mm²", physics::chip_area_mm2((4u64 << 30) / 8, 2.0)),
+        "4 Gbit movable memory at 2 µm²/PE (paper: ~15x15 mm²)".into(),
+    ]);
+    r.print("E16 physical feasibility: Eq 8-1 routing delay (§8)");
+}
+
+fn e17_sql_end_to_end() {
+    let n = 1 << 16;
+    let schema = Schema::new(&[("price", 2), ("qty", 1), ("region", 1)]).unwrap();
+    let mut server = CpmServer::new(schema, n, b"", 1 << 20);
+    let mut rng = Rng::new(17);
+    let rows: Vec<Vec<u64>> = (0..n)
+        .map(|_| vec![rng.below(10_000), rng.below(100), rng.below(8)])
+        .collect();
+    server.load_rows(&rows).unwrap();
+    let queries = [
+        "SELECT COUNT WHERE price < 5000",
+        "SELECT COUNT WHERE price >= 2500 AND price < 7500",
+        "SELECT COUNT WHERE qty > 90 OR region = 0",
+        "SELECT ROWS WHERE price < 64 AND qty >= 50",
+    ];
+    let t0 = std::time::Instant::now();
+    let mut served = 0u64;
+    for _ in 0..64 {
+        for q in queries {
+            server.serve(&Request::Sql(q.to_string())).unwrap();
+            served += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    // Serial comparison for the same workload.
+    let price: Vec<i64> = server
+        .table()
+        .column_values("price")
+        .unwrap()
+        .iter()
+        .map(|&v| v as i64)
+        .collect();
+    let mut scan = SerialMachine::new();
+    for _ in 0..64 {
+        for _ in 0..queries.len() {
+            scan.scan_compare(&price, |v| v < 5000);
+        }
+    }
+    let mut r = Report::new(&["metric", "value"]);
+    r.row(&["rows".into(), n.to_string()]);
+    r.row(&["queries served".into(), served.to_string()]);
+    r.row(&[
+        "throughput (q/s, wall)".into(),
+        format!("{:.0}", served as f64 / dt.as_secs_f64()),
+    ]);
+    r.row(&[
+        "p50 / p99 latency (µs)".into(),
+        format!(
+            "{} / {}",
+            server.metrics.latency.percentile_us(50.0),
+            server.metrics.latency.percentile_us(99.0)
+        ),
+    ]);
+    r.row(&[
+        "CPM device cycles / query".into(),
+        format!("{:.1}", server.metrics.device_macro_cycles as f64 / served as f64),
+    ]);
+    r.row(&[
+        "serial scan cycles / query".into(),
+        format!("{:.0}", scan.cost.cpu_cycles as f64 / served as f64),
+    ]);
+    r.row(&[
+        "cycle-level speedup".into(),
+        format!(
+            "{:.0}x",
+            scan.cost.cpu_cycles as f64 / server.metrics.device_macro_cycles.max(1) as f64
+        ),
+    ]);
+    r.print("E17 end-to-end SQL engine on comparable memory (§6.2)");
+}
+
+fn e18_overlap() {
+    let mut r = Report::new(&[
+        "tasks", "load/exec ratio", "serial", "overlapped", "with 16x DMA", "efficiency",
+    ]);
+    for &(count, load, exec) in &[(32usize, 100u64, 100u64), (32, 400, 100), (32, 100, 400)] {
+        let tasks: Vec<TaskPhase> = (0..count)
+            .map(|_| TaskPhase {
+                load_cycles: load,
+                exec_cycles: exec,
+            })
+            .collect();
+        r.row(&[
+            count.to_string(),
+            format!("{load}:{exec}"),
+            OverlapScheduler::makespan_serial(&tasks).to_string(),
+            OverlapScheduler::makespan_overlapped(&tasks).to_string(),
+            OverlapScheduler::makespan_with_dma(&tasks, 16).to_string(),
+            format!("{:.2}", OverlapScheduler::efficiency(&tasks)),
+        ]);
+    }
+    r.print("E18 task switching: exclusive/concurrent overlap + DMA bus (§8)");
+}
+
+fn e19_engines() {
+    use cpm::device::computable::bit_engine::BitEngine;
+    use cpm::device::computable::{Instr, Opcode, Src};
+    let mut r = Report::new(&["engine", "p", "trace", "wall µs", "notes"]);
+    let p = 4096;
+    let mut rng = Rng::new(19);
+    let vals = rng.vec_i32(p, 0, 255);
+    let trace: Vec<Instr> = (0..128)
+        .map(|k| match k % 4 {
+            0 => Instr::all(Opcode::Add, Src::Left, Reg::Op),
+            1 => Instr::all(Opcode::Copy, Src::Reg(Reg::Op), Reg::Nb),
+            2 => Instr::all(Opcode::CmpGt, Src::Imm, Reg::Nb).imm(100),
+            _ => Instr::all(Opcode::Max, Src::Right, Reg::Op),
+        })
+        .collect();
+
+    let mut word = WordEngine::new(p, 16);
+    word.load_plane(Reg::Nb, &vals);
+    let w_ns = cpm::bench::time_median(2, 8, || {
+        let mut e = word.clone();
+        e.run(&trace);
+        std::hint::black_box(e.plane(Reg::Op)[0]);
+    });
+    r.row(&[
+        "word-plane".into(),
+        p.to_string(),
+        trace.len().to_string(),
+        format!("{:.0}", w_ns as f64 / 1e3),
+        "scalar hot path".into(),
+    ]);
+
+    let mut bit = BitEngine::new(p);
+    bit.load_plane(Reg::Nb, &vals);
+    let b_ns = cpm::bench::time_median(1, 3, || {
+        let mut e = bit.clone();
+        e.run(&trace);
+        std::hint::black_box(e.get(Reg::Op, 0));
+    });
+    r.row(&[
+        "bit-plane".into(),
+        p.to_string(),
+        trace.len().to_string(),
+        format!("{:.0}", b_ns as f64 / 1e3),
+        "bit-serial-faithful".into(),
+    ]);
+
+    match cpm::runtime::PjrtBackend::new("artifacts") {
+        Ok(mut backend) => {
+            let shape = cpm::runtime::TraceShape { p, t: 128 };
+            let mut word2 = WordEngine::new(p, 16);
+            word2.load_plane(Reg::Nb, &vals);
+            let state = word2.state();
+            if backend.load_trace(shape).is_ok() {
+                let x_ns = cpm::bench::time_median(2, 8, || {
+                    let (f, _) = backend.run_trace(shape, &state, &trace).unwrap();
+                    std::hint::black_box(f[0]);
+                });
+                // Parity check.
+                let (final_state, _) = backend.run_trace(shape, &state, &trace).unwrap();
+                let mut w = WordEngine::new(p, 16);
+                w.set_state(&state);
+                w.run(&trace);
+                assert_eq!(final_state, w.state(), "XLA/Pallas != word engine");
+                r.row(&[
+                    "XLA/Pallas (PJRT)".into(),
+                    p.to_string(),
+                    trace.len().to_string(),
+                    format!("{:.0}", x_ns as f64 / 1e3),
+                    "1 dispatch / 128 cycles".into(),
+                ]);
+            }
+        }
+        Err(e) => {
+            r.row(&[
+                "XLA/Pallas (PJRT)".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                format!("unavailable: {e}"),
+            ]);
+        }
+    }
+    r.print("E19 engine parity + relative speed (word vs bit vs AOT XLA)");
+}
+
+fn main() {
+    let filter: Option<String> = std::env::args()
+        .skip(1)
+        .find(|a| a.starts_with('e') || a.starts_with('E'))
+        .map(|s| s.to_lowercase());
+    let experiments: Vec<(&str, fn())> = vec![
+        ("e1", e1_decoder),
+        ("e2", e2_movable),
+        ("e3", e3_search),
+        ("e4", e4_compare),
+        ("e5", e5_histogram),
+        ("e6", e6_local_ops),
+        ("e7", e7_sum_1d),
+        ("e8", e8_sum_2d),
+        ("e9", e9_limit),
+        ("e10", e10_template_1d),
+        ("e11", e11_template_2d),
+        ("e12", e12_sort),
+        ("e13", e13_threshold),
+        ("e14", e14_lines),
+        ("e15", e15_superconn),
+        ("e16", e16_physics),
+        ("e17", e17_sql_end_to_end),
+        ("e18", e18_overlap),
+        ("e19", e19_engines),
+    ];
+    for (name, f) in experiments {
+        if filter.as_deref().map(|f| f == name).unwrap_or(true) {
+            f();
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Memory management on content movable memory (§4.2): the dynamic-object
+//! programming model — objects that grow and shrink in place, never
+//! fragment, and never trigger heap-wide copying — plus the §5.3 combined
+//! device (searchable + movable) running a live find-and-replace workload.
+//!
+//! ```bash
+//! cargo run --release --example memory_manager
+//! ```
+
+use cpm::algos::ObjectManager;
+use cpm::baseline::SerialMachine;
+use cpm::device::MutableSearchableMemory;
+use cpm::util::rng::Rng;
+
+fn main() -> cpm::Result<()> {
+    println!("== §4.2: object manager on content movable memory ==");
+    let mut om = ObjectManager::new(64 * 1024);
+    let mut rng = Rng::new(77);
+
+    // A log object that keeps appending while big neighbors live around it.
+    let log = om.create(b"log:")?;
+    let _blob1 = om.create(&vec![1u8; 20_000])?;
+    let table = om.create(b"id,name\n")?;
+    let _blob2 = om.create(&vec![2u8; 20_000])?;
+
+    let mut serial = SerialMachine::new();
+    for i in 0..50 {
+        let entry = format!("entry-{i};");
+        om.append(log, entry.as_bytes())?;
+        // Baseline: a packed serial heap memmoves everything after the log.
+        serial.insert_memmove(4, entry.len(), om.used());
+    }
+    for i in 0..20 {
+        let row = format!("{i},user{i}\n");
+        om.append(table, row.as_bytes())?;
+        serial.insert_memmove(24_000, row.len(), om.used());
+    }
+    om.check_invariants()?;
+    println!(
+        "grew 2 objects 70 times among 40 KB of neighbors: {} concurrent cycles",
+        om.cost().macro_cycles
+    );
+    println!(
+        "serial packed heap would stream {} bus words ({}x more traffic)",
+        serial.cost.bus_words,
+        serial.cost.bus_words / om.cost().macro_cycles.max(1)
+    );
+    println!(
+        "objects stay packed: {} bytes used, zero fragmentation by construction",
+        om.used()
+    );
+
+    // Random churn with invariants checked throughout.
+    let mut ids = Vec::new();
+    for _ in 0..200 {
+        match rng.range(0, 3) {
+            0 => {
+                let data: Vec<u8> = (0..rng.range(1, 64)).map(|_| rng.range(0, 256) as u8).collect();
+                if let Ok(id) = om.create(&data) {
+                    ids.push(id);
+                }
+            }
+            1 if !ids.is_empty() => {
+                let id = ids.swap_remove(rng.range(0, ids.len()));
+                om.delete(id)?;
+            }
+            _ if !ids.is_empty() => {
+                let id = ids[rng.range(0, ids.len())];
+                om.grow(id, 0, rng.range(1, 8))?;
+            }
+            _ => {}
+        }
+    }
+    om.check_invariants()?;
+    println!("200 random create/delete/grow ops: invariants hold ({} live objects)", om.object_count());
+
+    println!("\n== §5.3: searchable memory with content change ==");
+    let mut doc = MutableSearchableMemory::new(4096);
+    doc.load(b"The quick brown fox jumps over the lazy dog. The fox wins.")?;
+    let hits = doc.find(b"fox");
+    println!("find \"fox\" -> end positions {hits:?}");
+    let n = doc.replace_all(b"fox", b"CPM")?;
+    println!(
+        "replace_all fox->CPM: {n} edits -> {:?}",
+        String::from_utf8_lossy(doc.content())
+    );
+    println!(
+        "total combined-device cost: {} concurrent cycles",
+        doc.cost().macro_cycles
+    );
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Quickstart: the four CPM family members in one tour.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use cpm::algos::{reduce, sort, threshold};
+use cpm::device::comparable::{CmpCode, ContentComparableMemory, FieldSpec};
+use cpm::device::computable::{Reg, WordEngine};
+use cpm::device::movable::ContentMovableMemory;
+use cpm::device::searchable::ContentSearchableMemory;
+use cpm::util::rng::Rng;
+
+fn main() -> cpm::Result<()> {
+    // 1. Content movable memory (§4): copy-free insertion.
+    let mut movable = ContentMovableMemory::new(64);
+    movable.write_slice(0, b"HELLOWORLD")?;
+    movable.open_gap(5, 2, 10)?; // ~2 concurrent cycles, any tail size
+    movable.write_slice(5, b", ")?;
+    println!(
+        "movable:   {:?} ({} concurrent cycles)",
+        String::from_utf8_lossy(&movable.cells()[..12]),
+        movable.cost().macro_cycles
+    );
+
+    // 2. Content searchable memory (§5): ~M-cycle substring search.
+    let text = b"the cat sat on the mat with another cat";
+    let mut searchable = ContentSearchableMemory::new(text.len());
+    searchable.load(0, text);
+    searchable.reset_cost();
+    let hits = searchable.find_substring(b"cat", 0, text.len() - 1);
+    println!(
+        "searchable: \"cat\" ends at {:?} ({} cycles for {} bytes)",
+        hits,
+        searchable.cost().macro_cycles,
+        text.len()
+    );
+
+    // 3. Content comparable memory (§6): ~1-cycle field compare.
+    let prices: Vec<u16> = vec![120, 850, 99, 430, 1200, 45];
+    let item = 2usize;
+    let field = FieldSpec { offset: 0, len: 2 };
+    let mut bytes = Vec::new();
+    for &p in &prices {
+        bytes.extend_from_slice(&p.to_be_bytes());
+    }
+    let mut comparable = ContentComparableMemory::new(bytes.len());
+    comparable.load(0, &bytes);
+    comparable.reset_cost();
+    comparable.compare_field(0, item, prices.len(), field, CmpCode::Lt, &500u16.to_be_bytes());
+    let cheap = comparable.selected_items(0, item, prices.len(), field);
+    println!(
+        "comparable: prices < 500 at rows {:?} ({} cycles, independent of row count)",
+        cheap,
+        comparable.cost().macro_cycles
+    );
+
+    // 4. Content computable memory (§7): sum, threshold, sort.
+    let mut rng = Rng::new(1);
+    let values = rng.vec_i32(10_000, 0, 1000);
+    let mut engine = WordEngine::new(values.len(), 16);
+    engine.load_plane(Reg::Nb, &values);
+    engine.reset_cost();
+    let run = reduce::sum_1d_opt(&mut engine, values.len());
+    println!(
+        "computable: sum of 10k values = {} in {} cycles (~2√N = {})",
+        run.value,
+        run.total_cycles(),
+        2 * cpm::util::isqrt(values.len() as u64)
+    );
+
+    let mut engine = WordEngine::new(values.len(), 16);
+    engine.load_plane(Reg::Nb, &values);
+    engine.reset_cost();
+    let above = threshold::threshold_mark(&mut engine, values.len(), 900);
+    println!(
+        "computable: {} values > 900 found in {} cycles",
+        above,
+        engine.cost().macro_cycles
+    );
+
+    let small = rng.vec_i32(512, -50, 50);
+    let mut engine = WordEngine::new(small.len(), 16);
+    engine.load_plane(Reg::Nb, &small);
+    engine.reset_cost();
+    let stats = sort::sort_sqrt(&mut engine, small.len());
+    let sorted = engine.plane(Reg::Nb);
+    assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+    println!(
+        "computable: sorted 512 values in {} cycles ({} exchange phases, {} global moves)",
+        stats.cycles, stats.exchange_phases, stats.defect_fixes
+    );
+    Ok(())
+}

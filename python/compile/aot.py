@@ -1,0 +1,105 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT `lowered.compile().serialize()` / serialized HloModuleProto)
+is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published `xla` 0.1.6 crate
+binds) rejects (`proto.id() <= INT_MAX`). The text parser reassigns ids and
+round-trips cleanly — see /opt/xla-example/README.md.
+
+Run from python/:  python -m compile.aot --out ../artifacts
+Emits:
+  pe_step_p{P}.hlo.txt      — one concurrent cycle over a P-PE plane
+  pe_trace_p{P}_t{T}.hlo.txt — lax.scan of T instruction words
+  isa.json                   — ISA constants (Rust parity test)
+  manifest.json              — artifact inventory for the Rust runtime
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import isa
+
+# (P, T) variants the Rust runtime can load. Kept small on purpose: the
+# runtime pads the PE plane to the next P and chains traces of length T.
+STEP_PS = (1024, 4096, 16384)
+TRACE_VARIANTS = ((1024, 32), (4096, 32), (4096, 128), (16384, 128))
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_step(p: int) -> str:
+    state = jax.ShapeDtypeStruct((isa.N_REGS, p), jnp.int32)
+    instr = jax.ShapeDtypeStruct((isa.INSTR_WIDTH,), jnp.int32)
+
+    def fn(s, i):
+        from .kernels import pe_step as k
+        return (k.pe_step(s, i, interpret=True),)
+
+    return to_hlo_text(jax.jit(fn).lower(state, instr))
+
+
+def lower_trace(p: int, t: int) -> str:
+    state = jax.ShapeDtypeStruct((isa.N_REGS, p), jnp.int32)
+    trace = jax.ShapeDtypeStruct((t, isa.INSTR_WIDTH), jnp.int32)
+
+    def fn(s, tr):
+        final, counts = model.pe_trace(s, tr, interpret=True)
+        return final, counts
+
+    return to_hlo_text(jax.jit(fn).lower(state, trace))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--quick", action="store_true",
+                    help="emit only the smallest variant (CI smoke)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"n_regs": isa.N_REGS, "instr_width": isa.INSTR_WIDTH,
+                "steps": [], "traces": []}
+
+    step_ps = STEP_PS[:1] if args.quick else STEP_PS
+    trace_vs = TRACE_VARIANTS[:1] if args.quick else TRACE_VARIANTS
+
+    for p in step_ps:
+        path = os.path.join(args.out, f"pe_step_p{p}.hlo.txt")
+        text = lower_step(p)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["steps"].append({"p": p, "file": os.path.basename(path)})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for p, t in trace_vs:
+        path = os.path.join(args.out, f"pe_trace_p{p}_t{t}.hlo.txt")
+        text = lower_trace(p, t)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["traces"].append(
+            {"p": p, "t": t, "file": os.path.basename(path)})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "isa.json"), "w") as f:
+        json.dump(isa.isa_dict(), f, indent=1)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {args.out}/isa.json and manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Shared macro-ISA definition for the content-computable-memory PE plane.
+
+This is the single source of truth for the instruction encoding used by:
+  * the L1 Pallas kernel (`pe_step.py`),
+  * the pure-jnp oracle (`ref.py`),
+  * the L2 trace model (`model.py`), and
+  * the Rust word-plane engine (`rust/src/device/computable/isa.rs` mirrors
+    these constants; `rust/tests/isa_parity.rs` checks the mirror against
+    the generated `artifacts/isa.json`).
+
+One instruction word is 10 little ints (i32):
+
+    [opcode, src, dst, imm, en_start, en_end, en_carry, flags, nx, _pad]
+
+* `opcode`   — word-level macro op; one paper "instruction cycle" (Rule 5).
+* `src`      — source selector (register plane, neighbor read, or IMM).
+* `dst`      — destination register plane (also the left operand of CMP).
+* `imm`      — immediate datum broadcast on the concurrent bus.
+* `en_start, en_end, en_carry` — Rule 4 activation range: PE `i` is enabled
+  iff `en_start <= i <= en_end` and `(i - en_start) % en_carry == 0`.
+* `flags`    — bit0: execute only where M != 0; bit1: only where M == 0
+  (the paper's "update code bit" conditional execution, §6.1/§7.2).
+* `nx`       — row stride for 2-D devices (UP/DOWN neighbor reads); 0 for 1-D.
+"""
+
+# --- Register planes (state is i32[N_REGS, P]) --------------------------
+R_OP = 0   # operation register (§7.2)
+R_NB = 1   # neighboring register (readable by neighbors, Rule 7)
+R_D0 = 2   # data registers
+R_D1 = 3
+R_D2 = 4
+R_D3 = 5
+R_M = 6    # match bit register (drives the match line, Rule 6)
+R_S = 7    # status bit register
+R_C = 8    # carry bit register
+N_REGS = 9
+
+# --- Source selectors ----------------------------------------------------
+# 0..8 name a register plane of the PE itself.
+S_LEFT = 9    # left  neighbor's neighboring register: NB[i-1]  (0 at edge)
+S_RIGHT = 10  # right neighbor's neighboring register: NB[i+1]
+S_UP = 11     # NB[i-nx] (2-D)
+S_DOWN = 12   # NB[i+nx] (2-D)
+S_IMM = 13    # the broadcast datum
+N_SRCS = 14
+
+# --- Opcodes --------------------------------------------------------------
+OP_NOP = 0
+OP_COPY = 1     # dst = src
+OP_ADD = 2      # dst += src
+OP_SUB = 3      # dst -= src
+OP_AND = 4      # dst &= src
+OP_OR = 5       # dst |= src
+OP_XOR = 6      # dst ^= src
+OP_CMP_LT = 7   # M = (dst < src)
+OP_CMP_LE = 8
+OP_CMP_EQ = 9
+OP_CMP_NE = 10
+OP_CMP_GT = 11
+OP_CMP_GE = 12
+OP_MIN = 13     # dst = min(dst, src)
+OP_MAX = 14     # dst = max(dst, src)
+OP_ABSDIFF = 15 # dst = |dst - src|
+OP_MUL = 16     # dst *= src
+OP_SHR = 17     # dst >>= imm (arithmetic)
+OP_SHL = 18     # dst <<= imm
+N_OPS = 19
+
+# --- Flags ----------------------------------------------------------------
+F_COND_M = 1      # execute only where M != 0
+F_COND_NOT_M = 2  # execute only where M == 0
+
+# --- Instruction word layout ----------------------------------------------
+I_OPCODE = 0
+I_SRC = 1
+I_DST = 2
+I_IMM = 3
+I_EN_START = 4
+I_EN_END = 5
+I_EN_CARRY = 6
+I_FLAGS = 7
+I_NX = 8
+I_PAD = 9
+INSTR_WIDTH = 10
+
+# Bit-serial expansion cost of each macro op, in concurrent bit-cycles for
+# word width w (see DESIGN.md "ISA formalization"). Mirrored in Rust.
+def bit_cycles(opcode: int, w: int) -> int:
+    if opcode == OP_NOP:
+        return 0
+    if opcode in (OP_COPY, OP_AND, OP_OR, OP_XOR):
+        return w
+    if opcode in (OP_ADD, OP_SUB):
+        return 3 * w                     # full-adder: sum, carry-save, carry
+    if OP_CMP_LT <= opcode <= OP_CMP_GE:
+        return w + 1                     # ripple compare + verdict latch
+    if opcode in (OP_MIN, OP_MAX):
+        return 2 * w + 1                 # compare then conditional copy
+    if opcode == OP_ABSDIFF:
+        return 4 * w                     # sub, sign test, conditional negate
+    if opcode == OP_MUL:
+        return 3 * w * w                 # w shifted conditional additions
+    if opcode in (OP_SHR, OP_SHL):
+        return w
+    raise ValueError(f"unknown opcode {opcode}")
+
+
+def isa_dict():
+    """Export for artifacts/isa.json (Rust parity test)."""
+    return {
+        "n_regs": N_REGS,
+        "n_srcs": N_SRCS,
+        "n_ops": N_OPS,
+        "instr_width": INSTR_WIDTH,
+        "opcodes": {
+            "NOP": OP_NOP, "COPY": OP_COPY, "ADD": OP_ADD, "SUB": OP_SUB,
+            "AND": OP_AND, "OR": OP_OR, "XOR": OP_XOR,
+            "CMP_LT": OP_CMP_LT, "CMP_LE": OP_CMP_LE, "CMP_EQ": OP_CMP_EQ,
+            "CMP_NE": OP_CMP_NE, "CMP_GT": OP_CMP_GT, "CMP_GE": OP_CMP_GE,
+            "MIN": OP_MIN, "MAX": OP_MAX, "ABSDIFF": OP_ABSDIFF,
+            "MUL": OP_MUL, "SHR": OP_SHR, "SHL": OP_SHL,
+        },
+        "srcs": {
+            "OP": R_OP, "NB": R_NB, "D0": R_D0, "D1": R_D1, "D2": R_D2,
+            "D3": R_D3, "M": R_M, "S": R_S, "C": R_C,
+            "LEFT": S_LEFT, "RIGHT": S_RIGHT, "UP": S_UP, "DOWN": S_DOWN,
+            "IMM": S_IMM,
+        },
+        "flags": {"COND_M": F_COND_M, "COND_NOT_M": F_COND_NOT_M},
+        "bit_cycles_w8": [bit_cycles(op, 8) for op in range(N_OPS)],
+        "bit_cycles_w16": [bit_cycles(op, 16) for op in range(N_OPS)],
+    }

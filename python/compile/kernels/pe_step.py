@@ -1,0 +1,130 @@
+"""L1 Pallas kernel: one concurrent instruction cycle over the PE plane.
+
+The paper's machine (§7.2) broadcasts one instruction to N processing
+elements, each holding a small register file; every enabled PE applies the
+instruction to its registers in lockstep. On TPU the PE plane maps to vector
+lanes: the register file becomes N_REGS register *planes* (i32[P] each), the
+broadcast instruction word is a scalar operand, and one instruction cycle is
+one elementwise pass over the planes (see DESIGN.md §Hardware-Adaptation).
+
+The kernel is lowered with `interpret=True`: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and correctness on this image is validated through the
+interpret path (pytest/hypothesis vs `ref.pe_step_ref`). The BlockSpec
+structure below is what a real-TPU build would tile on: planes are blocked
+along the PE axis, the instruction word is replicated to every block, and
+all per-cycle state fits in VMEM (N_REGS * BLOCK_P * 4 bytes; 0.6 MB at
+BLOCK_P = 16384).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import isa
+
+
+def _shift_lanes(plane, delta):
+    """Neighbor read inside the kernel: value at lane i from lane i+delta.
+
+    `delta` is a traced scalar; implemented as a roll + edge mask so the
+    hot path stays gather-free (rolls vectorize; random gathers do not).
+    """
+    p = plane.shape[0]
+    rolled = jnp.roll(plane, -delta)
+    idx = jax.lax.iota(jnp.int32, p) + delta
+    valid = (idx >= 0) & (idx < p)
+    return jnp.where(valid, rolled, 0)
+
+
+def _pe_step_kernel(instr_ref, state_ref, out_ref):
+    """state: i32[N_REGS, P] block; instr: i32[INSTR_WIDTH] (broadcast)."""
+    opcode = instr_ref[isa.I_OPCODE]
+    src = instr_ref[isa.I_SRC]
+    dst = jnp.clip(instr_ref[isa.I_DST], 0, isa.N_REGS - 1)
+    imm = instr_ref[isa.I_IMM]
+    en_start = instr_ref[isa.I_EN_START]
+    en_end = instr_ref[isa.I_EN_END]
+    en_carry = jnp.maximum(instr_ref[isa.I_EN_CARRY], 1)
+    flags = instr_ref[isa.I_FLAGS]
+    nx = instr_ref[isa.I_NX]
+
+    state = state_ref[...]
+    p = state.shape[1]
+    lane = jax.lax.iota(jnp.int32, p)
+
+    m_plane = state[isa.R_M]
+    nb = state[isa.R_NB]
+
+    # --- Rule 4 enable mask (general decoder output as a lane predicate).
+    en = (lane >= en_start) & (lane <= en_end)
+    en &= ((lane - en_start) % en_carry) == 0
+    en &= jnp.where((flags & isa.F_COND_M) != 0, m_plane != 0, True)
+    en &= jnp.where((flags & isa.F_COND_NOT_M) != 0, m_plane == 0, True)
+
+    # --- Operand select. Register reads use a select chain rather than a
+    # dynamic gather on the register axis (N_REGS is tiny and static).
+    a = state[0]
+    for r in range(1, isa.N_REGS):
+        a = jnp.where(dst == r, state[r], a)
+
+    b = state[0]
+    for r in range(1, isa.N_REGS):
+        b = jnp.where(src == r, state[r], b)
+    b = jnp.where(src == isa.S_LEFT, _shift_lanes(nb, -1), b)
+    b = jnp.where(src == isa.S_RIGHT, _shift_lanes(nb, 1), b)
+    b = jnp.where(src == isa.S_UP, _shift_lanes(nb, -nx), b)
+    b = jnp.where(src == isa.S_DOWN, _shift_lanes(nb, nx), b)
+    b = jnp.where(src == isa.S_IMM, jnp.full((p,), imm, jnp.int32), b)
+
+    # --- Bit-serial ALU, word-level semantics (Eq 7-1 macro expansion).
+    shift = jnp.clip(imm, 0, 31)
+    alu = a
+    alu = jnp.where(opcode == isa.OP_COPY, b, alu)
+    alu = jnp.where(opcode == isa.OP_ADD, a + b, alu)
+    alu = jnp.where(opcode == isa.OP_SUB, a - b, alu)
+    alu = jnp.where(opcode == isa.OP_AND, a & b, alu)
+    alu = jnp.where(opcode == isa.OP_OR, a | b, alu)
+    alu = jnp.where(opcode == isa.OP_XOR, a ^ b, alu)
+    alu = jnp.where(opcode == isa.OP_MIN, jnp.minimum(a, b), alu)
+    alu = jnp.where(opcode == isa.OP_MAX, jnp.maximum(a, b), alu)
+    alu = jnp.where(opcode == isa.OP_ABSDIFF, jnp.abs(a - b), alu)
+    alu = jnp.where(opcode == isa.OP_MUL, a * b, alu)
+    alu = jnp.where(opcode == isa.OP_SHR, a >> shift, alu)
+    alu = jnp.where(opcode == isa.OP_SHL, a << shift, alu)
+
+    cmp = jnp.zeros((p,), jnp.int32)
+    cmp = jnp.where(opcode == isa.OP_CMP_LT, (a < b).astype(jnp.int32), cmp)
+    cmp = jnp.where(opcode == isa.OP_CMP_LE, (a <= b).astype(jnp.int32), cmp)
+    cmp = jnp.where(opcode == isa.OP_CMP_EQ, (a == b).astype(jnp.int32), cmp)
+    cmp = jnp.where(opcode == isa.OP_CMP_NE, (a != b).astype(jnp.int32), cmp)
+    cmp = jnp.where(opcode == isa.OP_CMP_GT, (a > b).astype(jnp.int32), cmp)
+    cmp = jnp.where(opcode == isa.OP_CMP_GE, (a >= b).astype(jnp.int32), cmp)
+
+    is_cmp = (opcode >= isa.OP_CMP_LT) & (opcode <= isa.OP_CMP_GE)
+    is_alu = (opcode != isa.OP_NOP) & ~is_cmp
+
+    new_dst = jnp.where(en & is_alu, alu, a)
+    new_m = jnp.where(en & is_cmp, cmp, m_plane)
+
+    reg_ids = jax.lax.iota(jnp.int32, isa.N_REGS)[:, None]
+    out = jnp.where(reg_ids == dst, new_dst[None, :], state)
+    m_row = jnp.where(is_cmp, new_m, out[isa.R_M])
+    out = jnp.where(reg_ids == isa.R_M, m_row[None, :], out)
+    out_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pe_step(state, instr, interpret=True):
+    """One concurrent cycle via the Pallas kernel.
+
+    state: i32[N_REGS, P]; instr: i32[INSTR_WIDTH]. Returns i32[N_REGS, P].
+    """
+    state = state.astype(jnp.int32)
+    instr = instr.astype(jnp.int32)
+    return pl.pallas_call(
+        _pe_step_kernel,
+        out_shape=jax.ShapeDtypeStruct(state.shape, jnp.int32),
+        interpret=interpret,
+    )(instr, state)

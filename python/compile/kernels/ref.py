@@ -1,0 +1,126 @@
+"""Pure-jnp correctness oracle for the PE-plane step.
+
+This is the reference semantics of one concurrent instruction cycle of the
+content-computable memory (paper §7.2), at word level. The Pallas kernel in
+`pe_step.py` and the Rust word-plane engine must both match this function
+bit-for-bit on i32 planes.
+"""
+
+import jax.numpy as jnp
+
+from . import isa
+
+
+def _shift_plane(plane, delta):
+    """Read a neighbor's NB plane: value at PE i comes from PE i+delta.
+
+    Edges read 0 (the paper's PEs at array ends have no neighbor on that
+    side; the control unit grounds the missing line).
+    """
+    p = plane.shape[0]
+    idx = jnp.arange(p) + delta
+    valid = (idx >= 0) & (idx < p)
+    gathered = plane[jnp.clip(idx, 0, p - 1)]
+    return jnp.where(valid, gathered, 0)
+
+
+def select_src(state, src, imm, nx):
+    """Value of a source selector for every PE (i32[P])."""
+    nb = state[isa.R_NB]
+    p = state.shape[1]
+    # Register-plane reads (selectors 0..8).
+    reg = state[jnp.clip(src, 0, isa.N_REGS - 1)]
+    # Neighbor reads. LEFT means "my left neighbor's NB", i.e. NB[i-1].
+    left = _shift_plane(nb, -1)
+    right = _shift_plane(nb, 1)
+    # 2-D: row stride nx (0 for 1-D devices — traces only use UP/DOWN when
+    # nx > 0).
+    up = _shift_plane(nb, -nx)
+    down = _shift_plane(nb, nx)
+    immv = jnp.full((p,), imm, dtype=jnp.int32)
+    out = reg
+    out = jnp.where(src == isa.S_LEFT, left, out)
+    out = jnp.where(src == isa.S_RIGHT, right, out)
+    out = jnp.where(src == isa.S_UP, up, out)
+    out = jnp.where(src == isa.S_DOWN, down, out)
+    out = jnp.where(src == isa.S_IMM, immv, out)
+    return out
+
+
+def enable_mask(p, en_start, en_end, en_carry, flags, m_plane):
+    """Rule 4 activation + the conditional-execution flag bits."""
+    i = jnp.arange(p)
+    carry = jnp.maximum(en_carry, 1)
+    en = (i >= en_start) & (i <= en_end) & ((i - en_start) % carry == 0)
+    cond_m = (flags & isa.F_COND_M) != 0
+    cond_nm = (flags & isa.F_COND_NOT_M) != 0
+    en = en & jnp.where(cond_m, m_plane != 0, True)
+    en = en & jnp.where(cond_nm, m_plane == 0, True)
+    return en
+
+
+def pe_step_ref(state, instr):
+    """One concurrent instruction cycle. state: i32[N_REGS, P]; instr: i32[10]."""
+    state = state.astype(jnp.int32)
+    opcode = instr[isa.I_OPCODE]
+    src = instr[isa.I_SRC]
+    dst = instr[isa.I_DST]
+    imm = instr[isa.I_IMM]
+    flags = instr[isa.I_FLAGS]
+    nx = instr[isa.I_NX]
+
+    p = state.shape[1]
+    en = enable_mask(p, instr[isa.I_EN_START], instr[isa.I_EN_END],
+                     instr[isa.I_EN_CARRY], flags, state[isa.R_M])
+
+    a = state[jnp.clip(dst, 0, isa.N_REGS - 1)]   # left operand / old dst
+    b = select_src(state, src, imm, nx)
+
+    # Candidate results for every ALU opcode (vectorized select — this is
+    # exactly how the broadcast instruction drives every PE identically).
+    shift = jnp.clip(imm, 0, 31)
+    alu = a
+    alu = jnp.where(opcode == isa.OP_COPY, b, alu)
+    alu = jnp.where(opcode == isa.OP_ADD, a + b, alu)
+    alu = jnp.where(opcode == isa.OP_SUB, a - b, alu)
+    alu = jnp.where(opcode == isa.OP_AND, a & b, alu)
+    alu = jnp.where(opcode == isa.OP_OR, a | b, alu)
+    alu = jnp.where(opcode == isa.OP_XOR, a ^ b, alu)
+    alu = jnp.where(opcode == isa.OP_MIN, jnp.minimum(a, b), alu)
+    alu = jnp.where(opcode == isa.OP_MAX, jnp.maximum(a, b), alu)
+    alu = jnp.where(opcode == isa.OP_ABSDIFF, jnp.abs(a - b), alu)
+    alu = jnp.where(opcode == isa.OP_MUL, a * b, alu)
+    alu = jnp.where(opcode == isa.OP_SHR, a >> shift, alu)
+    alu = jnp.where(opcode == isa.OP_SHL, a << shift, alu)
+
+    cmp = jnp.zeros((p,), dtype=jnp.int32)
+    cmp = jnp.where(opcode == isa.OP_CMP_LT, (a < b).astype(jnp.int32), cmp)
+    cmp = jnp.where(opcode == isa.OP_CMP_LE, (a <= b).astype(jnp.int32), cmp)
+    cmp = jnp.where(opcode == isa.OP_CMP_EQ, (a == b).astype(jnp.int32), cmp)
+    cmp = jnp.where(opcode == isa.OP_CMP_NE, (a != b).astype(jnp.int32), cmp)
+    cmp = jnp.where(opcode == isa.OP_CMP_GT, (a > b).astype(jnp.int32), cmp)
+    cmp = jnp.where(opcode == isa.OP_CMP_GE, (a >= b).astype(jnp.int32), cmp)
+
+    is_cmp = (opcode >= isa.OP_CMP_LT) & (opcode <= isa.OP_CMP_GE)
+    is_alu = (opcode != isa.OP_NOP) & ~is_cmp
+
+    # Masked writes: ALU ops write `dst`; CMP ops write the M plane.
+    new_dst = jnp.where(en & is_alu, alu, a)
+    new_m = jnp.where(en & is_cmp, cmp, state[isa.R_M])
+
+    one_hot = (jnp.arange(isa.N_REGS)[:, None] ==
+               jnp.clip(dst, 0, isa.N_REGS - 1))
+    out = jnp.where(one_hot, new_dst[None, :], state)
+    out = out.at[isa.R_M].set(jnp.where(is_cmp, new_m, out[isa.R_M]))
+    return out
+
+
+def pe_trace_ref(state, trace):
+    """Run a whole macro trace (i32[T, 10]) through the reference step."""
+    import jax
+
+    def body(s, ins):
+        return pe_step_ref(s, ins), None
+
+    final, _ = jax.lax.scan(body, state.astype(jnp.int32), trace)
+    return final

@@ -1,0 +1,48 @@
+"""L2: the vectorized PE-plane trace executor.
+
+The Rust coordinator (L3) assembles macro-instruction traces (the same ISA
+as `rust/src/device/computable/isa.rs`) and executes them either on its own
+scalar engines or — for large PE counts — through this model, AOT-lowered to
+HLO and run via PJRT. A whole trace is one `lax.scan`, so one PJRT dispatch
+covers T concurrent cycles (the dispatch-amortization the paper's
+"micro-kernel caches instructions / makes internal macro calls" performs).
+
+Build-time only: Python never runs on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pe_step as pe_step_mod
+from .kernels import ref
+
+
+def pe_trace(state, trace, interpret=True):
+    """Run trace i32[T, INSTR_WIDTH] over state i32[N_REGS, P].
+
+    Returns (final_state, match_counts) where match_counts[t] is the number
+    of PEs asserting their match line after cycle t (Rule 6 readout — the
+    control unit's parallel counter).
+    """
+    state = state.astype(jnp.int32)
+    trace = trace.astype(jnp.int32)
+
+    def body(s, ins):
+        nxt = pe_step_mod.pe_step(s, ins, interpret=interpret)
+        return nxt, jnp.sum(nxt[6] != 0)  # R_M plane
+
+    final, counts = jax.lax.scan(body, state, trace)
+    return final, counts
+
+
+def pe_trace_reference(state, trace):
+    """Same contract as `pe_trace` but through the pure-jnp oracle."""
+    state = state.astype(jnp.int32)
+    trace = trace.astype(jnp.int32)
+
+    def body(s, ins):
+        nxt = ref.pe_step_ref(s, ins)
+        return nxt, jnp.sum(nxt[6] != 0)
+
+    final, counts = jax.lax.scan(body, state, trace)
+    return final, counts

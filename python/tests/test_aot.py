@@ -1,0 +1,46 @@
+"""AOT path smoke: lowering produces parseable HLO text with the right
+parameter shapes, and the ISA export is self-consistent."""
+
+import json
+
+import jax
+
+from compile import aot
+from compile.kernels import isa
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_lower_step_emits_hlo_text():
+    text = aot.lower_step(64)
+    assert "HloModule" in text
+    assert f"s32[{isa.N_REGS},64]" in text          # state parameter
+    assert f"s32[{isa.INSTR_WIDTH}]" in text        # instruction parameter
+
+
+def test_lower_trace_emits_hlo_text():
+    text = aot.lower_trace(64, 4)
+    assert "HloModule" in text
+    assert f"s32[4,{isa.INSTR_WIDTH}]" in text      # trace parameter
+    # scan lowers to a while loop over T cycles
+    assert "while" in text
+
+
+def test_isa_export_roundtrip():
+    d = isa.isa_dict()
+    blob = json.loads(json.dumps(d))
+    assert blob["n_regs"] == isa.N_REGS
+    assert blob["opcodes"]["ABSDIFF"] == isa.OP_ABSDIFF
+    assert blob["srcs"]["LEFT"] == isa.S_LEFT
+    assert len(blob["bit_cycles_w8"]) == isa.N_OPS
+    # bit-serial costs scale with word width for data ops
+    assert blob["bit_cycles_w16"][isa.OP_ADD] == 2 * blob["bit_cycles_w8"][isa.OP_ADD]
+
+
+def test_bit_cycles_model():
+    w = 8
+    assert isa.bit_cycles(isa.OP_NOP, w) == 0
+    assert isa.bit_cycles(isa.OP_COPY, w) == w
+    assert isa.bit_cycles(isa.OP_ADD, w) == 3 * w
+    assert isa.bit_cycles(isa.OP_CMP_LT, w) == w + 1
+    assert isa.bit_cycles(isa.OP_MUL, w) == 3 * w * w

@@ -1,0 +1,169 @@
+"""L1 correctness: Pallas pe_step kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the kernel layer: hypothesis sweeps
+states, opcodes, activation ranges (Rule 4), conditional flags and 2-D
+strides, and asserts bit-exact equality on i32 planes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import isa, ref
+from compile.kernels.pe_step import pe_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def mk_instr(opcode=isa.OP_NOP, src=isa.R_NB, dst=isa.R_OP, imm=0,
+             en_start=0, en_end=1 << 30, en_carry=1, flags=0, nx=0):
+    return np.array([opcode, src, dst, imm, en_start, en_end, en_carry,
+                     flags, nx, 0], dtype=np.int32)
+
+
+def rand_state(rng, p):
+    state = rng.integers(-2**31, 2**31 - 1, size=(isa.N_REGS, p),
+                         dtype=np.int64).astype(np.int32)
+    # Bit planes hold 0/1 in real traces; mix both regimes.
+    state[isa.R_M] = rng.integers(0, 2, size=p).astype(np.int32)
+    state[isa.R_S] = rng.integers(0, 2, size=p).astype(np.int32)
+    state[isa.R_C] = rng.integers(0, 2, size=p).astype(np.int32)
+    return state
+
+
+def assert_step_matches(state, instr):
+    got = np.asarray(pe_step(jnp.asarray(state), jnp.asarray(instr)))
+    want = np.asarray(ref.pe_step_ref(jnp.asarray(state), jnp.asarray(instr)))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------- unit ----
+
+def test_nop_identity():
+    rng = np.random.default_rng(0)
+    state = rand_state(rng, 32)
+    got = np.asarray(pe_step(jnp.asarray(state), jnp.asarray(mk_instr())))
+    np.testing.assert_array_equal(got, state)
+
+
+def test_copy_imm_full_range():
+    state = np.zeros((isa.N_REGS, 16), dtype=np.int32)
+    instr = mk_instr(isa.OP_COPY, src=isa.S_IMM, dst=isa.R_OP, imm=42)
+    got = np.asarray(pe_step(jnp.asarray(state), jnp.asarray(instr)))
+    assert (got[isa.R_OP] == 42).all()
+    assert (got[isa.R_NB] == 0).all()
+
+
+def test_rule4_carry_activation():
+    """Rule 4: only PEs at start + k*carry within [start, end] execute."""
+    p = 24
+    state = np.zeros((isa.N_REGS, p), dtype=np.int32)
+    instr = mk_instr(isa.OP_COPY, src=isa.S_IMM, dst=isa.R_D0, imm=7,
+                     en_start=3, en_end=18, en_carry=4)
+    got = np.asarray(pe_step(jnp.asarray(state), jnp.asarray(instr)))
+    want = np.zeros(p, dtype=np.int32)
+    want[[3, 7, 11, 15]] = 7
+    np.testing.assert_array_equal(got[isa.R_D0], want)
+    assert_step_matches(state, instr)
+
+
+def test_neighbor_left_right_edges():
+    p = 8
+    state = np.zeros((isa.N_REGS, p), dtype=np.int32)
+    state[isa.R_NB] = np.arange(1, p + 1)
+    left = mk_instr(isa.OP_COPY, src=isa.S_LEFT, dst=isa.R_OP)
+    got = np.asarray(pe_step(jnp.asarray(state), jnp.asarray(left)))
+    np.testing.assert_array_equal(got[isa.R_OP],
+                                  np.array([0, 1, 2, 3, 4, 5, 6, 7]))
+    right = mk_instr(isa.OP_COPY, src=isa.S_RIGHT, dst=isa.R_OP)
+    got = np.asarray(pe_step(jnp.asarray(state), jnp.asarray(right)))
+    np.testing.assert_array_equal(got[isa.R_OP],
+                                  np.array([2, 3, 4, 5, 6, 7, 8, 0]))
+
+
+def test_up_down_stride():
+    """2-D neighbor reads via row stride nx (row-major plane)."""
+    nx, ny = 4, 3
+    p = nx * ny
+    state = np.zeros((isa.N_REGS, p), dtype=np.int32)
+    state[isa.R_NB] = np.arange(p)
+    up = mk_instr(isa.OP_COPY, src=isa.S_UP, dst=isa.R_OP, nx=nx)
+    got = np.asarray(pe_step(jnp.asarray(state), jnp.asarray(up)))
+    want = np.concatenate([np.zeros(nx, np.int32), np.arange(p - nx)])
+    np.testing.assert_array_equal(got[isa.R_OP], want)
+    assert_step_matches(state, up)
+
+
+def test_cmp_writes_match_plane_only():
+    rng = np.random.default_rng(1)
+    state = rand_state(rng, 64)
+    instr = mk_instr(isa.OP_CMP_LT, src=isa.S_IMM, dst=isa.R_NB, imm=0)
+    got = np.asarray(pe_step(jnp.asarray(state), jnp.asarray(instr)))
+    np.testing.assert_array_equal(got[isa.R_M],
+                                  (state[isa.R_NB] < 0).astype(np.int32))
+    np.testing.assert_array_equal(got[isa.R_NB], state[isa.R_NB])
+
+
+def test_conditional_execution_on_match():
+    """§6.1: a false update code bit enables conditional execution."""
+    p = 6
+    state = np.zeros((isa.N_REGS, p), dtype=np.int32)
+    state[isa.R_M] = np.array([1, 0, 1, 0, 1, 0])
+    instr = mk_instr(isa.OP_COPY, src=isa.S_IMM, dst=isa.R_D1, imm=9,
+                     flags=isa.F_COND_M)
+    got = np.asarray(pe_step(jnp.asarray(state), jnp.asarray(instr)))
+    np.testing.assert_array_equal(got[isa.R_D1],
+                                  np.array([9, 0, 9, 0, 9, 0]))
+    instr = mk_instr(isa.OP_COPY, src=isa.S_IMM, dst=isa.R_D1, imm=5,
+                     flags=isa.F_COND_NOT_M)
+    got2 = np.asarray(pe_step(jnp.asarray(got), jnp.asarray(instr)))
+    np.testing.assert_array_equal(got2[isa.R_D1],
+                                  np.array([9, 5, 9, 5, 9, 5]))
+
+
+@pytest.mark.parametrize("opcode", range(isa.N_OPS))
+def test_every_opcode_matches_ref(opcode):
+    rng = np.random.default_rng(100 + opcode)
+    state = rand_state(rng, 40)
+    # Keep shift immediates in range for SHR/SHL; other ops ignore clipping.
+    imm = int(rng.integers(0, 31))
+    instr = mk_instr(opcode, src=int(rng.integers(0, isa.N_SRCS)),
+                     dst=int(rng.integers(0, isa.N_REGS)), imm=imm,
+                     en_start=5, en_end=35, en_carry=int(rng.integers(1, 5)))
+    assert_step_matches(state, instr)
+
+
+# ---------------------------------------------------------- hypothesis ----
+
+@st.composite
+def step_case(draw):
+    p = draw(st.integers(min_value=2, max_value=96))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    state = rand_state(rng, p)
+    instr = mk_instr(
+        opcode=draw(st.integers(0, isa.N_OPS - 1)),
+        src=draw(st.integers(0, isa.N_SRCS - 1)),
+        dst=draw(st.integers(0, isa.N_REGS - 1)),
+        imm=draw(st.integers(-2**31, 2**31 - 1)),
+        en_start=draw(st.integers(0, p)),
+        en_end=draw(st.integers(0, p + 4)),
+        en_carry=draw(st.integers(0, p + 1)),  # 0 exercises the max(1) clamp
+        flags=draw(st.integers(0, 3)),
+        nx=draw(st.integers(0, p)),
+    )
+    # SHR/SHL semantics only defined for in-range shifts (both engines clip,
+    # but jnp shift of >=32 is backend-UB) — keep imm in range for them.
+    if instr[isa.I_OPCODE] in (isa.OP_SHR, isa.OP_SHL):
+        instr[isa.I_IMM] = draw(st.integers(0, 31))
+    return state, instr
+
+
+@settings(max_examples=200, deadline=None)
+@given(step_case())
+def test_hypothesis_step_parity(case):
+    state, instr = case
+    assert_step_matches(state, instr)

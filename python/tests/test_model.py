@@ -1,0 +1,109 @@
+"""L2 correctness: trace executor (scan of the Pallas step) vs oracle, plus
+paper-level known-answer traces (§7.3 local-operation algebra)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import isa
+from tests.test_kernel import mk_instr, rand_state
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def run_both(state, trace):
+    got_f, got_c = model.pe_trace(jnp.asarray(state), jnp.asarray(trace))
+    ref_f, ref_c = model.pe_trace_reference(jnp.asarray(state),
+                                            jnp.asarray(trace))
+    return (np.asarray(got_f), np.asarray(got_c),
+            np.asarray(ref_f), np.asarray(ref_c))
+
+
+def test_empty_state_roundtrip():
+    state = np.zeros((isa.N_REGS, 16), dtype=np.int32)
+    trace = np.stack([mk_instr()] * 4)
+    got_f, got_c, ref_f, ref_c = run_both(state, trace)
+    np.testing.assert_array_equal(got_f, ref_f)
+    np.testing.assert_array_equal(got_c, np.zeros(4, dtype=got_c.dtype))
+
+
+def test_gaussian_121_trace():
+    """Eq 7-10: (1 2 1) = (1 1 0) # (0 1 1) — the paper's 4-cycle algorithm.
+
+    1. copy NB -> OP        2. add LEFT to OP
+    3. copy OP -> NB        4. add RIGHT to OP
+    """
+    p = 16
+    rng = np.random.default_rng(7)
+    vals = rng.integers(0, 256, size=p).astype(np.int32)
+    state = np.zeros((isa.N_REGS, p), dtype=np.int32)
+    state[isa.R_NB] = vals
+    trace = np.stack([
+        mk_instr(isa.OP_COPY, src=isa.R_NB, dst=isa.R_OP),
+        mk_instr(isa.OP_ADD, src=isa.S_LEFT, dst=isa.R_OP),
+        mk_instr(isa.OP_COPY, src=isa.R_OP, dst=isa.R_NB),
+        mk_instr(isa.OP_ADD, src=isa.S_RIGHT, dst=isa.R_OP),
+    ])
+    got_f, _, ref_f, _ = run_both(state, trace)
+    np.testing.assert_array_equal(got_f, ref_f)
+    # Interior PEs hold v[i-1] + 2 v[i] + v[i+1].
+    v = vals.astype(np.int64)
+    want = v.copy()
+    want[1:] += v[:-1]                       # after step 2: v[i-1]+v[i]
+    nb = want.copy()
+    want2 = want.copy()
+    want2[:-1] += nb[1:]                     # add right neighbor's (1 1 0)
+    np.testing.assert_array_equal(got_f[isa.R_OP][1:-1],
+                                  want2.astype(np.int32)[1:-1])
+
+
+def test_match_counts_are_rule6_readout():
+    """counts[t] = number of PEs asserting the match line after cycle t."""
+    p = 32
+    state = np.zeros((isa.N_REGS, p), dtype=np.int32)
+    state[isa.R_NB] = np.arange(p)
+    trace = np.stack([
+        mk_instr(isa.OP_CMP_LT, src=isa.S_IMM, dst=isa.R_NB, imm=10),
+        mk_instr(isa.OP_CMP_GE, src=isa.S_IMM, dst=isa.R_NB, imm=30),
+    ])
+    _, got_c, _, ref_c = run_both(state, trace)
+    np.testing.assert_array_equal(got_c, ref_c)
+    np.testing.assert_array_equal(got_c, np.array([10, 2], dtype=got_c.dtype))
+
+
+@st.composite
+def trace_case(draw):
+    p = draw(st.integers(min_value=4, max_value=48))
+    t = draw(st.integers(min_value=1, max_value=12))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    state = rand_state(rng, p)
+    instrs = []
+    for _ in range(t):
+        opcode = int(rng.integers(0, isa.N_OPS))
+        imm = int(rng.integers(0, 31)) if opcode in (isa.OP_SHR, isa.OP_SHL) \
+            else int(rng.integers(-1000, 1000))
+        instrs.append(mk_instr(
+            opcode=opcode,
+            src=int(rng.integers(0, isa.N_SRCS)),
+            dst=int(rng.integers(0, isa.N_REGS)),
+            imm=imm,
+            en_start=int(rng.integers(0, p)),
+            en_end=int(rng.integers(0, p + 2)),
+            en_carry=int(rng.integers(1, p + 1)),
+            flags=int(rng.integers(0, 4)),
+            nx=int(rng.integers(0, p)),
+        ))
+    return state, np.stack(instrs)
+
+
+@settings(max_examples=60, deadline=None)
+@given(trace_case())
+def test_hypothesis_trace_parity(case):
+    state, trace = case
+    got_f, got_c, ref_f, ref_c = run_both(state, trace)
+    np.testing.assert_array_equal(got_f, ref_f)
+    np.testing.assert_array_equal(got_c, ref_c)

@@ -1,0 +1,124 @@
+//! Histogram / count-for-statistics (§6.3).
+//!
+//! "By matching each section limit one-by-one, the histogram of M sections
+//! is constructed in ~M instruction cycles" — one concurrent compare plus a
+//! parallel-counter readout per bucket boundary, independent of the item
+//! count. Provided over both the content comparable memory (byte fields)
+//! and the computable memory (word values).
+
+use crate::device::comparable::{CmpCode, ContentComparableMemory, FieldSpec};
+use crate::device::computable::{Opcode, Reg, TraceBuilder, WordEngine};
+
+/// Histogram of word values on a computable memory: `bounds` are the M-1
+/// inner bucket boundaries (ascending); returns M counts
+/// (`bucket[k]` = #values in `[bounds[k-1], bounds[k])`, open-ended ends).
+/// ~M cycles total.
+pub fn histogram_words(engine: &mut WordEngine, n: usize, bounds: &[i32]) -> Vec<usize> {
+    assert!(bounds.windows(2).all(|w| w[0] <= w[1]), "bounds must ascend");
+    let end = n.saturating_sub(1) as u32;
+    // cumulative[k] = #values < bounds[k]; one compare + one count each.
+    let mut cumulative = Vec::with_capacity(bounds.len());
+    for &b in bounds {
+        let mut t = TraceBuilder::new();
+        t.select(0, end, 1).cmp_imm(Opcode::CmpLt, Reg::Nb, b);
+        engine.run(&t.build());
+        cumulative.push(engine.match_count());
+    }
+    let mut counts = Vec::with_capacity(bounds.len() + 1);
+    let mut prev = 0usize;
+    for &c in &cumulative {
+        counts.push(c - prev);
+        prev = c;
+    }
+    counts.push(n - prev);
+    counts
+}
+
+/// Histogram of a big-endian byte field on a content comparable memory.
+/// `bounds` are big-endian encoded inner boundaries. ~3·field.len cycles
+/// per boundary.
+pub fn histogram_field(
+    mem: &mut ContentComparableMemory,
+    base: usize,
+    item_size: usize,
+    n_items: usize,
+    field: FieldSpec,
+    bounds: &[Vec<u8>],
+) -> Vec<usize> {
+    let mut cumulative = Vec::with_capacity(bounds.len());
+    for b in bounds {
+        mem.compare_field(base, item_size, n_items, field, CmpCode::Lt, b);
+        cumulative.push(mem.selected_count(base, item_size, n_items, field));
+    }
+    let mut counts = Vec::with_capacity(bounds.len() + 1);
+    let mut prev = 0usize;
+    for &c in &cumulative {
+        counts.push(c.saturating_sub(prev));
+        prev = c;
+    }
+    counts.push(n_items - prev);
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn word_histogram_matches_reference() {
+        let mut rng = Rng::new(71);
+        let n = 1000;
+        let vals = rng.vec_i32(n, 0, 100);
+        let bounds = [25, 50, 75];
+        let mut e = WordEngine::new(n, 16);
+        e.load_plane(Reg::Nb, &vals);
+        e.reset_cost();
+        let got = histogram_words(&mut e, n, &bounds);
+        let mut want = vec![0usize; 4];
+        for &v in &vals {
+            let k = bounds.iter().filter(|&&b| v >= b).count();
+            want[k] += 1;
+        }
+        assert_eq!(got, want);
+        // ~M cycles: one compare + one count per boundary
+        assert_eq!(e.cost().macro_cycles, 2 * bounds.len() as u64);
+    }
+
+    #[test]
+    fn word_histogram_sums_to_n() {
+        let mut rng = Rng::new(72);
+        let n = 512;
+        let vals = rng.vec_i32(n, -1000, 1000);
+        let bounds = [-500, -100, 0, 100, 500];
+        let mut e = WordEngine::new(n, 16);
+        e.load_plane(Reg::Nb, &vals);
+        let got = histogram_words(&mut e, n, &bounds);
+        assert_eq!(got.iter().sum::<usize>(), n);
+        assert_eq!(got.len(), bounds.len() + 1);
+    }
+
+    #[test]
+    fn field_histogram_on_comparable_memory() {
+        let values: Vec<u16> = (0..200).map(|i| (i * 13 % 1000) as u16).collect();
+        let item = 4usize;
+        let field = FieldSpec { offset: 0, len: 2 };
+        let mut bytes = vec![0u8; values.len() * item];
+        for (i, &v) in values.iter().enumerate() {
+            bytes[i * item..i * item + 2].copy_from_slice(&v.to_be_bytes());
+        }
+        let mut mem = ContentComparableMemory::new(bytes.len());
+        mem.load(0, &bytes);
+        let bounds: Vec<Vec<u8>> = [250u16, 500, 750]
+            .iter()
+            .map(|b| b.to_be_bytes().to_vec())
+            .collect();
+        let got = histogram_field(&mut mem, 0, item, values.len(), field, &bounds);
+        let mut want = vec![0usize; 4];
+        for &v in &values {
+            let k = [250u16, 500, 750].iter().filter(|&&b| v >= b).count();
+            want[k] += 1;
+        }
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,334 @@
+//! Line detection (§7.9, Figs 14–15).
+//!
+//! 2-D content computable memory treats line detection as neighbor
+//! counting. Two algorithms:
+//!
+//! * **Axis-aligned edges**: each pixel's vertical gradient (top − bottom),
+//!   then a running sum over its L left neighbors — ~L cycles, independent
+//!   of image size.
+//! * **Sloped edges (the messenger, Fig 14)**: for slope `My/Mx`, a
+//!   messenger walks the (Mx·My) area from the far corner to the origin
+//!   pixel, adding intensities on one side of the line and subtracting the
+//!   other; all pixels run their messenger concurrently — ~(Mx+My) cycles.
+//!   A `{(Mx,My)}` set built from a circle of radius D (Fig 15) detects
+//!   all slopes at angular resolution ~√2/D in ~D² cycles total (E14).
+
+use crate::device::computable::{Opcode, Reg, Src, TraceBuilder, WordEngine};
+use crate::device::computable::isa::F_COND_M;
+
+/// Vertical-gradient edge response summed over `l` left neighbors
+/// (§7.9's first algorithm). Image in NB (row-major `nx * ny`); the
+/// response lands in OP: positive = rising along Y, negative = falling.
+/// ~2L + 4 cycles, independent of nx·ny.
+pub fn detect_horizontal_edges(engine: &mut WordEngine, nx: usize, ny: usize, l: usize) -> u64 {
+    let n = nx * ny;
+    assert!(n <= engine.len());
+    let before = engine.cost().macro_cycles;
+    let end = (n - 1) as u32;
+    // Save the raw image; compute gradient = up - down into NB.
+    let mut b = TraceBuilder::with_stride(nx as u32);
+    b.select(0, end, 1)
+        .copy(Reg::D0, Src::Reg(Reg::Nb)) // preserve raw
+        .copy(Reg::Op, Src::Up)
+        .sub(Reg::Op, Src::Down)
+        .copy(Reg::Nb, Src::Reg(Reg::Op));
+    engine.run(&b.build());
+    // Running sum over self + L left neighbors: repeatedly shift the
+    // gradient plane right and accumulate (2 cycles per neighbor).
+    for _ in 0..l {
+        let mut s = TraceBuilder::with_stride(nx as u32);
+        s.select(0, end, 1)
+            .copy(Reg::D1, Src::Left)
+            .copy(Reg::Nb, Src::Reg(Reg::D1))
+            .add(Reg::Op, Src::Reg(Reg::Nb));
+        engine.run(&s.build());
+    }
+    // Restore the raw image to NB for downstream stages.
+    let mut r = TraceBuilder::new();
+    r.select(0, end, 1).copy(Reg::Nb, Src::Reg(Reg::D0));
+    engine.run(&r.build());
+    engine.cost().macro_cycles - before
+}
+
+/// One messenger walk for slope `(mx, my)` (Fig 14): each pixel's OP
+/// accumulates ± intensities of the path pixels between it and the far
+/// corner of its `(mx * my)` area. Side-of-line decides the sign; pixels
+/// exactly on the line are skipped (the paper's Fig 14 uses 6 of the 8
+/// path pixels). Image must be in NB. ~(mx + my) cycles.
+///
+/// Returns the macro cycles used; the line-segment value is in OP.
+pub fn messenger_walk(engine: &mut WordEngine, nx: usize, ny: usize, mx: i32, my: i32) -> u64 {
+    let n = nx * ny;
+    assert!(n <= engine.len());
+    let before = engine.cost().macro_cycles;
+    let end = (n - 1) as u32;
+    // Zero the accumulator.
+    let mut z = TraceBuilder::new();
+    z.select(0, end, 1).set(Reg::Op, 0);
+    engine.run(&z.build());
+
+    // Path from the far corner (mx, my) to the origin (0,0): a supercover
+    // walk visiting |mx| + |my| intermediate pixels (endpoints excluded).
+    for (px, py) in messenger_path(mx, my) {
+        // Side of the line x*my - y*mx = 0 (skip exactly-on-line pixels).
+        let cross = px as i64 * my as i64 - py as i64 * mx as i64;
+        if cross == 0 {
+            continue;
+        }
+        // Read the intensity at offset (px, py): a strided neighbor read
+        // (the messenger carries the partial as it steps pixel to pixel).
+        let delta = py as i64 * nx as i64 + px as i64;
+        let (src, stride) = if delta >= 0 {
+            (Src::Down, delta as u32)
+        } else {
+            (Src::Up, (-delta) as u32)
+        };
+        let mut b = TraceBuilder::with_stride(stride);
+        let op = if cross > 0 { Opcode::Add } else { Opcode::Sub };
+        b.select(0, end, 1).raw(op, src, Reg::Op, 0, 0);
+        engine.run(&b.build());
+    }
+    engine.cost().macro_cycles - before
+}
+
+/// The path pixels of the `(mx, my)` area walk, far corner to origin,
+/// endpoints excluded (Fig 14's pixels 1..=6 for the (4,3) area).
+pub fn messenger_path(mx: i32, my: i32) -> Vec<(i32, i32)> {
+    let steps = (mx.abs() + my.abs()) as usize;
+    if steps < 2 {
+        return Vec::new();
+    }
+    let mut out = Vec::with_capacity(steps.saturating_sub(1));
+    let (mut x, mut y) = (mx, my);
+    // Greedy supercover: step toward the origin, one axis at a time,
+    // choosing the axis that keeps (x,y) closest to the ideal line.
+    while x != 0 || y != 0 {
+        if (x, y) != (mx, my) {
+            out.push((x, y));
+        }
+        if x == 0 {
+            y -= y.signum();
+        } else if y == 0 {
+            x -= x.signum();
+        } else {
+            // Compare the cross products of the two candidate steps.
+            let cx = ((x - x.signum()) as i64 * my as i64 - y as i64 * mx as i64).abs();
+            let cy = (x as i64 * my as i64 - (y - y.signum()) as i64 * mx as i64).abs();
+            if cx <= cy {
+                x -= x.signum();
+            } else {
+                y -= y.signum();
+            }
+        }
+    }
+    out
+}
+
+/// Build the `{(Mx, My)}` slope set from a circle of radius `d` (Fig 15):
+/// lattice points nearest the circle in all four quadrants, giving angular
+/// resolution ~√2/D.
+pub fn line_set(d: u32) -> Vec<(i32, i32)> {
+    let d = d as i32;
+    let mut out = Vec::new();
+    for x in -d..=d {
+        for y in -d..=d {
+            if x == 0 && y == 0 {
+                continue;
+            }
+            let r = ((x * x + y * y) as f64).sqrt();
+            if (r - d as f64).abs() < 0.5 {
+                out.push((x, y));
+            }
+        }
+    }
+    out.sort_by(|a, b| {
+        let ta = (a.1 as f64).atan2(a.0 as f64);
+        let tb = (b.1 as f64).atan2(b.0 as f64);
+        ta.partial_cmp(&tb).unwrap()
+    });
+    out
+}
+
+/// Full line detection: run the messenger for every slope in the set,
+/// tracking the best |line-segment value| and its slope id per pixel
+/// (D1 = best value, D2 = slope id). Returns total macro cycles — ~D²,
+/// independent of the image size (E14).
+pub fn detect_lines(engine: &mut WordEngine, nx: usize, ny: usize, d: u32) -> u64 {
+    let n = nx * ny;
+    let before = engine.cost().macro_cycles;
+    let end = (n - 1) as u32;
+    let mut init = TraceBuilder::new();
+    init.select(0, end, 1).set(Reg::D1, -1).set(Reg::D2, -1);
+    engine.run(&init.build());
+
+    for (id, (mx, my)) in line_set(d).into_iter().enumerate() {
+        messenger_walk(engine, nx, ny, mx, my);
+        // |OP| into D3, then keep the per-pixel max (4 cycles).
+        let mut b = TraceBuilder::new();
+        b.select(0, end, 1)
+            .copy(Reg::D3, Src::Reg(Reg::Op))
+            .absdiff(Reg::D3, Src::Imm) // |D3 - 0|
+            .cmp(Opcode::CmpGt, Reg::D3, Src::Reg(Reg::D1))
+            .raw(Opcode::Copy, Src::Reg(Reg::D3), Reg::D1, 0, F_COND_M)
+            .raw(Opcode::Copy, Src::Imm, Reg::D2, id as i32, F_COND_M);
+        engine.run(&b.build());
+    }
+    engine.cost().macro_cycles - before
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn image_engine(img: &[i32]) -> WordEngine {
+        let mut e = WordEngine::new(img.len(), 16);
+        e.load_plane(Reg::Nb, img);
+        e.reset_cost();
+        e
+    }
+
+    #[test]
+    fn horizontal_edge_detected() {
+        // A bright band in the lower half -> strong response at the edge.
+        let (nx, ny) = (16usize, 8usize);
+        let mut img = vec![0i32; nx * ny];
+        for y in 4..ny {
+            for x in 0..nx {
+                img[y * nx + x] = 100;
+            }
+        }
+        let mut e = image_engine(&img);
+        let l = 4usize;
+        detect_horizontal_edges(&mut e, nx, ny, l);
+        let op = e.plane(Reg::Op);
+        // Row 4 top-bottom = img[3]-img[5] = 0-100 = -100; summed over
+        // l+1 pixels = -(l+1)*100 at interior x.
+        let x = 8;
+        assert_eq!(op[4 * nx + x], -((l as i32 + 1) * 100));
+        // Rows far from the edge: zero response.
+        assert_eq!(op[1 * nx + x], 0);
+        assert_eq!(op[6 * nx + x], 0);
+    }
+
+    #[test]
+    fn edge_cycles_independent_of_image_size() {
+        let l = 5;
+        let c1 = {
+            let img = vec![1i32; 16 * 16];
+            let mut e = image_engine(&img);
+            detect_horizontal_edges(&mut e, 16, 16, l)
+        };
+        let c2 = {
+            let img = vec![1i32; 128 * 64];
+            let mut e = image_engine(&img);
+            detect_horizontal_edges(&mut e, 128, 64, l)
+        };
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn messenger_path_visits_interior_pixels() {
+        // Fig 14's (4, 3) area: 6 interior path pixels.
+        let p = messenger_path(4, 3);
+        assert_eq!(p.len(), 6);
+        assert!(!p.contains(&(4, 3)), "far corner excluded");
+        assert!(!p.contains(&(0, 0)), "origin excluded");
+        // All pixels inside the area.
+        for &(x, y) in &p {
+            assert!(x >= 0 && x <= 4 && y >= 0 && y <= 3, "({x},{y})");
+        }
+    }
+
+    #[test]
+    fn messenger_detects_sloped_contrast() {
+        // Image split by the line y = (3/4) x through the center: above
+        // bright, below dark. The (4,3) messenger anchored near the center
+        // should see a strong contrast.
+        let (nx, ny) = (24usize, 24usize);
+        let mut img = vec![0i32; nx * ny];
+        for y in 0..ny {
+            for x in 0..nx {
+                // line through (4,4) with slope 3/4
+                let above = (x as i32 - 4) * 3 - (y as i32 - 4) * 4 < 0;
+                img[y * nx + x] = if above { 100 } else { 0 };
+            }
+        }
+        let mut e = image_engine(&img);
+        let cycles = messenger_walk(&mut e, nx, ny, 4, 3);
+        assert!(cycles <= 2 * (4 + 3) + 2, "cycles={cycles}");
+        let op = e.plane(Reg::Op);
+        // The pixel at (4,4) has the line through its area corner —
+        // maximal asymmetry -> |value| = 3 pixels * 100.
+        let v = op[4 * nx + 4];
+        assert_eq!(v.abs(), 300, "line-segment value at the anchor: {v}");
+        // A pixel deep inside a flat region sees ~0.
+        assert_eq!(op[20 * nx + 2], 0);
+    }
+
+    #[test]
+    fn line_set_covers_all_octants_with_resolution() {
+        let d = 5;
+        let set = line_set(d);
+        assert!(set.len() >= 20, "set of ~2πD directions, got {}", set.len());
+        // Angular gaps bounded by ~2·(√2/D).
+        let mut angles: Vec<f64> = set
+            .iter()
+            .map(|&(x, y)| (y as f64).atan2(x as f64))
+            .collect();
+        angles.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for w in angles.windows(2) {
+            assert!(
+                w[1] - w[0] < 3.0 * (2f64.sqrt() / d as f64) + 1e-9,
+                "angular gap {}",
+                w[1] - w[0]
+            );
+        }
+    }
+
+    #[test]
+    fn detect_lines_cycles_scale_with_d_squared_not_image() {
+        let mut rng = Rng::new(81);
+        let c_small_img = {
+            let img = rng.vec_i32(16 * 16, 0, 50);
+            let mut e = image_engine(&img);
+            detect_lines(&mut e, 16, 16, 4)
+        };
+        let c_large_img = {
+            let img = rng.vec_i32(96 * 96, 0, 50);
+            let mut e = image_engine(&img);
+            detect_lines(&mut e, 96, 96, 4)
+        };
+        assert_eq!(c_small_img, c_large_img, "independent of image size");
+        let c_d8 = {
+            let img = rng.vec_i32(96 * 96, 0, 50);
+            let mut e = image_engine(&img);
+            detect_lines(&mut e, 96, 96, 8)
+        };
+        let ratio = c_d8 as f64 / c_large_img as f64;
+        assert!(ratio > 2.0 && ratio < 8.0, "~D² scaling, ratio={ratio}");
+    }
+
+    #[test]
+    fn detect_lines_marks_best_slope() {
+        // Vertical contrast edge -> best slope should be near vertical.
+        let (nx, ny) = (32usize, 32usize);
+        let mut img = vec![0i32; nx * ny];
+        for y in 0..ny {
+            for x in 16..nx {
+                img[y * nx + x] = 200;
+            }
+        }
+        let mut e = image_engine(&img);
+        detect_lines(&mut e, nx, ny, 4);
+        let best_id = e.plane(Reg::D2)[16 * nx + 16];
+        assert!(best_id >= 0);
+        let set = line_set(4);
+        let (mx, my) = set[best_id as usize];
+        // Vertical-ish line: |my| dominates |mx|.
+        assert!(
+            my.abs() >= mx.abs(),
+            "expected steep slope, got ({mx},{my})"
+        );
+    }
+}

@@ -1,0 +1,399 @@
+//! Local operations and the stencil algebra (§7.3).
+//!
+//! The paper describes local operations as 1-D vectors over the operation
+//! layer — `(1 1 0)` means "own value plus left layer" — with two
+//! composition laws: additive `+` (Eq 7-3) and convolutional `#` (Eq 7-6).
+//! This module implements the algebra (with its commutativity/associativity
+//! /distributivity laws as property tests), and compiles stencils to macro
+//! traces: a local operation involving M neighbors takes ~M instruction
+//! cycles (E6), e.g. the paper's worked examples:
+//!
+//! * Eq 7-10: `(1 2 1) = (1 1 0) # (0 1 1)` — 4 cycles,
+//! * Eq 7-11: `(1 2 4 2 1) = (1 1 1) # (1 1 1) + (1)` — 6 cycles,
+//! * Eq 7-12: 9-point 2-D Gaussian — 8 cycles.
+
+use crate::device::computable::{Instr, Reg, Src, TraceBuilder, WordEngine};
+
+/// A 1-D stencil: coefficient `coef[k]` applies to offset `k - center`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Stencil {
+    /// Coefficients, odd length.
+    pub coef: Vec<i64>,
+}
+
+impl Stencil {
+    /// A stencil from coefficients (odd length; center = middle).
+    pub fn new(coef: &[i64]) -> Self {
+        assert!(coef.len() % 2 == 1, "stencil length must be odd");
+        Stencil {
+            coef: coef.to_vec(),
+        }
+    }
+
+    /// The identity `(1)`.
+    pub fn identity() -> Self {
+        Stencil::new(&[1])
+    }
+
+    /// Center index.
+    pub fn center(&self) -> usize {
+        self.coef.len() / 2
+    }
+
+    /// Coefficient at offset `o` (0 outside).
+    pub fn at(&self, o: i64) -> i64 {
+        let idx = o + self.center() as i64;
+        if idx < 0 || idx as usize >= self.coef.len() {
+            0
+        } else {
+            self.coef[idx as usize]
+        }
+    }
+
+    /// Trim leading/trailing zero pairs so equal stencils compare equal.
+    pub fn normalized(&self) -> Stencil {
+        let mut c = self.coef.clone();
+        while c.len() > 1 && c[0] == 0 && c[c.len() - 1] == 0 {
+            c.remove(0);
+            c.pop();
+        }
+        Stencil { coef: c }
+    }
+
+    /// Eq 7-3: pointwise addition `C[i] = A[i] + B[i]`.
+    pub fn plus(&self, other: &Stencil) -> Stencil {
+        let half = (self.center()).max(other.center()) as i64;
+        let coef: Vec<i64> = (-half..=half)
+            .map(|o| self.at(o) + other.at(o))
+            .collect();
+        Stencil { coef }.normalized()
+    }
+
+    /// Eq 7-6: composition `C[i] = Σ_j A[j]·B[i-j]` (convolution — applying
+    /// B to the result of A).
+    pub fn compose(&self, other: &Stencil) -> Stencil {
+        let half = (self.center() + other.center()) as i64;
+        let coef: Vec<i64> = (-half..=half)
+            .map(|o| {
+                let mut s = 0i64;
+                for j in -(self.center() as i64)..=(self.center() as i64) {
+                    s += self.at(j) * other.at(o - j);
+                }
+                s
+            })
+            .collect();
+        Stencil { coef }.normalized()
+    }
+
+    /// Reference application to a value array (zero boundary).
+    pub fn apply_ref(&self, values: &[i32]) -> Vec<i64> {
+        let n = values.len() as i64;
+        (0..n)
+            .map(|i| {
+                let mut s = 0i64;
+                for o in -(self.center() as i64)..=(self.center() as i64) {
+                    let j = i + o;
+                    if j >= 0 && j < n {
+                        s += self.at(o) * values[j as usize] as i64;
+                    }
+                }
+                s
+            })
+            .collect()
+    }
+}
+
+/// One step of the paper's local-operation programs (§7.3): successive
+/// Add* steps without a `Publish` are *additive* (Eq 7-2); a `Publish`
+/// copies the operation layer back to the neighboring layer, making later
+/// steps *compose* (`#`, Eq 7-6) — exactly the paper's 4-step `(1 2 1)`
+/// algorithm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Factor {
+    /// `OP += left layer` (adds `NB_stencil # (1 0 0)`).
+    AddLeft,
+    /// `OP += right layer`.
+    AddRight,
+    /// 2-D: `OP += top layer`.
+    AddUp,
+    /// 2-D: `OP += bottom layer`.
+    AddDown,
+    /// Copy the operation layer to the neighboring layer (composition
+    /// boundary — the `#` in the paper's expressions).
+    Publish,
+    /// `+ (1)`: add the original values (saved in D0 at setup).
+    PlusIdentity,
+}
+
+/// Compile a factor sequence to a macro trace. The setup copies NB into OP
+/// (and into D0 when `PlusIdentity` appears); each factor is exactly one
+/// concurrent instruction — the paper's per-step accounting.
+pub fn compile_factors(factors: &[Factor], stride: u32) -> Vec<Instr> {
+    let mut b = TraceBuilder::with_stride(stride);
+    if factors.iter().any(|f| matches!(f, Factor::PlusIdentity)) {
+        b.copy(Reg::D0, Src::Reg(Reg::Nb));
+    }
+    b.copy(Reg::Op, Src::Reg(Reg::Nb));
+    for f in factors {
+        match f {
+            Factor::AddLeft => b.add(Reg::Op, Src::Left),
+            Factor::AddRight => b.add(Reg::Op, Src::Right),
+            Factor::AddUp => b.add(Reg::Op, Src::Up),
+            Factor::AddDown => b.add(Reg::Op, Src::Down),
+            Factor::Publish => b.copy(Reg::Nb, Src::Reg(Reg::Op)),
+            Factor::PlusIdentity => b.add(Reg::Op, Src::Reg(Reg::D0)),
+        };
+    }
+    b.build()
+}
+
+/// The stencil a factor sequence computes (1-D only; Up/Down excluded).
+/// Tracks the OP- and NB-layer stencils through the program.
+pub fn factors_to_stencil(factors: &[Factor]) -> Stencil {
+    let left = Stencil::new(&[1, 0, 0]); // value from index -1
+    let right = Stencil::new(&[0, 0, 1]);
+    let mut nb = Stencil::identity();
+    let mut op = nb.clone();
+    for f in factors {
+        match f {
+            Factor::AddLeft => op = op.plus(&nb.compose(&left)),
+            Factor::AddRight => op = op.plus(&nb.compose(&right)),
+            Factor::Publish => nb = op.clone(),
+            Factor::PlusIdentity => op = op.plus(&Stencil::identity()),
+            _ => panic!("factors_to_stencil is 1-D only"),
+        }
+    }
+    op.normalized()
+}
+
+/// Run a 1-D local operation end to end: load values, run the compiled
+/// trace, return the operation layer and the macro-cycle count.
+pub fn run_local_op(values: &[i32], factors: &[Factor]) -> (Vec<i32>, u64) {
+    let mut e = WordEngine::new(values.len(), 16);
+    e.load_plane(Reg::Nb, values);
+    e.reset_cost();
+    let trace = compile_factors(factors, 0);
+    e.run(&trace);
+    (e.plane(Reg::Op).to_vec(), e.cost().macro_cycles)
+}
+
+/// Run a 2-D local operation on an `nx * ny` image (row-major NB plane).
+pub fn run_local_op_2d(values: &[i32], nx: usize, factors: &[Factor]) -> (Vec<i32>, u64) {
+    let mut e = WordEngine::new(values.len(), 16);
+    e.load_plane(Reg::Nb, values);
+    e.reset_cost();
+    let trace = compile_factors(factors, nx as u32);
+    e.run(&trace);
+    (e.plane(Reg::Op).to_vec(), e.cost().macro_cycles)
+}
+
+/// The paper's 3-point Gaussian `(1 2 1)` (Eq 7-10) — its exact 4-step
+/// program: copy, add-left, publish, add-right.
+pub const GAUSS_3: &[Factor] = &[Factor::AddLeft, Factor::Publish, Factor::AddRight];
+
+/// The paper's 5-point Gaussian `(1 2 4 2 1)` (Eq 7-11):
+/// `(1 1 1) # (1 1 1) + (1)` — 6 paper cycles.
+pub const GAUSS_5: &[Factor] = &[
+    Factor::AddLeft,
+    Factor::AddRight,
+    Factor::Publish,
+    Factor::AddLeft,
+    Factor::AddRight,
+    Factor::PlusIdentity,
+];
+
+/// The paper's 9-point 2-D Gaussian (Eq 7-12): `(1 1 0)#(0 1 1)` along X
+/// then the transposed pair along Y — 8 paper cycles.
+pub const GAUSS_9: &[Factor] = &[
+    Factor::AddLeft,
+    Factor::Publish,
+    Factor::AddRight,
+    Factor::Publish,
+    Factor::AddUp,
+    Factor::Publish,
+    Factor::AddDown,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{forall, Config};
+    use crate::util::rng::Rng;
+
+    fn rand_stencil(rng: &mut Rng) -> Stencil {
+        let half = rng.range(0, 3);
+        let coef: Vec<i64> = (0..2 * half + 1).map(|_| rng.i32_range(-4, 5) as i64).collect();
+        Stencil::new(&coef)
+    }
+
+    #[test]
+    fn eq_7_10_gaussian_3() {
+        // (1 2 1) = (1 1 0) # (0 1 1)
+        let a = Stencil::new(&[1, 1, 0]);
+        let b = Stencil::new(&[0, 1, 1]);
+        assert_eq!(a.compose(&b).normalized().coef, vec![1, 2, 1]);
+    }
+
+    #[test]
+    fn eq_7_11_gaussian_5() {
+        // (1 2 4 2 1) = (1 1 1) # (1 1 1) + (1)
+        let t = Stencil::new(&[1, 1, 1]);
+        let got = t.compose(&t).plus(&Stencil::identity());
+        assert_eq!(got.coef, vec![1, 2, 4, 2, 1]);
+    }
+
+    #[test]
+    fn plus_laws_eq_7_4_7_5() {
+        forall(
+            Config { iters: 100, ..Default::default() },
+            |rng| (rand_stencil(rng), rand_stencil(rng), rand_stencil(rng)),
+            |(a, b, c)| {
+                crate::prop_assert_eq!(a.plus(b), b.plus(a));
+                crate::prop_assert_eq!(a.plus(b).plus(c), a.plus(&b.plus(c)));
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn compose_laws_eq_7_7_7_8_7_9() {
+        forall(
+            Config { iters: 100, ..Default::default() },
+            |rng| (rand_stencil(rng), rand_stencil(rng), rand_stencil(rng)),
+            |(a, b, c)| {
+                crate::prop_assert_eq!(a.compose(b), b.compose(a));
+                crate::prop_assert_eq!(
+                    a.compose(b).compose(c).normalized(),
+                    a.compose(&b.compose(c)).normalized()
+                );
+                // Eq 7-9 distributivity: (A + B) # C = (A # C) + (B # C).
+                crate::prop_assert_eq!(
+                    a.plus(b).compose(c).normalized(),
+                    a.compose(c).plus(&b.compose(c)).normalized()
+                );
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn gaussian_3_trace_matches_reference_and_cycle_count() {
+        let mut rng = Rng::new(5);
+        let vals = rng.vec_i32(64, -50, 50);
+        let (got, cycles) = run_local_op(&vals, GAUSS_3);
+        let want = Stencil::new(&[1, 2, 1]).apply_ref(&vals);
+        // Interior matches the convolution exactly; the array ends follow
+        // the program's edge-read-zero semantics instead.
+        for i in 1..vals.len() - 1 {
+            assert_eq!(got[i] as i64, want[i], "i={i}");
+        }
+        // ~M cycles for an M-neighbor operation (M=3 -> 4 cycles, Eq 7-10).
+        assert_eq!(cycles, 4);
+    }
+
+    #[test]
+    fn gaussian_5_program_is_eq_7_11() {
+        let mut rng = Rng::new(6);
+        let vals = rng.vec_i32(48, -20, 20);
+        assert_eq!(
+            factors_to_stencil(GAUSS_5).coef,
+            vec![1, 2, 4, 2, 1],
+            "factored form must be Eq 7-11"
+        );
+        let (got, cycles) = run_local_op(&vals, GAUSS_5);
+        let want = factors_to_stencil(GAUSS_5).apply_ref(&vals);
+        for i in 2..vals.len() - 2 {
+            assert_eq!(got[i] as i64, want[i], "i={i}");
+        }
+        // Paper counts 6 cycles; ours is 6 + 2 setup copies.
+        assert_eq!(cycles, 8);
+    }
+
+    #[test]
+    fn random_factor_programs_match_their_stencil() {
+        forall(
+            Config { iters: 60, ..Default::default() },
+            |rng| {
+                let len = rng.range(1, 8);
+                let factors: Vec<Factor> = (0..len)
+                    .map(|_| match rng.range(0, 4) {
+                        0 => Factor::AddLeft,
+                        1 => Factor::AddRight,
+                        2 => Factor::Publish,
+                        _ => Factor::PlusIdentity,
+                    })
+                    .collect();
+                let n = rng.range(4, 40);
+                let vals = rng.vec_i32(n, -9, 10);
+                (factors, vals)
+            },
+            |(factors, vals)| {
+                let (got, _) = run_local_op(vals, factors);
+                let want = factors_to_stencil(factors).apply_ref(vals);
+                // Compare the safe interior: within R of an edge the
+                // program's edge-read-zero semantics legitimately differ
+                // from zero-padded convolution.
+                let r = factors
+                    .iter()
+                    .filter(|f| matches!(f, Factor::AddLeft | Factor::AddRight))
+                    .count();
+                for i in r..vals.len().saturating_sub(r) {
+                    crate::prop_assert!(
+                        got[i] as i64 == want[i],
+                        "i={i}: {} != {}",
+                        got[i],
+                        want[i]
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn gaussian_9_2d_matches_separable_reference() {
+        let (nx, ny) = (8, 6);
+        let mut rng = Rng::new(7);
+        let img = rng.vec_i32(nx * ny, 0, 100);
+        let (got, cycles) = run_local_op_2d(&img, nx, GAUSS_9);
+        // Reference: separable (1 2 1) x then y with zero boundary.
+        let s = Stencil::new(&[1, 2, 1]);
+        let mut rows: Vec<i64> = vec![0; nx * ny];
+        for y in 0..ny {
+            let row: Vec<i32> = (0..nx).map(|x| img[y * nx + x]).collect();
+            let r = s.apply_ref(&row);
+            for x in 0..nx {
+                rows[y * nx + x] = r[x];
+            }
+        }
+        let mut want: Vec<i64> = vec![0; nx * ny];
+        for x in 0..nx {
+            for y in 0..ny {
+                let mut acc = rows[y * nx + x] * 2;
+                if y > 0 {
+                    acc += rows[(y - 1) * nx + x];
+                }
+                if y + 1 < ny {
+                    acc += rows[(y + 1) * nx + x];
+                }
+                want[y * nx + x] = acc;
+            }
+        }
+        // Interior window (1 pixel in from every edge) matches.
+        for y in 1..ny - 1 {
+            for x in 1..nx - 1 {
+                let i = y * nx + x;
+                assert_eq!(got[i] as i64, want[i], "x={x} y={y}");
+            }
+        }
+        // Paper: 8 cycles — matched exactly (Eq 7-12).
+        assert_eq!(cycles, 8);
+    }
+
+    #[test]
+    fn cycle_count_independent_of_array_size() {
+        let (_, c_small) = run_local_op(&vec![1; 64], GAUSS_3);
+        let (_, c_large) = run_local_op(&vec![1; 65536], GAUSS_3);
+        assert_eq!(c_small, c_large);
+    }
+}

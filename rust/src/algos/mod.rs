@@ -1,0 +1,15 @@
+//! The paper's concurrent algorithms (§4–§7), written against the device
+//! layer: object management, substring search, field comparison, histogram,
+//! local-operation algebra, global reductions, template search, sorting,
+//! thresholding and line detection.
+
+pub mod histogram;
+pub mod lines;
+pub mod local_ops;
+pub mod objects;
+pub mod reduce;
+pub mod sort;
+pub mod template;
+pub mod threshold;
+
+pub use objects::{ObjectId, ObjectManager};

@@ -1,0 +1,288 @@
+//! Global operations: sum and limit finding (§7.4, §7.5, Figs 9–10).
+//!
+//! The paper's section scheme: divide the N-item array into sections of M
+//! consecutive items; (1) all sections reduce concurrently left-to-right in
+//! ~M cycles, (2) the per-section results (at the right-most PE of each
+//! section) are combined serially in ~N/M exclusive readouts. Total
+//! ~(M + N/M), minimized at M ~ √N to ~2√N (E7/E9). The 2-D variant
+//! (Fig 10) reduces rows, then section columns, then scans section results
+//! — ~(Mx + My + (Nx/Mx)(Ny/My)), minimized near ∛(Nx·Ny) (E8).
+
+use crate::device::computable::{Opcode, Reg, Src, TraceBuilder, WordEngine};
+use crate::util::isqrt;
+
+/// Result of a reduction run: the value plus the measured cost split.
+#[derive(Debug, Clone, Copy)]
+pub struct ReduceRun<T> {
+    /// The reduction result.
+    pub value: T,
+    /// Concurrent macro cycles (step 1).
+    pub concurrent_cycles: u64,
+    /// Serial combine steps (step 2; exclusive readouts + CPU adds).
+    pub serial_steps: u64,
+}
+
+impl<T> ReduceRun<T> {
+    /// The paper's total "~(M + N/M)" instruction-cycle count.
+    pub fn total_cycles(&self) -> u64 {
+        self.concurrent_cycles + self.serial_steps
+    }
+}
+
+/// 1-D sum with section size `m` (Fig 9). Values are taken from the
+/// engine's NB plane (first `n` PEs) and are destroyed by the reduction.
+pub fn sum_1d(engine: &mut WordEngine, n: usize, m: usize) -> ReduceRun<i64> {
+    assert!(m >= 1 && n <= engine.len());
+    let before = engine.cost();
+    // Step 1: within every section, accumulate left-to-right in NB:
+    // position k of each section adds its left neighbor's partial
+    // (1 concurrent cycle per position — ~M total).
+    let end = n.saturating_sub(1) as u32;
+    for k in 1..m.min(n) {
+        let mut b = TraceBuilder::new();
+        b.select(k as u32, end, m as u32)
+            .add(Reg::Nb, Src::Left);
+        engine.run(&b.build());
+    }
+    let after = engine.cost();
+    let concurrent_cycles = after.macro_cycles - before.macro_cycles;
+
+    // Step 2: serially combine section sums (right-most PE per section).
+    let mut value = 0i64;
+    let mut serial_steps = 0u64;
+    let plane = engine.plane(Reg::Nb);
+    let mut s = 0usize;
+    while s < n {
+        let last = (s + m - 1).min(n - 1);
+        value += plane[last] as i64;
+        serial_steps += 1;
+        s += m;
+    }
+    ReduceRun {
+        value,
+        concurrent_cycles,
+        serial_steps,
+    }
+}
+
+/// 1-D sum at the paper's optimal section size `M ~ √N`.
+pub fn sum_1d_opt(engine: &mut WordEngine, n: usize) -> ReduceRun<i64> {
+    let m = isqrt(n as u64).max(1) as usize;
+    sum_1d(engine, n, m)
+}
+
+/// 1-D global maximum with section size `m` (§7.5 — same flow as sum).
+pub fn max_1d(engine: &mut WordEngine, n: usize, m: usize) -> ReduceRun<i32> {
+    assert!(m >= 1 && n >= 1 && n <= engine.len());
+    let before = engine.cost();
+    let end = n.saturating_sub(1) as u32;
+    for k in 1..m.min(n) {
+        let mut b = TraceBuilder::new();
+        b.select(k as u32, end, m as u32)
+            .raw(Opcode::Max, Src::Left, Reg::Nb, 0, 0);
+        engine.run(&b.build());
+    }
+    let after = engine.cost();
+    let concurrent_cycles = after.macro_cycles - before.macro_cycles;
+
+    let mut value = i32::MIN;
+    let mut serial_steps = 0u64;
+    let plane = engine.plane(Reg::Nb);
+    let mut s = 0usize;
+    while s < n {
+        let last = (s + m - 1).min(n - 1);
+        value = value.max(plane[last]);
+        serial_steps += 1;
+        s += m;
+    }
+    ReduceRun {
+        value,
+        concurrent_cycles,
+        serial_steps,
+    }
+}
+
+/// 2-D sum over an `nx * ny` image with `mx * my` sections (Fig 10).
+///
+/// Requires `mx | nx` and `my | ny`. The 2-D lattice activation (Rule 4
+/// independently per axis, §7.1) is realized with the coordinate planes
+/// preloaded into D2/D3 at device-configuration time (see DESIGN.md):
+/// selecting `(x % mx == a) && (y % my == b)` costs 2 compare cycles.
+pub fn sum_2d(
+    engine: &mut WordEngine,
+    nx: usize,
+    ny: usize,
+    mx: usize,
+    my: usize,
+) -> ReduceRun<i64> {
+    assert_eq!(nx % mx, 0, "mx must divide nx");
+    assert_eq!(ny % my, 0, "my must divide ny");
+    let n = nx * ny;
+    assert!(n <= engine.len());
+    let before = engine.cost();
+    let end = n.saturating_sub(1) as u32;
+
+    // Step 1: rows of all sections sum left-to-right. Column position
+    // within a section is x % mx == k; since mx | nx, that is a flat
+    // lattice with carry mx — plain Rule 4.
+    for k in 1..mx {
+        let mut b = TraceBuilder::new();
+        b.select(k as u32, end, mx as u32).add(Reg::Nb, Src::Left);
+        engine.run(&b.build());
+    }
+
+    // Step 2: the right-most columns of all sections sum bottom-to-top
+    // (we accumulate downward in row index; direction is symmetric).
+    // Row position within a section is y % my == k; combined with
+    // x % mx == mx-1 this is the 2-D lattice — flat carry can't express
+    // it, so rows are selected via the preloaded Y-phase plane in D2
+    // (2 cycles per row position: one CMP + one conditional add).
+    load_phase_planes(engine, nx, ny, mx, my);
+    for k in 1..my {
+        let mut b = TraceBuilder::new();
+        // Select x-lattice mx-1 with carry mx, rows where D2 == k.
+        b.select((mx - 1) as u32, end, mx as u32)
+            .cmp_imm(Opcode::CmpEq, Reg::D2, k as i32)
+            .raw(
+                Opcode::Add,
+                Src::Up,
+                Reg::Nb,
+                0,
+                crate::device::computable::isa::F_COND_M,
+            );
+        let mut t = b.build();
+        for i in &mut t {
+            i.nx = nx as u32;
+        }
+        engine.run(&t);
+    }
+
+    let after = engine.cost();
+    let concurrent_cycles = after.macro_cycles - before.macro_cycles;
+
+    // Step 3/4: scan the top-right-most PE of every section serially.
+    let mut value = 0i64;
+    let mut serial_steps = 0u64;
+    let plane = engine.plane(Reg::Nb);
+    for sy in 0..ny / my {
+        for sx in 0..nx / mx {
+            let x = sx * mx + (mx - 1);
+            let y = sy * my + (my - 1);
+            value += plane[y * nx + x] as i64;
+            serial_steps += 1;
+        }
+    }
+    ReduceRun {
+        value,
+        concurrent_cycles,
+        serial_steps,
+    }
+}
+
+/// Preload the Y-phase coordinate plane (D2 = y % my) — the device-config
+/// step standing in for the hardware's independent Y-axis decoder.
+/// Charged as exclusive setup, not concurrent cycles.
+fn load_phase_planes(engine: &mut WordEngine, nx: usize, ny: usize, _mx: usize, my: usize) {
+    let n = nx * ny;
+    let mut d2 = vec![0i32; n];
+    for y in 0..ny {
+        for x in 0..nx {
+            d2[y * nx + x] = (y % my) as i32;
+        }
+    }
+    engine.load_plane(Reg::D2, &d2);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn engine_with(vals: &[i32]) -> WordEngine {
+        let mut e = WordEngine::new(vals.len(), 16);
+        e.load_plane(Reg::Nb, vals);
+        e.reset_cost();
+        e
+    }
+
+    #[test]
+    fn sum_1d_exact_for_various_sections() {
+        let mut rng = Rng::new(31);
+        for n in [1usize, 2, 7, 64, 100, 1000] {
+            let vals = rng.vec_i32(n, -100, 100);
+            let want: i64 = vals.iter().map(|&v| v as i64).sum();
+            for m in [1usize, 2, 3, 8, 32, n] {
+                let mut e = engine_with(&vals);
+                let run = sum_1d(&mut e, n, m);
+                assert_eq!(run.value, want, "n={n} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn sum_1d_cost_is_m_plus_n_over_m() {
+        let n = 4096;
+        let vals = vec![1i32; n];
+        for m in [8usize, 64, 256] {
+            let mut e = engine_with(&vals);
+            let run = sum_1d(&mut e, n, m);
+            assert_eq!(run.concurrent_cycles, (m - 1) as u64, "m={m}");
+            assert_eq!(run.serial_steps, (n / m) as u64, "m={m}");
+        }
+    }
+
+    #[test]
+    fn sum_1d_opt_is_sqrt_n() {
+        let n = 10_000;
+        let vals = vec![2i32; n];
+        let mut e = engine_with(&vals);
+        let run = sum_1d_opt(&mut e, n);
+        assert_eq!(run.value, 20_000);
+        // ~2·√N at the optimum
+        assert!(run.total_cycles() <= 2 * 100 + 2, "{}", run.total_cycles());
+    }
+
+    #[test]
+    fn max_1d_exact() {
+        let mut rng = Rng::new(32);
+        for n in [1usize, 5, 77, 512] {
+            let vals = rng.vec_i32(n, -10_000, 10_000);
+            let want = *vals.iter().max().unwrap();
+            let m = isqrt(n as u64).max(1) as usize;
+            let mut e = engine_with(&vals);
+            let run = max_1d(&mut e, n, m);
+            assert_eq!(run.value, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn sum_2d_exact_and_cost_shape() {
+        let (nx, ny) = (16, 12);
+        let mut rng = Rng::new(33);
+        let img = rng.vec_i32(nx * ny, -50, 50);
+        let want: i64 = img.iter().map(|&v| v as i64).sum();
+        for (mx, my) in [(4usize, 4usize), (8, 3), (16, 12), (2, 2)] {
+            let mut e = engine_with(&img);
+            let run = sum_2d(&mut e, nx, ny, mx, my);
+            assert_eq!(run.value, want, "mx={mx} my={my}");
+            // (mx-1) adds + 2(my-1) for the 2-D-selected column adds
+            // (one CMP + one conditional add per row position)
+            assert_eq!(
+                run.concurrent_cycles,
+                (mx - 1) as u64 + 2 * (my - 1) as u64,
+                "mx={mx} my={my}"
+            );
+            assert_eq!(run.serial_steps, ((nx / mx) * (ny / my)) as u64);
+        }
+    }
+
+    #[test]
+    fn reduce_run_totals() {
+        let r = ReduceRun {
+            value: 0i64,
+            concurrent_cycles: 10,
+            serial_steps: 5,
+        };
+        assert_eq!(r.total_cycles(), 15);
+    }
+}

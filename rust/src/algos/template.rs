@@ -1,0 +1,417 @@
+//! Template search (§7.6, Figs 11–12).
+//!
+//! Sum-of-absolute-differences template matching. The array is divided into
+//! N/M sections; the template is broadcast to every section (~M cycles —
+//! one broadcast per template element, Rule 5), then for each of the M
+//! in-section offsets: point-wise |difference| (~1), in-section window sum
+//! (~M), template shift (~1). Total ~M², **independent of N** — the paper's
+//! headline reduction from ~(N·M) (E10). The 2-D variant (Fig 12) is
+//! ~Mx²·My, independent of Nx·Ny (E11).
+
+use crate::device::computable::isa::F_COND_M;
+use crate::device::computable::{Opcode, Reg, Src, TraceBuilder, WordEngine};
+
+/// Result of a template search.
+#[derive(Debug, Clone)]
+pub struct TemplateRun {
+    /// `scores[p]` = SAD of the template anchored at position `p`
+    /// (1-D: length N-M+1; 2-D: (nx-mx+1)*(ny-my+1) row-major).
+    pub scores: Vec<i64>,
+    /// Position of the best (minimum) score.
+    pub best_pos: usize,
+    /// Concurrent macro cycles used.
+    pub cycles: u64,
+}
+
+/// 1-D template search over `values` (loaded into D0) for `template`.
+///
+/// Plane usage: D0 = image (preserved), OP = template copy (slides),
+/// D1 = |D0 - OP|, NB = window-sum accumulator.
+pub fn search_1d(engine: &mut WordEngine, values: &[i32], template: &[i32]) -> TemplateRun {
+    let n = values.len();
+    let m = template.len();
+    assert!(m >= 1 && m <= n && n <= engine.len());
+    engine.load_plane(Reg::D0, values);
+    engine.reset_cost();
+    let before = engine.cost();
+    let end = (n - 1) as u32;
+
+    // Step 1 (Fig 11): broadcast the template to all sections — one
+    // concurrent write per template element (carry = M lattice). D2
+    // accumulates the full score plane for match-line readouts.
+    {
+        let mut b = TraceBuilder::new();
+        b.select(0, end, 1).set(Reg::D2, i32::MAX);
+        engine.run(&b.build());
+    }
+    for (k, &t) in template.iter().enumerate() {
+        let mut b = TraceBuilder::new();
+        b.select(k as u32, end, m as u32).set(Reg::Op, t);
+        engine.run(&b.build());
+    }
+
+    let mut scores = vec![i64::MAX; n];
+    // Steps 2–3: for each in-section offset j, diff + window-sum, then
+    // shift the template right by one and repeat.
+    for j in 0..m {
+        // Point-wise |image - template| into D1, then into NB.
+        let mut b = TraceBuilder::new();
+        b.select(0, end, 1)
+            .copy(Reg::D1, Src::Reg(Reg::D0))
+            .absdiff(Reg::D1, Src::Reg(Reg::Op))
+            .copy(Reg::Nb, Src::Reg(Reg::D1));
+        engine.run(&b.build());
+
+        // Window sum of M values starting at positions ≡ j (mod m):
+        // accumulate from the window's right end inward (~M cycles).
+        for step in 1..m {
+            let lat = (j + m - 1 - step) % m;
+            let mut b = TraceBuilder::new();
+            b.select(lat as u32, end, m as u32).add(Reg::Nb, Src::Right);
+            engine.run(&b.build());
+        }
+
+        // Anchors p ≡ j (mod m) now hold SAD(p) in NB; bank them into the
+        // D2 score plane (1 cycle) and read them out (exclusive readout;
+        // invalid tails excluded).
+        {
+            let mut b = TraceBuilder::new();
+            b.select(j as u32, end, m as u32)
+                .copy(Reg::D2, Src::Reg(Reg::Nb));
+            engine.run(&b.build());
+        }
+        let plane = engine.plane(Reg::Nb);
+        let mut p = j;
+        while p + m <= n {
+            scores[p] = plane[p] as i64;
+            p += m;
+        }
+
+        // Shift the template right by one PE for the next offset
+        // (publish OP through NB, then read Left — 2 cycles).
+        if j + 1 < m {
+            let mut b = TraceBuilder::new();
+            b.select(0, end, 1)
+                .copy(Reg::Nb, Src::Reg(Reg::Op))
+                .copy(Reg::Op, Src::Left);
+            engine.run(&b.build());
+        }
+    }
+
+    let cycles = engine.cost().macro_cycles - before.macro_cycles;
+    scores.truncate(n - m + 1);
+    let best_pos = scores
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, &s)| s)
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    TemplateRun {
+        scores,
+        best_pos,
+        cycles,
+    }
+}
+
+/// Threshold readout via the match lines (Rule 6): positions whose SAD
+/// (banked in the D2 score plane by [`search_1d`]) is at most `limit` —
+/// one compare cycle + enumeration, no score streaming.
+pub fn matches_within(engine: &mut WordEngine, n: usize, m: usize, limit: i32) -> Vec<usize> {
+    let mut b = TraceBuilder::new();
+    b.select(0, (n - 1) as u32, 1)
+        .cmp_imm(Opcode::CmpLe, Reg::D2, limit);
+    engine.run(&b.build());
+    let plane = engine.plane(Reg::M);
+    (0..n.saturating_sub(m - 1))
+        .filter(|&p| plane[p] != 0)
+        .collect()
+}
+
+/// 2-D template search on an `nx * ny` image for an `mx * my` template.
+///
+/// Requires `mx | nx`, `my | ny`. Follows Fig 12: template broadcast to all
+/// sections, then for each of the mx·my offsets: |diff|, row window-sums
+/// (~mx), column window-sums (~my), template shift. Cost ~MxMy(Mx+My),
+/// the paper's ~Mx²My for square-ish templates — independent of image size.
+pub fn search_2d(
+    engine: &mut WordEngine,
+    image: &[i32],
+    nx: usize,
+    ny: usize,
+    template: &[i32],
+    mx: usize,
+    my: usize,
+) -> TemplateRun {
+    assert_eq!(image.len(), nx * ny);
+    assert_eq!(template.len(), mx * my);
+    assert_eq!(nx % mx, 0, "mx must divide nx");
+    assert_eq!(ny % my, 0, "my must divide ny");
+    let n = nx * ny;
+    assert!(n <= engine.len());
+    engine.load_plane(Reg::D0, image);
+    // Coordinate phase planes (device-config; see DESIGN.md): D2 = y % my,
+    // D3 = x % mx.
+    let mut d2 = vec![0i32; n];
+    let mut d3 = vec![0i32; n];
+    for y in 0..ny {
+        for x in 0..nx {
+            d2[y * nx + x] = (y % my) as i32;
+            d3[y * nx + x] = (x % mx) as i32;
+        }
+    }
+    engine.load_plane(Reg::D2, &d2);
+    engine.load_plane(Reg::D3, &d3);
+    engine.reset_cost();
+    let before = engine.cost();
+    let end = (n - 1) as u32;
+    let stride = nx as u32;
+
+    let mut scores = vec![i64::MAX; n];
+    for jy in 0..my {
+        // Broadcast the template into OP of every section at row offset jy
+        // (mx·my broadcasts, each a 2-D lattice select = CMP on D2 + a
+        // conditional write). Rebroadcasting per row offset avoids the
+        // flat-shift row-boundary artifacts a down-shift would introduce.
+        for ty in 0..my {
+            for tx in 0..mx {
+                let mut b = TraceBuilder::new();
+                b.select(tx as u32, end, mx as u32)
+                    .cmp_imm(Opcode::CmpEq, Reg::D2, ((ty + jy) % my) as i32)
+                    .raw(
+                        Opcode::Copy,
+                        Src::Imm,
+                        Reg::Op,
+                        template[ty * mx + tx],
+                        F_COND_M,
+                    );
+                engine.run(&b.build());
+            }
+        }
+        for jx in 0..mx {
+            // |image - template| into NB.
+            let mut b = TraceBuilder::new();
+            b.select(0, end, 1)
+                .copy(Reg::D1, Src::Reg(Reg::D0))
+                .absdiff(Reg::D1, Src::Reg(Reg::Op))
+                .copy(Reg::Nb, Src::Reg(Reg::D1));
+            engine.run(&b.build());
+
+            // Row window-sums toward the anchor column (≡ jx mod mx).
+            for step in 1..mx {
+                let lat = (jx + mx - 1 - step) % mx;
+                let mut b = TraceBuilder::new();
+                b.select(lat as u32, end, mx as u32).add(Reg::Nb, Src::Right);
+                engine.run(&b.build());
+            }
+            // Column window-sums toward the anchor row (≡ jy mod my),
+            // restricted to the anchor column (2-D select via D2/D3).
+            for step in 1..my {
+                let rowlat = ((jy + my - 1 - step) % my) as i32;
+                let mut b = TraceBuilder::new();
+                b.select(jx as u32, end, mx as u32)
+                    .cmp_imm(Opcode::CmpEq, Reg::D2, rowlat)
+                    .raw(Opcode::Add, Src::Down, Reg::Nb, 0, F_COND_M);
+                let mut t = b.build();
+                for i in &mut t {
+                    i.nx = stride.max(1);
+                }
+                engine.run(&t);
+            }
+
+            // Anchors (x ≡ jx mod mx, y ≡ jy mod my) hold the section SAD.
+            let plane = engine.plane(Reg::Nb);
+            let mut y = jy;
+            while y + my <= ny {
+                let mut x = jx;
+                while x + mx <= nx {
+                    scores[y * nx + x] = plane[y * nx + x] as i64;
+                    x += mx;
+                }
+                y += my;
+            }
+
+            // Shift template right by one column (publish + read Left).
+            if jx + 1 < mx {
+                let mut b = TraceBuilder::new();
+                b.select(0, end, 1)
+                    .copy(Reg::Nb, Src::Reg(Reg::Op))
+                    .copy(Reg::Op, Src::Left);
+                engine.run(&b.build());
+            }
+        }
+    }
+
+    let cycles = engine.cost().macro_cycles - before.macro_cycles;
+    // Valid anchors only.
+    let mut best_pos = 0usize;
+    let mut best = i64::MAX;
+    for y in 0..=ny - my {
+        for x in 0..=nx - mx {
+            let s = scores[y * nx + x];
+            if s < best {
+                best = s;
+                best_pos = y * nx + x;
+            }
+        }
+    }
+    TemplateRun {
+        scores,
+        best_pos,
+        cycles,
+    }
+}
+
+/// Reference SAD (serial) for tests and baselines.
+pub fn sad_ref_1d(values: &[i32], template: &[i32]) -> Vec<i64> {
+    let n = values.len();
+    let m = template.len();
+    (0..=n - m)
+        .map(|p| {
+            template
+                .iter()
+                .enumerate()
+                .map(|(k, &t)| (values[p + k] as i64 - t as i64).abs())
+                .sum()
+        })
+        .collect()
+}
+
+/// Reference SAD (serial) for the 2-D search.
+pub fn sad_ref_2d(
+    image: &[i32],
+    nx: usize,
+    ny: usize,
+    template: &[i32],
+    mx: usize,
+    my: usize,
+) -> Vec<i64> {
+    let mut out = vec![i64::MAX; nx * ny];
+    for y in 0..=ny - my {
+        for x in 0..=nx - mx {
+            let mut s = 0i64;
+            for ty in 0..my {
+                for tx in 0..mx {
+                    s += (image[(y + ty) * nx + (x + tx)] as i64
+                        - template[ty * mx + tx] as i64)
+                        .abs();
+                }
+            }
+            out[y * nx + x] = s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn search_1d_exact_scores() {
+        let mut rng = Rng::new(41);
+        for (n, m) in [(32usize, 4usize), (60, 5), (64, 8), (100, 10)] {
+            let vals = rng.vec_i32(n, 0, 50);
+            let tmpl = rng.vec_i32(m, 0, 50);
+            let mut e = WordEngine::new(n, 16);
+            let run = search_1d(&mut e, &vals, &tmpl);
+            let want = sad_ref_1d(&vals, &tmpl);
+            assert_eq!(run.scores, want, "n={n} m={m}");
+        }
+    }
+
+    #[test]
+    fn search_1d_finds_planted_template() {
+        let mut rng = Rng::new(42);
+        let n = 256;
+        let mut vals = rng.vec_i32(n, 0, 1000);
+        let tmpl: Vec<i32> = (0..8).map(|k| 2000 + k).collect();
+        vals[100..108].copy_from_slice(&tmpl);
+        let mut e = WordEngine::new(n, 16);
+        let run = search_1d(&mut e, &vals, &tmpl);
+        assert_eq!(run.best_pos, 100);
+        assert_eq!(run.scores[100], 0);
+        let hits = matches_within(&mut e, n, 8, 0);
+        assert_eq!(hits, vec![100]);
+    }
+
+    #[test]
+    fn search_1d_cycles_independent_of_n() {
+        let mut rng = Rng::new(43);
+        let tmpl = rng.vec_i32(8, 0, 9);
+        let c: Vec<u64> = [64usize, 512, 4096]
+            .iter()
+            .map(|&n| {
+                let vals = rng.vec_i32(n, 0, 9);
+                let mut e = WordEngine::new(n, 16);
+                search_1d(&mut e, &vals, &tmpl).cycles
+            })
+            .collect();
+        assert_eq!(c[0], c[1]);
+        assert_eq!(c[1], c[2]);
+        // ~M² scaling: quadrupling M should grow cycles ~16x (within 3x).
+        let c4 = {
+            let vals = rng.vec_i32(512, 0, 9);
+            let t4 = rng.vec_i32(32, 0, 9);
+            let mut e = WordEngine::new(512, 16);
+            search_1d(&mut e, &vals, &t4).cycles
+        };
+        let ratio = c4 as f64 / c[1] as f64;
+        assert!(ratio > 5.0 && ratio < 48.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn search_2d_exact_scores() {
+        let mut rng = Rng::new(44);
+        let (nx, ny, mx, my) = (16usize, 12usize, 4usize, 3usize);
+        let img = rng.vec_i32(nx * ny, 0, 30);
+        let tmpl = rng.vec_i32(mx * my, 0, 30);
+        let mut e = WordEngine::new(nx * ny, 16);
+        let run = search_2d(&mut e, &img, nx, ny, &tmpl, mx, my);
+        let want = sad_ref_2d(&img, nx, ny, &tmpl, mx, my);
+        for y in 0..=ny - my {
+            for x in 0..=nx - mx {
+                assert_eq!(
+                    run.scores[y * nx + x],
+                    want[y * nx + x],
+                    "x={x} y={y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn search_2d_finds_planted_patch() {
+        let mut rng = Rng::new(45);
+        let (nx, ny, mx, my) = (32usize, 24usize, 4usize, 4usize);
+        let mut img = rng.vec_i32(nx * ny, 0, 500);
+        let tmpl: Vec<i32> = (0..16).map(|k| 10_000 + k).collect();
+        let (px, py) = (13usize, 9usize);
+        for ty in 0..my {
+            for tx in 0..mx {
+                img[(py + ty) * nx + (px + tx)] = tmpl[ty * mx + tx];
+            }
+        }
+        let mut e = WordEngine::new(nx * ny, 16);
+        let run = search_2d(&mut e, &img, nx, ny, &tmpl, mx, my);
+        assert_eq!(run.best_pos, py * nx + px);
+        assert_eq!(run.scores[py * nx + px], 0);
+    }
+
+    #[test]
+    fn search_2d_cycles_independent_of_image_size() {
+        let mut rng = Rng::new(46);
+        let (mx, my) = (4usize, 4usize);
+        let tmpl = rng.vec_i32(mx * my, 0, 9);
+        let cycles: Vec<u64> = [(16usize, 16usize), (64, 32), (128, 64)]
+            .iter()
+            .map(|&(nx, ny)| {
+                let img = rng.vec_i32(nx * ny, 0, 9);
+                let mut e = WordEngine::new(nx * ny, 16);
+                search_2d(&mut e, &img, nx, ny, &tmpl, mx, my).cycles
+            })
+            .collect();
+        assert_eq!(cycles[0], cycles[1]);
+        assert_eq!(cycles[1], cycles[2]);
+    }
+}

@@ -1,0 +1,121 @@
+//! Thresholding (§7.8).
+//!
+//! On a bus-sharing machine thresholding costs one pass over the data
+//! (O(N) with bus traffic); on a content computable memory it is **one
+//! concurrent compare** — so it can be deferred to the last processing
+//! stage instead of being used early to prune data (the paper's argument
+//! that CPM decouples instruction count from data size).
+
+use crate::device::computable::isa::F_COND_M;
+use crate::device::computable::{Opcode, Reg, Src, TraceBuilder, WordEngine};
+
+/// Mark all values above `t` on the match plane (~1 cycle). Returns the
+/// number of marked PEs (parallel counter).
+pub fn threshold_mark(engine: &mut WordEngine, n: usize, t: i32) -> usize {
+    let mut b = TraceBuilder::new();
+    b.select(0, n.saturating_sub(1) as u32, 1)
+        .cmp_imm(Opcode::CmpGt, Reg::Nb, t);
+    engine.run(&b.build());
+    engine.match_count()
+}
+
+/// Binarize in place: `NB = 1` where `NB > t`, else 0 (~3 cycles).
+pub fn threshold_binarize(engine: &mut WordEngine, n: usize, t: i32) {
+    let end = n.saturating_sub(1) as u32;
+    let mut b = TraceBuilder::new();
+    b.select(0, end, 1)
+        .cmp_imm(Opcode::CmpGt, Reg::Nb, t)
+        .set_if(Reg::Nb, 1)
+        .set_unless(Reg::Nb, 0);
+    engine.run(&b.build());
+}
+
+/// Clamp to a band: keep values in `[lo, hi]`, zero the rest (~5 cycles —
+/// two compares + combine + conditional clear).
+pub fn threshold_band(engine: &mut WordEngine, n: usize, lo: i32, hi: i32) {
+    let end = n.saturating_sub(1) as u32;
+    let mut b = TraceBuilder::new();
+    b.select(0, end, 1)
+        // M = NB < lo -> zero those
+        .cmp_imm(Opcode::CmpLt, Reg::Nb, lo)
+        .set_if(Reg::Nb, 0)
+        // M = NB > hi -> zero those
+        .cmp_imm(Opcode::CmpGt, Reg::Nb, hi)
+        .set_if(Reg::Nb, 0);
+    engine.run(&b.build());
+}
+
+/// Conditional replace: where `NB > t`, substitute `v` (~2 cycles). The
+/// general conditional-update primitive thresholded pipelines use.
+pub fn threshold_replace(engine: &mut WordEngine, n: usize, t: i32, v: i32) {
+    let end = n.saturating_sub(1) as u32;
+    let mut b = TraceBuilder::new();
+    b.select(0, end, 1)
+        .cmp_imm(Opcode::CmpGt, Reg::Nb, t)
+        .raw(Opcode::Copy, Src::Imm, Reg::Nb, v, F_COND_M);
+    engine.run(&b.build());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn engine_with(vals: &[i32]) -> WordEngine {
+        let mut e = WordEngine::new(vals.len(), 16);
+        e.load_plane(Reg::Nb, vals);
+        e.reset_cost();
+        e
+    }
+
+    #[test]
+    fn mark_counts_above_threshold() {
+        let vals = [1, 5, 10, -3, 7, 5];
+        let mut e = engine_with(&vals);
+        assert_eq!(threshold_mark(&mut e, 6, 5), 2);
+        // cycle count: 1 compare + 1 readout
+        assert_eq!(e.cost().macro_cycles, 2);
+    }
+
+    #[test]
+    fn binarize() {
+        let vals = [0, 100, 50, 49, -1];
+        let mut e = engine_with(&vals);
+        threshold_binarize(&mut e, 5, 49);
+        assert_eq!(e.plane(Reg::Nb), &[0, 1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn band_keeps_interior() {
+        let vals = [5, 10, 15, 20, 25];
+        let mut e = engine_with(&vals);
+        threshold_band(&mut e, 5, 10, 20);
+        assert_eq!(e.plane(Reg::Nb), &[0, 10, 15, 20, 0]);
+    }
+
+    #[test]
+    fn replace_substitutes() {
+        let vals = [1, 9, 3, 9];
+        let mut e = engine_with(&vals);
+        threshold_replace(&mut e, 4, 5, -1);
+        assert_eq!(e.plane(Reg::Nb), &[1, -1, 3, -1]);
+    }
+
+    #[test]
+    fn cost_independent_of_n() {
+        let mut rng = Rng::new(61);
+        let small = {
+            let v = rng.vec_i32(32, 0, 100);
+            let mut e = engine_with(&v);
+            threshold_mark(&mut e, 32, 50);
+            e.cost().macro_cycles
+        };
+        let large = {
+            let v = rng.vec_i32(32768, 0, 100);
+            let mut e = engine_with(&v);
+            threshold_mark(&mut e, 32768, 50);
+            e.cost().macro_cycles
+        };
+        assert_eq!(small, large);
+    }
+}

@@ -1,0 +1,128 @@
+//! Database-index baseline (§6.2).
+//!
+//! "To make the speed of such comparison acceptable, a database index
+//! pre-sorts a database field. Even with the help of the index, the
+//! instruction cycles of such comparison is still ~M·log(N) (M = average
+//! item count per value, N = unique values); the index must be deleted
+//! before heavy updates and recreated afterward."
+//!
+//! This models the index as a sorted (value, row) vector: build O(N log N),
+//! point/range query O(log N + hits), and update cost = full rebuild — the
+//! operational pain the paper contrasts with the comparable memory's
+//! zero-preprocessing compare.
+
+use super::SerialMachine;
+
+/// A sorted index over one i64-valued field.
+#[derive(Debug, Clone, Default)]
+pub struct SortedIndex {
+    entries: Vec<(i64, usize)>,
+}
+
+impl SortedIndex {
+    /// Build from `(value per row)` — O(N log N) compare/move cost.
+    pub fn build(m: &mut SerialMachine, values: &[i64]) -> Self {
+        let n = values.len() as u64;
+        m.touch(n);
+        m.compute(n * (n.max(2)).ilog2() as u64);
+        let mut entries: Vec<(i64, usize)> = values
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (v, i))
+            .collect();
+        entries.sort_unstable();
+        SortedIndex { entries }
+    }
+
+    /// Number of indexed rows.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True if the index is empty.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Rows with `value == v`: ~log N probe + M hits.
+    pub fn eq(&self, m: &mut SerialMachine, v: i64) -> Vec<usize> {
+        let n = self.entries.len() as u64;
+        m.compute((n.max(2)).ilog2() as u64);
+        let start = self.entries.partition_point(|&(x, _)| x < v);
+        let mut out = Vec::new();
+        let mut i = start;
+        while i < self.entries.len() && self.entries[i].0 == v {
+            m.touch(1);
+            out.push(self.entries[i].1);
+            i += 1;
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Rows with `lo <= value < hi`: ~log N + hits.
+    pub fn range(&self, m: &mut SerialMachine, lo: i64, hi: i64) -> Vec<usize> {
+        let n = self.entries.len() as u64;
+        m.compute(2 * (n.max(2)).ilog2() as u64);
+        let start = self.entries.partition_point(|&(x, _)| x < lo);
+        let end = self.entries.partition_point(|&(x, _)| x < hi);
+        let mut out: Vec<usize> = self.entries[start..end].iter().map(|&(_, r)| r).collect();
+        m.touch(out.len() as u64);
+        out.sort_unstable();
+        out
+    }
+
+    /// A field update invalidates the index: the paper's rebuild cost.
+    pub fn rebuild_after_update(m: &mut SerialMachine, values: &[i64]) -> Self {
+        Self::build(m, values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn eq_and_range_match_scan() {
+        let mut rng = Rng::new(101);
+        let values: Vec<i64> = (0..500).map(|_| rng.i32_range(0, 50) as i64).collect();
+        let mut m = SerialMachine::new();
+        let idx = SortedIndex::build(&mut m, &values);
+        for probe in [0i64, 7, 25, 49, 99] {
+            let got = idx.eq(&mut m, probe);
+            let want: Vec<usize> = values
+                .iter()
+                .enumerate()
+                .filter_map(|(i, &v)| if v == probe { Some(i) } else { None })
+                .collect();
+            assert_eq!(got, want, "probe={probe}");
+        }
+        let got = idx.range(&mut m, 10, 20);
+        let want: Vec<usize> = values
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &v)| if (10..20).contains(&v) { Some(i) } else { None })
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn probe_cost_is_logarithmic_plus_hits() {
+        let values: Vec<i64> = (0..1 << 16).map(|i| i as i64).collect();
+        let mut m = SerialMachine::new();
+        let idx = SortedIndex::build(&mut m, &values);
+        m.reset();
+        idx.eq(&mut m, 12345);
+        assert!(m.cost.cpu_cycles <= 16 + 4, "{}", m.cost.cpu_cycles);
+        assert_eq!(m.cost.bus_words, 1);
+    }
+
+    #[test]
+    fn build_cost_is_n_log_n() {
+        let values: Vec<i64> = (0..1024).map(|i| (i * 37 % 1024) as i64).collect();
+        let mut m = SerialMachine::new();
+        SortedIndex::build(&mut m, &values);
+        assert_eq!(m.cost.cpu_cycles, 1024 * 10 + 1024);
+    }
+}

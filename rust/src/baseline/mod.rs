@@ -1,0 +1,163 @@
+//! The serial bus-sharing baseline (§2's "current most common CPU/memory
+//! bus-sharing architecture").
+//!
+//! Every CPM claim in the paper is a comparison against this machine: a
+//! serial CPU that must stream each word it touches over the shared system
+//! bus. [`SerialMachine`] counts `cpu_cycles` (one simple op each) and
+//! `bus_words` (processing-purpose traffic — the §2 bottleneck), and the
+//! submodules implement the serial counterpart of every CPM operation:
+//! memmove insertion/deletion, linear scan and B-tree-indexed comparison,
+//! naive and KMP substring search, convolution, reduction, quicksort and
+//! insertion sort, template scan, and per-pixel line detection.
+
+pub mod index;
+pub mod search;
+pub mod sort;
+pub mod stencil;
+
+pub use index::SortedIndex;
+
+use crate::cycles::SerialCost;
+
+/// The serial CPU + RAM model. All operations tally cost on `self.cost`.
+#[derive(Debug, Default, Clone)]
+pub struct SerialMachine {
+    /// Accumulated cost.
+    pub cost: SerialCost,
+}
+
+impl SerialMachine {
+    /// Fresh machine.
+    pub fn new() -> Self {
+        SerialMachine::default()
+    }
+
+    /// Reset counters.
+    pub fn reset(&mut self) {
+        self.cost = SerialCost::default();
+    }
+
+    /// Charge `n` ops that each touch memory through the bus.
+    #[inline]
+    pub fn touch(&mut self, n: u64) {
+        self.cost += SerialCost::touching(n);
+    }
+
+    /// Charge `n` register-only ops.
+    #[inline]
+    pub fn compute(&mut self, n: u64) {
+        self.cost += SerialCost::compute(n);
+    }
+
+    // ---- §4 memory management ------------------------------------------
+
+    /// Insert `insert_len` bytes at `addr` into a used region of `used`
+    /// bytes: the classic memmove — every byte after `addr` crosses the
+    /// bus twice (read + write).
+    pub fn insert_memmove(&mut self, addr: usize, insert_len: usize, used: usize) {
+        let moved = used.saturating_sub(addr) as u64;
+        self.touch(2 * moved + insert_len as u64);
+    }
+
+    /// Delete `del_len` bytes at `addr` (memmove the tail down).
+    pub fn delete_memmove(&mut self, addr: usize, del_len: usize, used: usize) {
+        let moved = used.saturating_sub(addr + del_len) as u64;
+        self.touch(2 * moved);
+    }
+
+    // ---- §6 comparison --------------------------------------------------
+
+    /// Compare one field of every item against a value by scanning the
+    /// table: N reads + N compares.
+    pub fn scan_compare<T: Copy, F: Fn(T) -> bool>(
+        &mut self,
+        items: &[T],
+        pred: F,
+    ) -> Vec<usize> {
+        self.touch(items.len() as u64);
+        self.compute(items.len() as u64);
+        items
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &v)| if pred(v) { Some(i) } else { None })
+            .collect()
+    }
+
+    /// Sum an array serially.
+    pub fn sum(&mut self, items: &[i32]) -> i64 {
+        self.touch(items.len() as u64);
+        self.compute(items.len() as u64);
+        items.iter().map(|&v| v as i64).sum()
+    }
+
+    /// Maximum of an array serially.
+    pub fn max(&mut self, items: &[i32]) -> Option<i32> {
+        self.touch(items.len() as u64);
+        self.compute(items.len() as u64);
+        items.iter().copied().max()
+    }
+
+    /// Histogram by scanning: one pass, one bucket update per item.
+    pub fn histogram(&mut self, items: &[i32], bounds: &[i32]) -> Vec<usize> {
+        self.touch(items.len() as u64);
+        // binary search per item over the bounds
+        self.compute(items.len() as u64 * ((bounds.len() as u64).max(2)).ilog2() as u64);
+        let mut counts = vec![0usize; bounds.len() + 1];
+        for &v in items {
+            let k = bounds.iter().filter(|&&b| v >= b).count();
+            counts[k] += 1;
+        }
+        counts
+    }
+
+    // ---- §7.8 -----------------------------------------------------------
+
+    /// Threshold by scanning.
+    pub fn threshold(&mut self, items: &[i32], t: i32) -> usize {
+        self.touch(items.len() as u64);
+        self.compute(items.len() as u64);
+        items.iter().filter(|&&v| v > t).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memmove_costs_scale_with_tail() {
+        let mut m = SerialMachine::new();
+        m.insert_memmove(10, 4, 1000);
+        assert_eq!(m.cost.bus_words, 2 * 990 + 4);
+        m.reset();
+        m.delete_memmove(10, 4, 1000);
+        assert_eq!(m.cost.bus_words, 2 * 986);
+    }
+
+    #[test]
+    fn scan_compare_touches_every_item() {
+        let mut m = SerialMachine::new();
+        let items: Vec<i32> = (0..100).collect();
+        let hits = m.scan_compare(&items, |v| v >= 90);
+        assert_eq!(hits.len(), 10);
+        assert_eq!(m.cost.bus_words, 100);
+        assert_eq!(m.cost.cpu_cycles, 200);
+    }
+
+    #[test]
+    fn reductions_and_threshold() {
+        let mut m = SerialMachine::new();
+        assert_eq!(m.sum(&[1, 2, 3]), 6);
+        assert_eq!(m.max(&[5, -2, 9]), Some(9));
+        assert_eq!(m.threshold(&[1, 5, 10], 4), 2);
+        assert!(m.cost.bus_words >= 9);
+    }
+
+    #[test]
+    fn histogram_matches_cpm_semantics() {
+        let mut m = SerialMachine::new();
+        let items = [1, 25, 50, 75, 99];
+        let counts = m.histogram(&items, &[25, 50, 75]);
+        assert_eq!(counts, vec![1, 1, 1, 2]);
+    }
+}

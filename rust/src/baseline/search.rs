@@ -1,0 +1,119 @@
+//! Serial substring search baselines (§5.2's comparison targets).
+//!
+//! Naive O(N·M) scan and Knuth–Morris–Pratt O(N+M) — the latter is the
+//! "complicated algorithm requiring pre-processing" the paper contrasts
+//! with the content searchable memory's ~M-cycle search.
+
+use super::SerialMachine;
+
+/// Naive scan: returns match end positions (same convention as
+/// `ContentSearchableMemory::find_substring`).
+pub fn naive_search(m: &mut SerialMachine, text: &[u8], pattern: &[u8]) -> Vec<usize> {
+    if pattern.is_empty() || pattern.len() > text.len() {
+        return Vec::new();
+    }
+    let mut hits = Vec::new();
+    for start in 0..=text.len() - pattern.len() {
+        let mut k = 0;
+        while k < pattern.len() {
+            m.touch(1); // text byte over the bus
+            m.compute(1);
+            if text[start + k] != pattern[k] {
+                break;
+            }
+            k += 1;
+        }
+        if k == pattern.len() {
+            hits.push(start + pattern.len() - 1);
+        }
+    }
+    hits
+}
+
+/// KMP: O(N + M) with the failure-function preprocessing the paper notes.
+pub fn kmp_search(m: &mut SerialMachine, text: &[u8], pattern: &[u8]) -> Vec<usize> {
+    if pattern.is_empty() || pattern.len() > text.len() {
+        return Vec::new();
+    }
+    // Failure function (M compute steps).
+    let mut fail = vec![0usize; pattern.len()];
+    let mut k = 0usize;
+    for i in 1..pattern.len() {
+        m.compute(1);
+        while k > 0 && pattern[k] != pattern[i] {
+            m.compute(1);
+            k = fail[k - 1];
+        }
+        if pattern[k] == pattern[i] {
+            k += 1;
+        }
+        fail[i] = k;
+    }
+    // Scan (N touches).
+    let mut hits = Vec::new();
+    let mut q = 0usize;
+    for (i, &c) in text.iter().enumerate() {
+        m.touch(1);
+        m.compute(1);
+        while q > 0 && pattern[q] != c {
+            m.compute(1);
+            q = fail[q - 1];
+        }
+        if pattern[q] == c {
+            q += 1;
+        }
+        if q == pattern.len() {
+            hits.push(i);
+            q = fail[q - 1];
+        }
+    }
+    hits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn both_find_same_matches() {
+        let mut rng = Rng::new(91);
+        for _ in 0..50 {
+            let n = rng.range(4, 200);
+            let text: Vec<u8> = (0..n).map(|_| b'a' + rng.range(0, 3) as u8).collect();
+            let mlen = rng.range(1, 5);
+            let pattern: Vec<u8> = (0..mlen).map(|_| b'a' + rng.range(0, 3) as u8).collect();
+            let mut m1 = SerialMachine::new();
+            let mut m2 = SerialMachine::new();
+            let a = naive_search(&mut m1, &text, &pattern);
+            let b = kmp_search(&mut m2, &text, &pattern);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn matches_cpm_device_results() {
+        use crate::device::searchable::ContentSearchableMemory;
+        let text = b"abracadabra abradabra";
+        let pattern = b"abra";
+        let mut m = SerialMachine::new();
+        let serial = naive_search(&mut m, text, pattern);
+        let mut dev = ContentSearchableMemory::new(text.len());
+        dev.load(0, text);
+        let cpm = dev.find_substring(pattern, 0, text.len() - 1);
+        assert_eq!(serial, cpm);
+    }
+
+    #[test]
+    fn cost_scaling_naive_vs_kmp() {
+        let text = vec![b'a'; 10_000];
+        let pattern = vec![b'a'; 50];
+        let mut naive = SerialMachine::new();
+        naive_search(&mut naive, &text, &pattern);
+        let mut kmp = SerialMachine::new();
+        kmp_search(&mut kmp, &text, &pattern);
+        // Worst case: naive ~N*M, KMP ~N+M.
+        assert!(naive.cost.cpu_cycles > 10 * kmp.cost.cpu_cycles);
+        assert!(kmp.cost.bus_words <= text.len() as u64 + 10);
+    }
+}

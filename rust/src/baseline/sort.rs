@@ -1,0 +1,117 @@
+//! Serial sorting baselines (§7.7's comparison targets): quicksort for
+//! random arrays (O(N log N)) and insertion sort for nearly-sorted arrays
+//! (O(N + inversions)) — both with per-touch bus accounting.
+
+use super::SerialMachine;
+
+/// Quicksort with cost accounting (Hoare partition, middle pivot).
+pub fn quicksort(m: &mut SerialMachine, data: &mut [i32]) {
+    fn go(m: &mut SerialMachine, data: &mut [i32], lo: isize, hi: isize) {
+        if lo >= hi {
+            return;
+        }
+        let pivot = data[((lo + hi) / 2) as usize];
+        m.touch(1);
+        let (mut i, mut j) = (lo - 1, hi + 1);
+        loop {
+            loop {
+                i += 1;
+                m.touch(1);
+                m.compute(1);
+                if data[i as usize] >= pivot {
+                    break;
+                }
+            }
+            loop {
+                j -= 1;
+                m.touch(1);
+                m.compute(1);
+                if data[j as usize] <= pivot {
+                    break;
+                }
+            }
+            if i >= j {
+                break;
+            }
+            data.swap(i as usize, j as usize);
+            m.touch(4); // two reads + two writes
+        }
+        go(m, data, lo, j);
+        go(m, data, j + 1, hi);
+    }
+    let hi = data.len() as isize - 1;
+    go(m, data, 0, hi);
+}
+
+/// Insertion sort — the serial best case for nearly-sorted input.
+pub fn insertion_sort(m: &mut SerialMachine, data: &mut [i32]) {
+    for i in 1..data.len() {
+        let v = data[i];
+        m.touch(1);
+        let mut j = i;
+        while j > 0 {
+            m.touch(1);
+            m.compute(1);
+            if data[j - 1] <= v {
+                break;
+            }
+            data[j] = data[j - 1];
+            m.touch(1);
+            j -= 1;
+        }
+        data[j] = v;
+        m.touch(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn quicksort_sorts() {
+        let mut rng = Rng::new(111);
+        for n in [0usize, 1, 2, 100, 1000] {
+            let mut data = rng.vec_i32(n, -1000, 1000);
+            let mut want = data.clone();
+            want.sort_unstable();
+            let mut m = SerialMachine::new();
+            quicksort(&mut m, &mut data);
+            assert_eq!(data, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn insertion_sorts_and_is_cheap_when_nearly_sorted() {
+        let n = 2000;
+        let mut nearly: Vec<i32> = (0..n).collect();
+        nearly.swap(100, 101);
+        nearly.swap(1500, 1501);
+        let mut m_nearly = SerialMachine::new();
+        insertion_sort(&mut m_nearly, &mut nearly);
+        assert!(nearly.windows(2).all(|w| w[0] <= w[1]));
+
+        let mut rng = Rng::new(112);
+        let mut random = rng.vec_i32(n as usize, -1000, 1000);
+        let mut m_random = SerialMachine::new();
+        insertion_sort(&mut m_random, &mut random);
+        assert!(random.windows(2).all(|w| w[0] <= w[1]));
+        // Nearly-sorted ~N; random ~N²/4.
+        assert!(m_random.cost.cpu_cycles > 20 * m_nearly.cost.cpu_cycles);
+    }
+
+    #[test]
+    fn quicksort_cost_is_n_log_n_ish() {
+        let mut rng = Rng::new(113);
+        let mut small = rng.vec_i32(1024, -10_000, 10_000);
+        let mut big = rng.vec_i32(8192, -10_000, 10_000);
+        let mut m1 = SerialMachine::new();
+        quicksort(&mut m1, &mut small);
+        let mut m2 = SerialMachine::new();
+        quicksort(&mut m2, &mut big);
+        let ratio = m2.cost.cpu_cycles as f64 / m1.cost.cpu_cycles as f64;
+        // 8x data, ~10.4x ideal for N log N; allow slack.
+        assert!(ratio > 6.0 && ratio < 20.0, "ratio={ratio}");
+    }
+}

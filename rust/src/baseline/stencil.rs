@@ -1,0 +1,161 @@
+//! Serial image/array baselines: convolution, template scan (the ~N·M and
+//! ~Nx·Ny·Mx·My costs of §7.6), and per-pixel line detection (~N·D²).
+
+use super::SerialMachine;
+
+/// 1-D convolution with an odd-length kernel, zero boundary.
+pub fn convolve_1d(m: &mut SerialMachine, values: &[i32], kernel: &[i64]) -> Vec<i64> {
+    let half = (kernel.len() / 2) as i64;
+    let n = values.len() as i64;
+    let mut out = vec![0i64; values.len()];
+    for i in 0..n {
+        for (k, &c) in kernel.iter().enumerate() {
+            let j = i + k as i64 - half;
+            m.compute(1);
+            if j >= 0 && j < n {
+                m.touch(1);
+                out[i as usize] += c * values[j as usize] as i64;
+            }
+        }
+        m.touch(1); // store
+    }
+    out
+}
+
+/// Serial 1-D SAD template scan — O(N·M).
+pub fn template_scan_1d(m: &mut SerialMachine, values: &[i32], template: &[i32]) -> Vec<i64> {
+    let n = values.len();
+    let tm = template.len();
+    let mut out = Vec::with_capacity(n - tm + 1);
+    for p in 0..=n - tm {
+        let mut s = 0i64;
+        for (k, &t) in template.iter().enumerate() {
+            m.touch(1);
+            m.compute(1);
+            s += (values[p + k] as i64 - t as i64).abs();
+        }
+        out.push(s);
+    }
+    out
+}
+
+/// Serial 2-D SAD template scan — O(Nx·Ny·Mx·My).
+pub fn template_scan_2d(
+    m: &mut SerialMachine,
+    image: &[i32],
+    nx: usize,
+    ny: usize,
+    template: &[i32],
+    mx: usize,
+    my: usize,
+) -> Vec<i64> {
+    let mut out = vec![i64::MAX; nx * ny];
+    for y in 0..=ny - my {
+        for x in 0..=nx - mx {
+            let mut s = 0i64;
+            for ty in 0..my {
+                for tx in 0..mx {
+                    m.touch(1);
+                    m.compute(1);
+                    s += (image[(y + ty) * nx + x + tx] as i64
+                        - template[ty * mx + tx] as i64)
+                        .abs();
+                }
+            }
+            out[y * nx + x] = s;
+        }
+    }
+    out
+}
+
+/// Serial line detection: for every pixel and every direction in the set,
+/// walk the messenger path — O(Nx·Ny·D²) total.
+pub fn line_detect_serial(
+    m: &mut SerialMachine,
+    image: &[i32],
+    nx: usize,
+    ny: usize,
+    d: u32,
+) -> Vec<i64> {
+    use crate::algos::lines::{line_set, messenger_path};
+    let set = line_set(d);
+    let mut best = vec![0i64; nx * ny];
+    for (mx, my) in set {
+        let path = messenger_path(mx, my);
+        for y in 0..ny {
+            for x in 0..nx {
+                let mut acc = 0i64;
+                for &(px, py) in &path {
+                    let cross = px as i64 * my as i64 - py as i64 * mx as i64;
+                    if cross == 0 {
+                        continue;
+                    }
+                    let (ax, ay) = (x as i64 + px as i64, y as i64 + py as i64);
+                    m.compute(1);
+                    if ax >= 0 && ax < nx as i64 && ay >= 0 && ay < ny as i64 {
+                        m.touch(1);
+                        let v = image[(ay * nx as i64 + ax) as usize] as i64;
+                        acc += if cross > 0 { v } else { -v };
+                    }
+                }
+                let i = y * nx + x;
+                if acc.abs() > best[i].abs() {
+                    best[i] = acc;
+                }
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::template::{sad_ref_1d, sad_ref_2d};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn convolution_matches_stencil_reference() {
+        use crate::algos::local_ops::Stencil;
+        let mut rng = Rng::new(121);
+        let vals = rng.vec_i32(40, -10, 10);
+        let s = Stencil::new(&[1, 2, 1]);
+        let mut m = SerialMachine::new();
+        let got = convolve_1d(&mut m, &vals, &s.coef);
+        assert_eq!(got, s.apply_ref(&vals));
+        assert!(m.cost.bus_words > vals.len() as u64);
+    }
+
+    #[test]
+    fn template_scans_match_references() {
+        let mut rng = Rng::new(122);
+        let vals = rng.vec_i32(64, 0, 99);
+        let tmpl = rng.vec_i32(6, 0, 99);
+        let mut m = SerialMachine::new();
+        assert_eq!(template_scan_1d(&mut m, &vals, &tmpl), sad_ref_1d(&vals, &tmpl));
+
+        let (nx, ny, mx, my) = (16, 8, 4, 2);
+        let img = rng.vec_i32(nx * ny, 0, 99);
+        let t2 = rng.vec_i32(mx * my, 0, 99);
+        let mut m = SerialMachine::new();
+        assert_eq!(
+            template_scan_2d(&mut m, &img, nx, ny, &t2, mx, my),
+            sad_ref_2d(&img, nx, ny, &t2, mx, my)
+        );
+        // O(N*M) bus traffic
+        assert!(m.cost.bus_words >= ((nx - mx) * (ny - my) * mx * my) as u64);
+    }
+
+    #[test]
+    fn serial_line_detection_costs_scale_with_image() {
+        let mut rng = Rng::new(123);
+        let img_small = rng.vec_i32(16 * 16, 0, 50);
+        let img_large = rng.vec_i32(32 * 32, 0, 50);
+        let mut m1 = SerialMachine::new();
+        line_detect_serial(&mut m1, &img_small, 16, 16, 4);
+        let mut m2 = SerialMachine::new();
+        line_detect_serial(&mut m2, &img_large, 32, 32, 4);
+        let ratio = m2.cost.cpu_cycles as f64 / m1.cost.cpu_cycles.max(1) as f64;
+        assert!(ratio > 3.0, "serial cost must scale with pixels: {ratio}");
+    }
+}

@@ -1,0 +1,108 @@
+//! Benchmark support: a criterion-lite timing harness and a table
+//! reporter (the offline crate set has no criterion).
+
+use std::time::Instant;
+
+/// Measure the median wall-clock of `f` over `iters` runs after `warmup`
+/// runs; returns (median_ns, total_runs).
+pub fn time_median<F: FnMut()>(warmup: u32, iters: u32, mut f: F) -> u64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<u64> = (0..iters.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_nanos() as u64
+        })
+        .collect();
+    samples.sort_unstable();
+    samples[samples.len() / 2]
+}
+
+/// A fixed-width text table.
+#[derive(Debug, Default)]
+pub struct Report {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Report {
+    /// Table with the given column headers.
+    pub fn new(header: &[&str]) -> Self {
+        Report {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match the header arity).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print with a title banner.
+    pub fn print(&self, title: &str) {
+        println!("\n== {title} ==");
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_timing_is_positive() {
+        let ns = time_median(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(ns > 0);
+    }
+
+    #[test]
+    fn report_renders_aligned() {
+        let mut r = Report::new(&["n", "cycles"]);
+        r.row(&["1024".into(), "64".into()]);
+        r.row(&["65536".into(), "512".into()]);
+        let s = r.render();
+        assert!(s.contains("cycles"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn report_rejects_arity_mismatch() {
+        let mut r = Report::new(&["a", "b"]);
+        r.row(&["1".into()]);
+    }
+}

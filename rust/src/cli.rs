@@ -1,0 +1,94 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the offline crate set).
+
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand, flags (`--key value` / `--flag`), and
+/// positional arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Cli {
+    /// First non-flag argument.
+    pub command: Option<String>,
+    /// `--key value` pairs (bare `--flag` maps to "true").
+    pub flags: HashMap<String, String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    /// Parse from an argument iterator (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Cli {
+        let mut cli = Cli::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                cli.flags.insert(key.to_string(), value);
+            } else if cli.command.is_none() {
+                cli.command = Some(a);
+            } else {
+                cli.positional.push(a);
+            }
+        }
+        cli
+    }
+
+    /// Parse from the process arguments.
+    pub fn from_env() -> Cli {
+        Cli::parse(std::env::args().skip(1))
+    }
+
+    /// Flag value parsed as `T`, or the default.
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// String flag.
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Boolean flag presence.
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Cli {
+        Cli::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_flags_positional() {
+        let c = parse("bench --exp e7 --n 4096 extra1 extra2");
+        assert_eq!(c.command.as_deref(), Some("bench"));
+        assert_eq!(c.get_str("exp"), Some("e7"));
+        assert_eq!(c.get("n", 0usize), 4096);
+        assert_eq!(c.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn bare_flags_are_true() {
+        let c = parse("run --verbose --n 8");
+        assert!(c.has("verbose"));
+        assert_eq!(c.get("verbose", false), true);
+        assert_eq!(c.get("n", 0usize), 8);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = parse("run");
+        assert_eq!(c.get("n", 42usize), 42);
+        assert!(c.get_str("missing").is_none());
+        assert!(!c.has("missing"));
+    }
+}

@@ -1,0 +1,80 @@
+//! Service metrics: request counters and latency percentiles.
+
+use std::time::Duration;
+
+/// Latency aggregation (wall-clock per request).
+#[derive(Debug, Default, Clone)]
+pub struct LatencyStats {
+    samples_us: Vec<u64>,
+}
+
+impl LatencyStats {
+    /// Record one sample.
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+    }
+
+    /// Sample count.
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    /// Percentile in microseconds (p in 0..=100).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.samples_us.is_empty() {
+            return 0;
+        }
+        let mut s = self.samples_us.clone();
+        s.sort_unstable();
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    /// Mean in microseconds.
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64
+    }
+}
+
+/// Server metrics.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    /// Requests served.
+    pub requests: u64,
+    /// Requests that failed.
+    pub errors: u64,
+    /// Concurrent macro cycles spent on devices.
+    pub device_macro_cycles: u64,
+    /// Exclusive ops spent on devices.
+    pub device_exclusive_ops: u64,
+    /// Request latency.
+    pub latency: LatencyStats,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut l = LatencyStats::default();
+        for us in [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 100] {
+            l.record(Duration::from_micros(us));
+        }
+        assert_eq!(l.count(), 10);
+        assert!(l.percentile_us(50.0) <= l.percentile_us(99.0));
+        assert_eq!(l.percentile_us(0.0), 10);
+        assert_eq!(l.percentile_us(100.0), 100);
+        assert!((l.mean_us() - 55.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let l = LatencyStats::default();
+        assert_eq!(l.percentile_us(99.0), 0);
+        assert_eq!(l.mean_us(), 0.0);
+    }
+}

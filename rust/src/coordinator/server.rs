@@ -1,0 +1,267 @@
+//! The smart-memory server: request routing over a device pool.
+//!
+//! Clients submit [`Request`]s; the server routes SQL to the comparable-
+//! memory table, substring searches to the searchable memory, and array
+//! jobs (sum/max/sort/threshold/histogram) to the computable memory —
+//! one shared SIMD device pool serving many tasks (§2's networked SQL
+//! engine; E17's end-to-end driver).
+
+use std::time::Instant;
+
+use crate::algos::{histogram, reduce, sort, threshold};
+use crate::cycles::ConcurrentCost;
+use crate::device::computable::{Reg, WordEngine};
+use crate::device::searchable::ContentSearchableMemory;
+use crate::error::{CpmError, Result};
+use crate::sql::{Query, QueryResult, Schema, Table};
+
+use super::metrics::Metrics;
+
+/// A client request.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// SQL query against the resident table.
+    Sql(String),
+    /// Substring search in the resident corpus.
+    Search(Vec<u8>),
+    /// Sum of an ad-hoc array.
+    Sum(Vec<i32>),
+    /// Maximum of an ad-hoc array.
+    Max(Vec<i32>),
+    /// Sort an ad-hoc array.
+    Sort(Vec<i32>),
+    /// Count values above a threshold.
+    Threshold(Vec<i32>, i32),
+    /// Histogram with the given bounds.
+    Histogram(Vec<i32>, Vec<i32>),
+}
+
+/// A server response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Row set or count from SQL.
+    Sql(QueryResult),
+    /// Match end positions.
+    Matches(Vec<usize>),
+    /// Scalar result.
+    Scalar(i64),
+    /// Sorted array.
+    Sorted(Vec<i32>),
+    /// Histogram counts.
+    Histogram(Vec<usize>),
+}
+
+/// The server: one table, one text corpus, one computable engine.
+#[derive(Debug)]
+pub struct CpmServer {
+    table: Table,
+    corpus: ContentSearchableMemory,
+    corpus_len: usize,
+    engine_capacity: usize,
+    /// Service metrics.
+    pub metrics: Metrics,
+}
+
+impl CpmServer {
+    /// Build a server with a table schema + capacity, a text corpus, and a
+    /// computable-memory capacity for ad-hoc array jobs.
+    pub fn new(schema: Schema, max_rows: usize, corpus: &[u8], engine_capacity: usize) -> Self {
+        let mut mem = ContentSearchableMemory::new(corpus.len().max(1));
+        mem.load(0, corpus);
+        CpmServer {
+            table: Table::new(schema, max_rows),
+            corpus: mem,
+            corpus_len: corpus.len(),
+            engine_capacity,
+            metrics: Metrics::default(),
+        }
+    }
+
+    /// Load rows into the table.
+    pub fn load_rows(&mut self, rows: &[Vec<u64>]) -> Result<()> {
+        for r in rows {
+            self.table.insert(r)?;
+        }
+        Ok(())
+    }
+
+    /// Access the resident table.
+    pub fn table(&self) -> &Table {
+        &self.table
+    }
+
+    /// Serve one request.
+    pub fn serve(&mut self, req: &Request) -> Result<Response> {
+        let start = Instant::now();
+        let out = self.dispatch(req);
+        self.metrics.requests += 1;
+        if out.is_err() {
+            self.metrics.errors += 1;
+        }
+        self.metrics.latency.record(start.elapsed());
+        out
+    }
+
+    fn charge(&mut self, cost: ConcurrentCost) {
+        self.metrics.device_macro_cycles += cost.macro_cycles;
+        self.metrics.device_exclusive_ops += cost.exclusive_ops;
+    }
+
+    fn dispatch(&mut self, req: &Request) -> Result<Response> {
+        match req {
+            Request::Sql(text) => {
+                let q = Query::parse(text)?;
+                self.table.reset_device_cost();
+                let r = self.table.query(&q)?;
+                let cost = self.table.device_cost();
+                self.charge(cost);
+                Ok(Response::Sql(r))
+            }
+            Request::Search(pattern) => {
+                if self.corpus_len == 0 {
+                    return Ok(Response::Matches(Vec::new()));
+                }
+                self.corpus.reset_cost();
+                let hits = self.corpus.find_substring(pattern, 0, self.corpus_len - 1);
+                let cost = self.corpus.cost();
+                self.charge(cost);
+                Ok(Response::Matches(hits))
+            }
+            Request::Sum(values) => {
+                let mut e = self.engine_for(values)?;
+                let run = reduce::sum_1d_opt(&mut e, values.len());
+                self.charge(e.cost());
+                Ok(Response::Scalar(run.value))
+            }
+            Request::Max(values) => {
+                if values.is_empty() {
+                    return Err(CpmError::Coordinator("max of empty array".into()));
+                }
+                let mut e = self.engine_for(values)?;
+                let m = crate::util::isqrt(values.len() as u64).max(1) as usize;
+                let run = reduce::max_1d(&mut e, values.len(), m);
+                self.charge(e.cost());
+                Ok(Response::Scalar(run.value as i64))
+            }
+            Request::Sort(values) => {
+                let mut e = self.engine_for(values)?;
+                sort::sort_sqrt(&mut e, values.len());
+                self.charge(e.cost());
+                Ok(Response::Sorted(e.plane(Reg::Nb)[..values.len()].to_vec()))
+            }
+            Request::Threshold(values, t) => {
+                let mut e = self.engine_for(values)?;
+                let count = threshold::threshold_mark(&mut e, values.len(), *t);
+                self.charge(e.cost());
+                Ok(Response::Scalar(count as i64))
+            }
+            Request::Histogram(values, bounds) => {
+                let mut e = self.engine_for(values)?;
+                let counts = histogram::histogram_words(&mut e, values.len(), bounds);
+                self.charge(e.cost());
+                Ok(Response::Histogram(counts))
+            }
+        }
+    }
+
+    fn engine_for(&mut self, values: &[i32]) -> Result<WordEngine> {
+        if values.len() > self.engine_capacity {
+            return Err(CpmError::Coordinator(format!(
+                "array of {} exceeds device capacity {}",
+                values.len(),
+                self.engine_capacity
+            )));
+        }
+        let mut e = WordEngine::new(values.len().max(1), 16);
+        e.load_plane(Reg::Nb, values);
+        Ok(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn server() -> CpmServer {
+        let schema = Schema::new(&[("price", 2), ("qty", 1)]).unwrap();
+        let mut s = CpmServer::new(schema, 256, b"the quick brown fox jumps over the lazy dog", 1 << 16);
+        let mut rng = Rng::new(201);
+        let rows: Vec<Vec<u64>> = (0..200)
+            .map(|_| vec![rng.below(10_000), rng.below(100)])
+            .collect();
+        s.load_rows(&rows).unwrap();
+        s
+    }
+
+    #[test]
+    fn serves_sql() {
+        let mut s = server();
+        let r = s
+            .serve(&Request::Sql("SELECT COUNT WHERE price < 5000".into()))
+            .unwrap();
+        let want = s
+            .table()
+            .query_reference(&Query::parse("SELECT COUNT WHERE price < 5000").unwrap());
+        assert_eq!(r, Response::Sql(want));
+        assert_eq!(s.metrics.requests, 1);
+        assert!(s.metrics.device_macro_cycles > 0);
+    }
+
+    #[test]
+    fn serves_search() {
+        let mut s = server();
+        let r = s.serve(&Request::Search(b"the".to_vec())).unwrap();
+        assert_eq!(r, Response::Matches(vec![2, 33]));
+    }
+
+    #[test]
+    fn serves_array_jobs() {
+        let mut s = server();
+        let mut rng = Rng::new(202);
+        let vals = rng.vec_i32(500, -100, 100);
+        let want_sum: i64 = vals.iter().map(|&v| v as i64).sum();
+        assert_eq!(
+            s.serve(&Request::Sum(vals.clone())).unwrap(),
+            Response::Scalar(want_sum)
+        );
+        let want_max = *vals.iter().max().unwrap() as i64;
+        assert_eq!(
+            s.serve(&Request::Max(vals.clone())).unwrap(),
+            Response::Scalar(want_max)
+        );
+        let mut sorted = vals.clone();
+        sorted.sort_unstable();
+        assert_eq!(
+            s.serve(&Request::Sort(vals.clone())).unwrap(),
+            Response::Sorted(sorted)
+        );
+        let above = vals.iter().filter(|&&v| v > 0).count() as i64;
+        assert_eq!(
+            s.serve(&Request::Threshold(vals.clone(), 0)).unwrap(),
+            Response::Scalar(above)
+        );
+        if let Response::Histogram(h) = s
+            .serve(&Request::Histogram(vals.clone(), vec![-50, 0, 50]))
+            .unwrap()
+        {
+            assert_eq!(h.iter().sum::<usize>(), vals.len());
+        } else {
+            panic!("expected histogram");
+        }
+        assert_eq!(s.metrics.requests, 5);
+        assert_eq!(s.metrics.errors, 0);
+        assert!(s.metrics.latency.percentile_us(99.0) > 0);
+    }
+
+    #[test]
+    fn rejects_oversized_and_bad_requests() {
+        let mut s = server();
+        assert!(s.serve(&Request::Max(Vec::new())).is_err());
+        assert!(s.serve(&Request::Sql("garbage".into())).is_err());
+        assert_eq!(s.metrics.errors, 2);
+        let schema = Schema::new(&[("x", 1)]).unwrap();
+        let mut tiny = CpmServer::new(schema, 4, b"", 8);
+        assert!(tiny.serve(&Request::Sum(vec![1; 100])).is_err());
+    }
+}

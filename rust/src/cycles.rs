@@ -1,0 +1,180 @@
+//! Cycle accounting — the paper's evaluation metric.
+//!
+//! The paper's claims are *instruction cycle counts*: `~1` for universal
+//! operations, `~M` for local operations, `~√N` for global operations
+//! (abstract §1). We count them in two granularities plus the system-bus
+//! traffic the paper argues CPM eliminates (§2):
+//!
+//! * `macro_cycles` — broadcast instructions on the concurrent bus; the unit
+//!   the paper's formulas count (one register-level word op per cycle).
+//! * `bit_cycles` — the bit-serial expansion of each macro op at the PE's
+//!   word width (device fidelity; see DESIGN.md "ISA formalization").
+//! * `exclusive_ops` — conventional addressed reads/writes through the
+//!   exclusive bus (loads, readouts; Rule 2).
+//! * `bus_words` — words crossing the shared system bus.
+
+use std::ops::{Add, AddAssign};
+
+/// Cost of work done by a CPM device.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ConcurrentCost {
+    /// Broadcast instructions on the concurrent bus (paper's unit).
+    pub macro_cycles: u64,
+    /// Bit-serial expansion at the device word width.
+    pub bit_cycles: u64,
+    /// Addressed (exclusive-bus) reads/writes.
+    pub exclusive_ops: u64,
+    /// Words transferred over the shared system bus.
+    pub bus_words: u64,
+}
+
+impl ConcurrentCost {
+    /// Cost of `n` broadcast macro instructions expanding to `bits`
+    /// bit-serial cycles in total.
+    pub fn broadcast(n: u64, bits: u64) -> Self {
+        ConcurrentCost {
+            macro_cycles: n,
+            bit_cycles: bits,
+            ..Default::default()
+        }
+    }
+
+    /// Cost of `n` exclusive (addressed) operations of one word each.
+    pub fn exclusive(n: u64) -> Self {
+        ConcurrentCost {
+            exclusive_ops: n,
+            bus_words: n,
+            ..Default::default()
+        }
+    }
+
+    /// Total device-cycle estimate when the concurrent bus and the exclusive
+    /// bus are *not* overlapped (worst case; §3.1 notes they can overlap).
+    pub fn serial_total(&self) -> u64 {
+        self.macro_cycles + self.exclusive_ops
+    }
+}
+
+impl Add for ConcurrentCost {
+    type Output = ConcurrentCost;
+    fn add(self, rhs: ConcurrentCost) -> ConcurrentCost {
+        ConcurrentCost {
+            macro_cycles: self.macro_cycles + rhs.macro_cycles,
+            bit_cycles: self.bit_cycles + rhs.bit_cycles,
+            exclusive_ops: self.exclusive_ops + rhs.exclusive_ops,
+            bus_words: self.bus_words + rhs.bus_words,
+        }
+    }
+}
+
+impl AddAssign for ConcurrentCost {
+    fn add_assign(&mut self, rhs: ConcurrentCost) {
+        *self = *self + rhs;
+    }
+}
+
+/// Cost of work done by the serial bus-sharing baseline (§2): a CPU that
+/// must stream every word it touches over the system bus.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct SerialCost {
+    /// CPU instruction cycles (one simple ALU/branch op each).
+    pub cpu_cycles: u64,
+    /// Words moved over the system bus for *processing* purposes — the
+    /// traffic the paper says CPM eliminates.
+    pub bus_words: u64,
+}
+
+impl SerialCost {
+    /// `n` CPU ops each touching one memory word over the bus.
+    pub fn touching(n: u64) -> Self {
+        SerialCost {
+            cpu_cycles: n,
+            bus_words: n,
+        }
+    }
+
+    /// `n` pure register-register CPU ops (no bus traffic).
+    pub fn compute(n: u64) -> Self {
+        SerialCost {
+            cpu_cycles: n,
+            bus_words: 0,
+        }
+    }
+}
+
+impl Add for SerialCost {
+    type Output = SerialCost;
+    fn add(self, rhs: SerialCost) -> SerialCost {
+        SerialCost {
+            cpu_cycles: self.cpu_cycles + rhs.cpu_cycles,
+            bus_words: self.bus_words + rhs.bus_words,
+        }
+    }
+}
+
+impl AddAssign for SerialCost {
+    fn add_assign(&mut self, rhs: SerialCost) {
+        *self = *self + rhs;
+    }
+}
+
+/// A measured data point for one experiment configuration: the paper's
+/// claimed formula value next to the measured cycle count.
+#[derive(Debug, Clone)]
+pub struct ClaimPoint {
+    /// Workload descriptor, e.g. `"N=65536 M=256"`.
+    pub config: String,
+    /// Cycles the paper's formula predicts (`~` semantics: order, not exact).
+    pub paper_formula: f64,
+    /// Measured macro cycles on the simulator.
+    pub measured: u64,
+    /// Serial-baseline cost for the same operation, if applicable.
+    pub baseline: Option<u64>,
+}
+
+impl ClaimPoint {
+    /// measured / formula — should be Θ(1) across a sweep if the claim holds.
+    pub fn ratio(&self) -> f64 {
+        self.measured as f64 / self.paper_formula.max(1.0)
+    }
+
+    /// baseline / measured — the speedup the paper advertises.
+    pub fn speedup(&self) -> Option<f64> {
+        self.baseline
+            .map(|b| b as f64 / (self.measured.max(1)) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concurrent_cost_adds() {
+        let a = ConcurrentCost::broadcast(3, 24) + ConcurrentCost::exclusive(2);
+        assert_eq!(a.macro_cycles, 3);
+        assert_eq!(a.bit_cycles, 24);
+        assert_eq!(a.exclusive_ops, 2);
+        assert_eq!(a.bus_words, 2);
+        assert_eq!(a.serial_total(), 5);
+    }
+
+    #[test]
+    fn serial_cost_adds() {
+        let c = SerialCost::touching(10) + SerialCost::compute(5);
+        assert_eq!(c.cpu_cycles, 15);
+        assert_eq!(c.bus_words, 10);
+    }
+
+    #[test]
+    fn claim_point_ratio_and_speedup() {
+        let p = ClaimPoint {
+            config: "N=1024".into(),
+            paper_formula: 64.0,
+            measured: 128,
+            baseline: Some(1024),
+        };
+        assert!((p.ratio() - 2.0).abs() < 1e-9);
+        assert!((p.speedup().unwrap() - 8.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,207 @@
+//! System-bus pin protocol (Rule 8, §3.1).
+//!
+//! "There is an extra external command pin to indicate that the address and
+//! data bus contains whether (1) address and data or (2) an instruction for
+//! the CPM when it is enabled." — a CPM is pin-compatible with a
+//! conventional RAM: with the command pin low it behaves exactly like
+//! memory; with it high, bus words program the device. The internal
+//! micro-kernel buffers instruction words and fires a macro instruction
+//! when one is complete.
+
+use super::computable::isa::{Instr, INSTR_WIDTH};
+use super::computable::ComputableMemory;
+use crate::cycles::ConcurrentCost;
+
+/// Anything attached to the shared system bus.
+pub trait BusDevice {
+    /// Bus write. `cmd` is the Rule 8 command pin.
+    fn bus_write(&mut self, addr: u32, data: i32, cmd: bool);
+    /// Bus read (always conventional-memory semantics).
+    fn bus_read(&mut self, addr: u32) -> i32;
+    /// Words transferred so far (the bus-bottleneck metric of §2).
+    fn bus_words(&self) -> u64;
+}
+
+/// A plain RAM on the bus (the baseline device).
+#[derive(Debug, Clone)]
+pub struct RamDevice {
+    words: Vec<i32>,
+    traffic: u64,
+}
+
+impl RamDevice {
+    /// RAM with `size` words.
+    pub fn new(size: usize) -> Self {
+        RamDevice {
+            words: vec![0; size],
+            traffic: 0,
+        }
+    }
+}
+
+impl BusDevice for RamDevice {
+    fn bus_write(&mut self, addr: u32, data: i32, _cmd: bool) {
+        // A RAM has no command pin; the address decoder ignores it.
+        self.traffic += 1;
+        if let Some(w) = self.words.get_mut(addr as usize) {
+            *w = data;
+        }
+    }
+
+    fn bus_read(&mut self, addr: u32) -> i32 {
+        self.traffic += 1;
+        self.words.get(addr as usize).copied().unwrap_or(0)
+    }
+
+    fn bus_words(&self) -> u64 {
+        self.traffic
+    }
+}
+
+/// A computable-memory CPM behind the Rule 8 pin protocol.
+///
+/// Memory map (cmd = 0): word address `i` is PE `i % P`, register `i / P`
+/// of the PE plane (conventional random access into the planes).
+/// Instruction port (cmd = 1): stream the 10 words of an encoded
+/// [`Instr`]; the micro-kernel executes on the 10th word.
+#[derive(Debug)]
+pub struct CpmBusAdapter {
+    device: ComputableMemory,
+    instr_buf: Vec<i32>,
+    traffic: u64,
+    bad_instrs: u64,
+}
+
+impl CpmBusAdapter {
+    /// Wrap a computable memory.
+    pub fn new(device: ComputableMemory) -> Self {
+        CpmBusAdapter {
+            device,
+            instr_buf: Vec::with_capacity(INSTR_WIDTH),
+            traffic: 0,
+            bad_instrs: 0,
+        }
+    }
+
+    /// Access the wrapped device.
+    pub fn device(&self) -> &ComputableMemory {
+        &self.device
+    }
+
+    /// Access the wrapped device mutably (coordinator-side maintenance).
+    pub fn device_mut(&mut self) -> &mut ComputableMemory {
+        &mut self.device
+    }
+
+    /// Instruction words that failed to decode.
+    pub fn bad_instrs(&self) -> u64 {
+        self.bad_instrs
+    }
+
+    /// Device-side cost counters.
+    pub fn cost(&self) -> ConcurrentCost {
+        self.device.cost()
+    }
+}
+
+impl BusDevice for CpmBusAdapter {
+    fn bus_write(&mut self, addr: u32, data: i32, cmd: bool) {
+        self.traffic += 1;
+        if !cmd {
+            // Conventional RAM write into the plane space.
+            let p = self.device.len() as u32;
+            if p == 0 {
+                return;
+            }
+            let reg = (addr / p) as usize;
+            let pe = (addr % p) as usize;
+            if reg < super::computable::isa::N_REGS {
+                let r = super::computable::isa::Reg::decode(reg as i32).unwrap();
+                self.device.engine_mut().plane_mut(r)[pe] = data;
+            }
+            return;
+        }
+        // Command mode: accumulate one instruction word.
+        self.instr_buf.push(data);
+        if self.instr_buf.len() == INSTR_WIDTH {
+            let mut w = [0i32; INSTR_WIDTH];
+            w.copy_from_slice(&self.instr_buf);
+            self.instr_buf.clear();
+            match Instr::decode(&w) {
+                Some(instr) => self.device.run(&[instr]),
+                None => self.bad_instrs += 1,
+            }
+        }
+    }
+
+    fn bus_read(&mut self, addr: u32) -> i32 {
+        self.traffic += 1;
+        let p = self.device.len() as u32;
+        if p == 0 {
+            return 0;
+        }
+        let reg = (addr / p) as usize;
+        let pe = (addr % p) as usize;
+        if reg < super::computable::isa::N_REGS {
+            let r = super::computable::isa::Reg::decode(reg as i32).unwrap();
+            self.device.engine().plane(r)[pe]
+        } else {
+            0
+        }
+    }
+
+    fn bus_words(&self) -> u64 {
+        self.traffic
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::computable::isa::{Opcode, Reg, Src};
+
+    #[test]
+    fn ram_semantics_with_cmd_low() {
+        let mut a = CpmBusAdapter::new(ComputableMemory::new_1d(16, 16));
+        // write NB plane (reg 1) at PE 3
+        a.bus_write(16 + 3, 42, false);
+        assert_eq!(a.bus_read(16 + 3), 42);
+        assert_eq!(a.device().values()[3], 42);
+        assert_eq!(a.bus_words(), 2);
+    }
+
+    #[test]
+    fn instruction_streaming_with_cmd_high() {
+        let mut a = CpmBusAdapter::new(ComputableMemory::new_1d(8, 16));
+        for i in 0..8 {
+            a.bus_write(8 + i, (i as i32) * 10, false); // NB = 0,10,..,70
+        }
+        let instr = Instr::all(Opcode::CmpGe, Src::Imm, Reg::Nb).imm(40);
+        for w in instr.encode() {
+            a.bus_write(0, w, true);
+        }
+        // M plane is reg 6
+        let m: Vec<i32> = (0..8).map(|i| a.bus_read(6 * 8 + i)).collect();
+        assert_eq!(m, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn malformed_instruction_counted_not_executed() {
+        let mut a = CpmBusAdapter::new(ComputableMemory::new_1d(4, 16));
+        let mut w = Instr::all(Opcode::Copy, Src::Imm, Reg::Op).imm(1).encode();
+        w[0] = 99; // bad opcode
+        for v in w {
+            a.bus_write(0, v, true);
+        }
+        assert_eq!(a.bad_instrs(), 1);
+        assert_eq!(a.device().op_layer(), &[0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn plain_ram_device_roundtrip() {
+        let mut r = RamDevice::new(8);
+        r.bus_write(5, -7, true); // cmd ignored by RAM
+        assert_eq!(r.bus_read(5), -7);
+        assert_eq!(r.bus_words(), 2);
+    }
+}

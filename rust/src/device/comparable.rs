@@ -1,0 +1,516 @@
+//! Content comparable memory (§6, Fig 7).
+//!
+//! Extends the searchable member from value *matching* to value *comparing*:
+//! the concurrent bus carries a datum, mask, a comparison code
+//! (=, ≠, <, >, ≤, ≥), a neighbor-select code, a self code and an update
+//! code. Multi-byte fields are compared by the §6.1 significance ladder:
+//! one pass per byte of the field, so comparing a field of every array item
+//! with one value costs ~(bytes per field) instruction cycles — *independent
+//! of the item count* (the paper's headline SQL claim, E4).
+//!
+//! Instruction semantics (formalized from §6.1's prose; DESIGN.md
+//! §ISA-formalization):
+//!
+//! ```text
+//! r         = cmp_code(cell & mask, datum & mask)
+//! candidate = self_code ? r : storage_bit[neighbor]   (old values)
+//! if update_code || r { storage_bit = candidate }
+//! ```
+
+use crate::cycles::ConcurrentCost;
+use crate::logic::decoder::GeneralDecoder;
+
+/// Comparison code on the concurrent bus.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpCode {
+    /// Equal.
+    Eq,
+    /// Not equal.
+    Ne,
+    /// Less than (unsigned byte).
+    Lt,
+    /// Less than or equal.
+    Le,
+    /// Greater than.
+    Gt,
+    /// Greater than or equal.
+    Ge,
+}
+
+impl CmpCode {
+    fn eval(self, cell: u8, datum: u8) -> bool {
+        match self {
+            CmpCode::Eq => cell == datum,
+            CmpCode::Ne => cell != datum,
+            CmpCode::Lt => cell < datum,
+            CmpCode::Le => cell <= datum,
+            CmpCode::Gt => cell > datum,
+            CmpCode::Ge => cell >= datum,
+        }
+    }
+
+    /// The strict compare used on upper significance bytes of the ladder.
+    fn strict(self) -> Option<CmpCode> {
+        match self {
+            CmpCode::Lt | CmpCode::Le => Some(CmpCode::Lt),
+            CmpCode::Gt | CmpCode::Ge => Some(CmpCode::Gt),
+            CmpCode::Ne => Some(CmpCode::Ne),
+            CmpCode::Eq => None,
+        }
+    }
+}
+
+/// One broadcast compare instruction (Fig 7's concurrent-bus word).
+#[derive(Debug, Clone, Copy)]
+pub struct CompareOp {
+    /// Broadcast datum.
+    pub datum: u8,
+    /// Mask applied to both cell and datum.
+    pub mask: u8,
+    /// Comparison code.
+    pub cmp: CmpCode,
+    /// Neighbor select: `true` = right (higher address), `false` = left.
+    pub select_right: bool,
+    /// Self code: `true` takes the comparison result, `false` the selected
+    /// neighbor's storage bit.
+    pub self_code: bool,
+    /// Update code: `true` writes unconditionally, `false` only where the
+    /// comparison result is true (§6.1 conditional execution).
+    pub update_code: bool,
+    /// Rule 4 activation.
+    pub start: usize,
+    /// Rule 4 end (inclusive).
+    pub end: usize,
+    /// Rule 4 carry (array-item size).
+    pub carry: usize,
+}
+
+/// A content comparable memory of byte-wide PEs.
+#[derive(Debug, Clone)]
+pub struct ContentComparableMemory {
+    cells: Vec<u8>,
+    bits: Vec<bool>,
+    cost: ConcurrentCost,
+}
+
+/// A fixed-size field inside each array item (byte offset + length,
+/// big-endian unsigned — significance decreasing toward higher addresses,
+/// the paper's layout).
+#[derive(Debug, Clone, Copy)]
+pub struct FieldSpec {
+    /// Byte offset of the field inside the item.
+    pub offset: usize,
+    /// Field length in bytes.
+    pub len: usize,
+}
+
+/// Bitwise combination for multi-predicate queries (built from Fig 7's
+/// NAND path between neighboring storage bits; 2 cycles each).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Combine {
+    /// Logical AND.
+    And,
+    /// Logical OR.
+    Or,
+}
+
+impl ContentComparableMemory {
+    /// Device with `size` byte registers.
+    pub fn new(size: usize) -> Self {
+        ContentComparableMemory {
+            cells: vec![0; size],
+            bits: vec![false; size],
+            cost: ConcurrentCost::default(),
+        }
+    }
+
+    /// Load content (exclusive-bus streaming).
+    pub fn load(&mut self, addr: usize, data: &[u8]) {
+        assert!(addr + data.len() <= self.cells.len());
+        self.cells[addr..addr + data.len()].copy_from_slice(data);
+        self.cost += ConcurrentCost::exclusive(data.len() as u64);
+    }
+
+    /// Device size in bytes.
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// True if the device has no cells.
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Read back a cell (exclusive).
+    pub fn read(&mut self, addr: usize) -> u8 {
+        self.cost += ConcurrentCost::exclusive(1);
+        self.cells[addr]
+    }
+
+    /// Execute one broadcast compare instruction (one concurrent cycle).
+    pub fn exec(&mut self, op: &CompareOp) {
+        self.cost += ConcurrentCost::broadcast(1, 1);
+        let n = self.cells.len();
+        if n == 0 {
+            return;
+        }
+        let end = op.end.min(n - 1);
+        if op.start > end {
+            return;
+        }
+        let prev = self.bits.clone(); // concurrent neighbor reads
+        let carry = op.carry.max(1);
+        let mut i = op.start;
+        while i <= end {
+            if GeneralDecoder::enabled(i, op.start, end, carry) {
+                let r = op.cmp.eval(self.cells[i] & op.mask, op.datum & op.mask);
+                let neighbor = if op.select_right {
+                    if i + 1 < n {
+                        prev[i + 1]
+                    } else {
+                        false
+                    }
+                } else if i >= 1 {
+                    prev[i - 1]
+                } else {
+                    false
+                };
+                let candidate = if op.self_code { r } else { neighbor };
+                if op.update_code || r {
+                    self.bits[i] = candidate;
+                }
+            }
+            match i.checked_add(carry) {
+                Some(next) => i = next,
+                None => break,
+            }
+        }
+    }
+
+    /// Clear every storage bit in range (one cycle: `Ne` with mask 0 never
+    /// asserts, update code forces the write of `candidate = r = false`).
+    pub fn clear_bits(&mut self, start: usize, end: usize) {
+        self.exec(&CompareOp {
+            datum: 0,
+            mask: 0,
+            cmp: CmpCode::Ne,
+            select_right: false,
+            self_code: true,
+            update_code: true,
+            start,
+            end,
+            carry: 1,
+        });
+    }
+
+    /// Compare `field` of every item in the table region against `value`
+    /// (big-endian, `value.len() == field.len`) under `cmp`. Returns
+    /// nothing; the per-item verdict lands on the storage bit of each
+    /// item's *leading field byte* — read it with [`selected_items`].
+    ///
+    /// Cost: ~3 cycles per field byte (§6.1 ladder), independent of the
+    /// item count.
+    ///
+    /// `base` = address of item 0, `item_size` = Rule 4 carry,
+    /// `n_items` = table length.
+    pub fn compare_field(
+        &mut self,
+        base: usize,
+        item_size: usize,
+        n_items: usize,
+        field: FieldSpec,
+        cmp: CmpCode,
+        value: &[u8],
+    ) {
+        assert_eq!(value.len(), field.len, "value width must match field");
+        assert!(field.offset + field.len <= item_size);
+        if n_items == 0 || field.len == 0 {
+            return;
+        }
+        let table_end = base + n_items * item_size - 1;
+        let lattice = |k: usize| (base + field.offset + k, table_end, item_size);
+
+        // Clear only the field's own lattices (other lattices may hold
+        // saved verdicts from earlier predicates, §6.1's neighboring-bit
+        // combination mechanism).
+        for k in 0..field.len {
+            let (s, e, c) = lattice(k);
+            self.exec(&CompareOp {
+                datum: 0,
+                mask: 0,
+                cmp: CmpCode::Ne,
+                select_right: false,
+                self_code: true,
+                update_code: true,
+                start: s,
+                end: e,
+                carry: c,
+            });
+        }
+
+        // Least-significant byte: the full comparison code.
+        let lsk = field.len - 1;
+        let (s, e, c) = lattice(lsk);
+        self.exec(&CompareOp {
+            datum: value[lsk],
+            mask: 0xFF,
+            cmp,
+            select_right: false,
+            self_code: true,
+            update_code: true,
+            start: s,
+            end: e,
+            carry: c,
+        });
+
+        // Significance ladder toward the leading byte.
+        for k in (0..field.len - 1).rev() {
+            let (s, e, c) = lattice(k);
+            // (A) strict verdict at this significance decides outright.
+            if let Some(strict) = cmp.strict() {
+                self.exec(&CompareOp {
+                    datum: value[k],
+                    mask: 0xFF,
+                    cmp: strict,
+                    select_right: false,
+                    self_code: true,
+                    update_code: false,
+                    start: s,
+                    end: e,
+                    carry: c,
+                });
+            }
+            // (B) equal at this significance defers to the byte to the
+            // right (lower significance).
+            self.exec(&CompareOp {
+                datum: value[k],
+                mask: 0xFF,
+                cmp: CmpCode::Eq,
+                select_right: true,
+                self_code: false,
+                update_code: false,
+                start: s,
+                end: e,
+                carry: c,
+            });
+            // (C) reset the consumed lower-significance bits (§6.1 step 2C).
+            let (s1, e1, c1) = lattice(k + 1);
+            self.exec(&CompareOp {
+                datum: 0,
+                mask: 0,
+                cmp: CmpCode::Ne,
+                select_right: false,
+                self_code: true,
+                update_code: true,
+                start: s1,
+                end: e1,
+                carry: c1,
+            });
+        }
+    }
+
+    /// Rule 6 readout: indices of items whose verdict bit (at the leading
+    /// field byte) is set.
+    pub fn selected_items(
+        &mut self,
+        base: usize,
+        item_size: usize,
+        n_items: usize,
+        field: FieldSpec,
+    ) -> Vec<usize> {
+        self.cost += ConcurrentCost::broadcast(1, 1);
+        let mut out = Vec::new();
+        for item in 0..n_items {
+            if self.bits[base + item * item_size + field.offset] {
+                out.push(item);
+            }
+        }
+        self.cost += ConcurrentCost::exclusive(out.len() as u64);
+        out
+    }
+
+    /// Count selected items via the parallel counter (one cycle).
+    pub fn selected_count(
+        &mut self,
+        base: usize,
+        item_size: usize,
+        n_items: usize,
+        field: FieldSpec,
+    ) -> usize {
+        self.cost += ConcurrentCost::broadcast(1, 1);
+        (0..n_items)
+            .filter(|&item| self.bits[base + item * item_size + field.offset])
+            .count()
+    }
+
+    /// Save the per-item verdict bits from `from` lattice into `to`
+    /// lattice (1 cycle — a neighbor-bit move along Fig 7's select path).
+    pub fn save_verdict(
+        &mut self,
+        base: usize,
+        item_size: usize,
+        n_items: usize,
+        from: usize,
+        to: usize,
+    ) {
+        self.cost += ConcurrentCost::broadcast(1, 1);
+        for item in 0..n_items {
+            let v = self.bits[base + item * item_size + from];
+            self.bits[base + item * item_size + to] = v;
+        }
+    }
+
+    /// Combine verdicts at two lattices into `dst` (2 cycles via the Fig 7
+    /// NAND path between neighboring storage bits).
+    #[allow(clippy::too_many_arguments)]
+    pub fn combine(
+        &mut self,
+        base: usize,
+        item_size: usize,
+        n_items: usize,
+        dst: usize,
+        src: usize,
+        how: Combine,
+    ) {
+        self.cost += ConcurrentCost::broadcast(2, 2);
+        for item in 0..n_items {
+            let a = self.bits[base + item * item_size + dst];
+            let b = self.bits[base + item * item_size + src];
+            self.bits[base + item * item_size + dst] = match how {
+                Combine::And => a && b,
+                Combine::Or => a || b,
+            };
+        }
+    }
+
+    /// Accumulated cost.
+    pub fn cost(&self) -> ConcurrentCost {
+        self.cost
+    }
+
+    /// Reset cost counters.
+    pub fn reset_cost(&mut self) {
+        self.cost = ConcurrentCost::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a table of u16 big-endian values, one per 4-byte item at
+    /// offset 1.
+    fn table(values: &[u16]) -> (ContentComparableMemory, FieldSpec, usize, usize) {
+        let item = 4usize;
+        let field = FieldSpec { offset: 1, len: 2 };
+        let mut bytes = vec![0u8; values.len() * item];
+        for (i, &v) in values.iter().enumerate() {
+            bytes[i * item + 1] = (v >> 8) as u8;
+            bytes[i * item + 2] = (v & 0xFF) as u8;
+        }
+        let mut d = ContentComparableMemory::new(bytes.len().max(1));
+        d.load(0, &bytes);
+        (d, field, item, values.len())
+    }
+
+    fn run(values: &[u16], cmp: CmpCode, v: u16) -> Vec<usize> {
+        let (mut d, field, item, n) = table(values);
+        d.compare_field(0, item, n, field, cmp, &v.to_be_bytes());
+        d.selected_items(0, item, n, field)
+    }
+
+    #[test]
+    fn all_six_comparisons_on_multibyte_fields() {
+        let vals = [300u16, 5, 300, 7000, 299, 301, 0, 65535];
+        let want = |f: fn(u16, u16) -> bool| -> Vec<usize> {
+            vals.iter()
+                .enumerate()
+                .filter_map(|(i, &x)| if f(x, 300) { Some(i) } else { None })
+                .collect()
+        };
+        assert_eq!(run(&vals, CmpCode::Eq, 300), want(|a, b| a == b));
+        assert_eq!(run(&vals, CmpCode::Ne, 300), want(|a, b| a != b));
+        assert_eq!(run(&vals, CmpCode::Lt, 300), want(|a, b| a < b));
+        assert_eq!(run(&vals, CmpCode::Le, 300), want(|a, b| a <= b));
+        assert_eq!(run(&vals, CmpCode::Gt, 300), want(|a, b| a > b));
+        assert_eq!(run(&vals, CmpCode::Ge, 300), want(|a, b| a >= b));
+    }
+
+    #[test]
+    fn cost_independent_of_item_count() {
+        let few = {
+            let (mut d, field, item, n) = table(&[1, 2, 3, 4]);
+            d.reset_cost();
+            d.compare_field(0, item, n, field, CmpCode::Lt, &100u16.to_be_bytes());
+            d.cost().macro_cycles
+        };
+        let many_vals: Vec<u16> = (0..4096).map(|i| (i * 7 % 9999) as u16).collect();
+        let many = {
+            let (mut d, field, item, n) = table(&many_vals);
+            d.reset_cost();
+            d.compare_field(0, item, n, field, CmpCode::Lt, &100u16.to_be_bytes());
+            d.cost().macro_cycles
+        };
+        assert_eq!(few, many, "compare cost must not depend on N");
+        assert!(many <= 8, "2-byte field ladder should be ~6 cycles");
+    }
+
+    #[test]
+    fn single_byte_field_is_two_cycles() {
+        let item = 2usize;
+        let field = FieldSpec { offset: 0, len: 1 };
+        let mut d = ContentComparableMemory::new(8);
+        d.load(0, &[10, 0, 20, 0, 30, 0, 40, 0]);
+        d.reset_cost();
+        d.compare_field(0, item, 4, field, CmpCode::Ge, &[25]);
+        assert_eq!(d.cost().macro_cycles, 2); // clear + one compare
+        assert_eq!(d.selected_items(0, item, 4, field), vec![2, 3]);
+    }
+
+    #[test]
+    fn combine_and_or_across_predicates() {
+        let vals = [10u16, 20, 30, 40, 50];
+        let (mut d, field, item, n) = table(&vals);
+        // P1: v >= 20 -> save to lattice 3
+        d.compare_field(0, item, n, field, CmpCode::Ge, &20u16.to_be_bytes());
+        d.save_verdict(0, item, n, field.offset, 3);
+        // P2: v < 50
+        d.compare_field(0, item, n, field, CmpCode::Lt, &50u16.to_be_bytes());
+        d.combine(0, item, n, field.offset, 3, Combine::And);
+        assert_eq!(d.selected_items(0, item, n, field), vec![1, 2, 3]);
+        // OR with (v >= 20): everything >= 20 or < 50 = all
+        d.compare_field(0, item, n, field, CmpCode::Lt, &15u16.to_be_bytes());
+        d.combine(0, item, n, field.offset, 3, Combine::Or);
+        assert_eq!(d.selected_items(0, item, n, field), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn count_matches_selected() {
+        let vals: Vec<u16> = (0..100).collect();
+        let (mut d, field, item, n) = table(&vals);
+        d.compare_field(0, item, n, field, CmpCode::Lt, &37u16.to_be_bytes());
+        assert_eq!(d.selected_count(0, item, n, field), 37);
+    }
+
+    #[test]
+    fn four_byte_fields() {
+        let item = 6usize;
+        let field = FieldSpec { offset: 0, len: 4 };
+        let vals: [u32; 5] = [1, 0x01000000, 0x00FFFFFF, 0x01000001, 0xFFFFFFFF];
+        let mut bytes = vec![0u8; vals.len() * item];
+        for (i, &v) in vals.iter().enumerate() {
+            bytes[i * item..i * item + 4].copy_from_slice(&v.to_be_bytes());
+        }
+        let mut d = ContentComparableMemory::new(bytes.len());
+        d.load(0, &bytes);
+        d.compare_field(0, item, vals.len(), field, CmpCode::Lt, &0x01000000u32.to_be_bytes());
+        assert_eq!(d.selected_items(0, item, vals.len(), field), vec![0, 2]);
+    }
+
+    #[test]
+    fn empty_table_is_noop() {
+        let mut d = ContentComparableMemory::new(4);
+        d.compare_field(0, 4, 0, FieldSpec { offset: 0, len: 2 }, CmpCode::Eq, &[0, 0]);
+        assert!(d.selected_items(0, 4, 0, FieldSpec { offset: 0, len: 2 }).is_empty());
+    }
+}

@@ -1,0 +1,657 @@
+//! Bit-plane engine: the bit-serial-faithful executor.
+//!
+//! The paper's PE (§7.2, Fig 8) is *bit-serial*: a 1-bit ALU (Eq 7-1) that
+//! processes one bit position of every PE per concurrent cycle. The natural
+//! software model is **bit-slicing**: register bit `k` of all P PEs is one
+//! bit *plane* (packed `u64` words), and one concurrent bit-cycle is one
+//! boolean operation over whole planes. Every macro op of the word ISA
+//! expands here into its actual bit-serial sequence (ripple adders,
+//! borrow compares, shift-and-add multiply), so:
+//!
+//! * final states must equal the word engine's (`rust/tests/engine_equiv.rs`),
+//! * the *measured* number of plane operations validates the analytic
+//!   `Opcode::bit_cycles` cost model (E19).
+
+use super::isa::{Instr, Opcode, Reg, Src, F_COND_M, F_COND_NOT_M, N_REGS};
+use crate::cycles::ConcurrentCost;
+
+/// Word width of the simulated PEs (i32 semantics, matching the word
+/// engine and the JAX reference).
+pub const W: usize = 32;
+
+type Plane = Vec<u64>;
+
+/// The bit-plane engine.
+#[derive(Debug, Clone)]
+pub struct BitEngine {
+    p: usize,
+    words: usize,
+    /// `planes[r][k]` = bit `k` of register `r`, packed 64 PEs per word.
+    planes: Vec<Vec<Plane>>,
+    /// Measured plane operations (≈ concurrent bit-cycles).
+    plane_ops: u64,
+    cost: ConcurrentCost,
+}
+
+#[inline]
+fn majority(a: u64, b: u64, c: u64) -> u64 {
+    (a & b) | (b & c) | (a & c)
+}
+
+impl BitEngine {
+    /// Engine over `p` PEs.
+    pub fn new(p: usize) -> Self {
+        let words = p.div_ceil(64);
+        BitEngine {
+            p,
+            words,
+            planes: vec![vec![vec![0u64; words]; W]; N_REGS],
+            plane_ops: 0,
+            cost: ConcurrentCost::default(),
+        }
+    }
+
+    /// Number of PEs.
+    pub fn len(&self) -> usize {
+        self.p
+    }
+
+    /// True if the engine has no PEs.
+    pub fn is_empty(&self) -> bool {
+        self.p == 0
+    }
+
+    /// Measured plane-operation count (concurrent bit-cycles).
+    pub fn plane_ops(&self) -> u64 {
+        self.plane_ops
+    }
+
+    /// Accumulated macro-level cost (same accounting as the word engine).
+    pub fn cost(&self) -> ConcurrentCost {
+        self.cost
+    }
+
+    /// Read register `r` of PE `i` as an i32.
+    pub fn get(&self, r: Reg, i: usize) -> i32 {
+        assert!(i < self.p);
+        let (w, b) = (i / 64, i % 64);
+        let mut v: u32 = 0;
+        for k in 0..W {
+            v |= (((self.planes[r as usize][k][w] >> b) & 1) as u32) << k;
+        }
+        v as i32
+    }
+
+    /// Write register `r` of PE `i` (exclusive-bus write).
+    pub fn set(&mut self, r: Reg, i: usize, val: i32) {
+        assert!(i < self.p);
+        let (w, b) = (i / 64, i % 64);
+        let v = val as u32;
+        for k in 0..W {
+            let plane = &mut self.planes[r as usize][k][w];
+            if (v >> k) & 1 == 1 {
+                *plane |= 1 << b;
+            } else {
+                *plane &= !(1 << b);
+            }
+        }
+        self.cost += ConcurrentCost::exclusive(1);
+    }
+
+    /// Bulk-load a register plane from words.
+    pub fn load_plane(&mut self, r: Reg, data: &[i32]) {
+        assert!(data.len() <= self.p);
+        for (i, &v) in data.iter().enumerate() {
+            let (w, b) = (i / 64, i % 64);
+            let u = v as u32;
+            for k in 0..W {
+                let plane = &mut self.planes[r as usize][k][w];
+                if (u >> k) & 1 == 1 {
+                    *plane |= 1 << b;
+                } else {
+                    *plane &= !(1 << b);
+                }
+            }
+        }
+        self.cost += ConcurrentCost::exclusive(data.len() as u64);
+    }
+
+    /// Read a whole register plane as words (for equivalence tests).
+    pub fn read_plane(&self, r: Reg) -> Vec<i32> {
+        (0..self.p).map(|i| self.get(r, i)).collect()
+    }
+
+    /// Full state as `[r * p + i]` words (same layout as the word engine).
+    pub fn state(&self) -> Vec<i32> {
+        let mut out = Vec::with_capacity(N_REGS * self.p);
+        for r in 0..N_REGS {
+            for i in 0..self.p {
+                out.push(self.get(Reg::decode(r as i32).unwrap(), i));
+            }
+        }
+        out
+    }
+
+    // -- plane primitives (each counted as one concurrent bit-cycle) -----
+
+    #[inline]
+    fn op2<F: Fn(u64, u64) -> u64>(&mut self, a: &Plane, b: &Plane, f: F) -> Plane {
+        self.plane_ops += 1;
+        a.iter().zip(b.iter()).map(|(&x, &y)| f(x, y)).collect()
+    }
+
+    #[inline]
+    fn op3<F: Fn(u64, u64, u64) -> u64>(
+        &mut self,
+        a: &Plane,
+        b: &Plane,
+        c: &Plane,
+        f: F,
+    ) -> Plane {
+        self.plane_ops += 1;
+        a.iter()
+            .zip(b.iter())
+            .zip(c.iter())
+            .map(|((&x, &y), &z)| f(x, y, z))
+            .collect()
+    }
+
+    /// Merge `new` into plane `(r, k)` under the enable mask.
+    #[inline]
+    fn write_plane(&mut self, r: usize, k: usize, new: &Plane, en: &Plane) {
+        self.plane_ops += 1;
+        let old = &mut self.planes[r][k];
+        for ((o, &n), &e) in old.iter_mut().zip(new.iter()).zip(en.iter()) {
+            *o = (n & e) | (*o & !e);
+        }
+    }
+
+    /// Tail mask keeping bits < p valid in the last word.
+    fn tail_mask(&self) -> u64 {
+        let rem = self.p % 64;
+        if rem == 0 {
+            u64::MAX
+        } else {
+            (1u64 << rem) - 1
+        }
+    }
+
+    /// Shift a plane along the PE axis: `out[i] = in[i - delta]`
+    /// (zero fill; `delta` may be negative).
+    fn shift_pe(&mut self, plane: &Plane, delta: i64) -> Plane {
+        self.plane_ops += 1;
+        let mut out = vec![0u64; self.words];
+        if delta == 0 {
+            out.copy_from_slice(plane);
+        } else if delta.unsigned_abs() as usize >= self.p {
+            // fully shifted out
+        } else if delta > 0 {
+            let d = delta as usize;
+            let (wd, bd) = (d / 64, d % 64);
+            for w in (0..self.words).rev() {
+                let mut v = 0u64;
+                if w >= wd {
+                    v = plane[w - wd] << bd;
+                    if bd > 0 && w > wd {
+                        v |= plane[w - wd - 1] >> (64 - bd);
+                    }
+                }
+                out[w] = v;
+            }
+        } else {
+            let d = (-delta) as usize;
+            let (wd, bd) = (d / 64, d % 64);
+            for w in 0..self.words {
+                let mut v = 0u64;
+                if w + wd < self.words {
+                    v = plane[w + wd] >> bd;
+                    if bd > 0 && w + wd + 1 < self.words {
+                        v |= plane[w + wd + 1] << (64 - bd);
+                    }
+                }
+                out[w] = v;
+            }
+        }
+        if let Some(last) = out.last_mut() {
+            *last &= self.tail_mask();
+        }
+        out
+    }
+
+    /// Build the Rule 4 + conditional-flags enable plane.
+    fn enable_plane(&mut self, instr: &Instr) -> Plane {
+        self.plane_ops += 1; // the general decoder asserts all lines at once
+        let mut en = vec![0u64; self.words];
+        let start = instr.en_start as usize;
+        let end = (instr.en_end as usize).min(self.p.saturating_sub(1));
+        let carry = (instr.en_carry as usize).max(1);
+        if start <= end && start < self.p {
+            if carry == 1 {
+                for i in start..=end {
+                    en[i / 64] |= 1 << (i % 64);
+                }
+            } else {
+                let mut i = start;
+                while i <= end {
+                    en[i / 64] |= 1 << (i % 64);
+                    match i.checked_add(carry) {
+                        Some(n) => i = n,
+                        None => break,
+                    }
+                }
+            }
+        }
+        if instr.flags & (F_COND_M | F_COND_NOT_M) != 0 {
+            // M != 0 plane: OR-reduce the 32 M bit planes.
+            let mut mnz = vec![0u64; self.words];
+            for k in 0..W {
+                self.plane_ops += 1;
+                for (o, &m) in mnz.iter_mut().zip(self.planes[Reg::M as usize][k].iter()) {
+                    *o |= m;
+                }
+            }
+            if instr.flags & F_COND_M != 0 {
+                en = self.op2(&en, &mnz, |e, m| e & m);
+            }
+            if instr.flags & F_COND_NOT_M != 0 {
+                en = self.op2(&en, &mnz, |e, m| e & !m);
+            }
+        }
+        en
+    }
+
+    /// Materialize the 32 source bit planes of `src` (pre-write values).
+    fn src_planes(&mut self, instr: &Instr) -> Vec<Plane> {
+        match instr.src {
+            Src::Reg(r) => self.planes[r as usize].clone(),
+            Src::Imm => {
+                let imm = instr.imm as u32;
+                (0..W)
+                    .map(|k| {
+                        self.plane_ops += 1;
+                        let fill = if (imm >> k) & 1 == 1 { u64::MAX } else { 0 };
+                        let mut p = vec![fill; self.words];
+                        if let Some(last) = p.last_mut() {
+                            *last &= self.tail_mask();
+                        }
+                        p
+                    })
+                    .collect()
+            }
+            Src::Left => self.shift_nb(1),
+            Src::Right => self.shift_nb(-1),
+            Src::Up => self.shift_nb(instr.nx as i64),
+            Src::Down => self.shift_nb(-(instr.nx as i64)),
+        }
+    }
+
+    /// Shift every NB bit plane by `delta` PEs (`out[i] = NB[i - delta]`).
+    fn shift_nb(&mut self, delta: i64) -> Vec<Plane> {
+        (0..W)
+            .map(|k| {
+                let plane = self.planes[Reg::Nb as usize][k].clone();
+                self.shift_pe(&plane, delta)
+            })
+            .collect()
+    }
+
+    /// Execute one broadcast macro instruction bit-serially.
+    pub fn step(&mut self, instr: &Instr) {
+        self.cost += ConcurrentCost::broadcast(1, instr.opcode.bit_cycles(W as u64));
+        if matches!(instr.opcode, Opcode::Nop) || self.p == 0 {
+            return;
+        }
+        let en = self.enable_plane(instr);
+        let b = self.src_planes(instr);
+        let dst = instr.dst as usize;
+        let a: Vec<Plane> = self.planes[dst].clone();
+        use Opcode::*;
+        match instr.opcode {
+            Nop => {}
+            Copy => {
+                for k in 0..W {
+                    self.write_plane(dst, k, &b[k].clone(), &en);
+                }
+            }
+            And | Or | Xor => {
+                for k in 0..W {
+                    let f: fn(u64, u64) -> u64 = match instr.opcode {
+                        And => |x, y| x & y,
+                        Or => |x, y| x | y,
+                        _ => |x, y| x ^ y,
+                    };
+                    let r = self.op2(&a[k], &b[k], f);
+                    self.write_plane(dst, k, &r, &en);
+                }
+            }
+            Add => {
+                let mut carry = vec![0u64; self.words];
+                for k in 0..W {
+                    let sum = self.op3(&a[k], &b[k], &carry, |x, y, c| x ^ y ^ c);
+                    carry = self.op3(&a[k], &b[k], &carry, majority);
+                    self.write_plane(dst, k, &sum, &en);
+                }
+            }
+            Sub => {
+                // a + !b + 1 (borrowless two's-complement subtract).
+                let mut carry = vec![u64::MAX; self.words];
+                for k in 0..W {
+                    let nb = self.op2(&b[k], &b[k], |y, _| !y);
+                    let sum = self.op3(&a[k], &nb, &carry, |x, y, c| x ^ y ^ c);
+                    carry = self.op3(&a[k], &nb, &carry, majority);
+                    self.write_plane(dst, k, &sum, &en);
+                }
+            }
+            CmpLt | CmpLe | CmpEq | CmpNe | CmpGt | CmpGe => {
+                let res = self.compare(&a, &b, instr.opcode);
+                // Bit registers hold 0/1: clear high M planes, set plane 0.
+                for k in 1..W {
+                    let zero = vec![0u64; self.words];
+                    self.write_plane(Reg::M as usize, k, &zero, &en);
+                }
+                self.write_plane(Reg::M as usize, 0, &res, &en);
+            }
+            Min | Max => {
+                let lt = self.less_than(&a, &b);
+                for k in 0..W {
+                    // Min: lt ? a : b.  Max: lt ? b : a.
+                    let r = if matches!(instr.opcode, Min) {
+                        self.op3(&lt, &a[k], &b[k], |t, x, y| (t & x) | (!t & y))
+                    } else {
+                        self.op3(&lt, &a[k], &b[k], |t, x, y| (t & y) | (!t & x))
+                    };
+                    self.write_plane(dst, k, &r, &en);
+                }
+            }
+            AbsDiff => {
+                // d = a - b; then conditional negate by the sign plane.
+                let mut d: Vec<Plane> = Vec::with_capacity(W);
+                let mut carry = vec![u64::MAX; self.words];
+                for k in 0..W {
+                    let nb = self.op2(&b[k], &b[k], |y, _| !y);
+                    let sum = self.op3(&a[k], &nb, &carry, |x, y, c| x ^ y ^ c);
+                    carry = self.op3(&a[k], &nb, &carry, majority);
+                    d.push(sum);
+                }
+                let neg = d[W - 1].clone();
+                // r = (d ^ neg) + neg  (negate where neg, identity elsewhere)
+                let mut c = neg.clone();
+                for k in 0..W {
+                    let x = self.op2(&d[k], &neg, |v, n| v ^ n);
+                    let sum = self.op2(&x, &c, |v, cc| v ^ cc);
+                    c = self.op2(&x, &c, |v, cc| v & cc);
+                    self.write_plane(dst, k, &sum, &en);
+                }
+            }
+            Mul => {
+                // Shift-and-add: product += (a << k) & b[k], 32 rounds.
+                let mut prod: Vec<Plane> = vec![vec![0u64; self.words]; W];
+                for k in 0..W {
+                    let bk = b[k].clone();
+                    let mut carry = vec![0u64; self.words];
+                    for j in k..W {
+                        let addend = self.op2(&a[j - k], &bk, |x, y| x & y);
+                        let sum = self.op3(&prod[j], &addend, &carry, |x, y, c| x ^ y ^ c);
+                        carry = self.op3(&prod[j], &addend, &carry, majority);
+                        prod[j] = sum;
+                    }
+                }
+                for k in 0..W {
+                    self.write_plane(dst, k, &prod[k].clone(), &en);
+                }
+            }
+            Shr => {
+                let s = instr.imm.clamp(0, 31) as usize;
+                let sign = a[W - 1].clone();
+                for k in 0..W {
+                    let r = if k + s < W { a[k + s].clone() } else { sign.clone() };
+                    self.write_plane(dst, k, &r, &en);
+                }
+            }
+            Shl => {
+                let s = instr.imm.clamp(0, 31) as usize;
+                for k in 0..W {
+                    let r = if k >= s {
+                        a[k - s].clone()
+                    } else {
+                        vec![0u64; self.words]
+                    };
+                    self.write_plane(dst, k, &r, &en);
+                }
+            }
+        }
+    }
+
+    /// Signed less-than plane via full subtraction: `lt = sd ^ V`,
+    /// `V = (sa ^ sb) & (sa ^ sd)`.
+    fn less_than(&mut self, a: &[Plane], b: &[Plane], ) -> Plane {
+        let mut carry = vec![u64::MAX; self.words];
+        let mut sd = vec![0u64; self.words];
+        for k in 0..W {
+            let nb = self.op2(&b[k], &b[k], |y, _| !y);
+            let sum = self.op3(&a[k], &nb, &carry, |x, y, c| x ^ y ^ c);
+            carry = self.op3(&a[k], &nb, &carry, majority);
+            if k == W - 1 {
+                sd = sum;
+            }
+        }
+        let sa = &a[W - 1];
+        let sb = &b[W - 1];
+        self.plane_ops += 1;
+        sa.iter()
+            .zip(sb.iter())
+            .zip(sd.iter())
+            .map(|((&x, &y), &d)| d ^ ((x ^ y) & (x ^ d)))
+            .collect()
+    }
+
+    /// Equality plane: AND over all bit positions of `!(a ^ b)`.
+    fn equal(&mut self, a: &[Plane], b: &[Plane]) -> Plane {
+        let mut eq = vec![u64::MAX; self.words];
+        for k in 0..W {
+            let x = self.op2(&a[k], &b[k], |p, q| !(p ^ q));
+            eq = self.op2(&eq, &x, |e, v| e & v);
+        }
+        if let Some(last) = eq.last_mut() {
+            *last &= self.tail_mask();
+        }
+        eq
+    }
+
+    fn compare(&mut self, a: &[Plane], b: &[Plane], op: Opcode) -> Plane {
+        use Opcode::*;
+        let tail = self.tail_mask();
+        let res = match op {
+            CmpLt => self.less_than(a, b),
+            CmpGe => {
+                let lt = self.less_than(a, b);
+                self.op2(&lt, &lt, |x, _| !x)
+            }
+            CmpEq => self.equal(a, b),
+            CmpNe => {
+                let eq = self.equal(a, b);
+                self.op2(&eq, &eq, |x, _| !x)
+            }
+            CmpLe => {
+                let lt = self.less_than(a, b);
+                let eq = self.equal(a, b);
+                self.op2(&lt, &eq, |x, y| x | y)
+            }
+            CmpGt => {
+                let lt = self.less_than(a, b);
+                let eq = self.equal(a, b);
+                self.op2(&lt, &eq, |x, y| !(x | y))
+            }
+            _ => unreachable!("compare() called with non-compare opcode"),
+        };
+        let mut res = res;
+        if let Some(last) = res.last_mut() {
+            *last &= tail;
+        }
+        res
+    }
+
+    /// Execute a whole macro trace.
+    pub fn run(&mut self, trace: &[Instr]) {
+        for instr in trace {
+            self.step(instr);
+        }
+    }
+
+    /// Rule 6: number of PEs whose M register is non-zero.
+    pub fn match_count(&mut self) -> usize {
+        self.cost += ConcurrentCost::broadcast(1, 1);
+        let mut mnz = vec![0u64; self.words];
+        for k in 0..W {
+            for (o, &m) in mnz.iter_mut().zip(self.planes[Reg::M as usize][k].iter()) {
+                *o |= m;
+            }
+        }
+        mnz.iter().map(|w| w.count_ones() as usize).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut e = BitEngine::new(70); // crosses a u64 word boundary
+        e.set(Reg::Op, 0, -123456);
+        e.set(Reg::Op, 63, i32::MAX);
+        e.set(Reg::Op, 64, i32::MIN);
+        e.set(Reg::Op, 69, 42);
+        assert_eq!(e.get(Reg::Op, 0), -123456);
+        assert_eq!(e.get(Reg::Op, 63), i32::MAX);
+        assert_eq!(e.get(Reg::Op, 64), i32::MIN);
+        assert_eq!(e.get(Reg::Op, 69), 42);
+        assert_eq!(e.get(Reg::Op, 1), 0);
+    }
+
+    #[test]
+    fn ripple_add_matches_wrapping() {
+        let mut e = BitEngine::new(4);
+        e.load_plane(Reg::Op, &[1, -1, i32::MAX, -1000]);
+        e.load_plane(Reg::Nb, &[2, 1, 1, 999]);
+        e.step(&Instr::all(Opcode::Add, Src::Reg(Reg::Nb), Reg::Op));
+        assert_eq!(e.read_plane(Reg::Op), vec![3, 0, i32::MIN, -1]);
+    }
+
+    #[test]
+    fn subtract_matches_wrapping() {
+        let mut e = BitEngine::new(3);
+        e.load_plane(Reg::Op, &[5, i32::MIN, 0]);
+        e.load_plane(Reg::Nb, &[7, 1, -1]);
+        e.step(&Instr::all(Opcode::Sub, Src::Reg(Reg::Nb), Reg::Op));
+        assert_eq!(e.read_plane(Reg::Op), vec![-2, i32::MAX, 1]);
+    }
+
+    #[test]
+    fn signed_compare_planes() {
+        let mut e = BitEngine::new(5);
+        e.load_plane(Reg::Op, &[1, -2, i32::MIN, 7, 0]);
+        e.load_plane(Reg::Nb, &[2, 1, 1, 7, -1]);
+        e.step(&Instr::all(Opcode::CmpLt, Src::Reg(Reg::Nb), Reg::Op));
+        assert_eq!(e.read_plane(Reg::M), vec![1, 1, 1, 0, 0]);
+        e.step(&Instr::all(Opcode::CmpGe, Src::Reg(Reg::Nb), Reg::Op));
+        assert_eq!(e.read_plane(Reg::M), vec![0, 0, 0, 1, 1]);
+        e.step(&Instr::all(Opcode::CmpEq, Src::Reg(Reg::Nb), Reg::Op));
+        assert_eq!(e.read_plane(Reg::M), vec![0, 0, 0, 1, 0]);
+    }
+
+    #[test]
+    fn neighbor_shift_crosses_word_boundaries() {
+        let p = 130;
+        let mut e = BitEngine::new(p);
+        let vals: Vec<i32> = (0..p as i32).collect();
+        e.load_plane(Reg::Nb, &vals);
+        e.step(&Instr::all(Opcode::Copy, Src::Left, Reg::Op));
+        let got = e.read_plane(Reg::Op);
+        assert_eq!(got[0], 0);
+        for i in 1..p {
+            assert_eq!(got[i], (i - 1) as i32, "i={i}");
+        }
+    }
+
+    #[test]
+    fn mul_matches_wrapping() {
+        let mut e = BitEngine::new(4);
+        e.load_plane(Reg::Op, &[3, -5, 1 << 20, 0]);
+        e.load_plane(Reg::Nb, &[7, 9, 1 << 20, 123]);
+        e.step(&Instr::all(Opcode::Mul, Src::Reg(Reg::Nb), Reg::Op));
+        assert_eq!(
+            e.read_plane(Reg::Op),
+            vec![21, -45, (1i32 << 20).wrapping_mul(1 << 20), 0]
+        );
+    }
+
+    #[test]
+    fn absdiff_and_minmax() {
+        let mut e = BitEngine::new(3);
+        e.load_plane(Reg::Op, &[10, -10, 5]);
+        e.load_plane(Reg::Nb, &[3, 3, 9]);
+        e.step(&Instr::all(Opcode::AbsDiff, Src::Reg(Reg::Nb), Reg::Op));
+        assert_eq!(e.read_plane(Reg::Op), vec![7, 13, 4]);
+        let mut e = BitEngine::new(3);
+        e.load_plane(Reg::Op, &[10, -10, 5]);
+        e.load_plane(Reg::Nb, &[3, 3, 9]);
+        e.step(&Instr::all(Opcode::Min, Src::Reg(Reg::Nb), Reg::Op));
+        assert_eq!(e.read_plane(Reg::Op), vec![3, -10, 5]);
+        let mut e = BitEngine::new(3);
+        e.load_plane(Reg::Op, &[10, -10, 5]);
+        e.load_plane(Reg::Nb, &[3, 3, 9]);
+        e.step(&Instr::all(Opcode::Max, Src::Reg(Reg::Nb), Reg::Op));
+        assert_eq!(e.read_plane(Reg::Op), vec![10, 3, 9]);
+    }
+
+    #[test]
+    fn shifts_match_word_semantics() {
+        let mut e = BitEngine::new(2);
+        e.load_plane(Reg::Op, &[-8, 12]);
+        e.step(&Instr::all(Opcode::Shr, Src::Imm, Reg::Op).imm(2));
+        assert_eq!(e.read_plane(Reg::Op), vec![-2, 3]);
+        e.load_plane(Reg::Op, &[1, -1]);
+        e.step(&Instr::all(Opcode::Shl, Src::Imm, Reg::Op).imm(31));
+        assert_eq!(e.read_plane(Reg::Op), vec![i32::MIN, i32::MIN]);
+    }
+
+    #[test]
+    fn enable_range_and_flags() {
+        let mut e = BitEngine::new(8);
+        e.load_plane(Reg::Nb, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        e.step(&Instr::all(Opcode::CmpGt, Src::Imm, Reg::Nb).imm(4));
+        e.step(
+            &Instr::all(Opcode::Copy, Src::Imm, Reg::D0)
+                .imm(99)
+                .range(0, 7, 2)
+                .flags(F_COND_M),
+        );
+        // M = [0,0,0,0,1,1,1,1]; even addresses AND M -> PEs 4, 6
+        assert_eq!(e.read_plane(Reg::D0), vec![0, 0, 0, 0, 99, 0, 99, 0]);
+    }
+
+    #[test]
+    fn match_count_reduces_all_bits() {
+        let mut e = BitEngine::new(100);
+        e.set(Reg::M, 3, 1);
+        e.set(Reg::M, 77, 1024); // non-zero in a high bit still matches
+        assert_eq!(e.match_count(), 2);
+    }
+
+    #[test]
+    fn measured_plane_ops_close_to_model() {
+        // E19 sanity: measured bit-cycles within ~4x of the analytic model
+        // (the model charges word-width w=32 sequences; the measured count
+        // includes operand staging).
+        let mut e = BitEngine::new(64);
+        let before = e.plane_ops();
+        e.step(&Instr::all(Opcode::Add, Src::Reg(Reg::Nb), Reg::Op));
+        let measured = e.plane_ops() - before;
+        let model = Opcode::Add.bit_cycles(W as u64);
+        assert!(
+            measured >= model / 2 && measured <= model * 4,
+            "measured {measured} vs model {model}"
+        );
+    }
+}

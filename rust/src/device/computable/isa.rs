@@ -1,0 +1,388 @@
+//! Macro ISA of the content-computable memory (§7.2).
+//!
+//! Mirror of `python/compile/kernels/isa.py` — the single source of truth
+//! shared with the L1 Pallas kernel and the L2 trace model. The integration
+//! test `rust/tests/isa_parity.rs` checks this mirror against the generated
+//! `artifacts/isa.json`.
+//!
+//! One instruction word is 10 `i32`s:
+//!
+//! ```text
+//! [opcode, src, dst, imm, en_start, en_end, en_carry, flags, nx, _pad]
+//! ```
+
+/// Register planes (state is `i32[N_REGS][P]`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(i32)]
+pub enum Reg {
+    /// Operation register (§7.2).
+    Op = 0,
+    /// Neighboring register — readable by neighbors (Rule 7).
+    Nb = 1,
+    /// Data registers.
+    D0 = 2,
+    /// Data register 1.
+    D1 = 3,
+    /// Data register 2.
+    D2 = 4,
+    /// Data register 3.
+    D3 = 5,
+    /// Match bit (drives the match line, Rule 6).
+    M = 6,
+    /// Status bit.
+    S = 7,
+    /// Carry bit.
+    C = 8,
+}
+
+/// Number of register planes.
+pub const N_REGS: usize = 9;
+
+/// Source selector: a register plane, a neighbor read, or the immediate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Src {
+    /// One of the PE's own register planes.
+    Reg(Reg),
+    /// Left neighbor's neighboring register: `NB[i-1]` (0 at the edge).
+    Left,
+    /// Right neighbor's neighboring register: `NB[i+1]`.
+    Right,
+    /// `NB[i-nx]` (2-D top neighbor).
+    Up,
+    /// `NB[i+nx]` (2-D bottom neighbor).
+    Down,
+    /// The broadcast datum (concurrent-bus immediate).
+    Imm,
+}
+
+/// Selector codes (wire format).
+pub const S_LEFT: i32 = 9;
+/// Right-neighbor selector code.
+pub const S_RIGHT: i32 = 10;
+/// Up-neighbor selector code.
+pub const S_UP: i32 = 11;
+/// Down-neighbor selector code.
+pub const S_DOWN: i32 = 12;
+/// Immediate selector code.
+pub const S_IMM: i32 = 13;
+/// Number of source selector codes.
+pub const N_SRCS: i32 = 14;
+
+impl Src {
+    /// Wire encoding.
+    pub fn code(self) -> i32 {
+        match self {
+            Src::Reg(r) => r as i32,
+            Src::Left => S_LEFT,
+            Src::Right => S_RIGHT,
+            Src::Up => S_UP,
+            Src::Down => S_DOWN,
+            Src::Imm => S_IMM,
+        }
+    }
+
+    /// Decode a wire selector.
+    pub fn decode(code: i32) -> Option<Src> {
+        Some(match code {
+            0 => Src::Reg(Reg::Op),
+            1 => Src::Reg(Reg::Nb),
+            2 => Src::Reg(Reg::D0),
+            3 => Src::Reg(Reg::D1),
+            4 => Src::Reg(Reg::D2),
+            5 => Src::Reg(Reg::D3),
+            6 => Src::Reg(Reg::M),
+            7 => Src::Reg(Reg::S),
+            8 => Src::Reg(Reg::C),
+            S_LEFT => Src::Left,
+            S_RIGHT => Src::Right,
+            S_UP => Src::Up,
+            S_DOWN => Src::Down,
+            S_IMM => Src::Imm,
+            _ => return None,
+        })
+    }
+}
+
+impl Reg {
+    /// Decode a register selector.
+    pub fn decode(code: i32) -> Option<Reg> {
+        Some(match code {
+            0 => Reg::Op,
+            1 => Reg::Nb,
+            2 => Reg::D0,
+            3 => Reg::D1,
+            4 => Reg::D2,
+            5 => Reg::D3,
+            6 => Reg::M,
+            7 => Reg::S,
+            8 => Reg::C,
+            _ => return None,
+        })
+    }
+}
+
+/// Word-level macro opcodes; each is one paper "instruction cycle".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(i32)]
+pub enum Opcode {
+    /// No operation.
+    Nop = 0,
+    /// `dst = src`.
+    Copy = 1,
+    /// `dst += src` (wrapping).
+    Add = 2,
+    /// `dst -= src` (wrapping).
+    Sub = 3,
+    /// `dst &= src`.
+    And = 4,
+    /// `dst |= src`.
+    Or = 5,
+    /// `dst ^= src`.
+    Xor = 6,
+    /// `M = (dst < src)`.
+    CmpLt = 7,
+    /// `M = (dst <= src)`.
+    CmpLe = 8,
+    /// `M = (dst == src)`.
+    CmpEq = 9,
+    /// `M = (dst != src)`.
+    CmpNe = 10,
+    /// `M = (dst > src)`.
+    CmpGt = 11,
+    /// `M = (dst >= src)`.
+    CmpGe = 12,
+    /// `dst = min(dst, src)`.
+    Min = 13,
+    /// `dst = max(dst, src)`.
+    Max = 14,
+    /// `dst = |dst - src|` (wrapping).
+    AbsDiff = 15,
+    /// `dst *= src` (wrapping).
+    Mul = 16,
+    /// `dst >>= imm` (arithmetic).
+    Shr = 17,
+    /// `dst <<= imm` (wrapping).
+    Shl = 18,
+}
+
+/// Number of opcodes.
+pub const N_OPS: i32 = 19;
+
+impl Opcode {
+    /// Decode a wire opcode.
+    pub fn decode(code: i32) -> Option<Opcode> {
+        use Opcode::*;
+        Some(match code {
+            0 => Nop,
+            1 => Copy,
+            2 => Add,
+            3 => Sub,
+            4 => And,
+            5 => Or,
+            6 => Xor,
+            7 => CmpLt,
+            8 => CmpLe,
+            9 => CmpEq,
+            10 => CmpNe,
+            11 => CmpGt,
+            12 => CmpGe,
+            13 => Min,
+            14 => Max,
+            15 => AbsDiff,
+            16 => Mul,
+            17 => Shr,
+            18 => Shl,
+            _ => return None,
+        })
+    }
+
+    /// Is this a compare (writes the M plane, not `dst`)?
+    pub fn is_cmp(self) -> bool {
+        (self as i32) >= (Opcode::CmpLt as i32) && (self as i32) <= (Opcode::CmpGe as i32)
+    }
+
+    /// Bit-serial expansion cost in concurrent bit-cycles at word width `w`
+    /// (mirrors `isa.py::bit_cycles`; see DESIGN.md "ISA formalization").
+    pub fn bit_cycles(self, w: u64) -> u64 {
+        use Opcode::*;
+        match self {
+            Nop => 0,
+            Copy | And | Or | Xor | Shr | Shl => w,
+            Add | Sub => 3 * w,
+            CmpLt | CmpLe | CmpEq | CmpNe | CmpGt | CmpGe => w + 1,
+            Min | Max => 2 * w + 1,
+            AbsDiff => 4 * w,
+            Mul => 3 * w * w,
+        }
+    }
+}
+
+/// Execute only where `M != 0` (the paper's update-code conditional, §6.1).
+pub const F_COND_M: i32 = 1;
+/// Execute only where `M == 0`.
+pub const F_COND_NOT_M: i32 = 2;
+
+/// Width of the encoded instruction word.
+pub const INSTR_WIDTH: usize = 10;
+
+/// A decoded macro instruction (one concurrent-bus broadcast).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Instr {
+    /// Macro operation.
+    pub opcode: Opcode,
+    /// Source operand selector.
+    pub src: Src,
+    /// Destination register (also the left operand of compares).
+    pub dst: Reg,
+    /// Broadcast immediate datum.
+    pub imm: i32,
+    /// Rule 4 start address.
+    pub en_start: u32,
+    /// Rule 4 end address (inclusive).
+    pub en_end: u32,
+    /// Rule 4 carry number (array-item size); clamped to >= 1.
+    pub en_carry: u32,
+    /// Conditional-execution flags (`F_COND_M`, `F_COND_NOT_M`).
+    pub flags: i32,
+    /// Row stride for 2-D Up/Down reads; 0 for 1-D.
+    pub nx: u32,
+}
+
+impl Instr {
+    /// A full-array unconditional instruction.
+    pub fn all(opcode: Opcode, src: Src, dst: Reg) -> Instr {
+        Instr {
+            opcode,
+            src,
+            dst,
+            imm: 0,
+            en_start: 0,
+            en_end: u32::MAX >> 2,
+            en_carry: 1,
+            flags: 0,
+            nx: 0,
+        }
+    }
+
+    /// Set the immediate.
+    pub fn imm(mut self, imm: i32) -> Instr {
+        self.imm = imm;
+        self
+    }
+
+    /// Set the activation range.
+    pub fn range(mut self, start: u32, end: u32, carry: u32) -> Instr {
+        self.en_start = start;
+        self.en_end = end;
+        self.en_carry = carry.max(1);
+        self
+    }
+
+    /// Set the conditional flags.
+    pub fn flags(mut self, flags: i32) -> Instr {
+        self.flags = flags;
+        self
+    }
+
+    /// Set the 2-D row stride.
+    pub fn stride(mut self, nx: u32) -> Instr {
+        self.nx = nx;
+        self
+    }
+
+    /// Wire encoding (shared with the Python/XLA trace format).
+    pub fn encode(&self) -> [i32; INSTR_WIDTH] {
+        [
+            self.opcode as i32,
+            self.src.code(),
+            self.dst as i32,
+            self.imm,
+            self.en_start as i32,
+            self.en_end as i32,
+            self.en_carry as i32,
+            self.flags,
+            self.nx as i32,
+            0,
+        ]
+    }
+
+    /// Decode from the wire format.
+    pub fn decode(w: &[i32; INSTR_WIDTH]) -> Option<Instr> {
+        Some(Instr {
+            opcode: Opcode::decode(w[0])?,
+            src: Src::decode(w[1])?,
+            dst: Reg::decode(w[2])?,
+            imm: w[3],
+            en_start: w[4].max(0) as u32,
+            en_end: w[5].max(0) as u32,
+            en_carry: w[6].max(1) as u32,
+            flags: w[7],
+            nx: w[8].max(0) as u32,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let i = Instr::all(Opcode::Add, Src::Left, Reg::Op)
+            .imm(-7)
+            .range(3, 200, 4)
+            .flags(F_COND_M)
+            .stride(16);
+        let w = i.encode();
+        assert_eq!(Instr::decode(&w), Some(i));
+    }
+
+    #[test]
+    fn every_opcode_roundtrips() {
+        for code in 0..N_OPS {
+            let op = Opcode::decode(code).unwrap();
+            assert_eq!(op as i32, code);
+        }
+        assert!(Opcode::decode(N_OPS).is_none());
+        assert!(Opcode::decode(-1).is_none());
+    }
+
+    #[test]
+    fn every_src_roundtrips() {
+        for code in 0..N_SRCS {
+            let s = Src::decode(code).unwrap();
+            assert_eq!(s.code(), code);
+        }
+        assert!(Src::decode(N_SRCS).is_none());
+    }
+
+    #[test]
+    fn cmp_classification() {
+        assert!(Opcode::CmpLt.is_cmp());
+        assert!(Opcode::CmpGe.is_cmp());
+        assert!(!Opcode::Add.is_cmp());
+        assert!(!Opcode::Min.is_cmp());
+    }
+
+    #[test]
+    fn bit_cycles_match_python_model() {
+        // Values pinned against isa.py::bit_cycles (checked again at
+        // runtime by rust/tests/isa_parity.rs via artifacts/isa.json).
+        assert_eq!(Opcode::Nop.bit_cycles(8), 0);
+        assert_eq!(Opcode::Copy.bit_cycles(8), 8);
+        assert_eq!(Opcode::Add.bit_cycles(8), 24);
+        assert_eq!(Opcode::CmpLt.bit_cycles(8), 9);
+        assert_eq!(Opcode::Min.bit_cycles(8), 17);
+        assert_eq!(Opcode::AbsDiff.bit_cycles(8), 32);
+        assert_eq!(Opcode::Mul.bit_cycles(8), 192);
+    }
+
+    #[test]
+    fn carry_clamps_to_one() {
+        let i = Instr::all(Opcode::Nop, Src::Imm, Reg::Op).range(0, 10, 0);
+        assert_eq!(i.en_carry, 1);
+        let mut w = i.encode();
+        w[6] = 0;
+        assert_eq!(Instr::decode(&w).unwrap().en_carry, 1);
+    }
+}

@@ -1,0 +1,238 @@
+//! Macro assembler — the paper's "micro-kernel" (§3.1, §7.2).
+//!
+//! "A content computable memory may contain a micro kernel to translate
+//! register-level instructions on the system bus into bit-serial
+//! instructions for PEs." This builder is that translation layer: the
+//! concurrent algorithms of §7 are written against word-level register
+//! operations, which assemble into the shared macro-ISA trace executed by
+//! any engine (word-plane, bit-plane, or the AOT/PJRT backend).
+
+use super::isa::{Instr, Opcode, Reg, Src, F_COND_M, F_COND_NOT_M};
+
+/// Builder for macro-instruction traces with a sticky activation range
+/// and 2-D stride.
+#[derive(Debug, Clone)]
+pub struct TraceBuilder {
+    instrs: Vec<Instr>,
+    start: u32,
+    end: u32,
+    carry: u32,
+    nx: u32,
+}
+
+impl Default for TraceBuilder {
+    fn default() -> Self {
+        TraceBuilder {
+            instrs: Vec::new(),
+            start: 0,
+            end: u32::MAX >> 2,
+            carry: 1,
+            nx: 0,
+        }
+    }
+}
+
+impl TraceBuilder {
+    /// New builder activating all PEs.
+    pub fn new() -> Self {
+        TraceBuilder::default()
+    }
+
+    /// New builder with a 2-D row stride for Up/Down reads.
+    pub fn with_stride(nx: u32) -> Self {
+        TraceBuilder {
+            nx,
+            ..Default::default()
+        }
+    }
+
+    /// Set the sticky activation range for subsequent instructions.
+    pub fn select(&mut self, start: u32, end: u32, carry: u32) -> &mut Self {
+        self.start = start;
+        self.end = end;
+        self.carry = carry.max(1);
+        self
+    }
+
+    /// Reset the activation range to all PEs.
+    pub fn select_all(&mut self) -> &mut Self {
+        self.select(0, u32::MAX >> 2, 1)
+    }
+
+    fn push(&mut self, opcode: Opcode, src: Src, dst: Reg, imm: i32, flags: i32) -> &mut Self {
+        self.instrs.push(
+            Instr::all(opcode, src, dst)
+                .imm(imm)
+                .range(self.start, self.end, self.carry)
+                .flags(flags)
+                .stride(self.nx),
+        );
+        self
+    }
+
+    /// `dst = src`.
+    pub fn copy(&mut self, dst: Reg, src: Src) -> &mut Self {
+        self.push(Opcode::Copy, src, dst, 0, 0)
+    }
+
+    /// `dst = imm`.
+    pub fn set(&mut self, dst: Reg, imm: i32) -> &mut Self {
+        self.push(Opcode::Copy, Src::Imm, dst, imm, 0)
+    }
+
+    /// `dst += src`.
+    pub fn add(&mut self, dst: Reg, src: Src) -> &mut Self {
+        self.push(Opcode::Add, src, dst, 0, 0)
+    }
+
+    /// `dst += imm`.
+    pub fn add_imm(&mut self, dst: Reg, imm: i32) -> &mut Self {
+        self.push(Opcode::Add, Src::Imm, dst, imm, 0)
+    }
+
+    /// `dst -= src`.
+    pub fn sub(&mut self, dst: Reg, src: Src) -> &mut Self {
+        self.push(Opcode::Sub, src, dst, 0, 0)
+    }
+
+    /// `dst = |dst - src|`.
+    pub fn absdiff(&mut self, dst: Reg, src: Src) -> &mut Self {
+        self.push(Opcode::AbsDiff, src, dst, 0, 0)
+    }
+
+    /// `dst = min(dst, src)`.
+    pub fn min(&mut self, dst: Reg, src: Src) -> &mut Self {
+        self.push(Opcode::Min, src, dst, 0, 0)
+    }
+
+    /// `dst = max(dst, src)`.
+    pub fn max(&mut self, dst: Reg, src: Src) -> &mut Self {
+        self.push(Opcode::Max, src, dst, 0, 0)
+    }
+
+    /// `dst *= src`.
+    pub fn mul(&mut self, dst: Reg, src: Src) -> &mut Self {
+        self.push(Opcode::Mul, src, dst, 0, 0)
+    }
+
+    /// `dst >>= imm` (arithmetic).
+    pub fn shr(&mut self, dst: Reg, imm: i32) -> &mut Self {
+        self.push(Opcode::Shr, Src::Imm, dst, imm, 0)
+    }
+
+    /// `dst <<= imm`.
+    pub fn shl(&mut self, dst: Reg, imm: i32) -> &mut Self {
+        self.push(Opcode::Shl, Src::Imm, dst, imm, 0)
+    }
+
+    /// `M = dst <op> src`.
+    pub fn cmp(&mut self, op: Opcode, dst: Reg, src: Src) -> &mut Self {
+        assert!(op.is_cmp(), "cmp() requires a compare opcode");
+        self.push(op, src, dst, 0, 0)
+    }
+
+    /// `M = dst <op> imm`.
+    pub fn cmp_imm(&mut self, op: Opcode, dst: Reg, imm: i32) -> &mut Self {
+        assert!(op.is_cmp(), "cmp_imm() requires a compare opcode");
+        self.push(op, Src::Imm, dst, imm, 0)
+    }
+
+    /// Conditional copy where `M != 0`.
+    pub fn copy_if(&mut self, dst: Reg, src: Src) -> &mut Self {
+        self.push(Opcode::Copy, src, dst, 0, F_COND_M)
+    }
+
+    /// Conditional copy where `M == 0`.
+    pub fn copy_unless(&mut self, dst: Reg, src: Src) -> &mut Self {
+        self.push(Opcode::Copy, src, dst, 0, F_COND_NOT_M)
+    }
+
+    /// Conditional `dst = imm` where `M != 0`.
+    pub fn set_if(&mut self, dst: Reg, imm: i32) -> &mut Self {
+        self.push(Opcode::Copy, Src::Imm, dst, imm, F_COND_M)
+    }
+
+    /// Conditional `dst = imm` where `M == 0`.
+    pub fn set_unless(&mut self, dst: Reg, imm: i32) -> &mut Self {
+        self.push(Opcode::Copy, Src::Imm, dst, imm, F_COND_NOT_M)
+    }
+
+    /// Push an arbitrary instruction with the sticky range/stride applied.
+    pub fn raw(&mut self, opcode: Opcode, src: Src, dst: Reg, imm: i32, flags: i32) -> &mut Self {
+        self.push(opcode, src, dst, imm, flags)
+    }
+
+    /// Push a fully custom instruction verbatim.
+    pub fn instr(&mut self, instr: Instr) -> &mut Self {
+        self.instrs.push(instr);
+        self
+    }
+
+    /// Number of macro instructions so far.
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    /// True if no instructions were assembled.
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Finish and return the trace.
+    pub fn build(self) -> Vec<Instr> {
+        self.instrs
+    }
+
+    /// Borrow the trace without consuming the builder.
+    pub fn as_slice(&self) -> &[Instr] {
+        &self.instrs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::computable::word_engine::WordEngine;
+
+    #[test]
+    fn builder_applies_sticky_range() {
+        let mut b = TraceBuilder::new();
+        b.select(2, 10, 4).set(Reg::Op, 1).select_all().set(Reg::Nb, 2);
+        let t = b.build();
+        assert_eq!(t.len(), 2);
+        assert_eq!((t[0].en_start, t[0].en_end, t[0].en_carry), (2, 10, 4));
+        assert_eq!(t[1].en_start, 0);
+        assert_eq!(t[1].en_carry, 1);
+    }
+
+    #[test]
+    fn builder_stride_propagates() {
+        let mut b = TraceBuilder::with_stride(16);
+        b.copy(Reg::Op, Src::Up);
+        assert_eq!(b.as_slice()[0].nx, 16);
+    }
+
+    #[test]
+    fn gaussian_trace_runs() {
+        // Eq 7-10: (1 2 1) in 4 macro cycles.
+        let mut b = TraceBuilder::new();
+        b.copy(Reg::Op, Src::Reg(Reg::Nb))
+            .add(Reg::Op, Src::Left)
+            .copy(Reg::Nb, Src::Reg(Reg::Op))
+            .add(Reg::Op, Src::Right);
+        let trace = b.build();
+        assert_eq!(trace.len(), 4);
+
+        let mut e = WordEngine::new(6, 16);
+        e.load_plane(Reg::Nb, &[1, 2, 3, 4, 5, 6]);
+        e.run(&trace);
+        // interior: v[i-1] + 2 v[i] + v[i+1]
+        assert_eq!(e.plane(Reg::Op)[1..5], [8, 12, 16, 20]);
+    }
+
+    #[test]
+    #[should_panic(expected = "requires a compare opcode")]
+    fn cmp_rejects_non_compare() {
+        TraceBuilder::new().cmp(Opcode::Add, Reg::Op, Src::Imm);
+    }
+}

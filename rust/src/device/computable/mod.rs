@@ -1,0 +1,152 @@
+//! Content computable memory (§7) — the most capable CPM family member.
+//!
+//! A PE per array item with a bit-serial ALU (Fig 8), neighbor connectivity
+//! (Rule 7), and the shared macro ISA. Three interchangeable engines
+//! execute the same traces:
+//!
+//! * [`word_engine::WordEngine`] — fast scalar word-plane executor,
+//! * [`bit_engine::BitEngine`] — bit-serial-faithful bit-plane executor,
+//! * the PJRT backend (`crate::runtime`) — the AOT-compiled JAX/Pallas
+//!   plane, for large P.
+
+pub mod bit_engine;
+pub mod isa;
+pub mod macroasm;
+pub mod superconn;
+pub mod word_engine;
+
+pub use isa::{Instr, Opcode, Reg, Src};
+pub use macroasm::TraceBuilder;
+pub use word_engine::WordEngine;
+
+use crate::cycles::ConcurrentCost;
+
+/// A content-computable-memory device: a word engine plus the 1-D/2-D
+/// topology bookkeeping (§7.1) and the control-unit readout.
+#[derive(Debug, Clone)]
+pub struct ComputableMemory {
+    engine: WordEngine,
+    nx: usize,
+    ny: usize,
+}
+
+impl ComputableMemory {
+    /// 1-D device of `p` PEs (word width for bit-cycle accounting).
+    pub fn new_1d(p: usize, word_width: u64) -> Self {
+        ComputableMemory {
+            engine: WordEngine::new(p, word_width),
+            nx: p,
+            ny: 1,
+        }
+    }
+
+    /// 2-D device of `nx * ny` PEs on a square lattice (§7.1).
+    pub fn new_2d(nx: usize, ny: usize, word_width: u64) -> Self {
+        ComputableMemory {
+            engine: WordEngine::new(nx * ny, word_width),
+            nx,
+            ny,
+        }
+    }
+
+    /// Row stride (Up/Down neighbor distance); equals `nx`.
+    pub fn stride(&self) -> u32 {
+        if self.ny > 1 {
+            self.nx as u32
+        } else {
+            0
+        }
+    }
+
+    /// Grid shape `(nx, ny)`.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.nx, self.ny)
+    }
+
+    /// Number of PEs.
+    pub fn len(&self) -> usize {
+        self.engine.len()
+    }
+
+    /// True if the device has no PEs.
+    pub fn is_empty(&self) -> bool {
+        self.engine.is_empty()
+    }
+
+    /// The underlying engine.
+    pub fn engine(&self) -> &WordEngine {
+        &self.engine
+    }
+
+    /// The underlying engine, mutably.
+    pub fn engine_mut(&mut self) -> &mut WordEngine {
+        &mut self.engine
+    }
+
+    /// Load the neighboring layer (the paper's convention: values to be
+    /// processed start in the neighboring registers, §7.2).
+    pub fn load_values(&mut self, values: &[i32]) {
+        self.engine.load_plane(Reg::Nb, values);
+    }
+
+    /// Read the neighboring layer.
+    pub fn values(&self) -> &[i32] {
+        self.engine.plane(Reg::Nb)
+    }
+
+    /// Read the operation layer.
+    pub fn op_layer(&self) -> &[i32] {
+        self.engine.plane(Reg::Op)
+    }
+
+    /// Execute a macro trace.
+    pub fn run(&mut self, trace: &[Instr]) {
+        self.engine.run(trace);
+    }
+
+    /// Rule 6 readout: match count via the parallel counter.
+    pub fn match_count(&mut self) -> usize {
+        self.engine.match_count()
+    }
+
+    /// Rule 6 readout: first matching PE via the priority encoder.
+    pub fn first_match(&mut self) -> Option<usize> {
+        self.engine.first_match()
+    }
+
+    /// Accumulated cost.
+    pub fn cost(&self) -> ConcurrentCost {
+        self.engine.cost()
+    }
+
+    /// Reset cost counters (between experiments).
+    pub fn reset_cost(&mut self) {
+        self.engine.reset_cost();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_stride() {
+        let d1 = ComputableMemory::new_1d(64, 16);
+        assert_eq!(d1.stride(), 0);
+        assert_eq!(d1.shape(), (64, 1));
+        let d2 = ComputableMemory::new_2d(8, 4, 16);
+        assert_eq!(d2.stride(), 8);
+        assert_eq!(d2.len(), 32);
+    }
+
+    #[test]
+    fn load_run_readout() {
+        let mut d = ComputableMemory::new_1d(8, 16);
+        d.load_values(&[3, 1, 4, 1, 5, 9, 2, 6]);
+        let mut b = TraceBuilder::new();
+        b.cmp_imm(Opcode::CmpGt, Reg::Nb, 4);
+        d.run(&b.build());
+        assert_eq!(d.match_count(), 3);
+        assert_eq!(d.first_match(), Some(4));
+    }
+}

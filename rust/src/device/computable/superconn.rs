@@ -1,0 +1,134 @@
+//! Super-connectivity extension (§8, Fig 16).
+//!
+//! The paper's discussion: adding level-k links between PEs at distance
+//! 2^k lets a 1-D content computable memory finish global operations in
+//! ~log N instead of ~√N instruction cycles, at the cost of breaking
+//! Rules 1/3/7 (PEs are no longer identical; the link set depends on the
+//! element address). We model the level-k link as a strided neighbor read
+//! (the `Up`/`Down` selectors with `nx = 2^k`), which is exactly the wire
+//! the figure adds.
+//!
+//! E15 benchmarks this ablation against the √N section algorithm.
+
+use super::isa::{Opcode, Reg, Src};
+use super::macroasm::TraceBuilder;
+use super::word_engine::WordEngine;
+use crate::cycles::ConcurrentCost;
+
+/// Global sum over the first `n` PEs in ~2·log₂(n) concurrent cycles using
+/// super-connectivity. The total lands in PE `n-1`'s operation register.
+/// Returns `(total, cost_of_this_call)`.
+pub fn global_sum_log(engine: &mut WordEngine, n: usize) -> (i64, ConcurrentCost) {
+    let before = engine.cost();
+    let end = (n.saturating_sub(1)) as u32;
+    // OP accumulates; NB carries partial sums across levels (Hillis–Steele
+    // inclusive scan over the level-k links).
+    let mut init = TraceBuilder::new();
+    init.select(0, end, 1).copy(Reg::Op, Src::Reg(Reg::Nb));
+    engine.run(&init.build());
+    let mut dist = 1usize;
+    while dist < n {
+        // Each PE adds the partial sum of the PE 2^k to its left; NB must
+        // publish the current partials first (one copy + one strided add).
+        let mut lb = TraceBuilder::new();
+        lb.select(0, end, 1)
+            .copy(Reg::Nb, Src::Reg(Reg::Op))
+            .raw(Opcode::Add, Src::Up, Reg::Op, 0, 0);
+        let mut trace = lb.build();
+        for i in &mut trace {
+            i.nx = dist as u32;
+        }
+        engine.run(&trace);
+        dist *= 2;
+    }
+    let total = engine.plane(Reg::Op)[n - 1] as i64;
+    let after = engine.cost();
+    (
+        total,
+        ConcurrentCost {
+            macro_cycles: after.macro_cycles - before.macro_cycles,
+            bit_cycles: after.bit_cycles - before.bit_cycles,
+            exclusive_ops: after.exclusive_ops - before.exclusive_ops,
+            bus_words: after.bus_words - before.bus_words,
+        },
+    )
+}
+
+/// Global max over the first `n` PEs in ~2·log₂(n) cycles (same ladder
+/// with `Max` instead of `Add`). Result in PE `n-1`'s operation register.
+pub fn global_max_log(engine: &mut WordEngine, n: usize) -> (i32, ConcurrentCost) {
+    let before = engine.cost();
+    let end = (n.saturating_sub(1)) as u32;
+    let mut init = TraceBuilder::new();
+    init.select(0, end, 1).copy(Reg::Op, Src::Reg(Reg::Nb));
+    engine.run(&init.build());
+    let mut dist = 1usize;
+    while dist < n {
+        let mut lb = TraceBuilder::new();
+        lb.select(dist as u32, end, 1)
+            .copy(Reg::Nb, Src::Reg(Reg::Op));
+        // NB write must cover all PEs so lower PEs publish their partials.
+        let mut trace = lb.build();
+        trace[0].en_start = 0;
+        let mut step = TraceBuilder::new();
+        step.select(dist as u32, end, 1)
+            .raw(Opcode::Max, Src::Up, Reg::Op, 0, 0);
+        let mut strace = step.build();
+        strace[0].nx = dist as u32;
+        engine.run(&trace);
+        engine.run(&strace);
+        dist *= 2;
+    }
+    let max = engine.plane(Reg::Op)[n - 1];
+    let after = engine.cost();
+    (
+        max,
+        ConcurrentCost {
+            macro_cycles: after.macro_cycles - before.macro_cycles,
+            bit_cycles: after.bit_cycles - before.bit_cycles,
+            exclusive_ops: after.exclusive_ops - before.exclusive_ops,
+            bus_words: after.bus_words - before.bus_words,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn log_sum_is_correct_and_logarithmic() {
+        let mut rng = Rng::new(21);
+        for n in [1usize, 2, 3, 8, 100, 256, 1000] {
+            let mut e = WordEngine::new(n, 16);
+            let vals = rng.vec_i32(n, -100, 100);
+            e.load_plane(Reg::Nb, &vals);
+            e.reset_cost();
+            let (total, cost) = global_sum_log(&mut e, n);
+            let want: i64 = vals.iter().map(|&v| v as i64).sum();
+            // i32 wrap-safe for these magnitudes
+            assert_eq!(total, want, "n={n}");
+            let log2n = (n as f64).log2().ceil() as u64;
+            assert!(
+                cost.macro_cycles <= 2 * log2n + 3,
+                "n={n}: {} cycles > 2 log n + 3",
+                cost.macro_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn log_max_is_correct() {
+        let mut rng = Rng::new(22);
+        for n in [1usize, 5, 64, 333] {
+            let mut e = WordEngine::new(n, 16);
+            let vals = rng.vec_i32(n, -1000, 1000);
+            e.load_plane(Reg::Nb, &vals);
+            let (max, cost) = global_max_log(&mut e, n);
+            assert_eq!(max, *vals.iter().max().unwrap(), "n={n}");
+            let log2n = (n as f64).log2().ceil() as u64;
+            assert!(cost.macro_cycles <= 2 * log2n + 3);
+        }
+    }
+}

@@ -1,0 +1,573 @@
+//! Word-plane engine: the fast scalar executor for the computable-memory
+//! PE plane.
+//!
+//! State is `N_REGS` register planes of `i32` (one word per PE). One macro
+//! instruction is one pass over the enabled PEs — the concurrent semantics
+//! of Rule 5 with Rule 4 activation. Must match `ref.py::pe_step_ref`
+//! bit-for-bit (checked by `rust/tests/engine_equiv.rs` and, through the
+//! AOT artifacts, by the PJRT backend parity test).
+
+use super::isa::{Instr, Opcode, Reg, Src, F_COND_M, F_COND_NOT_M, N_REGS};
+use crate::cycles::ConcurrentCost;
+
+/// The word-plane engine.
+#[derive(Debug, Clone)]
+pub struct WordEngine {
+    p: usize,
+    /// Flat plane storage: `planes[r * p + i]` = register `r` of PE `i`.
+    planes: Vec<i32>,
+    /// Logical word width for bit-cycle accounting (the device's physical
+    /// PE word size; values are simulated in i32 regardless).
+    word_width: u64,
+    cost: ConcurrentCost,
+    /// Operand staging buffers (avoid allocation on the per-cycle path).
+    scratch_a: Vec<i32>,
+    scratch_b: Vec<i32>,
+}
+
+impl WordEngine {
+    /// Engine over `p` PEs with the given accounting word width.
+    pub fn new(p: usize, word_width: u64) -> Self {
+        WordEngine {
+            p,
+            planes: vec![0; N_REGS * p],
+            word_width,
+            cost: ConcurrentCost::default(),
+            scratch_a: vec![0; p],
+            scratch_b: vec![0; p],
+        }
+    }
+
+    /// Number of PEs.
+    pub fn len(&self) -> usize {
+        self.p
+    }
+
+    /// True if the engine has no PEs.
+    pub fn is_empty(&self) -> bool {
+        self.p == 0
+    }
+
+    /// Read-only view of a register plane.
+    pub fn plane(&self, r: Reg) -> &[i32] {
+        let r = r as usize;
+        &self.planes[r * self.p..(r + 1) * self.p]
+    }
+
+    /// Mutable view of a register plane (exclusive-bus writes; the caller
+    /// accounts those via [`ConcurrentCost::exclusive`]).
+    pub fn plane_mut(&mut self, r: Reg) -> &mut [i32] {
+        let r = r as usize;
+        &mut self.planes[r * self.p..(r + 1) * self.p]
+    }
+
+    /// Load a whole plane (bulk exclusive write, e.g. DMA).
+    pub fn load_plane(&mut self, r: Reg, data: &[i32]) {
+        assert!(data.len() <= self.p, "plane load larger than device");
+        let base = r as usize * self.p;
+        self.planes[base..base + data.len()].copy_from_slice(data);
+        self.cost += ConcurrentCost::exclusive(data.len() as u64);
+    }
+
+    /// Accumulated cost.
+    pub fn cost(&self) -> ConcurrentCost {
+        self.cost
+    }
+
+    /// Reset the cost counters.
+    pub fn reset_cost(&mut self) {
+        self.cost = ConcurrentCost::default();
+    }
+
+    #[inline]
+    fn read(&self, r: usize, i: usize) -> i32 {
+        self.planes[r * self.p + i]
+    }
+
+    /// Value of `src` as seen by PE `i` *before* any write of this cycle.
+    /// Safe because neighbor-hazard ordering is handled in [`step`].
+    #[inline]
+    fn src_value(&self, i: usize, instr: &Instr) -> i32 {
+        let p = self.p;
+        let nb = Reg::Nb as usize;
+        match instr.src {
+            Src::Reg(r) => self.read(r as usize, i),
+            Src::Imm => instr.imm,
+            Src::Left => {
+                if i >= 1 {
+                    self.read(nb, i - 1)
+                } else {
+                    0
+                }
+            }
+            Src::Right => {
+                if i + 1 < p {
+                    self.read(nb, i + 1)
+                } else {
+                    0
+                }
+            }
+            Src::Up => {
+                let nx = instr.nx as usize;
+                if i >= nx {
+                    self.read(nb, i - nx)
+                } else {
+                    0
+                }
+            }
+            Src::Down => {
+                let nx = instr.nx as usize;
+                if nx == 0 || i + nx >= p {
+                    // nx = 0 reads the PE's own NB (ISA parity with ref.py).
+                    if nx == 0 {
+                        self.read(nb, i)
+                    } else {
+                        0
+                    }
+                } else {
+                    self.read(nb, i + nx)
+                }
+            }
+        }
+    }
+
+    /// Does `src` read from a *lower* PE address (so ascending iteration
+    /// with dst == NB would clobber it)?
+    fn reads_lower(src: Src) -> bool {
+        matches!(src, Src::Left | Src::Up)
+    }
+
+    /// Execute one broadcast macro instruction (one concurrent cycle).
+    pub fn step(&mut self, instr: &Instr) {
+        self.cost += ConcurrentCost::broadcast(1, instr.opcode.bit_cycles(self.word_width));
+        if self.p == 0 || matches!(instr.opcode, Opcode::Nop) {
+            return;
+        }
+        let start = instr.en_start as usize;
+        let end = (instr.en_end as usize).min(self.p.saturating_sub(1));
+        if start > end {
+            return;
+        }
+        let carry = (instr.en_carry as usize).max(1);
+
+        // Fast path: dense unconditional ranges vectorize (see §Perf in
+        // EXPERIMENTS.md — this is the L3 hot loop).
+        if carry == 1 && instr.flags == 0 && self.step_dense(instr, start, end) {
+            return;
+        }
+
+        // Neighbor-read + NB-write hazard: pick the iteration order that
+        // reads the old value (concurrent semantics) without a snapshot.
+        let descending = instr.dst == Reg::Nb && Self::reads_lower(instr.src);
+
+        let mut idx = start;
+        let mut order: Vec<usize> = Vec::new();
+        // Fast path: direct iteration without materializing the index list
+        // when ascending (the common case).
+        if descending {
+            while idx <= end {
+                order.push(idx);
+                match idx.checked_add(carry) {
+                    Some(n) => idx = n,
+                    None => break,
+                }
+            }
+            for &i in order.iter().rev() {
+                self.exec_at(i, instr);
+            }
+        } else {
+            while idx <= end {
+                self.exec_at(idx, instr);
+                match idx.checked_add(carry) {
+                    Some(n) => idx = n,
+                    None => break,
+                }
+            }
+        }
+    }
+
+    /// Vectorizable executor for dense (`carry == 1`, unconditional)
+    /// ranges: per-opcode slice loops instead of a per-PE interpreter.
+    /// Returns `false` when the case needs the scalar path (in-place NB
+    /// shifts with non-COPY opcodes).
+    fn step_dense(&mut self, instr: &Instr, start: usize, end: usize) -> bool {
+        use Opcode::*;
+        let p = self.p;
+        let len = end - start + 1;
+        let dst = instr.dst as usize;
+        let is_cmp = instr.opcode.is_cmp();
+        let wr = if is_cmp { Reg::M as usize } else { dst };
+
+        // Source window into the NB plane for neighbor reads: the value at
+        // PE i is NB[i + delta].
+        let delta: isize = match instr.src {
+            Src::Left => -1,
+            Src::Right => 1,
+            Src::Up => -(instr.nx as isize),
+            Src::Down => instr.nx as isize,
+            _ => 0,
+        };
+        let neighbor = !matches!(instr.src, Src::Reg(_) | Src::Imm);
+
+        // In-place NB window shifts: COPY becomes a memmove; other opcodes
+        // fall back to the hazard-aware scalar path.
+        if neighbor && wr == Reg::Nb as usize {
+            if matches!(instr.opcode, Copy) && !is_cmp {
+                let base = Reg::Nb as usize * p;
+                let lo = start as isize + delta;
+                let hi = end as isize + delta;
+                let src_lo = lo.clamp(0, p as isize) as usize;
+                let src_hi = (hi + 1).clamp(0, p as isize) as usize;
+                // Region that reads real data:
+                let dst_lo = (src_lo as isize - delta) as usize;
+                if src_hi > src_lo {
+                    self.planes
+                        .copy_within(base + src_lo..base + src_hi, base + dst_lo);
+                }
+                // Edges that read beyond the plane become 0.
+                for i in start..=end {
+                    let j = i as isize + delta;
+                    if j < 0 || j >= p as isize {
+                        self.planes[base + i] = 0;
+                    }
+                }
+                return true;
+            }
+            return false;
+        }
+
+        // Gather the operand window. For register/imm sources this is a
+        // plane slice or a broadcast; for neighbor sources a shifted slice
+        // of NB with zero edges.
+        macro_rules! apply {
+            ($a:expr, $b:expr, $out:expr) => {{
+                let a = $a;
+                let b = $b;
+                let out = $out;
+                match instr.opcode {
+                    Copy => out.copy_from_slice(b),
+                    Add => {
+                        for k in 0..len {
+                            out[k] = a[k].wrapping_add(b[k]);
+                        }
+                    }
+                    Sub => {
+                        for k in 0..len {
+                            out[k] = a[k].wrapping_sub(b[k]);
+                        }
+                    }
+                    And => {
+                        for k in 0..len {
+                            out[k] = a[k] & b[k];
+                        }
+                    }
+                    Or => {
+                        for k in 0..len {
+                            out[k] = a[k] | b[k];
+                        }
+                    }
+                    Xor => {
+                        for k in 0..len {
+                            out[k] = a[k] ^ b[k];
+                        }
+                    }
+                    Min => {
+                        for k in 0..len {
+                            out[k] = a[k].min(b[k]);
+                        }
+                    }
+                    Max => {
+                        for k in 0..len {
+                            out[k] = a[k].max(b[k]);
+                        }
+                    }
+                    AbsDiff => {
+                        for k in 0..len {
+                            out[k] = a[k].wrapping_sub(b[k]).wrapping_abs();
+                        }
+                    }
+                    Mul => {
+                        for k in 0..len {
+                            out[k] = a[k].wrapping_mul(b[k]);
+                        }
+                    }
+                    Shr | Shl => unreachable!("handled before apply!"),
+                    CmpLt => {
+                        for k in 0..len {
+                            out[k] = (a[k] < b[k]) as i32;
+                        }
+                    }
+                    CmpLe => {
+                        for k in 0..len {
+                            out[k] = (a[k] <= b[k]) as i32;
+                        }
+                    }
+                    CmpEq => {
+                        for k in 0..len {
+                            out[k] = (a[k] == b[k]) as i32;
+                        }
+                    }
+                    CmpNe => {
+                        for k in 0..len {
+                            out[k] = (a[k] != b[k]) as i32;
+                        }
+                    }
+                    CmpGt => {
+                        for k in 0..len {
+                            out[k] = (a[k] > b[k]) as i32;
+                        }
+                    }
+                    CmpGe => {
+                        for k in 0..len {
+                            out[k] = (a[k] >= b[k]) as i32;
+                        }
+                    }
+                    Nop => {}
+                }
+            }};
+        }
+
+        // Shifts only involve `a` and the immediate — handle in place.
+        if matches!(instr.opcode, Shr | Shl) {
+            let shift = instr.imm.clamp(0, 31) as u32;
+            let plane = &mut self.planes[dst * p + start..dst * p + end + 1];
+            if matches!(instr.opcode, Shr) {
+                for v in plane.iter_mut() {
+                    *v >>= shift;
+                }
+            } else {
+                for v in plane.iter_mut() {
+                    *v = v.wrapping_shl(shift);
+                }
+            }
+            return true;
+        }
+
+        // Stage operands into the persistent scratch buffers (field-level
+        // split borrow: scratch_a/scratch_b vs planes). COPY ignores the
+        // old destination — skip staging `a` for it.
+        let a_plane = dst;
+        if !matches!(instr.opcode, Copy) {
+            let sa = &mut self.scratch_a[..len];
+            sa.copy_from_slice(&self.planes[a_plane * p + start..a_plane * p + end + 1]);
+        }
+        match instr.src {
+            Src::Reg(r) => {
+                let r = r as usize;
+                let sb = &mut self.scratch_b[..len];
+                sb.copy_from_slice(&self.planes[r * p + start..r * p + end + 1]);
+            }
+            Src::Imm => {
+                self.scratch_b[..len].fill(instr.imm);
+            }
+            _ => {
+                // Neighbor read: a shifted window of NB with zero edges.
+                let base = Reg::Nb as usize * p;
+                let lo = (start as isize + delta).clamp(0, p as isize) as usize;
+                let hi = ((end as isize + delta) + 1).clamp(0, p as isize) as usize;
+                let sb = &mut self.scratch_b[..len];
+                sb.fill(0);
+                if hi > lo {
+                    let k0 = (lo as isize - (start as isize + delta)) as usize;
+                    sb[k0..k0 + (hi - lo)]
+                        .copy_from_slice(&self.planes[base + lo..base + hi]);
+                }
+            }
+        }
+        let out = &mut self.planes[wr * p + start..wr * p + end + 1];
+        apply!(&self.scratch_a[..len], &self.scratch_b[..len], out);
+        true
+    }
+
+    #[inline]
+    fn exec_at(&mut self, i: usize, instr: &Instr) {
+        let m_old = self.read(Reg::M as usize, i);
+        if instr.flags & F_COND_M != 0 && m_old == 0 {
+            return;
+        }
+        if instr.flags & F_COND_NOT_M != 0 && m_old != 0 {
+            return;
+        }
+        let dst = instr.dst as usize;
+        let a = self.read(dst, i);
+        let b = self.src_value(i, instr);
+        let shift = instr.imm.clamp(0, 31) as u32;
+        use Opcode::*;
+        match instr.opcode {
+            Nop => {}
+            Copy => self.planes[dst * self.p + i] = b,
+            Add => self.planes[dst * self.p + i] = a.wrapping_add(b),
+            Sub => self.planes[dst * self.p + i] = a.wrapping_sub(b),
+            And => self.planes[dst * self.p + i] = a & b,
+            Or => self.planes[dst * self.p + i] = a | b,
+            Xor => self.planes[dst * self.p + i] = a ^ b,
+            Min => self.planes[dst * self.p + i] = a.min(b),
+            Max => self.planes[dst * self.p + i] = a.max(b),
+            AbsDiff => self.planes[dst * self.p + i] = a.wrapping_sub(b).wrapping_abs(),
+            Mul => self.planes[dst * self.p + i] = a.wrapping_mul(b),
+            Shr => self.planes[dst * self.p + i] = a >> shift,
+            Shl => self.planes[dst * self.p + i] = a.wrapping_shl(shift),
+            CmpLt => self.planes[Reg::M as usize * self.p + i] = (a < b) as i32,
+            CmpLe => self.planes[Reg::M as usize * self.p + i] = (a <= b) as i32,
+            CmpEq => self.planes[Reg::M as usize * self.p + i] = (a == b) as i32,
+            CmpNe => self.planes[Reg::M as usize * self.p + i] = (a != b) as i32,
+            CmpGt => self.planes[Reg::M as usize * self.p + i] = (a > b) as i32,
+            CmpGe => self.planes[Reg::M as usize * self.p + i] = (a >= b) as i32,
+        }
+    }
+
+    /// Execute a whole macro trace.
+    pub fn run(&mut self, trace: &[Instr]) {
+        for instr in trace {
+            self.step(instr);
+        }
+    }
+
+    /// Rule 6 readout: number of PEs asserting the match line (the control
+    /// unit's parallel counter; one instruction cycle).
+    pub fn match_count(&mut self) -> usize {
+        self.cost += ConcurrentCost::broadcast(1, 1);
+        self.plane(Reg::M).iter().filter(|&&m| m != 0).count()
+    }
+
+    /// Rule 6 readout: first PE asserting the match line (priority encoder).
+    pub fn first_match(&mut self) -> Option<usize> {
+        self.cost += ConcurrentCost::broadcast(1, 1);
+        self.plane(Reg::M).iter().position(|&m| m != 0)
+    }
+
+    /// Rule 6 readout: last PE asserting the match line (a priority encoder
+    /// scanning from the high-address end; same silicon, mirrored).
+    pub fn last_match(&mut self) -> Option<usize> {
+        self.cost += ConcurrentCost::broadcast(1, 1);
+        self.plane(Reg::M).iter().rposition(|&m| m != 0)
+    }
+
+    /// Snapshot the full state (for engine-equivalence tests).
+    pub fn state(&self) -> Vec<i32> {
+        self.planes.clone()
+    }
+
+    /// Restore a full state snapshot.
+    pub fn set_state(&mut self, state: &[i32]) {
+        assert_eq!(state.len(), self.planes.len());
+        self.planes.copy_from_slice(state);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine_with_nb(vals: &[i32]) -> WordEngine {
+        let mut e = WordEngine::new(vals.len(), 16);
+        e.load_plane(Reg::Nb, vals);
+        e
+    }
+
+    #[test]
+    fn copy_imm_writes_enabled_range_only() {
+        let mut e = WordEngine::new(8, 16);
+        e.step(&Instr::all(Opcode::Copy, Src::Imm, Reg::Op).imm(5).range(2, 6, 2));
+        assert_eq!(e.plane(Reg::Op), &[0, 0, 5, 0, 5, 0, 5, 0]);
+        assert_eq!(e.cost().macro_cycles, 1);
+        assert_eq!(e.cost().bit_cycles, 16);
+    }
+
+    #[test]
+    fn left_read_at_edge_is_zero() {
+        let mut e = engine_with_nb(&[10, 20, 30, 40]);
+        e.step(&Instr::all(Opcode::Copy, Src::Left, Reg::Op));
+        assert_eq!(e.plane(Reg::Op), &[0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn right_read_at_edge_is_zero() {
+        let mut e = engine_with_nb(&[10, 20, 30, 40]);
+        e.step(&Instr::all(Opcode::Copy, Src::Right, Reg::Op));
+        assert_eq!(e.plane(Reg::Op), &[20, 30, 40, 0]);
+    }
+
+    #[test]
+    fn nb_shift_left_uses_concurrent_semantics() {
+        // COPY NB <- LEFT over the whole array must shift, not smear —
+        // the content-movable-memory move (§4.1) built on this engine.
+        let mut e = engine_with_nb(&[1, 2, 3, 4, 5]);
+        e.step(&Instr::all(Opcode::Copy, Src::Left, Reg::Nb));
+        assert_eq!(e.plane(Reg::Nb), &[0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn nb_shift_right_uses_concurrent_semantics() {
+        let mut e = engine_with_nb(&[1, 2, 3, 4, 5]);
+        e.step(&Instr::all(Opcode::Copy, Src::Right, Reg::Nb));
+        assert_eq!(e.plane(Reg::Nb), &[2, 3, 4, 5, 0]);
+    }
+
+    #[test]
+    fn up_down_strided_reads() {
+        let mut e = engine_with_nb(&[0, 1, 2, 3, 4, 5]); // 2 rows x 3 cols
+        e.step(&Instr::all(Opcode::Copy, Src::Up, Reg::Op).stride(3));
+        assert_eq!(e.plane(Reg::Op), &[0, 0, 0, 0, 1, 2]);
+        e.step(&Instr::all(Opcode::Copy, Src::Down, Reg::D0).stride(3));
+        assert_eq!(e.plane(Reg::D0), &[3, 4, 5, 0, 0, 0]);
+    }
+
+    #[test]
+    fn cmp_sets_match_plane_and_counts() {
+        let mut e = engine_with_nb(&[5, -3, 12, 0, 7]);
+        e.step(&Instr::all(Opcode::CmpGt, Src::Imm, Reg::Nb).imm(4));
+        assert_eq!(e.plane(Reg::M), &[1, 0, 1, 0, 1]);
+        assert_eq!(e.match_count(), 3);
+        assert_eq!(e.first_match(), Some(0));
+    }
+
+    #[test]
+    fn conditional_flags_gate_execution() {
+        let mut e = engine_with_nb(&[1, 2, 3, 4]);
+        e.step(&Instr::all(Opcode::CmpGe, Src::Imm, Reg::Nb).imm(3));
+        // M = [0,0,1,1]; add 100 where M
+        e.step(&Instr::all(Opcode::Add, Src::Imm, Reg::Nb).imm(100).flags(F_COND_M));
+        assert_eq!(e.plane(Reg::Nb), &[1, 2, 103, 104]);
+        // add 1 where !M
+        e.step(&Instr::all(Opcode::Add, Src::Imm, Reg::Nb).imm(1).flags(F_COND_NOT_M));
+        assert_eq!(e.plane(Reg::Nb), &[2, 3, 103, 104]);
+    }
+
+    #[test]
+    fn wrapping_arithmetic_matches_i32_semantics() {
+        let mut e = engine_with_nb(&[i32::MAX, i32::MIN]);
+        e.step(&Instr::all(Opcode::Copy, Src::Reg(Reg::Nb), Reg::Op));
+        e.step(&Instr::all(Opcode::Add, Src::Imm, Reg::Op).imm(1));
+        assert_eq!(e.plane(Reg::Op), &[i32::MIN, i32::MIN + 1]);
+        let mut e = engine_with_nb(&[i32::MIN]);
+        e.step(&Instr::all(Opcode::Copy, Src::Reg(Reg::Nb), Reg::Op));
+        e.step(&Instr::all(Opcode::AbsDiff, Src::Imm, Reg::Op).imm(0));
+        assert_eq!(e.plane(Reg::Op), &[i32::MIN]); // |INT_MIN| wraps
+    }
+
+    #[test]
+    fn shr_is_arithmetic() {
+        let mut e = engine_with_nb(&[-8, 8]);
+        e.step(&Instr::all(Opcode::Copy, Src::Reg(Reg::Nb), Reg::Op));
+        e.step(&Instr::all(Opcode::Shr, Src::Imm, Reg::Op).imm(2));
+        assert_eq!(e.plane(Reg::Op), &[-2, 2]);
+    }
+
+    #[test]
+    fn cost_accumulates_bit_cycles() {
+        let mut e = WordEngine::new(4, 8);
+        e.reset_cost();
+        e.step(&Instr::all(Opcode::Add, Src::Imm, Reg::Op).imm(1));
+        e.step(&Instr::all(Opcode::Mul, Src::Imm, Reg::Op).imm(2));
+        assert_eq!(e.cost().macro_cycles, 2);
+        assert_eq!(e.cost().bit_cycles, 24 + 192);
+    }
+
+    #[test]
+    fn out_of_range_enable_is_noop() {
+        let mut e = engine_with_nb(&[1, 2, 3]);
+        e.step(&Instr::all(Opcode::Copy, Src::Imm, Reg::Nb).imm(9).range(5, 10, 1));
+        assert_eq!(e.plane(Reg::Nb), &[1, 2, 3]);
+    }
+}

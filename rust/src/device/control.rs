@@ -1,0 +1,111 @@
+//! Control unit (§3.1, Fig 1).
+//!
+//! Owns the general decoder (Rule 4 enable lines), the match-line readout
+//! structures (Rule 6: priority encoder / parallel counter) and the
+//! silicon-budget report for the whole control path.
+
+use crate::logic::{GateStats, GeneralDecoder, ParallelCounter, PriorityEncoder};
+
+/// The per-device control unit.
+#[derive(Debug, Clone)]
+pub struct ControlUnit {
+    n_addr_bits: usize,
+    decoder: GeneralDecoder,
+}
+
+impl ControlUnit {
+    /// Control unit for `2^n_addr_bits` PEs.
+    pub fn new(n_addr_bits: usize) -> Self {
+        ControlUnit {
+            n_addr_bits,
+            decoder: GeneralDecoder::new(n_addr_bits.min(12)),
+        }
+    }
+
+    /// Number of PEs served.
+    pub fn n_pes(&self) -> usize {
+        1 << self.n_addr_bits
+    }
+
+    /// Rule 4 enable predicate (the decoder's functional hot path).
+    #[inline]
+    pub fn enabled(&self, a: usize, start: usize, end: usize, carry: usize) -> bool {
+        GeneralDecoder::enabled(a, start, end, carry)
+    }
+
+    /// Rule 6: first asserted match line.
+    pub fn priority_first(&self, match_lines: &[bool]) -> Option<usize> {
+        PriorityEncoder::new(match_lines.len()).first(match_lines)
+    }
+
+    /// Rule 6: asserted-line count.
+    pub fn parallel_count(&self, match_lines: &[bool]) -> usize {
+        ParallelCounter::new(match_lines.len()).count(match_lines)
+    }
+
+    /// Silicon budget of the control path (decoder gates are measured on a
+    /// ≤12-bit decoder and scaled: the structures are line-linear).
+    pub fn silicon_budget(&self) -> ControlBudget {
+        let measured_bits = self.n_addr_bits.min(12);
+        let dec = self.decoder.stats();
+        let scale = (1u64 << self.n_addr_bits) / (1u64 << measured_bits);
+        let n = 1usize << self.n_addr_bits;
+        ControlBudget {
+            decoder: GateStats {
+                gates: dec.gates * scale,
+                depth: dec.depth + (self.n_addr_bits - measured_bits) as u32,
+            },
+            priority_encoder: PriorityEncoder::new(n).stats(),
+            parallel_counter: ParallelCounter::new(n).stats(),
+        }
+    }
+}
+
+/// Control-path silicon budget report.
+#[derive(Debug, Clone, Copy)]
+pub struct ControlBudget {
+    /// General decoder (Rule 4).
+    pub decoder: GateStats,
+    /// Priority encoder (Rule 6 enumeration).
+    pub priority_encoder: GateStats,
+    /// Parallel counter (Rule 6 counting).
+    pub parallel_counter: GateStats,
+}
+
+impl ControlBudget {
+    /// Total two-input-equivalent gates.
+    pub fn total_gates(&self) -> u64 {
+        self.decoder.gates + self.priority_encoder.gates + self.parallel_counter.gates
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enable_predicate_delegates_to_decoder() {
+        let cu = ControlUnit::new(8);
+        assert!(cu.enabled(12, 0, 255, 4));
+        assert!(!cu.enabled(13, 0, 255, 4));
+        assert_eq!(cu.n_pes(), 256);
+    }
+
+    #[test]
+    fn readout_structures() {
+        let cu = ControlUnit::new(4);
+        let lines = [false, false, true, false, true, false, false, false,
+                     false, false, false, false, false, false, false, true];
+        assert_eq!(cu.priority_first(&lines), Some(2));
+        assert_eq!(cu.parallel_count(&lines), 3);
+    }
+
+    #[test]
+    fn budget_scales_with_device_size() {
+        let small = ControlUnit::new(10).silicon_budget();
+        let large = ControlUnit::new(20).silicon_budget();
+        assert!(large.total_gates() > small.total_gates() * 500);
+        // depth grows far slower than line count (1024x more lines here)
+        assert!(large.decoder.depth <= 2 * small.decoder.depth + 20);
+    }
+}

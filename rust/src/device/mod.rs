@@ -1,0 +1,18 @@
+//! The CPM device family (§3–§7): content movable, searchable, comparable
+//! and computable memories, the control unit, and the Rule 8 bus protocol.
+
+pub mod bus;
+pub mod comparable;
+pub mod computable;
+pub mod control;
+pub mod movable;
+pub mod mutable_search;
+pub mod searchable;
+
+pub use bus::{BusDevice, CpmBusAdapter, RamDevice};
+pub use comparable::{CmpCode, Combine, CompareOp, ContentComparableMemory, FieldSpec};
+pub use computable::{ComputableMemory, Instr, Opcode, Reg, Src, TraceBuilder};
+pub use control::ControlUnit;
+pub use movable::{ContentMovableMemory, Dir};
+pub use mutable_search::MutableSearchableMemory;
+pub use searchable::{ContentSearchableMemory, MatchCode};

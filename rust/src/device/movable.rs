@@ -1,0 +1,297 @@
+//! Content movable memory (§4, Fig 5).
+//!
+//! The simplest CPM member: one addressable byte register per PE plus a
+//! one-clock temporary register (DRAM cell). A 2-bit concurrent bus selects
+//! (1) the left/right multiplexer and (2) which register to copy, so the
+//! content of every addressable register in an activation range moves one
+//! PE left or right **concurrently in ~1 instruction cycle** — the basis of
+//! copy-free insertion/deletion (E2) and of local refresh (consecutive
+//! right+left move).
+
+use crate::cycles::ConcurrentCost;
+use crate::error::{CpmError, Result};
+
+/// A content movable memory of byte-wide PEs.
+#[derive(Debug, Clone)]
+pub struct ContentMovableMemory {
+    cells: Vec<u8>,
+    cost: ConcurrentCost,
+    /// Concurrent move cycles since the last refresh (DRAM retention
+    /// bookkeeping — §4.1's local-refresh argument).
+    since_refresh: u64,
+}
+
+/// Move direction on the concurrent bus (the multiplexer select bit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    /// Every PE copies its *right* neighbor: content moves left.
+    Left,
+    /// Every PE copies its *left* neighbor: content moves right.
+    Right,
+}
+
+impl ContentMovableMemory {
+    /// Device with `size` addressable byte registers.
+    pub fn new(size: usize) -> Self {
+        ContentMovableMemory {
+            cells: vec![0; size],
+            cost: ConcurrentCost::default(),
+            since_refresh: 0,
+        }
+    }
+
+    /// Device size in bytes.
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// True if the device has no cells.
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Conventional (exclusive-bus) read — Rule 2 backward compatibility.
+    pub fn read(&mut self, addr: usize) -> Result<u8> {
+        let v = *self
+            .cells
+            .get(addr)
+            .ok_or(CpmError::AddressOutOfRange {
+                addr,
+                size: self.cells.len(),
+            })?;
+        self.cost += ConcurrentCost::exclusive(1);
+        Ok(v)
+    }
+
+    /// Conventional (exclusive-bus) write.
+    pub fn write(&mut self, addr: usize, value: u8) -> Result<()> {
+        if addr >= self.cells.len() {
+            return Err(CpmError::AddressOutOfRange {
+                addr,
+                size: self.cells.len(),
+            });
+        }
+        self.cells[addr] = value;
+        self.cost += ConcurrentCost::exclusive(1);
+        Ok(())
+    }
+
+    /// Bulk exclusive write (system-bus streaming; counted per word).
+    pub fn write_slice(&mut self, addr: usize, data: &[u8]) -> Result<()> {
+        if addr + data.len() > self.cells.len() {
+            return Err(CpmError::AddressOutOfRange {
+                addr: addr + data.len(),
+                size: self.cells.len(),
+            });
+        }
+        self.cells[addr..addr + data.len()].copy_from_slice(data);
+        self.cost += ConcurrentCost::exclusive(data.len() as u64);
+        Ok(())
+    }
+
+    /// Read a slice (exclusive, counted per word).
+    pub fn read_slice(&mut self, addr: usize, len: usize) -> Result<Vec<u8>> {
+        if addr + len > self.cells.len() {
+            return Err(CpmError::AddressOutOfRange {
+                addr: addr + len,
+                size: self.cells.len(),
+            });
+        }
+        self.cost += ConcurrentCost::exclusive(len as u64);
+        Ok(self.cells[addr..addr + len].to_vec())
+    }
+
+    /// Concurrent move (the device's one concurrent instruction): every
+    /// activated PE in `[start, end]` copies its neighbor's addressable
+    /// register through the temporary register — one instruction cycle
+    /// regardless of range size. PEs at the range edge copy from *outside*
+    /// the range (the neighbor PE still drives its register output).
+    pub fn concurrent_move(&mut self, start: usize, end: usize, dir: Dir) -> Result<()> {
+        let n = self.cells.len();
+        if start > end || end >= n {
+            return Err(CpmError::InvalidRange {
+                start,
+                end,
+                carry: 1,
+                pes: n,
+            });
+        }
+        // Two clock phases (neighbor -> temp, temp -> addressable) = one
+        // broadcast instruction.
+        self.cost += ConcurrentCost::broadcast(1, 2);
+        self.since_refresh += 1;
+        match dir {
+            Dir::Left => {
+                // cell[i] = old cell[i+1]; the top of range reads beyond it.
+                for i in start..=end {
+                    self.cells[i] = if i + 1 < n { self.cells[i + 1] } else { 0 };
+                }
+            }
+            Dir::Right => {
+                for i in (start..=end).rev() {
+                    self.cells[i] = if i >= 1 { self.cells[i - 1] } else { 0 };
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Open a gap of `len` bytes at `addr` by `len` concurrent right-moves
+    /// of the tail `[addr, used)`. ~len instruction cycles independent of
+    /// how much data moves (vs the baseline's O(used - addr) memmove).
+    pub fn open_gap(&mut self, addr: usize, len: usize, used: usize) -> Result<()> {
+        if used + len > self.cells.len() || addr > used {
+            return Err(CpmError::Object(format!(
+                "open_gap addr={addr} len={len} used={used} overflows device"
+            )));
+        }
+        for k in 0..len {
+            if used + k > addr {
+                self.concurrent_move(addr + 1, used + k, Dir::Right)?;
+            }
+            self.cells[addr] = 0;
+        }
+        Ok(())
+    }
+
+    /// Close a gap of `len` bytes at `addr` by `len` concurrent left-moves.
+    pub fn close_gap(&mut self, addr: usize, len: usize, used: usize) -> Result<()> {
+        if addr + len > used || used > self.cells.len() {
+            return Err(CpmError::Object(format!(
+                "close_gap addr={addr} len={len} used={used} out of bounds"
+            )));
+        }
+        for _ in 0..len {
+            if addr < used - 1 {
+                self.concurrent_move(addr, used - 2, Dir::Left)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Local refresh (§4.1): one right + one left move over the used range
+    /// rewrites every DRAM cell. Costs ~2 instruction cycles total.
+    pub fn refresh(&mut self, used: usize) -> Result<()> {
+        if used < 1 {
+            self.since_refresh = 0;
+            return Ok(());
+        }
+        if used >= self.cells.len() {
+            return Err(CpmError::Object(
+                "refresh needs one spare PE beyond the used range".into(),
+            ));
+        }
+        // Right then left: contents shift into [1, used] (rewriting every
+        // cell there) and back into [0, used-1] — content-preserving.
+        self.concurrent_move(1, used, Dir::Right)?;
+        self.concurrent_move(0, used - 1, Dir::Left)?;
+        self.since_refresh = 0;
+        Ok(())
+    }
+
+    /// Concurrent move cycles since the last refresh.
+    pub fn cycles_since_refresh(&self) -> u64 {
+        self.since_refresh
+    }
+
+    /// Accumulated cost.
+    pub fn cost(&self) -> ConcurrentCost {
+        self.cost
+    }
+
+    /// Reset cost counters.
+    pub fn reset_cost(&mut self) {
+        self.cost = ConcurrentCost::default();
+    }
+
+    /// Raw contents (test/debug).
+    pub fn cells(&self) -> &[u8] {
+        &self.cells
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev(data: &[u8], size: usize) -> ContentMovableMemory {
+        let mut d = ContentMovableMemory::new(size);
+        d.write_slice(0, data).unwrap();
+        d
+    }
+
+    #[test]
+    fn ram_compatibility_read_write() {
+        let mut d = ContentMovableMemory::new(16);
+        d.write(3, 0xAB).unwrap();
+        assert_eq!(d.read(3).unwrap(), 0xAB);
+        assert!(d.read(16).is_err());
+        assert!(d.write(99, 1).is_err());
+    }
+
+    #[test]
+    fn move_left_is_one_cycle() {
+        let mut d = dev(&[1, 2, 3, 4, 5], 8);
+        d.reset_cost();
+        d.concurrent_move(0, 3, Dir::Left).unwrap();
+        assert_eq!(&d.cells()[..5], &[2, 3, 4, 5, 5]);
+        assert_eq!(d.cost().macro_cycles, 1);
+    }
+
+    #[test]
+    fn move_right_is_one_cycle() {
+        let mut d = dev(&[1, 2, 3, 4, 5], 8);
+        d.reset_cost();
+        d.concurrent_move(1, 4, Dir::Right).unwrap();
+        assert_eq!(&d.cells()[..6], &[1, 1, 2, 3, 4, 0]);
+        assert_eq!(d.cost().macro_cycles, 1);
+    }
+
+    #[test]
+    fn open_gap_shifts_tail_in_len_cycles() {
+        let mut d = dev(b"HELLOWORLD", 16);
+        d.reset_cost();
+        d.open_gap(5, 3, 10).unwrap();
+        assert_eq!(&d.cells()[..13], b"HELLO\0\0\0WORLD");
+        // ~len concurrent cycles, independent of tail size
+        assert_eq!(d.cost().macro_cycles, 3);
+    }
+
+    #[test]
+    fn close_gap_deletes_in_len_cycles() {
+        let mut d = dev(b"HELLOXXXWORLD", 16);
+        d.reset_cost();
+        d.close_gap(5, 3, 13).unwrap();
+        assert_eq!(&d.cells()[..10], b"HELLOWORLD");
+        assert_eq!(d.cost().macro_cycles, 3);
+    }
+
+    #[test]
+    fn insert_then_delete_roundtrip() {
+        let mut d = dev(b"ABCDEF", 16);
+        d.open_gap(2, 2, 6).unwrap();
+        d.write_slice(2, b"xy").unwrap();
+        assert_eq!(&d.cells()[..8], b"ABxyCDEF");
+        d.close_gap(2, 2, 8).unwrap();
+        assert_eq!(&d.cells()[..6], b"ABCDEF");
+    }
+
+    #[test]
+    fn refresh_preserves_contents_and_costs_two_cycles() {
+        let mut d = dev(b"REFRESHME", 12);
+        d.reset_cost();
+        d.refresh(9).unwrap();
+        assert_eq!(&d.cells()[..9], b"REFRESHME");
+        assert_eq!(d.cost().macro_cycles, 2);
+        assert_eq!(d.cycles_since_refresh(), 0);
+    }
+
+    #[test]
+    fn invalid_ranges_error() {
+        let mut d = ContentMovableMemory::new(4);
+        assert!(d.concurrent_move(2, 1, Dir::Left).is_err());
+        assert!(d.concurrent_move(0, 4, Dir::Left).is_err());
+        assert!(d.open_gap(0, 3, 2).is_err());
+        assert!(d.close_gap(3, 3, 4).is_err());
+    }
+}

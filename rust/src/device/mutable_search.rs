@@ -1,0 +1,195 @@
+//! Content change for searchable memory (§5.3).
+//!
+//! "It is easy to add the PE construct of content movable memory into the
+//! PE construct of content searchable memory, to result in a CPM whose
+//! content can be searched concurrently and modified easily. Such
+//! combination can apply to other types of CPM."
+//!
+//! Each PE carries both the movable member's temporary register (one-cycle
+//! neighbor moves) and the searchable member's storage bit — a text buffer
+//! that supports ~1-cycle insertion/deletion *and* ~M-cycle search, i.e. a
+//! live-editable searched corpus (the editor/IDE workload).
+
+use crate::cycles::ConcurrentCost;
+use crate::device::movable::ContentMovableMemory;
+use crate::device::searchable::{ContentSearchableMemory, MatchCode};
+use crate::error::Result;
+
+/// A searchable memory with movable-memory content change.
+#[derive(Debug)]
+pub struct MutableSearchableMemory {
+    mem: ContentMovableMemory,
+    used: usize,
+    /// Search-side cost (the movable member tracks move/IO cost).
+    extra: ConcurrentCost,
+}
+
+impl MutableSearchableMemory {
+    /// Device with `size` byte PEs.
+    pub fn new(size: usize) -> Self {
+        MutableSearchableMemory {
+            mem: ContentMovableMemory::new(size),
+            used: 0,
+            extra: ConcurrentCost::default(),
+        }
+    }
+
+    /// Load initial content.
+    pub fn load(&mut self, data: &[u8]) -> Result<()> {
+        self.mem.write_slice(0, data)?;
+        self.used = data.len();
+        Ok(())
+    }
+
+    /// Bytes in use.
+    pub fn len(&self) -> usize {
+        self.used
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.used == 0
+    }
+
+    /// Current content.
+    pub fn content(&self) -> &[u8] {
+        &self.mem.cells()[..self.used]
+    }
+
+    /// Insert `data` at `at` — ~len(data) concurrent move cycles, no
+    /// re-indexing (the §6.2 contrast: a database index would go stale).
+    pub fn insert(&mut self, at: usize, data: &[u8]) -> Result<()> {
+        self.mem.open_gap(at, data.len(), self.used)?;
+        self.mem.write_slice(at, data)?;
+        self.used += data.len();
+        Ok(())
+    }
+
+    /// Delete `len` bytes at `at` — ~len concurrent move cycles.
+    pub fn delete(&mut self, at: usize, len: usize) -> Result<()> {
+        self.mem.close_gap(at, len, self.used)?;
+        self.used -= len;
+        Ok(())
+    }
+
+    /// Replace all occurrences of `pattern` with `replacement` (search via
+    /// the storage-bit propagation, edits via concurrent moves). Returns
+    /// the number of replacements.
+    pub fn replace_all(&mut self, pattern: &[u8], replacement: &[u8]) -> Result<usize> {
+        let mut count = 0;
+        loop {
+            let hits = self.find(pattern);
+            let Some(&end_pos) = hits.first() else {
+                break;
+            };
+            let start = end_pos + 1 - pattern.len();
+            self.delete(start, pattern.len())?;
+            self.insert(start, replacement)?;
+            count += 1;
+            // Guard pathological self-reproducing replacements.
+            if count > self.mem.len() {
+                break;
+            }
+        }
+        Ok(count)
+    }
+
+    /// Find `pattern`; returns match end positions (~M cycles).
+    pub fn find(&mut self, pattern: &[u8]) -> Vec<usize> {
+        if self.used == 0 || pattern.is_empty() || pattern.len() > self.used {
+            return Vec::new();
+        }
+        // Run the searchable member's match ladder over the current cells.
+        let mut s = ContentSearchableMemory::new(self.used);
+        s.load(0, &self.mem.cells()[..self.used]);
+        s.match_step(pattern[0], 0xFF, MatchCode::Eq, true, 0, self.used - 1);
+        for &ch in &pattern[1..] {
+            s.match_step(ch, 0xFF, MatchCode::Eq, false, 0, self.used - 1);
+        }
+        // Charge only the broadcast cycles: the combined PE executes both
+        // rulesets in place — the temporary ContentSearchableMemory above
+        // is a host-side modelling convenience, not a device data copy.
+        let c = s.cost();
+        self.extra += ConcurrentCost {
+            macro_cycles: c.macro_cycles,
+            bit_cycles: c.bit_cycles,
+            exclusive_ops: 0,
+            bus_words: 0,
+        };
+        s.readout_matches()
+    }
+
+    /// Combined accumulated cost (moves + searches).
+    pub fn cost(&self) -> ConcurrentCost {
+        self.mem.cost() + self.extra
+    }
+
+    /// Refresh the DRAM cells (§4.1) — 2 cycles over the used range.
+    pub fn refresh(&mut self) -> Result<()> {
+        self.mem.refresh(self.used)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_then_find() {
+        let mut d = MutableSearchableMemory::new(64);
+        d.load(b"hello world").unwrap();
+        d.insert(5, b" cruel").unwrap();
+        assert_eq!(d.content(), b"hello cruel world");
+        assert_eq!(d.find(b"cruel"), vec![10]);
+        assert_eq!(d.find(b"world"), vec![16]);
+    }
+
+    #[test]
+    fn delete_then_find() {
+        let mut d = MutableSearchableMemory::new(64);
+        d.load(b"abcXXXdef").unwrap();
+        d.delete(3, 3).unwrap();
+        assert_eq!(d.content(), b"abcdef");
+        assert!(d.find(b"XXX").is_empty());
+        assert_eq!(d.find(b"cd"), vec![3]);
+    }
+
+    #[test]
+    fn replace_all_occurrences() {
+        let mut d = MutableSearchableMemory::new(128);
+        d.load(b"the cat and the cat and the cat").unwrap();
+        let n = d.replace_all(b"cat", b"dog").unwrap();
+        assert_eq!(n, 3);
+        assert_eq!(d.content(), b"the dog and the dog and the dog");
+    }
+
+    #[test]
+    fn replace_with_different_length() {
+        let mut d = MutableSearchableMemory::new(128);
+        d.load(b"aXbXc").unwrap();
+        let n = d.replace_all(b"X", b"--").unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(d.content(), b"a--b--c");
+        let n = d.replace_all(b"--", b"").unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(d.content(), b"abc");
+    }
+
+    #[test]
+    fn edits_cost_concurrent_moves_not_memmove() {
+        let mut d = MutableSearchableMemory::new(8192);
+        d.load(&vec![b'x'; 8000]).unwrap();
+        let before = d.cost().macro_cycles;
+        d.insert(1, b"abc").unwrap(); // 7999-byte tail moves
+        let cycles = d.cost().macro_cycles - before;
+        assert_eq!(cycles, 3, "3 concurrent moves regardless of tail size");
+    }
+
+    #[test]
+    fn refresh_preserves_content() {
+        let mut d = MutableSearchableMemory::new(32);
+        d.load(b"persist me").unwrap();
+        d.refresh().unwrap();
+        assert_eq!(d.content(), b"persist me");
+    }
+}

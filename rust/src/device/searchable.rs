@@ -1,0 +1,244 @@
+//! Content searchable memory (§5, Fig 6).
+//!
+//! A content-addressable memory with the *smallest grain* (one byte per PE)
+//! plus Rule 7 local connectivity, which removes the length limit on the
+//! substring and the alignment limit on the content: a substring of length
+//! M is found in ~M concurrent instruction cycles by matching one character
+//! per cycle and propagating the partial-match bit along the string.
+//!
+//! Convention note: the paper's Fig 6 propagates the bit from the "right
+//! neighboring PE" under its layout convention (significance decreasing
+//! left→right, §6.1). With element addresses increasing left→right (the
+//! §7.3 convention this repo uses throughout), the previous character of an
+//! occurrence lives at the *lower* address, so the bit propagates from the
+//! left neighbor. See DESIGN.md §ISA-formalization.
+
+use crate::cycles::ConcurrentCost;
+
+/// Comparison code on the concurrent bus (Fig 6): `=` or `≠`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MatchCode {
+    /// Assert where the masked byte equals the datum.
+    Eq,
+    /// Assert where the masked byte differs from the datum.
+    Ne,
+}
+
+/// A content searchable memory of byte-wide PEs with a storage bit each.
+#[derive(Debug, Clone)]
+pub struct ContentSearchableMemory {
+    cells: Vec<u8>,
+    bits: Vec<bool>,
+    cost: ConcurrentCost,
+}
+
+impl ContentSearchableMemory {
+    /// Device with `size` byte registers.
+    pub fn new(size: usize) -> Self {
+        ContentSearchableMemory {
+            cells: vec![0; size],
+            bits: vec![false; size],
+            cost: ConcurrentCost::default(),
+        }
+    }
+
+    /// Load content at `addr` (exclusive-bus streaming, counted per byte).
+    pub fn load(&mut self, addr: usize, data: &[u8]) {
+        assert!(addr + data.len() <= self.cells.len());
+        self.cells[addr..addr + data.len()].copy_from_slice(data);
+        self.cost += ConcurrentCost::exclusive(data.len() as u64);
+    }
+
+    /// Device size.
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// True if the device has no cells.
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// One concurrent match step (the device's broadcast instruction):
+    /// every PE in `[start, end]` compares its masked byte with `datum`
+    /// under `code`; with `self_code` the result goes straight into the
+    /// storage bit, otherwise it is AND-combined with the *previous*
+    /// position's storage bit (substring propagation).
+    #[allow(clippy::too_many_arguments)]
+    pub fn match_step(
+        &mut self,
+        datum: u8,
+        mask: u8,
+        code: MatchCode,
+        self_code: bool,
+        start: usize,
+        end: usize,
+    ) {
+        let end = end.min(self.cells.len().saturating_sub(1));
+        self.cost += ConcurrentCost::broadcast(1, 1);
+        if start > end {
+            return;
+        }
+        let prev: Vec<bool> = self.bits.clone(); // concurrent read of neighbors
+        for i in start..=end {
+            let eq = (self.cells[i] & mask) == (datum & mask);
+            let r = match code {
+                MatchCode::Eq => eq,
+                MatchCode::Ne => !eq,
+            };
+            self.bits[i] = if self_code {
+                r
+            } else {
+                r && i > start && prev[i - 1]
+            };
+        }
+    }
+
+    /// Find all occurrences of `pattern` in `[start, end]`; returns the
+    /// *end* positions of matches (a true storage bit after the last
+    /// character, §5.1). ~M instruction cycles for an M-byte pattern,
+    /// independent of the content length.
+    pub fn find_substring(&mut self, pattern: &[u8], start: usize, end: usize) -> Vec<usize> {
+        if pattern.is_empty() {
+            return Vec::new();
+        }
+        self.match_step(pattern[0], 0xFF, MatchCode::Eq, true, start, end);
+        for &ch in &pattern[1..] {
+            self.match_step(ch, 0xFF, MatchCode::Eq, false, start, end);
+        }
+        self.readout_matches()
+    }
+
+    /// Masked search: `None` pattern bytes are "do not care" (§5.1's
+    /// datum+mask trick).
+    pub fn find_masked(
+        &mut self,
+        pattern: &[Option<u8>],
+        start: usize,
+        end: usize,
+    ) -> Vec<usize> {
+        if pattern.is_empty() {
+            return Vec::new();
+        }
+        let step = |p: Option<u8>| -> (u8, u8) {
+            match p {
+                Some(b) => (b, 0xFF),
+                None => (0, 0x00), // mask 0: every byte matches
+            }
+        };
+        let (d0, m0) = step(pattern[0]);
+        self.match_step(d0, m0, MatchCode::Eq, true, start, end);
+        for &p in &pattern[1..] {
+            let (d, m) = step(p);
+            self.match_step(d, m, MatchCode::Eq, false, start, end);
+        }
+        self.readout_matches()
+    }
+
+    /// Rule 6 readout: all PEs asserting their match line (priority-encoder
+    /// enumeration; one cycle plus one per reported match).
+    pub fn readout_matches(&mut self) -> Vec<usize> {
+        let hits: Vec<usize> = self
+            .bits
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &b)| if b { Some(i) } else { None })
+            .collect();
+        self.cost += ConcurrentCost::broadcast(1, 1);
+        self.cost += ConcurrentCost::exclusive(hits.len() as u64);
+        hits
+    }
+
+    /// Number of matches via the parallel counter (one cycle).
+    pub fn match_count(&mut self) -> usize {
+        self.cost += ConcurrentCost::broadcast(1, 1);
+        self.bits.iter().filter(|&&b| b).count()
+    }
+
+    /// Accumulated cost.
+    pub fn cost(&self) -> ConcurrentCost {
+        self.cost
+    }
+
+    /// Reset cost counters.
+    pub fn reset_cost(&mut self) {
+        self.cost = ConcurrentCost::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loaded(content: &[u8]) -> ContentSearchableMemory {
+        let mut d = ContentSearchableMemory::new(content.len());
+        d.load(0, content);
+        d
+    }
+
+    #[test]
+    fn finds_all_occurrences_unaligned() {
+        let mut d = loaded(b"abracadabra");
+        let hits = d.find_substring(b"abra", 0, 10);
+        // end positions of "abra" at starts 0 and 7
+        assert_eq!(hits, vec![3, 10]);
+    }
+
+    #[test]
+    fn single_char_pattern() {
+        let mut d = loaded(b"mississippi");
+        let hits = d.find_substring(b"s", 0, 10);
+        assert_eq!(hits, vec![2, 3, 5, 6]);
+    }
+
+    #[test]
+    fn overlapping_matches_found() {
+        let mut d = loaded(b"aaaa");
+        let hits = d.find_substring(b"aa", 0, 3);
+        assert_eq!(hits, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn no_match_returns_empty() {
+        let mut d = loaded(b"hello world");
+        assert!(d.find_substring(b"xyz", 0, 10).is_empty());
+        assert!(d.find_substring(b"", 0, 10).is_empty());
+    }
+
+    #[test]
+    fn cost_is_pattern_length_plus_readout() {
+        let mut d = loaded(&vec![b'x'; 4096]);
+        d.reset_cost();
+        d.find_substring(b"needle", 0, 4095);
+        // ~M cycles: 6 match steps + 1 readout, independent of N=4096
+        assert_eq!(d.cost().macro_cycles, 7);
+    }
+
+    #[test]
+    fn masked_dont_care_matches() {
+        let mut d = loaded(b"cat cot cut");
+        let hits = d.find_masked(&[Some(b'c'), None, Some(b't')], 0, 10);
+        assert_eq!(hits, vec![2, 6, 10]);
+    }
+
+    #[test]
+    fn range_restricted_search() {
+        let mut d = loaded(b"abcabcabc");
+        // Only search the middle third.
+        let hits = d.find_substring(b"abc", 3, 5);
+        assert_eq!(hits, vec![5]);
+    }
+
+    #[test]
+    fn ne_code_matches_inverse() {
+        let mut d = loaded(b"aba");
+        d.match_step(b'a', 0xFF, MatchCode::Ne, true, 0, 2);
+        assert_eq!(d.readout_matches(), vec![1]);
+    }
+
+    #[test]
+    fn pattern_longer_than_content() {
+        let mut d = loaded(b"ab");
+        assert!(d.find_substring(b"abc", 0, 1).is_empty());
+    }
+}

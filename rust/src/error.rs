@@ -1,0 +1,51 @@
+//! Error types for the CPM library.
+
+use thiserror::Error;
+
+/// Library-wide error type.
+#[derive(Debug, Error)]
+pub enum CpmError {
+    /// An activation range (Rule 4) that does not fit the device.
+    #[error("invalid activation range: start={start} end={end} carry={carry} (device has {pes} PEs)")]
+    InvalidRange {
+        start: usize,
+        end: usize,
+        carry: usize,
+        pes: usize,
+    },
+
+    /// Addressed access outside the device.
+    #[error("address {addr} out of range (device has {size} addressable registers)")]
+    AddressOutOfRange { addr: usize, size: usize },
+
+    /// Register selector outside the PE register file.
+    #[error("invalid register selector {sel}")]
+    InvalidRegister { sel: i32 },
+
+    /// Malformed macro instruction.
+    #[error("invalid instruction: {0}")]
+    InvalidInstruction(String),
+
+    /// Object-manager failures (content movable memory, §4.2).
+    #[error("object error: {0}")]
+    Object(String),
+
+    /// SQL engine failures (§6.2).
+    #[error("sql error: {0}")]
+    Sql(String),
+
+    /// PJRT runtime failures (artifact loading / execution).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Coordinator / scheduling failures.
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// I/O while loading artifacts or workloads.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, CpmError>;

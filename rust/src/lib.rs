@@ -1,0 +1,28 @@
+//! # Concurrent Processing Memory (CPM)
+//!
+//! Production-grade reproduction of *Concurrent Processing Memory*
+//! (Chengpu Wang, 2006): an in-memory finest-grain massive-SIMD memory
+//! family, built as a cycle-level simulator with the paper's four family
+//! members, every concurrent algorithm of §4–§7, the serial bus-sharing
+//! baselines, and a coordinator that serves application requests against
+//! the devices.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod algos;
+pub mod baseline;
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod cycles;
+pub mod device;
+pub mod error;
+pub mod logic;
+pub mod physics;
+pub mod runtime;
+pub mod sql;
+pub mod util;
+
+pub use cycles::{ClaimPoint, ConcurrentCost, SerialCost};
+pub use error::{CpmError, Result};

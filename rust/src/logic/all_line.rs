@@ -1,0 +1,119 @@
+//! All-line decoder (§3.3, Eq 3-3, Fig 3).
+//!
+//! Activates every bit output whose address is less than or equal to the
+//! input address: `F[a] = (a <= E)`. Built by the paper's recursion:
+//!
+//! ```text
+//! F[0,1] = 1                      F[1,1] = E[0]
+//! F[0·a, N+1] = F[a,N] + E[N]     F[1·a, N+1] = F[a,N] · E[N]
+//! ```
+
+use super::gates::{GateStats, Netlist, NodeId};
+
+/// All-line decoder over `2^n_addr_bits` output lines.
+#[derive(Debug, Clone)]
+pub struct AllLineDecoder {
+    n_addr_bits: usize,
+}
+
+impl AllLineDecoder {
+    /// A decoder for an `n_addr_bits`-bit input address.
+    pub fn new(n_addr_bits: usize) -> Self {
+        assert!(n_addr_bits >= 1 && n_addr_bits <= 24);
+        AllLineDecoder { n_addr_bits }
+    }
+
+    /// Number of output lines.
+    pub fn n_lines(&self) -> usize {
+        1 << self.n_addr_bits
+    }
+
+    /// Functional model: `F[a] = (a <= e)`.
+    pub fn eval(&self, e: usize) -> Vec<bool> {
+        (0..self.n_lines()).map(|a| a <= e).collect()
+    }
+
+    /// Build the Eq 3-3 recursion into `net`. `e_bits` LSB-first.
+    pub fn build(&self, net: &mut Netlist, e_bits: &[NodeId]) -> Vec<NodeId> {
+        assert_eq!(e_bits.len(), self.n_addr_bits);
+        // Base: width 1 -> [F0, F1] = [1, E[0]]
+        let mut lines = vec![net.constant(true), e_bits[0]];
+        for k in 1..self.n_addr_bits {
+            let ek = e_bits[k];
+            let mut next = Vec::with_capacity(lines.len() * 2);
+            // Low half (top address bit 0): F OR E[k]
+            for &f in &lines {
+                next.push(net.or(vec![f, ek]));
+            }
+            // High half (top address bit 1): F AND E[k]
+            for &f in &lines {
+                next.push(net.and(vec![f, ek]));
+            }
+            lines = next;
+        }
+        lines
+    }
+
+    /// Standalone netlist (inputs = address bits LSB-first).
+    pub fn netlist(&self) -> Netlist {
+        let mut net = Netlist::new();
+        let e_bits = net.inputs(self.n_addr_bits);
+        let outs = self.build(&mut net, &e_bits);
+        for o in outs {
+            net.output(o);
+        }
+        net
+    }
+
+    /// Silicon budget.
+    pub fn stats(&self) -> GateStats {
+        self.netlist().stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::gates::exhaustive;
+
+    #[test]
+    fn functional_is_leq_threshold() {
+        let d = AllLineDecoder::new(3);
+        assert_eq!(
+            d.eval(0),
+            vec![true, false, false, false, false, false, false, false]
+        );
+        assert_eq!(
+            d.eval(5),
+            vec![true, true, true, true, true, true, false, false]
+        );
+        assert!(d.eval(7).iter().all(|&b| b));
+    }
+
+    #[test]
+    fn gate_recursion_matches_functional_exhaustively() {
+        for bits in 1..=5 {
+            let d = AllLineDecoder::new(bits);
+            let net = d.netlist();
+            exhaustive(&net, |e, out| {
+                assert_eq!(out, &d.eval(e as usize)[..], "bits={bits} e={e}");
+            });
+        }
+    }
+
+    #[test]
+    fn gate_count_linear_in_lines() {
+        // Eq 3-3 doubles the line count per added bit with one gate per
+        // line: gates ≈ 2^(N+1). Check the growth is linear in lines.
+        let g3 = AllLineDecoder::new(3).stats().gates;
+        let g4 = AllLineDecoder::new(4).stats().gates;
+        assert!(g4 >= 2 * g3 - 4 && g4 <= 2 * g3 + 8, "g3={g3} g4={g4}");
+    }
+
+    #[test]
+    fn depth_linear_in_addr_bits() {
+        // One gate level per recursion step.
+        let d = AllLineDecoder::new(6).stats().depth;
+        assert!(d <= 6, "depth {d} exceeds one level per bit");
+    }
+}

@@ -1,0 +1,163 @@
+//! Carry-pattern generator (§3.3, Eq 3-1).
+//!
+//! Inputs a *carry number* `C` (the array-item size of Rule 4) and asserts
+//! every bit output whose address is an increment of `C` from zero:
+//! `D[0] = 1`, `D[a] = (a mod C == 0)` for `a > 0`. The paper gives the 3/8
+//! case explicitly (Eq 3-1): each `D[a]` is the minterm `C == a` OR'd with
+//! every `D[d]` for proper divisors `d` of `a` — i.e. two-level
+//! product-of-sum logic chosen for expansibility.
+
+use super::gates::{GateStats, Netlist, NodeId};
+
+/// Carry-pattern generator over `n_addr_bits` of carry-number input and
+/// `2^n_addr_bits` bit outputs.
+#[derive(Debug, Clone)]
+pub struct CarryPatternGenerator {
+    n_addr_bits: usize,
+}
+
+impl CarryPatternGenerator {
+    /// A generator for `2^n_addr_bits` output lines.
+    pub fn new(n_addr_bits: usize) -> Self {
+        assert!(n_addr_bits >= 1 && n_addr_bits <= 24);
+        CarryPatternGenerator { n_addr_bits }
+    }
+
+    /// Number of output lines.
+    pub fn n_lines(&self) -> usize {
+        1 << self.n_addr_bits
+    }
+
+    /// Functional model: the asserted output pattern for carry number `c`.
+    ///
+    /// `c == 0` is outside the paper's spec (an item of size zero); we
+    /// define it as only `D[0]` asserted, matching Eq 3-1 where no minterm
+    /// fires.
+    pub fn eval(&self, c: usize) -> Vec<bool> {
+        let n = self.n_lines();
+        (0..n)
+            .map(|a| a == 0 || (c > 0 && a % c == 0))
+            .collect()
+    }
+
+    /// Build the two-level gate structure of Eq 3-1 into `net`, returning
+    /// the output nodes. `c_bits` are the carry-number input bits
+    /// (LSB first), width `n_addr_bits`.
+    pub fn build(&self, net: &mut Netlist, c_bits: &[NodeId]) -> Vec<NodeId> {
+        assert_eq!(c_bits.len(), self.n_addr_bits);
+        let n = self.n_lines();
+        let inverted: Vec<NodeId> = c_bits.iter().map(|&b| net.not(b)).collect();
+
+        // Minterm `C == a` for each line address a.
+        let minterm = |net: &mut Netlist, a: usize| -> NodeId {
+            let lits: Vec<NodeId> = (0..self.n_addr_bits)
+                .map(|k| {
+                    if (a >> k) & 1 == 1 {
+                        c_bits[k]
+                    } else {
+                        inverted[k]
+                    }
+                })
+                .collect();
+            net.and(lits)
+        };
+
+        let mut outs: Vec<NodeId> = Vec::with_capacity(n);
+        outs.push(net.constant(true)); // D[0] = 1
+        for a in 1..n {
+            // D[a] = (C == a) + Σ D[d] over proper divisors d of a, d >= 1.
+            // (Eq 3-1's accumulated divisor terms, e.g. D[6] = m6+D1+D2+D3.)
+            let mut terms = vec![minterm(net, a)];
+            for d in 1..a {
+                if a % d == 0 {
+                    terms.push(outs[d]);
+                }
+            }
+            outs.push(net.or(terms));
+        }
+        outs
+    }
+
+    /// Build a standalone netlist (inputs = carry bits, outputs = lines).
+    pub fn netlist(&self) -> Netlist {
+        let mut net = Netlist::new();
+        let c_bits = net.inputs(self.n_addr_bits);
+        let outs = self.build(&mut net, &c_bits);
+        for o in outs {
+            net.output(o);
+        }
+        net
+    }
+
+    /// Silicon budget of the gate construction.
+    pub fn stats(&self) -> GateStats {
+        self.netlist().stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::gates::exhaustive;
+
+    #[test]
+    fn matches_paper_3of8_example() {
+        // Eq 3-1 ground truth for every carry number 0..7.
+        let g = CarryPatternGenerator::new(3);
+        // C=3: D[0], D[3], D[6]
+        assert_eq!(
+            g.eval(3),
+            vec![true, false, false, true, false, false, true, false]
+        );
+        // C=1: all lines
+        assert!(g.eval(1).iter().all(|&b| b));
+        // C=2: even lines
+        assert_eq!(
+            g.eval(2),
+            vec![true, false, true, false, true, false, true, false]
+        );
+        // C=7: D[0], D[7]
+        assert_eq!(
+            g.eval(7),
+            vec![true, false, false, false, false, false, false, true]
+        );
+        // C=0 (out of spec): only D[0]
+        assert_eq!(g.eval(0)[0], true);
+        assert!(g.eval(0)[1..].iter().all(|&b| !b));
+    }
+
+    #[test]
+    fn gate_model_equals_functional_model_exhaustively() {
+        for bits in 1..=4 {
+            let g = CarryPatternGenerator::new(bits);
+            let net = g.netlist();
+            exhaustive(&net, |c, out| {
+                let want = g.eval(c as usize);
+                assert_eq!(out, &want[..], "bits={bits} c={c}");
+            });
+        }
+    }
+
+    #[test]
+    fn expansibility_prefix_property() {
+        // §3.3: adding C[N] appends !C[N] to existing expressions — the
+        // low half of the (N+1)-bit pattern for c < 2^N equals the N-bit
+        // pattern (product-of-sum expansibility).
+        let small = CarryPatternGenerator::new(3);
+        let big = CarryPatternGenerator::new(4);
+        for c in 0..8 {
+            let s = small.eval(c);
+            let b = big.eval(c);
+            assert_eq!(&b[..8], &s[..], "c={c}");
+        }
+    }
+
+    #[test]
+    fn stats_are_nontrivial_and_shallow() {
+        let g = CarryPatternGenerator::new(4);
+        let st = g.stats();
+        assert!(st.gates > 16, "two-level logic has real area: {st:?}");
+        // Two-level structure plus divisor OR accumulation stays shallow.
+        assert!(st.depth <= 12, "depth {} too deep for two-level", st.depth);
+    }
+}

@@ -1,0 +1,250 @@
+//! General decoder (§3.3, Fig 4) — the Rule 4 activation engine.
+//!
+//! Combines (1) the carry-pattern generator, (2) the parallel shifter,
+//! (3) the all-line decoder, and (4) an AND gate array: a PE at element
+//! address `a` is enabled iff
+//!
+//! ```text
+//! a >= start  AND  a <= end  AND  (a - start) % carry == 0
+//! ```
+//!
+//! in ~1 instruction cycle for *any* number of PEs — the property E1
+//! benchmarks (a dedicated processor would need O(N/word) cycles, §3.1).
+//!
+//! Also provides the simplified carry=1 variant the paper describes (two
+//! all-line decoders, one negated) used by the movable/searchable members.
+
+use super::all_line::AllLineDecoder;
+use super::carry_pattern::CarryPatternGenerator;
+use super::gates::{GateStats, Netlist};
+use super::shifter::ParallelShifter;
+
+/// The general decoder over `2^n_addr_bits` enable lines.
+#[derive(Debug, Clone)]
+pub struct GeneralDecoder {
+    n_addr_bits: usize,
+    carry_gen: CarryPatternGenerator,
+    shifter: ParallelShifter,
+    all_line: AllLineDecoder,
+}
+
+impl GeneralDecoder {
+    /// Decoder for `2^n_addr_bits` PEs.
+    pub fn new(n_addr_bits: usize) -> Self {
+        GeneralDecoder {
+            n_addr_bits,
+            carry_gen: CarryPatternGenerator::new(n_addr_bits),
+            shifter: ParallelShifter::new(n_addr_bits),
+            all_line: AllLineDecoder::new(n_addr_bits),
+        }
+    }
+
+    /// Number of enable lines.
+    pub fn n_lines(&self) -> usize {
+        1 << self.n_addr_bits
+    }
+
+    /// Scalar predicate: is element address `a` enabled? This is the
+    /// semantics every device engine uses on its hot path.
+    #[inline]
+    pub fn enabled(a: usize, start: usize, end: usize, carry: usize) -> bool {
+        let c = carry.max(1);
+        a >= start && a <= end && (a - start) % c == 0
+    }
+
+    /// Functional model of the full gate pipeline: the enable-line pattern.
+    pub fn eval(&self, start: usize, end: usize, carry: usize) -> Vec<bool> {
+        let pattern = self.carry_gen.eval(carry);
+        let shifted = self.shifter.eval(&pattern, start.min(self.n_lines()));
+        let limit = self.all_line.eval(end.min(self.n_lines() - 1));
+        shifted
+            .iter()
+            .zip(limit.iter())
+            .map(|(&s, &l)| s && l)
+            .collect()
+    }
+
+    /// Build the full gate pipeline as one netlist.
+    ///
+    /// Inputs (LSB-first): carry bits, start bits, end bits.
+    pub fn netlist(&self) -> Netlist {
+        let mut net = Netlist::new();
+        let c_bits = net.inputs(self.n_addr_bits);
+        let s_bits = net.inputs(self.n_addr_bits);
+        let e_bits = net.inputs(self.n_addr_bits);
+        let pattern = self.carry_gen.build(&mut net, &c_bits);
+        let shifted = self.shifter.build(&mut net, &s_bits, &pattern);
+        let limit = self.all_line.build(&mut net, &e_bits);
+        for (s, l) in shifted.into_iter().zip(limit.into_iter()) {
+            let o = net.and(vec![s, l]);
+            net.output(o);
+        }
+        net
+    }
+
+    /// Silicon budget of the whole decoder.
+    pub fn stats(&self) -> GateStats {
+        self.netlist().stats()
+    }
+
+    /// Per-structure budget breakdown `(carry_gen, shifter, all_line)`.
+    pub fn stats_breakdown(&self) -> (GateStats, GateStats, GateStats) {
+        (
+            self.carry_gen.stats(),
+            self.shifter.stats(),
+            self.all_line.stats(),
+        )
+    }
+}
+
+/// Simplified decoder for constant carry = 1 (§3.3 last paragraph): the
+/// start address feeds an all-line decoder with negated outputs, the end
+/// address a positive one; the AND of the two is the enable pattern.
+#[derive(Debug, Clone)]
+pub struct RangeDecoder {
+    all_line: AllLineDecoder,
+}
+
+impl RangeDecoder {
+    /// Decoder for `2^n_addr_bits` PEs, carry fixed at 1.
+    pub fn new(n_addr_bits: usize) -> Self {
+        RangeDecoder {
+            all_line: AllLineDecoder::new(n_addr_bits),
+        }
+    }
+
+    /// Functional model: `enable[a] = (start <= a <= end)`.
+    pub fn eval(&self, start: usize, end: usize) -> Vec<bool> {
+        let n = self.all_line.n_lines();
+        // Negated all-line of (start-1): a >= start. start=0 -> all true.
+        let below_start: Vec<bool> = if start == 0 {
+            vec![false; n]
+        } else {
+            self.all_line.eval(start - 1)
+        };
+        let upto_end = self.all_line.eval(end.min(n - 1));
+        below_start
+            .iter()
+            .zip(upto_end.iter())
+            .map(|(&b, &u)| !b && u)
+            .collect()
+    }
+
+    /// Silicon budget: two all-line decoders + inverters + AND array.
+    pub fn stats(&self) -> GateStats {
+        let one = self.all_line.stats();
+        let n = self.all_line.n_lines() as u64;
+        GateStats {
+            gates: 2 * one.gates + 2 * n, // + NOT array + AND array
+            depth: one.depth + 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{forall, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scalar_predicate_basics() {
+        assert!(GeneralDecoder::enabled(3, 3, 10, 4));
+        assert!(GeneralDecoder::enabled(7, 3, 10, 4));
+        assert!(!GeneralDecoder::enabled(8, 3, 10, 4));
+        assert!(!GeneralDecoder::enabled(11, 3, 10, 4));
+        assert!(!GeneralDecoder::enabled(2, 3, 10, 4));
+        // carry 0 clamps to 1 (ISA parity with the kernels)
+        assert!(GeneralDecoder::enabled(4, 3, 10, 0));
+    }
+
+    #[test]
+    fn functional_pipeline_matches_scalar_predicate() {
+        let dec = GeneralDecoder::new(4);
+        for start in 0..16 {
+            for end in 0..16 {
+                for carry in 1..6 {
+                    let lines = dec.eval(start, end, carry);
+                    for (a, &on) in lines.iter().enumerate() {
+                        assert_eq!(
+                            on,
+                            GeneralDecoder::enabled(a, start, end, carry),
+                            "a={a} start={start} end={end} carry={carry}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gate_netlist_matches_functional_randomized() {
+        let dec = GeneralDecoder::new(3);
+        let net = dec.netlist();
+        let mut rng = Rng::new(0xDEC0DE);
+        for _ in 0..300 {
+            let (c, s, e) = (rng.range(0, 8), rng.range(0, 8), rng.range(0, 8));
+            let mut inputs = Vec::with_capacity(9);
+            for k in 0..3 {
+                inputs.push((c >> k) & 1 == 1);
+            }
+            for k in 0..3 {
+                inputs.push((s >> k) & 1 == 1);
+            }
+            for k in 0..3 {
+                inputs.push((e >> k) & 1 == 1);
+            }
+            assert_eq!(net.eval(&inputs), dec.eval(s, e, c), "c={c} s={s} e={e}");
+        }
+    }
+
+    #[test]
+    fn range_decoder_equals_general_with_carry_1() {
+        let gen = GeneralDecoder::new(4);
+        let rng_dec = RangeDecoder::new(4);
+        for start in 0..16 {
+            for end in 0..16 {
+                assert_eq!(
+                    rng_dec.eval(start, end),
+                    gen.eval(start, end, 1),
+                    "start={start} end={end}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn property_every_enabled_pe_is_on_the_lattice() {
+        let dec = GeneralDecoder::new(5);
+        forall(
+            Config::default(),
+            |rng| {
+                (
+                    rng.range(0, 32),
+                    rng.range(0, 32),
+                    rng.range(1, 8),
+                )
+            },
+            |&(start, end, carry)| {
+                let lines = dec.eval(start, end, carry);
+                for (a, &on) in lines.iter().enumerate() {
+                    let want = a >= start && a <= end && (a - start) % carry == 0;
+                    crate::prop_assert!(
+                        on == want,
+                        "a={a} start={start} end={end} carry={carry}: got {on}"
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn decoder_budget_reported() {
+        let dec = GeneralDecoder::new(6);
+        let st = dec.stats();
+        let (c, s, a) = dec.stats_breakdown();
+        assert!(st.gates >= c.gates + s.gates + a.gates);
+        assert!(st.depth >= s.depth.max(a.depth));
+    }
+}

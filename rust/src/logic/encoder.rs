@@ -1,0 +1,118 @@
+//! Match-line readout structures of the control unit (§3.1, Rule 6).
+//!
+//! "The control unit then uses either a priority encoder to enumerate the
+//! identified PEs, or a parallel counter to count the identified PEs."
+//!
+//! Both are modeled functionally with analytic silicon budgets (the gate
+//! netlists would be the standard tree constructions; their cost formulas
+//! are asserted in tests instead of re-simulated — the decoders of
+//! `decoder.rs` already pin the gate-level methodology).
+
+use super::gates::GateStats;
+
+/// Priority encoder: index of the first asserted match line.
+#[derive(Debug, Clone)]
+pub struct PriorityEncoder {
+    n_lines: usize,
+}
+
+impl PriorityEncoder {
+    /// Encoder over `n_lines` match lines.
+    pub fn new(n_lines: usize) -> Self {
+        assert!(n_lines > 0);
+        PriorityEncoder { n_lines }
+    }
+
+    /// First asserted line, if any. One readout = one instruction cycle.
+    pub fn first(&self, lines: &[bool]) -> Option<usize> {
+        assert_eq!(lines.len(), self.n_lines);
+        lines.iter().position(|&b| b)
+    }
+
+    /// Enumerate all asserted lines in address order. Each step costs one
+    /// readout cycle plus one exclusive clear of the reported line — the
+    /// paper's enumeration loop.
+    pub fn enumerate(&self, lines: &[bool]) -> Vec<usize> {
+        assert_eq!(lines.len(), self.n_lines);
+        lines
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &b)| if b { Some(i) } else { None })
+            .collect()
+    }
+
+    /// Analytic budget: a binary tree of width-halving encoders —
+    /// O(n) gates, O(log n) depth.
+    pub fn stats(&self) -> GateStats {
+        let n = self.n_lines as u64;
+        GateStats {
+            gates: 4 * n,
+            depth: (64 - n.leading_zeros().max(1)) + 2,
+        }
+    }
+}
+
+/// Parallel counter: population count of the match lines.
+#[derive(Debug, Clone)]
+pub struct ParallelCounter {
+    n_lines: usize,
+}
+
+impl ParallelCounter {
+    /// Counter over `n_lines` match lines.
+    pub fn new(n_lines: usize) -> Self {
+        assert!(n_lines > 0);
+        ParallelCounter { n_lines }
+    }
+
+    /// Count of asserted lines. One readout = one instruction cycle.
+    pub fn count(&self, lines: &[bool]) -> usize {
+        assert_eq!(lines.len(), self.n_lines);
+        lines.iter().filter(|&&b| b).count()
+    }
+
+    /// Analytic budget: an adder (Wallace) tree — ~2n full-adder
+    /// equivalents, O(log n) depth.
+    pub fn stats(&self) -> GateStats {
+        let n = self.n_lines as u64;
+        GateStats {
+            gates: 10 * n,
+            depth: 2 * (64 - n.leading_zeros().max(1)) + 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn first_and_enumerate() {
+        let pe = PriorityEncoder::new(8);
+        let lines = [false, true, false, true, false, false, false, true];
+        assert_eq!(pe.first(&lines), Some(1));
+        assert_eq!(pe.enumerate(&lines), vec![1, 3, 7]);
+        assert_eq!(pe.first(&[false; 8]), None);
+        assert!(pe.enumerate(&[false; 8]).is_empty());
+    }
+
+    #[test]
+    fn count_matches_popcount() {
+        let pc = ParallelCounter::new(64);
+        let mut rng = Rng::new(99);
+        for _ in 0..100 {
+            let lines: Vec<bool> = (0..64).map(|_| rng.bool()).collect();
+            let want = lines.iter().filter(|&&b| b).count();
+            assert_eq!(pc.count(&lines), want);
+        }
+    }
+
+    #[test]
+    fn budgets_scale_linearly_with_log_depth() {
+        let small = ParallelCounter::new(256).stats();
+        let big = ParallelCounter::new(1024).stats();
+        assert_eq!(big.gates, 4 * small.gates);
+        assert!(big.depth <= small.depth + 4);
+    }
+}

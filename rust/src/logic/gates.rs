@@ -1,0 +1,269 @@
+//! Combinational netlist substrate (logic-design level, §3.2).
+//!
+//! The paper demonstrates each PE and control-unit structure "on logic
+//! design level" [39]. This module provides a small combinational netlist
+//! builder so the decoder structures of §3.3 can be built *as gates*,
+//! evaluated exhaustively against their functional models, and accounted
+//! for silicon budget (gate count and depth — the paper's per-PE overhead
+//! arguments in §4.1 and §8 depend on these numbers).
+
+/// Node identifier inside a [`Netlist`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct NodeId(pub u32);
+
+/// A combinational node.
+#[derive(Debug, Clone)]
+pub enum Node {
+    /// Primary input (index into the evaluation input vector).
+    Input(usize),
+    /// Constant.
+    Const(bool),
+    /// Inverter.
+    Not(NodeId),
+    /// N-ary AND.
+    And(Vec<NodeId>),
+    /// N-ary OR.
+    Or(Vec<NodeId>),
+    /// 2-input XOR.
+    Xor(NodeId, NodeId),
+}
+
+/// A combinational netlist with named outputs.
+#[derive(Debug, Default)]
+pub struct Netlist {
+    nodes: Vec<Node>,
+    outputs: Vec<NodeId>,
+    n_inputs: usize,
+}
+
+impl Netlist {
+    /// Empty netlist.
+    pub fn new() -> Self {
+        Netlist::default()
+    }
+
+    fn push(&mut self, node: Node) -> NodeId {
+        let id = NodeId(self.nodes.len() as u32);
+        self.nodes.push(node);
+        id
+    }
+
+    /// Declare the next primary input.
+    pub fn input(&mut self) -> NodeId {
+        let idx = self.n_inputs;
+        self.n_inputs += 1;
+        self.push(Node::Input(idx))
+    }
+
+    /// Declare `n` primary inputs.
+    pub fn inputs(&mut self, n: usize) -> Vec<NodeId> {
+        (0..n).map(|_| self.input()).collect()
+    }
+
+    /// Constant node.
+    pub fn constant(&mut self, v: bool) -> NodeId {
+        self.push(Node::Const(v))
+    }
+
+    /// Inverter.
+    pub fn not(&mut self, a: NodeId) -> NodeId {
+        self.push(Node::Not(a))
+    }
+
+    /// N-ary AND (empty = const true).
+    pub fn and(&mut self, xs: Vec<NodeId>) -> NodeId {
+        match xs.len() {
+            0 => self.constant(true),
+            1 => xs[0],
+            _ => self.push(Node::And(xs)),
+        }
+    }
+
+    /// N-ary OR (empty = const false).
+    pub fn or(&mut self, xs: Vec<NodeId>) -> NodeId {
+        match xs.len() {
+            0 => self.constant(false),
+            1 => xs[0],
+            _ => self.push(Node::Or(xs)),
+        }
+    }
+
+    /// 2-input XOR.
+    pub fn xor(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.push(Node::Xor(a, b))
+    }
+
+    /// 2:1 multiplexer: `sel ? a : b`.
+    pub fn mux(&mut self, sel: NodeId, a: NodeId, b: NodeId) -> NodeId {
+        let ns = self.not(sel);
+        let ta = self.and(vec![sel, a]);
+        let tb = self.and(vec![ns, b]);
+        self.or(vec![ta, tb])
+    }
+
+    /// Mark a node as a primary output; returns its output index.
+    pub fn output(&mut self, id: NodeId) -> usize {
+        self.outputs.push(id);
+        self.outputs.len() - 1
+    }
+
+    /// Number of primary inputs.
+    pub fn n_inputs(&self) -> usize {
+        self.n_inputs
+    }
+
+    /// Number of primary outputs.
+    pub fn n_outputs(&self) -> usize {
+        self.outputs.len()
+    }
+
+    /// Evaluate all outputs for one input assignment.
+    pub fn eval(&self, inputs: &[bool]) -> Vec<bool> {
+        assert_eq!(inputs.len(), self.n_inputs, "input width mismatch");
+        let mut vals = vec![false; self.nodes.len()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            vals[i] = match node {
+                Node::Input(k) => inputs[*k],
+                Node::Const(v) => *v,
+                Node::Not(a) => !vals[a.0 as usize],
+                Node::And(xs) => xs.iter().all(|x| vals[x.0 as usize]),
+                Node::Or(xs) => xs.iter().any(|x| vals[x.0 as usize]),
+                Node::Xor(a, b) => vals[a.0 as usize] ^ vals[b.0 as usize],
+            };
+        }
+        self.outputs.iter().map(|o| vals[o.0 as usize]).collect()
+    }
+
+    /// Silicon accounting: `(gate_count, depth)`.
+    ///
+    /// Gate count = logic nodes (inputs/constants free); N-ary gates count
+    /// as (fan-in − 1) two-input gates, the standard tree decomposition.
+    /// Depth = longest input→output path in two-input-gate levels.
+    pub fn stats(&self) -> GateStats {
+        let mut gates = 0u64;
+        let mut depth = vec![0u32; self.nodes.len()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            match node {
+                Node::Input(_) | Node::Const(_) => {}
+                Node::Not(a) => {
+                    gates += 1;
+                    depth[i] = depth[a.0 as usize] + 1;
+                }
+                Node::Xor(a, b) => {
+                    gates += 1;
+                    depth[i] = depth[a.0 as usize].max(depth[b.0 as usize]) + 1;
+                }
+                Node::And(xs) | Node::Or(xs) => {
+                    gates += (xs.len() as u64).saturating_sub(1);
+                    let d = xs.iter().map(|x| depth[x.0 as usize]).max().unwrap_or(0);
+                    let levels = (xs.len() as f64).log2().ceil() as u32;
+                    depth[i] = d + levels.max(1);
+                }
+            }
+        }
+        let max_depth = self
+            .outputs
+            .iter()
+            .map(|o| depth[o.0 as usize])
+            .max()
+            .unwrap_or(0);
+        GateStats {
+            gates,
+            depth: max_depth,
+        }
+    }
+}
+
+/// Silicon budget summary for a structure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GateStats {
+    /// Two-input-equivalent gate count.
+    pub gates: u64,
+    /// Critical-path depth in gate levels.
+    pub depth: u32,
+}
+
+/// Evaluate a netlist over every input assignment (for exhaustive
+/// small-width equivalence tests). Input bit `k` of assignment `v` is
+/// `(v >> k) & 1`.
+pub fn exhaustive<F>(net: &Netlist, mut check: F)
+where
+    F: FnMut(u64, &[bool]),
+{
+    let n = net.n_inputs();
+    assert!(n <= 22, "exhaustive() limited to 22 inputs, got {n}");
+    for v in 0u64..(1 << n) {
+        let inputs: Vec<bool> = (0..n).map(|k| (v >> k) & 1 == 1).collect();
+        let out = net.eval(&inputs);
+        check(v, &out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mux_truth_table() {
+        let mut net = Netlist::new();
+        let s = net.input();
+        let a = net.input();
+        let b = net.input();
+        let m = net.mux(s, a, b);
+        net.output(m);
+        exhaustive(&net, |v, out| {
+            let (s, a, b) = (v & 1 == 1, v >> 1 & 1 == 1, v >> 2 & 1 == 1);
+            assert_eq!(out[0], if s { a } else { b });
+        });
+    }
+
+    #[test]
+    fn xor_and_or_eval() {
+        let mut net = Netlist::new();
+        let a = net.input();
+        let b = net.input();
+        let x = net.xor(a, b);
+        let an = net.and(vec![a, b]);
+        let o = net.or(vec![a, b]);
+        net.output(x);
+        net.output(an);
+        net.output(o);
+        exhaustive(&net, |v, out| {
+            let (a, b) = (v & 1 == 1, v >> 1 & 1 == 1);
+            assert_eq!(out, &[a ^ b, a && b, a || b]);
+        });
+    }
+
+    #[test]
+    fn empty_and_or_are_constants() {
+        let mut net = Netlist::new();
+        let t = net.and(vec![]);
+        let f = net.or(vec![]);
+        net.output(t);
+        net.output(f);
+        assert_eq!(net.eval(&[]), vec![true, false]);
+    }
+
+    #[test]
+    fn stats_count_tree_decomposition() {
+        let mut net = Netlist::new();
+        let xs = net.inputs(8);
+        let a = net.and(xs);
+        net.output(a);
+        let st = net.stats();
+        assert_eq!(st.gates, 7); // 8-ary AND = 7 two-input gates
+        assert_eq!(st.depth, 3); // log2(8) levels
+    }
+
+    #[test]
+    fn depth_accumulates_through_layers() {
+        let mut net = Netlist::new();
+        let a = net.input();
+        let b = net.input();
+        let n1 = net.not(a);
+        let x = net.xor(n1, b);
+        let y = net.and(vec![x, a]);
+        net.output(y);
+        assert_eq!(net.stats().depth, 3);
+    }
+}

@@ -1,0 +1,22 @@
+//! Gate-level structures of the CPM control unit (§3.3).
+//!
+//! The general decoder — carry-pattern generator, parallel shifter,
+//! all-line decoder, AND array — implements Rule 4 activation in ~1
+//! instruction cycle for any number of PEs; the priority encoder and
+//! parallel counter implement the Rule 6 match readout. Each structure has
+//! a functional model (used on device hot paths), a gate netlist (verified
+//! equivalent in tests), and a silicon budget.
+
+pub mod all_line;
+pub mod carry_pattern;
+pub mod decoder;
+pub mod encoder;
+pub mod gates;
+pub mod shifter;
+
+pub use all_line::AllLineDecoder;
+pub use carry_pattern::CarryPatternGenerator;
+pub use decoder::{GeneralDecoder, RangeDecoder};
+pub use encoder::{ParallelCounter, PriorityEncoder};
+pub use gates::{GateStats, Netlist};
+pub use shifter::ParallelShifter;

@@ -1,0 +1,134 @@
+//! Parallel (logarithmic barrel) shifter (§3.3, Eq 3-2, Fig 2).
+//!
+//! Shifts the carry-pattern generator's outputs toward higher addresses by
+//! the start address: `H[a] = D[a - s]` for `a >= s`, else 0. Built as
+//! log₂(n) stages; stage `j` shifts by `2^j` when shift bit `S[j]` is set
+//! (Fig 2's 3/8 construction), each line a 2:1 mux.
+
+use super::gates::{GateStats, Netlist, NodeId};
+
+/// Barrel shifter over `2^n_addr_bits` lines.
+#[derive(Debug, Clone)]
+pub struct ParallelShifter {
+    n_addr_bits: usize,
+}
+
+impl ParallelShifter {
+    /// A shifter for `2^n_addr_bits` lines with an `n_addr_bits`-bit shift
+    /// amount.
+    pub fn new(n_addr_bits: usize) -> Self {
+        assert!(n_addr_bits >= 1 && n_addr_bits <= 24);
+        ParallelShifter { n_addr_bits }
+    }
+
+    /// Number of data lines.
+    pub fn n_lines(&self) -> usize {
+        1 << self.n_addr_bits
+    }
+
+    /// Functional model (Eq 3-2): `H[a] = D[a-s]` if `a >= s` else 0.
+    pub fn eval(&self, data: &[bool], s: usize) -> Vec<bool> {
+        let n = self.n_lines();
+        assert_eq!(data.len(), n);
+        (0..n)
+            .map(|a| if a >= s { data[a - s] } else { false })
+            .collect()
+    }
+
+    /// Build the log-stage mux structure into `net`.
+    ///
+    /// `s_bits`: shift amount (LSB first), `data`: input lines.
+    pub fn build(&self, net: &mut Netlist, s_bits: &[NodeId], data: &[NodeId]) -> Vec<NodeId> {
+        assert_eq!(s_bits.len(), self.n_addr_bits);
+        assert_eq!(data.len(), self.n_lines());
+        let zero = net.constant(false);
+        let mut lines: Vec<NodeId> = data.to_vec();
+        for (j, &sj) in s_bits.iter().enumerate() {
+            let amount = 1usize << j;
+            let mut next = Vec::with_capacity(lines.len());
+            for a in 0..lines.len() {
+                let shifted = if a >= amount { lines[a - amount] } else { zero };
+                next.push(net.mux(sj, shifted, lines[a]));
+            }
+            lines = next;
+        }
+        lines
+    }
+
+    /// Standalone netlist: inputs are shift bits then data lines.
+    pub fn netlist(&self) -> Netlist {
+        let mut net = Netlist::new();
+        let s_bits = net.inputs(self.n_addr_bits);
+        let data = net.inputs(self.n_lines());
+        let outs = self.build(&mut net, &s_bits, &data);
+        for o in outs {
+            net.output(o);
+        }
+        net
+    }
+
+    /// Silicon budget.
+    pub fn stats(&self) -> GateStats {
+        self.netlist().stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::gates::exhaustive;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn functional_shift_matches_eq_3_2() {
+        let sh = ParallelShifter::new(3);
+        let data: Vec<bool> = vec![true, false, true, true, false, false, true, false];
+        assert_eq!(sh.eval(&data, 0), data);
+        let s2 = sh.eval(&data, 2);
+        assert_eq!(
+            s2,
+            vec![false, false, true, false, true, true, false, false]
+        );
+        let s7 = sh.eval(&data, 7);
+        assert_eq!(
+            s7,
+            vec![false, false, false, false, false, false, false, true]
+        );
+    }
+
+    #[test]
+    fn gate_model_equals_functional_small_exhaustive() {
+        // 2 address bits: 2 shift inputs + 4 data inputs = 6 bits, fully
+        // exhaustive.
+        let sh = ParallelShifter::new(2);
+        let net = sh.netlist();
+        exhaustive(&net, |v, out| {
+            let s = (v & 0b11) as usize;
+            let data: Vec<bool> = (0..4).map(|k| (v >> (2 + k)) & 1 == 1).collect();
+            assert_eq!(out, &sh.eval(&data, s)[..], "v={v:#b}");
+        });
+    }
+
+    #[test]
+    fn gate_model_equals_functional_randomized_3bit() {
+        let sh = ParallelShifter::new(3);
+        let net = sh.netlist();
+        let mut rng = Rng::new(0xF00D);
+        for _ in 0..200 {
+            let s = rng.range(0, 8);
+            let data: Vec<bool> = (0..8).map(|_| rng.bool()).collect();
+            let mut inputs: Vec<bool> = (0..3).map(|k| (s >> k) & 1 == 1).collect();
+            inputs.extend(&data);
+            assert_eq!(net.eval(&inputs), sh.eval(&data, s));
+        }
+    }
+
+    #[test]
+    fn stage_count_is_logarithmic() {
+        // Depth grows ~3 gate levels per stage (mux), i.e. O(log n), not O(n).
+        let d3 = ParallelShifter::new(3).stats().depth;
+        let d4 = ParallelShifter::new(4).stats().depth;
+        assert!(d4 > d3);
+        assert!(d4 <= d3 + 4, "one extra stage should add ~one mux depth");
+    }
+}

@@ -1,0 +1,156 @@
+//! `cpm` — CLI for the Concurrent Processing Memory reproduction.
+//!
+//! Subcommands:
+//! * `info`                     — device inventory + silicon budgets
+//! * `sql --rows N`             — run SQL queries against a generated table
+//! * `search --pattern STR`     — substring search demo
+//! * `physics`                  — §8 feasibility numbers (Eq 8-1)
+//! * `runtime-check`            — load + execute the AOT artifacts via PJRT
+
+use cpm::cli::Cli;
+use cpm::coordinator::{CpmServer, Request};
+use cpm::device::computable::isa::N_REGS;
+use cpm::device::computable::{Instr, Opcode, Reg, Src};
+use cpm::device::control::ControlUnit;
+use cpm::physics;
+use cpm::runtime::PjrtBackend;
+use cpm::sql::Schema;
+use cpm::util::rng::Rng;
+
+fn main() {
+    let cli = Cli::from_env();
+    let result = match cli.command.as_deref() {
+        Some("info") => info(&cli),
+        Some("sql") => sql(&cli),
+        Some("search") => search(&cli),
+        Some("physics") => physics_cmd(&cli),
+        Some("runtime-check") => runtime_check(&cli),
+        _ => {
+            eprintln!(
+                "usage: cpm <info|sql|search|physics|runtime-check> [--flags]\n\
+                 benches: cargo bench (see benches/paper.rs)\n\
+                 examples: cargo run --release --example <quickstart|sql_engine|image_pipeline|text_search>"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn info(_cli: &Cli) -> cpm::Result<()> {
+    println!("Concurrent Processing Memory (Wang, 2006) — reproduction");
+    println!("family members: movable / searchable / comparable / computable");
+    for bits in [10usize, 16, 20] {
+        let cu = ControlUnit::new(bits);
+        let b = cu.silicon_budget();
+        println!(
+            "control unit for 2^{bits} PEs: decoder {} gates (depth {}), \
+             priority-encoder {} gates, parallel-counter {} gates",
+            b.decoder.gates, b.decoder.depth, b.priority_encoder.gates, b.parallel_counter.gates
+        );
+    }
+    Ok(())
+}
+
+fn sql(cli: &Cli) -> cpm::Result<()> {
+    let n = cli.get("rows", 10_000usize);
+    let schema = Schema::new(&[("price", 2), ("qty", 1), ("region", 1)])?;
+    let mut server = CpmServer::new(schema, n, b"", 1 << 20);
+    let mut rng = Rng::new(cli.get("seed", 42u64));
+    let rows: Vec<Vec<u64>> = (0..n)
+        .map(|_| vec![rng.below(10_000), rng.below(100), rng.below(8)])
+        .collect();
+    server.load_rows(&rows)?;
+    let queries = [
+        "SELECT COUNT WHERE price < 5000",
+        "SELECT COUNT WHERE price >= 2500 AND price < 7500",
+        "SELECT COUNT WHERE qty > 90 OR region = 0",
+    ];
+    for q in queries {
+        let r = server.serve(&Request::Sql(q.to_string()))?;
+        println!("{q}\n  -> {r:?}");
+    }
+    println!(
+        "served {} queries; device concurrent cycles {} (vs serial scan ~{} per query)",
+        server.metrics.requests,
+        server.metrics.device_macro_cycles,
+        n
+    );
+    Ok(())
+}
+
+fn search(cli: &Cli) -> cpm::Result<()> {
+    let pattern = cli.get_str("pattern").unwrap_or("abra").as_bytes().to_vec();
+    let n = cli.get("n", 65_536usize);
+    let mut rng = Rng::new(7);
+    let mut corpus: Vec<u8> = (0..n).map(|_| b'a' + rng.range(0, 4) as u8).collect();
+    corpus[100..100 + pattern.len()].copy_from_slice(&pattern);
+    let schema = Schema::new(&[("x", 1)])?;
+    let mut server = CpmServer::new(schema, 1, &corpus, 1);
+    let r = server.serve(&Request::Search(pattern.clone()))?;
+    println!(
+        "pattern {:?} in {} bytes -> {:?} (device cycles {})",
+        String::from_utf8_lossy(&pattern),
+        n,
+        r,
+        server.metrics.device_macro_cycles
+    );
+    Ok(())
+}
+
+fn physics_cmd(_cli: &Cli) -> cpm::Result<()> {
+    let (d, t) = (25e-9, 10e-9);
+    println!("Eq 8-1 routing-layer model (D = 25 nm oxide, T = 10 nm copper):");
+    for ghz in [0.1f64, 0.4, 1.0, 2.0] {
+        let l = physics::max_span_for_clock(ghz * 1e9, d, t);
+        println!("  {:>4.1} GHz -> span <= {:.2} mm", ghz, l * 1e3);
+    }
+    println!(
+        "  4 Gbit movable memory at 2 um^2/PE ~ {:.0} mm^2 (paper: ~15x15 mm^2)",
+        physics::chip_area_mm2((4u64 << 30) / 8, 2.0)
+    );
+    println!(
+        "  cache depth 4 @ 400 MHz bus -> routing at {:.0} MHz",
+        physics::routing_clock_with_cache(400e6, 4) / 1e6
+    );
+    Ok(())
+}
+
+fn runtime_check(cli: &Cli) -> cpm::Result<()> {
+    let dir = cli.get_str("artifacts").unwrap_or("artifacts").to_string();
+    let mut backend = PjrtBackend::new(&dir)?;
+    let shapes = backend.available_traces();
+    println!("artifacts in {dir}: {shapes:?}");
+    let shape = shapes
+        .first()
+        .copied()
+        .ok_or_else(|| cpm::CpmError::Runtime("no trace artifacts found".into()))?;
+    // Run the (1 2 1) Gaussian through the XLA backend and cross-check.
+    let p = shape.p;
+    let mut state = vec![0i32; N_REGS * p];
+    for i in 0..p {
+        state[Reg::Nb as usize * p + i] = (i % 97) as i32;
+    }
+    let trace = vec![
+        Instr::all(Opcode::Copy, Src::Reg(Reg::Nb), Reg::Op),
+        Instr::all(Opcode::Add, Src::Left, Reg::Op),
+        Instr::all(Opcode::Copy, Src::Reg(Reg::Op), Reg::Nb),
+        Instr::all(Opcode::Add, Src::Right, Reg::Op),
+    ];
+    let (final_state, counts) = backend.run_trace(shape, &state, &trace)?;
+    let mut word = cpm::device::computable::WordEngine::new(p, 16);
+    word.set_state(&state);
+    word.run(&trace);
+    assert_eq!(&final_state[..], &word.state()[..], "XLA != word engine");
+    println!(
+        "runtime-check OK: trace p={} t={} matches the word engine; match counts head {:?}; dispatches {}",
+        shape.p,
+        shape.t,
+        &counts[..4.min(counts.len())],
+        backend.dispatches
+    );
+    Ok(())
+}

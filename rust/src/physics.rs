@@ -1,0 +1,128 @@
+//! Physical feasibility model (§8, Eq 8-1).
+//!
+//! The paper estimates the concurrent-bus routing-layer RC delay:
+//!
+//! ```text
+//! delay = (4 · 8.8e-12 · L² / D) · (17e-9 / T) = 0.6e-18 · L² / D / T
+//! ```
+//!
+//! with `L` the routing-layer span, `T` the copper thickness and `D` the
+//! insulating-oxide thickness (SI meters), and derives: at D = 25 nm,
+//! T = 10 nm a 1 GHz CPM can span L ≤ ~1.5 mm; a 4 GB content movable
+//! memory fits ~15×15 mm²; with an output cache of depth 4 and a 400 MHz
+//! system bus each routing layer runs at 100 MHz (E16).
+
+/// Permittivity prefactor of Eq 8-1 (4 · ε_SiO2 ≈ 4 · 8.8e-12 F/m).
+pub const EPS_FACTOR: f64 = 4.0 * 8.8e-12;
+/// Copper resistivity factor of Eq 8-1 (17e-9 Ω·m).
+pub const RHO_CU: f64 = 17e-9;
+
+/// Routing-layer RC delay in seconds (Eq 8-1).
+pub fn routing_delay(l: f64, d: f64, t: f64) -> f64 {
+    (EPS_FACTOR * l * l / d) * (RHO_CU / t)
+}
+
+/// Largest routing-layer span (meters) achieving `clock_hz` with a
+/// half-period timing budget — the paper's "overall delay less than
+/// 0.5e-9 sec" at 1 GHz.
+pub fn max_span_for_clock(clock_hz: f64, d: f64, t: f64) -> f64 {
+    let budget = 0.5 / clock_hz;
+    (budget * d * t / (EPS_FACTOR * RHO_CU)).sqrt()
+}
+
+/// Chip-area estimate for a content movable memory of `bytes` capacity at
+/// `um2_per_32bit_pe` µm² per 32-bit PE (the paper uses ~2 µm² with its
+/// 2-gate/bit + 4-gate/PE overhead at then-current density).
+pub fn chip_area_mm2(bytes: u64, um2_per_32bit_pe: f64) -> f64 {
+    let pes = bytes as f64 / 4.0; // 32-bit PEs
+    pes * um2_per_32bit_pe / 1e6
+}
+
+/// PE count reachable by one routing layer of span `l_m` at `um2` per PE.
+pub fn pes_per_layer(l_m: f64, um2_per_pe: f64) -> f64 {
+    let area_um2 = (l_m * 1e6) * (l_m * 1e6);
+    area_um2 / um2_per_pe
+}
+
+/// The cache-depth trade (§8): with an output cache of depth `depth` and a
+/// `bus_hz` system bus, each routing layer only needs `bus_hz / depth`.
+pub fn routing_clock_with_cache(bus_hz: f64, depth: u32) -> f64 {
+    bus_hz / depth as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq_8_1_prefactor_matches_paper() {
+        // 0.6e-18 · L²/D/T (the paper's collapsed constant).
+        let (l, d, t) = (1e-3, 25e-9, 10e-9);
+        let direct = routing_delay(l, d, t);
+        let collapsed = 0.6e-18 * l * l / d / t;
+        let rel = (direct - collapsed).abs() / collapsed;
+        assert!(rel < 0.01, "prefactor drift {rel}");
+    }
+
+    #[test]
+    fn spans_match_the_papers_scenarios() {
+        // Eq 8-1 at D=25nm, T=10nm: ~0.46 mm at 1 GHz; the paper's
+        // "1.5x1.5 mm²" figure is its 100 MHz cache-depth-4 scenario
+        // (0.46·√10 ≈ 1.45 mm) — both reproduced here.
+        let l_1ghz = max_span_for_clock(1e9, 25e-9, 10e-9);
+        assert!(
+            (0.4e-3..0.52e-3).contains(&l_1ghz),
+            "1 GHz span {l_1ghz} m (expected ~0.46 mm)"
+        );
+        let l_100mhz = max_span_for_clock(100e6, 25e-9, 10e-9);
+        assert!(
+            (1.2e-3..1.8e-3).contains(&l_100mhz),
+            "100 MHz span {l_100mhz} m vs the paper's ~1.5 mm"
+        );
+        // The delay at the span meets the half-period budget.
+        assert!(routing_delay(l_1ghz, 25e-9, 10e-9) <= 0.5e-9 * 1.001);
+    }
+
+    #[test]
+    fn four_gbit_chip_is_about_15x15_mm() {
+        // Paper: ~2 µm² per 32-bit PE -> "4G-byte ... about 15x15 mm²".
+        // By the paper's own numbers, 2 µm² × 1e9 PEs is ~2000 mm²; the
+        // 15×15 mm² figure matches a 4 G*bit* device (2 µm² × 134e6 PEs ≈
+        // 268 mm²) — we reproduce the latter and note the discrepancy in
+        // EXPERIMENTS.md E16.
+        let area_4gbit = chip_area_mm2((4u64 << 30) / 8, 2.0);
+        assert!(
+            (150.0..400.0).contains(&area_4gbit),
+            "area {area_4gbit} mm² vs paper's ~225 mm²"
+        );
+        let area_4gbyte = chip_area_mm2(4u64 << 30, 2.0);
+        assert!(area_4gbyte > 1500.0, "4 GByte at 2 µm²/PE is ~2000 mm²");
+    }
+
+    #[test]
+    fn cache_depth_4_slows_routing_to_100mhz() {
+        // Paper: cache depth 4, 400 MHz system bus -> 100 MHz routing,
+        // which relaxes the span to the paper's 1.5x1.5 mm².
+        let clk = routing_clock_with_cache(400e6, 4);
+        assert_eq!(clk, 100e6);
+        let l = max_span_for_clock(clk, 25e-9, 10e-9);
+        assert!(
+            l > 1.2e-3,
+            "100 MHz should allow ~1.5 mm spans, got {l}"
+        );
+    }
+
+    #[test]
+    fn delay_scales_quadratically_with_span() {
+        let d1 = routing_delay(1e-3, 25e-9, 10e-9);
+        let d2 = routing_delay(2e-3, 25e-9, 10e-9);
+        assert!((d2 / d1 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn thicker_layers_are_faster() {
+        let thin = routing_delay(1e-3, 25e-9, 10e-9);
+        let thick = routing_delay(1e-3, 50e-9, 20e-9);
+        assert!(thick < thin / 3.9);
+    }
+}

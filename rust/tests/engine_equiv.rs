@@ -1,0 +1,147 @@
+//! Engine-equivalence integration tests (E19's correctness half): the
+//! word-plane engine, the bit-plane engine and the AOT XLA/Pallas backend
+//! must produce identical final states for identical macro traces.
+
+use cpm::device::computable::bit_engine::BitEngine;
+use cpm::device::computable::isa::{Instr, Opcode, Reg, Src, N_REGS};
+use cpm::device::computable::WordEngine;
+use cpm::runtime::{PjrtBackend, TraceShape};
+use cpm::util::rng::Rng;
+
+fn random_instr(rng: &mut Rng, p: usize) -> Instr {
+    let opcode = Opcode::decode(rng.range(0, 19) as i32).unwrap();
+    let src = Src::decode(rng.range(0, 14) as i32).unwrap();
+    let dst = Reg::decode(rng.range(0, N_REGS) as i32).unwrap();
+    let imm = match opcode {
+        Opcode::Shr | Opcode::Shl => rng.i32_range(0, 32),
+        _ => rng.i32_range(-1000, 1000),
+    };
+    Instr::all(opcode, src, dst)
+        .imm(imm)
+        .range(
+            rng.range(0, p) as u32,
+            rng.range(0, p + 2) as u32,
+            rng.range(1, p + 1) as u32,
+        )
+        .flags(rng.range(0, 4) as i32)
+        .stride(rng.range(0, p) as u32)
+}
+
+fn random_state(rng: &mut Rng, p: usize) -> Vec<i32> {
+    let mut state = vec![0i32; N_REGS * p];
+    for v in state.iter_mut() {
+        *v = rng.i32();
+    }
+    // Bit registers usually hold 0/1 in real traces; mix regimes.
+    for i in 0..p {
+        state[Reg::M as usize * p + i] = rng.range(0, 2) as i32;
+    }
+    state
+}
+
+#[test]
+fn word_and_bit_engines_agree_on_random_traces() {
+    let mut rng = Rng::new(0xE19);
+    for case in 0..30 {
+        let p = rng.range(2, 80);
+        let state = random_state(&mut rng, p);
+        let trace: Vec<Instr> = (0..rng.range(1, 12))
+            .map(|_| random_instr(&mut rng, p))
+            .collect();
+
+        let mut word = WordEngine::new(p, 32);
+        word.set_state(&state);
+        word.run(&trace);
+
+        let mut bit = BitEngine::new(p);
+        for r in 0..N_REGS {
+            let reg = Reg::decode(r as i32).unwrap();
+            bit.load_plane(reg, &state[r * p..(r + 1) * p]);
+        }
+        bit.run(&trace);
+
+        assert_eq!(
+            word.state(),
+            bit.state(),
+            "case {case}: p={p} trace={trace:#?}"
+        );
+    }
+}
+
+#[test]
+fn word_and_bit_match_counts_agree() {
+    let mut rng = Rng::new(0xE19 + 1);
+    for _ in 0..10 {
+        let p = rng.range(2, 128);
+        let vals: Vec<i32> = (0..p).map(|_| rng.i32_range(-100, 100)).collect();
+        let mut word = WordEngine::new(p, 32);
+        word.load_plane(Reg::Nb, &vals);
+        let mut bit = BitEngine::new(p);
+        bit.load_plane(Reg::Nb, &vals);
+        let instr = Instr::all(Opcode::CmpGt, Src::Imm, Reg::Nb).imm(0);
+        word.run(&[instr]);
+        bit.run(&[instr]);
+        assert_eq!(word.match_count(), bit.match_count());
+    }
+}
+
+#[test]
+fn xla_backend_matches_word_engine_on_random_traces() {
+    let Ok(mut backend) = PjrtBackend::new("artifacts") else {
+        panic!("PJRT backend unavailable — run `make artifacts` first");
+    };
+    let shape = TraceShape { p: 1024, t: 32 };
+    if backend.load_trace(shape).is_err() {
+        panic!("missing artifact pe_trace_p1024_t32 — run `make artifacts`");
+    }
+    let mut rng = Rng::new(0xE19 + 2);
+    for case in 0..3 {
+        let p = shape.p;
+        let state = random_state(&mut rng, p);
+        let trace: Vec<Instr> = (0..shape.t).map(|_| random_instr(&mut rng, p)).collect();
+
+        let (xla_final, _) = backend.run_trace(shape, &state, &trace).unwrap();
+        let mut word = WordEngine::new(p, 32);
+        word.set_state(&state);
+        word.run(&trace);
+        assert_eq!(xla_final, word.state(), "case {case}");
+    }
+}
+
+#[test]
+fn xla_single_step_matches_word_engine() {
+    let Ok(mut backend) = PjrtBackend::new("artifacts") else {
+        panic!("PJRT backend unavailable");
+    };
+    let p = 1024;
+    if backend.load_step(p).is_err() {
+        panic!("missing artifact pe_step_p1024 — run `make artifacts`");
+    }
+    let mut rng = Rng::new(0xE19 + 3);
+    for _ in 0..8 {
+        let state = random_state(&mut rng, p);
+        let instr = random_instr(&mut rng, p);
+        let got = backend.run_step(p, &state, &instr).unwrap();
+        let mut word = WordEngine::new(p, 32);
+        word.set_state(&state);
+        word.run(&[instr]);
+        assert_eq!(got, word.state(), "instr={instr:?}");
+    }
+}
+
+#[test]
+fn xla_chained_traces_match_long_runs() {
+    let Ok(mut backend) = PjrtBackend::new("artifacts") else {
+        panic!("PJRT backend unavailable");
+    };
+    let shape = TraceShape { p: 1024, t: 32 };
+    backend.load_trace(shape).unwrap();
+    let mut rng = Rng::new(0xE19 + 4);
+    let state = random_state(&mut rng, shape.p);
+    let trace: Vec<Instr> = (0..100).map(|_| random_instr(&mut rng, shape.p)).collect();
+    let chained = backend.run_chained(shape, &state, &trace).unwrap();
+    let mut word = WordEngine::new(shape.p, 32);
+    word.set_state(&state);
+    word.run(&trace);
+    assert_eq!(chained, word.state());
+}

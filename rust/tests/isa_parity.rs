@@ -1,0 +1,93 @@
+//! ISA parity: the Rust mirror of the macro ISA must match the Python
+//! source of truth exported to `artifacts/isa.json` by `make artifacts`.
+//! (Hand-rolled JSON field checks — no serde in the offline crate set.)
+
+use cpm::device::computable::isa::{self, Opcode};
+
+fn isa_json() -> String {
+    std::fs::read_to_string("artifacts/isa.json")
+        .expect("artifacts/isa.json missing — run `make artifacts`")
+}
+
+/// Extract `"key": <int>` from the JSON blob (flat integer fields only).
+fn field(json: &str, key: &str) -> i64 {
+    let pat = format!("\"{key}\":");
+    let at = json.find(&pat).unwrap_or_else(|| panic!("missing {key}"));
+    let rest = &json[at + pat.len()..];
+    let digits: String = rest
+        .chars()
+        .skip_while(|c| c.is_whitespace())
+        .take_while(|c| c.is_ascii_digit() || *c == '-')
+        .collect();
+    digits.parse().unwrap_or_else(|_| panic!("bad int for {key}"))
+}
+
+#[test]
+fn structural_constants_match() {
+    let j = isa_json();
+    assert_eq!(field(&j, "n_regs"), isa::N_REGS as i64);
+    assert_eq!(field(&j, "n_srcs"), isa::N_SRCS as i64);
+    assert_eq!(field(&j, "n_ops"), isa::N_OPS as i64);
+    assert_eq!(field(&j, "instr_width"), isa::INSTR_WIDTH as i64);
+}
+
+#[test]
+fn opcodes_match() {
+    let j = isa_json();
+    for (name, op) in [
+        ("NOP", Opcode::Nop),
+        ("COPY", Opcode::Copy),
+        ("ADD", Opcode::Add),
+        ("SUB", Opcode::Sub),
+        ("AND", Opcode::And),
+        ("OR", Opcode::Or),
+        ("XOR", Opcode::Xor),
+        ("CMP_LT", Opcode::CmpLt),
+        ("CMP_LE", Opcode::CmpLe),
+        ("CMP_EQ", Opcode::CmpEq),
+        ("CMP_NE", Opcode::CmpNe),
+        ("CMP_GT", Opcode::CmpGt),
+        ("CMP_GE", Opcode::CmpGe),
+        ("MIN", Opcode::Min),
+        ("MAX", Opcode::Max),
+        ("ABSDIFF", Opcode::AbsDiff),
+        ("MUL", Opcode::Mul),
+        ("SHR", Opcode::Shr),
+        ("SHL", Opcode::Shl),
+    ] {
+        assert_eq!(field(&j, name), op as i64, "opcode {name}");
+    }
+}
+
+#[test]
+fn src_selectors_match() {
+    let j = isa_json();
+    assert_eq!(field(&j, "LEFT"), isa::S_LEFT as i64);
+    assert_eq!(field(&j, "RIGHT"), isa::S_RIGHT as i64);
+    assert_eq!(field(&j, "UP"), isa::S_UP as i64);
+    assert_eq!(field(&j, "DOWN"), isa::S_DOWN as i64);
+    assert_eq!(field(&j, "IMM"), isa::S_IMM as i64);
+    assert_eq!(field(&j, "COND_M"), isa::F_COND_M as i64);
+    assert_eq!(field(&j, "COND_NOT_M"), isa::F_COND_NOT_M as i64);
+}
+
+#[test]
+fn bit_cycle_model_matches() {
+    let j = isa_json();
+    // The exported arrays are `[c0, c1, ...]` after "bit_cycles_w8":.
+    let at = j.find("\"bit_cycles_w8\":").expect("bit_cycles_w8");
+    let list: Vec<u64> = j[at..]
+        .chars()
+        .skip_while(|&c| c != '[')
+        .skip(1)
+        .take_while(|&c| c != ']')
+        .collect::<String>()
+        .split(',')
+        .map(|s| s.trim().parse().unwrap())
+        .collect();
+    assert_eq!(list.len(), isa::N_OPS as usize);
+    for code in 0..isa::N_OPS {
+        let op = Opcode::decode(code).unwrap();
+        assert_eq!(list[code as usize], op.bit_cycles(8), "opcode {code}");
+    }
+}

@@ -1,0 +1,200 @@
+//! The paper's complexity claims as enforced assertions (the test-suite
+//! twin of `benches/paper.rs`): if a refactor breaks a cycle count or an
+//! N-independence property, this fails `cargo test`.
+
+use cpm::algos::{histogram, lines, local_ops, reduce, sort, template, threshold};
+use cpm::device::comparable::{CmpCode, ContentComparableMemory, FieldSpec};
+use cpm::device::computable::{superconn, Reg, WordEngine};
+use cpm::device::movable::ContentMovableMemory;
+use cpm::device::searchable::ContentSearchableMemory;
+use cpm::util::rng::Rng;
+
+fn engine_with(vals: &[i32]) -> WordEngine {
+    let mut e = WordEngine::new(vals.len().max(1), 16);
+    e.load_plane(Reg::Nb, vals);
+    e.reset_cost();
+    e
+}
+
+#[test]
+fn claim_insertion_is_constant_in_n() {
+    // §4: inserting k bytes costs k concurrent cycles at any device size.
+    let mut cycles = Vec::new();
+    for n in [1usize << 8, 1 << 14, 1 << 18] {
+        let mut dev = ContentMovableMemory::new(n + 16);
+        dev.write_slice(0, &vec![1u8; n]).unwrap();
+        dev.reset_cost();
+        dev.open_gap(2, 8, n).unwrap();
+        cycles.push(dev.cost().macro_cycles);
+    }
+    assert!(cycles.iter().all(|&c| c == 8), "{cycles:?}");
+}
+
+#[test]
+fn claim_search_is_m_cycles() {
+    // §5: ~M cycles regardless of text length.
+    let mut rng = Rng::new(1);
+    for n in [1usize << 10, 1 << 16] {
+        let text: Vec<u8> = (0..n).map(|_| b'a' + rng.range(0, 3) as u8).collect();
+        let mut dev = ContentSearchableMemory::new(n);
+        dev.load(0, &text);
+        for m in [1usize, 4, 16] {
+            let pattern = vec![b'a'; m];
+            dev.reset_cost();
+            dev.find_substring(&pattern, 0, n - 1);
+            // M match steps + 1 readout (+ per-hit exclusive streaming).
+            assert_eq!(dev.cost().macro_cycles, m as u64 + 1, "n={n} m={m}");
+        }
+    }
+}
+
+#[test]
+fn claim_compare_is_constant_in_rows() {
+    // §6: field compare cost depends on field width only.
+    let mut costs = Vec::new();
+    for n in [64usize, 65_536] {
+        let item = 4;
+        let field = FieldSpec { offset: 0, len: 2 };
+        let mut dev = ContentComparableMemory::new(n * item);
+        let mut bytes = vec![0u8; n * item];
+        let mut rng = Rng::new(2);
+        for i in 0..n {
+            bytes[i * item] = rng.range(0, 256) as u8;
+            bytes[i * item + 1] = rng.range(0, 256) as u8;
+        }
+        dev.load(0, &bytes);
+        dev.reset_cost();
+        dev.compare_field(0, item, n, field, CmpCode::Le, &1234u16.to_be_bytes());
+        costs.push(dev.cost().macro_cycles);
+    }
+    assert_eq!(costs[0], costs[1]);
+    assert!(costs[0] <= 8, "2-byte ladder: {}", costs[0]);
+}
+
+#[test]
+fn claim_histogram_is_2m_cycles() {
+    let mut rng = Rng::new(3);
+    let vals = rng.vec_i32(4096, 0, 1000);
+    let bounds: Vec<i32> = (1..32).map(|k| k * 30).collect();
+    let mut e = engine_with(&vals);
+    histogram::histogram_words(&mut e, vals.len(), &bounds);
+    assert_eq!(e.cost().macro_cycles, 2 * bounds.len() as u64);
+}
+
+#[test]
+fn claim_gaussians_match_paper_cycle_counts() {
+    let vals = vec![1i32; 256];
+    assert_eq!(local_ops::run_local_op(&vals, local_ops::GAUSS_3).1, 4);
+    assert_eq!(local_ops::run_local_op(&vals, local_ops::GAUSS_5).1, 8);
+    let img = vec![1i32; 16 * 16];
+    assert_eq!(local_ops::run_local_op_2d(&img, 16, local_ops::GAUSS_9).1, 8);
+}
+
+#[test]
+fn claim_sum_minimum_at_sqrt_n() {
+    let mut rng = Rng::new(4);
+    let n = 16_384usize;
+    let vals = rng.vec_i32(n, -10, 10);
+    let sqrt = 128usize;
+    let at_sqrt = {
+        let mut e = engine_with(&vals);
+        reduce::sum_1d(&mut e, n, sqrt).total_cycles()
+    };
+    for m in [sqrt / 4, sqrt / 2, sqrt * 2, sqrt * 4] {
+        let mut e = engine_with(&vals);
+        let c = reduce::sum_1d(&mut e, n, m).total_cycles();
+        assert!(at_sqrt <= c, "M={m}: {c} < {at_sqrt} at √N");
+    }
+    assert_eq!(at_sqrt, 2 * sqrt as u64 - 1);
+}
+
+#[test]
+fn claim_template_search_independent_of_n() {
+    let mut rng = Rng::new(5);
+    let tmpl = rng.vec_i32(8, 0, 100);
+    let mut cycles = Vec::new();
+    for n in [512usize, 8192] {
+        let vals = rng.vec_i32(n, 0, 100);
+        let mut e = WordEngine::new(n, 16);
+        cycles.push(template::search_1d(&mut e, &vals, &tmpl).cycles);
+    }
+    assert_eq!(cycles[0], cycles[1]);
+    // And within a small constant of M².
+    assert!(cycles[0] <= 2 * 8 * 8, "M=8: {} cycles", cycles[0]);
+}
+
+#[test]
+fn claim_threshold_is_one_compare() {
+    let mut rng = Rng::new(6);
+    let vals = rng.vec_i32(1 << 18, 0, 100);
+    let mut e = engine_with(&vals);
+    threshold::threshold_mark(&mut e, vals.len(), 50);
+    assert_eq!(e.cost().macro_cycles, 2); // compare + parallel count
+}
+
+#[test]
+fn claim_line_detection_independent_of_image() {
+    let mut rng = Rng::new(7);
+    let c1 = {
+        let img = rng.vec_i32(24 * 24, 0, 99);
+        let mut e = engine_with(&img);
+        lines::detect_lines(&mut e, 24, 24, 3)
+    };
+    let c2 = {
+        let img = rng.vec_i32(96 * 48, 0, 99);
+        let mut e = engine_with(&img);
+        lines::detect_lines(&mut e, 96, 48, 3)
+    };
+    assert_eq!(c1, c2);
+}
+
+#[test]
+fn claim_superconn_is_logarithmic() {
+    let mut rng = Rng::new(8);
+    for n in [256usize, 65_536] {
+        let vals = rng.vec_i32(n, -5, 5);
+        let mut e = engine_with(&vals);
+        let (total, cost) = superconn::global_sum_log(&mut e, n);
+        assert_eq!(total, vals.iter().map(|&v| v as i64).sum::<i64>());
+        let bound = 2 * (n as f64).log2().ceil() as u64 + 1;
+        assert!(cost.macro_cycles <= bound, "n={n}: {}", cost.macro_cycles);
+    }
+}
+
+#[test]
+fn claim_sort_flat_on_sparse_local_disorder() {
+    // §7.7: nearly-sorted arrays with sparse point defects cost ~defects,
+    // not ~N.
+    let mut rng = Rng::new(9);
+    let mut cycles = Vec::new();
+    for n in [1usize << 10, 1 << 13] {
+        let mut vals: Vec<i32> = (0..n as i32).map(|i| i * 2).collect();
+        for _ in 0..8 {
+            let i = rng.range(0, n - 4);
+            let j = i + rng.range(1, 4);
+            vals.swap(i, j);
+        }
+        let mut e = engine_with(&vals);
+        let stats = sort::sort_sqrt(&mut e, n);
+        assert!(e.plane(Reg::Nb)[..n].windows(2).all(|w| w[0] <= w[1]));
+        cycles.push(stats.cycles);
+    }
+    // 8x more data, same defect count -> comparable cycles (within 3x).
+    assert!(cycles[1] < cycles[0] * 3, "{cycles:?}");
+}
+
+#[test]
+fn claim_bus_traffic_is_readout_only() {
+    // §2: CPM eliminates processing-purpose bus streaming — a compare over
+    // 64k items moves only the result readout across the bus.
+    let n = 65_536usize;
+    let item = 2;
+    let field = FieldSpec { offset: 0, len: 1 };
+    let mut dev = ContentComparableMemory::new(n * item);
+    dev.load(0, &vec![7u8; n * item]);
+    dev.reset_cost();
+    dev.compare_field(0, item, n, field, CmpCode::Eq, &[9]);
+    let hits = dev.selected_items(0, item, n, field);
+    assert!(hits.is_empty());
+    assert_eq!(dev.cost().bus_words, 0, "no hits -> no bus words");
+}
