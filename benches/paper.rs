@@ -128,7 +128,8 @@ fn e4_compare() {
             .len();
         assert_eq!(cpm_hits, scan_hits);
         let mut idx_build = SerialMachine::new();
-        let idx = SortedIndex::build(&mut idx_build, &values.iter().map(|&v| v as i64).collect::<Vec<_>>());
+        let values_i64: Vec<i64> = values.iter().map(|&v| v as i64).collect();
+        let idx = SortedIndex::build(&mut idx_build, &values_i64);
         let mut idx_probe = SerialMachine::new();
         idx.range(&mut idx_probe, 0, 5000);
         r.row(&[
@@ -577,7 +578,12 @@ fn e19_engines() {
         "bit-serial-faithful".into(),
     ]);
 
-    match cpm::runtime::PjrtBackend::new("artifacts") {
+    let backend_label = if cfg!(feature = "pjrt") {
+        "XLA/Pallas (PJRT)"
+    } else {
+        "trace interpreter"
+    };
+    match cpm::runtime::Backend::new("artifacts") {
         Ok(mut backend) => {
             let shape = cpm::runtime::TraceShape { p, t: 128 };
             let mut word2 = WordEngine::new(p, 16);
@@ -593,9 +599,9 @@ fn e19_engines() {
                 let mut w = WordEngine::new(p, 16);
                 w.set_state(&state);
                 w.run(&trace);
-                assert_eq!(final_state, w.state(), "XLA/Pallas != word engine");
+                assert_eq!(final_state, w.state(), "trace backend != word engine");
                 r.row(&[
-                    "XLA/Pallas (PJRT)".into(),
+                    backend_label.into(),
                     p.to_string(),
                     trace.len().to_string(),
                     format!("{:.0}", x_ns as f64 / 1e3),
@@ -605,7 +611,7 @@ fn e19_engines() {
         }
         Err(e) => {
             r.row(&[
-                "XLA/Pallas (PJRT)".into(),
+                backend_label.into(),
                 "-".into(),
                 "-".into(),
                 "-".into(),
@@ -613,7 +619,7 @@ fn e19_engines() {
             ]);
         }
     }
-    r.print("E19 engine parity + relative speed (word vs bit vs AOT XLA)");
+    r.print("E19 engine parity + relative speed (word vs bit vs trace backend)");
 }
 
 fn main() {

@@ -55,7 +55,7 @@ impl Report {
             cells
                 .iter()
                 .zip(widths)
-                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .map(|(c, &w)| format!("{c:>w$}"))
                 .collect::<Vec<_>>()
                 .join("  ")
         };

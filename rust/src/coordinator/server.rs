@@ -1,21 +1,27 @@
 //! The smart-memory server: request routing over a device pool.
 //!
 //! Clients submit [`Request`]s; the server routes SQL to the comparable-
-//! memory table, substring searches to the searchable memory, and array
-//! jobs (sum/max/sort/threshold/histogram) to the computable memory —
-//! one shared SIMD device pool serving many tasks (§2's networked SQL
-//! engine; E17's end-to-end driver).
+//! memory table, substring searches and copy-free edits to the combined
+//! searchable+movable corpus (§5.3), and array jobs
+//! (sum/max/sort/threshold/histogram) to the computable memory — one
+//! shared SIMD device pool serving many tasks (§2's networked SQL engine;
+//! E17's end-to-end driver). All four CPM family members are reachable
+//! through [`CpmServer::handle`].
 
 use std::time::Instant;
 
 use crate::algos::{histogram, reduce, sort, threshold};
 use crate::cycles::ConcurrentCost;
 use crate::device::computable::{Reg, WordEngine};
-use crate::device::searchable::ContentSearchableMemory;
+use crate::device::mutable_search::MutableSearchableMemory;
 use crate::error::{CpmError, Result};
 use crate::sql::{Query, QueryResult, Schema, Table};
 
 use super::metrics::Metrics;
+
+/// Spare PEs kept beyond the initial corpus so concurrent-move edits
+/// (insertions) have room to shift into.
+const CORPUS_SLACK: usize = 4096;
 
 /// A client request.
 #[derive(Debug, Clone)]
@@ -24,6 +30,14 @@ pub enum Request {
     Sql(String),
     /// Substring search in the resident corpus.
     Search(Vec<u8>),
+    /// Insert bytes into the resident corpus at a byte offset (content
+    /// movable memory, §4: ~len concurrent cycles, no memmove).
+    Insert(usize, Vec<u8>),
+    /// Delete a byte range `(offset, len)` from the resident corpus.
+    Delete(usize, usize),
+    /// Replace every occurrence of a pattern in the corpus (§5.3's
+    /// combined search + move device).
+    Replace(Vec<u8>, Vec<u8>),
     /// Sum of an ad-hoc array.
     Sum(Vec<i32>),
     /// Maximum of an ad-hoc array.
@@ -51,12 +65,11 @@ pub enum Response {
     Histogram(Vec<usize>),
 }
 
-/// The server: one table, one text corpus, one computable engine.
+/// The server: one table, one editable text corpus, one computable engine.
 #[derive(Debug)]
 pub struct CpmServer {
     table: Table,
-    corpus: ContentSearchableMemory,
-    corpus_len: usize,
+    corpus: MutableSearchableMemory,
     engine_capacity: usize,
     /// Service metrics.
     pub metrics: Metrics,
@@ -64,14 +77,14 @@ pub struct CpmServer {
 
 impl CpmServer {
     /// Build a server with a table schema + capacity, a text corpus, and a
-    /// computable-memory capacity for ad-hoc array jobs.
+    /// computable-memory capacity for ad-hoc array jobs. The corpus device
+    /// keeps [`CORPUS_SLACK`] spare PEs for copy-free insertions.
     pub fn new(schema: Schema, max_rows: usize, corpus: &[u8], engine_capacity: usize) -> Self {
-        let mut mem = ContentSearchableMemory::new(corpus.len().max(1));
-        mem.load(0, corpus);
+        let mut mem = MutableSearchableMemory::new(corpus.len() + CORPUS_SLACK);
+        mem.load(corpus).expect("corpus fits its own device");
         CpmServer {
             table: Table::new(schema, max_rows),
             corpus: mem,
-            corpus_len: corpus.len(),
             engine_capacity,
             metrics: Metrics::default(),
         }
@@ -90,8 +103,8 @@ impl CpmServer {
         &self.table
     }
 
-    /// Serve one request.
-    pub fn serve(&mut self, req: &Request) -> Result<Response> {
+    /// Handle one request — the request-routing entry point.
+    pub fn handle(&mut self, req: &Request) -> Result<Response> {
         let start = Instant::now();
         let out = self.dispatch(req);
         self.metrics.requests += 1;
@@ -100,6 +113,12 @@ impl CpmServer {
         }
         self.metrics.latency.record(start.elapsed());
         out
+    }
+
+    /// Alias for [`CpmServer::handle`] (the original name; kept for
+    /// existing callers).
+    pub fn serve(&mut self, req: &Request) -> Result<Response> {
+        self.handle(req)
     }
 
     fn charge(&mut self, cost: ConcurrentCost) {
@@ -118,14 +137,32 @@ impl CpmServer {
                 Ok(Response::Sql(r))
             }
             Request::Search(pattern) => {
-                if self.corpus_len == 0 {
-                    return Ok(Response::Matches(Vec::new()));
-                }
                 self.corpus.reset_cost();
-                let hits = self.corpus.find_substring(pattern, 0, self.corpus_len - 1);
+                let hits = self.corpus.find(pattern);
                 let cost = self.corpus.cost();
                 self.charge(cost);
                 Ok(Response::Matches(hits))
+            }
+            Request::Insert(at, data) => {
+                self.corpus.reset_cost();
+                self.corpus.insert(*at, data)?;
+                let cost = self.corpus.cost();
+                self.charge(cost);
+                Ok(Response::Scalar(self.corpus.len() as i64))
+            }
+            Request::Delete(at, len) => {
+                self.corpus.reset_cost();
+                self.corpus.delete(*at, *len)?;
+                let cost = self.corpus.cost();
+                self.charge(cost);
+                Ok(Response::Scalar(self.corpus.len() as i64))
+            }
+            Request::Replace(pattern, replacement) => {
+                self.corpus.reset_cost();
+                let n = self.corpus.replace_all(pattern, replacement)?;
+                let cost = self.corpus.cost();
+                self.charge(cost);
+                Ok(Response::Scalar(n as i64))
             }
             Request::Sum(values) => {
                 let mut e = self.engine_for(values)?;
@@ -185,7 +222,8 @@ mod tests {
 
     fn server() -> CpmServer {
         let schema = Schema::new(&[("price", 2), ("qty", 1)]).unwrap();
-        let mut s = CpmServer::new(schema, 256, b"the quick brown fox jumps over the lazy dog", 1 << 16);
+        let corpus = b"the quick brown fox jumps over the lazy dog";
+        let mut s = CpmServer::new(schema, 256, corpus, 1 << 16);
         let mut rng = Rng::new(201);
         let rows: Vec<Vec<u64>> = (0..200)
             .map(|_| vec![rng.below(10_000), rng.below(100)])

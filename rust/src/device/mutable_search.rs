@@ -22,6 +22,11 @@ pub struct MutableSearchableMemory {
     used: usize,
     /// Search-side cost (the movable member tracks move/IO cost).
     extra: ConcurrentCost,
+    /// Cached searchable view of the current content. In hardware the two
+    /// rule sets share the same cells; host-side we rebuild the view only
+    /// after a content change, so repeated searches don't re-copy the
+    /// corpus.
+    view: Option<ContentSearchableMemory>,
 }
 
 impl MutableSearchableMemory {
@@ -31,6 +36,7 @@ impl MutableSearchableMemory {
             mem: ContentMovableMemory::new(size),
             used: 0,
             extra: ConcurrentCost::default(),
+            view: None,
         }
     }
 
@@ -38,6 +44,7 @@ impl MutableSearchableMemory {
     pub fn load(&mut self, data: &[u8]) -> Result<()> {
         self.mem.write_slice(0, data)?;
         self.used = data.len();
+        self.view = None;
         Ok(())
     }
 
@@ -62,6 +69,7 @@ impl MutableSearchableMemory {
         self.mem.open_gap(at, data.len(), self.used)?;
         self.mem.write_slice(at, data)?;
         self.used += data.len();
+        self.view = None;
         Ok(())
     }
 
@@ -69,27 +77,35 @@ impl MutableSearchableMemory {
     pub fn delete(&mut self, at: usize, len: usize) -> Result<()> {
         self.mem.close_gap(at, len, self.used)?;
         self.used -= len;
+        self.view = None;
         Ok(())
     }
 
     /// Replace all occurrences of `pattern` with `replacement` (search via
     /// the storage-bit propagation, edits via concurrent moves). Returns
-    /// the number of replacements.
+    /// the number of replacements. Standard replace-all semantics: the
+    /// scan resumes *after* each replacement, so a replacement that
+    /// contains the pattern is not re-matched (no runaway growth).
     pub fn replace_all(&mut self, pattern: &[u8], replacement: &[u8]) -> Result<usize> {
+        if pattern.is_empty() {
+            return Ok(0);
+        }
         let mut count = 0;
+        let mut search_from = 0usize;
         loop {
             let hits = self.find(pattern);
-            let Some(&end_pos) = hits.first() else {
+            // First occurrence starting at or after the scan cursor.
+            let Some(start) = hits
+                .iter()
+                .map(|&end| end + 1 - pattern.len())
+                .find(|&s| s >= search_from)
+            else {
                 break;
             };
-            let start = end_pos + 1 - pattern.len();
             self.delete(start, pattern.len())?;
             self.insert(start, replacement)?;
+            search_from = start + replacement.len();
             count += 1;
-            // Guard pathological self-reproducing replacements.
-            if count > self.mem.len() {
-                break;
-            }
         }
         Ok(count)
     }
@@ -100,28 +116,43 @@ impl MutableSearchableMemory {
             return Vec::new();
         }
         // Run the searchable member's match ladder over the current cells.
-        let mut s = ContentSearchableMemory::new(self.used);
-        s.load(0, &self.mem.cells()[..self.used]);
-        s.match_step(pattern[0], 0xFF, MatchCode::Eq, true, 0, self.used - 1);
-        for &ch in &pattern[1..] {
-            s.match_step(ch, 0xFF, MatchCode::Eq, false, 0, self.used - 1);
+        // The view is a host-side modelling convenience (the combined PE
+        // executes both rulesets in the same cells): it is rebuilt only
+        // after a content change, and only the broadcast cycles are
+        // charged — the rebuild is not a device data copy.
+        let used = self.used;
+        if self.view.is_none() {
+            let mut s = ContentSearchableMemory::new(used);
+            s.load(0, &self.mem.cells()[..used]);
+            s.reset_cost();
+            self.view = Some(s);
         }
-        // Charge only the broadcast cycles: the combined PE executes both
-        // rulesets in place — the temporary ContentSearchableMemory above
-        // is a host-side modelling convenience, not a device data copy.
-        let c = s.cost();
+        let view = self.view.as_mut().expect("view was just built");
+        let before = view.cost();
+        view.match_step(pattern[0], 0xFF, MatchCode::Eq, true, 0, used - 1);
+        for &ch in &pattern[1..] {
+            view.match_step(ch, 0xFF, MatchCode::Eq, false, 0, used - 1);
+        }
+        let hits = view.readout_matches();
+        let after = view.cost();
         self.extra += ConcurrentCost {
-            macro_cycles: c.macro_cycles,
-            bit_cycles: c.bit_cycles,
+            macro_cycles: after.macro_cycles - before.macro_cycles,
+            bit_cycles: after.bit_cycles - before.bit_cycles,
             exclusive_ops: 0,
             bus_words: 0,
         };
-        s.readout_matches()
+        hits
     }
 
     /// Combined accumulated cost (moves + searches).
     pub fn cost(&self) -> ConcurrentCost {
         self.mem.cost() + self.extra
+    }
+
+    /// Reset the cost counters (between requests).
+    pub fn reset_cost(&mut self) {
+        self.mem.reset_cost();
+        self.extra = ConcurrentCost::default();
     }
 
     /// Refresh the DRAM cells (§4.1) — 2 cycles over the used range.
@@ -183,6 +214,30 @@ mod tests {
         d.insert(1, b"abc").unwrap(); // 7999-byte tail moves
         let cycles = d.cost().macro_cycles - before;
         assert_eq!(cycles, 3, "3 concurrent moves regardless of tail size");
+    }
+
+    #[test]
+    fn replace_all_terminates_when_replacement_contains_pattern() {
+        // Regression: the scan must resume after the replacement, or
+        // "fox" -> "foxy" re-matches its own output forever.
+        let mut d = MutableSearchableMemory::new(128);
+        d.load(b"the fox and the fox").unwrap();
+        let n = d.replace_all(b"fox", b"foxy").unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(d.content(), b"the foxy and the foxy");
+        assert_eq!(d.replace_all(b"", b"zz").unwrap(), 0);
+    }
+
+    #[test]
+    fn repeated_searches_reuse_the_cached_view() {
+        let mut d = MutableSearchableMemory::new(64);
+        d.load(b"abcabc").unwrap();
+        assert_eq!(d.find(b"abc"), vec![2, 5]);
+        assert_eq!(d.find(b"abc"), vec![2, 5]); // served from the cache
+        d.insert(0, b"x").unwrap(); // edit invalidates the view
+        assert_eq!(d.find(b"abc"), vec![3, 6]);
+        d.delete(0, 1).unwrap();
+        assert_eq!(d.find(b"abc"), vec![2, 5]);
     }
 
     #[test]

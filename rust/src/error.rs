@@ -1,51 +1,137 @@
 //! Error types for the CPM library.
+//!
+//! Hand-rolled `Display`/`Error` impls — the offline crate set has no
+//! `thiserror`, and the default build must stay dependency-free.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Library-wide error type.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum CpmError {
     /// An activation range (Rule 4) that does not fit the device.
-    #[error("invalid activation range: start={start} end={end} carry={carry} (device has {pes} PEs)")]
     InvalidRange {
+        /// Rule 4 start address.
         start: usize,
+        /// Rule 4 end address (inclusive).
         end: usize,
+        /// Rule 4 carry number.
         carry: usize,
+        /// Device size in PEs.
         pes: usize,
     },
 
     /// Addressed access outside the device.
-    #[error("address {addr} out of range (device has {size} addressable registers)")]
-    AddressOutOfRange { addr: usize, size: usize },
+    AddressOutOfRange {
+        /// Offending address.
+        addr: usize,
+        /// Device size in addressable registers.
+        size: usize,
+    },
 
     /// Register selector outside the PE register file.
-    #[error("invalid register selector {sel}")]
-    InvalidRegister { sel: i32 },
+    InvalidRegister {
+        /// Offending selector code.
+        sel: i32,
+    },
 
     /// Malformed macro instruction.
-    #[error("invalid instruction: {0}")]
     InvalidInstruction(String),
 
     /// Object-manager failures (content movable memory, §4.2).
-    #[error("object error: {0}")]
     Object(String),
 
     /// SQL engine failures (§6.2).
-    #[error("sql error: {0}")]
     Sql(String),
 
-    /// PJRT runtime failures (artifact loading / execution).
-    #[error("runtime error: {0}")]
+    /// Runtime failures (trace execution / artifact loading).
     Runtime(String),
 
     /// Coordinator / scheduling failures.
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// I/O while loading artifacts or workloads.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for CpmError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CpmError::InvalidRange {
+                start,
+                end,
+                carry,
+                pes,
+            } => write!(
+                f,
+                "invalid activation range: start={start} end={end} carry={carry} \
+                 (device has {pes} PEs)"
+            ),
+            CpmError::AddressOutOfRange { addr, size } => write!(
+                f,
+                "address {addr} out of range (device has {size} addressable registers)"
+            ),
+            CpmError::InvalidRegister { sel } => {
+                write!(f, "invalid register selector {sel}")
+            }
+            CpmError::InvalidInstruction(msg) => write!(f, "invalid instruction: {msg}"),
+            CpmError::Object(msg) => write!(f, "object error: {msg}"),
+            CpmError::Sql(msg) => write!(f, "sql error: {msg}"),
+            CpmError::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            CpmError::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
+            CpmError::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for CpmError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CpmError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CpmError {
+    fn from(e: std::io::Error) -> Self {
+        CpmError::Io(e)
+    }
 }
 
 /// Library-wide result alias.
 pub type Result<T> = std::result::Result<T, CpmError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_are_stable() {
+        let e = CpmError::InvalidRange {
+            start: 2,
+            end: 1,
+            carry: 1,
+            pes: 8,
+        };
+        assert_eq!(
+            e.to_string(),
+            "invalid activation range: start=2 end=1 carry=1 (device has 8 PEs)"
+        );
+        assert_eq!(
+            CpmError::AddressOutOfRange { addr: 9, size: 4 }.to_string(),
+            "address 9 out of range (device has 4 addressable registers)"
+        );
+        assert_eq!(
+            CpmError::Sql("bad token".into()).to_string(),
+            "sql error: bad token"
+        );
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: CpmError = io.into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -5,7 +5,9 @@
 //! * `sql --rows N`             — run SQL queries against a generated table
 //! * `search --pattern STR`     — substring search demo
 //! * `physics`                  — §8 feasibility numbers (Eq 8-1)
-//! * `runtime-check`            — load + execute the AOT artifacts via PJRT
+//! * `runtime-check`            — execute a trace on the active backend
+//!   (the pure-Rust interpreter by default; PJRT with `--features pjrt`)
+//!   and cross-check it against the word engine
 
 use cpm::cli::Cli;
 use cpm::coordinator::{CpmServer, Request};
@@ -13,7 +15,7 @@ use cpm::device::computable::isa::N_REGS;
 use cpm::device::computable::{Instr, Opcode, Reg, Src};
 use cpm::device::control::ControlUnit;
 use cpm::physics;
-use cpm::runtime::PjrtBackend;
+use cpm::runtime::Backend;
 use cpm::sql::Schema;
 use cpm::util::rng::Rng;
 
@@ -121,14 +123,14 @@ fn physics_cmd(_cli: &Cli) -> cpm::Result<()> {
 
 fn runtime_check(cli: &Cli) -> cpm::Result<()> {
     let dir = cli.get_str("artifacts").unwrap_or("artifacts").to_string();
-    let mut backend = PjrtBackend::new(&dir)?;
+    let mut backend = Backend::new(&dir)?;
     let shapes = backend.available_traces();
-    println!("artifacts in {dir}: {shapes:?}");
+    println!("trace shapes from {dir}: {shapes:?}");
     let shape = shapes
         .first()
         .copied()
-        .ok_or_else(|| cpm::CpmError::Runtime("no trace artifacts found".into()))?;
-    // Run the (1 2 1) Gaussian through the XLA backend and cross-check.
+        .ok_or_else(|| cpm::CpmError::Runtime("no trace shapes available".into()))?;
+    // Run the (1 2 1) Gaussian through the backend and cross-check.
     let p = shape.p;
     let mut state = vec![0i32; N_REGS * p];
     for i in 0..p {
@@ -144,7 +146,7 @@ fn runtime_check(cli: &Cli) -> cpm::Result<()> {
     let mut word = cpm::device::computable::WordEngine::new(p, 16);
     word.set_state(&state);
     word.run(&trace);
-    assert_eq!(&final_state[..], &word.state()[..], "XLA != word engine");
+    assert_eq!(&final_state[..], &word.state()[..], "backend != word engine");
     println!(
         "runtime-check OK: trace p={} t={} matches the word engine; match counts head {:?}; dispatches {}",
         shape.p,

@@ -1,24 +1,42 @@
-//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts and execute
-//! PE-plane traces through XLA.
+//! Trace-execution backends for the computable-memory PE plane.
 //!
-//! Python runs only at build time (`make artifacts`): `python/compile/aot.py`
-//! lowers the L2 trace model (whose inner step is the L1 Pallas kernel) to
-//! HLO **text**, and this module loads it with
-//! `HloModuleProto::from_text_file`, compiles it on the PJRT CPU client and
-//! executes it from the request path — Python is never on the hot path.
+//! Two interchangeable backends share one API (`new` / `load_trace` /
+//! `load_step` / `available_traces` / `pick_shape` / `run_step` /
+//! `run_trace` / `run_chained` and a public `dispatches` counter):
 //!
-//! Artifacts (see `artifacts/manifest.json`):
-//! * `pe_step_p{P}.hlo.txt` — one concurrent cycle over a P-PE plane,
-//! * `pe_trace_p{P}_t{T}.hlo.txt` — a `lax.scan` over T instruction words
-//!   (one PJRT dispatch per T cycles — the dispatch amortization).
+//! * [`TraceInterpreter`] — the default: a pure-Rust executor that decodes
+//!   wire-format instruction words and steps them through the
+//!   [`WordEngine`]. Dependency-free and offline; it honors the same
+//!   dispatch-window discipline (pad-to-T, chain windows) as the compiled
+//!   backend, so the dispatch-amortization accounting stays comparable.
+//! * [`pjrt::PjrtBackend`] (feature `pjrt`) — loads the AOT-compiled
+//!   JAX/Pallas artifacts produced by `python/compile/aot.py` and executes
+//!   them through XLA's PJRT CPU client. Python runs only at build time
+//!   (`make artifacts`); see `src/runtime/pjrt.rs`.
+//!
+//! [`Backend`] aliases whichever backend the feature set selects, so
+//! callers (CLI `runtime-check`, `benches/paper.rs` E19, the
+//! engine-equivalence tests) are written once against the shared API.
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use crate::device::computable::isa::{Instr, INSTR_WIDTH, N_REGS};
+use crate::device::computable::{Reg, WordEngine};
 use crate::error::{CpmError, Result};
 
-/// Trace-executable variants available in the artifact directory.
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+/// The backend selected by the current feature set.
+#[cfg(feature = "pjrt")]
+pub type Backend = pjrt::PjrtBackend;
+/// The backend selected by the current feature set.
+#[cfg(not(feature = "pjrt"))]
+pub type Backend = TraceInterpreter;
+
+/// Trace-executable variants (PE-plane width × dispatch-window length).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct TraceShape {
     /// PE-plane width.
@@ -27,133 +45,156 @@ pub struct TraceShape {
     pub t: usize,
 }
 
-/// The PJRT backend: a CPU client plus compiled executables per shape.
-pub struct PjrtBackend {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    traces: HashMap<TraceShape, xla::PjRtLoadedExecutable>,
-    steps: HashMap<usize, xla::PjRtLoadedExecutable>,
-    /// PJRT dispatches issued (perf accounting).
-    pub dispatches: u64,
-}
-
-impl std::fmt::Debug for PjrtBackend {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("PjrtBackend")
-            .field("dir", &self.dir)
-            .field("traces", &self.traces.keys().collect::<Vec<_>>())
-            .field("steps", &self.steps.keys().collect::<Vec<_>>())
-            .finish()
+impl TraceShape {
+    /// Pick the smallest shape fitting `p` PEs, preferring the largest
+    /// trace window for dispatch amortization.
+    pub fn pick(shapes: &[TraceShape], p: usize) -> Option<TraceShape> {
+        shapes
+            .iter()
+            .copied()
+            .filter(|s| s.p >= p)
+            .min_by_key(|s| (s.p, usize::MAX - s.t))
     }
 }
 
-impl PjrtBackend {
-    /// Create a CPU PJRT client rooted at the artifact directory.
-    pub fn new<P: AsRef<Path>>(artifact_dir: P) -> Result<Self> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| CpmError::Runtime(format!("PjRtClient::cpu: {e}")))?;
-        Ok(PjrtBackend {
-            client,
-            dir: artifact_dir.as_ref().to_path_buf(),
-            traces: HashMap::new(),
-            steps: HashMap::new(),
-            dispatches: 0,
-        })
-    }
-
-    fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| CpmError::Runtime("non-utf8 artifact path".into()))?,
-        )
-        .map_err(|e| CpmError::Runtime(format!("parse {path:?}: {e}")))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .map_err(|e| CpmError::Runtime(format!("compile {path:?}: {e}")))
-    }
-
-    /// Ensure the trace executable for `shape` is compiled and cached.
-    pub fn load_trace(&mut self, shape: TraceShape) -> Result<()> {
-        if self.traces.contains_key(&shape) {
-            return Ok(());
-        }
-        let path = self
-            .dir
-            .join(format!("pe_trace_p{}_t{}.hlo.txt", shape.p, shape.t));
-        let exe = self.compile(&path)?;
-        self.traces.insert(shape, exe);
-        Ok(())
-    }
-
-    /// Ensure the single-step executable for plane width `p` is cached.
-    pub fn load_step(&mut self, p: usize) -> Result<()> {
-        if self.steps.contains_key(&p) {
-            return Ok(());
-        }
-        let path = self.dir.join(format!("pe_step_p{p}.hlo.txt"));
-        let exe = self.compile(&path)?;
-        self.steps.insert(p, exe);
-        Ok(())
-    }
-
-    /// Available trace shapes by probing the artifact directory.
-    pub fn available_traces(&self) -> Vec<TraceShape> {
-        let mut out = Vec::new();
-        if let Ok(rd) = std::fs::read_dir(&self.dir) {
-            for entry in rd.flatten() {
-                let name = entry.file_name();
-                let name = name.to_string_lossy();
-                if let Some(rest) = name
-                    .strip_prefix("pe_trace_p")
-                    .and_then(|r| r.strip_suffix(".hlo.txt"))
-                {
-                    if let Some((p, t)) = rest.split_once("_t") {
-                        if let (Ok(p), Ok(t)) = (p.parse(), t.parse()) {
-                            out.push(TraceShape { p, t });
-                        }
+/// Probe an artifact directory for `pe_trace_p{P}_t{T}.hlo.txt` files.
+pub(crate) fn probe_artifact_traces(dir: &Path) -> Vec<TraceShape> {
+    let mut out = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for entry in rd.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(rest) = name
+                .strip_prefix("pe_trace_p")
+                .and_then(|r| r.strip_suffix(".hlo.txt"))
+            {
+                if let Some((p, t)) = rest.split_once("_t") {
+                    if let (Ok(p), Ok(t)) = (p.parse(), t.parse()) {
+                        out.push(TraceShape { p, t });
                     }
                 }
             }
         }
-        out.sort_by_key(|s| (s.p, s.t));
-        out
+    }
+    out.sort_by_key(|s| (s.p, s.t));
+    out
+}
+
+/// Encode a trace into wire-format words, NOP-padded to a `t`-instruction
+/// dispatch window (shared by every backend so padding can never diverge).
+pub(crate) fn encode_window(trace: &[Instr], t: usize) -> Vec<i32> {
+    assert!(trace.len() <= t, "trace longer than dispatch window");
+    let mut words = Vec::with_capacity(t * INSTR_WIDTH);
+    for instr in trace {
+        words.extend_from_slice(&instr.encode());
+    }
+    // NOP padding (the all-zero word decodes to NOP).
+    words.resize(t * INSTR_WIDTH, 0);
+    words
+}
+
+/// Dispatch-window shapes the interpreter offers when no artifact
+/// directory is present (it needs no artifacts — any shape executes).
+const DEFAULT_TRACE_SHAPES: &[TraceShape] = &[
+    TraceShape { p: 1024, t: 32 },
+    TraceShape { p: 4096, t: 32 },
+    TraceShape { p: 4096, t: 128 },
+    TraceShape { p: 16384, t: 128 },
+];
+
+/// The pure-Rust trace executor (default backend).
+///
+/// Functionally it is the [`WordEngine`] behind the compiled backend's
+/// dispatch API: every instruction goes through the wire encoding
+/// (`Instr::encode` → `Instr::decode`), traces are NOP-padded to the
+/// shape's window length, and longer traces are chained window by window —
+/// so swapping in the PJRT backend changes performance, not semantics.
+#[derive(Debug)]
+pub struct TraceInterpreter {
+    dir: PathBuf,
+    /// Dispatches issued (perf accounting; one per trace window or step).
+    pub dispatches: u64,
+}
+
+impl TraceInterpreter {
+    /// Create an interpreter rooted at the artifact directory (used only
+    /// to advertise the same shapes a compiled backend would offer).
+    pub fn new<P: AsRef<Path>>(artifact_dir: P) -> Result<Self> {
+        Ok(TraceInterpreter {
+            dir: artifact_dir.as_ref().to_path_buf(),
+            dispatches: 0,
+        })
     }
 
-    /// Pick the smallest artifact shape fitting `p` PEs, preferring the
-    /// largest trace window for dispatch amortization.
+    /// Ensure the trace executable for `shape` is available (always is —
+    /// the interpreter compiles nothing).
+    pub fn load_trace(&mut self, shape: TraceShape) -> Result<()> {
+        if shape.p == 0 || shape.t == 0 {
+            return Err(CpmError::Runtime(format!(
+                "degenerate trace shape p={} t={}",
+                shape.p, shape.t
+            )));
+        }
+        Ok(())
+    }
+
+    /// Ensure the single-step executable for plane width `p` is available.
+    pub fn load_step(&mut self, p: usize) -> Result<()> {
+        if p == 0 {
+            return Err(CpmError::Runtime("degenerate plane width 0".into()));
+        }
+        Ok(())
+    }
+
+    /// Available trace shapes: the artifact directory's, or the default
+    /// set when none exists.
+    pub fn available_traces(&self) -> Vec<TraceShape> {
+        let probed = probe_artifact_traces(&self.dir);
+        if probed.is_empty() {
+            DEFAULT_TRACE_SHAPES.to_vec()
+        } else {
+            probed
+        }
+    }
+
+    /// Pick the smallest shape fitting `p` PEs (largest window preferred).
     pub fn pick_shape(&self, p: usize) -> Option<TraceShape> {
-        self.available_traces()
-            .into_iter()
-            .filter(|s| s.p >= p)
-            .min_by_key(|s| (s.p, usize::MAX - s.t))
+        TraceShape::pick(&self.available_traces(), p)
+    }
+
+    fn exec_words(
+        &mut self,
+        p: usize,
+        state: &[i32],
+        words: &[i32],
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        assert_eq!(state.len(), N_REGS * p);
+        let mut engine = WordEngine::new(p, 32);
+        engine.set_state(state);
+        let mut counts = Vec::with_capacity(words.len() / INSTR_WIDTH);
+        for chunk in words.chunks_exact(INSTR_WIDTH) {
+            let mut buf = [0i32; INSTR_WIDTH];
+            buf.copy_from_slice(chunk);
+            let instr = Instr::decode(&buf).ok_or_else(|| {
+                CpmError::Runtime(format!("undecodable instruction word {buf:?}"))
+            })?;
+            engine.step(&instr);
+            counts.push(engine.plane(Reg::M).iter().filter(|&&m| m != 0).count() as i32);
+        }
+        self.dispatches += 1;
+        Ok((engine.state(), counts))
     }
 
     /// Execute one step: `state` is `i32[N_REGS * p]` row-major planes.
     pub fn run_step(&mut self, p: usize, state: &[i32], instr: &Instr) -> Result<Vec<i32>> {
         self.load_step(p)?;
-        let exe = &self.steps[&p];
-        assert_eq!(state.len(), N_REGS * p);
-        let st = xla::Literal::vec1(state)
-            .reshape(&[N_REGS as i64, p as i64])
-            .map_err(|e| CpmError::Runtime(format!("reshape state: {e}")))?;
-        let iw = instr.encode();
-        let il = xla::Literal::vec1(&iw[..]);
-        self.dispatches += 1;
-        let result = exe
-            .execute::<xla::Literal>(&[st, il])
-            .map_err(|e| CpmError::Runtime(format!("execute step: {e}")))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| CpmError::Runtime(format!("sync: {e}")))?;
-        let out = result
-            .to_tuple1()
-            .map_err(|e| CpmError::Runtime(format!("tuple: {e}")))?;
-        out.to_vec::<i32>()
-            .map_err(|e| CpmError::Runtime(format!("to_vec: {e}")))
+        let (final_state, _) = self.exec_words(p, state, &instr.encode())?;
+        Ok(final_state)
     }
 
     /// Execute a whole trace of up to the shape's T instructions (shorter
-    /// traces are padded with NOPs). Returns `(final_state, match_counts)`.
+    /// traces are padded with NOPs). Returns `(final_state, match_counts)`
+    /// with one match count per window position.
     pub fn run_trace(
         &mut self,
         shape: TraceShape,
@@ -162,37 +203,8 @@ impl PjrtBackend {
     ) -> Result<(Vec<i32>, Vec<i32>)> {
         self.load_trace(shape)?;
         assert_eq!(state.len(), N_REGS * shape.p);
-        assert!(trace.len() <= shape.t, "trace longer than artifact window");
-        let mut words = Vec::with_capacity(shape.t * INSTR_WIDTH);
-        for instr in trace {
-            words.extend_from_slice(&instr.encode());
-        }
-        // NOP padding.
-        words.resize(shape.t * INSTR_WIDTH, 0);
-        let st = xla::Literal::vec1(state)
-            .reshape(&[N_REGS as i64, shape.p as i64])
-            .map_err(|e| CpmError::Runtime(format!("reshape state: {e}")))?;
-        let tr = xla::Literal::vec1(&words)
-            .reshape(&[shape.t as i64, INSTR_WIDTH as i64])
-            .map_err(|e| CpmError::Runtime(format!("reshape trace: {e}")))?;
-        let exe = &self.traces[&shape];
-        self.dispatches += 1;
-        let result = exe
-            .execute::<xla::Literal>(&[st, tr])
-            .map_err(|e| CpmError::Runtime(format!("execute trace: {e}")))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| CpmError::Runtime(format!("sync: {e}")))?;
-        let (final_state, counts) = result
-            .to_tuple2()
-            .map_err(|e| CpmError::Runtime(format!("tuple2: {e}")))?;
-        Ok((
-            final_state
-                .to_vec::<i32>()
-                .map_err(|e| CpmError::Runtime(format!("state vec: {e}")))?,
-            counts
-                .to_vec::<i32>()
-                .map_err(|e| CpmError::Runtime(format!("counts vec: {e}")))?,
-        ))
+        let words = encode_window(trace, shape.t);
+        self.exec_words(shape.p, state, &words)
     }
 
     /// Run an arbitrary-length trace by chaining dispatch windows.
@@ -235,6 +247,8 @@ pub fn unpad_state(state: &[i32], target_p: usize, p: usize) -> Vec<i32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::device::computable::isa::Opcode;
+    use crate::device::computable::Src;
 
     #[test]
     fn pad_unpad_roundtrip() {
@@ -245,5 +259,72 @@ mod tests {
         assert_eq!(unpad_state(&padded, 8, p), state);
         // padding is zero
         assert_eq!(padded[3], 0);
+    }
+
+    #[test]
+    fn shape_pick_prefers_smallest_fit_largest_window() {
+        let shapes = [
+            TraceShape { p: 1024, t: 32 },
+            TraceShape { p: 4096, t: 32 },
+            TraceShape { p: 4096, t: 128 },
+        ];
+        assert_eq!(
+            TraceShape::pick(&shapes, 1000),
+            Some(TraceShape { p: 1024, t: 32 })
+        );
+        assert_eq!(
+            TraceShape::pick(&shapes, 2048),
+            Some(TraceShape { p: 4096, t: 128 })
+        );
+        assert_eq!(TraceShape::pick(&shapes, 1 << 20), None);
+    }
+
+    #[test]
+    fn interpreter_matches_word_engine_through_the_wire_format() {
+        let p = 16;
+        let mut interp = TraceInterpreter::new("no-such-dir").unwrap();
+        let shape = interp.pick_shape(p).unwrap();
+        let mut small = WordEngine::new(p, 32);
+        small.load_plane(Reg::Nb, &(0..p as i32).collect::<Vec<_>>());
+        let state = pad_state(&small.state(), p, shape.p);
+        let trace = vec![
+            Instr::all(Opcode::Copy, Src::Reg(Reg::Nb), Reg::Op),
+            Instr::all(Opcode::Add, Src::Left, Reg::Op),
+            Instr::all(Opcode::CmpGt, Src::Imm, Reg::Op).imm(5),
+        ];
+        let (got, counts) = interp.run_trace(shape, &state, &trace).unwrap();
+        let mut word = WordEngine::new(shape.p, 32);
+        word.set_state(&state);
+        word.run(&trace);
+        assert_eq!(got, word.state());
+        assert_eq!(counts.len(), shape.t);
+        assert_eq!(interp.dispatches, 1);
+    }
+
+    #[test]
+    fn chained_windows_match_one_long_run() {
+        let shape = TraceShape { p: 8, t: 4 };
+        let mut interp = TraceInterpreter::new("no-such-dir").unwrap();
+        let mut word = WordEngine::new(shape.p, 32);
+        word.load_plane(Reg::Nb, &[5, -1, 7, 0, 3, 2, 9, -4]);
+        let state = word.state();
+        let trace: Vec<Instr> = (0..10)
+            .map(|k| match k % 3 {
+                0 => Instr::all(Opcode::Add, Src::Left, Reg::Op),
+                1 => Instr::all(Opcode::Copy, Src::Reg(Reg::Op), Reg::Nb),
+                _ => Instr::all(Opcode::Max, Src::Right, Reg::Op),
+            })
+            .collect();
+        let chained = interp.run_chained(shape, &state, &trace).unwrap();
+        word.run(&trace);
+        assert_eq!(chained, word.state());
+        assert_eq!(interp.dispatches, 3); // ceil(10 / 4) windows
+    }
+
+    #[test]
+    fn degenerate_shapes_error() {
+        let mut interp = TraceInterpreter::new("no-such-dir").unwrap();
+        assert!(interp.load_trace(TraceShape { p: 0, t: 8 }).is_err());
+        assert!(interp.load_step(0).is_err());
     }
 }

@@ -1,0 +1,181 @@
+//! PJRT backend (feature `pjrt`): load the AOT-compiled JAX/Pallas
+//! artifacts and execute PE-plane traces through XLA.
+//!
+//! Python runs only at build time (`make artifacts`): `python/compile/aot.py`
+//! lowers the L2 trace model (whose inner step is the L1 Pallas kernel) to
+//! HLO **text**, and this module loads it with
+//! `HloModuleProto::from_text_file`, compiles it on the PJRT CPU client and
+//! executes it from the request path — Python is never on the hot path.
+//!
+//! Building with this feature requires the `xla` crate (Rust bindings to
+//! xla_extension); it is not part of the offline default build — add it as
+//! a vendored/path dependency before enabling `--features pjrt`.
+//!
+//! Artifacts (see `artifacts/manifest.json`):
+//! * `pe_step_p{P}.hlo.txt` — one concurrent cycle over a P-PE plane,
+//! * `pe_trace_p{P}_t{T}.hlo.txt` — a `lax.scan` over T instruction words
+//!   (one PJRT dispatch per T cycles — the dispatch amortization).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use super::{probe_artifact_traces, TraceShape};
+use crate::device::computable::isa::{Instr, INSTR_WIDTH, N_REGS};
+use crate::error::{CpmError, Result};
+
+/// The PJRT backend: a CPU client plus compiled executables per shape.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    traces: HashMap<TraceShape, xla::PjRtLoadedExecutable>,
+    steps: HashMap<usize, xla::PjRtLoadedExecutable>,
+    /// PJRT dispatches issued (perf accounting).
+    pub dispatches: u64,
+}
+
+impl std::fmt::Debug for PjrtBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtBackend")
+            .field("dir", &self.dir)
+            .field("traces", &self.traces.keys().collect::<Vec<_>>())
+            .field("steps", &self.steps.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+impl PjrtBackend {
+    /// Create a CPU PJRT client rooted at the artifact directory.
+    pub fn new<P: AsRef<Path>>(artifact_dir: P) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| CpmError::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        Ok(PjrtBackend {
+            client,
+            dir: artifact_dir.as_ref().to_path_buf(),
+            traces: HashMap::new(),
+            steps: HashMap::new(),
+            dispatches: 0,
+        })
+    }
+
+    fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| CpmError::Runtime("non-utf8 artifact path".into()))?,
+        )
+        .map_err(|e| CpmError::Runtime(format!("parse {path:?}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| CpmError::Runtime(format!("compile {path:?}: {e}")))
+    }
+
+    /// Ensure the trace executable for `shape` is compiled and cached.
+    pub fn load_trace(&mut self, shape: TraceShape) -> Result<()> {
+        if self.traces.contains_key(&shape) {
+            return Ok(());
+        }
+        let path = self
+            .dir
+            .join(format!("pe_trace_p{}_t{}.hlo.txt", shape.p, shape.t));
+        let exe = self.compile(&path)?;
+        self.traces.insert(shape, exe);
+        Ok(())
+    }
+
+    /// Ensure the single-step executable for plane width `p` is cached.
+    pub fn load_step(&mut self, p: usize) -> Result<()> {
+        if self.steps.contains_key(&p) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("pe_step_p{p}.hlo.txt"));
+        let exe = self.compile(&path)?;
+        self.steps.insert(p, exe);
+        Ok(())
+    }
+
+    /// Available trace shapes by probing the artifact directory.
+    pub fn available_traces(&self) -> Vec<TraceShape> {
+        probe_artifact_traces(&self.dir)
+    }
+
+    /// Pick the smallest artifact shape fitting `p` PEs, preferring the
+    /// largest trace window for dispatch amortization.
+    pub fn pick_shape(&self, p: usize) -> Option<TraceShape> {
+        TraceShape::pick(&self.available_traces(), p)
+    }
+
+    /// Execute one step: `state` is `i32[N_REGS * p]` row-major planes.
+    pub fn run_step(&mut self, p: usize, state: &[i32], instr: &Instr) -> Result<Vec<i32>> {
+        self.load_step(p)?;
+        let exe = &self.steps[&p];
+        assert_eq!(state.len(), N_REGS * p);
+        let st = xla::Literal::vec1(state)
+            .reshape(&[N_REGS as i64, p as i64])
+            .map_err(|e| CpmError::Runtime(format!("reshape state: {e}")))?;
+        let iw = instr.encode();
+        let il = xla::Literal::vec1(&iw[..]);
+        self.dispatches += 1;
+        let result = exe
+            .execute::<xla::Literal>(&[st, il])
+            .map_err(|e| CpmError::Runtime(format!("execute step: {e}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| CpmError::Runtime(format!("sync: {e}")))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| CpmError::Runtime(format!("tuple: {e}")))?;
+        out.to_vec::<i32>()
+            .map_err(|e| CpmError::Runtime(format!("to_vec: {e}")))
+    }
+
+    /// Execute a whole trace of up to the shape's T instructions (shorter
+    /// traces are padded with NOPs). Returns `(final_state, match_counts)`.
+    pub fn run_trace(
+        &mut self,
+        shape: TraceShape,
+        state: &[i32],
+        trace: &[Instr],
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        self.load_trace(shape)?;
+        assert_eq!(state.len(), N_REGS * shape.p);
+        let words = super::encode_window(trace, shape.t);
+        let st = xla::Literal::vec1(state)
+            .reshape(&[N_REGS as i64, shape.p as i64])
+            .map_err(|e| CpmError::Runtime(format!("reshape state: {e}")))?;
+        let tr = xla::Literal::vec1(&words)
+            .reshape(&[shape.t as i64, INSTR_WIDTH as i64])
+            .map_err(|e| CpmError::Runtime(format!("reshape trace: {e}")))?;
+        let exe = &self.traces[&shape];
+        self.dispatches += 1;
+        let result = exe
+            .execute::<xla::Literal>(&[st, tr])
+            .map_err(|e| CpmError::Runtime(format!("execute trace: {e}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| CpmError::Runtime(format!("sync: {e}")))?;
+        let (final_state, counts) = result
+            .to_tuple2()
+            .map_err(|e| CpmError::Runtime(format!("tuple2: {e}")))?;
+        Ok((
+            final_state
+                .to_vec::<i32>()
+                .map_err(|e| CpmError::Runtime(format!("state vec: {e}")))?,
+            counts
+                .to_vec::<i32>()
+                .map_err(|e| CpmError::Runtime(format!("counts vec: {e}")))?,
+        ))
+    }
+
+    /// Run an arbitrary-length trace by chaining dispatch windows.
+    pub fn run_chained(
+        &mut self,
+        shape: TraceShape,
+        state: &[i32],
+        trace: &[Instr],
+    ) -> Result<Vec<i32>> {
+        let mut cur = state.to_vec();
+        for chunk in trace.chunks(shape.t.max(1)) {
+            let (next, _) = self.run_trace(shape, &cur, chunk)?;
+            cur = next;
+        }
+        Ok(cur)
+    }
+}

@@ -1,0 +1,131 @@
+//! Coordinator smoke test: round-trip all four CPM family members through
+//! `CpmServer::handle`, so the request-routing path is covered end to end
+//! — not just the raw devices.
+//!
+//! * movable    — `Insert` / `Delete` edits on the resident corpus
+//! * searchable — `Search` substring matching
+//! * comparable — `Sql` queries against the resident table
+//! * computable — `Sum` / `Max` / `Sort` / `Threshold` / `Histogram`
+
+use cpm::coordinator::{CpmServer, Request, Response};
+use cpm::sql::{Query, QueryResult, Schema};
+
+fn server() -> CpmServer {
+    let schema = Schema::new(&[("price", 2), ("qty", 1)]).unwrap();
+    let mut s = CpmServer::new(schema, 64, b"concurrent processing memory", 1 << 12);
+    s.load_rows(&[
+        vec![100u64, 1],
+        vec![2500, 2],
+        vec![9000, 3],
+        vec![400, 4],
+    ])
+    .unwrap();
+    s
+}
+
+#[test]
+fn handle_routes_comparable_memory_sql() {
+    let mut s = server();
+    let r = s
+        .handle(&Request::Sql("SELECT COUNT WHERE price < 1000".into()))
+        .unwrap();
+    assert_eq!(r, Response::Sql(QueryResult::Count(2)));
+    // Conjunctive ROWS query cross-checked against the host-side reference.
+    let text = "SELECT ROWS WHERE price >= 1000 AND qty <= 2";
+    let r = s.handle(&Request::Sql(text.into())).unwrap();
+    let want = s.table().query_reference(&Query::parse(text).unwrap());
+    assert_eq!(r, Response::Sql(want));
+    assert_eq!(r, Response::Sql(QueryResult::Rows(vec![1])));
+}
+
+#[test]
+fn handle_routes_searchable_memory_search() {
+    let mut s = server();
+    let r = s.handle(&Request::Search(b"memory".to_vec())).unwrap();
+    assert_eq!(r, Response::Matches(vec![27]));
+    assert_eq!(
+        s.handle(&Request::Search(b"absent".to_vec())).unwrap(),
+        Response::Matches(Vec::new())
+    );
+}
+
+#[test]
+fn handle_routes_movable_memory_edits() {
+    let mut s = server();
+    // Insert at the front: later matches shift by the inserted length.
+    let r = s.handle(&Request::Insert(0, b"cpm: ".to_vec())).unwrap();
+    assert_eq!(r, Response::Scalar(33));
+    assert_eq!(
+        s.handle(&Request::Search(b"memory".to_vec())).unwrap(),
+        Response::Matches(vec![32])
+    );
+    // Delete the insertion: matches shift back.
+    let r = s.handle(&Request::Delete(0, 5)).unwrap();
+    assert_eq!(r, Response::Scalar(28));
+    assert_eq!(
+        s.handle(&Request::Search(b"memory".to_vec())).unwrap(),
+        Response::Matches(vec![27])
+    );
+    // Out-of-range edits are rejected, not applied.
+    assert!(s.handle(&Request::Delete(27, 5)).is_err());
+    assert!(s.handle(&Request::Insert(100, b"x".to_vec())).is_err());
+    assert_eq!(
+        s.handle(&Request::Search(b"memory".to_vec())).unwrap(),
+        Response::Matches(vec![27])
+    );
+}
+
+#[test]
+fn handle_routes_combined_search_and_move_replace() {
+    let mut s = server();
+    let r = s
+        .handle(&Request::Replace(b"memory".to_vec(), b"store".to_vec()))
+        .unwrap();
+    assert_eq!(r, Response::Scalar(1));
+    assert_eq!(
+        s.handle(&Request::Search(b"memory".to_vec())).unwrap(),
+        Response::Matches(Vec::new())
+    );
+    assert_eq!(
+        s.handle(&Request::Search(b"store".to_vec())).unwrap(),
+        Response::Matches(vec![26])
+    );
+}
+
+#[test]
+fn handle_routes_computable_memory_array_jobs() {
+    let mut s = server();
+    assert_eq!(
+        s.handle(&Request::Sum(vec![3, 1, 4, 1, 5])).unwrap(),
+        Response::Scalar(14)
+    );
+    assert_eq!(
+        s.handle(&Request::Max(vec![3, 1, 4, 1, 5])).unwrap(),
+        Response::Scalar(5)
+    );
+    assert_eq!(
+        s.handle(&Request::Sort(vec![3, 1, 2])).unwrap(),
+        Response::Sorted(vec![1, 2, 3])
+    );
+    assert_eq!(
+        s.handle(&Request::Threshold(vec![1, 5, 10], 4)).unwrap(),
+        Response::Scalar(2)
+    );
+    assert_eq!(
+        s.handle(&Request::Histogram(vec![1, 25, 75], vec![50])).unwrap(),
+        Response::Histogram(vec![2, 1])
+    );
+}
+
+#[test]
+fn handle_counts_requests_and_charges_device_cycles() {
+    let mut s = server();
+    s.handle(&Request::Search(b"memory".to_vec())).unwrap();
+    s.handle(&Request::Insert(0, b"x".to_vec())).unwrap();
+    s.handle(&Request::Sql("SELECT COUNT WHERE qty > 1".into()))
+        .unwrap();
+    s.handle(&Request::Sum(vec![1, 2, 3])).unwrap();
+    assert_eq!(s.metrics.requests, 4);
+    assert_eq!(s.metrics.errors, 0);
+    assert!(s.metrics.device_macro_cycles > 0);
+}

@@ -1,11 +1,16 @@
 //! Engine-equivalence integration tests (E19's correctness half): the
-//! word-plane engine, the bit-plane engine and the AOT XLA/Pallas backend
-//! must produce identical final states for identical macro traces.
+//! word-plane engine, the bit-plane engine and the trace backend (the
+//! pure-Rust interpreter by default; the AOT XLA/Pallas backend with
+//! `--features pjrt` plus `make artifacts`) must produce identical final
+//! states for identical macro traces. Against the interpreter the backend
+//! tests exercise the wire encode/decode path, NOP padding, and
+//! dispatch-window chaining; against PJRT they additionally pin the
+//! compiled artifacts to the word engine.
 
 use cpm::device::computable::bit_engine::BitEngine;
 use cpm::device::computable::isa::{Instr, Opcode, Reg, Src, N_REGS};
 use cpm::device::computable::WordEngine;
-use cpm::runtime::{PjrtBackend, TraceShape};
+use cpm::runtime::{Backend, TraceShape};
 use cpm::util::rng::Rng;
 
 fn random_instr(rng: &mut Rng, p: usize) -> Instr {
@@ -86,13 +91,13 @@ fn word_and_bit_match_counts_agree() {
 }
 
 #[test]
-fn xla_backend_matches_word_engine_on_random_traces() {
-    let Ok(mut backend) = PjrtBackend::new("artifacts") else {
-        panic!("PJRT backend unavailable — run `make artifacts` first");
+fn backend_matches_word_engine_on_random_traces() {
+    let Ok(mut backend) = Backend::new("artifacts") else {
+        panic!("trace backend unavailable (pjrt: run `make artifacts` first)");
     };
     let shape = TraceShape { p: 1024, t: 32 };
     if backend.load_trace(shape).is_err() {
-        panic!("missing artifact pe_trace_p1024_t32 — run `make artifacts`");
+        panic!("missing trace shape p=1024 t=32 (pjrt: run `make artifacts`)");
     }
     let mut rng = Rng::new(0xE19 + 2);
     for case in 0..3 {
@@ -100,22 +105,22 @@ fn xla_backend_matches_word_engine_on_random_traces() {
         let state = random_state(&mut rng, p);
         let trace: Vec<Instr> = (0..shape.t).map(|_| random_instr(&mut rng, p)).collect();
 
-        let (xla_final, _) = backend.run_trace(shape, &state, &trace).unwrap();
+        let (backend_final, _) = backend.run_trace(shape, &state, &trace).unwrap();
         let mut word = WordEngine::new(p, 32);
         word.set_state(&state);
         word.run(&trace);
-        assert_eq!(xla_final, word.state(), "case {case}");
+        assert_eq!(backend_final, word.state(), "case {case}");
     }
 }
 
 #[test]
-fn xla_single_step_matches_word_engine() {
-    let Ok(mut backend) = PjrtBackend::new("artifacts") else {
-        panic!("PJRT backend unavailable");
+fn backend_single_step_matches_word_engine() {
+    let Ok(mut backend) = Backend::new("artifacts") else {
+        panic!("trace backend unavailable");
     };
     let p = 1024;
     if backend.load_step(p).is_err() {
-        panic!("missing artifact pe_step_p1024 — run `make artifacts`");
+        panic!("missing step shape p=1024 (pjrt: run `make artifacts`)");
     }
     let mut rng = Rng::new(0xE19 + 3);
     for _ in 0..8 {
@@ -130,9 +135,9 @@ fn xla_single_step_matches_word_engine() {
 }
 
 #[test]
-fn xla_chained_traces_match_long_runs() {
-    let Ok(mut backend) = PjrtBackend::new("artifacts") else {
-        panic!("PJRT backend unavailable");
+fn backend_chained_traces_match_long_runs() {
+    let Ok(mut backend) = Backend::new("artifacts") else {
+        panic!("trace backend unavailable");
     };
     let shape = TraceShape { p: 1024, t: 32 };
     backend.load_trace(shape).unwrap();

@@ -1,6 +1,15 @@
 //! The paper's complexity claims as enforced assertions (the test-suite
 //! twin of `benches/paper.rs`): if a refactor breaks a cycle count or an
 //! N-independence property, this fails `cargo test`.
+//!
+//! Cost-model audit (crate bring-up PR): every bound below was re-derived
+//! from the implemented cost model and found consistent — none needed
+//! correction or loosening. For the record: search = M match steps + 1
+//! readout broadcast; compare = 2·len clears + 1 LSB compare + 3·(len-1)
+//! ladder steps (6 for a 2-byte field); histogram = 1 compare + 1 count
+//! per bound; Gaussians = paper cycles + setup copies (GAUSS_5 adds a
+//! D0 save + OP copy → 8); sum_1d = (M-1) concurrent + ceil(N/M) serial;
+//! threshold = 1 compare + 1 count; superconn = 1 init + 2·ceil(log₂N).
 
 use cpm::algos::{histogram, lines, local_ops, reduce, sort, template, threshold};
 use cpm::device::comparable::{CmpCode, ContentComparableMemory, FieldSpec};
