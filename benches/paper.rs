@@ -1,5 +1,5 @@
 //! The paper-reproduction benchmark harness: one section per experiment in
-//! DESIGN.md's index (E1–E19). `cargo bench` runs everything;
+//! DESIGN.md's index (E1–E20). `cargo bench` runs everything;
 //! `cargo bench -- e7` runs one experiment.
 //!
 //! Each section prints a table of *measured* cycle counts next to the
@@ -10,7 +10,10 @@
 use cpm::algos::{histogram, lines, local_ops, reduce, sort, template, threshold};
 use cpm::baseline::{self, SerialMachine, SortedIndex};
 use cpm::bench::Report;
-use cpm::coordinator::{CpmServer, OverlapScheduler, Request, TaskPhase};
+use cpm::coordinator::{
+    Addressed, ArrayJob, CpmServer, OverlapScheduler, Request, TaskPhase, DEFAULT_ARRAY,
+    DEFAULT_CORPUS, DEFAULT_TABLE, DEFAULT_TENANT,
+};
 use cpm::device::comparable::{CmpCode, ContentComparableMemory, FieldSpec};
 use cpm::device::computable::superconn;
 use cpm::device::computable::{Reg, WordEngine};
@@ -18,6 +21,7 @@ use cpm::device::movable::ContentMovableMemory;
 use cpm::device::searchable::ContentSearchableMemory;
 use cpm::logic::{CarryPatternGenerator, GeneralDecoder};
 use cpm::physics;
+use cpm::pool::{DevicePool, PoolConfig};
 use cpm::sql::Schema;
 use cpm::util::rng::Rng;
 
@@ -622,6 +626,133 @@ fn e19_engines() {
     r.print("E19 engine parity + relative speed (word vs bit vs trace backend)");
 }
 
+fn e20_pool_batched_serving() {
+    // A pool-backed server: resident table (4096 rows), corpus (4096
+    // bytes), and scratch array (2048 words). Both serving modes start
+    // from identical state (same seeds).
+    fn build_server() -> CpmServer {
+        let mut rng = Rng::new(201);
+        let mut pool = DevicePool::new(PoolConfig {
+            capacity_pes: 1 << 18,
+            tenant_quota_pes: 1 << 18,
+            corpus_slack: 1024,
+        });
+        let schema = Schema::new(&[("price", 2), ("qty", 1)]).unwrap();
+        pool.create_table(DEFAULT_TENANT, DEFAULT_TABLE, schema, 4096)
+            .unwrap();
+        let corpus: Vec<u8> = (0..4096).map(|_| b'a' + rng.range(0, 4) as u8).collect();
+        pool.create_corpus(DEFAULT_TENANT, DEFAULT_CORPUS, &corpus)
+            .unwrap();
+        pool.create_array(DEFAULT_TENANT, DEFAULT_ARRAY, &rng.vec_i32(2048, 0, 1000), 2048)
+            .unwrap();
+        let mut s = CpmServer::with_pool(pool, 1 << 16);
+        let rows: Vec<Vec<u64>> = (0..4096)
+            .map(|_| vec![rng.below(10_000), rng.below(100)])
+            .collect();
+        s.load_rows(&rows).unwrap();
+        s
+    }
+
+    // 120-request shuffled mixed workload: hot SQL templates (8 + 4
+    // distinct texts), repeated searches (4 patterns), corpus edits
+    // (barriers), ad-hoc threshold loads, resident-array sums.
+    let mut rng = Rng::new(202);
+    let mut batch: Vec<Addressed> = Vec::new();
+    for k in 0..48usize {
+        batch.push(Addressed::local(Request::Sql(format!(
+            "SELECT COUNT WHERE price < {}",
+            1000 * (1 + k % 8)
+        ))));
+    }
+    for k in 0..16usize {
+        batch.push(Addressed::local(Request::Sql(format!(
+            "SELECT ROWS WHERE price < {} AND qty >= 50",
+            2000 * (1 + k % 4)
+        ))));
+    }
+    let patterns: [&[u8]; 4] = [b"ab", b"bca", b"aabb", b"cd"];
+    for k in 0..24usize {
+        batch.push(Addressed::local(Request::Search(patterns[k % 4].to_vec())));
+    }
+    for _ in 0..4 {
+        batch.push(Addressed::local(Request::Insert(0, b"zz".to_vec())));
+    }
+    for _ in 0..4 {
+        batch.push(Addressed::local(Request::Delete(0, 2)));
+    }
+    for _ in 0..16 {
+        batch.push(Addressed::local(Request::Threshold(
+            rng.vec_i32(2048, 0, 1000),
+            500,
+        )));
+    }
+    for _ in 0..8 {
+        batch.push(Addressed::local(Request::Array(ArrayJob::Sum)));
+    }
+    rng.shuffle(&mut batch);
+
+    // Mode A: one request at a time — every request is its own
+    // (load, exec) phase, nothing shared, nothing overlapped.
+    let mut serial = build_server();
+    let t0 = std::time::Instant::now();
+    let serial_responses: Vec<_> = batch.iter().map(|a| serial.handle_addressed(a)).collect();
+    let serial_wall = t0.elapsed();
+    let one_at_a_time = serial.metrics.makespan_serial_cycles;
+
+    // Mode B: the same queue as one batch.
+    let mut batched = build_server();
+    let t0 = std::time::Instant::now();
+    let batched_responses = batched.handle_batch(&batch);
+    let batched_wall = t0.elapsed();
+
+    for (s, b) in serial_responses.iter().zip(&batched_responses) {
+        match (s, b) {
+            (Ok(x), Ok(y)) => assert_eq!(x, y, "batched != one-at-a-time"),
+            (Err(_), Err(_)) => {}
+            other => panic!("batched/serial divergence: {other:?}"),
+        }
+    }
+    let m = &batched.metrics;
+    assert!(
+        m.makespan_overlapped_cycles < one_at_a_time,
+        "batched-overlapped {} must beat one-at-a-time {}",
+        m.makespan_overlapped_cycles,
+        one_at_a_time
+    );
+
+    let mut r = Report::new(&["metric", "value"]);
+    r.row(&["requests (mixed, shuffled)".into(), batch.len().to_string()]);
+    r.row(&["executed groups".into(), m.groups_executed.to_string()]);
+    r.row(&[
+        "shared device passes saved".into(),
+        m.shared_passes_saved.to_string(),
+    ]);
+    r.row(&[
+        "one-at-a-time makespan (device cycles)".into(),
+        one_at_a_time.to_string(),
+    ]);
+    r.row(&[
+        "batched makespan, no overlap".into(),
+        m.makespan_serial_cycles.to_string(),
+    ]);
+    r.row(&[
+        "batched + load/exec overlap".into(),
+        m.makespan_overlapped_cycles.to_string(),
+    ]);
+    r.row(&[
+        "device-cycle speedup".into(),
+        format!(
+            "{:.2}x",
+            one_at_a_time as f64 / m.makespan_overlapped_cycles.max(1) as f64
+        ),
+    ]);
+    r.row(&[
+        "wall µs, one-at-a-time / batched".into(),
+        format!("{} / {}", serial_wall.as_micros(), batched_wall.as_micros()),
+    ]);
+    r.print("E20 multi-tenant batched serving: shared passes + §3.1 overlap vs one-at-a-time");
+}
+
 fn main() {
     let filter: Option<String> = std::env::args()
         .skip(1)
@@ -647,6 +778,7 @@ fn main() {
         ("e17", e17_sql_end_to_end),
         ("e18", e18_overlap),
         ("e19", e19_engines),
+        ("e20", e20_pool_batched_serving),
     ];
     for (name, f) in experiments {
         if filter.as_deref().map(|f| f == name).unwrap_or(true) {

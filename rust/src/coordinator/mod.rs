@@ -2,17 +2,21 @@
 //! engine", §8's multi-task discussion).
 //!
 //! The CPM devices are passive bus devices; this layer makes them a
-//! service: a request router in front of a device pool, a batcher that
-//! groups compatible requests, and a scheduler that overlaps exclusive-bus
-//! loads with concurrent execution (§3.1: "while some addressable
-//! registers of one task are operated on concurrently, other addressable
-//! registers in the same CPM can be prepared for other tasks by exclusive
-//! operations").
+//! service: a request router in front of the multi-tenant
+//! [`DevicePool`](crate::pool::DevicePool), a batch path that groups
+//! compatible requests into shared device passes, and the §3.1/§8
+//! scheduler that overlaps exclusive-bus loads with concurrent execution
+//! ("while some addressable registers of one task are operated on
+//! concurrently, other addressable registers in the same CPM can be
+//! prepared for other tasks by exclusive operations").
 
 pub mod metrics;
 pub mod scheduler;
 pub mod server;
 
-pub use metrics::{LatencyStats, Metrics};
+pub use metrics::{LatencyStats, Metrics, TenantMetrics};
 pub use scheduler::{OverlapScheduler, TaskPhase};
-pub use server::{CpmServer, Request, Response};
+pub use server::{
+    Addressed, ArrayJob, CpmServer, Request, Response, DEFAULT_ARRAY, DEFAULT_CORPUS,
+    DEFAULT_TABLE, DEFAULT_TENANT,
+};

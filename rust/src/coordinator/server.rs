@@ -1,41 +1,46 @@
-//! The smart-memory server: request routing over a device pool.
+//! The smart-memory server: request routing over a multi-tenant device
+//! pool.
 //!
-//! Clients submit [`Request`]s; the server routes SQL to the comparable-
-//! memory table, substring searches and copy-free edits to the combined
-//! searchable+movable corpus (§5.3), and array jobs
-//! (sum/max/sort/threshold/histogram) to the computable memory — one
-//! shared SIMD device pool serving many tasks (§2's networked SQL engine;
-//! E17's end-to-end driver). All four CPM family members are reachable
-//! through [`CpmServer::handle`].
+//! Clients submit [`Request`]s — bare (routed to the default tenant's
+//! default devices, the original single-resident view) or wrapped in an
+//! [`Addressed`] envelope naming a tenant and a device. Every path,
+//! including single requests, goes through the
+//! [`BatchExecutor`](crate::pool::BatchExecutor) as a batch of one, so
+//! serving always uses the same grouping, cost attribution, and overlap
+//! accounting (§2's networked SQL engine; §3.1's exclusive/concurrent
+//! overlap; E17/E20 end-to-end drivers). All four CPM family members are
+//! reachable through [`CpmServer::handle`].
 
 use std::time::Instant;
 
-use crate::algos::{histogram, reduce, sort, threshold};
-use crate::cycles::ConcurrentCost;
-use crate::device::computable::{Reg, WordEngine};
-use crate::device::mutable_search::MutableSearchableMemory;
-use crate::error::{CpmError, Result};
-use crate::sql::{Query, QueryResult, Schema, Table};
+use crate::error::Result;
+use crate::pool::{AddressedRef, BatchExecutor, DevicePool, PoolConfig};
+use crate::sql::{QueryResult, Schema, Table};
 
 use super::metrics::Metrics;
 
-/// Spare PEs kept beyond the initial corpus so concurrent-move edits
-/// (insertions) have room to shift into.
-const CORPUS_SLACK: usize = 4096;
+/// Tenant used when a request carries no explicit tenant.
+pub const DEFAULT_TENANT: &str = "default";
+/// Default resident SQL-table name.
+pub const DEFAULT_TABLE: &str = "table";
+/// Default resident corpus name.
+pub const DEFAULT_CORPUS: &str = "corpus";
+/// Default resident scratch-array name.
+pub const DEFAULT_ARRAY: &str = "array";
 
 /// A client request.
 #[derive(Debug, Clone)]
 pub enum Request {
-    /// SQL query against the resident table.
+    /// SQL query against a resident table.
     Sql(String),
-    /// Substring search in the resident corpus.
+    /// Substring search in a resident corpus.
     Search(Vec<u8>),
-    /// Insert bytes into the resident corpus at a byte offset (content
+    /// Insert bytes into a resident corpus at a byte offset (content
     /// movable memory, §4: ~len concurrent cycles, no memmove).
     Insert(usize, Vec<u8>),
-    /// Delete a byte range `(offset, len)` from the resident corpus.
+    /// Delete a byte range `(offset, len)` from a resident corpus.
     Delete(usize, usize),
-    /// Replace every occurrence of a pattern in the corpus (§5.3's
+    /// Replace every occurrence of a pattern in a corpus (§5.3's
     /// combined search + move device).
     Replace(Vec<u8>, Vec<u8>),
     /// Sum of an ad-hoc array.
@@ -48,6 +53,26 @@ pub enum Request {
     Threshold(Vec<i32>, i32),
     /// Histogram with the given bounds.
     Histogram(Vec<i32>, Vec<i32>),
+    /// Run a job against a resident scratch array (addressed by device
+    /// name; the load phase was paid at admission).
+    Array(ArrayJob),
+}
+
+/// A job against a resident computable-memory scratch array. Jobs are
+/// read-only queries: `Sort` returns the sorted copy without disturbing
+/// the resident content.
+#[derive(Debug, Clone)]
+pub enum ArrayJob {
+    /// Sum of the resident array.
+    Sum,
+    /// Maximum of the resident array.
+    Max,
+    /// Sorted copy of the resident array.
+    Sort,
+    /// Count of resident values above a threshold.
+    Threshold(i32),
+    /// Histogram of the resident array with the given bucket bounds.
+    Histogram(Vec<i32>),
 }
 
 /// A server response.
@@ -65,54 +90,171 @@ pub enum Response {
     Histogram(Vec<usize>),
 }
 
-/// The server: one table, one editable text corpus, one computable engine.
+/// A request addressed to a tenant's named device — the multi-tenant
+/// envelope. [`Addressed::local`] (or `Request::into`) selects the
+/// default tenant and per-kind default device names, which is exactly the
+/// single-resident server the pre-pool API exposed.
+#[derive(Debug, Clone)]
+pub struct Addressed {
+    /// Owning tenant (quota and metrics attribution).
+    pub tenant: String,
+    /// Target device name; `None` selects the default for the op kind.
+    pub device: Option<String>,
+    /// The operation.
+    pub op: Request,
+}
+
+impl Addressed {
+    /// Address `op` to `tenant`'s device `device`.
+    pub fn new(tenant: &str, device: &str, op: Request) -> Self {
+        Addressed {
+            tenant: tenant.to_string(),
+            device: Some(device.to_string()),
+            op,
+        }
+    }
+
+    /// Address `op` to `tenant`'s default device for the op kind.
+    pub fn for_tenant(tenant: &str, op: Request) -> Self {
+        Addressed {
+            tenant: tenant.to_string(),
+            device: None,
+            op,
+        }
+    }
+
+    /// Address `op` to the default tenant's default devices.
+    pub fn local(op: Request) -> Self {
+        Addressed::for_tenant(DEFAULT_TENANT, op)
+    }
+
+    /// The resident device this request targets: the explicit name, or
+    /// the default for the op kind ([`DEFAULT_TABLE`] for SQL,
+    /// [`DEFAULT_CORPUS`] for search/edit, [`DEFAULT_ARRAY`] for array
+    /// jobs). Ad-hoc compute ops target no resident device.
+    pub fn device_name(&self) -> &str {
+        match &self.device {
+            Some(d) => d,
+            None => default_device(&self.op),
+        }
+    }
+}
+
+/// Default device name for an op kind (empty for ad-hoc compute, which
+/// targets no resident device).
+pub(crate) fn default_device(op: &Request) -> &'static str {
+    match op {
+        Request::Sql(_) => DEFAULT_TABLE,
+        Request::Search(_)
+        | Request::Insert(..)
+        | Request::Delete(..)
+        | Request::Replace(..) => DEFAULT_CORPUS,
+        Request::Array(_) => DEFAULT_ARRAY,
+        _ => "",
+    }
+}
+
+impl From<Request> for Addressed {
+    fn from(op: Request) -> Self {
+        Addressed::local(op)
+    }
+}
+
+/// The server: a device pool, a batch executor, and service metrics.
 #[derive(Debug)]
 pub struct CpmServer {
-    table: Table,
-    corpus: MutableSearchableMemory,
-    engine_capacity: usize,
+    pool: DevicePool,
+    executor: BatchExecutor,
     /// Service metrics.
     pub metrics: Metrics,
 }
 
 impl CpmServer {
-    /// Build a server with a table schema + capacity, a text corpus, and a
-    /// computable-memory capacity for ad-hoc array jobs. The corpus device
-    /// keeps [`CORPUS_SLACK`] spare PEs for copy-free insertions.
+    /// Build a single-tenant server: one table (schema + capacity), one
+    /// text corpus, and a computable-memory capacity for ad-hoc array
+    /// jobs — the original API, now backed by a pool sized to fit both
+    /// pinned default devices. The corpus keeps the pool's slack policy
+    /// (`PoolConfig::corpus_slack`) of spare PEs for copy-free insertions.
     pub fn new(schema: Schema, max_rows: usize, corpus: &[u8], engine_capacity: usize) -> Self {
-        let mut mem = MutableSearchableMemory::new(corpus.len() + CORPUS_SLACK);
-        mem.load(corpus).expect("corpus fits its own device");
+        let defaults = PoolConfig::default();
+        let table_pes = (schema.row_size() * max_rows).max(1);
+        let corpus_pes = (corpus.len() + defaults.corpus_slack).max(1);
+        let mut pool = DevicePool::new(PoolConfig {
+            capacity_pes: table_pes + corpus_pes,
+            tenant_quota_pes: table_pes + corpus_pes,
+            ..defaults
+        });
+        pool.create_table(DEFAULT_TENANT, DEFAULT_TABLE, schema, max_rows)
+            .expect("default table fits its own pool");
+        pool.create_corpus(DEFAULT_TENANT, DEFAULT_CORPUS, corpus)
+            .expect("default corpus fits its own pool");
+        pool.pin(DEFAULT_TENANT, DEFAULT_TABLE, true)
+            .expect("default table resident");
+        pool.pin(DEFAULT_TENANT, DEFAULT_CORPUS, true)
+            .expect("default corpus resident");
+        Self::with_pool(pool, engine_capacity)
+    }
+
+    /// Build a server over an externally configured pool (multi-tenant
+    /// setups: several tables/corpora/arrays, quotas, custom slack).
+    pub fn with_pool(pool: DevicePool, engine_capacity: usize) -> Self {
         CpmServer {
-            table: Table::new(schema, max_rows),
-            corpus: mem,
-            engine_capacity,
+            pool,
+            executor: BatchExecutor::new(engine_capacity),
             metrics: Metrics::default(),
         }
     }
 
-    /// Load rows into the table.
+    /// The device pool (inspection: residents, stats, quotas).
+    pub fn pool(&self) -> &DevicePool {
+        &self.pool
+    }
+
+    /// Mutable pool access (admissions, pinning, quota changes).
+    pub fn pool_mut(&mut self) -> &mut DevicePool {
+        &mut self.pool
+    }
+
+    /// Load rows into the default tenant's default table.
     pub fn load_rows(&mut self, rows: &[Vec<u64>]) -> Result<()> {
+        self.load_rows_into(DEFAULT_TENANT, DEFAULT_TABLE, rows)
+    }
+
+    /// Load rows into a named resident table.
+    pub fn load_rows_into(&mut self, tenant: &str, name: &str, rows: &[Vec<u64>]) -> Result<()> {
+        let table = self.pool.table_mut(tenant, name)?;
         for r in rows {
-            self.table.insert(r)?;
+            table.insert(r)?;
         }
         Ok(())
     }
 
-    /// Access the resident table.
+    /// Access the default resident table.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `default/table` is not resident: servers built with
+    /// [`CpmServer::with_pool`] must create (and should pin) a default
+    /// table before using this accessor — [`CpmServer::new`] does both.
+    /// Pool-first callers should prefer `server.pool().table(...)`.
     pub fn table(&self) -> &Table {
-        &self.table
+        self.pool
+            .table(DEFAULT_TENANT, DEFAULT_TABLE)
+            .expect("no resident default/table (create and pin one, or use pool().table())")
     }
 
-    /// Handle one request — the request-routing entry point.
+    /// Handle one request against the default tenant's devices — the
+    /// original request-routing entry point. The payload is borrowed,
+    /// not cloned.
     pub fn handle(&mut self, req: &Request) -> Result<Response> {
-        let start = Instant::now();
-        let out = self.dispatch(req);
-        self.metrics.requests += 1;
-        if out.is_err() {
-            self.metrics.errors += 1;
-        }
-        self.metrics.latency.record(start.elapsed());
-        out
+        let r = AddressedRef {
+            tenant: DEFAULT_TENANT,
+            device: None,
+            op: req,
+        };
+        self.run_refs(std::slice::from_ref(&r))
+            .pop()
+            .expect("one response per request")
     }
 
     /// Alias for [`CpmServer::handle`] (the original name; kept for
@@ -121,103 +263,66 @@ impl CpmServer {
         self.handle(req)
     }
 
-    fn charge(&mut self, cost: ConcurrentCost) {
-        self.metrics.device_macro_cycles += cost.macro_cycles;
-        self.metrics.device_exclusive_ops += cost.exclusive_ops;
+    /// Handle one tenant/device-addressed request.
+    pub fn handle_addressed(&mut self, req: &Addressed) -> Result<Response> {
+        self.run_refs(std::slice::from_ref(&AddressedRef::from(req)))
+            .pop()
+            .expect("one response per request")
     }
 
-    fn dispatch(&mut self, req: &Request) -> Result<Response> {
-        match req {
-            Request::Sql(text) => {
-                let q = Query::parse(text)?;
-                self.table.reset_device_cost();
-                let r = self.table.query(&q)?;
-                let cost = self.table.device_cost();
-                self.charge(cost);
-                Ok(Response::Sql(r))
-            }
-            Request::Search(pattern) => {
-                self.corpus.reset_cost();
-                let hits = self.corpus.find(pattern);
-                let cost = self.corpus.cost();
-                self.charge(cost);
-                Ok(Response::Matches(hits))
-            }
-            Request::Insert(at, data) => {
-                self.corpus.reset_cost();
-                self.corpus.insert(*at, data)?;
-                let cost = self.corpus.cost();
-                self.charge(cost);
-                Ok(Response::Scalar(self.corpus.len() as i64))
-            }
-            Request::Delete(at, len) => {
-                self.corpus.reset_cost();
-                self.corpus.delete(*at, *len)?;
-                let cost = self.corpus.cost();
-                self.charge(cost);
-                Ok(Response::Scalar(self.corpus.len() as i64))
-            }
-            Request::Replace(pattern, replacement) => {
-                self.corpus.reset_cost();
-                let n = self.corpus.replace_all(pattern, replacement)?;
-                let cost = self.corpus.cost();
-                self.charge(cost);
-                Ok(Response::Scalar(n as i64))
-            }
-            Request::Sum(values) => {
-                let mut e = self.engine_for(values)?;
-                let run = reduce::sum_1d_opt(&mut e, values.len());
-                self.charge(e.cost());
-                Ok(Response::Scalar(run.value))
-            }
-            Request::Max(values) => {
-                if values.is_empty() {
-                    return Err(CpmError::Coordinator("max of empty array".into()));
-                }
-                let mut e = self.engine_for(values)?;
-                let m = crate::util::isqrt(values.len() as u64).max(1) as usize;
-                let run = reduce::max_1d(&mut e, values.len(), m);
-                self.charge(e.cost());
-                Ok(Response::Scalar(run.value as i64))
-            }
-            Request::Sort(values) => {
-                let mut e = self.engine_for(values)?;
-                sort::sort_sqrt(&mut e, values.len());
-                self.charge(e.cost());
-                Ok(Response::Sorted(e.plane(Reg::Nb)[..values.len()].to_vec()))
-            }
-            Request::Threshold(values, t) => {
-                let mut e = self.engine_for(values)?;
-                let count = threshold::threshold_mark(&mut e, values.len(), *t);
-                self.charge(e.cost());
-                Ok(Response::Scalar(count as i64))
-            }
-            Request::Histogram(values, bounds) => {
-                let mut e = self.engine_for(values)?;
-                let counts = histogram::histogram_words(&mut e, values.len(), bounds);
-                self.charge(e.cost());
-                Ok(Response::Histogram(counts))
-            }
-        }
+    /// Handle a queue of requests as one batch: compatible work is
+    /// grouped into shared device passes and the resulting (load, exec)
+    /// phases are overlap-scheduled. Responses align with `batch` order
+    /// and are identical to serving the queue one request at a time.
+    pub fn handle_batch(&mut self, batch: &[Addressed]) -> Vec<Result<Response>> {
+        self.metrics.batches += 1;
+        self.metrics.batched_requests += batch.len() as u64;
+        let refs: Vec<AddressedRef<'_>> = batch.iter().map(AddressedRef::from).collect();
+        self.run_refs(&refs)
     }
 
-    fn engine_for(&mut self, values: &[i32]) -> Result<WordEngine> {
-        if values.len() > self.engine_capacity {
-            return Err(CpmError::Coordinator(format!(
-                "array of {} exceeds device capacity {}",
-                values.len(),
-                self.engine_capacity
-            )));
+    fn run_refs(&mut self, batch: &[AddressedRef<'_>]) -> Vec<Result<Response>> {
+        let start = Instant::now();
+        let (responses, report) = self.executor.execute(&mut self.pool, batch);
+        let elapsed = start.elapsed();
+        self.metrics.requests += batch.len() as u64;
+        for (a, r) in batch.iter().zip(&responses) {
+            if r.is_err() {
+                self.metrics.errors += 1;
+            }
+            let t = self.metrics.tenant(a.tenant);
+            t.requests += 1;
+            if r.is_err() {
+                t.errors += 1;
+            }
         }
-        let mut e = WordEngine::new(values.len().max(1), 16);
-        e.load_plane(Reg::Nb, values);
-        Ok(e)
+        for (tenant, cost) in &report.group_costs {
+            self.metrics.device_macro_cycles += cost.macro_cycles;
+            self.metrics.device_exclusive_ops += cost.exclusive_ops;
+            let t = self.metrics.tenant(tenant);
+            t.macro_cycles += cost.macro_cycles;
+            t.exclusive_ops += cost.exclusive_ops;
+        }
+        self.metrics.shared_passes_saved += report.shared_passes;
+        self.metrics.groups_executed += report.groups;
+        self.metrics.makespan_serial_cycles += report.makespan_serial;
+        self.metrics.makespan_overlapped_cycles += report.makespan_overlapped;
+        // Per-request latency: the batch's wall time amortized over its
+        // requests (they all complete when the batch completes).
+        let per_request = elapsed / batch.len().max(1) as u32;
+        for _ in 0..batch.len() {
+            self.metrics.latency.record(per_request);
+        }
+        responses
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::error::CpmError;
+    use crate::pool::PoolConfig;
+    use crate::sql::Query;
     use crate::util::rng::Rng;
 
     fn server() -> CpmServer {
@@ -289,7 +394,6 @@ mod tests {
         }
         assert_eq!(s.metrics.requests, 5);
         assert_eq!(s.metrics.errors, 0);
-        assert!(s.metrics.latency.percentile_us(99.0) > 0);
     }
 
     #[test]
@@ -301,5 +405,103 @@ mod tests {
         let schema = Schema::new(&[("x", 1)]).unwrap();
         let mut tiny = CpmServer::new(schema, 4, b"", 8);
         assert!(tiny.serve(&Request::Sum(vec![1; 100])).is_err());
+    }
+
+    #[test]
+    fn insert_beyond_corpus_capacity_is_typed_and_harmless() {
+        // Slack policy through the pool allocator: a 4-byte slack corpus
+        // rejects a 10-byte insert with a typed capacity error and leaves
+        // the content untouched (regression for the old panic-prone
+        // fixed-slack growth path).
+        let mut pool = DevicePool::new(PoolConfig {
+            capacity_pes: 1 << 10,
+            tenant_quota_pes: 1 << 10,
+            corpus_slack: 4,
+        });
+        pool.create_corpus(DEFAULT_TENANT, DEFAULT_CORPUS, b"abcdef")
+            .unwrap();
+        let mut s = CpmServer::with_pool(pool, 16);
+        let err = s
+            .serve(&Request::Insert(0, b"0123456789".to_vec()))
+            .unwrap_err();
+        assert!(
+            matches!(
+                err,
+                CpmError::CapacityExceeded {
+                    needed: 16,
+                    available: 10,
+                    ..
+                }
+            ),
+            "{err}"
+        );
+        assert_eq!(
+            s.pool().corpus(DEFAULT_TENANT, DEFAULT_CORPUS).unwrap().content(),
+            b"abcdef"
+        );
+        // A fitting insert still works.
+        assert_eq!(
+            s.serve(&Request::Insert(6, b"ghij".to_vec())).unwrap(),
+            Response::Scalar(10)
+        );
+    }
+
+    #[test]
+    fn per_tenant_metrics_and_addressing() {
+        let mut pool = DevicePool::new(PoolConfig {
+            capacity_pes: 1 << 14,
+            tenant_quota_pes: 1 << 13,
+            corpus_slack: 16,
+        });
+        pool.create_corpus("alice", "notes", b"alpha beta alpha").unwrap();
+        pool.create_corpus("bob", "notes", b"gamma delta").unwrap();
+        let mut s = CpmServer::with_pool(pool, 1 << 10);
+        let r = s
+            .handle_addressed(&Addressed::new("alice", "notes", Request::Search(b"alpha".to_vec())))
+            .unwrap();
+        assert_eq!(r, Response::Matches(vec![4, 15]));
+        let r = s
+            .handle_addressed(&Addressed::new("bob", "notes", Request::Search(b"alpha".to_vec())))
+            .unwrap();
+        assert_eq!(r, Response::Matches(Vec::new()));
+        // Wrong tenant/device addressing fails typed.
+        assert!(s
+            .handle_addressed(&Addressed::new("carol", "notes", Request::Search(b"x".to_vec())))
+            .is_err());
+        assert_eq!(s.metrics.per_tenant["alice"].requests, 1);
+        assert_eq!(s.metrics.per_tenant["bob"].requests, 1);
+        assert_eq!(s.metrics.per_tenant["carol"].errors, 1);
+        assert!(s.metrics.per_tenant["alice"].macro_cycles > 0);
+    }
+
+    #[test]
+    fn batch_matches_serial_and_records_makespans() {
+        let mut batched = server();
+        let mut serial = server();
+        let batch: Vec<Addressed> = vec![
+            Addressed::local(Request::Sql("SELECT COUNT WHERE price < 5000".into())),
+            Addressed::local(Request::Search(b"the".to_vec())),
+            Addressed::local(Request::Sql("SELECT COUNT WHERE price < 5000".into())),
+            Addressed::local(Request::Insert(0, b"zz".to_vec())),
+            Addressed::local(Request::Search(b"the".to_vec())),
+            Addressed::local(Request::Sum(vec![5, 6, 7])),
+        ];
+        let got = batched.handle_batch(&batch);
+        for (g, a) in got.iter().zip(&batch) {
+            let want = serial.handle_addressed(a);
+            match (g, &want) {
+                (Ok(x), Ok(y)) => assert_eq!(x, y),
+                (Err(_), Err(_)) => {}
+                other => panic!("batched/serial divergence: {other:?}"),
+            }
+        }
+        assert_eq!(batched.metrics.batches, 1);
+        assert_eq!(batched.metrics.batched_requests, 6);
+        assert!(batched.metrics.shared_passes_saved >= 1);
+        assert!(
+            batched.metrics.makespan_overlapped_cycles
+                <= batched.metrics.makespan_serial_cycles
+        );
+        assert!(batched.metrics.latency.count() == 6);
     }
 }

@@ -13,7 +13,7 @@
 use crate::cycles::ConcurrentCost;
 use crate::device::movable::ContentMovableMemory;
 use crate::device::searchable::{ContentSearchableMemory, MatchCode};
-use crate::error::Result;
+use crate::error::{CpmError, Result};
 
 /// A searchable memory with movable-memory content change.
 #[derive(Debug)]
@@ -53,6 +53,11 @@ impl MutableSearchableMemory {
         self.used
     }
 
+    /// Total device size in PEs: the ceiling for content plus edit slack.
+    pub fn capacity(&self) -> usize {
+        self.mem.len()
+    }
+
     /// True if empty.
     pub fn is_empty(&self) -> bool {
         self.used == 0
@@ -65,7 +70,17 @@ impl MutableSearchableMemory {
 
     /// Insert `data` at `at` — ~len(data) concurrent move cycles, no
     /// re-indexing (the §6.2 contrast: a database index would go stale).
+    /// Growth past the device's PE count fails with a typed
+    /// [`CpmError::CapacityExceeded`] before anything moves.
     pub fn insert(&mut self, at: usize, data: &[u8]) -> Result<()> {
+        let needed = self.used + data.len();
+        if needed > self.capacity() {
+            return Err(CpmError::CapacityExceeded {
+                device: "corpus".into(),
+                needed,
+                available: self.capacity(),
+            });
+        }
         self.mem.open_gap(at, data.len(), self.used)?;
         self.mem.write_slice(at, data)?;
         self.used += data.len();
@@ -86,6 +101,12 @@ impl MutableSearchableMemory {
     /// the number of replacements. Standard replace-all semantics: the
     /// scan resumes *after* each replacement, so a replacement that
     /// contains the pattern is not re-matched (no runaway growth).
+    ///
+    /// Each replacement is capacity-checked *before* its delete+insert
+    /// pair, so an overflowing growth returns a typed
+    /// [`CpmError::CapacityExceeded`] with the corpus intact up to the
+    /// replacements already applied — never with an occurrence deleted
+    /// but not re-inserted.
     pub fn replace_all(&mut self, pattern: &[u8], replacement: &[u8]) -> Result<usize> {
         if pattern.is_empty() {
             return Ok(0);
@@ -102,6 +123,14 @@ impl MutableSearchableMemory {
             else {
                 break;
             };
+            let after = self.used - pattern.len() + replacement.len();
+            if after > self.capacity() {
+                return Err(CpmError::CapacityExceeded {
+                    device: "corpus".into(),
+                    needed: after,
+                    available: self.capacity(),
+                });
+            }
             self.delete(start, pattern.len())?;
             self.insert(start, replacement)?;
             search_from = start + replacement.len();
@@ -238,6 +267,28 @@ mod tests {
         assert_eq!(d.find(b"abc"), vec![3, 6]);
         d.delete(0, 1).unwrap();
         assert_eq!(d.find(b"abc"), vec![2, 5]);
+    }
+
+    #[test]
+    fn replace_overflow_is_typed_and_loses_no_occurrence() {
+        // Device: 8 content bytes + 2 slack. Growing every "ab" to "WXYZ"
+        // fits once (10 bytes) but overflows on the second occurrence:
+        // the error is typed and the second "ab" is still in the corpus.
+        let mut d = MutableSearchableMemory::new(10);
+        d.load(b"xabyabzw").unwrap();
+        let err = d.replace_all(b"ab", b"WXYZ").unwrap_err();
+        assert!(
+            matches!(err, CpmError::CapacityExceeded { needed: 12, available: 10, .. }),
+            "{err}"
+        );
+        assert_eq!(d.content(), b"xWXYZyabzw");
+        assert_eq!(d.find(b"ab"), vec![7]);
+        // Direct inserts past capacity are equally typed and harmless.
+        assert!(matches!(
+            d.insert(0, b"!").unwrap_err(),
+            CpmError::CapacityExceeded { needed: 11, available: 10, .. }
+        ));
+        assert_eq!(d.content(), b"xWXYZyabzw");
     }
 
     #[test]

@@ -49,6 +49,30 @@ pub enum CpmError {
     /// Coordinator / scheduling failures.
     Coordinator(String),
 
+    /// Device-pool failures: unknown resident device, wrong device kind,
+    /// duplicate names.
+    Pool(String),
+
+    /// An admission or edit that does not fit the target device or pool.
+    CapacityExceeded {
+        /// Device (or pool) being written, as `tenant/name`.
+        device: String,
+        /// PEs needed to complete the operation.
+        needed: usize,
+        /// PEs actually available.
+        available: usize,
+    },
+
+    /// A tenant asking for more resident PEs than its quota allows.
+    QuotaExceeded {
+        /// Tenant name.
+        tenant: String,
+        /// PEs the tenant would hold after the admission.
+        needed: usize,
+        /// The tenant's quota in PEs.
+        quota: usize,
+    },
+
     /// I/O while loading artifacts or workloads.
     Io(std::io::Error),
 }
@@ -78,6 +102,23 @@ impl fmt::Display for CpmError {
             CpmError::Sql(msg) => write!(f, "sql error: {msg}"),
             CpmError::Runtime(msg) => write!(f, "runtime error: {msg}"),
             CpmError::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
+            CpmError::Pool(msg) => write!(f, "pool error: {msg}"),
+            CpmError::CapacityExceeded {
+                device,
+                needed,
+                available,
+            } => write!(
+                f,
+                "capacity exceeded on {device}: need {needed} PEs, {available} available"
+            ),
+            CpmError::QuotaExceeded {
+                tenant,
+                needed,
+                quota,
+            } => write!(
+                f,
+                "tenant {tenant} quota exceeded: need {needed} PEs, quota is {quota}"
+            ),
             CpmError::Io(e) => write!(f, "{e}"),
         }
     }
@@ -124,6 +165,24 @@ mod tests {
         assert_eq!(
             CpmError::Sql("bad token".into()).to_string(),
             "sql error: bad token"
+        );
+        assert_eq!(
+            CpmError::CapacityExceeded {
+                device: "acme/corpus".into(),
+                needed: 128,
+                available: 64,
+            }
+            .to_string(),
+            "capacity exceeded on acme/corpus: need 128 PEs, 64 available"
+        );
+        assert_eq!(
+            CpmError::QuotaExceeded {
+                tenant: "acme".into(),
+                needed: 32,
+                quota: 16,
+            }
+            .to_string(),
+            "tenant acme quota exceeded: need 32 PEs, quota is 16"
         );
     }
 

@@ -20,6 +20,7 @@ pub mod device;
 pub mod error;
 pub mod logic;
 pub mod physics;
+pub mod pool;
 pub mod runtime;
 pub mod sql;
 pub mod util;

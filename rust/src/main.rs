@@ -4,17 +4,20 @@
 //! * `info`                     — device inventory + silicon budgets
 //! * `sql --rows N`             — run SQL queries against a generated table
 //! * `search --pattern STR`     — substring search demo
+//! * `pool --requests N`        — multi-tenant batched serving demo:
+//!   device pool, shared passes, overlap makespans, per-tenant metrics
 //! * `physics`                  — §8 feasibility numbers (Eq 8-1)
 //! * `runtime-check`            — execute a trace on the active backend
 //!   (the pure-Rust interpreter by default; PJRT with `--features pjrt`)
 //!   and cross-check it against the word engine
 
 use cpm::cli::Cli;
-use cpm::coordinator::{CpmServer, Request};
+use cpm::coordinator::{Addressed, ArrayJob, CpmServer, Request};
 use cpm::device::computable::isa::N_REGS;
 use cpm::device::computable::{Instr, Opcode, Reg, Src};
 use cpm::device::control::ControlUnit;
 use cpm::physics;
+use cpm::pool::{DevicePool, PoolConfig};
 use cpm::runtime::Backend;
 use cpm::sql::Schema;
 use cpm::util::rng::Rng;
@@ -25,13 +28,14 @@ fn main() {
         Some("info") => info(&cli),
         Some("sql") => sql(&cli),
         Some("search") => search(&cli),
+        Some("pool") => pool_cmd(&cli),
         Some("physics") => physics_cmd(&cli),
         Some("runtime-check") => runtime_check(&cli),
         _ => {
             eprintln!(
-                "usage: cpm <info|sql|search|physics|runtime-check> [--flags]\n\
+                "usage: cpm <info|sql|search|pool|physics|runtime-check> [--flags]\n\
                  benches: cargo bench (see benches/paper.rs)\n\
-                 examples: cargo run --release --example <quickstart|sql_engine|image_pipeline|text_search>"
+                 examples: cargo run --release --example <quickstart|sql_engine|image_pipeline|text_search|multi_tenant>"
             );
             Ok(())
         }
@@ -100,6 +104,93 @@ fn search(cli: &Cli) -> cpm::Result<()> {
         r,
         server.metrics.device_macro_cycles
     );
+    Ok(())
+}
+
+fn pool_cmd(cli: &Cli) -> cpm::Result<()> {
+    let n_requests = cli.get("requests", 128usize);
+    let rows = cli.get("rows", 4096usize);
+    let mut rng = Rng::new(cli.get("seed", 2020u64));
+
+    let mut pool = DevicePool::new(PoolConfig {
+        capacity_pes: 1 << 18,
+        tenant_quota_pes: 1 << 17,
+        corpus_slack: 1024,
+    });
+    let schema = Schema::new(&[("price", 2), ("qty", 1)])?;
+    pool.create_table("alice", "orders", schema, rows)?;
+    let corpus: Vec<u8> = (0..8192).map(|_| b'a' + rng.range(0, 4) as u8).collect();
+    pool.create_corpus("bob", "logs", &corpus)?;
+    pool.create_array("alice", "readings", &rng.vec_i32(2048, 0, 1000), 2048)?;
+    let mut server = CpmServer::with_pool(pool, 1 << 16);
+    let table_rows: Vec<Vec<u64>> = (0..rows)
+        .map(|_| vec![rng.below(10_000), rng.below(100)])
+        .collect();
+    server.load_rows_into("alice", "orders", &table_rows)?;
+
+    // A shuffled multi-tenant mix: hot SQL templates, repeated searches,
+    // resident-array jobs, ad-hoc loads.
+    let mut batch = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let a = match i % 4 {
+            0 => Addressed::new(
+                "alice",
+                "orders",
+                Request::Sql(format!(
+                    "SELECT COUNT WHERE price < {}",
+                    1000 * (1 + i % 8)
+                )),
+            ),
+            1 => Addressed::new(
+                "bob",
+                "logs",
+                Request::Search(match i % 3 {
+                    0 => b"abca".to_vec(),
+                    1 => b"bcd".to_vec(),
+                    _ => b"dd".to_vec(),
+                }),
+            ),
+            2 => Addressed::new("alice", "readings", Request::Array(ArrayJob::Threshold(500))),
+            _ => Addressed::for_tenant("bob", Request::Sum(rng.vec_i32(1024, -100, 100))),
+        };
+        batch.push(a);
+    }
+    rng.shuffle(&mut batch);
+    let responses = server.handle_batch(&batch);
+    let errors = responses.iter().filter(|r| r.is_err()).count();
+
+    println!("residents:");
+    for r in server.pool().residents() {
+        println!(
+            "  {}/{} ({}) {} PEs{}",
+            r.tenant,
+            r.name,
+            r.kind,
+            r.pes,
+            if r.pinned { " [pinned]" } else { "" }
+        );
+    }
+    let m = &server.metrics;
+    println!(
+        "served {} requests ({} errors) in {} batch(es), {} device groups",
+        m.requests, errors, m.batches, m.groups_executed
+    );
+    println!(
+        "shared device passes saved: {}; device cycles: {} concurrent + {} exclusive",
+        m.shared_passes_saved, m.device_macro_cycles, m.device_exclusive_ops
+    );
+    println!(
+        "makespan: {} cycles back-to-back vs {} overlapped ({:.2}x from §3.1 overlap)",
+        m.makespan_serial_cycles,
+        m.makespan_overlapped_cycles,
+        m.makespan_serial_cycles as f64 / m.makespan_overlapped_cycles.max(1) as f64
+    );
+    for (tenant, t) in &m.per_tenant {
+        println!(
+            "  tenant {tenant}: {} req, {} err, {} concurrent cycles, {} exclusive ops",
+            t.requests, t.errors, t.macro_cycles, t.exclusive_ops
+        );
+    }
     Ok(())
 }
 

@@ -1,0 +1,582 @@
+//! The device-pool allocator: named resident devices with PE-capacity
+//! accounting, per-tenant quotas, and LRU eviction.
+//!
+//! PEs are the scarce resource (§8 budgets devices in PEs per mm²): every
+//! resident claims a fixed number of byte-grain PEs — a table claims
+//! `row_size · max_rows`, a corpus claims `content + slack`, a scratch
+//! array claims its word capacity. An admission that would overflow the
+//! pool evicts the least-recently-used *unpinned* residents first (cold
+//! tasks yield the smart memory to hot ones, §8's multi-task discussion);
+//! pinned devices are never evicted and per-tenant quotas are never
+//! overridden by eviction.
+
+use std::collections::BTreeMap;
+
+use crate::device::mutable_search::MutableSearchableMemory;
+use crate::error::{CpmError, Result};
+use crate::sql::{Schema, Table};
+
+/// Allocator policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolConfig {
+    /// Total PE budget across all resident devices.
+    pub capacity_pes: usize,
+    /// Default per-tenant resident-PE quota (override per tenant with
+    /// [`DevicePool::set_quota`]).
+    pub tenant_quota_pes: usize,
+    /// Spare PEs appended to every corpus so concurrent-move insertions
+    /// have room to shift into (§4's copy-free edits) — the slack policy
+    /// the server previously hard-coded.
+    pub corpus_slack: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            capacity_pes: 1 << 22,
+            tenant_quota_pes: 1 << 22,
+            corpus_slack: 4096,
+        }
+    }
+}
+
+/// A resident computable-memory scratch array: the values stay loaded in
+/// the PE plane between jobs, so repeated array jobs skip the
+/// exclusive-bus load phase (the load was paid once at admission).
+#[derive(Debug, Clone)]
+pub struct ScratchArray {
+    values: Vec<i32>,
+    capacity: usize,
+}
+
+impl ScratchArray {
+    fn new(values: &[i32], capacity: usize) -> Self {
+        let capacity = capacity.max(values.len()).max(1);
+        ScratchArray {
+            values: values.to_vec(),
+            capacity,
+        }
+    }
+
+    /// Resident values.
+    pub fn values(&self) -> &[i32] {
+        &self.values
+    }
+
+    /// Word capacity of the device.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Replace the resident content (capacity-checked).
+    pub fn store(&mut self, values: &[i32]) -> Result<()> {
+        if values.len() > self.capacity {
+            return Err(CpmError::CapacityExceeded {
+                device: "scratch array".into(),
+                needed: values.len(),
+                available: self.capacity,
+            });
+        }
+        self.values = values.to_vec();
+        Ok(())
+    }
+}
+
+/// One resident device in the pool.
+#[derive(Debug)]
+pub enum ResidentDevice {
+    /// A comparable-memory SQL table (§6.2).
+    Table(Table),
+    /// A combined searchable+movable corpus (§5.3).
+    Corpus(MutableSearchableMemory),
+    /// A computable-memory scratch array (§7).
+    Array(ScratchArray),
+}
+
+impl ResidentDevice {
+    /// Short kind label for listings and errors.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ResidentDevice::Table(_) => "table",
+            ResidentDevice::Corpus(_) => "corpus",
+            ResidentDevice::Array(_) => "array",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Entry {
+    tenant: String,
+    name: String,
+    pes: usize,
+    pinned: bool,
+    last_use: u64,
+    device: ResidentDevice,
+}
+
+impl Entry {
+    fn info(&self) -> ResidentInfo {
+        ResidentInfo {
+            tenant: self.tenant.clone(),
+            name: self.name.clone(),
+            kind: self.device.kind(),
+            pes: self.pes,
+            pinned: self.pinned,
+            last_use: self.last_use,
+        }
+    }
+}
+
+/// Listing row for one resident device (metrics / CLI / eviction audit).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResidentInfo {
+    /// Owning tenant.
+    pub tenant: String,
+    /// Device name (unique per tenant).
+    pub name: String,
+    /// Device kind: `table`, `corpus`, or `array`.
+    pub kind: &'static str,
+    /// PEs this resident claims.
+    pub pes: usize,
+    /// Pinned devices are never evicted.
+    pub pinned: bool,
+    /// LRU logical timestamp of the last access.
+    pub last_use: u64,
+}
+
+/// Pool-level counters.
+#[derive(Debug, Default, Clone)]
+pub struct PoolStats {
+    /// Devices admitted.
+    pub admissions: u64,
+    /// Devices evicted to make room.
+    pub evictions: u64,
+    /// PEs freed by evictions.
+    pub evicted_pes: u64,
+}
+
+/// A pool of named resident CPM devices shared by many tenants.
+///
+/// The pool is the allocator only — request grouping and overlap
+/// scheduling live in [`BatchExecutor`](super::BatchExecutor).
+#[derive(Debug)]
+pub struct DevicePool {
+    cfg: PoolConfig,
+    quotas: BTreeMap<String, usize>,
+    entries: Vec<Entry>,
+    clock: u64,
+    /// Admission/eviction counters.
+    pub stats: PoolStats,
+}
+
+pub(crate) fn missing(tenant: &str, name: &str) -> CpmError {
+    CpmError::Pool(format!("no resident device {tenant}/{name}"))
+}
+
+pub(crate) fn wrong_kind(tenant: &str, name: &str, got: &str, want: &str) -> CpmError {
+    CpmError::Pool(format!("device {tenant}/{name} is a {got}, not a {want}"))
+}
+
+impl DevicePool {
+    /// Empty pool with the given policy.
+    pub fn new(cfg: PoolConfig) -> Self {
+        DevicePool {
+            cfg,
+            quotas: BTreeMap::new(),
+            entries: Vec::new(),
+            clock: 0,
+            stats: PoolStats::default(),
+        }
+    }
+
+    /// The allocator policy.
+    pub fn config(&self) -> PoolConfig {
+        self.cfg
+    }
+
+    /// Override one tenant's resident-PE quota.
+    pub fn set_quota(&mut self, tenant: &str, pes: usize) {
+        self.quotas.insert(tenant.to_string(), pes);
+    }
+
+    /// A tenant's resident-PE quota (override or the config default).
+    pub fn quota(&self, tenant: &str) -> usize {
+        self.quotas
+            .get(tenant)
+            .copied()
+            .unwrap_or(self.cfg.tenant_quota_pes)
+    }
+
+    /// Total PE budget.
+    pub fn capacity_pes(&self) -> usize {
+        self.cfg.capacity_pes
+    }
+
+    /// PEs currently claimed by residents.
+    pub fn used_pes(&self) -> usize {
+        self.entries.iter().map(|e| e.pes).sum()
+    }
+
+    /// PEs currently claimed by one tenant's residents.
+    pub fn tenant_pes(&self, tenant: &str) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| e.tenant == tenant)
+            .map(|e| e.pes)
+            .sum()
+    }
+
+    /// True if `tenant/name` is resident.
+    pub fn contains(&self, tenant: &str, name: &str) -> bool {
+        self.find(tenant, name).is_some()
+    }
+
+    /// Kind label of a resident (`table` / `corpus` / `array`), if any.
+    pub fn kind_of(&self, tenant: &str, name: &str) -> Option<&'static str> {
+        self.find(tenant, name)
+            .map(|i| self.entries[i].device.kind())
+    }
+
+    /// Listing of all residents (stable admission order).
+    pub fn residents(&self) -> Vec<ResidentInfo> {
+        self.entries.iter().map(Entry::info).collect()
+    }
+
+    fn find(&self, tenant: &str, name: &str) -> Option<usize> {
+        self.entries
+            .iter()
+            .position(|e| e.tenant == tenant && e.name == name)
+    }
+
+    /// Admit a new resident: enforce the tenant quota, then evict
+    /// least-recently-used unpinned residents until the pool fits.
+    /// Returns the evicted residents (possibly empty).
+    fn admit(&mut self, entry: Entry) -> Result<Vec<ResidentInfo>> {
+        if self.find(&entry.tenant, &entry.name).is_some() {
+            return Err(CpmError::Pool(format!(
+                "device {}/{} already resident",
+                entry.tenant, entry.name
+            )));
+        }
+        let tenant_after = self.tenant_pes(&entry.tenant) + entry.pes;
+        let quota = self.quota(&entry.tenant);
+        if tenant_after > quota {
+            return Err(CpmError::QuotaExceeded {
+                tenant: entry.tenant.clone(),
+                needed: tenant_after,
+                quota,
+            });
+        }
+        // Feasibility first, so a failed admission never evicts anything:
+        // even with every unpinned resident gone, does the device fit?
+        let evictable: usize = self
+            .entries
+            .iter()
+            .filter(|e| !e.pinned)
+            .map(|e| e.pes)
+            .sum();
+        let floor = self.used_pes() - evictable;
+        if floor + entry.pes > self.cfg.capacity_pes {
+            return Err(CpmError::CapacityExceeded {
+                device: format!("{}/{}", entry.tenant, entry.name),
+                needed: entry.pes,
+                available: self.cfg.capacity_pes.saturating_sub(floor),
+            });
+        }
+        let mut evicted = Vec::new();
+        while self.used_pes() + entry.pes > self.cfg.capacity_pes {
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| !e.pinned)
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(i, _)| i)
+                .expect("feasibility checked above");
+            let gone = self.entries.remove(victim);
+            self.stats.evictions += 1;
+            self.stats.evicted_pes += gone.pes as u64;
+            evicted.push(gone.info());
+        }
+        self.clock += 1;
+        self.stats.admissions += 1;
+        self.entries.push(Entry {
+            last_use: self.clock,
+            ..entry
+        });
+        Ok(evicted)
+    }
+
+    /// Admit a SQL table with capacity for `max_rows`.
+    pub fn create_table(
+        &mut self,
+        tenant: &str,
+        name: &str,
+        schema: Schema,
+        max_rows: usize,
+    ) -> Result<Vec<ResidentInfo>> {
+        let pes = (schema.row_size() * max_rows).max(1);
+        self.admit(Entry {
+            tenant: tenant.to_string(),
+            name: name.to_string(),
+            pes,
+            pinned: false,
+            last_use: 0,
+            device: ResidentDevice::Table(Table::new(schema, max_rows)),
+        })
+    }
+
+    /// Admit a searchable+movable corpus with the pool's slack policy.
+    pub fn create_corpus(
+        &mut self,
+        tenant: &str,
+        name: &str,
+        content: &[u8],
+    ) -> Result<Vec<ResidentInfo>> {
+        self.create_corpus_with_slack(tenant, name, content, self.cfg.corpus_slack)
+    }
+
+    /// Admit a corpus with an explicit per-device slack override.
+    pub fn create_corpus_with_slack(
+        &mut self,
+        tenant: &str,
+        name: &str,
+        content: &[u8],
+        slack: usize,
+    ) -> Result<Vec<ResidentInfo>> {
+        let pes = (content.len() + slack).max(1);
+        let mut mem = MutableSearchableMemory::new(pes);
+        mem.load(content)?;
+        self.admit(Entry {
+            tenant: tenant.to_string(),
+            name: name.to_string(),
+            pes,
+            pinned: false,
+            last_use: 0,
+            device: ResidentDevice::Corpus(mem),
+        })
+    }
+
+    /// Admit a computable scratch array (`capacity` words, at least
+    /// `values.len()`).
+    pub fn create_array(
+        &mut self,
+        tenant: &str,
+        name: &str,
+        values: &[i32],
+        capacity: usize,
+    ) -> Result<Vec<ResidentInfo>> {
+        let arr = ScratchArray::new(values, capacity);
+        let pes = arr.capacity();
+        self.admit(Entry {
+            tenant: tenant.to_string(),
+            name: name.to_string(),
+            pes,
+            pinned: false,
+            last_use: 0,
+            device: ResidentDevice::Array(arr),
+        })
+    }
+
+    /// Pin or unpin a resident (pinned devices are never evicted).
+    pub fn pin(&mut self, tenant: &str, name: &str, pinned: bool) -> Result<()> {
+        let idx = self.find(tenant, name).ok_or_else(|| missing(tenant, name))?;
+        self.entries[idx].pinned = pinned;
+        Ok(())
+    }
+
+    /// Remove a resident explicitly, freeing its PEs.
+    pub fn remove(&mut self, tenant: &str, name: &str) -> Result<()> {
+        let idx = self.find(tenant, name).ok_or_else(|| missing(tenant, name))?;
+        self.entries.remove(idx);
+        Ok(())
+    }
+
+    /// Read-only peek at a resident table (no LRU touch).
+    pub fn table(&self, tenant: &str, name: &str) -> Option<&Table> {
+        match self.find(tenant, name).map(|i| &self.entries[i].device) {
+            Some(ResidentDevice::Table(t)) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Read-only peek at a resident corpus (no LRU touch).
+    pub fn corpus(&self, tenant: &str, name: &str) -> Option<&MutableSearchableMemory> {
+        match self.find(tenant, name).map(|i| &self.entries[i].device) {
+            Some(ResidentDevice::Corpus(c)) => Some(c),
+            _ => None,
+        }
+    }
+
+    /// Read-only peek at a resident scratch array (no LRU touch).
+    pub fn array(&self, tenant: &str, name: &str) -> Option<&ScratchArray> {
+        match self.find(tenant, name).map(|i| &self.entries[i].device) {
+            Some(ResidentDevice::Array(a)) => Some(a),
+            _ => None,
+        }
+    }
+
+    fn touch(&mut self, idx: usize) -> &mut ResidentDevice {
+        self.clock += 1;
+        let e = &mut self.entries[idx];
+        e.last_use = self.clock;
+        &mut e.device
+    }
+
+    /// Access a resident table for serving (bumps the LRU clock).
+    pub fn table_mut(&mut self, tenant: &str, name: &str) -> Result<&mut Table> {
+        let idx = self.find(tenant, name).ok_or_else(|| missing(tenant, name))?;
+        match self.touch(idx) {
+            ResidentDevice::Table(t) => Ok(t),
+            other => {
+                let got = other.kind();
+                Err(wrong_kind(tenant, name, got, "table"))
+            }
+        }
+    }
+
+    /// Access a resident corpus for serving (bumps the LRU clock).
+    pub fn corpus_mut(
+        &mut self,
+        tenant: &str,
+        name: &str,
+    ) -> Result<&mut MutableSearchableMemory> {
+        let idx = self.find(tenant, name).ok_or_else(|| missing(tenant, name))?;
+        match self.touch(idx) {
+            ResidentDevice::Corpus(c) => Ok(c),
+            other => {
+                let got = other.kind();
+                Err(wrong_kind(tenant, name, got, "corpus"))
+            }
+        }
+    }
+
+    /// Access a resident scratch array for serving (bumps the LRU clock).
+    pub fn array_mut(&mut self, tenant: &str, name: &str) -> Result<&mut ScratchArray> {
+        let idx = self.find(tenant, name).ok_or_else(|| missing(tenant, name))?;
+        match self.touch(idx) {
+            ResidentDevice::Array(a) => Ok(a),
+            other => {
+                let got = other.kind();
+                Err(wrong_kind(tenant, name, got, "array"))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_pool(capacity: usize) -> DevicePool {
+        DevicePool::new(PoolConfig {
+            capacity_pes: capacity,
+            // Roomy default quota so tests exercise the *pool* capacity
+            // path; quota tests override per tenant.
+            tenant_quota_pes: capacity * 4,
+            corpus_slack: 8,
+        })
+    }
+
+    #[test]
+    fn admission_accounts_pes() {
+        let mut p = small_pool(1024);
+        p.create_corpus("a", "c1", &[7; 56]).unwrap(); // 56 + 8 slack
+        assert_eq!(p.used_pes(), 64);
+        let schema = Schema::new(&[("x", 2)]).unwrap();
+        p.create_table("a", "t1", schema, 100).unwrap(); // 200
+        assert_eq!(p.used_pes(), 264);
+        p.create_array("b", "arr", &[1, 2, 3], 100).unwrap();
+        assert_eq!(p.used_pes(), 364);
+        assert_eq!(p.tenant_pes("a"), 264);
+        assert_eq!(p.tenant_pes("b"), 100);
+        assert_eq!(p.stats.admissions, 3);
+        p.remove("a", "c1").unwrap();
+        assert_eq!(p.used_pes(), 300);
+        assert!(!p.contains("a", "c1"));
+    }
+
+    #[test]
+    fn duplicate_names_rejected_per_tenant() {
+        let mut p = small_pool(1024);
+        p.create_array("a", "x", &[1], 16).unwrap();
+        assert!(p.create_array("a", "x", &[1], 16).is_err());
+        // Same name under another tenant is a different device.
+        p.create_array("b", "x", &[1], 16).unwrap();
+    }
+
+    #[test]
+    fn quota_rejects_before_eviction() {
+        let mut p = small_pool(1024);
+        p.set_quota("a", 100);
+        p.create_array("a", "x", &[0; 64], 64).unwrap();
+        let err = p.create_array("a", "y", &[0; 64], 64).unwrap_err();
+        assert!(
+            matches!(err, CpmError::QuotaExceeded { needed: 128, quota: 100, .. }),
+            "{err}"
+        );
+        // Another tenant still fits.
+        p.create_array("b", "y", &[0; 64], 64).unwrap();
+    }
+
+    #[test]
+    fn lru_evicts_coldest_unpinned_first() {
+        let mut p = small_pool(300);
+        p.create_array("a", "cold", &[0; 8], 100).unwrap();
+        p.create_array("a", "warm", &[0; 8], 100).unwrap();
+        p.create_array("a", "hot", &[0; 8], 100).unwrap();
+        // Touch "cold" then "warm" is now the coldest.
+        p.array_mut("a", "cold").unwrap();
+        let evicted = p.create_array("a", "new", &[0; 8], 100).unwrap();
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].name, "warm");
+        assert!(p.contains("a", "cold"));
+        assert!(p.contains("a", "hot"));
+        assert!(p.contains("a", "new"));
+        assert_eq!(p.stats.evictions, 1);
+        assert_eq!(p.stats.evicted_pes, 100);
+    }
+
+    #[test]
+    fn pinned_devices_survive_eviction() {
+        let mut p = small_pool(300);
+        p.create_array("a", "keep", &[0; 8], 100).unwrap();
+        p.create_array("a", "spill1", &[0; 8], 100).unwrap();
+        p.create_array("a", "spill2", &[0; 8], 100).unwrap();
+        p.pin("a", "keep", true).unwrap();
+        let evicted = p.create_array("a", "big", &[0; 8], 200).unwrap();
+        let names: Vec<&str> = evicted.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names, ["spill1", "spill2"]);
+        assert!(p.contains("a", "keep"));
+        // 100 pinned + a 300-PE ask can never fit a 300-PE pool: fails
+        // typed *and* leaves the current residents untouched.
+        let err = p.create_array("b", "huge", &[0; 8], 300).unwrap_err();
+        assert!(matches!(err, CpmError::CapacityExceeded { .. }), "{err}");
+        assert!(p.contains("a", "keep"), "failed admission must not evict");
+        assert!(p.contains("a", "big"), "failed admission must not evict");
+    }
+
+    #[test]
+    fn wrong_kind_access_is_typed() {
+        let mut p = small_pool(1024);
+        p.create_corpus("a", "c", b"hello").unwrap();
+        let err = p.table_mut("a", "c").unwrap_err();
+        assert_eq!(err.to_string(), "pool error: device a/c is a corpus, not a table");
+        assert!(p.table("a", "c").is_none());
+        assert!(p.corpus("a", "c").is_some());
+        assert!(p.corpus_mut("a", "missing").is_err());
+    }
+
+    #[test]
+    fn scratch_array_store_is_capacity_checked() {
+        let mut p = small_pool(1024);
+        p.create_array("a", "arr", &[1, 2, 3], 4).unwrap();
+        let arr = p.array_mut("a", "arr").unwrap();
+        arr.store(&[9, 9, 9, 9]).unwrap();
+        assert_eq!(arr.values(), &[9, 9, 9, 9]);
+        assert!(matches!(
+            arr.store(&[0; 5]).unwrap_err(),
+            CpmError::CapacityExceeded { needed: 5, available: 4, .. }
+        ));
+    }
+}

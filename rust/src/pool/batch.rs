@@ -1,0 +1,582 @@
+//! Batched request execution with overlap scheduling — the serve-path
+//! realisation of E18's model (§3.1, §8).
+//!
+//! The executor admits a queue of addressed requests and groups
+//! compatible work: all SQL against one table shares compare passes
+//! through [`crate::sql::Table::query_batch`]'s per-batch query memo;
+//! identical searches against one corpus share one broadcast pass.
+//! Each group is charged as
+//! one (load, exec) phase — exclusive-bus ops load, concurrent macro
+//! cycles execute — and the phase list is scheduled with
+//! [`OverlapScheduler`], so the exclusive/concurrent overlap finally
+//! drives real serving instead of a standalone model.
+//!
+//! Correctness: corpus edits (`Insert`/`Delete`/`Replace`) are barriers —
+//! a search group never spans an edit of its own corpus, and groups run
+//! in first-member order — so batched responses are identical to
+//! one-at-a-time serving of the same queue (pinned by
+//! `tests/pool_props.rs`).
+
+use std::collections::BTreeMap;
+
+use crate::algos::{histogram, reduce, sort, threshold};
+use crate::coordinator::scheduler::{OverlapScheduler, TaskPhase};
+use crate::coordinator::server::{default_device, Addressed, ArrayJob, Request, Response};
+use crate::cycles::ConcurrentCost;
+use crate::device::computable::{Reg, WordEngine};
+use crate::error::{CpmError, Result};
+use crate::sql::Query;
+
+use super::allocator::{missing, wrong_kind, DevicePool};
+
+/// What one executed batch cost, group by group.
+#[derive(Debug, Default, Clone)]
+pub struct BatchReport {
+    /// One (load, exec) phase per executed group, in execution order.
+    pub phases: Vec<TaskPhase>,
+    /// Device cost per group, attributed to the group's tenant.
+    pub group_costs: Vec<(String, ConcurrentCost)>,
+    /// Device passes avoided by sharing compare/search passes.
+    pub shared_passes: u64,
+    /// Groups executed.
+    pub groups: u64,
+    /// Makespan if the grouped phases ran back-to-back (no overlap).
+    pub makespan_serial: u64,
+    /// Makespan with task k+1's exclusive-bus load streamed while task k
+    /// executes on the concurrent bus (§3.1).
+    pub makespan_overlapped: u64,
+}
+
+/// Borrowed view of an [`Addressed`] request. The executor works on
+/// these so the serve path never clones request payloads — the owned
+/// envelope is only for callers that store or send requests.
+#[derive(Debug, Clone, Copy)]
+pub struct AddressedRef<'a> {
+    /// Owning tenant.
+    pub tenant: &'a str,
+    /// Explicit target device name, if any.
+    pub device: Option<&'a str>,
+    /// The operation.
+    pub op: &'a Request,
+}
+
+impl<'a> From<&'a Addressed> for AddressedRef<'a> {
+    fn from(a: &'a Addressed) -> Self {
+        AddressedRef {
+            tenant: &a.tenant,
+            device: a.device.as_deref(),
+            op: &a.op,
+        }
+    }
+}
+
+impl<'a> AddressedRef<'a> {
+    /// The resident device this request targets (see
+    /// [`Addressed::device_name`]).
+    pub fn device_name(&self) -> &'a str {
+        match self.device {
+            Some(d) => d,
+            None => default_device(self.op),
+        }
+    }
+}
+
+/// Groups, executes, and overlap-schedules a queue of requests against a
+/// [`DevicePool`].
+#[derive(Debug, Clone, Copy)]
+pub struct BatchExecutor {
+    /// Largest ad-hoc array a computable-memory job may load.
+    engine_capacity: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum GroupKind {
+    Sql,
+    Search,
+    Solo,
+}
+
+#[derive(Debug)]
+struct Group {
+    kind: GroupKind,
+    tenant: String,
+    device: String,
+    members: Vec<usize>,
+}
+
+/// Append member `i` to the open group under `key`, creating the group
+/// first if none is open.
+fn open_group(
+    groups: &mut Vec<Group>,
+    open: &mut BTreeMap<(String, String), usize>,
+    kind: GroupKind,
+    key: (String, String),
+    i: usize,
+) {
+    let gid = match open.get(&key) {
+        Some(&g) => g,
+        None => {
+            groups.push(Group {
+                kind,
+                tenant: key.0.clone(),
+                device: key.1.clone(),
+                members: Vec::new(),
+            });
+            let g = groups.len() - 1;
+            open.insert(key, g);
+            g
+        }
+    };
+    groups[gid].members.push(i);
+}
+
+/// Partition the batch into groups. SQL requests group per
+/// `(tenant, table)` for the whole batch (no request mutates a table);
+/// searches group per `(tenant, corpus)` *between edits of that corpus*;
+/// everything else runs solo in arrival order.
+fn plan(batch: &[AddressedRef<'_>]) -> Vec<Group> {
+    let mut groups: Vec<Group> = Vec::new();
+    let mut open_sql: BTreeMap<(String, String), usize> = BTreeMap::new();
+    let mut open_search: BTreeMap<(String, String), usize> = BTreeMap::new();
+    for (i, a) in batch.iter().enumerate() {
+        let key = (a.tenant.to_string(), a.device_name().to_string());
+        match a.op {
+            Request::Sql(_) => {
+                open_group(&mut groups, &mut open_sql, GroupKind::Sql, key, i);
+            }
+            Request::Search(_) => {
+                open_group(&mut groups, &mut open_search, GroupKind::Search, key, i);
+            }
+            _ => {
+                if matches!(
+                    a.op,
+                    Request::Insert(..) | Request::Delete(..) | Request::Replace(..)
+                ) {
+                    // Barrier: later searches on this corpus open a new
+                    // group.
+                    open_search.remove(&key);
+                }
+                groups.push(Group {
+                    kind: GroupKind::Solo,
+                    tenant: key.0,
+                    device: key.1,
+                    members: vec![i],
+                });
+            }
+        }
+    }
+    groups
+}
+
+fn push_phase(report: &mut BatchReport, tenant: &str, cost: ConcurrentCost) {
+    report.phases.push(TaskPhase {
+        load_cycles: cost.exclusive_ops,
+        exec_cycles: cost.macro_cycles,
+    });
+    report.group_costs.push((tenant.to_string(), cost));
+}
+
+impl BatchExecutor {
+    /// Executor with the given ad-hoc computable-memory capacity.
+    pub fn new(engine_capacity: usize) -> Self {
+        BatchExecutor { engine_capacity }
+    }
+
+    /// Execute a batch. Responses align with `batch` order; the report
+    /// carries the per-group phases, costs, and makespans.
+    pub fn execute(
+        &self,
+        pool: &mut DevicePool,
+        batch: &[AddressedRef<'_>],
+    ) -> (Vec<Result<Response>>, BatchReport) {
+        let groups = plan(batch);
+        let mut responses: Vec<Option<Result<Response>>> =
+            (0..batch.len()).map(|_| None).collect();
+        let mut report = BatchReport::default();
+        for g in &groups {
+            match g.kind {
+                GroupKind::Sql => self.run_sql_group(pool, g, batch, &mut responses, &mut report),
+                GroupKind::Search => {
+                    self.run_search_group(pool, g, batch, &mut responses, &mut report)
+                }
+                GroupKind::Solo => {
+                    let i = g.members[0];
+                    let (resp, cost) =
+                        self.dispatch_solo(pool, &g.tenant, &g.device, batch[i].op);
+                    responses[i] = Some(resp);
+                    push_phase(&mut report, &g.tenant, cost);
+                }
+            }
+        }
+        report.groups = groups.len() as u64;
+        report.makespan_serial = OverlapScheduler::makespan_serial(&report.phases);
+        report.makespan_overlapped = OverlapScheduler::makespan_overlapped(&report.phases);
+        let responses = responses
+            .into_iter()
+            .map(|r| r.expect("every request answered"))
+            .collect();
+        (responses, report)
+    }
+
+    fn run_sql_group(
+        &self,
+        pool: &mut DevicePool,
+        g: &Group,
+        batch: &[AddressedRef<'_>],
+        responses: &mut [Option<Result<Response>>],
+        report: &mut BatchReport,
+    ) {
+        // Parse first: malformed queries answer without touching devices.
+        let mut queries = Vec::new();
+        let mut slots = Vec::new();
+        for &i in &g.members {
+            if let Request::Sql(text) = batch[i].op {
+                match Query::parse(text) {
+                    Ok(q) => {
+                        queries.push(q);
+                        slots.push(i);
+                    }
+                    Err(e) => responses[i] = Some(Err(e)),
+                }
+            }
+        }
+        match pool.kind_of(&g.tenant, &g.device) {
+            Some("table") => {}
+            // Same typed errors table_mut would produce, one per member.
+            kind => {
+                for &i in &slots {
+                    responses[i] = Some(Err(match kind {
+                        None => missing(&g.tenant, &g.device),
+                        Some(k) => wrong_kind(&g.tenant, &g.device, k, "table"),
+                    }));
+                }
+                return;
+            }
+        }
+        let table = pool
+            .table_mut(&g.tenant, &g.device)
+            .expect("probed just above");
+        table.reset_device_cost();
+        let (results, stats) = table.query_batch(&queries);
+        let cost = table.device_cost();
+        for (r, &i) in results.into_iter().zip(&slots) {
+            responses[i] = Some(r.map(Response::Sql));
+        }
+        report.shared_passes += stats.shared_passes();
+        push_phase(report, &g.tenant, cost);
+    }
+
+    fn run_search_group(
+        &self,
+        pool: &mut DevicePool,
+        g: &Group,
+        batch: &[AddressedRef<'_>],
+        responses: &mut [Option<Result<Response>>],
+        report: &mut BatchReport,
+    ) {
+        match pool.kind_of(&g.tenant, &g.device) {
+            Some("corpus") => {}
+            // Same typed errors corpus_mut would produce, one per member.
+            kind => {
+                for &i in &g.members {
+                    responses[i] = Some(Err(match kind {
+                        None => missing(&g.tenant, &g.device),
+                        Some(k) => wrong_kind(&g.tenant, &g.device, k, "corpus"),
+                    }));
+                }
+                return;
+            }
+        }
+        let corpus = pool
+            .corpus_mut(&g.tenant, &g.device)
+            .expect("probed just above");
+        corpus.reset_cost();
+        // Identical patterns share one ~M-cycle broadcast pass: the first
+        // occurrence drives the match ladder, duplicates read the same
+        // match lines.
+        let mut cache: BTreeMap<&[u8], Vec<usize>> = BTreeMap::new();
+        for &i in &g.members {
+            if let Request::Search(pattern) = batch[i].op {
+                let hits = match cache.get(pattern.as_slice()) {
+                    Some(h) => {
+                        report.shared_passes += 1;
+                        h.clone()
+                    }
+                    None => {
+                        let h = corpus.find(pattern);
+                        cache.insert(pattern.as_slice(), h.clone());
+                        h
+                    }
+                };
+                responses[i] = Some(Ok(Response::Matches(hits)));
+            }
+        }
+        let cost = corpus.cost();
+        push_phase(report, &g.tenant, cost);
+    }
+
+    /// Execute one non-groupable request (corpus edits, ad-hoc compute,
+    /// resident-array jobs).
+    fn dispatch_solo(
+        &self,
+        pool: &mut DevicePool,
+        tenant: &str,
+        device: &str,
+        op: &Request,
+    ) -> (Result<Response>, ConcurrentCost) {
+        match op {
+            // plan() routes every Sql/Search into a (possibly 1-member)
+            // group; keeping a second execution path here would be dead
+            // code that could silently diverge from the group runners.
+            Request::Sql(_) | Request::Search(_) => {
+                unreachable!("Sql/Search always execute through their group runners")
+            }
+            Request::Insert(at, data) => match pool.corpus_mut(tenant, device) {
+                Ok(corpus) => {
+                    corpus.reset_cost();
+                    // The device itself rejects growth past its PE count
+                    // with a typed CapacityExceeded before anything moves.
+                    let r = corpus
+                        .insert(*at, data)
+                        .map(|()| Response::Scalar(corpus.len() as i64));
+                    (r, corpus.cost())
+                }
+                Err(e) => (Err(e), ConcurrentCost::default()),
+            },
+            Request::Delete(at, len) => match pool.corpus_mut(tenant, device) {
+                Ok(corpus) => {
+                    corpus.reset_cost();
+                    let r = corpus
+                        .delete(*at, *len)
+                        .map(|()| Response::Scalar(corpus.len() as i64));
+                    (r, corpus.cost())
+                }
+                Err(e) => (Err(e), ConcurrentCost::default()),
+            },
+            Request::Replace(pattern, replacement) => match pool.corpus_mut(tenant, device) {
+                Ok(corpus) => {
+                    corpus.reset_cost();
+                    let r = corpus
+                        .replace_all(pattern, replacement)
+                        .map(|n| Response::Scalar(n as i64));
+                    (r, corpus.cost())
+                }
+                Err(e) => (Err(e), ConcurrentCost::default()),
+            },
+            Request::Sum(values) => match self.engine_for(values) {
+                Ok(mut e) => {
+                    let run = reduce::sum_1d_opt(&mut e, values.len());
+                    (Ok(Response::Scalar(run.value)), e.cost())
+                }
+                Err(e) => (Err(e), ConcurrentCost::default()),
+            },
+            Request::Max(values) => {
+                if values.is_empty() {
+                    return (
+                        Err(CpmError::Coordinator("max of empty array".into())),
+                        ConcurrentCost::default(),
+                    );
+                }
+                match self.engine_for(values) {
+                    Ok(mut e) => {
+                        let m = crate::util::isqrt(values.len() as u64).max(1) as usize;
+                        let run = reduce::max_1d(&mut e, values.len(), m);
+                        (Ok(Response::Scalar(run.value as i64)), e.cost())
+                    }
+                    Err(e) => (Err(e), ConcurrentCost::default()),
+                }
+            }
+            Request::Sort(values) => match self.engine_for(values) {
+                Ok(mut e) => {
+                    sort::sort_sqrt(&mut e, values.len());
+                    let sorted = e.plane(Reg::Nb)[..values.len()].to_vec();
+                    (Ok(Response::Sorted(sorted)), e.cost())
+                }
+                Err(e) => (Err(e), ConcurrentCost::default()),
+            },
+            Request::Threshold(values, t) => match self.engine_for(values) {
+                Ok(mut e) => {
+                    let count = threshold::threshold_mark(&mut e, values.len(), *t);
+                    (Ok(Response::Scalar(count as i64)), e.cost())
+                }
+                Err(e) => (Err(e), ConcurrentCost::default()),
+            },
+            Request::Histogram(values, bounds) => match self.engine_for(values) {
+                Ok(mut e) => {
+                    let counts = histogram::histogram_words(&mut e, values.len(), bounds);
+                    (Ok(Response::Histogram(counts)), e.cost())
+                }
+                Err(e) => (Err(e), ConcurrentCost::default()),
+            },
+            Request::Array(job) => self.run_array_job(pool, tenant, device, job),
+        }
+    }
+
+    fn run_array_job(
+        &self,
+        pool: &mut DevicePool,
+        tenant: &str,
+        device: &str,
+        job: &ArrayJob,
+    ) -> (Result<Response>, ConcurrentCost) {
+        let values = match pool.array_mut(tenant, device) {
+            Ok(a) => a.values().to_vec(),
+            Err(e) => return (Err(e), ConcurrentCost::default()),
+        };
+        let n = values.len();
+        let mut e = WordEngine::new(n.max(1), 16);
+        e.load_plane(Reg::Nb, &values);
+        // The array is resident in the PE plane between jobs: its load was
+        // paid at admission, so a job charges execution cycles only.
+        e.reset_cost();
+        let r = match job {
+            ArrayJob::Sum => Response::Scalar(reduce::sum_1d_opt(&mut e, n).value),
+            ArrayJob::Max => {
+                if values.is_empty() {
+                    return (
+                        Err(CpmError::Coordinator("max of empty array".into())),
+                        ConcurrentCost::default(),
+                    );
+                }
+                let m = crate::util::isqrt(n as u64).max(1) as usize;
+                Response::Scalar(reduce::max_1d(&mut e, n, m).value as i64)
+            }
+            ArrayJob::Sort => {
+                sort::sort_sqrt(&mut e, n);
+                Response::Sorted(e.plane(Reg::Nb)[..n].to_vec())
+            }
+            ArrayJob::Threshold(t) => {
+                Response::Scalar(threshold::threshold_mark(&mut e, n, *t) as i64)
+            }
+            ArrayJob::Histogram(bounds) => {
+                Response::Histogram(histogram::histogram_words(&mut e, n, bounds))
+            }
+        };
+        (Ok(r), e.cost())
+    }
+
+    fn engine_for(&self, values: &[i32]) -> Result<WordEngine> {
+        if values.len() > self.engine_capacity {
+            return Err(CpmError::Coordinator(format!(
+                "array of {} exceeds device capacity {}",
+                values.len(),
+                self.engine_capacity
+            )));
+        }
+        let mut e = WordEngine::new(values.len().max(1), 16);
+        e.load_plane(Reg::Nb, values);
+        Ok(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::{DEFAULT_CORPUS, DEFAULT_TABLE, DEFAULT_TENANT};
+    use crate::pool::PoolConfig;
+    use crate::sql::Schema;
+
+    fn pool_with_defaults() -> DevicePool {
+        let mut pool = DevicePool::new(PoolConfig {
+            capacity_pes: 1 << 16,
+            tenant_quota_pes: 1 << 16,
+            corpus_slack: 64,
+        });
+        let schema = Schema::new(&[("price", 2), ("qty", 1)]).unwrap();
+        pool.create_table(DEFAULT_TENANT, DEFAULT_TABLE, schema, 64)
+            .unwrap();
+        pool.create_corpus(DEFAULT_TENANT, DEFAULT_CORPUS, b"abc abc abc")
+            .unwrap();
+        let table = pool.table_mut(DEFAULT_TENANT, DEFAULT_TABLE).unwrap();
+        for row in [[100u64, 1], [2500, 2], [9000, 3], [400, 4]] {
+            table.insert(&row).unwrap();
+        }
+        pool
+    }
+
+    fn local(op: Request) -> Addressed {
+        Addressed::local(op)
+    }
+
+    fn refs(batch: &[Addressed]) -> Vec<AddressedRef<'_>> {
+        batch.iter().map(AddressedRef::from).collect()
+    }
+
+    #[test]
+    fn grouping_respects_corpus_edit_barriers() {
+        let batch = vec![
+            local(Request::Search(b"abc".to_vec())),
+            local(Request::Sql("SELECT COUNT WHERE price < 1000".into())),
+            local(Request::Search(b"abc".to_vec())),
+            local(Request::Insert(0, b"x".to_vec())),
+            local(Request::Search(b"abc".to_vec())),
+            local(Request::Sql("SELECT COUNT WHERE price < 1000".into())),
+        ];
+        let groups = plan(&refs(&batch));
+        // search{0,2} | sql{1,5} | insert{3} | search{4}
+        assert_eq!(groups.len(), 4);
+        assert_eq!(groups[0].members, vec![0, 2]);
+        assert_eq!(groups[0].kind, GroupKind::Search);
+        assert_eq!(groups[1].members, vec![1, 5]);
+        assert_eq!(groups[1].kind, GroupKind::Sql);
+        assert_eq!(groups[2].members, vec![3]);
+        assert_eq!(groups[3].members, vec![4]);
+    }
+
+    #[test]
+    fn batch_answers_every_request_in_order() {
+        let mut pool = pool_with_defaults();
+        let ex = BatchExecutor::new(1 << 12);
+        let batch = vec![
+            local(Request::Sql("SELECT COUNT WHERE price < 1000".into())),
+            local(Request::Search(b"abc".to_vec())),
+            local(Request::Search(b"abc".to_vec())),
+            local(Request::Sum(vec![1, 2, 3, 4])),
+            local(Request::Sql("garbage".into())),
+        ];
+        let (responses, report) = ex.execute(&mut pool, &refs(&batch));
+        assert_eq!(responses.len(), 5);
+        assert_eq!(
+            responses[0].as_ref().unwrap(),
+            &Response::Sql(crate::sql::QueryResult::Count(2))
+        );
+        assert_eq!(
+            responses[1].as_ref().unwrap(),
+            &Response::Matches(vec![2, 6, 10])
+        );
+        assert_eq!(responses[1].as_ref().unwrap(), responses[2].as_ref().unwrap());
+        assert_eq!(responses[3].as_ref().unwrap(), &Response::Scalar(10));
+        assert!(responses[4].is_err());
+        // Duplicate search shares the broadcast pass.
+        assert_eq!(report.shared_passes, 1);
+        assert!(report.makespan_overlapped <= report.makespan_serial);
+        assert!(report.groups >= 3);
+    }
+
+    #[test]
+    fn missing_devices_answer_typed_errors() {
+        let mut pool = pool_with_defaults();
+        let ex = BatchExecutor::new(1 << 12);
+        let batch = vec![
+            Addressed::new("ghost", "table", Request::Sql("SELECT COUNT WHERE x = 1".into())),
+            Addressed::new("ghost", "corpus", Request::Search(b"x".to_vec())),
+            Addressed::new("ghost", "array", Request::Array(ArrayJob::Sum)),
+        ];
+        let (responses, _) = ex.execute(&mut pool, &refs(&batch));
+        for r in &responses {
+            assert!(matches!(r, Err(CpmError::Pool(_))), "{r:?}");
+        }
+        // A resident device of the wrong kind reports *what it is*, not
+        // "missing".
+        let wrong = Addressed::new(
+            DEFAULT_TENANT,
+            DEFAULT_CORPUS,
+            Request::Sql("SELECT COUNT WHERE price < 1".into()),
+        );
+        let (responses, _) = ex.execute(&mut pool, &refs(std::slice::from_ref(&wrong)));
+        assert_eq!(
+            responses[0].as_ref().unwrap_err().to_string(),
+            "pool error: device default/corpus is a corpus, not a table"
+        );
+    }
+}

@@ -1,0 +1,26 @@
+//! Multi-tenant device pool — the "one smart memory, many tasks" layer.
+//!
+//! §2 and §3.1 pitch one CPM serving many tasks: while some addressable
+//! registers are operated on concurrently, other registers can be
+//! prepared for other tasks through exclusive operations. This subsystem
+//! makes that real in the serve path:
+//!
+//! * [`DevicePool`] owns multiple *named* resident devices (SQL tables,
+//!   searchable/movable corpora, computable scratch arrays) behind an
+//!   allocator with PE-capacity accounting, per-tenant quotas, and LRU
+//!   eviction of cold unpinned residents.
+//! * [`BatchExecutor`] admits a queue of requests, groups compatible work
+//!   into shared device passes, and schedules the resulting (load, exec)
+//!   phases with [`OverlapScheduler`](crate::coordinator::OverlapScheduler)
+//!   — E18's overlap model driving real serving (measured as E20).
+//!
+//! [`CpmServer`](crate::coordinator::CpmServer) routes every request —
+//! single or batched — through this pool.
+
+pub mod allocator;
+pub mod batch;
+
+pub use allocator::{
+    DevicePool, PoolConfig, PoolStats, ResidentDevice, ResidentInfo, ScratchArray,
+};
+pub use batch::{AddressedRef, BatchExecutor, BatchReport};

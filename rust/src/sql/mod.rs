@@ -11,6 +11,8 @@
 //! match lines. The serial comparators (full scan, and the B-tree-style
 //! [`crate::baseline::SortedIndex`]) are the E4/E17 baselines.
 
+use std::collections::BTreeMap;
+
 use crate::device::comparable::{
     CmpCode, Combine, ContentComparableMemory, FieldSpec,
 };
@@ -245,6 +247,65 @@ pub enum QueryResult {
     Count(usize),
 }
 
+/// Device-pass accounting for one batched query group (E20).
+///
+/// Counts predicate compare passes: a query that repeats an
+/// already-answered query shares *all* of its compare passes with the
+/// first occurrence. Queries that error contribute to neither counter.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SqlBatchStats {
+    /// Predicate occurrences across all answered queries in the batch.
+    pub total_predicates: u64,
+    /// Compare passes actually run on the device.
+    pub distinct_predicates: u64,
+}
+
+impl SqlBatchStats {
+    /// Compare passes avoided by sharing (the batch-amortization gain).
+    pub fn shared_passes(&self) -> u64 {
+        self.total_predicates - self.distinct_predicates
+    }
+}
+
+/// Memo key for a whole query: predicates in order plus the combination
+/// and result shape (two queries with the same key are interchangeable
+/// against an immutable table).
+fn query_key(q: &Query) -> String {
+    let mut s = String::new();
+    for p in &q.predicates {
+        s.push_str(&format!("{}\x01{}\x01{}\x02", p.column, p.op as u8, p.value));
+    }
+    s.push(if q.conjunctive { '&' } else { '|' });
+    s.push(if q.count_only { '#' } else { '*' });
+    s
+}
+
+/// Fold one predicate's verdict bitset into the running combination.
+fn fold_bits(acc: Option<Vec<bool>>, bits: &[bool], conjunctive: bool) -> Vec<bool> {
+    match acc {
+        None => bits.to_vec(),
+        Some(prev) => prev
+            .iter()
+            .zip(bits.iter())
+            .map(|(&a, &b)| if conjunctive { a && b } else { a || b })
+            .collect(),
+    }
+}
+
+/// Turn a combined verdict bitset into the requested result shape.
+fn materialize(bits: &[bool], count_only: bool) -> QueryResult {
+    let rows: Vec<usize> = bits
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &b)| if b { Some(i) } else { None })
+        .collect();
+    if count_only {
+        QueryResult::Count(rows.len())
+    } else {
+        QueryResult::Rows(rows)
+    }
+}
+
 /// A table resident in a content comparable memory.
 #[derive(Debug)]
 pub struct Table {
@@ -352,41 +413,71 @@ impl Table {
         // per-predicate match-line readouts host-side.
         let mut acc: Option<Vec<bool>> = None;
         for p in &q.predicates {
-            let field = self.schema.field(&p.column)?;
-            let col = self
-                .schema
-                .columns
-                .iter()
-                .find(|c| c.name == p.column)
-                .ok_or_else(|| CpmError::Sql(format!("unknown column {}", p.column)))?;
-            let value = self.schema_value_bytes(col, p.value)?;
-            self.mem
-                .compare_field(0, item, n, field, p.op.cmp_code(), &value);
-            let hits = self.mem.selected_items(0, item, n, field);
-            let mut bits = vec![false; n];
-            for h in hits {
-                bits[h] = true;
-            }
-            acc = Some(match acc {
-                None => bits,
-                Some(prev) => prev
-                    .iter()
-                    .zip(bits.iter())
-                    .map(|(&a, &b)| if q.conjunctive { a && b } else { a || b })
-                    .collect(),
-            });
+            let bits = self.predicate_bits(p)?;
+            acc = Some(fold_bits(acc, &bits, q.conjunctive));
         }
-        let bits = acc.unwrap();
-        let rows: Vec<usize> = bits
+        Ok(materialize(&acc.unwrap(), q.count_only))
+    }
+
+    /// Run one predicate's concurrent field compare and read the match
+    /// lines back as a per-row verdict bitset.
+    fn predicate_bits(&mut self, p: &Predicate) -> Result<Vec<bool>> {
+        let item = self.schema.row_size();
+        let n = self.n_rows;
+        let field = self.schema.field(&p.column)?;
+        let col = self
+            .schema
+            .columns
             .iter()
-            .enumerate()
-            .filter_map(|(i, &b)| if b { Some(i) } else { None })
-            .collect();
-        if q.count_only {
-            Ok(QueryResult::Count(rows.len()))
-        } else {
-            Ok(QueryResult::Rows(rows))
+            .find(|c| c.name == p.column)
+            .ok_or_else(|| CpmError::Sql(format!("unknown column {}", p.column)))?;
+        let value = self.schema_value_bytes(col, p.value)?;
+        self.mem
+            .compare_field(0, item, n, field, p.op.cmp_code(), &value);
+        let hits = self.mem.selected_items(0, item, n, field);
+        let mut bits = vec![false; n];
+        for h in hits {
+            bits[h] = true;
         }
+        Ok(bits)
+    }
+
+    /// Execute a batch of queries with *shared field-compare passes*:
+    /// the table is immutable within a batch, so a query whose
+    /// predicate list repeats an earlier query's is answered from a memo
+    /// at **zero device cost** — the hot-query-template case
+    /// (MASIM/SIMDRAM-style per-batch control amortization). Memo
+    /// misses run [`Table::query`]'s device combine path unchanged, so
+    /// a batch of distinct queries costs exactly what serial serving
+    /// costs and `COUNT` queries keep their ~1-cycle parallel-counter
+    /// readout. Results are identical to running [`Table::query`] per
+    /// query. (Sharing is per whole query, not per predicate: sharing a
+    /// single predicate across different queries would force its
+    /// match-line readout host-side at one exclusive op per matching
+    /// row, which costs more than the compare ladder it saves — see
+    /// DESIGN.md "Pool batching & eviction".)
+    pub fn query_batch(
+        &mut self,
+        queries: &[Query],
+    ) -> (Vec<Result<QueryResult>>, SqlBatchStats) {
+        let mut stats = SqlBatchStats::default();
+        let mut memo: BTreeMap<String, QueryResult> = BTreeMap::new();
+        let out: Vec<Result<QueryResult>> = queries
+            .iter()
+            .map(|q| {
+                let key = query_key(q);
+                if let Some(r) = memo.get(&key) {
+                    stats.total_predicates += q.predicates.len() as u64;
+                    return Ok(r.clone());
+                }
+                let r = self.query(q)?;
+                stats.total_predicates += q.predicates.len() as u64;
+                stats.distinct_predicates += q.predicates.len() as u64;
+                memo.insert(key, r.clone());
+                Ok(r)
+            })
+            .collect();
+        (out, stats)
     }
 
     fn schema_value_bytes(&self, col: &Column, v: u64) -> Result<Vec<u8>> {
@@ -578,6 +669,57 @@ mod tests {
         }
         let q = Query::parse("SELECT ROWS WHERE v >= 100 AND v < 900").unwrap();
         assert_eq!(t.query(&q).unwrap(), t.query_reference(&q));
+    }
+
+    #[test]
+    fn batched_queries_match_serial_and_share_passes() {
+        let mut t = orders_table(400, 14);
+        let texts = [
+            "SELECT COUNT WHERE price < 5000",
+            "SELECT ROWS WHERE price < 5000 AND qty >= 50",
+            "SELECT COUNT WHERE price < 5000", // duplicate template
+            "SELECT ROWS WHERE qty >= 50 OR region = 2",
+            "SELECT COUNT WHERE price < 5000 AND region = 2",
+        ];
+        let queries: Vec<Query> = texts.iter().map(|s| Query::parse(s).unwrap()).collect();
+        let serial: Vec<QueryResult> = queries.iter().map(|q| t.query_reference(q)).collect();
+        t.reset_device_cost();
+        let (batched, stats) = t.query_batch(&queries);
+        for (b, s) in batched.iter().zip(&serial) {
+            assert_eq!(b.as_ref().unwrap(), s);
+        }
+        // 8 predicate occurrences; the duplicate COUNT template shares
+        // its 1 compare pass, the 4 distinct queries run 7.
+        assert_eq!(stats.total_predicates, 8);
+        assert_eq!(stats.distinct_predicates, 7);
+        assert_eq!(stats.shared_passes(), 1);
+        // Batched macro cost beats running every query on the device.
+        let batched_cycles = t.device_cost().macro_cycles;
+        t.reset_device_cost();
+        for q in &queries {
+            t.query(q).unwrap();
+        }
+        let serial_cycles = t.device_cost().macro_cycles;
+        assert!(
+            batched_cycles < serial_cycles,
+            "batched {batched_cycles} vs serial {serial_cycles}"
+        );
+    }
+
+    #[test]
+    fn batched_errors_stay_per_query() {
+        let mut t = orders_table(50, 15);
+        let good = Query::parse("SELECT COUNT WHERE price < 100").unwrap();
+        let bad = Query::parse("SELECT COUNT WHERE nosuch = 1").unwrap();
+        let empty = Query {
+            predicates: Vec::new(),
+            conjunctive: true,
+            count_only: true,
+        };
+        let (results, _) = t.query_batch(&[good.clone(), bad, empty]);
+        assert_eq!(results[0].as_ref().unwrap(), &t.query_reference(&good));
+        assert!(results[1].is_err());
+        assert!(results[2].is_err());
     }
 
     #[test]

@@ -1,0 +1,294 @@
+//! Property tests for the multi-tenant device pool and the batched serve
+//! path.
+//!
+//! * Allocator invariants: pool capacity is never exceeded, tenant usage
+//!   never exceeds its quota, eviction only ever removes *unpinned*
+//!   residents and always the coldest (smallest LRU stamp) first.
+//! * Serving equivalence: a shuffled mixed workload produces identical
+//!   responses whether served one request at a time or as one batch, and
+//!   the overlapped makespan never exceeds the back-to-back makespan.
+
+use cpm::coordinator::{
+    Addressed, ArrayJob, CpmServer, Request, DEFAULT_ARRAY, DEFAULT_CORPUS, DEFAULT_TABLE,
+    DEFAULT_TENANT,
+};
+use cpm::pool::{DevicePool, PoolConfig};
+use cpm::prop_assert;
+use cpm::sql::Schema;
+use cpm::util::propcheck::{forall_sized, Config};
+use cpm::util::rng::Rng;
+
+/// One scripted allocator operation: `(op selector, size knob, tenant)`.
+type AllocOp = (u8, usize, usize);
+
+const TENANTS: [&str; 4] = ["a", "b", "c", "d"];
+
+#[test]
+fn pool_allocator_invariants() {
+    let capacity = 1 << 14;
+    let quota = 3 << 12;
+    forall_sized(
+        Config {
+            iters: 96,
+            base_seed: 0xBA7C4,
+        },
+        |rng, size| {
+            let n_ops = 4 + 2 * size;
+            (0..n_ops)
+                .map(|_| {
+                    (
+                        rng.below(6) as u8,
+                        rng.below(1 << 12) as usize,
+                        rng.range(0, TENANTS.len()),
+                    )
+                })
+                .collect::<Vec<AllocOp>>()
+        },
+        |ops| {
+            let mut pool = DevicePool::new(PoolConfig {
+                capacity_pes: capacity,
+                tenant_quota_pes: quota,
+                corpus_slack: 64,
+            });
+            let schema = Schema::new(&[("x", 2)]).unwrap();
+            for (k, &(op, sz, t)) in ops.iter().enumerate() {
+                let tenant = TENANTS[t];
+                let name = format!("d{k}");
+                match op {
+                    // Admissions (may evict): check the eviction audit.
+                    0..=2 => {
+                        let survivors_floor: Vec<(String, String)> = pool
+                            .residents()
+                            .iter()
+                            .filter(|r| r.pinned)
+                            .map(|r| (r.tenant.clone(), r.name.clone()))
+                            .collect();
+                        let admitted = match op {
+                            0 => pool.create_corpus(tenant, &name, &vec![7u8; sz % 2048]),
+                            1 => pool.create_table(tenant, &name, schema.clone(), sz % 1024),
+                            _ => pool.create_array(tenant, &name, &[1, 2, 3], sz % 4096),
+                        };
+                        if let Ok(evicted) = admitted {
+                            for ev in &evicted {
+                                prop_assert!(
+                                    !ev.pinned,
+                                    "evicted pinned device {}/{}",
+                                    ev.tenant,
+                                    ev.name
+                                );
+                                // LRU: every surviving unpinned resident
+                                // (other than the one just admitted) must
+                                // be at least as warm as every victim.
+                                for r in pool.residents() {
+                                    if !r.pinned && !(r.tenant == tenant && r.name == name) {
+                                        prop_assert!(
+                                            r.last_use >= ev.last_use,
+                                            "evicted {} (t={}) but kept colder {} (t={})",
+                                            ev.name,
+                                            ev.last_use,
+                                            r.name,
+                                            r.last_use
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                        // Pinned devices survive any admission outcome.
+                        for (pt, pn) in &survivors_floor {
+                            prop_assert!(
+                                pool.contains(pt, pn),
+                                "pinned {pt}/{pn} disappeared"
+                            );
+                        }
+                    }
+                    // Pin/unpin a random resident.
+                    3 => {
+                        let residents = pool.residents();
+                        if !residents.is_empty() {
+                            let r = &residents[sz % residents.len()];
+                            pool.pin(&r.tenant, &r.name, sz % 2 == 0).unwrap();
+                        }
+                    }
+                    // Remove a random resident.
+                    4 => {
+                        let residents = pool.residents();
+                        if !residents.is_empty() {
+                            let r = &residents[sz % residents.len()];
+                            pool.remove(&r.tenant, &r.name).unwrap();
+                        }
+                    }
+                    // Touch a random resident (bumps LRU recency).
+                    _ => {
+                        let residents = pool.residents();
+                        if !residents.is_empty() {
+                            let r = &residents[sz % residents.len()];
+                            match r.kind {
+                                "table" => {
+                                    pool.table_mut(&r.tenant, &r.name).unwrap();
+                                }
+                                "corpus" => {
+                                    pool.corpus_mut(&r.tenant, &r.name).unwrap();
+                                }
+                                _ => {
+                                    pool.array_mut(&r.tenant, &r.name).unwrap();
+                                }
+                            }
+                        }
+                    }
+                }
+                prop_assert!(
+                    pool.used_pes() <= capacity,
+                    "capacity exceeded after op {k}: {} > {capacity}",
+                    pool.used_pes()
+                );
+                for tn in TENANTS {
+                    prop_assert!(
+                        pool.tenant_pes(tn) <= pool.quota(tn),
+                        "tenant {tn} over quota after op {k}: {} > {}",
+                        pool.tenant_pes(tn),
+                        pool.quota(tn)
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn pool_server() -> CpmServer {
+    let mut pool = DevicePool::new(PoolConfig {
+        capacity_pes: 1 << 16,
+        tenant_quota_pes: 1 << 16,
+        corpus_slack: 256,
+    });
+    let schema = Schema::new(&[("price", 2), ("qty", 1)]).unwrap();
+    pool.create_table(DEFAULT_TENANT, DEFAULT_TABLE, schema, 256)
+        .unwrap();
+    pool.create_corpus(
+        DEFAULT_TENANT,
+        DEFAULT_CORPUS,
+        b"the quick brown fox jumps over the lazy dog",
+    )
+    .unwrap();
+    let mut rng = Rng::new(0x5EED);
+    pool.create_array(DEFAULT_TENANT, DEFAULT_ARRAY, &rng.vec_i32(512, -1000, 1000), 512)
+        .unwrap();
+    let mut s = CpmServer::with_pool(pool, 1 << 14);
+    let rows: Vec<Vec<u64>> = (0..200)
+        .map(|_| vec![rng.below(10_000), rng.below(100)])
+        .collect();
+    s.load_rows(&rows).unwrap();
+    s
+}
+
+#[test]
+fn batched_equals_serial_on_shuffled_mixed_workload() {
+    forall_sized(
+        Config {
+            iters: 48,
+            base_seed: 0xE9_0B47,
+        },
+        |rng, size| {
+            let n = 8 + 2 * size;
+            let mut batch = Vec::with_capacity(n);
+            for _ in 0..n {
+                let op = match rng.below(8) {
+                    0 | 1 => Request::Sql(format!(
+                        "SELECT COUNT WHERE price < {}",
+                        1000 * rng.below(8)
+                    )),
+                    2 => Request::Sql(format!(
+                        "SELECT ROWS WHERE price >= {} AND qty < {}",
+                        1000 * rng.below(8),
+                        10 * rng.below(9) + 1
+                    )),
+                    3 => Request::Search(match rng.below(4) {
+                        0 => b"the".to_vec(),
+                        1 => b"fox".to_vec(),
+                        2 => b"o".to_vec(),
+                        _ => b"lazy".to_vec(),
+                    }),
+                    4 => Request::Insert(0, b"ab".to_vec()),
+                    5 => Request::Delete(0, 1),
+                    6 => Request::Sum(rng.vec_i32(64, -50, 50)),
+                    _ => Request::Array(ArrayJob::Threshold(rng.i32_range(-500, 500))),
+                };
+                batch.push(Addressed::local(op));
+            }
+            rng.shuffle(&mut batch);
+            batch
+        },
+        |batch| {
+            let mut serial = pool_server();
+            let mut batched = pool_server();
+            let serial_responses: Vec<_> =
+                batch.iter().map(|a| serial.handle_addressed(a)).collect();
+            let batched_responses = batched.handle_batch(batch);
+            for (i, (s, b)) in serial_responses.iter().zip(&batched_responses).enumerate() {
+                match (s, b) {
+                    (Ok(x), Ok(y)) => {
+                        prop_assert!(x == y, "response {i} diverged: {x:?} vs {y:?}")
+                    }
+                    (Err(_), Err(_)) => {}
+                    other => {
+                        return Err(format!("response {i} ok/err divergence: {other:?}"));
+                    }
+                }
+            }
+            prop_assert!(
+                batched.metrics.makespan_overlapped_cycles
+                    <= batched.metrics.makespan_serial_cycles,
+                "overlap made the makespan worse"
+            );
+            prop_assert!(
+                batched.metrics.makespan_serial_cycles
+                    <= serial.metrics.makespan_serial_cycles,
+                "grouping increased total device work: {} > {}",
+                batched.metrics.makespan_serial_cycles,
+                serial.metrics.makespan_serial_cycles
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn corpus_capacity_errors_do_not_corrupt_state() {
+    // Filling a small-slack corpus past capacity yields typed errors in
+    // both serving modes and leaves both servers in the same state.
+    let build = || {
+        let mut pool = DevicePool::new(PoolConfig {
+            capacity_pes: 1 << 12,
+            tenant_quota_pes: 1 << 12,
+            corpus_slack: 8,
+        });
+        pool.create_corpus(DEFAULT_TENANT, DEFAULT_CORPUS, b"0123456789")
+            .unwrap();
+        CpmServer::with_pool(pool, 64)
+    };
+    let batch: Vec<Addressed> = (0..6)
+        .map(|_| Addressed::local(Request::Insert(0, b"abc".to_vec())))
+        .collect();
+    let mut serial = build();
+    let serial_responses: Vec<_> = batch.iter().map(|a| serial.handle_addressed(a)).collect();
+    let mut batched = build();
+    let batched_responses = batched.handle_batch(&batch);
+    // 10 bytes + 8 slack: two 3-byte inserts fit, the rest overflow.
+    assert_eq!(
+        serial_responses.iter().filter(|r| r.is_ok()).count(),
+        2
+    );
+    for (s, b) in serial_responses.iter().zip(&batched_responses) {
+        match (s, b) {
+            (Ok(x), Ok(y)) => assert_eq!(x, y),
+            (Err(x), Err(y)) => assert_eq!(x.to_string(), y.to_string()),
+            other => panic!("divergence: {other:?}"),
+        }
+    }
+    assert_eq!(
+        serial.pool().corpus(DEFAULT_TENANT, DEFAULT_CORPUS).unwrap().content(),
+        batched.pool().corpus(DEFAULT_TENANT, DEFAULT_CORPUS).unwrap().content()
+    );
+    assert_eq!(serial.metrics.errors, 4);
+    assert_eq!(batched.metrics.errors, 4);
+}
