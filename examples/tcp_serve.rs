@@ -1,0 +1,102 @@
+//! End-to-end TCP serving round trip, in one process:
+//!
+//! 1. build a `CpmServer` (small SQL table + text corpus),
+//! 2. put the std-only TCP front-end in front of it on an ephemeral
+//!    loopback port,
+//! 3. drive it with four concurrent clients, each pipelining a burst so
+//!    the admission window coalesces requests into shared device passes,
+//! 4. shut down gracefully and print the wire metrics.
+//!
+//! The example is self-checking and exits cleanly on its own (CI runs
+//! it): responses are asserted against known answers and the wire
+//! counters against the exact request totals.
+//!
+//! Run: `cargo run --release --example tcp_serve`
+
+use std::thread;
+use std::time::Duration;
+
+use cpm::coordinator::{CpmServer, Request, Response};
+use cpm::net::{CpmClient, NetConfig, NetServer, WindowConfig};
+use cpm::sql::{QueryResult, Schema};
+
+const CLIENTS: usize = 4;
+const OPS_PER_CLIENT: usize = 3;
+
+fn main() -> cpm::Result<()> {
+    // A small serving target: 64-row price/qty table + the classic
+    // pangram corpus, all under the default tenant.
+    let schema = Schema::new(&[("price", 2), ("qty", 1)])?;
+    let corpus = b"the quick brown fox jumps over the lazy dog";
+    let mut server = CpmServer::new(schema, 64, corpus, 1 << 12);
+    let rows: Vec<Vec<u64>> = (0..50).map(|i| vec![(i * 181) % 10_000, i % 100]).collect();
+    server.load_rows(&rows)?;
+    let below_5000 = rows.iter().filter(|r| r[0] < 5000).count();
+
+    // A generous window so every client's burst lands in few batches —
+    // the coalescing is what exercises the shared-pass machinery.
+    let net = NetServer::spawn(
+        server,
+        NetConfig {
+            addr: "127.0.0.1:0".into(),
+            window: WindowConfig {
+                max_delay: Duration::from_millis(50),
+                max_batch: 64,
+                ..WindowConfig::default()
+            },
+            ..NetConfig::default()
+        },
+    )?;
+    let addr = net.addr();
+    println!("serving on {addr}");
+
+    let mut handles = Vec::new();
+    for t in 0..CLIENTS {
+        handles.push(thread::spawn(move || -> cpm::Result<()> {
+            let mut client = CpmClient::connect(addr)?;
+            let ops = vec![
+                Request::Sql("SELECT COUNT WHERE price < 5000".into()),
+                Request::Search(b"the".to_vec()),
+                Request::Sum(vec![t as i32, 1, 2, 3]),
+            ];
+            let responses = client.pipeline(&ops)?;
+            assert_eq!(
+                responses[0].as_ref().unwrap(),
+                &Response::Sql(QueryResult::Count(below_5000))
+            );
+            assert_eq!(
+                responses[1].as_ref().unwrap(),
+                &Response::Matches(vec![2, 33])
+            );
+            assert_eq!(
+                responses[2].as_ref().unwrap(),
+                &Response::Scalar(t as i64 + 6)
+            );
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread panicked")?;
+    }
+
+    let server = net.shutdown();
+    let w = &server.metrics.wire;
+    println!(
+        "wire: {} connections, {} requests in {} windows ({} coalesced, max occupancy {}, mean {:.2})",
+        w.connections,
+        w.window_requests,
+        w.windows,
+        w.coalesced_windows,
+        w.max_window,
+        w.mean_occupancy()
+    );
+    println!(
+        "serving: {} requests, {} shared passes saved",
+        server.metrics.requests, server.metrics.shared_passes_saved
+    );
+    assert_eq!(w.connections as usize, CLIENTS);
+    assert_eq!(w.window_requests as usize, CLIENTS * OPS_PER_CLIENT);
+    assert_eq!(server.metrics.requests as usize, CLIENTS * OPS_PER_CLIENT);
+    println!("tcp_serve: OK");
+    Ok(())
+}

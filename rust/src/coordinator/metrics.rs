@@ -56,6 +56,33 @@ impl LatencyStats {
     }
 }
 
+/// Wire-level counters from the TCP front-end (`net/`): connection and
+/// admission-window accounting on top of the in-process serving metrics.
+#[derive(Debug, Default, Clone)]
+pub struct WireMetrics {
+    /// TCP connections accepted.
+    pub connections: u64,
+    /// Admission windows dispatched to the batch executor.
+    pub windows: u64,
+    /// Windows that coalesced more than one request into a single
+    /// `handle_batch` call.
+    pub coalesced_windows: u64,
+    /// Largest window occupancy observed (requests in one window).
+    pub max_window: u64,
+    /// Requests admitted through the window (across all windows).
+    pub window_requests: u64,
+}
+
+impl WireMetrics {
+    /// Mean window occupancy (requests per dispatched window).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.windows == 0 {
+            return 0.0;
+        }
+        self.window_requests as f64 / self.windows as f64
+    }
+}
+
 /// Per-tenant service counters (quota attribution and billing view).
 #[derive(Debug, Default, Clone)]
 pub struct TenantMetrics {
@@ -98,6 +125,8 @@ pub struct Metrics {
     pub per_tenant: BTreeMap<String, TenantMetrics>,
     /// Request latency.
     pub latency: LatencyStats,
+    /// Wire-level counters (populated by the TCP front-end in `net/`).
+    pub wire: WireMetrics,
 }
 
 impl Metrics {
@@ -159,6 +188,17 @@ mod tests {
         l.record(Duration::from_micros(5));
         assert_eq!(l.percentile_us(0.0), 5);
         assert_eq!(l.percentile_us(100.0), 50);
+    }
+
+    #[test]
+    fn wire_occupancy_is_requests_per_window() {
+        let mut w = WireMetrics::default();
+        assert_eq!(w.mean_occupancy(), 0.0);
+        w.windows = 4;
+        w.window_requests = 10;
+        w.coalesced_windows = 2;
+        w.max_window = 5;
+        assert!((w.mean_occupancy() - 2.5).abs() < 1e-9);
     }
 
     #[test]

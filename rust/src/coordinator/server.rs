@@ -29,7 +29,7 @@ pub const DEFAULT_CORPUS: &str = "corpus";
 pub const DEFAULT_ARRAY: &str = "array";
 
 /// A client request.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Request {
     /// SQL query against a resident table.
     Sql(String),
@@ -61,7 +61,7 @@ pub enum Request {
 /// A job against a resident computable-memory scratch array. Jobs are
 /// read-only queries: `Sort` returns the sorted copy without disturbing
 /// the resident content.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ArrayJob {
     /// Sum of the resident array.
     Sum,
@@ -94,7 +94,7 @@ pub enum Response {
 /// envelope. [`Addressed::local`] (or `Request::into`) selects the
 /// default tenant and per-kind default device names, which is exactly the
 /// single-resident server the pre-pool API exposed.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Addressed {
     /// Owning tenant (quota and metrics attribution).
     pub tenant: String,

@@ -73,6 +73,10 @@ pub enum CpmError {
         quota: usize,
     },
 
+    /// Wire-protocol failures in the TCP front-end (malformed frames,
+    /// codec mismatches, closed peers).
+    Wire(String),
+
     /// I/O while loading artifacts or workloads.
     Io(std::io::Error),
 }
@@ -119,6 +123,7 @@ impl fmt::Display for CpmError {
                 f,
                 "tenant {tenant} quota exceeded: need {needed} PEs, quota is {quota}"
             ),
+            CpmError::Wire(msg) => write!(f, "wire error: {msg}"),
             CpmError::Io(e) => write!(f, "{e}"),
         }
     }
@@ -183,6 +188,10 @@ mod tests {
             }
             .to_string(),
             "tenant acme quota exceeded: need 32 PEs, quota is 16"
+        );
+        assert_eq!(
+            CpmError::Wire("truncated payload".into()).to_string(),
+            "wire error: truncated payload"
         );
     }
 

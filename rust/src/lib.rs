@@ -19,6 +19,7 @@ pub mod cycles;
 pub mod device;
 pub mod error;
 pub mod logic;
+pub mod net;
 pub mod physics;
 pub mod pool;
 pub mod runtime;

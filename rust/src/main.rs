@@ -6,16 +6,25 @@
 //! * `search --pattern STR`     — substring search demo
 //! * `pool --requests N`        — multi-tenant batched serving demo:
 //!   device pool, shared passes, overlap makespans, per-tenant metrics
+//! * `serve --addr A`           — TCP front-end over a demo server
+//!   (batching admission window feeding `handle_batch`)
+//! * `client --addr A --sql Q`  — blocking TCP client (`--search`,
+//!   `--sum`, `--repeat N` for pipelined bursts, `--tenant`, `--device`)
+//! * `netbench --max-batch B`   — loopback throughput: N client threads
+//!   pipelining against the TCP front-end, reported as requests/sec
 //! * `physics`                  — §8 feasibility numbers (Eq 8-1)
 //! * `runtime-check`            — execute a trace on the active backend
 //!   (the pure-Rust interpreter by default; PJRT with `--features pjrt`)
 //!   and cross-check it against the word engine
+
+use std::time::{Duration, Instant};
 
 use cpm::cli::Cli;
 use cpm::coordinator::{Addressed, ArrayJob, CpmServer, Request};
 use cpm::device::computable::isa::N_REGS;
 use cpm::device::computable::{Instr, Opcode, Reg, Src};
 use cpm::device::control::ControlUnit;
+use cpm::net::{CpmClient, NetConfig, NetServer, WindowConfig};
 use cpm::physics;
 use cpm::pool::{DevicePool, PoolConfig};
 use cpm::runtime::Backend;
@@ -29,13 +38,16 @@ fn main() {
         Some("sql") => sql(&cli),
         Some("search") => search(&cli),
         Some("pool") => pool_cmd(&cli),
+        Some("serve") => serve_cmd(&cli),
+        Some("client") => client_cmd(&cli),
+        Some("netbench") => netbench_cmd(&cli),
         Some("physics") => physics_cmd(&cli),
         Some("runtime-check") => runtime_check(&cli),
         _ => {
             eprintln!(
-                "usage: cpm <info|sql|search|pool|physics|runtime-check> [--flags]\n\
+                "usage: cpm <info|sql|search|pool|serve|client|netbench|physics|runtime-check> [--flags]\n\
                  benches: cargo bench (see benches/paper.rs)\n\
-                 examples: cargo run --release --example <quickstart|sql_engine|image_pipeline|text_search|multi_tenant>"
+                 examples: cargo run --release --example <quickstart|sql_engine|image_pipeline|text_search|multi_tenant|tcp_serve>"
             );
             Ok(())
         }
@@ -191,6 +203,209 @@ fn pool_cmd(cli: &Cli) -> cpm::Result<()> {
             t.requests, t.errors, t.macro_cycles, t.exclusive_ops
         );
     }
+    Ok(())
+}
+
+/// The demo server every network subcommand serves: the `sql` demo table
+/// (`default/table`, price/qty/region) plus a small text corpus
+/// (`default/corpus`).
+fn demo_server(rows: usize, seed: u64) -> cpm::Result<CpmServer> {
+    let schema = Schema::new(&[("price", 2), ("qty", 1), ("region", 1)])?;
+    let corpus = b"the quick brown fox jumps over the lazy dog; pack my box with five dozen jugs";
+    let mut server = CpmServer::new(schema, rows, corpus, 1 << 20);
+    let mut rng = Rng::new(seed);
+    let table_rows: Vec<Vec<u64>> = (0..rows)
+        .map(|_| vec![rng.below(10_000), rng.below(100), rng.below(8)])
+        .collect();
+    server.load_rows(&table_rows)?;
+    Ok(server)
+}
+
+fn net_config(cli: &Cli, addr: &str) -> NetConfig {
+    NetConfig {
+        addr: addr.to_string(),
+        window: WindowConfig {
+            max_delay: Duration::from_micros(cli.get("window-us", 2000u64)),
+            max_batch: cli.get("max-batch", 32usize),
+            ..WindowConfig::default()
+        },
+        ..NetConfig::default()
+    }
+}
+
+fn print_wire_metrics(server: &CpmServer) {
+    let w = &server.metrics.wire;
+    println!(
+        "wire: {} connections, {} requests in {} windows ({} coalesced, max occupancy {}, mean {:.2})",
+        w.connections,
+        w.window_requests,
+        w.windows,
+        w.coalesced_windows,
+        w.max_window,
+        w.mean_occupancy()
+    );
+    println!(
+        "serving: {} requests, {} errors, {} shared passes saved, makespan {} -> {} device cycles",
+        server.metrics.requests,
+        server.metrics.errors,
+        server.metrics.shared_passes_saved,
+        server.metrics.makespan_serial_cycles,
+        server.metrics.makespan_overlapped_cycles
+    );
+}
+
+fn serve_cmd(cli: &Cli) -> cpm::Result<()> {
+    let addr = cli.get_str("addr").unwrap_or("127.0.0.1:7070");
+    let rows = cli.get("rows", 4096usize);
+    let secs = cli.get("secs", 0u64);
+    let server = demo_server(rows, cli.get("seed", 42u64))?;
+    let cfg = net_config(cli, addr);
+    let window_us = cfg.window.max_delay.as_micros();
+    let max_batch = cfg.window.max_batch;
+    let net = NetServer::spawn(server, cfg)?;
+    println!(
+        "cpm serving on {} (window {} us, max batch {}); demo devices: default/table ({} rows), default/corpus",
+        net.addr(),
+        window_us,
+        max_batch,
+        rows
+    );
+    if secs == 0 {
+        println!("running until killed (pass --secs N to auto-stop and print metrics)");
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(secs));
+    let server = net.shutdown();
+    print_wire_metrics(&server);
+    Ok(())
+}
+
+fn client_cmd(cli: &Cli) -> cpm::Result<()> {
+    let addr = cli.get_str("addr").unwrap_or("127.0.0.1:7070");
+    let op = if let Some(q) = cli.get_str("sql") {
+        Request::Sql(q.to_string())
+    } else if let Some(p) = cli.get_str("search") {
+        Request::Search(p.as_bytes().to_vec())
+    } else if let Some(csv) = cli.get_str("sum") {
+        let values: Vec<i32> = csv
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| cpm::CpmError::Coordinator(format!("bad --sum value {s:?}")))
+            })
+            .collect::<cpm::Result<Vec<i32>>>()?;
+        Request::Sum(values)
+    } else {
+        return Err(cpm::CpmError::Coordinator(
+            "pass one of --sql QUERY | --search PATTERN | --sum a,b,c".into(),
+        ));
+    };
+    let mut client = CpmClient::connect(addr)?;
+    if let Some(tenant) = cli.get_str("tenant") {
+        client.hello(tenant)?;
+    }
+    let device = cli.get_str("device");
+    let repeat = cli.get("repeat", 1usize).max(1);
+    if repeat == 1 {
+        let response = client.call_addressed(None, device, &op)?;
+        println!("{response:?}");
+        return Ok(());
+    }
+    // Pipelined burst: keep a bounded number of requests outstanding so
+    // the admission window coalesces them without either side's socket
+    // buffer filling up (same policy as CpmClient::pipeline).
+    let started = Instant::now();
+    let mut sent = 0usize;
+    let mut received = 0usize;
+    let mut ok = 0usize;
+    let mut last = None;
+    while received < repeat {
+        while sent < repeat && sent - received < cpm::net::MAX_IN_FLIGHT {
+            client.send(None, device, &op)?;
+            sent += 1;
+        }
+        let (_, result) = client.recv()?;
+        received += 1;
+        match result {
+            Ok(r) => {
+                ok += 1;
+                last = Some(r);
+            }
+            Err(e) => println!("error: {e}"),
+        }
+    }
+    let elapsed = started.elapsed();
+    if let Some(r) = last {
+        println!("{r:?}");
+    }
+    println!(
+        "{ok}/{repeat} ok in {:.1} ms ({:.0} req/s pipelined)",
+        elapsed.as_secs_f64() * 1e3,
+        repeat as f64 / elapsed.as_secs_f64().max(1e-9)
+    );
+    Ok(())
+}
+
+fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
+    let requests = cli.get("requests", 1024usize);
+    let clients = cli.get("clients", 8usize).max(1);
+    let rows = cli.get("rows", 4096usize);
+    let server = demo_server(rows, cli.get("seed", 42u64))?;
+    let cfg = net_config(cli, "127.0.0.1:0");
+    let window_us = cfg.window.max_delay.as_micros();
+    let max_batch = cfg.window.max_batch;
+    let net = NetServer::spawn(server, cfg)?;
+    let addr = net.addr();
+    let per_client = requests.div_ceil(clients);
+
+    let started = Instant::now();
+    let mut handles = Vec::with_capacity(clients);
+    for c in 0..clients {
+        handles.push(std::thread::spawn(move || -> cpm::Result<usize> {
+            let mut client = CpmClient::connect(addr)?;
+            // Read-only mix (hot SQL templates + repeated searches) so
+            // concurrent interleavings cannot change any response.
+            let ops: Vec<Request> = (0..per_client)
+                .map(|i| match (c + i) % 3 {
+                    0 => {
+                        let cap = 1000 * (1 + i % 8);
+                        Request::Sql(format!("SELECT COUNT WHERE price < {cap}"))
+                    }
+                    1 => Request::Search(b"the".to_vec()),
+                    _ => Request::Sql("SELECT COUNT WHERE qty > 50 OR region = 0".into()),
+                })
+                .collect();
+            let responses = client.pipeline(&ops)?;
+            Ok(responses.iter().filter(|r| r.is_ok()).count())
+        }));
+    }
+    let mut ok = 0usize;
+    for h in handles {
+        ok += h.join().expect("netbench client thread panicked")?;
+    }
+    let elapsed = started.elapsed();
+    let server = net.shutdown();
+    let total = per_client * clients;
+    let rps = total as f64 / elapsed.as_secs_f64().max(1e-9);
+    println!(
+        "netbench: {total} requests ({ok} ok) from {clients} clients in {:.1} ms",
+        elapsed.as_secs_f64() * 1e3
+    );
+    print_wire_metrics(&server);
+    println!("markdown row (max_batch | window_us | requests | req/s | mean window | coalesced):");
+    println!(
+        "| {} | {} | {} | {:.0} | {:.2} | {} |",
+        max_batch,
+        window_us,
+        total,
+        rps,
+        server.metrics.wire.mean_occupancy(),
+        server.metrics.wire.coalesced_windows
+    );
     Ok(())
 }
 

@@ -1,0 +1,128 @@
+//! Blocking client for the TCP front-end.
+//!
+//! [`CpmClient`] speaks the [`wire`](crate::net::wire) protocol over one
+//! connection. The simple surface is [`CpmClient::call`] /
+//! [`CpmClient::call_addressed`] (send one request, wait for its reply);
+//! the throughput surface is [`CpmClient::pipeline`] (send a burst
+//! without waiting, then collect every reply) — pipelined bursts are what
+//! let the server's admission window coalesce one connection's requests
+//! into a shared device pass. Replies are matched by the echoed request
+//! id, so out-of-order delivery would be detected, not mis-assigned.
+
+use std::collections::BTreeMap;
+use std::net::{TcpStream, ToSocketAddrs};
+
+use crate::coordinator::{Request, Response};
+use crate::error::{CpmError, Result};
+
+use super::wire;
+
+/// Cap on outstanding (sent, unanswered) requests during a
+/// [`CpmClient::pipeline`] burst. Small enough that the in-flight
+/// replies always fit the client's socket receive buffer, large enough
+/// that the server's admission window still sees deep bursts to coalesce.
+pub const MAX_IN_FLIGHT: usize = 256;
+
+/// A blocking connection to a [`NetServer`](crate::net::NetServer).
+#[derive(Debug)]
+pub struct CpmClient {
+    stream: TcpStream,
+    next_id: u64,
+}
+
+impl CpmClient {
+    /// Connect to a serving front-end.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(CpmClient { stream, next_id: 0 })
+    }
+
+    /// Pin this connection's tenant: subsequent requests sent without an
+    /// explicit tenant are attributed to `tenant` (fire-and-forget; the
+    /// server does not acknowledge).
+    pub fn hello(&mut self, tenant: &str) -> Result<()> {
+        wire::write_frame(&mut self.stream, &wire::encode_hello(tenant))?;
+        Ok(())
+    }
+
+    /// Send one request against the pinned tenant's default devices and
+    /// wait for the reply.
+    pub fn call(&mut self, op: Request) -> Result<Response> {
+        self.call_addressed(None, None, &op)
+    }
+
+    /// Send one request with explicit tenant/device overrides and wait
+    /// for the reply.
+    pub fn call_addressed(
+        &mut self,
+        tenant: Option<&str>,
+        device: Option<&str>,
+        op: &Request,
+    ) -> Result<Response> {
+        let id = self.send(tenant, device, op)?;
+        let (rid, result) = self.recv()?;
+        if rid != id {
+            return Err(CpmError::Wire(format!(
+                "reply id {rid} does not match request id {id}"
+            )));
+        }
+        result
+    }
+
+    /// Send one request without waiting (the pipelining primitive).
+    /// Returns the request id to match against [`CpmClient::recv`].
+    pub fn send(
+        &mut self,
+        tenant: Option<&str>,
+        device: Option<&str>,
+        op: &Request,
+    ) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let payload = wire::encode_request(id, tenant, device, op);
+        wire::write_frame(&mut self.stream, &payload)?;
+        Ok(id)
+    }
+
+    /// Receive the next reply: `(request id, outcome)`. Blocks until a
+    /// frame arrives; a closed connection is a typed
+    /// [`CpmError::Wire`].
+    pub fn recv(&mut self) -> Result<(u64, Result<Response>)> {
+        match wire::read_frame(&mut self.stream)? {
+            Some(payload) => wire::decode_reply(&payload),
+            None => Err(CpmError::Wire("server closed the connection".into())),
+        }
+    }
+
+    /// Send a burst of requests against the pinned tenant's default
+    /// devices without waiting between them, then collect every reply.
+    /// The returned vector aligns with `ops`; per-request failures come
+    /// back as the inner `Err` (a transport failure is the outer one).
+    ///
+    /// Bursts of any size are safe: at most [`MAX_IN_FLIGHT`] requests
+    /// are outstanding at a time — past that, the client drains a reply
+    /// per send, so neither side's socket buffer can fill up and stall
+    /// the server's dispatcher against a non-reading peer.
+    pub fn pipeline(&mut self, ops: &[Request]) -> Result<Vec<Result<Response>>> {
+        let mut ids: Vec<u64> = Vec::with_capacity(ops.len());
+        let mut got: BTreeMap<u64, Result<Response>> = BTreeMap::new();
+        for op in ops {
+            if ids.len() - got.len() >= MAX_IN_FLIGHT {
+                let (id, result) = self.recv()?;
+                got.insert(id, result);
+            }
+            ids.push(self.send(None, None, op)?);
+        }
+        while got.len() < ids.len() {
+            let (id, result) = self.recv()?;
+            got.insert(id, result);
+        }
+        ids.iter()
+            .map(|id| {
+                got.remove(id)
+                    .ok_or_else(|| CpmError::Wire(format!("no reply for request id {id}")))
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,35 @@
+//! Std-only TCP serving front-end for [`CpmServer`] — the network edge
+//! of the "networked SQL engine" the paper pitches in §2.
+//!
+//! Zero dependencies, std threads and blocking sockets only:
+//!
+//! * [`wire`] — the length-prefixed frame codec: `Addressed` request
+//!   envelopes in, `Result<Response, CpmError>` replies out, with every
+//!   typed error surviving the hop.
+//! * [`window`] — the batching **admission window**: requests arriving
+//!   within a configurable delay (or up to a size cap) coalesce into one
+//!   [`CpmServer::handle_batch`] call, so the pool's shared SQL compare
+//!   passes, search dedup, and §3.1 load/exec overlap apply across real
+//!   concurrent clients, not just in-process batches.
+//! * [`server`] — accept loop, per-connection reader threads with tenant
+//!   pinning, the single dispatcher that owns the `CpmServer`, and
+//!   graceful draining shutdown.
+//! * [`client`] — a blocking client with one-shot calls and pipelined
+//!   bursts.
+//!
+//! Wire-level counters (connections, windows, occupancy) land in
+//! [`Metrics::wire`](crate::coordinator::Metrics).
+//!
+//! [`CpmServer`]: crate::coordinator::CpmServer
+//! [`CpmServer::handle_batch`]: crate::coordinator::CpmServer::handle_batch
+#![warn(missing_docs)]
+
+pub mod client;
+pub mod server;
+pub mod window;
+pub mod wire;
+
+pub use client::{CpmClient, MAX_IN_FLIGHT};
+pub use server::{NetConfig, NetServer};
+pub use window::{AdmissionQueue, WindowConfig};
+pub use wire::ClientMsg;

@@ -1,0 +1,453 @@
+//! The std-only TCP front-end: accept loop, connection threads, and the
+//! batching dispatcher.
+//!
+//! Topology: one *accept* thread turns incoming connections into
+//! per-connection *reader* threads; readers decode frames
+//! ([`wire`](crate::net::wire)) and push admitted requests into the
+//! shared [`AdmissionQueue`]; one *dispatcher* thread owns the
+//! [`CpmServer`] outright (no lock on the serve path), drains the queue
+//! window by window, executes each window as a single
+//! [`CpmServer::handle_batch`] call, and writes each reply frame back to
+//! the originating connection. Responses carry the client-assigned
+//! request id, so clients may pipeline freely.
+//!
+//! Per-connection state is exactly one value: the *pinned tenant* (set by
+//! a `Hello` frame, defaulting to
+//! [`DEFAULT_TENANT`](crate::coordinator::DEFAULT_TENANT)). Requests that
+//! carry no explicit tenant are attributed to it.
+//!
+//! Shutdown is graceful and drains: [`NetServer::shutdown`] closes the
+//! admission queue (already-admitted requests are still answered), wakes
+//! and joins every thread, folds the wire counters into
+//! [`Metrics::wire`](crate::coordinator::Metrics), and hands the
+//! `CpmServer` back to the caller.
+
+use std::io::{self, Read, Write};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Addressed, CpmServer, Response, DEFAULT_TENANT};
+use crate::error::{CpmError, Result};
+
+use super::window::{AdmissionQueue, WindowConfig};
+use super::wire::{self, ClientMsg};
+
+/// TCP front-end configuration.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Bind address; port 0 picks an ephemeral port (read it back with
+    /// [`NetServer::addr`]).
+    pub addr: String,
+    /// Admission-window policy.
+    pub window: WindowConfig,
+    /// Socket read timeout used by reader threads to poll the shutdown
+    /// flag; bounds how long shutdown can take, not request latency.
+    pub read_poll: Duration,
+    /// Hard wall-clock bound on writing one reply frame. A peer that
+    /// cannot absorb a reply within this bound — stopped reading, or
+    /// draining a byte at a time — fails the write and is disconnected,
+    /// so it can stall the dispatcher for at most this long instead of
+    /// indefinitely.
+    pub write_timeout: Duration,
+    /// Cap on concurrently served connections (one reader thread each).
+    /// Connections past the cap are accepted and immediately closed, so
+    /// thread count and per-reader buffers stay bounded under a
+    /// connection flood.
+    pub max_connections: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            addr: "127.0.0.1:0".to_string(),
+            window: WindowConfig::default(),
+            read_poll: Duration::from_millis(25),
+            write_timeout: Duration::from_secs(5),
+            max_connections: 1024,
+        }
+    }
+}
+
+/// One admitted request waiting in the window: the reply route (id +
+/// shared write half; only the single dispatcher thread ever writes, so
+/// no lock is needed — `Write` is implemented for `&TcpStream`) and the
+/// addressed operation.
+#[derive(Debug)]
+struct Pending {
+    id: u64,
+    reply: Arc<TcpStream>,
+    req: Addressed,
+}
+
+/// A running TCP front-end. Dropping the handle without calling
+/// [`NetServer::shutdown`] leaves the serving threads running until
+/// process exit — always shut down to stop the listener and recover the
+/// [`CpmServer`] (with its metrics).
+#[derive(Debug)]
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    queue: Arc<AdmissionQueue<Pending>>,
+    connections: Arc<AtomicU64>,
+    readers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    accept: Option<JoinHandle<()>>,
+    dispatch: Option<JoinHandle<CpmServer>>,
+}
+
+impl NetServer {
+    /// Bind `cfg.addr` and start serving `server` over TCP. The server
+    /// moves into the dispatcher thread; get it back (with wire metrics
+    /// folded in) from [`NetServer::shutdown`].
+    pub fn spawn(server: CpmServer, cfg: NetConfig) -> Result<NetServer> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let queue = Arc::new(AdmissionQueue::new(cfg.window));
+        let connections = Arc::new(AtomicU64::new(0));
+        let readers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let dispatch = {
+            let queue = Arc::clone(&queue);
+            let write_timeout = cfg.write_timeout;
+            std::thread::Builder::new()
+                .name("cpm-net-dispatch".to_string())
+                .spawn(move || dispatch_loop(server, &queue, write_timeout))?
+        };
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let queue = Arc::clone(&queue);
+            let connections = Arc::clone(&connections);
+            let readers = Arc::clone(&readers);
+            let limits = AcceptLimits {
+                read_poll: cfg.read_poll,
+                max_connections: cfg.max_connections,
+            };
+            let spawned = std::thread::Builder::new()
+                .name("cpm-net-accept".to_string())
+                .spawn(move || {
+                    accept_loop(&listener, &stop, &queue, &connections, &readers, limits)
+                });
+            match spawned {
+                Ok(h) => h,
+                Err(e) => {
+                    // The dispatcher already owns the CpmServer; unwind it
+                    // rather than leaking the thread and the server.
+                    queue.close();
+                    let _ = dispatch.join();
+                    return Err(e.into());
+                }
+            }
+        };
+        Ok(NetServer {
+            addr,
+            stop,
+            queue,
+            connections,
+            readers,
+            accept: Some(accept),
+            dispatch: Some(dispatch),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, drain already-admitted requests, join every
+    /// thread, and return the `CpmServer` with
+    /// [`Metrics::wire`](crate::coordinator::Metrics) filled in.
+    pub fn shutdown(mut self) -> CpmServer {
+        self.stop.store(true, Ordering::Relaxed);
+        self.queue.close();
+        // Wake the accept loop with a throwaway connection; it checks the
+        // stop flag right after `accept` returns. A wildcard bind address
+        // is not connectable everywhere, so aim at loopback instead.
+        let mut wake = self.addr;
+        match wake.ip() {
+            IpAddr::V4(ip) if ip.is_unspecified() => {
+                wake.set_ip(IpAddr::V4(Ipv4Addr::LOCALHOST));
+            }
+            IpAddr::V6(ip) if ip.is_unspecified() => {
+                wake.set_ip(IpAddr::V6(Ipv6Addr::LOCALHOST));
+            }
+            _ => {}
+        }
+        let _ = TcpStream::connect(wake);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let readers: Vec<JoinHandle<()>> = {
+            let mut guard = self.readers.lock().expect("reader registry poisoned");
+            guard.drain(..).collect()
+        };
+        for h in readers {
+            let _ = h.join();
+        }
+        let mut server = self
+            .dispatch
+            .take()
+            .expect("shutdown runs once")
+            .join()
+            .expect("dispatcher thread panicked");
+        server.metrics.wire.connections = self.connections.load(Ordering::Relaxed);
+        server
+    }
+}
+
+/// The dispatcher: drains admission windows, executes each as one batch,
+/// and routes reply frames back per connection.
+fn dispatch_loop(
+    mut server: CpmServer,
+    queue: &AdmissionQueue<Pending>,
+    write_timeout: Duration,
+) -> CpmServer {
+    while let Some(pending) = queue.next_window() {
+        let n = pending.len() as u64;
+        {
+            let w = &mut server.metrics.wire;
+            w.windows += 1;
+            w.window_requests += n;
+            if n > 1 {
+                w.coalesced_windows += 1;
+            }
+            if n > w.max_window {
+                w.max_window = n;
+            }
+        }
+        let mut routes = Vec::with_capacity(pending.len());
+        let mut batch = Vec::with_capacity(pending.len());
+        for p in pending {
+            routes.push((p.id, p.reply));
+            batch.push(p.req);
+        }
+        let results = server.handle_batch(&batch);
+        for ((id, reply), result) in routes.into_iter().zip(results) {
+            let frame = match wire::frame_bytes(&wire::encode_reply(id, &result)) {
+                Ok(f) => f,
+                // An over-cap reply (e.g. millions of match positions) is
+                // a per-request failure, not a dead connection: nothing
+                // was written, the stream is still in sync, so answer
+                // with a typed error instead.
+                Err(_) => {
+                    let err: Result<Response> = Err(CpmError::Wire(format!(
+                        "reply exceeds the {} byte frame cap; narrow the request",
+                        wire::MAX_FRAME
+                    )));
+                    match wire::frame_bytes(&wire::encode_reply(id, &err)) {
+                        Ok(f) => f,
+                        Err(_) => continue,
+                    }
+                }
+            };
+            // A dead or too-slow peer is not a server error: the write
+            // carries a hard wall-clock deadline, and on failure the peer
+            // is disconnected so later replies to it fail fast instead of
+            // re-paying the timeout.
+            if write_deadline(&reply, &frame, write_timeout).is_err() {
+                let _ = reply.shutdown(Shutdown::Both);
+            }
+        }
+    }
+    server
+}
+
+/// Write `bytes` to the peer under a hard wall-clock deadline. Unlike a
+/// bare socket write timeout — which restarts whenever any bytes move —
+/// this bounds the *total* time, so a peer draining one byte per second
+/// cannot hold the dispatcher beyond `timeout`.
+fn write_deadline(stream: &TcpStream, bytes: &[u8], timeout: Duration) -> io::Result<()> {
+    let deadline = Instant::now() + timeout;
+    let mut writer = stream;
+    let mut off = 0;
+    while off < bytes.len() {
+        let now = Instant::now();
+        if now >= deadline {
+            return Err(io::Error::new(
+                io::ErrorKind::TimedOut,
+                "reply write deadline exceeded",
+            ));
+        }
+        stream.set_write_timeout(Some(deadline - now))?;
+        match writer.write(&bytes[off..]) {
+            Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+            Ok(n) => off += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock
+                        | io::ErrorKind::TimedOut
+                        | io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    writer.flush()
+}
+
+/// Accept-loop knobs carried into the accept thread.
+#[derive(Debug, Clone, Copy)]
+struct AcceptLimits {
+    read_poll: Duration,
+    max_connections: usize,
+}
+
+/// The accept loop: one reader thread per connection, capped at
+/// `max_connections` live readers.
+fn accept_loop(
+    listener: &TcpListener,
+    stop: &Arc<AtomicBool>,
+    queue: &Arc<AdmissionQueue<Pending>>,
+    connections: &AtomicU64,
+    readers: &Mutex<Vec<JoinHandle<()>>>,
+    limits: AcceptLimits,
+) {
+    let active = Arc::new(AtomicU64::new(0));
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                // Transient accept failure (e.g. fd pressure): back off
+                // briefly instead of spinning.
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        // Connection cap: bound thread count and per-reader buffers
+        // under a connection flood. Dropping the stream closes it.
+        if active.load(Ordering::Relaxed) >= limits.max_connections as u64 {
+            continue;
+        }
+        connections.fetch_add(1, Ordering::Relaxed);
+        active.fetch_add(1, Ordering::Relaxed);
+        let spawned = {
+            let stop = Arc::clone(stop);
+            let queue = Arc::clone(queue);
+            let active = Arc::clone(&active);
+            let read_poll = limits.read_poll;
+            std::thread::Builder::new()
+                .name("cpm-net-conn".to_string())
+                .spawn(move || {
+                    reader_loop(stream, &stop, &queue, read_poll);
+                    active.fetch_sub(1, Ordering::Relaxed);
+                })
+        };
+        match spawned {
+            Ok(h) => {
+                if let Ok(mut guard) = readers.lock() {
+                    // Reap finished readers as connections churn, so a
+                    // long-running server does not accumulate handles.
+                    guard.retain(|h| !h.is_finished());
+                    guard.push(h);
+                }
+            }
+            Err(_) => {
+                active.fetch_sub(1, Ordering::Relaxed);
+                continue;
+            }
+        }
+    }
+}
+
+/// One connection's reader: decode frames, resolve the pinned tenant,
+/// admit requests. Exits on EOF, protocol violation, or shutdown.
+fn reader_loop(
+    stream: TcpStream,
+    stop: &AtomicBool,
+    queue: &AdmissionQueue<Pending>,
+    read_poll: Duration,
+) {
+    // The read timeout is how this thread polls the stop flag; write
+    // deadlines are set per reply by the dispatcher.
+    if stream.set_read_timeout(Some(read_poll)).is_err() {
+        return;
+    }
+    let _ = stream.set_nodelay(true);
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(w),
+        Err(_) => return,
+    };
+    let mut reader = InterruptibleStream { stream, stop };
+    let mut pinned = DEFAULT_TENANT.to_string();
+    loop {
+        // One frame decoder for client and server: `wire::read_frame`
+        // over a stop-aware reader. Shutdown mid-frame surfaces as an
+        // UnexpectedEof error; between frames as a clean `None`.
+        let payload = match wire::read_frame(&mut reader) {
+            Ok(Some(p)) => p,
+            // EOF, shutdown, or an I/O error: close the connection.
+            Ok(None) | Err(_) => break,
+        };
+        match wire::decode_client_msg(&payload) {
+            Ok(ClientMsg::Hello { tenant }) => pinned = tenant,
+            Ok(ClientMsg::Request {
+                id,
+                tenant,
+                device,
+                op,
+            }) => {
+                let req = Addressed {
+                    tenant: tenant.unwrap_or_else(|| pinned.clone()),
+                    device,
+                    op,
+                };
+                let admitted = queue.push(Pending {
+                    id,
+                    reply: Arc::clone(&writer),
+                    req,
+                });
+                if !admitted {
+                    break;
+                }
+            }
+            // Protocol violation: drop the connection rather than guess
+            // at framing.
+            Err(_) => break,
+        }
+    }
+}
+
+/// A [`Read`] view of the connection socket that treats read timeouts as
+/// a cue to re-check the shutdown flag, and reports shutdown as
+/// end-of-stream. Framing stays solely in [`wire::read_frame`]; this
+/// wrapper only adds interruptibility.
+struct InterruptibleStream<'a> {
+    stream: TcpStream,
+    stop: &'a AtomicBool,
+}
+
+impl Read for InterruptibleStream<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        loop {
+            if self.stop.load(Ordering::Relaxed) {
+                return Ok(0);
+            }
+            match self.stream.read(buf) {
+                Ok(n) => return Ok(n),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock
+                            | io::ErrorKind::TimedOut
+                            | io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    continue;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}

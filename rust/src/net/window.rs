@@ -1,0 +1,289 @@
+//! The batching admission window: coalesce concurrently arriving
+//! requests into one batch.
+//!
+//! The TCP front-end's connection threads push admitted requests into an
+//! [`AdmissionQueue`]; a single dispatcher thread pulls *windows* out of
+//! it. A window opens when the first request arrives and closes when
+//! either [`WindowConfig::max_delay`] elapses or
+//! [`WindowConfig::max_batch`] requests are waiting — whichever comes
+//! first — so an idle server adds at most `max_delay` of latency while a
+//! busy one dispatches full batches back to back. Everything drained from
+//! one window becomes a single
+//! [`CpmServer::handle_batch`](crate::coordinator::CpmServer::handle_batch)
+//! call, which is where the pool's shared SQL compare passes, search
+//! dedup, and §3.1 load/exec overlap pay off across independent clients.
+//!
+//! The queue is deliberately generic over its item type so the batching
+//! policy is testable without sockets.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Admission-window policy.
+#[derive(Debug, Clone, Copy)]
+pub struct WindowConfig {
+    /// How long a window stays open after its first request arrives.
+    pub max_delay: Duration,
+    /// Cap on requests per window: a full window dispatches immediately.
+    pub max_batch: usize,
+    /// Cap on requests waiting in the queue. Producers *block* when the
+    /// queue is full — the reader stops reading its socket, so TCP flow
+    /// control pushes back on the client instead of the server buffering
+    /// without bound.
+    pub max_queue: usize,
+}
+
+impl Default for WindowConfig {
+    fn default() -> Self {
+        WindowConfig {
+            max_delay: Duration::from_millis(2),
+            max_batch: 32,
+            max_queue: 1024,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct State<T> {
+    /// Waiting items, each stamped with its arrival time so the window
+    /// deadline is measured from when the *request* arrived, not from
+    /// when the dispatcher got around to looking.
+    queue: VecDeque<(Instant, T)>,
+    closed: bool,
+}
+
+/// A blocking multi-producer, single-consumer queue whose consumer drains
+/// it in admission windows (see the module docs for the policy).
+#[derive(Debug)]
+pub struct AdmissionQueue<T> {
+    cfg: WindowConfig,
+    state: Mutex<State<T>>,
+    arrived: Condvar,
+    drained: Condvar,
+}
+
+impl<T> AdmissionQueue<T> {
+    /// Empty queue with the given window policy.
+    pub fn new(cfg: WindowConfig) -> Self {
+        AdmissionQueue {
+            cfg,
+            state: Mutex::new(State {
+                queue: VecDeque::new(),
+                closed: false,
+            }),
+            arrived: Condvar::new(),
+            drained: Condvar::new(),
+        }
+    }
+
+    /// The window policy.
+    pub fn config(&self) -> WindowConfig {
+        self.cfg
+    }
+
+    /// Admit one item. Blocks while the queue is at `max_queue`
+    /// (backpressure: the producer stops consuming its input). Returns
+    /// `false` (dropping the item) if the queue has been closed.
+    pub fn push(&self, item: T) -> bool {
+        let max_queue = self.cfg.max_queue.max(1);
+        let mut st = self.state.lock().expect("admission queue poisoned");
+        while !st.closed && st.queue.len() >= max_queue {
+            st = self.drained.wait(st).expect("admission queue poisoned");
+        }
+        if st.closed {
+            return false;
+        }
+        st.queue.push_back((Instant::now(), item));
+        self.arrived.notify_all();
+        true
+    }
+
+    /// Close the queue: producers are refused from now on, and the
+    /// consumer drains whatever is already admitted before seeing `None`.
+    pub fn close(&self) {
+        let mut st = self.state.lock().expect("admission queue poisoned");
+        st.closed = true;
+        self.arrived.notify_all();
+        self.drained.notify_all();
+    }
+
+    /// Items currently waiting (diagnostics only — racy by nature).
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("admission queue poisoned").queue.len()
+    }
+
+    /// True if nothing is waiting (diagnostics only — racy by nature).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Block until a window closes, then drain it. The window opens when
+    /// its first item *arrives* and closes `max_delay` later or at
+    /// `max_batch` items, whichever comes first — so if the oldest
+    /// waiting item already waited out the delay (e.g. while the
+    /// previous batch executed), the window closes immediately and no
+    /// request ever waits more than `max_delay` beyond execution time.
+    /// Returns `None` once the queue is closed *and* fully drained.
+    pub fn next_window(&self) -> Option<Vec<T>> {
+        let max_batch = self.cfg.max_batch.max(1);
+        let mut st = self.state.lock().expect("admission queue poisoned");
+        // Wait for the window-opening item.
+        while st.queue.is_empty() {
+            if st.closed {
+                return None;
+            }
+            st = self.arrived.wait(st).expect("admission queue poisoned");
+        }
+        // Keep the window open until the deadline (measured from the
+        // oldest item's arrival) or a full batch.
+        let opened = st.queue.front().expect("non-empty above").0;
+        let deadline = opened + self.cfg.max_delay;
+        while st.queue.len() < max_batch && !st.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, timeout) = self
+                .arrived
+                .wait_timeout(st, deadline - now)
+                .expect("admission queue poisoned");
+            st = guard;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let n = st.queue.len().min(max_batch);
+        let window = st.queue.drain(..n).map(|(_, item)| item).collect();
+        // Space freed: wake producers blocked on the max_queue bound.
+        self.drained.notify_all();
+        Some(window)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    fn queue(max_delay_ms: u64, max_batch: usize) -> AdmissionQueue<u32> {
+        AdmissionQueue::new(WindowConfig {
+            max_delay: Duration::from_millis(max_delay_ms),
+            max_batch,
+            ..WindowConfig::default()
+        })
+    }
+
+    #[test]
+    fn coalesces_waiting_items_into_one_window() {
+        let q = queue(100, 32);
+        for i in 0..5 {
+            assert!(q.push(i));
+        }
+        assert_eq!(q.len(), 5);
+        let w = q.next_window().unwrap();
+        assert_eq!(w, vec![0, 1, 2, 3, 4]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn full_windows_dispatch_immediately_and_split() {
+        // max_delay is far beyond the test timeout: if the window did not
+        // close at max_batch, this test would hang.
+        let q = queue(600_000, 2);
+        for i in 0..5 {
+            q.push(i);
+        }
+        assert_eq!(q.next_window().unwrap(), vec![0, 1]);
+        assert_eq!(q.next_window().unwrap(), vec![2, 3]);
+        q.close();
+        assert_eq!(q.next_window().unwrap(), vec![4]);
+        assert!(q.next_window().is_none());
+    }
+
+    #[test]
+    fn window_waits_for_late_arrivals() {
+        // 500 ms window: >10x margin over the 30 ms producer sleeps
+        // without costing the suite multiple seconds of dead time.
+        let q = Arc::new(queue(500, 8));
+        let producer = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || {
+                q.push(1);
+                thread::sleep(Duration::from_millis(30));
+                q.push(2);
+                thread::sleep(Duration::from_millis(30));
+                q.push(3);
+            })
+        };
+        // The window opens at item 1 and stays open long enough to absorb
+        // the two stragglers (window rides to max_delay, but max_batch was
+        // not hit, so all three coalesce).
+        let w = q.next_window().unwrap();
+        producer.join().unwrap();
+        assert_eq!(w, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn close_refuses_producers_and_drains_consumers() {
+        let q = queue(50, 8);
+        q.push(7);
+        q.close();
+        assert!(!q.push(8));
+        assert_eq!(q.next_window().unwrap(), vec![7]);
+        assert!(q.next_window().is_none());
+        assert!(q.next_window().is_none());
+    }
+
+    #[test]
+    fn full_queue_applies_backpressure_then_admits_after_drain() {
+        let q = Arc::new(AdmissionQueue::new(WindowConfig {
+            max_delay: Duration::from_millis(10),
+            max_batch: 2,
+            max_queue: 2,
+        }));
+        assert!(q.push(1));
+        assert!(q.push(2));
+        let producer = {
+            let q = Arc::clone(&q);
+            // Blocks on the bound until the consumer drains a window.
+            thread::spawn(move || q.push(3))
+        };
+        thread::sleep(Duration::from_millis(30));
+        assert_eq!(q.len(), 2, "third push must wait on the full queue");
+        assert_eq!(q.next_window().unwrap(), vec![1, 2]);
+        assert!(producer.join().unwrap());
+        assert_eq!(q.next_window().unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn blocked_producer_wakes_on_close() {
+        let q = Arc::new(AdmissionQueue::new(WindowConfig {
+            max_delay: Duration::from_millis(10),
+            max_batch: 2,
+            max_queue: 1,
+        }));
+        assert!(q.push(1));
+        let producer = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || q.push(2))
+        };
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        // The blocked producer is refused, not deadlocked.
+        assert!(!producer.join().unwrap());
+    }
+
+    #[test]
+    fn blocked_consumer_wakes_on_close() {
+        let q = Arc::new(queue(50, 8));
+        let consumer = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || q.next_window())
+        };
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(consumer.join().unwrap().is_none());
+    }
+}

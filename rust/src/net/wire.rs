@@ -1,0 +1,770 @@
+//! Length-prefixed wire codec for the TCP serving front-end.
+//!
+//! Every message on the socket is one *frame*: a little-endian `u32`
+//! payload length followed by the payload. Payloads are hand-rolled
+//! tagged binary (no serde in the offline crate set): fixed-width
+//! little-endian integers, `u32`-length-prefixed byte strings, and one
+//! leading tag byte per variant. The codec is total over the request
+//! surface — every [`Request`], [`Response`], and [`CpmError`] variant
+//! round-trips — so typed errors (capacity, quota, SQL, pool) survive the
+//! network hop instead of collapsing into strings.
+//!
+//! Client → server messages are [`ClientMsg`]: a `Hello` that pins the
+//! connection's default tenant, or a `Request` envelope carrying a
+//! connection-local id, optional tenant/device overrides, and the
+//! operation. Server → client replies echo the id and carry
+//! `Result<Response, CpmError>`.
+
+use std::io::{self, Read, Write};
+
+use crate::coordinator::{ArrayJob, Request, Response};
+use crate::error::{CpmError, Result};
+use crate::sql::QueryResult;
+
+/// Largest accepted frame payload (64 MiB) — a decode-side guard so a
+/// corrupt or hostile length prefix cannot trigger an unbounded
+/// allocation.
+pub const MAX_FRAME: u32 = 1 << 26;
+
+/// Build one frame (length prefix + payload), validating the size cap —
+/// the single place the frame layout is encoded.
+pub fn frame_bytes(payload: &[u8]) -> io::Result<Vec<u8>> {
+    if payload.len() > MAX_FRAME as usize {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "frame exceeds MAX_FRAME",
+        ));
+    }
+    let mut frame = Vec::with_capacity(4 + payload.len());
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(payload);
+    Ok(frame)
+}
+
+/// Write one frame (length prefix + payload) and flush it.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
+    w.write_all(&frame_bytes(payload)?)?;
+    w.flush()
+}
+
+/// Read one frame. Returns `Ok(None)` on a clean end-of-stream (the peer
+/// closed between frames); mid-frame EOF and oversized lengths are
+/// errors. Blocks until a full frame arrives.
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0;
+    while got < len_buf.len() {
+        let n = r.read(&mut len_buf[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            return Err(io::ErrorKind::UnexpectedEof.into());
+        }
+        got += n;
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "frame exceeds MAX_FRAME",
+        ));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+/// A decoded client → server message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientMsg {
+    /// Pin the connection's default tenant: later requests that carry no
+    /// explicit tenant are attributed to it.
+    Hello {
+        /// Tenant to pin.
+        tenant: String,
+    },
+    /// One operation, tagged with a connection-local id that the reply
+    /// echoes (pipelining-safe).
+    Request {
+        /// Client-assigned request id.
+        id: u64,
+        /// Explicit tenant, or `None` for the connection's pinned tenant.
+        tenant: Option<String>,
+        /// Explicit device, or `None` for the op kind's default.
+        device: Option<String>,
+        /// The operation.
+        op: Request,
+    },
+}
+
+const MSG_HELLO: u8 = 0;
+const MSG_REQUEST: u8 = 1;
+
+/// Encode a `Hello` payload pinning `tenant`.
+pub fn encode_hello(tenant: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(5 + tenant.len());
+    out.push(MSG_HELLO);
+    put_str(&mut out, tenant);
+    out
+}
+
+/// Encode a `Request` payload.
+pub fn encode_request(
+    id: u64,
+    tenant: Option<&str>,
+    device: Option<&str>,
+    op: &Request,
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    out.push(MSG_REQUEST);
+    put_u64(&mut out, id);
+    put_opt_str(&mut out, tenant);
+    put_opt_str(&mut out, device);
+    put_op(&mut out, op);
+    out
+}
+
+/// Decode a client → server payload.
+pub fn decode_client_msg(payload: &[u8]) -> Result<ClientMsg> {
+    let mut d = Dec::new(payload);
+    let msg = match d.take_u8()? {
+        MSG_HELLO => ClientMsg::Hello {
+            tenant: d.take_str()?,
+        },
+        MSG_REQUEST => ClientMsg::Request {
+            id: d.take_u64()?,
+            tenant: d.take_opt_str()?,
+            device: d.take_opt_str()?,
+            op: take_op(&mut d)?,
+        },
+        t => return Err(wire_err(format!("unknown client message tag {t}"))),
+    };
+    d.done()?;
+    Ok(msg)
+}
+
+/// Encode a reply payload: the echoed request id plus the outcome.
+pub fn encode_reply(id: u64, result: &Result<Response>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    put_u64(&mut out, id);
+    match result {
+        Ok(resp) => {
+            out.push(0);
+            put_response(&mut out, resp);
+        }
+        Err(e) => {
+            out.push(1);
+            put_error(&mut out, e);
+        }
+    }
+    out
+}
+
+/// Decode a reply payload into `(request id, outcome)`.
+pub fn decode_reply(payload: &[u8]) -> Result<(u64, Result<Response>)> {
+    let mut d = Dec::new(payload);
+    let id = d.take_u64()?;
+    let result = match d.take_u8()? {
+        0 => Ok(take_response(&mut d)?),
+        1 => Err(take_error(&mut d)?),
+        t => return Err(wire_err(format!("unknown reply tag {t}"))),
+    };
+    d.done()?;
+    Ok((id, result))
+}
+
+fn wire_err(msg: String) -> CpmError {
+    CpmError::Wire(msg)
+}
+
+// ---- primitive encoders ----
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_i64(out: &mut Vec<u8>, v: i64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_i32(out: &mut Vec<u8>, v: i32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    put_u32(out, b.len() as u32);
+    out.extend_from_slice(b);
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_bytes(out, s.as_bytes());
+}
+
+fn put_opt_str(out: &mut Vec<u8>, s: Option<&str>) {
+    match s {
+        None => out.push(0),
+        Some(s) => {
+            out.push(1);
+            put_str(out, s);
+        }
+    }
+}
+
+fn put_i32s(out: &mut Vec<u8>, v: &[i32]) {
+    put_u32(out, v.len() as u32);
+    for &x in v {
+        put_i32(out, x);
+    }
+}
+
+fn put_usizes(out: &mut Vec<u8>, v: &[usize]) {
+    put_u32(out, v.len() as u32);
+    for &x in v {
+        put_u64(out, x as u64);
+    }
+}
+
+// ---- primitive decoder ----
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    fn need(&self, n: usize) -> Result<()> {
+        if self.pos + n > self.buf.len() {
+            return Err(wire_err(format!(
+                "truncated payload: need {n} bytes at offset {} of {}",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.need(n)?;
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn take_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn take_u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn take_u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn take_i64(&mut self) -> Result<i64> {
+        Ok(self.take_u64()? as i64)
+    }
+
+    fn take_i32(&mut self) -> Result<i32> {
+        Ok(self.take_u32()? as i32)
+    }
+
+    fn take_usize(&mut self) -> Result<usize> {
+        Ok(self.take_u64()? as usize)
+    }
+
+    fn take_bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.take_u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn take_str(&mut self) -> Result<String> {
+        let b = self.take_bytes()?;
+        String::from_utf8(b).map_err(|_| wire_err("non-UTF-8 string".into()))
+    }
+
+    fn take_opt_str(&mut self) -> Result<Option<String>> {
+        match self.take_u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.take_str()?)),
+            t => Err(wire_err(format!("bad option tag {t}"))),
+        }
+    }
+
+    fn take_i32s(&mut self) -> Result<Vec<i32>> {
+        let n = self.take_u32()? as usize;
+        self.need(n.saturating_mul(4))?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.take_i32()?);
+        }
+        Ok(v)
+    }
+
+    fn take_usizes(&mut self) -> Result<Vec<usize>> {
+        let n = self.take_u32()? as usize;
+        self.need(n.saturating_mul(8))?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.take_usize()?);
+        }
+        Ok(v)
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(wire_err(format!(
+                "{} trailing bytes after payload",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---- operations ----
+
+const OP_SQL: u8 = 0;
+const OP_SEARCH: u8 = 1;
+const OP_INSERT: u8 = 2;
+const OP_DELETE: u8 = 3;
+const OP_REPLACE: u8 = 4;
+const OP_SUM: u8 = 5;
+const OP_MAX: u8 = 6;
+const OP_SORT: u8 = 7;
+const OP_THRESHOLD: u8 = 8;
+const OP_HISTOGRAM: u8 = 9;
+const OP_ARRAY: u8 = 10;
+
+fn put_op(out: &mut Vec<u8>, op: &Request) {
+    match op {
+        Request::Sql(q) => {
+            out.push(OP_SQL);
+            put_str(out, q);
+        }
+        Request::Search(p) => {
+            out.push(OP_SEARCH);
+            put_bytes(out, p);
+        }
+        Request::Insert(at, data) => {
+            out.push(OP_INSERT);
+            put_u64(out, *at as u64);
+            put_bytes(out, data);
+        }
+        Request::Delete(at, len) => {
+            out.push(OP_DELETE);
+            put_u64(out, *at as u64);
+            put_u64(out, *len as u64);
+        }
+        Request::Replace(pat, rep) => {
+            out.push(OP_REPLACE);
+            put_bytes(out, pat);
+            put_bytes(out, rep);
+        }
+        Request::Sum(v) => {
+            out.push(OP_SUM);
+            put_i32s(out, v);
+        }
+        Request::Max(v) => {
+            out.push(OP_MAX);
+            put_i32s(out, v);
+        }
+        Request::Sort(v) => {
+            out.push(OP_SORT);
+            put_i32s(out, v);
+        }
+        Request::Threshold(v, t) => {
+            out.push(OP_THRESHOLD);
+            put_i32s(out, v);
+            put_i32(out, *t);
+        }
+        Request::Histogram(v, bounds) => {
+            out.push(OP_HISTOGRAM);
+            put_i32s(out, v);
+            put_i32s(out, bounds);
+        }
+        Request::Array(job) => {
+            out.push(OP_ARRAY);
+            put_array_job(out, job);
+        }
+    }
+}
+
+fn take_op(d: &mut Dec<'_>) -> Result<Request> {
+    Ok(match d.take_u8()? {
+        OP_SQL => Request::Sql(d.take_str()?),
+        OP_SEARCH => Request::Search(d.take_bytes()?),
+        OP_INSERT => Request::Insert(d.take_usize()?, d.take_bytes()?),
+        OP_DELETE => Request::Delete(d.take_usize()?, d.take_usize()?),
+        OP_REPLACE => Request::Replace(d.take_bytes()?, d.take_bytes()?),
+        OP_SUM => Request::Sum(d.take_i32s()?),
+        OP_MAX => Request::Max(d.take_i32s()?),
+        OP_SORT => Request::Sort(d.take_i32s()?),
+        OP_THRESHOLD => Request::Threshold(d.take_i32s()?, d.take_i32()?),
+        OP_HISTOGRAM => Request::Histogram(d.take_i32s()?, d.take_i32s()?),
+        OP_ARRAY => Request::Array(take_array_job(d)?),
+        t => return Err(wire_err(format!("unknown op tag {t}"))),
+    })
+}
+
+const JOB_SUM: u8 = 0;
+const JOB_MAX: u8 = 1;
+const JOB_SORT: u8 = 2;
+const JOB_THRESHOLD: u8 = 3;
+const JOB_HISTOGRAM: u8 = 4;
+
+fn put_array_job(out: &mut Vec<u8>, job: &ArrayJob) {
+    match job {
+        ArrayJob::Sum => out.push(JOB_SUM),
+        ArrayJob::Max => out.push(JOB_MAX),
+        ArrayJob::Sort => out.push(JOB_SORT),
+        ArrayJob::Threshold(t) => {
+            out.push(JOB_THRESHOLD);
+            put_i32(out, *t);
+        }
+        ArrayJob::Histogram(bounds) => {
+            out.push(JOB_HISTOGRAM);
+            put_i32s(out, bounds);
+        }
+    }
+}
+
+fn take_array_job(d: &mut Dec<'_>) -> Result<ArrayJob> {
+    Ok(match d.take_u8()? {
+        JOB_SUM => ArrayJob::Sum,
+        JOB_MAX => ArrayJob::Max,
+        JOB_SORT => ArrayJob::Sort,
+        JOB_THRESHOLD => ArrayJob::Threshold(d.take_i32()?),
+        JOB_HISTOGRAM => ArrayJob::Histogram(d.take_i32s()?),
+        t => return Err(wire_err(format!("unknown array-job tag {t}"))),
+    })
+}
+
+// ---- responses ----
+
+const RESP_SQL_ROWS: u8 = 0;
+const RESP_SQL_COUNT: u8 = 1;
+const RESP_MATCHES: u8 = 2;
+const RESP_SCALAR: u8 = 3;
+const RESP_SORTED: u8 = 4;
+const RESP_HISTOGRAM: u8 = 5;
+
+fn put_response(out: &mut Vec<u8>, resp: &Response) {
+    match resp {
+        Response::Sql(QueryResult::Rows(rows)) => {
+            out.push(RESP_SQL_ROWS);
+            put_usizes(out, rows);
+        }
+        Response::Sql(QueryResult::Count(n)) => {
+            out.push(RESP_SQL_COUNT);
+            put_u64(out, *n as u64);
+        }
+        Response::Matches(hits) => {
+            out.push(RESP_MATCHES);
+            put_usizes(out, hits);
+        }
+        Response::Scalar(v) => {
+            out.push(RESP_SCALAR);
+            put_i64(out, *v);
+        }
+        Response::Sorted(v) => {
+            out.push(RESP_SORTED);
+            put_i32s(out, v);
+        }
+        Response::Histogram(counts) => {
+            out.push(RESP_HISTOGRAM);
+            put_usizes(out, counts);
+        }
+    }
+}
+
+fn take_response(d: &mut Dec<'_>) -> Result<Response> {
+    Ok(match d.take_u8()? {
+        RESP_SQL_ROWS => Response::Sql(QueryResult::Rows(d.take_usizes()?)),
+        RESP_SQL_COUNT => Response::Sql(QueryResult::Count(d.take_usize()?)),
+        RESP_MATCHES => Response::Matches(d.take_usizes()?),
+        RESP_SCALAR => Response::Scalar(d.take_i64()?),
+        RESP_SORTED => Response::Sorted(d.take_i32s()?),
+        RESP_HISTOGRAM => Response::Histogram(d.take_usizes()?),
+        t => return Err(wire_err(format!("unknown response tag {t}"))),
+    })
+}
+
+// ---- typed errors ----
+
+const ERR_INVALID_RANGE: u8 = 0;
+const ERR_ADDRESS_OOR: u8 = 1;
+const ERR_INVALID_REGISTER: u8 = 2;
+const ERR_INVALID_INSTRUCTION: u8 = 3;
+const ERR_OBJECT: u8 = 4;
+const ERR_SQL: u8 = 5;
+const ERR_RUNTIME: u8 = 6;
+const ERR_COORDINATOR: u8 = 7;
+const ERR_POOL: u8 = 8;
+const ERR_CAPACITY: u8 = 9;
+const ERR_QUOTA: u8 = 10;
+const ERR_IO: u8 = 11;
+const ERR_WIRE: u8 = 12;
+
+fn put_error(out: &mut Vec<u8>, e: &CpmError) {
+    match e {
+        CpmError::InvalidRange {
+            start,
+            end,
+            carry,
+            pes,
+        } => {
+            out.push(ERR_INVALID_RANGE);
+            put_u64(out, *start as u64);
+            put_u64(out, *end as u64);
+            put_u64(out, *carry as u64);
+            put_u64(out, *pes as u64);
+        }
+        CpmError::AddressOutOfRange { addr, size } => {
+            out.push(ERR_ADDRESS_OOR);
+            put_u64(out, *addr as u64);
+            put_u64(out, *size as u64);
+        }
+        CpmError::InvalidRegister { sel } => {
+            out.push(ERR_INVALID_REGISTER);
+            put_i32(out, *sel);
+        }
+        CpmError::InvalidInstruction(m) => {
+            out.push(ERR_INVALID_INSTRUCTION);
+            put_str(out, m);
+        }
+        CpmError::Object(m) => {
+            out.push(ERR_OBJECT);
+            put_str(out, m);
+        }
+        CpmError::Sql(m) => {
+            out.push(ERR_SQL);
+            put_str(out, m);
+        }
+        CpmError::Runtime(m) => {
+            out.push(ERR_RUNTIME);
+            put_str(out, m);
+        }
+        CpmError::Coordinator(m) => {
+            out.push(ERR_COORDINATOR);
+            put_str(out, m);
+        }
+        CpmError::Pool(m) => {
+            out.push(ERR_POOL);
+            put_str(out, m);
+        }
+        CpmError::CapacityExceeded {
+            device,
+            needed,
+            available,
+        } => {
+            out.push(ERR_CAPACITY);
+            put_str(out, device);
+            put_u64(out, *needed as u64);
+            put_u64(out, *available as u64);
+        }
+        CpmError::QuotaExceeded {
+            tenant,
+            needed,
+            quota,
+        } => {
+            out.push(ERR_QUOTA);
+            put_str(out, tenant);
+            put_u64(out, *needed as u64);
+            put_u64(out, *quota as u64);
+        }
+        CpmError::Io(e) => {
+            out.push(ERR_IO);
+            put_str(out, &e.to_string());
+        }
+        CpmError::Wire(m) => {
+            out.push(ERR_WIRE);
+            put_str(out, m);
+        }
+    }
+}
+
+fn take_error(d: &mut Dec<'_>) -> Result<CpmError> {
+    Ok(match d.take_u8()? {
+        ERR_INVALID_RANGE => CpmError::InvalidRange {
+            start: d.take_usize()?,
+            end: d.take_usize()?,
+            carry: d.take_usize()?,
+            pes: d.take_usize()?,
+        },
+        ERR_ADDRESS_OOR => CpmError::AddressOutOfRange {
+            addr: d.take_usize()?,
+            size: d.take_usize()?,
+        },
+        ERR_INVALID_REGISTER => CpmError::InvalidRegister { sel: d.take_i32()? },
+        ERR_INVALID_INSTRUCTION => CpmError::InvalidInstruction(d.take_str()?),
+        ERR_OBJECT => CpmError::Object(d.take_str()?),
+        ERR_SQL => CpmError::Sql(d.take_str()?),
+        ERR_RUNTIME => CpmError::Runtime(d.take_str()?),
+        ERR_COORDINATOR => CpmError::Coordinator(d.take_str()?),
+        ERR_POOL => CpmError::Pool(d.take_str()?),
+        ERR_CAPACITY => CpmError::CapacityExceeded {
+            device: d.take_str()?,
+            needed: d.take_usize()?,
+            available: d.take_usize()?,
+        },
+        ERR_QUOTA => CpmError::QuotaExceeded {
+            tenant: d.take_str()?,
+            needed: d.take_usize()?,
+            quota: d.take_usize()?,
+        },
+        ERR_IO => CpmError::Io(std::io::Error::other(d.take_str()?)),
+        ERR_WIRE => CpmError::Wire(d.take_str()?),
+        t => return Err(wire_err(format!("unknown error tag {t}"))),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_msg(msg: &ClientMsg) {
+        let payload = match msg {
+            ClientMsg::Hello { tenant } => encode_hello(tenant),
+            ClientMsg::Request {
+                id,
+                tenant,
+                device,
+                op,
+            } => encode_request(*id, tenant.as_deref(), device.as_deref(), op),
+        };
+        let back = decode_client_msg(&payload).unwrap();
+        assert_eq!(&back, msg);
+    }
+
+    #[test]
+    fn client_messages_roundtrip() {
+        roundtrip_msg(&ClientMsg::Hello {
+            tenant: "acme".into(),
+        });
+        let ops = vec![
+            Request::Sql("SELECT COUNT WHERE price < 5000".into()),
+            Request::Search(b"needle".to_vec()),
+            Request::Insert(7, b"xyz".to_vec()),
+            Request::Delete(3, 9),
+            Request::Replace(b"ab".to_vec(), b"cdef".to_vec()),
+            Request::Sum(vec![-3, 0, 17]),
+            Request::Max(vec![1]),
+            Request::Sort(vec![9, -9]),
+            Request::Threshold(vec![4, 5, 6], 5),
+            Request::Histogram(vec![1, 2, 3], vec![0, 2]),
+            Request::Array(ArrayJob::Sum),
+            Request::Array(ArrayJob::Max),
+            Request::Array(ArrayJob::Sort),
+            Request::Array(ArrayJob::Threshold(-2)),
+            Request::Array(ArrayJob::Histogram(vec![-1, 0, 1])),
+        ];
+        for (i, op) in ops.into_iter().enumerate() {
+            roundtrip_msg(&ClientMsg::Request {
+                id: i as u64,
+                tenant: if i % 2 == 0 { Some("acme".into()) } else { None },
+                device: if i % 3 == 0 { Some("orders".into()) } else { None },
+                op,
+            });
+        }
+    }
+
+    #[test]
+    fn replies_roundtrip() {
+        let cases: Vec<Result<Response>> = vec![
+            Ok(Response::Sql(QueryResult::Count(42))),
+            Ok(Response::Sql(QueryResult::Rows(vec![0, 5, 9]))),
+            Ok(Response::Matches(vec![2, 33])),
+            Ok(Response::Scalar(-7)),
+            Ok(Response::Sorted(vec![-1, 0, 3])),
+            Ok(Response::Histogram(vec![4, 0, 6])),
+            Err(CpmError::Sql("bad token".into())),
+            Err(CpmError::Pool("no resident device a/b".into())),
+            Err(CpmError::CapacityExceeded {
+                device: "acme/corpus".into(),
+                needed: 128,
+                available: 64,
+            }),
+            Err(CpmError::QuotaExceeded {
+                tenant: "acme".into(),
+                needed: 32,
+                quota: 16,
+            }),
+            Err(CpmError::InvalidRange {
+                start: 2,
+                end: 1,
+                carry: 1,
+                pes: 8,
+            }),
+            Err(CpmError::Wire("trailing bytes".into())),
+        ];
+        for (i, result) in cases.into_iter().enumerate() {
+            let payload = encode_reply(i as u64, &result);
+            let (id, back) = decode_reply(&payload).unwrap();
+            assert_eq!(id, i as u64);
+            match (&result, &back) {
+                (Ok(a), Ok(b)) => assert_eq!(a, b),
+                // Typed errors survive the hop: same variant, same message.
+                (Err(a), Err(b)) => assert_eq!(a.to_string(), b.to_string()),
+                other => panic!("ok/err flip: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn frames_roundtrip_over_a_buffer() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        write_frame(&mut buf, &[0xAB; 300]).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), vec![0xAB; 300]);
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_payloads_are_typed_wire_errors() {
+        // Unknown tag.
+        assert!(matches!(
+            decode_client_msg(&[9]),
+            Err(CpmError::Wire(_))
+        ));
+        // Truncated request.
+        let payload = encode_request(1, None, None, &Request::Search(b"abc".to_vec()));
+        assert!(matches!(
+            decode_client_msg(&payload[..payload.len() - 1]),
+            Err(CpmError::Wire(_))
+        ));
+        // Trailing garbage.
+        let mut payload = encode_hello("t");
+        payload.push(0);
+        assert!(matches!(decode_client_msg(&payload), Err(CpmError::Wire(_))));
+        // Oversized frame length prefix.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        let mut r = &buf[..];
+        assert!(read_frame(&mut r).is_err());
+        // Mid-frame EOF.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&8u32.to_le_bytes());
+        buf.extend_from_slice(b"abc");
+        let mut r = &buf[..];
+        assert!(read_frame(&mut r).is_err());
+    }
+}

@@ -16,6 +16,7 @@
 //!
 //! [`CpmServer`](crate::coordinator::CpmServer) routes every request —
 //! single or batched — through this pool.
+#![warn(missing_docs)]
 
 pub mod allocator;
 pub mod batch;

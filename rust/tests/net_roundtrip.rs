@@ -1,0 +1,215 @@
+//! Loopback integration: the TCP front-end must be semantically
+//! transparent.
+//!
+//! N concurrent clients drive the server over real sockets with
+//! pipelined, tenant-pinned request sequences (including corpus edits
+//! and a typed error); the same sequences run serially against an
+//! identical in-process server through `handle_addressed`. Every wire
+//! response must equal its in-process twin, and the admission window
+//! must have actually coalesced concurrent requests (wire metrics).
+
+use std::io::Read;
+use std::net::TcpStream;
+use std::thread;
+use std::time::Duration;
+
+use cpm::coordinator::{Addressed, CpmServer, Request, Response};
+use cpm::net::{wire, CpmClient, NetConfig, NetServer, WindowConfig};
+use cpm::pool::{DevicePool, PoolConfig};
+use cpm::sql::Schema;
+
+const CLIENTS: usize = 8;
+
+/// Per-client tenant name. Each tenant owns a private corpus, so edit
+/// sequences are ordered within a connection and independent across
+/// connections — concurrent wire serving must then match per-client
+/// serial in-process serving exactly.
+fn tenant(t: usize) -> String {
+    format!("tenant{t}")
+}
+
+fn build_server() -> CpmServer {
+    let mut pool = DevicePool::new(PoolConfig {
+        capacity_pes: 1 << 18,
+        tenant_quota_pes: 1 << 14,
+        corpus_slack: 64,
+    });
+    for t in 0..CLIENTS {
+        let content = format!("alpha beta gamma alpha delta {}", tenant(t));
+        pool.create_corpus(&tenant(t), "notes", content.as_bytes())
+            .unwrap();
+    }
+    let schema = Schema::new(&[("price", 2), ("qty", 1)]).unwrap();
+    pool.create_table("shared", "orders", schema, 128).unwrap();
+    let mut server = CpmServer::with_pool(pool, 1 << 12);
+    let rows: Vec<Vec<u64>> = (0..100).map(|i| vec![(i * 97) % 10_000, i % 100]).collect();
+    server.load_rows_into("shared", "orders", &rows).unwrap();
+    server
+}
+
+/// Client `t`'s request script. Mixes tenant-pinned corpus reads and
+/// *edits* (Insert/Replace are in-connection ordered), cross-tenant
+/// reads of a shared table, ad-hoc compute, and one typed error.
+fn script(t: usize) -> Vec<Addressed> {
+    let me = tenant(t);
+    vec![
+        Addressed::new(&me, "notes", Request::Search(b"alpha".to_vec())),
+        Addressed::new(
+            "shared",
+            "orders",
+            Request::Sql("SELECT COUNT WHERE price < 5000".into()),
+        ),
+        Addressed::new(&me, "notes", Request::Insert(0, format!("zz{t} ").into_bytes())),
+        Addressed::new(&me, "notes", Request::Search(b"alpha".to_vec())),
+        Addressed::for_tenant(&me, Request::Sum(vec![t as i32, 10, 20])),
+        Addressed::new(&me, "notes", Request::Replace(b"beta".to_vec(), b"BETAS".to_vec())),
+        Addressed::new(&me, "notes", Request::Search(b"BETAS".to_vec())),
+        Addressed::new(
+            "shared",
+            "orders",
+            Request::Sql("SELECT ROWS WHERE qty > 90".into()),
+        ),
+        // Typed error over the wire: no such device for this tenant.
+        Addressed::new(&me, "missing", Request::Search(b"x".to_vec())),
+        Addressed::for_tenant(&me, Request::Sort(vec![3, 1, 2, t as i32])),
+    ]
+}
+
+/// Serial in-process reference: apply client `t`'s script in order.
+fn reference_responses(server: &mut CpmServer, t: usize) -> Vec<cpm::Result<Response>> {
+    script(t)
+        .iter()
+        .map(|a| server.handle_addressed(a))
+        .collect()
+}
+
+fn assert_same(wire_r: &cpm::Result<Response>, local_r: &cpm::Result<Response>, ctx: &str) {
+    match (wire_r, local_r) {
+        (Ok(a), Ok(b)) => assert_eq!(a, b, "{ctx}"),
+        // Typed errors must survive the hop with their exact rendering.
+        (Err(a), Err(b)) => assert_eq!(a.to_string(), b.to_string(), "{ctx}"),
+        other => panic!("wire/local divergence at {ctx}: {other:?}"),
+    }
+}
+
+#[test]
+fn concurrent_tcp_clients_match_serial_in_process_serving() {
+    let net = NetServer::spawn(
+        build_server(),
+        NetConfig {
+            addr: "127.0.0.1:0".into(),
+            // A wide-open window: everything the 8 clients send lands in
+            // very few batches, so coalescing is guaranteed, and the
+            // batched executor must still preserve per-connection order.
+            window: WindowConfig {
+                max_delay: Duration::from_millis(300),
+                max_batch: 256,
+                ..WindowConfig::default()
+            },
+            ..NetConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = net.addr();
+
+    let mut handles = Vec::new();
+    for t in 0..CLIENTS {
+        handles.push(thread::spawn(move || -> cpm::Result<Vec<cpm::Result<Response>>> {
+            let me = tenant(t);
+            let mut client = CpmClient::connect(addr)?;
+            // Pin the tenant; requests addressed to our own tenant are
+            // then sent *without* an explicit tenant (exercising the
+            // pinning path), while shared-table requests override it.
+            client.hello(&me)?;
+            let script = script(t);
+            let mut ids = Vec::with_capacity(script.len());
+            for a in &script {
+                let tenant_override = if a.tenant == me {
+                    None
+                } else {
+                    Some(a.tenant.as_str())
+                };
+                ids.push(client.send(tenant_override, a.device.as_deref(), &a.op)?);
+            }
+            let mut got = std::collections::BTreeMap::new();
+            while got.len() < ids.len() {
+                let (id, result) = client.recv()?;
+                got.insert(id, result);
+            }
+            Ok(ids
+                .into_iter()
+                .map(|id| got.remove(&id).expect("reply for every id"))
+                .collect())
+        }));
+    }
+    let wire_results: Vec<Vec<cpm::Result<Response>>> = handles
+        .into_iter()
+        .map(|h| h.join().expect("client thread panicked").expect("transport"))
+        .collect();
+
+    // Serial reference on an identical in-process server.
+    let mut local = build_server();
+    for (t, wire_rs) in wire_results.iter().enumerate() {
+        let local_rs = reference_responses(&mut local, t);
+        assert_eq!(wire_rs.len(), local_rs.len());
+        for (i, (w, l)) in wire_rs.iter().zip(&local_rs).enumerate() {
+            assert_same(w, l, &format!("client {t}, op {i}"));
+        }
+    }
+
+    // The window must have genuinely coalesced concurrent wire traffic.
+    let server = net.shutdown();
+    let w = &server.metrics.wire;
+    assert_eq!(w.connections as usize, CLIENTS);
+    assert_eq!(w.window_requests as usize, CLIENTS * script(0).len());
+    assert!(
+        w.coalesced_windows >= 1 && w.max_window >= 2,
+        "no multi-request window formed: {w:?}"
+    );
+    assert!(w.windows < w.window_requests, "every request got its own window");
+    assert_eq!(server.metrics.requests as usize, CLIENTS * script(0).len());
+}
+
+#[test]
+fn tenant_pinning_scopes_default_requests() {
+    let net = NetServer::spawn(build_server(), NetConfig::default()).unwrap();
+    let mut a = CpmClient::connect(net.addr()).unwrap();
+    let mut b = CpmClient::connect(net.addr()).unwrap();
+    a.hello("tenant0").unwrap();
+    b.hello("tenant1").unwrap();
+    // Same request, different pinned tenants, different corpora.
+    let ra = a
+        .call_addressed(None, Some("notes"), &Request::Search(b"tenant0".to_vec()))
+        .unwrap();
+    let rb = b
+        .call_addressed(None, Some("notes"), &Request::Search(b"tenant1".to_vec()))
+        .unwrap();
+    let (Response::Matches(ha), Response::Matches(hb)) = (&ra, &rb) else {
+        panic!("expected matches, got {ra:?} / {rb:?}");
+    };
+    assert_eq!(ha.len(), 1);
+    assert_eq!(hb.len(), 1);
+    // An unpinned connection runs against the default tenant, which has
+    // no devices in this pool — typed pool error over the wire.
+    let mut c = CpmClient::connect(net.addr()).unwrap();
+    let err = c.call(Request::Search(b"alpha".to_vec())).unwrap_err();
+    assert_eq!(err.to_string(), "pool error: no resident device default/corpus");
+    let server = net.shutdown();
+    assert_eq!(server.metrics.wire.connections, 3);
+}
+
+#[test]
+fn protocol_violation_closes_the_connection() {
+    let net = NetServer::spawn(build_server(), NetConfig::default()).unwrap();
+    let mut raw = TcpStream::connect(net.addr()).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // A framed payload with an unknown message tag: the server drops the
+    // connection instead of guessing at framing.
+    wire::write_frame(&mut raw, &[0xFF, 1, 2, 3]).unwrap();
+    let mut buf = [0u8; 1];
+    match raw.read(&mut buf) {
+        Ok(0) => {}
+        other => panic!("expected EOF after protocol violation, got {other:?}"),
+    }
+    net.shutdown();
+}
