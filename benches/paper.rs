@@ -1,5 +1,5 @@
 //! The paper-reproduction benchmark harness: one section per experiment in
-//! DESIGN.md's index (E1–E20). `cargo bench` runs everything;
+//! DESIGN.md's index (E1–E21). `cargo bench` runs everything;
 //! `cargo bench -- e7` runs one experiment.
 //!
 //! Each section prints a table of *measured* cycle counts next to the
@@ -636,6 +636,7 @@ fn e20_pool_batched_serving() {
             capacity_pes: 1 << 18,
             tenant_quota_pes: 1 << 18,
             corpus_slack: 1024,
+            ..PoolConfig::default()
         });
         let schema = Schema::new(&[("price", 2), ("qty", 1)]).unwrap();
         pool.create_table(DEFAULT_TENANT, DEFAULT_TABLE, schema, 4096)
@@ -753,6 +754,115 @@ fn e20_pool_batched_serving() {
     r.print("E20 multi-tenant batched serving: shared passes + §3.1 overlap vs one-at-a-time");
 }
 
+fn e21_sharded_plane() {
+    use cpm::device::computable::{ExecConfig, Instr, Opcode, ShardedBitPlane, ShardedPlane, Src};
+
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let cfg = |threads: usize| ExecConfig {
+        threads,
+        min_shard_pes: 1 << 12,
+    };
+    let mut r = Report::new(&["plane", "p", "trace", "threads", "wall µs", "speedup"]);
+
+    // Dense word-plane path (the L3 hot loop): one long trace of
+    // carry=1 unconditional ops, including neighbor seams.
+    let p = 1 << 18;
+    let mut rng = Rng::new(21);
+    let vals = rng.vec_i32(p, -500, 500);
+    let trace: Vec<Instr> = (0..64)
+        .map(|k| match k % 6 {
+            0 => Instr::all(Opcode::Add, Src::Left, Reg::Op),
+            1 => Instr::all(Opcode::Copy, Src::Reg(Reg::Op), Reg::Nb),
+            2 => Instr::all(Opcode::CmpGt, Src::Imm, Reg::Nb).imm(100),
+            3 => Instr::all(Opcode::Mul, Src::Imm, Reg::Op).imm(3),
+            4 => Instr::all(Opcode::Max, Src::Right, Reg::Op),
+            _ => Instr::all(Opcode::AbsDiff, Src::Reg(Reg::Nb), Reg::Op),
+        })
+        .collect();
+
+    let mut reference: Option<Vec<i32>> = None;
+    let mut serial_ns = 0u64;
+    let mut speedup4 = 0.0f64;
+    for threads in [1usize, 2, 4] {
+        let mut plane = ShardedPlane::new(p, 16, cfg(threads));
+        plane.load_plane(Reg::Nb, &vals);
+        let ns = cpm::bench::time_median(1, 5, || {
+            let mut e = plane.clone();
+            e.run(&trace);
+            std::hint::black_box(e.plane(Reg::Op)[0]);
+        });
+        // Correctness: bit-identical final state at every thread count.
+        let mut e = plane.clone();
+        e.run(&trace);
+        match &reference {
+            None => reference = Some(e.state()),
+            Some(want) => {
+                assert_eq!(&e.state(), want, "sharded != serial at {threads} threads")
+            }
+        }
+        if threads == 1 {
+            serial_ns = ns;
+        }
+        let speedup = serial_ns as f64 / ns.max(1) as f64;
+        if threads == 4 {
+            speedup4 = speedup;
+        }
+        r.row(&[
+            "word".into(),
+            p.to_string(),
+            trace.len().to_string(),
+            threads.to_string(),
+            format!("{:.0}", ns as f64 / 1e3),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+
+    // Bit-plane path: plane ops over packed u64 words (each macro op is
+    // its full bit-serial expansion, so the plane is smaller).
+    let pb = 1 << 16;
+    let valsb = rng.vec_i32(pb, -500, 500);
+    let traceb: Vec<Instr> = trace[..12].to_vec();
+    let mut bit_reference: Option<Vec<i32>> = None;
+    let mut bit_serial_ns = 0u64;
+    for threads in [1usize, 4] {
+        let mut plane = ShardedBitPlane::new(pb, cfg(threads));
+        plane.load_plane(Reg::Nb, &valsb);
+        let ns = cpm::bench::time_median(1, 3, || {
+            let mut e = plane.clone();
+            e.run(&traceb);
+            std::hint::black_box(e.plane_ops());
+        });
+        let mut e = plane.clone();
+        e.run(&traceb);
+        match &bit_reference {
+            None => bit_reference = Some(e.state()),
+            Some(want) => {
+                assert_eq!(&e.state(), want, "sharded bits != serial at {threads} threads")
+            }
+        }
+        if threads == 1 {
+            bit_serial_ns = ns;
+        }
+        r.row(&[
+            "bit".into(),
+            pb.to_string(),
+            traceb.len().to_string(),
+            threads.to_string(),
+            format!("{:.0}", ns as f64 / 1e3),
+            format!("{:.2}x", bit_serial_ns as f64 / ns.max(1) as f64),
+        ]);
+    }
+
+    r.print("E21 sharded PE plane: serial vs N-thread dense path (std threads)");
+    println!("(machine reports {cores} hardware threads)");
+    if cores >= 4 {
+        assert!(
+            speedup4 > 1.5,
+            "dense-path speedup at 4 threads was {speedup4:.2}x (need > 1.5x on a >= 4-core machine)"
+        );
+    }
+}
+
 fn main() {
     let filter: Option<String> = std::env::args()
         .skip(1)
@@ -779,6 +889,7 @@ fn main() {
         ("e18", e18_overlap),
         ("e19", e19_engines),
         ("e20", e20_pool_batched_serving),
+        ("e21", e21_sharded_plane),
     ];
     for (name, f) in experiments {
         if filter.as_deref().map(|f| f == name).unwrap_or(true) {

@@ -19,6 +19,7 @@ fn build_server(seed: u64) -> cpm::Result<CpmServer> {
         capacity_pes: 64 * 1024,
         tenant_quota_pes: 48 * 1024,
         corpus_slack: 512,
+        ..PoolConfig::default()
     });
     let mut rng = Rng::new(seed);
     let schema = Schema::new(&[("price", 2), ("qty", 1), ("region", 1)])?;

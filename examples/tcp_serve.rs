@@ -17,18 +17,28 @@ use std::thread;
 use std::time::Duration;
 
 use cpm::coordinator::{CpmServer, Request, Response};
+use cpm::device::computable::ExecConfig;
 use cpm::net::{CpmClient, NetConfig, NetServer, WindowConfig};
 use cpm::sql::{QueryResult, Schema};
 
 const CLIENTS: usize = 4;
 const OPS_PER_CLIENT: usize = 3;
+/// One client also sends a plane-sized ad-hoc sum, so with
+/// `CPM_THREADS > 1` the served compute path really runs on the sharded
+/// plane (the plane must clear `ExecConfig`'s per-shard floor).
+const BIG_SUM_LEN: usize = 1 << 16;
+const TOTAL_OPS: usize = CLIENTS * OPS_PER_CLIENT + 1;
 
 fn main() -> cpm::Result<()> {
     // A small serving target: 64-row price/qty table + the classic
     // pangram corpus, all under the default tenant.
     let schema = Schema::new(&[("price", 2), ("qty", 1)])?;
     let corpus = b"the quick brown fox jumps over the lazy dog";
-    let mut server = CpmServer::new(schema, 64, corpus, 1 << 12);
+    let mut server = CpmServer::new(schema, 64, corpus, BIG_SUM_LEN);
+    // Honor CPM_THREADS: with threads > 1 the big ad-hoc sum below runs
+    // on the sharded plane (threads=1, the default, keeps the serial
+    // engines; small planes stay serial either way).
+    server.set_exec(ExecConfig::from_env());
     let rows: Vec<Vec<u64>> = (0..50).map(|i| vec![(i * 181) % 10_000, i % 100]).collect();
     server.load_rows(&rows)?;
     let below_5000 = rows.iter().filter(|r| r[0] < 5000).count();
@@ -54,11 +64,15 @@ fn main() -> cpm::Result<()> {
     for t in 0..CLIENTS {
         handles.push(thread::spawn(move || -> cpm::Result<()> {
             let mut client = CpmClient::connect(addr)?;
-            let ops = vec![
+            let mut ops = vec![
                 Request::Sql("SELECT COUNT WHERE price < 5000".into()),
                 Request::Search(b"the".to_vec()),
                 Request::Sum(vec![t as i32, 1, 2, 3]),
             ];
+            if t == 0 {
+                // Plane-sized sum: 0 + 1 + ... + (BIG_SUM_LEN - 1).
+                ops.push(Request::Sum((0..BIG_SUM_LEN as i32).collect()));
+            }
             let responses = client.pipeline(&ops)?;
             assert_eq!(
                 responses[0].as_ref().unwrap(),
@@ -72,6 +86,13 @@ fn main() -> cpm::Result<()> {
                 responses[2].as_ref().unwrap(),
                 &Response::Scalar(t as i64 + 6)
             );
+            if t == 0 {
+                let n = BIG_SUM_LEN as i64;
+                assert_eq!(
+                    responses[3].as_ref().unwrap(),
+                    &Response::Scalar(n * (n - 1) / 2)
+                );
+            }
             Ok(())
         }));
     }
@@ -95,8 +116,8 @@ fn main() -> cpm::Result<()> {
         server.metrics.requests, server.metrics.shared_passes_saved
     );
     assert_eq!(w.connections as usize, CLIENTS);
-    assert_eq!(w.window_requests as usize, CLIENTS * OPS_PER_CLIENT);
-    assert_eq!(server.metrics.requests as usize, CLIENTS * OPS_PER_CLIENT);
+    assert_eq!(w.window_requests as usize, TOTAL_OPS);
+    assert_eq!(server.metrics.requests as usize, TOTAL_OPS);
     println!("tcp_serve: OK");
     Ok(())
 }

@@ -7,13 +7,13 @@
 //! and the computable memory (word values).
 
 use crate::device::comparable::{CmpCode, ContentComparableMemory, FieldSpec};
-use crate::device::computable::{Opcode, Reg, TraceBuilder, WordEngine};
+use crate::device::computable::{Opcode, PePlane, Reg, TraceBuilder};
 
 /// Histogram of word values on a computable memory: `bounds` are the M-1
 /// inner bucket boundaries (ascending); returns M counts
 /// (`bucket[k]` = #values in `[bounds[k-1], bounds[k])`, open-ended ends).
 /// ~M cycles total.
-pub fn histogram_words(engine: &mut WordEngine, n: usize, bounds: &[i32]) -> Vec<usize> {
+pub fn histogram_words<E: PePlane>(engine: &mut E, n: usize, bounds: &[i32]) -> Vec<usize> {
     assert!(bounds.windows(2).all(|w| w[0] <= w[1]), "bounds must ascend");
     let end = n.saturating_sub(1) as u32;
     // cumulative[k] = #values < bounds[k]; one compare + one count each.
@@ -63,6 +63,7 @@ pub fn histogram_field(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::device::computable::WordEngine;
     use crate::util::rng::Rng;
 
     #[test]

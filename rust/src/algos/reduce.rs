@@ -8,7 +8,7 @@
 //! (Fig 10) reduces rows, then section columns, then scans section results
 //! — ~(Mx + My + (Nx/Mx)(Ny/My)), minimized near ∛(Nx·Ny) (E8).
 
-use crate::device::computable::{Opcode, Reg, Src, TraceBuilder, WordEngine};
+use crate::device::computable::{Opcode, PePlane, Reg, Src, TraceBuilder};
 use crate::util::isqrt;
 
 /// Result of a reduction run: the value plus the measured cost split.
@@ -31,7 +31,7 @@ impl<T> ReduceRun<T> {
 
 /// 1-D sum with section size `m` (Fig 9). Values are taken from the
 /// engine's NB plane (first `n` PEs) and are destroyed by the reduction.
-pub fn sum_1d(engine: &mut WordEngine, n: usize, m: usize) -> ReduceRun<i64> {
+pub fn sum_1d<E: PePlane>(engine: &mut E, n: usize, m: usize) -> ReduceRun<i64> {
     assert!(m >= 1 && n <= engine.len());
     let before = engine.cost();
     // Step 1: within every section, accumulate left-to-right in NB:
@@ -66,13 +66,13 @@ pub fn sum_1d(engine: &mut WordEngine, n: usize, m: usize) -> ReduceRun<i64> {
 }
 
 /// 1-D sum at the paper's optimal section size `M ~ √N`.
-pub fn sum_1d_opt(engine: &mut WordEngine, n: usize) -> ReduceRun<i64> {
+pub fn sum_1d_opt<E: PePlane>(engine: &mut E, n: usize) -> ReduceRun<i64> {
     let m = isqrt(n as u64).max(1) as usize;
     sum_1d(engine, n, m)
 }
 
 /// 1-D global maximum with section size `m` (§7.5 — same flow as sum).
-pub fn max_1d(engine: &mut WordEngine, n: usize, m: usize) -> ReduceRun<i32> {
+pub fn max_1d<E: PePlane>(engine: &mut E, n: usize, m: usize) -> ReduceRun<i32> {
     assert!(m >= 1 && n >= 1 && n <= engine.len());
     let before = engine.cost();
     let end = n.saturating_sub(1) as u32;
@@ -108,8 +108,8 @@ pub fn max_1d(engine: &mut WordEngine, n: usize, m: usize) -> ReduceRun<i32> {
 /// independently per axis, §7.1) is realized with the coordinate planes
 /// preloaded into D2/D3 at device-configuration time (see DESIGN.md):
 /// selecting `(x % mx == a) && (y % my == b)` costs 2 compare cycles.
-pub fn sum_2d(
-    engine: &mut WordEngine,
+pub fn sum_2d<E: PePlane>(
+    engine: &mut E,
     nx: usize,
     ny: usize,
     mx: usize,
@@ -182,7 +182,7 @@ pub fn sum_2d(
 /// Preload the Y-phase coordinate plane (D2 = y % my) — the device-config
 /// step standing in for the hardware's independent Y-axis decoder.
 /// Charged as exclusive setup, not concurrent cycles.
-fn load_phase_planes(engine: &mut WordEngine, nx: usize, ny: usize, _mx: usize, my: usize) {
+fn load_phase_planes<E: PePlane>(engine: &mut E, nx: usize, ny: usize, _mx: usize, my: usize) {
     let n = nx * ny;
     let mut d2 = vec![0i32; n];
     for y in 0..ny {
@@ -196,6 +196,7 @@ fn load_phase_planes(engine: &mut WordEngine, nx: usize, ny: usize, _mx: usize, 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::device::computable::WordEngine;
     use crate::util::rng::Rng;
 
     fn engine_with(vals: &[i32]) -> WordEngine {

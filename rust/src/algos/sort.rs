@@ -17,7 +17,7 @@
 //! parallel counter) also picks the cheaper sort *direction* up front,
 //! avoiding the worst case of re-sorting a reversed array.
 
-use crate::device::computable::{Opcode, Reg, Src, TraceBuilder, WordEngine};
+use crate::device::computable::{Opcode, PePlane, Reg, Src, TraceBuilder};
 use crate::device::computable::isa::F_COND_M;
 use crate::util::isqrt;
 
@@ -36,7 +36,7 @@ pub struct SortStats {
 
 /// Count adjacent inversions for ascending order (§7.7's disorder items):
 /// positions `i` with `v[i-1] > v[i]`. ~3 concurrent cycles.
-pub fn disorder_count(engine: &mut WordEngine, n: usize) -> usize {
+pub fn disorder_count<E: PePlane>(engine: &mut E, n: usize) -> usize {
     if n < 2 {
         return 0;
     }
@@ -53,7 +53,7 @@ pub fn disorder_count(engine: &mut WordEngine, n: usize) -> usize {
 }
 
 /// Count adjacent inversions for *descending* order: `v[i-1] < v[i]`.
-pub fn disorder_count_desc(engine: &mut WordEngine, n: usize) -> usize {
+pub fn disorder_count_desc<E: PePlane>(engine: &mut E, n: usize) -> usize {
     if n < 2 {
         return 0;
     }
@@ -71,7 +71,7 @@ pub fn disorder_count_desc(engine: &mut WordEngine, n: usize) -> usize {
 /// One even-odd exchange phase (`parity` = 0 or 1): every pair
 /// `(i, i+1)` with `i ≡ parity (mod 2)` swaps if out of ascending order.
 /// ~1 paper cycle; 7 macro cycles here (operand staging through NB).
-pub fn exchange_phase(engine: &mut WordEngine, n: usize, parity: usize) {
+pub fn exchange_phase<E: PePlane>(engine: &mut E, n: usize, parity: usize) {
     if n < 2 || parity + 1 >= n {
         return;
     }
@@ -95,7 +95,7 @@ pub fn exchange_phase(engine: &mut WordEngine, n: usize, parity: usize) {
 
 /// Local exchange sort: alternate phases until no disorder remains or
 /// `max_phases` is reached. Returns phases executed.
-pub fn local_exchange_sort(engine: &mut WordEngine, n: usize, max_phases: u64) -> u64 {
+pub fn local_exchange_sort<E: PePlane>(engine: &mut E, n: usize, max_phases: u64) -> u64 {
     let mut phases = 0;
     while phases < max_phases {
         if disorder_count(engine, n) == 0 {
@@ -121,7 +121,7 @@ pub enum Defect {
 
 /// Classify the defect at disorder position `i` (`v[i-1] > v[i]`) from its
 /// 4-item neighborhood (~4 cycles: 4 exclusive reads).
-pub fn classify_defect(engine: &mut WordEngine, n: usize, i: usize) -> Defect {
+pub fn classify_defect<E: PePlane>(engine: &mut E, n: usize, i: usize) -> Defect {
     let nb = engine.plane(Reg::Nb);
     let left_ok = i < 2 || nb[i - 2] <= nb[i];
     let right_ok = i + 1 >= n || nb[i - 1] <= nb[i + 1];
@@ -137,7 +137,7 @@ pub fn classify_defect(engine: &mut WordEngine, n: usize, i: usize) -> Defect {
 /// Fix one defect at disorder position `i`. Returns the macro+exclusive
 /// cost charged. Peak/valley destination search is one concurrent compare
 /// + a priority-encoder readout; the insertion is one concurrent move.
-fn fix_defect(engine: &mut WordEngine, n: usize, i: usize, defect: Defect) {
+fn fix_defect<E: PePlane>(engine: &mut E, n: usize, i: usize, defect: Defect) {
     let end = (n - 1) as u32;
     match defect {
         Defect::Fault => {
@@ -193,7 +193,7 @@ fn fix_defect(engine: &mut WordEngine, n: usize, i: usize, defect: Defect) {
 
 /// Global moving sort: repeatedly find the first disorder (match line),
 /// classify (Fig 13) and fix, until sorted or `max_fixes`; returns fixes.
-pub fn global_moving_sort(engine: &mut WordEngine, n: usize, max_fixes: u64) -> u64 {
+pub fn global_moving_sort<E: PePlane>(engine: &mut E, n: usize, max_fixes: u64) -> u64 {
     let mut fixes = 0;
     while fixes < max_fixes {
         if disorder_count(engine, n) == 0 {
@@ -216,7 +216,7 @@ pub fn global_moving_sort(engine: &mut WordEngine, n: usize, max_fixes: u64) -> 
 /// random disorder, then global moves remove the surviving point defects.
 /// A final exchange-phase fallback guarantees termination (odd-even
 /// transposition sorts any array in ≤ n phases).
-pub fn sort_sqrt(engine: &mut WordEngine, n: usize) -> SortStats {
+pub fn sort_sqrt<E: PePlane>(engine: &mut E, n: usize) -> SortStats {
     let before = engine.cost();
     let m = isqrt(n as u64).max(1);
     let phases = local_exchange_sort(engine, n, m);
@@ -237,7 +237,7 @@ pub fn sort_sqrt(engine: &mut WordEngine, n: usize) -> SortStats {
 
 /// Pick the cheaper sort direction (§7.7): returns `true` for ascending.
 /// One disorder count per direction (~6 cycles total).
-pub fn choose_direction(engine: &mut WordEngine, n: usize) -> bool {
+pub fn choose_direction<E: PePlane>(engine: &mut E, n: usize) -> bool {
     let asc = disorder_count(engine, n);
     let desc = disorder_count_desc(engine, n);
     asc <= desc
@@ -246,6 +246,7 @@ pub fn choose_direction(engine: &mut WordEngine, n: usize) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::device::computable::WordEngine;
     use crate::util::propcheck::{forall_sized, Config};
     use crate::util::rng::Rng;
 

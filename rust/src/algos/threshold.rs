@@ -7,11 +7,11 @@
 //! that CPM decouples instruction count from data size).
 
 use crate::device::computable::isa::F_COND_M;
-use crate::device::computable::{Opcode, Reg, Src, TraceBuilder, WordEngine};
+use crate::device::computable::{Opcode, PePlane, Reg, Src, TraceBuilder};
 
 /// Mark all values above `t` on the match plane (~1 cycle). Returns the
 /// number of marked PEs (parallel counter).
-pub fn threshold_mark(engine: &mut WordEngine, n: usize, t: i32) -> usize {
+pub fn threshold_mark<E: PePlane>(engine: &mut E, n: usize, t: i32) -> usize {
     let mut b = TraceBuilder::new();
     b.select(0, n.saturating_sub(1) as u32, 1)
         .cmp_imm(Opcode::CmpGt, Reg::Nb, t);
@@ -20,7 +20,7 @@ pub fn threshold_mark(engine: &mut WordEngine, n: usize, t: i32) -> usize {
 }
 
 /// Binarize in place: `NB = 1` where `NB > t`, else 0 (~3 cycles).
-pub fn threshold_binarize(engine: &mut WordEngine, n: usize, t: i32) {
+pub fn threshold_binarize<E: PePlane>(engine: &mut E, n: usize, t: i32) {
     let end = n.saturating_sub(1) as u32;
     let mut b = TraceBuilder::new();
     b.select(0, end, 1)
@@ -32,7 +32,7 @@ pub fn threshold_binarize(engine: &mut WordEngine, n: usize, t: i32) {
 
 /// Clamp to a band: keep values in `[lo, hi]`, zero the rest (~5 cycles —
 /// two compares + combine + conditional clear).
-pub fn threshold_band(engine: &mut WordEngine, n: usize, lo: i32, hi: i32) {
+pub fn threshold_band<E: PePlane>(engine: &mut E, n: usize, lo: i32, hi: i32) {
     let end = n.saturating_sub(1) as u32;
     let mut b = TraceBuilder::new();
     b.select(0, end, 1)
@@ -47,7 +47,7 @@ pub fn threshold_band(engine: &mut WordEngine, n: usize, lo: i32, hi: i32) {
 
 /// Conditional replace: where `NB > t`, substitute `v` (~2 cycles). The
 /// general conditional-update primitive thresholded pipelines use.
-pub fn threshold_replace(engine: &mut WordEngine, n: usize, t: i32, v: i32) {
+pub fn threshold_replace<E: PePlane>(engine: &mut E, n: usize, t: i32, v: i32) {
     let end = n.saturating_sub(1) as u32;
     let mut b = TraceBuilder::new();
     b.select(0, end, 1)
@@ -59,6 +59,7 @@ pub fn threshold_replace(engine: &mut WordEngine, n: usize, t: i32, v: i32) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::device::computable::WordEngine;
     use crate::util::rng::Rng;
 
     fn engine_with(vals: &[i32]) -> WordEngine {

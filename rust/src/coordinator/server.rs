@@ -196,13 +196,23 @@ impl CpmServer {
     }
 
     /// Build a server over an externally configured pool (multi-tenant
-    /// setups: several tables/corpora/arrays, quotas, custom slack).
+    /// setups: several tables/corpora/arrays, quotas, custom slack). The
+    /// pool's [`PoolConfig::exec`] policy flows into the batch executor,
+    /// so compute on large planes runs sharded across threads.
     pub fn with_pool(pool: DevicePool, engine_capacity: usize) -> Self {
+        let exec = pool.config().exec;
         CpmServer {
             pool,
-            executor: BatchExecutor::new(engine_capacity),
+            executor: BatchExecutor::with_exec(engine_capacity, exec),
             metrics: Metrics::default(),
         }
+    }
+
+    /// Change the plane-execution policy after construction (the CLI
+    /// `--threads` flag and `CPM_THREADS` land here for servers built
+    /// with [`CpmServer::new`]).
+    pub fn set_exec(&mut self, exec: crate::device::computable::ExecConfig) {
+        self.executor.set_exec(exec);
     }
 
     /// The device pool (inspection: residents, stats, quotas).
@@ -417,6 +427,7 @@ mod tests {
             capacity_pes: 1 << 10,
             tenant_quota_pes: 1 << 10,
             corpus_slack: 4,
+            ..PoolConfig::default()
         });
         pool.create_corpus(DEFAULT_TENANT, DEFAULT_CORPUS, b"abcdef")
             .unwrap();
@@ -452,6 +463,7 @@ mod tests {
             capacity_pes: 1 << 14,
             tenant_quota_pes: 1 << 13,
             corpus_slack: 16,
+            ..PoolConfig::default()
         });
         pool.create_corpus("alice", "notes", b"alpha beta alpha").unwrap();
         pool.create_corpus("bob", "notes", b"gamma delta").unwrap();

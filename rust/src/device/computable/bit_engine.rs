@@ -498,6 +498,20 @@ impl BitEngine {
         }
     }
 
+    /// Raw plane storage `planes[r][k]`, for the sharded executor to
+    /// partition into per-worker word slices.
+    pub(crate) fn planes_raw_mut(&mut self) -> &mut Vec<Vec<Plane>> {
+        &mut self.planes
+    }
+
+    /// Fold externally computed counters in (the sharded executor's
+    /// shadow accounting; plane-op counts are data-independent per
+    /// instruction, so the counters stay bit-identical to a serial run).
+    pub(crate) fn absorb_accounting(&mut self, plane_ops: u64, cost: ConcurrentCost) {
+        self.plane_ops += plane_ops;
+        self.cost += cost;
+    }
+
     /// Rule 6: number of PEs whose M register is non-zero.
     pub fn match_count(&mut self) -> usize {
         self.cost += ConcurrentCost::broadcast(1, 1);

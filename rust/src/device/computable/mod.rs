@@ -8,16 +8,23 @@
 //! * [`bit_engine::BitEngine`] — bit-serial-faithful bit-plane executor,
 //! * the PJRT backend (`crate::runtime`) — the AOT-compiled JAX/Pallas
 //!   plane, for large P.
+//!
+//! [`sharded::ShardedPlane`] / [`sharded::ShardedBitPlane`] wrap the
+//! first two and spread large planes across std worker threads
+//! ([`sharded::ExecConfig`] selects the thread count; `threads = 1` is
+//! bit-identical to the serial engines).
 
 pub mod bit_engine;
 pub mod isa;
 pub mod macroasm;
+pub mod sharded;
 pub mod superconn;
 pub mod word_engine;
 
 pub use isa::{Instr, Opcode, Reg, Src};
 pub use macroasm::TraceBuilder;
-pub use word_engine::WordEngine;
+pub use sharded::{ExecConfig, ShardedBitPlane, ShardedPlane};
+pub use word_engine::{PePlane, WordEngine};
 
 use crate::cycles::ConcurrentCost;
 

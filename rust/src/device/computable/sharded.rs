@@ -1,0 +1,1336 @@
+//! Sharded PE-plane execution: the word engine's dense loops and the bit
+//! engine's plane ops spread across std threads.
+//!
+//! The paper's premise is that *every* PE works at once; the serial
+//! engines simulate that one PE (or one plane word) at a time on a single
+//! core. This module splits the plane into contiguous shards and runs a
+//! macro trace with one worker thread per shard (`std::thread::scope`; no
+//! rayon, no dependencies), so wall-clock finally scales with the
+//! machine's cores.
+//!
+//! Correctness model — where synchronization is (and is not) required:
+//!
+//! * **Shard-local cycles.** A PE only ever writes its own registers, and
+//!   register/immediate sources only read the executing PE. So for
+//!   `Reg`/`Imm`-source instructions the shards share nothing and run the
+//!   whole cycle with **no barrier at all**.
+//! * **Neighbor seams.** `LEFT/RIGHT/UP/DOWN` read the *pre-cycle* NB
+//!   plane of arbitrary other PEs (`nx` can exceed the shard width). Each
+//!   worker publishes its NB shard into a shared snapshot, waits on a
+//!   [`Barrier`], executes the cycle reading neighbors from the snapshot,
+//!   and waits again so nobody republishes while a straggler still
+//!   reads. Two barriers per neighbor instruction, zero otherwise. The
+//!   snapshot *is* the concurrent semantics, so the serial engine's
+//!   hazard-ordering tricks are unnecessary here.
+//! * **Enable seams.** Rule 4 activation (the all-line window
+//!   `en_start <= i <= en_end` of Eq 3-3 AND'd with the §3.3 carry
+//!   pattern `(i - en_start) % en_carry == 0`) is a pure function of the
+//!   *global* PE address, so each worker evaluates it locally; a strided
+//!   chain crossing a shard boundary needs no communication (pinned
+//!   against `logic::CarryPatternGenerator`/`AllLineDecoder` by
+//!   `tests/sharded_plane.rs`).
+//! * **Global reduces.** Match-line readouts (Rule 6) fan in per-shard
+//!   partials — count, first, last — joined at the scope boundary.
+//!
+//! `threads = 1` (the default) delegates every call to the serial engine
+//! unchanged, so the sharded wrapper is bit-identical to the pre-existing
+//! path by construction; `threads = N` is pinned bit-identical to
+//! `threads = 1` (state *and* cost counters) by differential property
+//! tests. Cost accounting is data-independent per instruction, so the
+//! parallel path charges exactly what a serial run would.
+
+use std::sync::atomic::{AtomicI32, AtomicU64, Ordering};
+use std::sync::Barrier;
+
+use super::bit_engine::{BitEngine, W};
+use super::isa::{Instr, Opcode, Reg, Src, F_COND_M, F_COND_NOT_M, N_REGS};
+use super::word_engine::{apply_slice_op, PePlane, WordEngine};
+use crate::cycles::ConcurrentCost;
+
+/// Default floor on PEs per shard: below this, thread orchestration costs
+/// more than it saves and execution stays serial.
+pub const DEFAULT_MIN_SHARD_PES: usize = 1 << 14;
+
+/// Plane-execution configuration: how many worker threads a device may
+/// use, and when a plane is big enough to bother.
+///
+/// Flows from the CLI (`--threads`) or `CPM_THREADS` through
+/// [`PoolConfig`](crate::pool::PoolConfig) into the serve path, and into
+/// the runtime's trace interpreter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecConfig {
+    /// Worker threads for plane execution. `1` = serial, bit-identical
+    /// to the plain engines.
+    pub threads: usize,
+    /// Minimum PEs per shard before parallel execution engages; planes
+    /// smaller than `2 * min_shard_pes` always run serially.
+    pub min_shard_pes: usize,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig {
+            threads: 1,
+            min_shard_pes: DEFAULT_MIN_SHARD_PES,
+        }
+    }
+}
+
+impl ExecConfig {
+    /// Serial execution (the default).
+    pub fn serial() -> Self {
+        ExecConfig::default()
+    }
+
+    /// `threads` workers with the default shard-size floor.
+    pub fn with_threads(threads: usize) -> Self {
+        ExecConfig {
+            threads: threads.max(1),
+            ..ExecConfig::default()
+        }
+    }
+
+    /// Read `CPM_THREADS` from the environment (absent/unparsable = 1).
+    pub fn from_env() -> Self {
+        let threads = std::env::var("CPM_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(1);
+        ExecConfig::with_threads(threads)
+    }
+
+    /// Worker count actually used for a plane of `p` PEs: capped so every
+    /// shard holds at least [`ExecConfig::min_shard_pes`] (and never more
+    /// workers than PEs).
+    pub fn effective_threads(&self, p: usize) -> usize {
+        if self.threads <= 1 || p == 0 {
+            return 1;
+        }
+        let by_size = (p / self.min_shard_pes.max(1)).max(1);
+        self.threads.min(by_size).min(p).max(1)
+    }
+}
+
+/// Split `[0, n)` into `shards` contiguous non-empty ranges of
+/// near-equal size (the first `n % shards` ranges get one extra item).
+/// Requires `1 <= shards <= n`.
+pub(crate) fn shard_bounds(n: usize, shards: usize) -> Vec<(usize, usize)> {
+    assert!(shards != 0 && shards <= n, "bad shard count {shards} for {n}");
+    let base = n / shards;
+    let rem = n % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut lo = 0;
+    for s in 0..shards {
+        let len = base + usize::from(s < rem);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    debug_assert_eq!(lo, n);
+    out
+}
+
+/// PE-axis offset of a neighbor read: the value PE `i` sees is
+/// `NB[i + delta]` (reads beyond the plane return 0).
+fn neighbor_delta(instr: &Instr) -> isize {
+    match instr.src {
+        Src::Left => -1,
+        Src::Right => 1,
+        Src::Up => -(instr.nx as isize),
+        Src::Down => instr.nx as isize,
+        Src::Reg(_) | Src::Imm => 0,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Word-plane sharding
+// ---------------------------------------------------------------------
+
+/// A [`WordEngine`] behind the sharded executor: the same API, with
+/// `run` / readouts parallelized per [`ExecConfig`].
+#[derive(Debug, Clone)]
+pub struct ShardedPlane {
+    engine: WordEngine,
+    cfg: ExecConfig,
+}
+
+impl ShardedPlane {
+    /// Sharded plane over `p` PEs (word width for bit-cycle accounting).
+    pub fn new(p: usize, word_width: u64, cfg: ExecConfig) -> Self {
+        ShardedPlane {
+            engine: WordEngine::new(p, word_width),
+            cfg,
+        }
+    }
+
+    /// Wrap an existing engine (state and cost carry over).
+    pub fn with_engine(engine: WordEngine, cfg: ExecConfig) -> Self {
+        ShardedPlane { engine, cfg }
+    }
+
+    /// The execution configuration.
+    pub fn exec_config(&self) -> ExecConfig {
+        self.cfg
+    }
+
+    /// The wrapped serial engine.
+    pub fn engine(&self) -> &WordEngine {
+        &self.engine
+    }
+
+    /// The wrapped serial engine, mutably (host-side edits between runs).
+    pub fn engine_mut(&mut self) -> &mut WordEngine {
+        &mut self.engine
+    }
+
+    /// Unwrap into the serial engine.
+    pub fn into_engine(self) -> WordEngine {
+        self.engine
+    }
+
+    /// Number of PEs.
+    pub fn len(&self) -> usize {
+        self.engine.len()
+    }
+
+    /// True if the plane has no PEs.
+    pub fn is_empty(&self) -> bool {
+        self.engine.is_empty()
+    }
+
+    /// Read-only view of a register plane.
+    pub fn plane(&self, r: Reg) -> &[i32] {
+        self.engine.plane(r)
+    }
+
+    /// Mutable view of a register plane.
+    pub fn plane_mut(&mut self, r: Reg) -> &mut [i32] {
+        self.engine.plane_mut(r)
+    }
+
+    /// Load a whole plane (bulk exclusive write).
+    pub fn load_plane(&mut self, r: Reg, data: &[i32]) {
+        self.engine.load_plane(r, data);
+    }
+
+    /// Snapshot the full state.
+    pub fn state(&self) -> Vec<i32> {
+        self.engine.state()
+    }
+
+    /// Restore a full state snapshot.
+    pub fn set_state(&mut self, state: &[i32]) {
+        self.engine.set_state(state);
+    }
+
+    /// Accumulated cost.
+    pub fn cost(&self) -> ConcurrentCost {
+        self.engine.cost()
+    }
+
+    /// Reset the cost counters.
+    pub fn reset_cost(&mut self) {
+        self.engine.reset_cost();
+    }
+
+    /// Execute one broadcast macro instruction.
+    pub fn step(&mut self, instr: &Instr) {
+        self.run(std::slice::from_ref(instr));
+    }
+
+    /// Execute a whole macro trace, sharded across worker threads when
+    /// the plane is large enough (serial otherwise).
+    pub fn run(&mut self, trace: &[Instr]) {
+        let threads = self.cfg.effective_threads(self.engine.len());
+        if threads <= 1 {
+            self.engine.run(trace);
+            return;
+        }
+        // Charge exactly what the serial loop would: one broadcast per
+        // instruction (cost is data-independent).
+        let ww = self.engine.word_width();
+        let mut cost = ConcurrentCost::default();
+        for instr in trace {
+            cost += ConcurrentCost::broadcast(1, instr.opcode.bit_cycles(ww));
+        }
+        self.engine.account(cost);
+
+        let p = self.engine.len();
+        let bounds = shard_bounds(p, threads);
+        // Pre-cycle NB snapshot for neighbor seams (relaxed atomics; the
+        // barrier provides the ordering).
+        let snap: Vec<AtomicI32> = std::iter::repeat_with(|| AtomicI32::new(0))
+            .take(p)
+            .collect();
+        let barrier = Barrier::new(threads);
+
+        // Partition the flat plane storage `[r * p + i]` into per-shard,
+        // per-register slices so each worker owns its PEs outright.
+        let planes = self.engine.planes_raw_mut();
+        let mut shard_regs: Vec<Vec<&mut [i32]>> =
+            bounds.iter().map(|_| Vec::with_capacity(N_REGS)).collect();
+        for reg_plane in planes.chunks_exact_mut(p) {
+            let mut rest = reg_plane;
+            for (s, &(lo, hi)) in bounds.iter().enumerate() {
+                let (head, tail) = rest.split_at_mut(hi - lo);
+                shard_regs[s].push(head);
+                rest = tail;
+            }
+        }
+
+        let snap_ref = &snap;
+        let barrier_ref = &barrier;
+        std::thread::scope(|scope| {
+            for (s, regs) in shard_regs.into_iter().enumerate() {
+                let (lo, hi) = bounds[s];
+                scope.spawn(move || {
+                    let mut worker = ShardWorker {
+                        lo,
+                        hi,
+                        p,
+                        regs,
+                        snap: snap_ref,
+                        barrier: barrier_ref,
+                        scratch_a: vec![0; hi - lo],
+                        scratch_b: vec![0; hi - lo],
+                    };
+                    for instr in trace {
+                        worker.step(instr);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Rule 6 readout: match count via per-shard partial counts.
+    pub fn match_count(&mut self) -> usize {
+        let threads = self.cfg.effective_threads(self.engine.len());
+        if threads <= 1 {
+            return self.engine.match_count();
+        }
+        self.engine.account(ConcurrentCost::broadcast(1, 1));
+        let m = self.engine.plane(Reg::M);
+        let chunk = m.len().div_ceil(threads).max(1);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = m
+                .chunks(chunk)
+                .map(|seg| scope.spawn(move || seg.iter().filter(|&&v| v != 0).count()))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("match-count worker panicked"))
+                .sum()
+        })
+    }
+
+    /// Rule 6 readout: first matching PE via per-shard priority partials.
+    pub fn first_match(&mut self) -> Option<usize> {
+        let threads = self.cfg.effective_threads(self.engine.len());
+        if threads <= 1 {
+            return self.engine.first_match();
+        }
+        self.engine.account(ConcurrentCost::broadcast(1, 1));
+        let m = self.engine.plane(Reg::M);
+        let chunk = m.len().div_ceil(threads).max(1);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = m
+                .chunks(chunk)
+                .enumerate()
+                .map(|(ci, seg)| {
+                    scope.spawn(move || {
+                        seg.iter().position(|&v| v != 0).map(|k| ci * chunk + k)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .filter_map(|h| h.join().expect("first-match worker panicked"))
+                .next()
+        })
+    }
+
+    /// Rule 6 readout: last matching PE (mirrored priority encoder).
+    pub fn last_match(&mut self) -> Option<usize> {
+        let threads = self.cfg.effective_threads(self.engine.len());
+        if threads <= 1 {
+            return self.engine.last_match();
+        }
+        self.engine.account(ConcurrentCost::broadcast(1, 1));
+        let m = self.engine.plane(Reg::M);
+        let chunk = m.len().div_ceil(threads).max(1);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = m
+                .chunks(chunk)
+                .enumerate()
+                .map(|(ci, seg)| {
+                    scope.spawn(move || {
+                        seg.iter().rposition(|&v| v != 0).map(|k| ci * chunk + k)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .rev()
+                .filter_map(|h| h.join().expect("last-match worker panicked"))
+                .next()
+        })
+    }
+}
+
+impl PePlane for ShardedPlane {
+    fn len(&self) -> usize {
+        ShardedPlane::len(self)
+    }
+
+    fn load_plane(&mut self, r: Reg, data: &[i32]) {
+        ShardedPlane::load_plane(self, r, data)
+    }
+
+    fn plane(&self, r: Reg) -> &[i32] {
+        ShardedPlane::plane(self, r)
+    }
+
+    fn plane_mut(&mut self, r: Reg) -> &mut [i32] {
+        ShardedPlane::plane_mut(self, r)
+    }
+
+    fn run(&mut self, trace: &[Instr]) {
+        ShardedPlane::run(self, trace)
+    }
+
+    fn match_count(&mut self) -> usize {
+        ShardedPlane::match_count(self)
+    }
+
+    fn first_match(&mut self) -> Option<usize> {
+        ShardedPlane::first_match(self)
+    }
+
+    fn last_match(&mut self) -> Option<usize> {
+        ShardedPlane::last_match(self)
+    }
+
+    fn cost(&self) -> ConcurrentCost {
+        ShardedPlane::cost(self)
+    }
+
+    fn reset_cost(&mut self) {
+        ShardedPlane::reset_cost(self)
+    }
+}
+
+/// One shard's worker: owns PEs `[lo, hi)` of every register plane.
+struct ShardWorker<'a> {
+    lo: usize,
+    hi: usize,
+    /// Full plane width (for edge semantics and snapshot indexing).
+    p: usize,
+    /// Per-register slices of this shard (`regs[r][i - lo]`).
+    regs: Vec<&'a mut [i32]>,
+    /// Shared pre-cycle NB snapshot (full plane).
+    snap: &'a [AtomicI32],
+    barrier: &'a Barrier,
+    scratch_a: Vec<i32>,
+    scratch_b: Vec<i32>,
+}
+
+impl ShardWorker<'_> {
+    /// One broadcast macro instruction over this shard. Every worker
+    /// takes the same barrier decisions (they depend only on the shared
+    /// instruction), so the seam protocol can never deadlock.
+    fn step(&mut self, instr: &Instr) {
+        if matches!(instr.opcode, Opcode::Nop) {
+            return;
+        }
+        let neighbor = !matches!(instr.src, Src::Reg(_) | Src::Imm);
+        if neighbor {
+            // Publish this shard's pre-cycle NB values, then rendezvous.
+            let nb = &self.regs[Reg::Nb as usize];
+            for (k, &v) in nb.iter().enumerate() {
+                self.snap[self.lo + k].store(v, Ordering::Relaxed);
+            }
+            self.barrier.wait();
+        }
+        self.exec_range(instr);
+        if neighbor {
+            // Nobody may republish until every reader is done.
+            self.barrier.wait();
+        }
+    }
+
+    /// Execute the instruction over this shard's slice of the Rule 4
+    /// enable range.
+    fn exec_range(&mut self, instr: &Instr) {
+        let start = instr.en_start as usize;
+        let end = (instr.en_end as usize).min(self.p.saturating_sub(1));
+        if start > end {
+            return;
+        }
+        let carry = (instr.en_carry as usize).max(1);
+        // Clip the global range to this shard.
+        let ga = start.max(self.lo);
+        let gb = end.min(self.hi - 1);
+        if ga > gb {
+            return;
+        }
+        if carry == 1 && instr.flags == 0 {
+            self.exec_dense(instr, ga, gb);
+            return;
+        }
+        // Strided / conditional scalar path: first enabled address >= ga
+        // on the global carry chain.
+        let off = (ga - start) % carry;
+        let mut i = if off == 0 { ga } else { ga + (carry - off) };
+        while i <= gb {
+            self.exec_at(i, instr);
+            match i.checked_add(carry) {
+                Some(n) => i = n,
+                None => break,
+            }
+        }
+    }
+
+    /// Dense (`carry == 1`, unconditional) vectorized path over global
+    /// range `[ga, gb]` — the shard-local mirror of the serial engine's
+    /// `step_dense`, with neighbor operands gathered from the snapshot.
+    fn exec_dense(&mut self, instr: &Instr, ga: usize, gb: usize) {
+        use Opcode::*;
+        let len = gb - ga + 1;
+        let la = ga - self.lo;
+        let dst = instr.dst as usize;
+
+        // Shifts read only the destination plane and the immediate.
+        if matches!(instr.opcode, Shr | Shl) {
+            let shift = instr.imm.clamp(0, 31) as u32;
+            let plane = &mut self.regs[dst][la..la + len];
+            if matches!(instr.opcode, Shr) {
+                for v in plane.iter_mut() {
+                    *v >>= shift;
+                }
+            } else {
+                for v in plane.iter_mut() {
+                    *v = v.wrapping_shl(shift);
+                }
+            }
+            return;
+        }
+
+        let is_cmp = instr.opcode.is_cmp();
+        let wr = if is_cmp { Reg::M as usize } else { dst };
+
+        // Stage operands (same discipline as the serial dense path; the
+        // snapshot replaces its hazard-order tricks).
+        if !matches!(instr.opcode, Copy) {
+            self.scratch_a[..len].copy_from_slice(&self.regs[dst][la..la + len]);
+        }
+        match instr.src {
+            Src::Reg(r) => {
+                let r = r as usize;
+                self.scratch_b[..len].copy_from_slice(&self.regs[r][la..la + len]);
+            }
+            Src::Imm => {
+                self.scratch_b[..len].fill(instr.imm);
+            }
+            _ => {
+                let delta = neighbor_delta(instr);
+                for k in 0..len {
+                    let j = (ga + k) as isize + delta;
+                    self.scratch_b[k] = if j >= 0 && (j as usize) < self.p {
+                        self.snap[j as usize].load(Ordering::Relaxed)
+                    } else {
+                        0
+                    };
+                }
+            }
+        }
+        let out = &mut self.regs[wr][la..la + len];
+        let a: &[i32] = if matches!(instr.opcode, Copy) {
+            &[]
+        } else {
+            &self.scratch_a[..len]
+        };
+        apply_slice_op(instr.opcode, a, &self.scratch_b[..len], out);
+    }
+
+    /// Value of `src` as seen by PE `i` (pre-cycle NB via the snapshot).
+    fn src_value(&self, i: usize, instr: &Instr) -> i32 {
+        let snap = |j: usize| self.snap[j].load(Ordering::Relaxed);
+        match instr.src {
+            Src::Reg(r) => self.regs[r as usize][i - self.lo],
+            Src::Imm => instr.imm,
+            Src::Left => {
+                if i >= 1 {
+                    snap(i - 1)
+                } else {
+                    0
+                }
+            }
+            Src::Right => {
+                if i + 1 < self.p {
+                    snap(i + 1)
+                } else {
+                    0
+                }
+            }
+            Src::Up => {
+                let nx = instr.nx as usize;
+                if i >= nx {
+                    snap(i - nx)
+                } else {
+                    0
+                }
+            }
+            Src::Down => {
+                let nx = instr.nx as usize;
+                if nx == 0 {
+                    // nx = 0 reads the PE's own NB (ISA parity).
+                    snap(i)
+                } else if i + nx < self.p {
+                    snap(i + nx)
+                } else {
+                    0
+                }
+            }
+        }
+    }
+
+    /// Scalar execution at global PE `i` (mirror of the serial engine's
+    /// `exec_at`).
+    fn exec_at(&mut self, i: usize, instr: &Instr) {
+        let li = i - self.lo;
+        let m_old = self.regs[Reg::M as usize][li];
+        if instr.flags & F_COND_M != 0 && m_old == 0 {
+            return;
+        }
+        if instr.flags & F_COND_NOT_M != 0 && m_old != 0 {
+            return;
+        }
+        let dst = instr.dst as usize;
+        let a = self.regs[dst][li];
+        let b = self.src_value(i, instr);
+        let shift = instr.imm.clamp(0, 31) as u32;
+        use Opcode::*;
+        match instr.opcode {
+            Nop => {}
+            Copy => self.regs[dst][li] = b,
+            Add => self.regs[dst][li] = a.wrapping_add(b),
+            Sub => self.regs[dst][li] = a.wrapping_sub(b),
+            And => self.regs[dst][li] = a & b,
+            Or => self.regs[dst][li] = a | b,
+            Xor => self.regs[dst][li] = a ^ b,
+            Min => self.regs[dst][li] = a.min(b),
+            Max => self.regs[dst][li] = a.max(b),
+            AbsDiff => self.regs[dst][li] = a.wrapping_sub(b).wrapping_abs(),
+            Mul => self.regs[dst][li] = a.wrapping_mul(b),
+            Shr => self.regs[dst][li] = a >> shift,
+            Shl => self.regs[dst][li] = a.wrapping_shl(shift),
+            CmpLt => self.regs[Reg::M as usize][li] = (a < b) as i32,
+            CmpLe => self.regs[Reg::M as usize][li] = (a <= b) as i32,
+            CmpEq => self.regs[Reg::M as usize][li] = (a == b) as i32,
+            CmpNe => self.regs[Reg::M as usize][li] = (a != b) as i32,
+            CmpGt => self.regs[Reg::M as usize][li] = (a > b) as i32,
+            CmpGe => self.regs[Reg::M as usize][li] = (a >= b) as i32,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bit-plane sharding
+// ---------------------------------------------------------------------
+
+/// A [`BitEngine`] behind the sharded executor: whole 64-PE plane words
+/// are the shard unit, so every bit-serial chain (ripple carries, borrow
+/// compares, shift-and-add multiply) stays word-local and only neighbor
+/// shifts cross seams.
+#[derive(Debug, Clone)]
+pub struct ShardedBitPlane {
+    engine: BitEngine,
+    cfg: ExecConfig,
+}
+
+impl ShardedBitPlane {
+    /// Sharded bit plane over `p` PEs.
+    pub fn new(p: usize, cfg: ExecConfig) -> Self {
+        ShardedBitPlane {
+            engine: BitEngine::new(p),
+            cfg,
+        }
+    }
+
+    /// Wrap an existing bit engine (state and counters carry over).
+    pub fn with_engine(engine: BitEngine, cfg: ExecConfig) -> Self {
+        ShardedBitPlane { engine, cfg }
+    }
+
+    /// The wrapped serial engine.
+    pub fn engine(&self) -> &BitEngine {
+        &self.engine
+    }
+
+    /// The wrapped serial engine, mutably.
+    pub fn engine_mut(&mut self) -> &mut BitEngine {
+        &mut self.engine
+    }
+
+    /// Number of PEs.
+    pub fn len(&self) -> usize {
+        self.engine.len()
+    }
+
+    /// True if the plane has no PEs.
+    pub fn is_empty(&self) -> bool {
+        self.engine.is_empty()
+    }
+
+    /// Load a register plane from words.
+    pub fn load_plane(&mut self, r: Reg, data: &[i32]) {
+        self.engine.load_plane(r, data);
+    }
+
+    /// Read a register plane as words.
+    pub fn read_plane(&self, r: Reg) -> Vec<i32> {
+        self.engine.read_plane(r)
+    }
+
+    /// Full state (same layout as the word engine).
+    pub fn state(&self) -> Vec<i32> {
+        self.engine.state()
+    }
+
+    /// Measured plane-operation count.
+    pub fn plane_ops(&self) -> u64 {
+        self.engine.plane_ops()
+    }
+
+    /// Accumulated macro-level cost.
+    pub fn cost(&self) -> ConcurrentCost {
+        self.engine.cost()
+    }
+
+    /// Rule 6 match count.
+    pub fn match_count(&mut self) -> usize {
+        self.engine.match_count()
+    }
+
+    /// Execute one instruction.
+    pub fn step(&mut self, instr: &Instr) {
+        self.run(std::slice::from_ref(instr));
+    }
+
+    /// Execute a whole macro trace, sharding the packed plane words
+    /// across worker threads when the plane is large enough.
+    pub fn run(&mut self, trace: &[Instr]) {
+        let p = self.engine.len();
+        let words = p.div_ceil(64);
+        let threads = self.cfg.effective_threads(p).min(words.max(1));
+        if threads <= 1 {
+            self.engine.run(trace);
+            return;
+        }
+        // The serial engine's plane-op and cost counters are
+        // data-independent per instruction: reproduce them exactly on a
+        // 1-PE shadow and fold them in.
+        let mut shadow = BitEngine::new(1);
+        shadow.run(trace);
+        self.engine.absorb_accounting(shadow.plane_ops(), shadow.cost());
+
+        let bounds = shard_bounds(words, threads);
+        let snap: Vec<AtomicU64> = std::iter::repeat_with(|| AtomicU64::new(0))
+            .take(W * words)
+            .collect();
+        let barrier = Barrier::new(threads);
+
+        // Partition every (register, bit) plane into per-shard word
+        // slices.
+        let planes = self.engine.planes_raw_mut();
+        let mut shard_planes: Vec<Vec<Vec<&mut [u64]>>> = bounds
+            .iter()
+            .map(|_| (0..N_REGS).map(|_| Vec::with_capacity(W)).collect())
+            .collect();
+        for (r, reg) in planes.iter_mut().enumerate() {
+            for plane in reg.iter_mut() {
+                let mut rest = plane.as_mut_slice();
+                for (s, &(lo, hi)) in bounds.iter().enumerate() {
+                    let (head, tail) = rest.split_at_mut(hi - lo);
+                    shard_planes[s][r].push(head);
+                    rest = tail;
+                }
+            }
+        }
+
+        let snap_ref = &snap;
+        let barrier_ref = &barrier;
+        std::thread::scope(|scope| {
+            for (s, planes) in shard_planes.into_iter().enumerate() {
+                let (w_lo, w_hi) = bounds[s];
+                scope.spawn(move || {
+                    let mut worker = BitShardWorker {
+                        w_lo,
+                        w_hi,
+                        words,
+                        p,
+                        planes,
+                        snap: snap_ref,
+                        barrier: barrier_ref,
+                    };
+                    for instr in trace {
+                        worker.step(instr);
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// One bit-plane shard: owns plane words `[w_lo, w_hi)` (PE addresses
+/// `[64 * w_lo, 64 * w_hi)`) of every register's every bit plane.
+///
+/// The opcode kernels below are deliberate range-scoped mirrors of
+/// [`BitEngine::step`]'s (the serial engine's plane primitives count
+/// `plane_ops` through `&mut self`, so they cannot be borrowed by
+/// workers directly). Any semantic change to a serial kernel must land
+/// here too — `tests/sharded_plane.rs` pins the two bit-for-bit across
+/// shard counts, so a one-sided edit fails the differential suite.
+/// Extracting a shared range-parameterized kernel core (as the word
+/// engines share `apply_slice_op`) is tracked in ROADMAP.md.
+struct BitShardWorker<'a> {
+    w_lo: usize,
+    w_hi: usize,
+    /// Total plane words.
+    words: usize,
+    /// Total PEs.
+    p: usize,
+    /// `planes[r][k]` = this shard's words of register `r`, bit `k`.
+    planes: Vec<Vec<&'a mut [u64]>>,
+    /// Shared pre-cycle NB snapshot: plane `k` word `w` at `k * words + w`.
+    snap: &'a [AtomicU64],
+    barrier: &'a Barrier,
+}
+
+#[inline]
+fn majority(a: u64, b: u64, c: u64) -> u64 {
+    (a & b) | (b & c) | (a & c)
+}
+
+impl BitShardWorker<'_> {
+    fn shard_words(&self) -> usize {
+        self.w_hi - self.w_lo
+    }
+
+    /// Tail mask for the *global* last word (bits >= p are invalid).
+    fn tail_mask(&self) -> u64 {
+        let rem = self.p % 64;
+        if rem == 0 {
+            u64::MAX
+        } else {
+            (1u64 << rem) - 1
+        }
+    }
+
+    /// Mask `plane`'s copy of the global last word, if this shard owns it.
+    fn mask_tail(&self, plane: &mut [u64]) {
+        if self.w_hi == self.words {
+            if let Some(last) = plane.last_mut() {
+                *last &= self.tail_mask();
+            }
+        }
+    }
+
+    fn step(&mut self, instr: &Instr) {
+        if matches!(instr.opcode, Opcode::Nop) {
+            return;
+        }
+        let neighbor = !matches!(instr.src, Src::Reg(_) | Src::Imm);
+        if neighbor {
+            for k in 0..W {
+                let base = k * self.words + self.w_lo;
+                for (j, &v) in self.planes[Reg::Nb as usize][k].iter().enumerate() {
+                    self.snap[base + j].store(v, Ordering::Relaxed);
+                }
+            }
+            self.barrier.wait();
+        }
+        self.exec(instr);
+        if neighbor {
+            self.barrier.wait();
+        }
+    }
+
+    /// Rule 4 + conditional-flags enable words for this shard (a pure
+    /// function of global PE addresses; seams need no communication).
+    fn enable_words(&self, instr: &Instr) -> Vec<u64> {
+        let mut en = vec![0u64; self.shard_words()];
+        let start = instr.en_start as usize;
+        let end = (instr.en_end as usize).min(self.p.saturating_sub(1));
+        let carry = (instr.en_carry as usize).max(1);
+        if start <= end && start < self.p {
+            let ga = start.max(self.w_lo * 64);
+            let gb = end.min(self.w_hi * 64 - 1);
+            if ga <= gb {
+                let off = (ga - start) % carry;
+                let mut i = if off == 0 { ga } else { ga + (carry - off) };
+                while i <= gb {
+                    en[i / 64 - self.w_lo] |= 1 << (i % 64);
+                    match i.checked_add(carry) {
+                        Some(n) => i = n,
+                        None => break,
+                    }
+                }
+            }
+        }
+        if instr.flags & (F_COND_M | F_COND_NOT_M) != 0 {
+            // M != 0 plane over this shard's words.
+            let mut mnz = vec![0u64; self.shard_words()];
+            for k in 0..W {
+                for (o, &m) in mnz.iter_mut().zip(self.planes[Reg::M as usize][k].iter()) {
+                    *o |= m;
+                }
+            }
+            if instr.flags & F_COND_M != 0 {
+                for (e, &m) in en.iter_mut().zip(mnz.iter()) {
+                    *e &= m;
+                }
+            }
+            if instr.flags & F_COND_NOT_M != 0 {
+                for (e, &m) in en.iter_mut().zip(mnz.iter()) {
+                    *e &= !m;
+                }
+            }
+        }
+        en
+    }
+
+    /// This shard's words of NB bit plane `k`, shifted `delta` PEs along
+    /// the plane axis (`out[i] = NB[i - delta]`), read from the shared
+    /// pre-cycle snapshot.
+    fn shifted_from_snap(&self, k: usize, delta: i64) -> Vec<u64> {
+        let base = k * self.words;
+        let snap = |w: usize| self.snap[base + w].load(Ordering::Relaxed);
+        let mut out = vec![0u64; self.shard_words()];
+        if delta == 0 {
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = snap(self.w_lo + j);
+            }
+        } else if (delta.unsigned_abs() as usize) >= self.p {
+            // fully shifted out
+        } else if delta > 0 {
+            let d = delta as usize;
+            let (wd, bd) = (d / 64, d % 64);
+            for (j, o) in out.iter_mut().enumerate() {
+                let w = self.w_lo + j;
+                let mut v = 0u64;
+                if w >= wd {
+                    v = snap(w - wd) << bd;
+                    if bd > 0 && w > wd {
+                        v |= snap(w - wd - 1) >> (64 - bd);
+                    }
+                }
+                *o = v;
+            }
+        } else {
+            let d = (-delta) as usize;
+            let (wd, bd) = (d / 64, d % 64);
+            for (j, o) in out.iter_mut().enumerate() {
+                let w = self.w_lo + j;
+                let mut v = 0u64;
+                if w + wd < self.words {
+                    v = snap(w + wd) >> bd;
+                    if bd > 0 && w + wd + 1 < self.words {
+                        v |= snap(w + wd + 1) << (64 - bd);
+                    }
+                }
+                *o = v;
+            }
+        }
+        self.mask_tail(&mut out);
+        out
+    }
+
+    /// Materialize the W source bit planes over this shard's words.
+    fn src_planes(&self, instr: &Instr) -> Vec<Vec<u64>> {
+        match instr.src {
+            Src::Reg(r) => (0..W).map(|k| self.planes[r as usize][k].to_vec()).collect(),
+            Src::Imm => {
+                let imm = instr.imm as u32;
+                (0..W)
+                    .map(|k| {
+                        let fill = if (imm >> k) & 1 == 1 { u64::MAX } else { 0 };
+                        let mut plane = vec![fill; self.shard_words()];
+                        self.mask_tail(&mut plane);
+                        plane
+                    })
+                    .collect()
+            }
+            // Serial convention (`BitEngine::src_planes`): LEFT shifts the
+            // plane by +1 (`out[i] = NB[i-1]`), RIGHT by -1, UP by +nx,
+            // DOWN by -nx.
+            Src::Left => (0..W).map(|k| self.shifted_from_snap(k, 1)).collect(),
+            Src::Right => (0..W).map(|k| self.shifted_from_snap(k, -1)).collect(),
+            Src::Up => (0..W).map(|k| self.shifted_from_snap(k, instr.nx as i64)).collect(),
+            Src::Down => (0..W).map(|k| self.shifted_from_snap(k, -(instr.nx as i64))).collect(),
+        }
+    }
+
+    /// Merge `new` into this shard's `(r, k)` plane under the enable mask.
+    fn write_masked(&mut self, r: usize, k: usize, new: &[u64], en: &[u64]) {
+        let old = &mut self.planes[r][k];
+        for ((o, &n), &e) in old.iter_mut().zip(new.iter()).zip(en.iter()) {
+            *o = (n & e) | (*o & !e);
+        }
+    }
+
+    /// Signed less-than plane over this shard (borrowless subtract; the
+    /// word-local carry chains are why whole words are the shard unit).
+    fn less_than(&self, a: &[Vec<u64>], b: &[Vec<u64>]) -> Vec<u64> {
+        let n = self.shard_words();
+        let mut carry = vec![u64::MAX; n];
+        let mut sd = vec![0u64; n];
+        for k in 0..W {
+            let mut sum = vec![0u64; n];
+            let mut next = vec![0u64; n];
+            for j in 0..n {
+                let nb = !b[k][j];
+                sum[j] = a[k][j] ^ nb ^ carry[j];
+                next[j] = majority(a[k][j], nb, carry[j]);
+            }
+            carry = next;
+            if k == W - 1 {
+                sd = sum;
+            }
+        }
+        let sa = &a[W - 1];
+        let sb = &b[W - 1];
+        sa.iter()
+            .zip(sb.iter())
+            .zip(sd.iter())
+            .map(|((&x, &y), &d)| d ^ ((x ^ y) & (x ^ d)))
+            .collect()
+    }
+
+    /// Equality plane over this shard.
+    fn equal(&self, a: &[Vec<u64>], b: &[Vec<u64>]) -> Vec<u64> {
+        let n = self.shard_words();
+        let mut eq = vec![u64::MAX; n];
+        for k in 0..W {
+            for j in 0..n {
+                eq[j] &= !(a[k][j] ^ b[k][j]);
+            }
+        }
+        self.mask_tail(&mut eq);
+        eq
+    }
+
+    fn compare(&self, a: &[Vec<u64>], b: &[Vec<u64>], op: Opcode) -> Vec<u64> {
+        use Opcode::*;
+        let mut res = match op {
+            CmpLt => self.less_than(a, b),
+            CmpGe => {
+                let lt = self.less_than(a, b);
+                lt.iter().map(|&x| !x).collect()
+            }
+            CmpEq => self.equal(a, b),
+            CmpNe => {
+                let eq = self.equal(a, b);
+                eq.iter().map(|&x| !x).collect()
+            }
+            CmpLe => {
+                let lt = self.less_than(a, b);
+                let eq = self.equal(a, b);
+                lt.iter().zip(eq.iter()).map(|(&x, &y)| x | y).collect()
+            }
+            CmpGt => {
+                let lt = self.less_than(a, b);
+                let eq = self.equal(a, b);
+                lt.iter().zip(eq.iter()).map(|(&x, &y)| !(x | y)).collect()
+            }
+            _ => unreachable!("compare() called with non-compare opcode"),
+        };
+        self.mask_tail(&mut res);
+        res
+    }
+
+    /// Bit-serial execution of one instruction over this shard's words
+    /// (mirror of `BitEngine::step`; counters live on the coordinator's
+    /// shadow engine).
+    fn exec(&mut self, instr: &Instr) {
+        let en = self.enable_words(instr);
+        let b = self.src_planes(instr);
+        let dst = instr.dst as usize;
+        let a: Vec<Vec<u64>> = (0..W).map(|k| self.planes[dst][k].to_vec()).collect();
+        let n = self.shard_words();
+        use Opcode::*;
+        match instr.opcode {
+            Nop => {}
+            Copy => {
+                for k in 0..W {
+                    self.write_masked(dst, k, &b[k], &en);
+                }
+            }
+            And | Or | Xor => {
+                for k in 0..W {
+                    let f: fn(u64, u64) -> u64 = match instr.opcode {
+                        And => |x, y| x & y,
+                        Or => |x, y| x | y,
+                        _ => |x, y| x ^ y,
+                    };
+                    let r: Vec<u64> = a[k]
+                        .iter()
+                        .zip(b[k].iter())
+                        .map(|(&x, &y)| f(x, y))
+                        .collect();
+                    self.write_masked(dst, k, &r, &en);
+                }
+            }
+            Add => {
+                let mut carry = vec![0u64; n];
+                for k in 0..W {
+                    let mut sum = vec![0u64; n];
+                    let mut next = vec![0u64; n];
+                    for j in 0..n {
+                        sum[j] = a[k][j] ^ b[k][j] ^ carry[j];
+                        next[j] = majority(a[k][j], b[k][j], carry[j]);
+                    }
+                    carry = next;
+                    self.write_masked(dst, k, &sum, &en);
+                }
+            }
+            Sub => {
+                // a + !b + 1 (borrowless two's-complement subtract).
+                let mut carry = vec![u64::MAX; n];
+                for k in 0..W {
+                    let mut sum = vec![0u64; n];
+                    let mut next = vec![0u64; n];
+                    for j in 0..n {
+                        let nb = !b[k][j];
+                        sum[j] = a[k][j] ^ nb ^ carry[j];
+                        next[j] = majority(a[k][j], nb, carry[j]);
+                    }
+                    carry = next;
+                    self.write_masked(dst, k, &sum, &en);
+                }
+            }
+            CmpLt | CmpLe | CmpEq | CmpNe | CmpGt | CmpGe => {
+                let res = self.compare(&a, &b, instr.opcode);
+                let zero = vec![0u64; n];
+                for k in 1..W {
+                    self.write_masked(Reg::M as usize, k, &zero, &en);
+                }
+                self.write_masked(Reg::M as usize, 0, &res, &en);
+            }
+            Min | Max => {
+                let lt = self.less_than(&a, &b);
+                for k in 0..W {
+                    let r: Vec<u64> = if matches!(instr.opcode, Min) {
+                        lt.iter()
+                            .zip(a[k].iter())
+                            .zip(b[k].iter())
+                            .map(|((&t, &x), &y)| (t & x) | (!t & y))
+                            .collect()
+                    } else {
+                        lt.iter()
+                            .zip(a[k].iter())
+                            .zip(b[k].iter())
+                            .map(|((&t, &x), &y)| (t & y) | (!t & x))
+                            .collect()
+                    };
+                    self.write_masked(dst, k, &r, &en);
+                }
+            }
+            AbsDiff => {
+                // d = a - b; then conditional negate by the sign plane.
+                let mut d: Vec<Vec<u64>> = Vec::with_capacity(W);
+                let mut carry = vec![u64::MAX; n];
+                for k in 0..W {
+                    let mut sum = vec![0u64; n];
+                    let mut next = vec![0u64; n];
+                    for j in 0..n {
+                        let nb = !b[k][j];
+                        sum[j] = a[k][j] ^ nb ^ carry[j];
+                        next[j] = majority(a[k][j], nb, carry[j]);
+                    }
+                    carry = next;
+                    d.push(sum);
+                }
+                let neg = d[W - 1].clone();
+                // r = (d ^ neg) + neg (negate where neg, identity else).
+                let mut c = neg.clone();
+                for k in 0..W {
+                    let mut sum = vec![0u64; n];
+                    let mut next = vec![0u64; n];
+                    for j in 0..n {
+                        let x = d[k][j] ^ neg[j];
+                        sum[j] = x ^ c[j];
+                        next[j] = x & c[j];
+                    }
+                    c = next;
+                    self.write_masked(dst, k, &sum, &en);
+                }
+            }
+            Mul => {
+                // Shift-and-add: product += (a << k) & b[k], W rounds.
+                let mut prod: Vec<Vec<u64>> = vec![vec![0u64; n]; W];
+                for k in 0..W {
+                    let mut carry = vec![0u64; n];
+                    for jk in k..W {
+                        let mut sum = vec![0u64; n];
+                        let mut next = vec![0u64; n];
+                        for j in 0..n {
+                            let addend = a[jk - k][j] & b[k][j];
+                            sum[j] = prod[jk][j] ^ addend ^ carry[j];
+                            next[j] = majority(prod[jk][j], addend, carry[j]);
+                        }
+                        carry = next;
+                        prod[jk] = sum;
+                    }
+                }
+                for k in 0..W {
+                    let row = prod[k].clone();
+                    self.write_masked(dst, k, &row, &en);
+                }
+            }
+            Shr => {
+                let s = instr.imm.clamp(0, 31) as usize;
+                let sign = a[W - 1].clone();
+                for k in 0..W {
+                    let r = if k + s < W { a[k + s].clone() } else { sign.clone() };
+                    self.write_masked(dst, k, &r, &en);
+                }
+            }
+            Shl => {
+                let s = instr.imm.clamp(0, 31) as usize;
+                for k in 0..W {
+                    let r = if k >= s { a[k - s].clone() } else { vec![0u64; n] };
+                    self.write_masked(dst, k, &r, &en);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn par(threads: usize) -> ExecConfig {
+        ExecConfig {
+            threads,
+            min_shard_pes: 1,
+        }
+    }
+
+    #[test]
+    fn shard_bounds_cover_and_balance() {
+        for n in [1usize, 2, 7, 64, 65, 100] {
+            for s in 1..=n.min(8) {
+                let b = shard_bounds(n, s);
+                assert_eq!(b.len(), s);
+                assert_eq!(b[0].0, 0);
+                assert_eq!(b[s - 1].1, n);
+                for w in b.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                }
+                for &(lo, hi) in &b {
+                    assert!(hi > lo);
+                    assert!(hi - lo <= n / s + 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn effective_threads_respects_floor() {
+        let cfg = ExecConfig {
+            threads: 8,
+            min_shard_pes: 100,
+        };
+        assert_eq!(cfg.effective_threads(0), 1);
+        assert_eq!(cfg.effective_threads(99), 1);
+        assert_eq!(cfg.effective_threads(250), 2);
+        assert_eq!(cfg.effective_threads(100_000), 8);
+        assert_eq!(ExecConfig::serial().effective_threads(1 << 20), 1);
+    }
+
+    #[test]
+    fn sharded_neighbor_shift_matches_serial() {
+        // NB <- LEFT over the whole plane: the seam PE of every shard
+        // must read its left neighbor's pre-cycle value from the other
+        // shard.
+        let p = 103;
+        let vals: Vec<i32> = (0..p as i32).map(|v| v * 3 - 50).collect();
+        let trace = vec![
+            Instr::all(Opcode::Copy, Src::Left, Reg::Nb),
+            Instr::all(Opcode::Add, Src::Right, Reg::Nb),
+        ];
+        let mut serial = WordEngine::new(p, 16);
+        serial.load_plane(Reg::Nb, &vals);
+        serial.run(&trace);
+        for threads in [2usize, 3, 7] {
+            let mut sharded = ShardedPlane::new(p, 16, par(threads));
+            sharded.load_plane(Reg::Nb, &vals);
+            sharded.run(&trace);
+            assert_eq!(sharded.state(), serial.state(), "threads={threads}");
+            assert_eq!(sharded.cost(), serial.cost(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn sharded_strided_conditional_matches_serial() {
+        let p = 61;
+        let vals: Vec<i32> = (0..p as i32).map(|v| (v * 7) % 23 - 11).collect();
+        let trace = vec![
+            Instr::all(Opcode::CmpGt, Src::Imm, Reg::Nb).imm(0),
+            Instr::all(Opcode::Add, Src::Imm, Reg::Nb).imm(100).flags(F_COND_M),
+            Instr::all(Opcode::Copy, Src::Imm, Reg::D0).imm(9).range(2, 57, 5),
+            Instr::all(Opcode::Mul, Src::Reg(Reg::Nb), Reg::D0).range(1, 60, 3),
+        ];
+        let mut serial = WordEngine::new(p, 16);
+        serial.load_plane(Reg::Nb, &vals);
+        serial.run(&trace);
+        for threads in [2usize, 3, 7] {
+            let mut sharded = ShardedPlane::new(p, 16, par(threads));
+            sharded.load_plane(Reg::Nb, &vals);
+            sharded.run(&trace);
+            assert_eq!(sharded.state(), serial.state(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn sharded_readouts_match_serial() {
+        let p = 97;
+        let vals: Vec<i32> = (0..p as i32).map(|v| v % 13).collect();
+        let mark = Instr::all(Opcode::CmpEq, Src::Imm, Reg::Nb).imm(5);
+        let mut serial = WordEngine::new(p, 16);
+        serial.load_plane(Reg::Nb, &vals);
+        serial.step(&mark);
+        let mut sharded = ShardedPlane::new(p, 16, par(3));
+        sharded.load_plane(Reg::Nb, &vals);
+        sharded.run(std::slice::from_ref(&mark));
+        assert_eq!(sharded.match_count(), serial.match_count());
+        assert_eq!(sharded.first_match(), serial.first_match());
+        assert_eq!(sharded.last_match(), serial.last_match());
+        assert_eq!(sharded.cost(), serial.cost());
+    }
+
+    #[test]
+    fn sharded_bit_plane_matches_serial() {
+        // 3 words + a partial tail word; shards split mid-plane.
+        let p = 200;
+        let vals: Vec<i32> = (0..p as i32).map(|v| v * 17 - 1000).collect();
+        let trace = vec![
+            Instr::all(Opcode::Copy, Src::Left, Reg::Op),
+            Instr::all(Opcode::Add, Src::Reg(Reg::Nb), Reg::Op),
+            Instr::all(Opcode::CmpGt, Src::Imm, Reg::Op).imm(100),
+            Instr::all(Opcode::Sub, Src::Imm, Reg::Op).imm(3).flags(F_COND_M),
+        ];
+        let mut serial = BitEngine::new(p);
+        serial.load_plane(Reg::Nb, &vals);
+        serial.run(&trace);
+        for threads in [2usize, 3] {
+            let mut sharded = ShardedBitPlane::new(p, par(threads));
+            sharded.load_plane(Reg::Nb, &vals);
+            sharded.run(&trace);
+            assert_eq!(sharded.state(), serial.state(), "threads={threads}");
+            assert_eq!(sharded.plane_ops(), serial.plane_ops(), "threads={threads}");
+            assert_eq!(sharded.cost(), serial.cost(), "threads={threads}");
+        }
+    }
+}

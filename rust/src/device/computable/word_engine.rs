@@ -10,6 +10,139 @@
 use super::isa::{Instr, Opcode, Reg, Src, F_COND_M, F_COND_NOT_M, N_REGS};
 use crate::cycles::ConcurrentCost;
 
+/// The word-plane execution surface shared by the serial [`WordEngine`]
+/// and the sharded executor
+/// ([`ShardedPlane`](super::sharded::ShardedPlane)). Algorithms written
+/// against this trait (the `crate::algos` reductions, sort, threshold,
+/// histogram) run unchanged on either, so the serve path can swap the
+/// parallel plane in without touching algorithm code.
+pub trait PePlane {
+    /// Number of PEs.
+    fn len(&self) -> usize;
+
+    /// True if the plane has no PEs.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Load a whole register plane (bulk exclusive write).
+    fn load_plane(&mut self, r: Reg, data: &[i32]);
+
+    /// Read-only view of a register plane.
+    fn plane(&self, r: Reg) -> &[i32];
+
+    /// Mutable view of a register plane (exclusive-bus writes).
+    fn plane_mut(&mut self, r: Reg) -> &mut [i32];
+
+    /// Execute a whole macro trace.
+    fn run(&mut self, trace: &[Instr]);
+
+    /// Rule 6 readout: number of PEs asserting the match line.
+    fn match_count(&mut self) -> usize;
+
+    /// Rule 6 readout: first PE asserting the match line.
+    fn first_match(&mut self) -> Option<usize>;
+
+    /// Rule 6 readout: last PE asserting the match line.
+    fn last_match(&mut self) -> Option<usize>;
+
+    /// Accumulated cost.
+    fn cost(&self) -> ConcurrentCost;
+
+    /// Reset the cost counters.
+    fn reset_cost(&mut self);
+}
+
+/// Apply `opcode` elementwise over staged operand slices: `out[k] =
+/// op(a[k], b[k])` (compares write 0/1). Shared by the serial dense path
+/// and the per-shard dense path of the parallel executor, so the two can
+/// never diverge. `a` is ignored by `Copy` (callers may pass `&[]`);
+/// shifts are handled by the callers in place and must not reach here.
+pub(crate) fn apply_slice_op(opcode: Opcode, a: &[i32], b: &[i32], out: &mut [i32]) {
+    use Opcode::*;
+    let len = out.len();
+    match opcode {
+        Copy => out.copy_from_slice(b),
+        Add => {
+            for k in 0..len {
+                out[k] = a[k].wrapping_add(b[k]);
+            }
+        }
+        Sub => {
+            for k in 0..len {
+                out[k] = a[k].wrapping_sub(b[k]);
+            }
+        }
+        And => {
+            for k in 0..len {
+                out[k] = a[k] & b[k];
+            }
+        }
+        Or => {
+            for k in 0..len {
+                out[k] = a[k] | b[k];
+            }
+        }
+        Xor => {
+            for k in 0..len {
+                out[k] = a[k] ^ b[k];
+            }
+        }
+        Min => {
+            for k in 0..len {
+                out[k] = a[k].min(b[k]);
+            }
+        }
+        Max => {
+            for k in 0..len {
+                out[k] = a[k].max(b[k]);
+            }
+        }
+        AbsDiff => {
+            for k in 0..len {
+                out[k] = a[k].wrapping_sub(b[k]).wrapping_abs();
+            }
+        }
+        Mul => {
+            for k in 0..len {
+                out[k] = a[k].wrapping_mul(b[k]);
+            }
+        }
+        Shr | Shl => unreachable!("shifts are applied in place by the callers"),
+        CmpLt => {
+            for k in 0..len {
+                out[k] = (a[k] < b[k]) as i32;
+            }
+        }
+        CmpLe => {
+            for k in 0..len {
+                out[k] = (a[k] <= b[k]) as i32;
+            }
+        }
+        CmpEq => {
+            for k in 0..len {
+                out[k] = (a[k] == b[k]) as i32;
+            }
+        }
+        CmpNe => {
+            for k in 0..len {
+                out[k] = (a[k] != b[k]) as i32;
+            }
+        }
+        CmpGt => {
+            for k in 0..len {
+                out[k] = (a[k] > b[k]) as i32;
+            }
+        }
+        CmpGe => {
+            for k in 0..len {
+                out[k] = (a[k] >= b[k]) as i32;
+            }
+        }
+        Nop => {}
+    }
+}
+
 /// The word-plane engine.
 #[derive(Debug, Clone)]
 pub struct WordEngine {
@@ -236,97 +369,6 @@ impl WordEngine {
             return false;
         }
 
-        // Gather the operand window. For register/imm sources this is a
-        // plane slice or a broadcast; for neighbor sources a shifted slice
-        // of NB with zero edges.
-        macro_rules! apply {
-            ($a:expr, $b:expr, $out:expr) => {{
-                let a = $a;
-                let b = $b;
-                let out = $out;
-                match instr.opcode {
-                    Copy => out.copy_from_slice(b),
-                    Add => {
-                        for k in 0..len {
-                            out[k] = a[k].wrapping_add(b[k]);
-                        }
-                    }
-                    Sub => {
-                        for k in 0..len {
-                            out[k] = a[k].wrapping_sub(b[k]);
-                        }
-                    }
-                    And => {
-                        for k in 0..len {
-                            out[k] = a[k] & b[k];
-                        }
-                    }
-                    Or => {
-                        for k in 0..len {
-                            out[k] = a[k] | b[k];
-                        }
-                    }
-                    Xor => {
-                        for k in 0..len {
-                            out[k] = a[k] ^ b[k];
-                        }
-                    }
-                    Min => {
-                        for k in 0..len {
-                            out[k] = a[k].min(b[k]);
-                        }
-                    }
-                    Max => {
-                        for k in 0..len {
-                            out[k] = a[k].max(b[k]);
-                        }
-                    }
-                    AbsDiff => {
-                        for k in 0..len {
-                            out[k] = a[k].wrapping_sub(b[k]).wrapping_abs();
-                        }
-                    }
-                    Mul => {
-                        for k in 0..len {
-                            out[k] = a[k].wrapping_mul(b[k]);
-                        }
-                    }
-                    Shr | Shl => unreachable!("handled before apply!"),
-                    CmpLt => {
-                        for k in 0..len {
-                            out[k] = (a[k] < b[k]) as i32;
-                        }
-                    }
-                    CmpLe => {
-                        for k in 0..len {
-                            out[k] = (a[k] <= b[k]) as i32;
-                        }
-                    }
-                    CmpEq => {
-                        for k in 0..len {
-                            out[k] = (a[k] == b[k]) as i32;
-                        }
-                    }
-                    CmpNe => {
-                        for k in 0..len {
-                            out[k] = (a[k] != b[k]) as i32;
-                        }
-                    }
-                    CmpGt => {
-                        for k in 0..len {
-                            out[k] = (a[k] > b[k]) as i32;
-                        }
-                    }
-                    CmpGe => {
-                        for k in 0..len {
-                            out[k] = (a[k] >= b[k]) as i32;
-                        }
-                    }
-                    Nop => {}
-                }
-            }};
-        }
-
         // Shifts only involve `a` and the immediate — handle in place.
         if matches!(instr.opcode, Shr | Shl) {
             let shift = instr.imm.clamp(0, 31) as u32;
@@ -375,7 +417,12 @@ impl WordEngine {
             }
         }
         let out = &mut self.planes[wr * p + start..wr * p + end + 1];
-        apply!(&self.scratch_a[..len], &self.scratch_b[..len], out);
+        let a: &[i32] = if matches!(instr.opcode, Copy) {
+            &[]
+        } else {
+            &self.scratch_a[..len]
+        };
+        apply_slice_op(instr.opcode, a, &self.scratch_b[..len], out);
         true
     }
 
@@ -452,6 +499,67 @@ impl WordEngine {
     pub fn set_state(&mut self, state: &[i32]) {
         assert_eq!(state.len(), self.planes.len());
         self.planes.copy_from_slice(state);
+    }
+
+    /// Full flat plane storage (`[r * p + i]`), for the sharded executor
+    /// to partition into per-worker slices.
+    pub(crate) fn planes_raw_mut(&mut self) -> &mut [i32] {
+        &mut self.planes
+    }
+
+    /// Accounting word width (the sharded executor charges the same
+    /// per-instruction cost as the serial path).
+    pub(crate) fn word_width(&self) -> u64 {
+        self.word_width
+    }
+
+    /// Fold externally computed cost into the counters (the sharded
+    /// executor's per-trace accounting; cost is data-independent, so the
+    /// counters stay bit-identical to a serial run).
+    pub(crate) fn account(&mut self, cost: ConcurrentCost) {
+        self.cost += cost;
+    }
+}
+
+impl PePlane for WordEngine {
+    fn len(&self) -> usize {
+        WordEngine::len(self)
+    }
+
+    fn load_plane(&mut self, r: Reg, data: &[i32]) {
+        WordEngine::load_plane(self, r, data)
+    }
+
+    fn plane(&self, r: Reg) -> &[i32] {
+        WordEngine::plane(self, r)
+    }
+
+    fn plane_mut(&mut self, r: Reg) -> &mut [i32] {
+        WordEngine::plane_mut(self, r)
+    }
+
+    fn run(&mut self, trace: &[Instr]) {
+        WordEngine::run(self, trace)
+    }
+
+    fn match_count(&mut self) -> usize {
+        WordEngine::match_count(self)
+    }
+
+    fn first_match(&mut self) -> Option<usize> {
+        WordEngine::first_match(self)
+    }
+
+    fn last_match(&mut self) -> Option<usize> {
+        WordEngine::last_match(self)
+    }
+
+    fn cost(&self) -> ConcurrentCost {
+        WordEngine::cost(self)
+    }
+
+    fn reset_cost(&mut self) {
+        WordEngine::reset_cost(self)
     }
 }
 

@@ -16,13 +16,20 @@
 //! * `runtime-check`            — execute a trace on the active backend
 //!   (the pure-Rust interpreter by default; PJRT with `--features pjrt`)
 //!   and cross-check it against the word engine
+//!
+//! `pool`, `serve`, `netbench`, and `runtime-check` accept `--threads N`
+//! to run large dense PE planes sharded across N std worker threads
+//! (default 1 = the serial engines).
 
 use std::time::{Duration, Instant};
 
 use cpm::cli::Cli;
-use cpm::coordinator::{Addressed, ArrayJob, CpmServer, Request};
+use cpm::coordinator::{
+    Addressed, ArrayJob, CpmServer, Request, DEFAULT_ARRAY, DEFAULT_CORPUS, DEFAULT_TABLE,
+    DEFAULT_TENANT,
+};
 use cpm::device::computable::isa::N_REGS;
-use cpm::device::computable::{Instr, Opcode, Reg, Src};
+use cpm::device::computable::{ExecConfig, Instr, Opcode, Reg, Src};
 use cpm::device::control::ControlUnit;
 use cpm::net::{CpmClient, NetConfig, NetServer, WindowConfig};
 use cpm::physics;
@@ -128,6 +135,7 @@ fn pool_cmd(cli: &Cli) -> cpm::Result<()> {
         capacity_pes: 1 << 18,
         tenant_quota_pes: 1 << 17,
         corpus_slack: 1024,
+        exec: exec_config(cli),
     });
     let schema = Schema::new(&[("price", 2), ("qty", 1)])?;
     pool.create_table("alice", "orders", schema, rows)?;
@@ -206,14 +214,46 @@ fn pool_cmd(cli: &Cli) -> cpm::Result<()> {
     Ok(())
 }
 
+/// Plane-execution policy from the CLI: `--threads N` (default 1, i.e.
+/// the serial engines).
+fn exec_config(cli: &Cli) -> ExecConfig {
+    ExecConfig::with_threads(cli.get("threads", 1usize))
+}
+
+/// Resident scratch-array size on the network demo server (large enough
+/// that array jobs run on the sharded plane when `--threads` > 1).
+const DEMO_ARRAY_WORDS: usize = 1 << 18;
+
 /// The demo server every network subcommand serves: the `sql` demo table
-/// (`default/table`, price/qty/region) plus a small text corpus
-/// (`default/corpus`).
-fn demo_server(rows: usize, seed: u64) -> cpm::Result<CpmServer> {
+/// (`default/table`, price/qty/region), a small text corpus
+/// (`default/corpus`), and a resident scratch array (`default/array`)
+/// whose jobs exercise the dense compute path.
+fn demo_server(rows: usize, seed: u64, exec: ExecConfig) -> cpm::Result<CpmServer> {
     let schema = Schema::new(&[("price", 2), ("qty", 1), ("region", 1)])?;
-    let corpus = b"the quick brown fox jumps over the lazy dog; pack my box with five dozen jugs";
-    let mut server = CpmServer::new(schema, rows, corpus, 1 << 20);
+    let corpus: &[u8] =
+        b"the quick brown fox jumps over the lazy dog; pack my box with five dozen jugs";
     let mut rng = Rng::new(seed);
+    let corpus_slack = 1024usize;
+    let table_pes = schema.row_size() * rows.max(1);
+    let capacity = table_pes + corpus.len() + corpus_slack + DEMO_ARRAY_WORDS + 64;
+    let mut pool = DevicePool::new(PoolConfig {
+        capacity_pes: capacity,
+        tenant_quota_pes: capacity,
+        corpus_slack,
+        exec,
+    });
+    pool.create_table(DEFAULT_TENANT, DEFAULT_TABLE, schema, rows)?;
+    pool.create_corpus(DEFAULT_TENANT, DEFAULT_CORPUS, corpus)?;
+    pool.create_array(
+        DEFAULT_TENANT,
+        DEFAULT_ARRAY,
+        &rng.vec_i32(DEMO_ARRAY_WORDS, 0, 1000),
+        DEMO_ARRAY_WORDS,
+    )?;
+    pool.pin(DEFAULT_TENANT, DEFAULT_TABLE, true)?;
+    pool.pin(DEFAULT_TENANT, DEFAULT_CORPUS, true)?;
+    pool.pin(DEFAULT_TENANT, DEFAULT_ARRAY, true)?;
+    let mut server = CpmServer::with_pool(pool, 1 << 20);
     let table_rows: Vec<Vec<u64>> = (0..rows)
         .map(|_| vec![rng.below(10_000), rng.below(100), rng.below(8)])
         .collect();
@@ -258,17 +298,20 @@ fn serve_cmd(cli: &Cli) -> cpm::Result<()> {
     let addr = cli.get_str("addr").unwrap_or("127.0.0.1:7070");
     let rows = cli.get("rows", 4096usize);
     let secs = cli.get("secs", 0u64);
-    let server = demo_server(rows, cli.get("seed", 42u64))?;
+    let exec = exec_config(cli);
+    let server = demo_server(rows, cli.get("seed", 42u64), exec)?;
     let cfg = net_config(cli, addr);
     let window_us = cfg.window.max_delay.as_micros();
     let max_batch = cfg.window.max_batch;
     let net = NetServer::spawn(server, cfg)?;
     println!(
-        "cpm serving on {} (window {} us, max batch {}); demo devices: default/table ({} rows), default/corpus",
+        "cpm serving on {} (window {} us, max batch {}, {} exec thread(s)); demo devices: default/table ({} rows), default/corpus, default/array ({} words)",
         net.addr(),
         window_us,
         max_batch,
-        rows
+        exec.threads,
+        rows,
+        DEMO_ARRAY_WORDS
     );
     if secs == 0 {
         println!("running until killed (pass --secs N to auto-stop and print metrics)");
@@ -354,7 +397,8 @@ fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
     let requests = cli.get("requests", 1024usize);
     let clients = cli.get("clients", 8usize).max(1);
     let rows = cli.get("rows", 4096usize);
-    let server = demo_server(rows, cli.get("seed", 42u64))?;
+    let exec = exec_config(cli);
+    let server = demo_server(rows, cli.get("seed", 42u64), exec)?;
     let cfg = net_config(cli, "127.0.0.1:0");
     let window_us = cfg.window.max_delay.as_micros();
     let max_batch = cfg.window.max_batch;
@@ -367,15 +411,18 @@ fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
     for c in 0..clients {
         handles.push(std::thread::spawn(move || -> cpm::Result<usize> {
             let mut client = CpmClient::connect(addr)?;
-            // Read-only mix (hot SQL templates + repeated searches) so
-            // concurrent interleavings cannot change any response.
+            // Read-only mix (hot SQL templates, repeated searches, and
+            // resident-array jobs on the dense compute path — the part
+            // `--threads` accelerates) so concurrent interleavings
+            // cannot change any response.
             let ops: Vec<Request> = (0..per_client)
-                .map(|i| match (c + i) % 3 {
+                .map(|i| match (c + i) % 4 {
                     0 => {
                         let cap = 1000 * (1 + i % 8);
                         Request::Sql(format!("SELECT COUNT WHERE price < {cap}"))
                     }
                     1 => Request::Search(b"the".to_vec()),
+                    2 => Request::Array(ArrayJob::Threshold(500)),
                     _ => Request::Sql("SELECT COUNT WHERE qty > 50 OR region = 0".into()),
                 })
                 .collect();
@@ -396,9 +443,12 @@ fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
         elapsed.as_secs_f64() * 1e3
     );
     print_wire_metrics(&server);
-    println!("markdown row (max_batch | window_us | requests | req/s | mean window | coalesced):");
     println!(
-        "| {} | {} | {} | {:.0} | {:.2} | {} |",
+        "markdown row (threads | max_batch | window_us | requests | req/s | mean window | coalesced):"
+    );
+    println!(
+        "| {} | {} | {} | {} | {:.0} | {:.2} | {} |",
+        exec.threads,
         max_batch,
         window_us,
         total,
@@ -430,6 +480,10 @@ fn physics_cmd(_cli: &Cli) -> cpm::Result<()> {
 fn runtime_check(cli: &Cli) -> cpm::Result<()> {
     let dir = cli.get_str("artifacts").unwrap_or("artifacts").to_string();
     let mut backend = Backend::new(&dir)?;
+    // The pure-Rust interpreter honors `--threads`; the PJRT backend
+    // parallelizes inside XLA instead.
+    #[cfg(not(feature = "pjrt"))]
+    backend.set_exec(exec_config(cli));
     let shapes = backend.available_traces();
     println!("trace shapes from {dir}: {shapes:?}");
     let shape = shapes

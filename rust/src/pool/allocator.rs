@@ -12,6 +12,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::device::computable::ExecConfig;
 use crate::device::mutable_search::MutableSearchableMemory;
 use crate::error::{CpmError, Result};
 use crate::sql::{Schema, Table};
@@ -28,6 +29,11 @@ pub struct PoolConfig {
     /// have room to shift into (§4's copy-free edits) — the slack policy
     /// the server previously hard-coded.
     pub corpus_slack: usize,
+    /// Plane-execution policy for compute on this pool's devices: the
+    /// batch executor runs dense computable-memory work on a
+    /// [`ShardedPlane`](crate::device::computable::ShardedPlane) with
+    /// this configuration (`threads = 1` keeps the serial engines).
+    pub exec: ExecConfig,
 }
 
 impl Default for PoolConfig {
@@ -36,6 +42,7 @@ impl Default for PoolConfig {
             capacity_pes: 1 << 22,
             tenant_quota_pes: 1 << 22,
             corpus_slack: 4096,
+            exec: ExecConfig::default(),
         }
     }
 }
@@ -475,6 +482,7 @@ mod tests {
             // path; quota tests override per tenant.
             tenant_quota_pes: capacity * 4,
             corpus_slack: 8,
+            ..PoolConfig::default()
         })
     }
 

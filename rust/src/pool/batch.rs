@@ -23,7 +23,7 @@ use crate::algos::{histogram, reduce, sort, threshold};
 use crate::coordinator::scheduler::{OverlapScheduler, TaskPhase};
 use crate::coordinator::server::{default_device, Addressed, ArrayJob, Request, Response};
 use crate::cycles::ConcurrentCost;
-use crate::device::computable::{Reg, WordEngine};
+use crate::device::computable::{ExecConfig, Reg, ShardedPlane};
 use crate::error::{CpmError, Result};
 use crate::sql::Query;
 
@@ -87,6 +87,10 @@ impl<'a> AddressedRef<'a> {
 pub struct BatchExecutor {
     /// Largest ad-hoc array a computable-memory job may load.
     engine_capacity: usize,
+    /// Plane-execution policy for computable-memory work: large dense
+    /// planes run sharded across std threads
+    /// ([`ShardedPlane`]); `threads = 1` is the serial engines.
+    exec: ExecConfig,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -177,9 +181,23 @@ fn push_phase(report: &mut BatchReport, tenant: &str, cost: ConcurrentCost) {
 }
 
 impl BatchExecutor {
-    /// Executor with the given ad-hoc computable-memory capacity.
+    /// Executor with the given ad-hoc computable-memory capacity and
+    /// serial plane execution.
     pub fn new(engine_capacity: usize) -> Self {
-        BatchExecutor { engine_capacity }
+        BatchExecutor::with_exec(engine_capacity, ExecConfig::default())
+    }
+
+    /// Executor with an explicit plane-execution policy.
+    pub fn with_exec(engine_capacity: usize, exec: ExecConfig) -> Self {
+        BatchExecutor {
+            engine_capacity,
+            exec,
+        }
+    }
+
+    /// Change the plane-execution policy (e.g. the CLI `--threads` flag).
+    pub fn set_exec(&mut self, exec: ExecConfig) {
+        self.exec = exec;
     }
 
     /// Execute a batch. Responses align with `batch` order; the report
@@ -424,7 +442,7 @@ impl BatchExecutor {
             Err(e) => return (Err(e), ConcurrentCost::default()),
         };
         let n = values.len();
-        let mut e = WordEngine::new(n.max(1), 16);
+        let mut e = ShardedPlane::new(n.max(1), 16, self.exec);
         e.load_plane(Reg::Nb, &values);
         // The array is resident in the PE plane between jobs: its load was
         // paid at admission, so a job charges execution cycles only.
@@ -455,7 +473,7 @@ impl BatchExecutor {
         (Ok(r), e.cost())
     }
 
-    fn engine_for(&self, values: &[i32]) -> Result<WordEngine> {
+    fn engine_for(&self, values: &[i32]) -> Result<ShardedPlane> {
         if values.len() > self.engine_capacity {
             return Err(CpmError::Coordinator(format!(
                 "array of {} exceeds device capacity {}",
@@ -463,7 +481,7 @@ impl BatchExecutor {
                 self.engine_capacity
             )));
         }
-        let mut e = WordEngine::new(values.len().max(1), 16);
+        let mut e = ShardedPlane::new(values.len().max(1), 16, self.exec);
         e.load_plane(Reg::Nb, values);
         Ok(e)
     }
@@ -481,6 +499,7 @@ mod tests {
             capacity_pes: 1 << 16,
             tenant_quota_pes: 1 << 16,
             corpus_slack: 64,
+            ..PoolConfig::default()
         });
         let schema = Schema::new(&[("price", 2), ("qty", 1)]).unwrap();
         pool.create_table(DEFAULT_TENANT, DEFAULT_TABLE, schema, 64)

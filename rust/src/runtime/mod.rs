@@ -6,7 +6,8 @@
 //!
 //! * [`TraceInterpreter`] — the default: a pure-Rust executor that decodes
 //!   wire-format instruction words and steps them through the
-//!   [`WordEngine`]. Dependency-free and offline; it honors the same
+//!   [`WordEngine`](crate::device::computable::WordEngine)
+//!   (sharded across threads per [`ExecConfig`]). Dependency-free and offline; it honors the same
 //!   dispatch-window discipline (pad-to-T, chain windows) as the compiled
 //!   backend, so the dispatch-amortization accounting stays comparable.
 //! * [`pjrt::PjrtBackend`] (feature `pjrt`) — loads the AOT-compiled
@@ -21,7 +22,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::device::computable::isa::{Instr, INSTR_WIDTH, N_REGS};
-use crate::device::computable::{Reg, WordEngine};
+use crate::device::computable::{ExecConfig, Reg, ShardedPlane};
 use crate::error::{CpmError, Result};
 
 #[cfg(feature = "pjrt")]
@@ -93,6 +94,11 @@ pub(crate) fn encode_window(trace: &[Instr], t: usize) -> Vec<i32> {
     words
 }
 
+/// Per-shard PE floor for the interpreter's step-at-a-time execution:
+/// one scoped spawn/join per instruction only pays off on planes well
+/// past the general [`ExecConfig`] default.
+const STEP_MIN_SHARD_PES: usize = 1 << 16;
+
 /// Dispatch-window shapes the interpreter offers when no artifact
 /// directory is present (it needs no artifacts — any shape executes).
 const DEFAULT_TRACE_SHAPES: &[TraceShape] = &[
@@ -104,7 +110,8 @@ const DEFAULT_TRACE_SHAPES: &[TraceShape] = &[
 
 /// The pure-Rust trace executor (default backend).
 ///
-/// Functionally it is the [`WordEngine`] behind the compiled backend's
+/// Functionally it is the word engine (behind [`ShardedPlane`], so big
+/// planes parallelize) driven through the compiled backend's
 /// dispatch API: every instruction goes through the wire encoding
 /// (`Instr::encode` → `Instr::decode`), traces are NOP-padded to the
 /// shape's window length, and longer traces are chained window by window —
@@ -112,6 +119,7 @@ const DEFAULT_TRACE_SHAPES: &[TraceShape] = &[
 #[derive(Debug)]
 pub struct TraceInterpreter {
     dir: PathBuf,
+    exec: ExecConfig,
     /// Dispatches issued (perf accounting; one per trace window or step).
     pub dispatches: u64,
 }
@@ -120,10 +128,22 @@ impl TraceInterpreter {
     /// Create an interpreter rooted at the artifact directory (used only
     /// to advertise the same shapes a compiled backend would offer).
     pub fn new<P: AsRef<Path>>(artifact_dir: P) -> Result<Self> {
+        Self::with_exec(artifact_dir, ExecConfig::default())
+    }
+
+    /// Interpreter with an explicit plane-execution policy: dispatch
+    /// windows on big planes execute on the sharded plane.
+    pub fn with_exec<P: AsRef<Path>>(artifact_dir: P, exec: ExecConfig) -> Result<Self> {
         Ok(TraceInterpreter {
             dir: artifact_dir.as_ref().to_path_buf(),
+            exec,
             dispatches: 0,
         })
+    }
+
+    /// Change the plane-execution policy.
+    pub fn set_exec(&mut self, exec: ExecConfig) {
+        self.exec = exec;
     }
 
     /// Ensure the trace executable for `shape` is available (always is —
@@ -169,7 +189,17 @@ impl TraceInterpreter {
         words: &[i32],
     ) -> Result<(Vec<i32>, Vec<i32>)> {
         assert_eq!(state.len(), N_REGS * p);
-        let mut engine = WordEngine::new(p, 32);
+        // The dispatch API requires a match count after *every*
+        // instruction, so the window executes step by step — each
+        // parallel step pays one scoped spawn/join. Raise the per-shard
+        // floor so sharding only engages where a single step outweighs
+        // that orchestration cost; smaller planes stay serial even when
+        // `--threads` asks for more.
+        let exec = ExecConfig {
+            min_shard_pes: self.exec.min_shard_pes.max(STEP_MIN_SHARD_PES),
+            ..self.exec
+        };
+        let mut engine = ShardedPlane::new(p, 32, exec);
         engine.set_state(state);
         let mut counts = Vec::with_capacity(words.len() / INSTR_WIDTH);
         for chunk in words.chunks_exact(INSTR_WIDTH) {
@@ -248,7 +278,7 @@ pub fn unpad_state(state: &[i32], target_p: usize, p: usize) -> Vec<i32> {
 mod tests {
     use super::*;
     use crate::device::computable::isa::Opcode;
-    use crate::device::computable::Src;
+    use crate::device::computable::{Src, WordEngine};
 
     #[test]
     fn pad_unpad_roundtrip() {

@@ -33,6 +33,7 @@ fn build_server() -> CpmServer {
         capacity_pes: 1 << 18,
         tenant_quota_pes: 1 << 14,
         corpus_slack: 64,
+        ..PoolConfig::default()
     });
     for t in 0..CLIENTS {
         let content = format!("alpha beta gamma alpha delta {}", tenant(t));

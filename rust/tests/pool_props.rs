@@ -49,6 +49,7 @@ fn pool_allocator_invariants() {
                 capacity_pes: capacity,
                 tenant_quota_pes: quota,
                 corpus_slack: 64,
+                ..PoolConfig::default()
             });
             let schema = Schema::new(&[("x", 2)]).unwrap();
             for (k, &(op, sz, t)) in ops.iter().enumerate() {
@@ -160,6 +161,7 @@ fn pool_server() -> CpmServer {
         capacity_pes: 1 << 16,
         tenant_quota_pes: 1 << 16,
         corpus_slack: 256,
+        ..PoolConfig::default()
     });
     let schema = Schema::new(&[("price", 2), ("qty", 1)]).unwrap();
     pool.create_table(DEFAULT_TENANT, DEFAULT_TABLE, schema, 256)
@@ -261,6 +263,7 @@ fn corpus_capacity_errors_do_not_corrupt_state() {
             capacity_pes: 1 << 12,
             tenant_quota_pes: 1 << 12,
             corpus_slack: 8,
+            ..PoolConfig::default()
         });
         pool.create_corpus(DEFAULT_TENANT, DEFAULT_CORPUS, b"0123456789")
             .unwrap();

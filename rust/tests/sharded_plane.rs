@@ -1,0 +1,302 @@
+//! Differential property tests for the sharded PE-plane executor
+//! (`device::computable::sharded`).
+//!
+//! The contract under test: for every trace, every plane size (including
+//! sizes no shard count divides), and every shard count in {1, 2, 3, 7},
+//! the sharded executor produces **bit-identical state and cost
+//! counters** to the serial engines. Shard seams are exercised three
+//! ways:
+//!
+//! * *carry chains* — strided Rule 4 activation whose stride crosses
+//!   shard boundaries, cross-checked against the gate-level §3.3 models
+//!   (`CarryPatternGenerator` for the stride, `AllLineDecoder` for the
+//!   `start..=end` window);
+//! * *neighbor seams* — `LEFT/RIGHT/UP/DOWN` reads whose source PE lives
+//!   in another worker's shard (including `nx` larger than a shard);
+//! * *global reduces* — match-line readouts and the √N reduction /
+//!   sort / threshold / histogram algorithms, which interleave plane
+//!   cycles with host readouts.
+//!
+//! CI runs this file single-threaded (`RUST_TEST_THREADS=1`,
+//! `--test-threads=1`) so shard-seam races cannot hide behind
+//! test-runner parallelism.
+
+use cpm::algos::{histogram, reduce, sort, threshold};
+use cpm::device::computable::bit_engine::BitEngine;
+use cpm::device::computable::isa::{F_COND_M, F_COND_NOT_M};
+use cpm::device::computable::{
+    ExecConfig, Instr, Opcode, Reg, ShardedBitPlane, ShardedPlane, Src, WordEngine,
+};
+use cpm::logic::{AllLineDecoder, CarryPatternGenerator};
+use cpm::util::propcheck::{forall_sized, Config};
+use cpm::util::rng::Rng;
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 7];
+
+/// Parallel config with the size floor disabled, so tiny planes really
+/// do split across workers.
+fn par(threads: usize) -> ExecConfig {
+    ExecConfig {
+        threads,
+        min_shard_pes: 1,
+    }
+}
+
+/// One random macro instruction over a `p`-PE plane: any opcode, any
+/// source (neighbor strides up to the whole plane), ranges that may be
+/// empty, clipped, or strided, and conditional flags.
+fn random_instr(rng: &mut Rng, p: usize) -> Instr {
+    let opcode = Opcode::decode(rng.below(19) as i32).expect("opcode in range");
+    let src = Src::decode(rng.below(14) as i32).expect("src in range");
+    let dst = Reg::decode(rng.below(9) as i32).expect("reg in range");
+    let carries = [1u32, 2, 3, 7];
+    let start = rng.below(p as u64 + 2) as u32;
+    let end = rng.below(p as u64 + 4) as u32;
+    let mut instr = Instr::all(opcode, src, dst)
+        .imm(rng.i32_range(-1000, 1000))
+        .range(start, end, carries[rng.range(0, carries.len())])
+        .stride(rng.below(p as u64 + 2) as u32);
+    match rng.below(4) {
+        0 => instr = instr.flags(F_COND_M),
+        1 => instr = instr.flags(F_COND_NOT_M),
+        _ => {}
+    }
+    instr
+}
+
+#[test]
+fn sharded_word_plane_is_bit_identical_across_shard_counts() {
+    forall_sized(
+        Config {
+            iters: 48,
+            base_seed: 0x5AADED,
+        },
+        |rng, size| {
+            // Sizes deliberately not divisible by 2, 3, or 7 as `size`
+            // sweeps; +1 keeps p >= 1.
+            let p = 1 + 3 * size + rng.range(0, 5);
+            let vals = rng.vec_i32(p, -2000, 2000);
+            let trace: Vec<Instr> = (0..8 + size / 4).map(|_| random_instr(rng, p)).collect();
+            (p, vals, trace)
+        },
+        |(p, vals, trace)| {
+            let mut serial = WordEngine::new(*p, 16);
+            serial.load_plane(Reg::Nb, vals);
+            serial.run(trace);
+            for &threads in &SHARD_COUNTS {
+                let mut sharded = ShardedPlane::new(*p, 16, par(threads));
+                sharded.load_plane(Reg::Nb, vals);
+                sharded.run(trace);
+                cpm::prop_assert!(
+                    sharded.state() == serial.state(),
+                    "state diverged at p={p} threads={threads}"
+                );
+                cpm::prop_assert!(
+                    sharded.cost() == serial.cost(),
+                    "cost diverged at p={p} threads={threads}: {:?} vs {:?}",
+                    sharded.cost(),
+                    serial.cost()
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn carry_chains_match_the_gate_level_activation_models() {
+    // Rule 4 activation is the all-line window AND the carry pattern
+    // (§3.3). The gate-level models are the ground truth; both the
+    // serial engine and every shard count must write exactly the PEs
+    // the silicon would enable — including chains that straddle shard
+    // boundaries and strides larger than a shard.
+    let p = 96usize;
+    let all_line = AllLineDecoder::new(7); // 128 lines >= p
+    let carry_gen = CarryPatternGenerator::new(7);
+    for &(start, end, carry) in &[
+        (0u32, 95u32, 1u32),
+        (5, 90, 2),
+        (1, 94, 3),
+        (13, 96, 7),
+        (31, 33, 7),  // chain entirely inside one shard at threads=2
+        (0, 200, 41), // stride wider than a 96/7 shard, end past the plane
+        (60, 20, 3),  // empty range
+    ] {
+        let expect: Vec<i32> = {
+            let leq_end = all_line.eval(end.min(95) as usize);
+            let pattern = carry_gen.eval(carry as usize);
+            (0..p)
+                .map(|i| {
+                    let in_window = i >= start as usize && leq_end[i];
+                    let on_chain = i >= start as usize && pattern[i - start as usize];
+                    i32::from(in_window && on_chain) * 7
+                })
+                .collect()
+        };
+        let mark = Instr::all(Opcode::Copy, Src::Imm, Reg::D0).imm(7).range(start, end, carry);
+        let mut serial = WordEngine::new(p, 16);
+        serial.step(&mark);
+        assert_eq!(serial.plane(Reg::D0), &expect[..], "serial vs gate model");
+        for &threads in &SHARD_COUNTS {
+            let mut sharded = ShardedPlane::new(p, 16, par(threads));
+            sharded.step(&mark);
+            assert_eq!(
+                sharded.plane(Reg::D0),
+                &expect[..],
+                "sharded vs gate model at threads={threads} range=({start},{end},{carry})"
+            );
+        }
+    }
+}
+
+#[test]
+fn global_reduce_readouts_are_identical_across_shard_counts() {
+    forall_sized(
+        Config {
+            iters: 24,
+            base_seed: 0x6ED0CE,
+        },
+        |rng, size| {
+            let n = 2 + 5 * size + rng.range(0, 4);
+            (n, rng.vec_i32(n, -1000, 1000))
+        },
+        |(n, vals)| {
+            // Serial reference for every readout.
+            let run_serial = |f: &dyn Fn(&mut WordEngine) -> (i64, u64)| {
+                let mut e = WordEngine::new(*n, 16);
+                e.load_plane(Reg::Nb, vals);
+                e.reset_cost();
+                f(&mut e)
+            };
+            for &threads in &SHARD_COUNTS {
+                let run_sharded = |f: &dyn Fn(&mut ShardedPlane) -> (i64, u64)| {
+                    let mut e = ShardedPlane::new(*n, 16, par(threads));
+                    e.load_plane(Reg::Nb, vals);
+                    e.reset_cost();
+                    f(&mut e)
+                };
+                // √N sum (carry-chained sections + serial combine).
+                let want = run_serial(&|e| {
+                    let r = reduce::sum_1d_opt(e, *n);
+                    (r.value, e.cost().macro_cycles)
+                });
+                let got = run_sharded(&|e| {
+                    let r = reduce::sum_1d_opt(e, *n);
+                    (r.value, e.cost().macro_cycles)
+                });
+                cpm::prop_assert!(got == want, "sum diverged at threads={threads}");
+                // Global max.
+                let want = run_serial(&|e| {
+                    (reduce::max_1d(e, *n, 3).value as i64, e.cost().macro_cycles)
+                });
+                let got = run_sharded(&|e| {
+                    (reduce::max_1d(e, *n, 3).value as i64, e.cost().macro_cycles)
+                });
+                cpm::prop_assert!(got == want, "max diverged at threads={threads}");
+                // Threshold mark + match broadcast (all-line AND over M).
+                let want = run_serial(&|e| {
+                    (threshold::threshold_mark(e, *n, 0) as i64, e.cost().macro_cycles)
+                });
+                let got = run_sharded(&|e| {
+                    (threshold::threshold_mark(e, *n, 0) as i64, e.cost().macro_cycles)
+                });
+                cpm::prop_assert!(got == want, "threshold diverged at threads={threads}");
+                // Histogram (repeated compare + parallel count).
+                let mut se = WordEngine::new(*n, 16);
+                se.load_plane(Reg::Nb, vals);
+                let want_h = histogram::histogram_words(&mut se, *n, &[-500, 0, 500]);
+                let mut pe = ShardedPlane::new(*n, 16, par(threads));
+                pe.load_plane(Reg::Nb, vals);
+                let got_h = histogram::histogram_words(&mut pe, *n, &[-500, 0, 500]);
+                cpm::prop_assert!(got_h == want_h, "histogram diverged at threads={threads}");
+                // Sort (data-dependent control flow driven by readouts).
+                let mut se = WordEngine::new(*n, 16);
+                se.load_plane(Reg::Nb, vals);
+                sort::sort_sqrt(&mut se, *n);
+                let mut pe = ShardedPlane::new(*n, 16, par(threads));
+                pe.load_plane(Reg::Nb, vals);
+                sort::sort_sqrt(&mut pe, *n);
+                cpm::prop_assert!(
+                    pe.plane(Reg::Nb) == se.plane(Reg::Nb),
+                    "sort diverged at threads={threads}"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn threads_one_is_the_serial_path() {
+    // `--threads 1` (and the default config) must be *the* serial
+    // engine: same state, same cost, for word and bit planes alike —
+    // the compatibility floor the CLI and pool defaults rely on.
+    let mut rng = Rng::new(0x00E);
+    let p = 131;
+    let vals = rng.vec_i32(p, -300, 300);
+    let trace: Vec<Instr> = (0..16).map(|_| random_instr(&mut rng, p)).collect();
+
+    let mut serial = WordEngine::new(p, 16);
+    serial.load_plane(Reg::Nb, &vals);
+    serial.run(&trace);
+    for cfg in [ExecConfig::default(), ExecConfig::with_threads(1)] {
+        let mut one = ShardedPlane::new(p, 16, cfg);
+        one.load_plane(Reg::Nb, &vals);
+        one.run(&trace);
+        assert_eq!(one.state(), serial.state());
+        assert_eq!(one.cost(), serial.cost());
+    }
+
+    let mut bserial = BitEngine::new(p);
+    bserial.load_plane(Reg::Nb, &vals);
+    bserial.run(&trace[..6]);
+    let mut bone = ShardedBitPlane::new(p, ExecConfig::with_threads(1));
+    bone.load_plane(Reg::Nb, &vals);
+    bone.run(&trace[..6]);
+    assert_eq!(bone.state(), bserial.state());
+    assert_eq!(bone.plane_ops(), bserial.plane_ops());
+    assert_eq!(bone.cost(), bserial.cost());
+}
+
+#[test]
+fn sharded_bit_plane_is_bit_identical_across_shard_counts() {
+    forall_sized(
+        Config {
+            iters: 16,
+            base_seed: 0xB17_5EED,
+        },
+        |rng, size| {
+            // Cross u64 word boundaries: up to ~8 words with ragged
+            // tails as `size` sweeps.
+            let p = 1 + 7 * size + rng.range(0, 9);
+            let vals = rng.vec_i32(p, -5000, 5000);
+            let trace: Vec<Instr> = (0..5).map(|_| random_instr(rng, p)).collect();
+            (p, vals, trace)
+        },
+        |(p, vals, trace)| {
+            let mut serial = BitEngine::new(*p);
+            serial.load_plane(Reg::Nb, vals);
+            serial.run(trace);
+            for &threads in &SHARD_COUNTS {
+                let mut sharded = ShardedBitPlane::new(*p, par(threads));
+                sharded.load_plane(Reg::Nb, vals);
+                sharded.run(trace);
+                cpm::prop_assert!(
+                    sharded.state() == serial.state(),
+                    "bit state diverged at p={p} threads={threads}"
+                );
+                cpm::prop_assert!(
+                    sharded.plane_ops() == serial.plane_ops(),
+                    "plane-op count diverged at p={p} threads={threads}: {} vs {}",
+                    sharded.plane_ops(),
+                    serial.plane_ops()
+                );
+                cpm::prop_assert!(
+                    sharded.cost() == serial.cost(),
+                    "bit cost diverged at p={p} threads={threads}"
+                );
+            }
+            Ok(())
+        },
+    );
+}
