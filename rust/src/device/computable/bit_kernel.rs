@@ -1,0 +1,666 @@
+//! Range-parameterized bit-serial kernel core — the single implementation
+//! of every macro opcode's bit-plane expansion (ripple adders, borrow
+//! compares, shift-and-add multiply, Rule 4 enable words, neighbor plane
+//! shifts), shared by the serial [`BitEngine`](super::bit_engine::BitEngine)
+//! and the sharded executor's per-shard workers the same way the word
+//! paths share `apply_slice_op`.
+//!
+//! The two callers differ only in *where bits come from*:
+//!
+//! * the serial engine runs over the full word range `[0, words)` and
+//!   reads neighbor values from its own NB planes;
+//! * a shard worker runs over its owned words `[w_lo, w_hi)` and reads
+//!   neighbor values from the shared pre-cycle snapshot.
+//!
+//! Both are expressed as a [`BitRange`] plus read closures, so the
+//! expansions themselves can never diverge (the old mirrored copies were
+//! pinned bit-identical by `tests/sharded_plane.rs`; now there is nothing
+//! left to mirror). Plane-op accounting is threaded through an `ops`
+//! accumulator that reproduces the serial engine's historical counts
+//! exactly — the serial engine folds it into `plane_ops`, the shard
+//! workers discard it (the sharded coordinator reproduces counters on a
+//! 1-PE shadow engine, keeping them data-independently bit-identical).
+
+use super::bit_engine::W;
+use super::isa::{Instr, Opcode, Src, F_COND_M, F_COND_NOT_M};
+
+/// One caller's view of the bit-plane word axis: the whole plane for the
+/// serial engine (`w_lo = 0`, `w_hi = words`), one shard's owned words
+/// for a parallel worker.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct BitRange {
+    /// First owned plane word (global index).
+    pub w_lo: usize,
+    /// One past the last owned plane word (global index).
+    pub w_hi: usize,
+    /// Total plane words of the device.
+    pub words: usize,
+    /// Total PEs of the device.
+    pub p: usize,
+}
+
+#[inline]
+pub(crate) fn majority(a: u64, b: u64, c: u64) -> u64 {
+    (a & b) | (b & c) | (a & c)
+}
+
+impl BitRange {
+    /// The serial engine's view: the whole plane.
+    pub(crate) fn full(p: usize) -> BitRange {
+        let words = p.div_ceil(64);
+        BitRange {
+            w_lo: 0,
+            w_hi: words,
+            words,
+            p,
+        }
+    }
+
+    /// Owned words.
+    pub(crate) fn len(&self) -> usize {
+        self.w_hi - self.w_lo
+    }
+
+    /// Valid-bit mask of the *global* last plane word (bits >= p are not
+    /// PEs).
+    fn global_tail(&self) -> u64 {
+        let rem = self.p % 64;
+        if rem == 0 {
+            u64::MAX
+        } else {
+            (1u64 << rem) - 1
+        }
+    }
+
+    /// Mask `plane`'s copy of the global last word — a no-op unless this
+    /// range owns it.
+    pub(crate) fn mask_tail(&self, plane: &mut [u64]) {
+        if self.w_hi == self.words {
+            if let Some(last) = plane.last_mut() {
+                *last &= self.global_tail();
+            }
+        }
+    }
+}
+
+/// Which register an expansion's result planes merge into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum WriteBack {
+    /// The instruction's destination register.
+    Dst,
+    /// The match register (compares).
+    M,
+}
+
+/// Rule 4 + conditional-flags enable words over `range`: the all-line
+/// window `en_start <= i <= en_end` AND'd with the §3.3 carry pattern
+/// `(i - en_start) % en_carry == 0`, gated by the M-conditional flags. A
+/// pure function of global PE addresses, so shard seams need no
+/// communication. `m_word(k, j)` reads word `j` (range-relative) of M
+/// bit plane `k`.
+///
+/// `ops` accrues the serial engine's charges: 1 for the general decoder,
+/// plus `W` for the M≠0 reduction and 1 per flag when flags gate.
+pub(crate) fn enable_words<M>(range: &BitRange, instr: &Instr, m_word: M, ops: &mut u64) -> Vec<u64>
+where
+    M: Fn(usize, usize) -> u64,
+{
+    *ops += 1; // the general decoder asserts all lines at once
+    let n = range.len();
+    let mut en = vec![0u64; n];
+    if n == 0 {
+        return en;
+    }
+    let start = instr.en_start as usize;
+    let end = (instr.en_end as usize).min(range.p.saturating_sub(1));
+    let carry = (instr.en_carry as usize).max(1);
+    if start <= end && start < range.p {
+        let ga = start.max(range.w_lo * 64);
+        let gb = end.min(range.w_hi * 64 - 1);
+        if ga <= gb {
+            // First chain address >= ga on the global carry chain.
+            let off = (ga - start) % carry;
+            let mut i = if off == 0 { ga } else { ga + (carry - off) };
+            while i <= gb {
+                en[i / 64 - range.w_lo] |= 1 << (i % 64);
+                match i.checked_add(carry) {
+                    Some(next) => i = next,
+                    None => break,
+                }
+            }
+        }
+    }
+    if instr.flags & (F_COND_M | F_COND_NOT_M) != 0 {
+        // M != 0 over this range: OR-reduce the W M bit planes.
+        let mut mnz = vec![0u64; n];
+        for k in 0..W {
+            *ops += 1;
+            for (j, out) in mnz.iter_mut().enumerate() {
+                *out |= m_word(k, j);
+            }
+        }
+        if instr.flags & F_COND_M != 0 {
+            *ops += 1;
+            for (e, &m) in en.iter_mut().zip(mnz.iter()) {
+                *e &= m;
+            }
+        }
+        if instr.flags & F_COND_NOT_M != 0 {
+            *ops += 1;
+            for (e, &m) in en.iter_mut().zip(mnz.iter()) {
+                *e &= !m;
+            }
+        }
+    }
+    en
+}
+
+/// This range's words of NB bit plane `k`, shifted `delta` PEs along the
+/// PE axis (`out[i] = NB[i - delta]`, zero fill past the plane edges),
+/// reading pre-cycle NB words through `nb(k, w)` at *global* word
+/// indices. One plane op, as the serial engine always charged.
+fn shifted_nb<NB>(range: &BitRange, k: usize, delta: i64, nb: &NB, ops: &mut u64) -> Vec<u64>
+where
+    NB: Fn(usize, usize) -> u64,
+{
+    *ops += 1;
+    let n = range.len();
+    let mut out = vec![0u64; n];
+    if delta == 0 {
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = nb(k, range.w_lo + j);
+        }
+    } else if (delta.unsigned_abs() as usize) >= range.p {
+        // fully shifted out
+    } else if delta > 0 {
+        let d = delta as usize;
+        let (wd, bd) = (d / 64, d % 64);
+        for (j, o) in out.iter_mut().enumerate() {
+            let w = range.w_lo + j;
+            let mut v = 0u64;
+            if w >= wd {
+                v = nb(k, w - wd) << bd;
+                if bd > 0 && w > wd {
+                    v |= nb(k, w - wd - 1) >> (64 - bd);
+                }
+            }
+            *o = v;
+        }
+    } else {
+        let d = (-delta) as usize;
+        let (wd, bd) = (d / 64, d % 64);
+        for (j, o) in out.iter_mut().enumerate() {
+            let w = range.w_lo + j;
+            let mut v = 0u64;
+            if w + wd < range.words {
+                v = nb(k, w + wd) >> bd;
+                if bd > 0 && w + wd + 1 < range.words {
+                    v |= nb(k, w + wd + 1) << (64 - bd);
+                }
+            }
+            *o = v;
+        }
+    }
+    range.mask_tail(&mut out);
+    out
+}
+
+/// Materialize the W source bit planes of `instr.src` over `range`.
+/// `own(r, k)` bulk-copies this range's words of register `r` bit plane
+/// `k` (a memcpy in both callers — this is the serial engine's hot
+/// register-source path); `nb(k, w)` reads *global* word `w` of the
+/// pre-cycle NB plane (the serial engine points this at its own NB
+/// planes, shard workers at the shared snapshot).
+///
+/// Convention (unchanged from the serial engine): LEFT shifts the plane
+/// by +1 (`out[i] = NB[i-1]`), RIGHT by -1, UP by `+nx`, DOWN by `-nx`.
+pub(crate) fn src_planes<O, NB>(
+    range: &BitRange,
+    instr: &Instr,
+    own: O,
+    nb: NB,
+    ops: &mut u64,
+) -> Vec<Vec<u64>>
+where
+    O: Fn(usize, usize) -> Vec<u64>,
+    NB: Fn(usize, usize) -> u64,
+{
+    let n = range.len();
+    match instr.src {
+        Src::Reg(r) => (0..W).map(|k| own(r as usize, k)).collect(),
+        Src::Imm => {
+            let imm = instr.imm as u32;
+            (0..W)
+                .map(|k| {
+                    *ops += 1;
+                    let fill = if (imm >> k) & 1 == 1 { u64::MAX } else { 0 };
+                    let mut plane = vec![fill; n];
+                    range.mask_tail(&mut plane);
+                    plane
+                })
+                .collect()
+        }
+        Src::Left => (0..W).map(|k| shifted_nb(range, k, 1, &nb, ops)).collect(),
+        Src::Right => (0..W).map(|k| shifted_nb(range, k, -1, &nb, ops)).collect(),
+        Src::Up => (0..W)
+            .map(|k| shifted_nb(range, k, instr.nx as i64, &nb, ops))
+            .collect(),
+        Src::Down => (0..W)
+            .map(|k| shifted_nb(range, k, -(instr.nx as i64), &nb, ops))
+            .collect(),
+    }
+}
+
+/// Signed less-than plane via full borrowless subtraction (`lt = sd ^ V`,
+/// `V = (sa ^ sb) & (sa ^ sd)`). The word-local ripple chain is why
+/// whole plane words are the shard unit.
+fn less_than(n: usize, a: &[Vec<u64>], b: &[Vec<u64>], ops: &mut u64) -> Vec<u64> {
+    let mut carry = vec![u64::MAX; n];
+    let mut sd = vec![0u64; n];
+    for k in 0..W {
+        *ops += 3; // !b, sum, carry
+        let mut sum = vec![0u64; n];
+        let mut next = vec![0u64; n];
+        for j in 0..n {
+            let nb = !b[k][j];
+            sum[j] = a[k][j] ^ nb ^ carry[j];
+            next[j] = majority(a[k][j], nb, carry[j]);
+        }
+        carry = next;
+        if k == W - 1 {
+            sd = sum;
+        }
+    }
+    *ops += 1; // the overflow-corrected sign combine
+    let sa = &a[W - 1];
+    let sb = &b[W - 1];
+    sa.iter()
+        .zip(sb.iter())
+        .zip(sd.iter())
+        .map(|((&x, &y), &d)| d ^ ((x ^ y) & (x ^ d)))
+        .collect()
+}
+
+/// Equality plane: AND over all bit positions of `!(a ^ b)`.
+fn equal(range: &BitRange, a: &[Vec<u64>], b: &[Vec<u64>], ops: &mut u64) -> Vec<u64> {
+    let n = range.len();
+    let mut eq = vec![u64::MAX; n];
+    for k in 0..W {
+        *ops += 2; // !(a ^ b), then the AND fold
+        for j in 0..n {
+            eq[j] &= !(a[k][j] ^ b[k][j]);
+        }
+    }
+    range.mask_tail(&mut eq);
+    eq
+}
+
+fn compare(
+    range: &BitRange,
+    a: &[Vec<u64>],
+    b: &[Vec<u64>],
+    op: Opcode,
+    ops: &mut u64,
+) -> Vec<u64> {
+    use Opcode::*;
+    let mut res = match op {
+        CmpLt => less_than(range.len(), a, b, ops),
+        CmpGe => {
+            let lt = less_than(range.len(), a, b, ops);
+            *ops += 1;
+            lt.iter().map(|&x| !x).collect()
+        }
+        CmpEq => equal(range, a, b, ops),
+        CmpNe => {
+            let eq = equal(range, a, b, ops);
+            *ops += 1;
+            eq.iter().map(|&x| !x).collect()
+        }
+        CmpLe => {
+            let lt = less_than(range.len(), a, b, ops);
+            let eq = equal(range, a, b, ops);
+            *ops += 1;
+            lt.iter().zip(eq.iter()).map(|(&x, &y)| x | y).collect()
+        }
+        CmpGt => {
+            let lt = less_than(range.len(), a, b, ops);
+            let eq = equal(range, a, b, ops);
+            *ops += 1;
+            lt.iter().zip(eq.iter()).map(|(&x, &y)| !(x | y)).collect()
+        }
+        _ => unreachable!("compare() called with non-compare opcode"),
+    };
+    range.mask_tail(&mut res);
+    res
+}
+
+/// Expand one macro opcode bit-serially over staged operands: `a` holds
+/// the W destination-register planes (pre-write values), `b` the W
+/// source planes, both `range.len()` words wide. Returns the W result
+/// planes and the register they merge into; the caller performs the
+/// enable-masked writes (counting them, where it counts at all).
+///
+/// `ops` accrues exactly the compute plane ops the serial engine always
+/// charged per opcode (e.g. 2 per bit for the ripple add, 3 per partial
+/// product row for the shift-and-add multiply), so serial and sharded
+/// accounting cannot diverge. `Nop` must be filtered by the caller.
+pub(crate) fn expand(
+    range: &BitRange,
+    opcode: Opcode,
+    imm: i32,
+    a: &[Vec<u64>],
+    b: Vec<Vec<u64>>,
+    ops: &mut u64,
+) -> (WriteBack, Vec<Vec<u64>>) {
+    use Opcode::*;
+    let n = range.len();
+    match opcode {
+        Nop => (WriteBack::Dst, Vec::new()),
+        Copy => (WriteBack::Dst, b),
+        And | Or | Xor => {
+            let f: fn(u64, u64) -> u64 = match opcode {
+                And => |x, y| x & y,
+                Or => |x, y| x | y,
+                _ => |x, y| x ^ y,
+            };
+            let planes = (0..W)
+                .map(|k| {
+                    *ops += 1;
+                    a[k].iter().zip(b[k].iter()).map(|(&x, &y)| f(x, y)).collect()
+                })
+                .collect();
+            (WriteBack::Dst, planes)
+        }
+        Add => {
+            let mut carry = vec![0u64; n];
+            let mut planes = Vec::with_capacity(W);
+            for k in 0..W {
+                *ops += 2; // sum, carry
+                let mut sum = vec![0u64; n];
+                let mut next = vec![0u64; n];
+                for j in 0..n {
+                    sum[j] = a[k][j] ^ b[k][j] ^ carry[j];
+                    next[j] = majority(a[k][j], b[k][j], carry[j]);
+                }
+                carry = next;
+                planes.push(sum);
+            }
+            (WriteBack::Dst, planes)
+        }
+        Sub => {
+            // a + !b + 1 (borrowless two's-complement subtract).
+            let mut carry = vec![u64::MAX; n];
+            let mut planes = Vec::with_capacity(W);
+            for k in 0..W {
+                *ops += 3; // !b, sum, carry
+                let mut sum = vec![0u64; n];
+                let mut next = vec![0u64; n];
+                for j in 0..n {
+                    let nb = !b[k][j];
+                    sum[j] = a[k][j] ^ nb ^ carry[j];
+                    next[j] = majority(a[k][j], nb, carry[j]);
+                }
+                carry = next;
+                planes.push(sum);
+            }
+            (WriteBack::Dst, planes)
+        }
+        CmpLt | CmpLe | CmpEq | CmpNe | CmpGt | CmpGe => {
+            // Bit registers hold 0/1: plane 0 carries the verdict, the
+            // high M planes clear.
+            let res = compare(range, a, &b, opcode, ops);
+            let mut planes = vec![vec![0u64; n]; W];
+            planes[0] = res;
+            (WriteBack::M, planes)
+        }
+        Min | Max => {
+            let lt = less_than(n, a, &b, ops);
+            let planes = (0..W)
+                .map(|k| {
+                    *ops += 1;
+                    if matches!(opcode, Min) {
+                        // lt ? a : b
+                        lt.iter()
+                            .zip(a[k].iter())
+                            .zip(b[k].iter())
+                            .map(|((&t, &x), &y)| (t & x) | (!t & y))
+                            .collect()
+                    } else {
+                        // lt ? b : a
+                        lt.iter()
+                            .zip(a[k].iter())
+                            .zip(b[k].iter())
+                            .map(|((&t, &x), &y)| (t & y) | (!t & x))
+                            .collect()
+                    }
+                })
+                .collect();
+            (WriteBack::Dst, planes)
+        }
+        AbsDiff => {
+            // d = a - b; then conditional negate by the sign plane.
+            let mut d: Vec<Vec<u64>> = Vec::with_capacity(W);
+            let mut carry = vec![u64::MAX; n];
+            for k in 0..W {
+                *ops += 3; // !b, sum, carry
+                let mut sum = vec![0u64; n];
+                let mut next = vec![0u64; n];
+                for j in 0..n {
+                    let nb = !b[k][j];
+                    sum[j] = a[k][j] ^ nb ^ carry[j];
+                    next[j] = majority(a[k][j], nb, carry[j]);
+                }
+                carry = next;
+                d.push(sum);
+            }
+            let neg = d[W - 1].clone();
+            // r = (d ^ neg) + neg (negate where neg, identity elsewhere).
+            let mut c = neg.clone();
+            let mut planes = Vec::with_capacity(W);
+            for row in d.iter().take(W) {
+                *ops += 3; // d ^ neg, sum, carry
+                let mut sum = vec![0u64; n];
+                let mut next = vec![0u64; n];
+                for j in 0..n {
+                    let x = row[j] ^ neg[j];
+                    sum[j] = x ^ c[j];
+                    next[j] = x & c[j];
+                }
+                c = next;
+                planes.push(sum);
+            }
+            (WriteBack::Dst, planes)
+        }
+        Mul => {
+            // Shift-and-add: product += (a << k) & b[k], W rounds.
+            let mut prod: Vec<Vec<u64>> = vec![vec![0u64; n]; W];
+            for k in 0..W {
+                let mut carry = vec![0u64; n];
+                for jk in k..W {
+                    *ops += 3; // addend, sum, carry
+                    let mut sum = vec![0u64; n];
+                    let mut next = vec![0u64; n];
+                    for j in 0..n {
+                        let addend = a[jk - k][j] & b[k][j];
+                        sum[j] = prod[jk][j] ^ addend ^ carry[j];
+                        next[j] = majority(prod[jk][j], addend, carry[j]);
+                    }
+                    carry = next;
+                    prod[jk] = sum;
+                }
+            }
+            (WriteBack::Dst, prod)
+        }
+        Shr => {
+            let s = imm.clamp(0, 31) as usize;
+            let sign = a[W - 1].clone();
+            let planes = (0..W)
+                .map(|k| {
+                    if k + s < W {
+                        a[k + s].clone()
+                    } else {
+                        sign.clone()
+                    }
+                })
+                .collect();
+            (WriteBack::Dst, planes)
+        }
+        Shl => {
+            let s = imm.clamp(0, 31) as usize;
+            let planes = (0..W)
+                .map(|k| if k >= s { a[k - s].clone() } else { vec![0u64; n] })
+                .collect();
+            (WriteBack::Dst, planes)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::computable::isa::Reg;
+
+    fn encode(vals: &[i32], n_words: usize) -> Vec<Vec<u64>> {
+        let mut planes = vec![vec![0u64; n_words]; W];
+        for (i, &v) in vals.iter().enumerate() {
+            for (k, plane) in planes.iter_mut().enumerate() {
+                if (v as u32 >> k) & 1 == 1 {
+                    plane[i / 64] |= 1 << (i % 64);
+                }
+            }
+        }
+        planes
+    }
+
+    fn decode(planes: &[Vec<u64>], p: usize) -> Vec<i32> {
+        (0..p)
+            .map(|i| {
+                let mut v: u32 = 0;
+                for (k, plane) in planes.iter().enumerate() {
+                    v |= (((plane[i / 64] >> (i % 64)) & 1) as u32) << k;
+                }
+                v as i32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn expand_add_matches_wrapping_i32() {
+        let p = 70; // crosses a word boundary
+        let range = BitRange::full(p);
+        let a_vals: Vec<i32> = (0..p as i32).map(|v| v * 1_000_003).collect();
+        let b_vals: Vec<i32> = (0..p as i32).map(|v| i32::MAX - v * 7).collect();
+        let a = encode(&a_vals, range.len());
+        let b = encode(&b_vals, range.len());
+        let mut ops = 0;
+        let (target, planes) = expand(&range, Opcode::Add, 0, &a, b, &mut ops);
+        assert_eq!(target, WriteBack::Dst);
+        let want: Vec<i32> = a_vals
+            .iter()
+            .zip(&b_vals)
+            .map(|(&x, &y)| x.wrapping_add(y))
+            .collect();
+        assert_eq!(decode(&planes, p), want);
+        assert_eq!(ops, 2 * W as u64);
+    }
+
+    #[test]
+    fn expand_compare_writes_m_with_cleared_high_planes() {
+        let p = 5;
+        let range = BitRange::full(p);
+        let a = encode(&[1, -2, i32::MIN, 7, 0], range.len());
+        let b = encode(&[2, 1, 1, 7, -1], range.len());
+        let mut ops = 0;
+        let (target, planes) = expand(&range, Opcode::CmpLt, 0, &a, b, &mut ops);
+        assert_eq!(target, WriteBack::M);
+        assert_eq!(decode(&planes, p), vec![1, 1, 1, 0, 0]);
+        for plane in planes.iter().skip(1) {
+            assert!(plane.iter().all(|&w| w == 0));
+        }
+        assert_eq!(ops, 3 * W as u64 + 1); // less_than's exact charge
+    }
+
+    #[test]
+    fn split_ranges_agree_with_the_full_plane() {
+        // The range parameterization itself: expanding over [0, 2) and
+        // [2, 4) word ranges must reproduce the full-plane expansion
+        // word for word, including the ragged global tail.
+        let p = 200; // 4 words, 8 valid bits in the last
+        let full = BitRange::full(p);
+        let vals_a: Vec<i32> = (0..p as i32).map(|v| v * 17 - 1000).collect();
+        let vals_b: Vec<i32> = (0..p as i32).map(|v| 31 - v * 13).collect();
+        let a = encode(&vals_a, full.len());
+        let b = encode(&vals_b, full.len());
+        for opcode in [
+            Opcode::Add,
+            Opcode::Sub,
+            Opcode::Mul,
+            Opcode::Min,
+            Opcode::AbsDiff,
+            Opcode::CmpLe,
+            Opcode::Shr,
+        ] {
+            let mut full_ops = 0;
+            let (_, want) = expand(&full, opcode, 3, &a, b.clone(), &mut full_ops);
+            for split in [1usize, 2, 3] {
+                let lo = BitRange {
+                    w_lo: 0,
+                    w_hi: split,
+                    ..full
+                };
+                let hi = BitRange {
+                    w_lo: split,
+                    w_hi: full.words,
+                    ..full
+                };
+                let slice = |r: &BitRange, planes: &[Vec<u64>]| -> Vec<Vec<u64>> {
+                    planes.iter().map(|pl| pl[r.w_lo..r.w_hi].to_vec()).collect()
+                };
+                let mut ops_lo = 0;
+                let (_, got_lo) =
+                    expand(&lo, opcode, 3, &slice(&lo, &a), slice(&lo, &b), &mut ops_lo);
+                let mut ops_hi = 0;
+                let (_, got_hi) =
+                    expand(&hi, opcode, 3, &slice(&hi, &a), slice(&hi, &b), &mut ops_hi);
+                for k in 0..W {
+                    assert_eq!(got_lo[k], want[k][..split], "{opcode:?} lo k={k}");
+                    assert_eq!(got_hi[k], want[k][split..], "{opcode:?} hi k={k}");
+                }
+                // Compute-op counts are range-independent per word chunk.
+                assert_eq!(ops_lo, full_ops, "{opcode:?}");
+                assert_eq!(ops_hi, full_ops, "{opcode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn enable_words_covers_strided_clipped_ranges() {
+        let p = 130;
+        let range = BitRange::full(p);
+        let instr = Instr::all(Opcode::Copy, Src::Imm, Reg::D0).range(5, 200, 7);
+        let mut ops = 0;
+        let en = enable_words(&range, &instr, |_, _| 0, &mut ops);
+        for i in 0..p {
+            let want = i >= 5 && (i - 5) % 7 == 0;
+            let got = (en[i / 64] >> (i % 64)) & 1 == 1;
+            assert_eq!(got, want, "i={i}");
+        }
+        assert_eq!(ops, 1); // decoder only; no flags
+    }
+
+    #[test]
+    fn shifted_sources_zero_fill_the_edges() {
+        let p = 70;
+        let range = BitRange::full(p);
+        let nb = encode(&(0..p as i32).collect::<Vec<_>>(), range.len());
+        let mut ops = 0;
+        let instr = Instr::all(Opcode::Copy, Src::Left, Reg::Op);
+        let planes = src_planes(&range, &instr, |_, _| Vec::new(), |k, w| nb[k][w], &mut ops);
+        let got = decode(&planes, p);
+        assert_eq!(got[0], 0);
+        for (i, &v) in got.iter().enumerate().skip(1) {
+            assert_eq!(v, (i - 1) as i32, "i={i}");
+        }
+        assert_eq!(ops, W as u64); // one plane op per shifted bit plane
+    }
+}

@@ -12,19 +12,28 @@
 //! [`sharded::ShardedPlane`] / [`sharded::ShardedBitPlane`] wrap the
 //! first two and spread large planes across std worker threads
 //! ([`sharded::ExecConfig`] selects the thread count; `threads = 1` is
-//! bit-identical to the serial engines).
+//! bit-identical to the serial engines). The threads themselves live in
+//! [`workers::WorkerPool`] — a persistent pool of parked workers the
+//! config carries, so step-at-a-time callers pay a wake instead of a
+//! spawn per instruction — and the bit-serial opcode expansions both
+//! engines execute live once in the range-parameterized `bit_kernel`
+//! core. See DESIGN.md "Execution model".
+#![warn(missing_docs)]
 
 pub mod bit_engine;
+pub(crate) mod bit_kernel;
 pub mod isa;
 pub mod macroasm;
 pub mod sharded;
 pub mod superconn;
 pub mod word_engine;
+pub mod workers;
 
 pub use isa::{Instr, Opcode, Reg, Src};
 pub use macroasm::TraceBuilder;
-pub use sharded::{ExecConfig, ShardedBitPlane, ShardedPlane};
+pub use sharded::{ExecConfig, ShardedBitPlane, ShardedPlane, SpawnMode};
 pub use word_engine::{PePlane, WordEngine};
+pub use workers::WorkerPool;
 
 use crate::cycles::ConcurrentCost;
 

@@ -4,9 +4,13 @@
 //! The paper's premise is that *every* PE works at once; the serial
 //! engines simulate that one PE (or one plane word) at a time on a single
 //! core. This module splits the plane into contiguous shards and runs a
-//! macro trace with one worker thread per shard (`std::thread::scope`; no
-//! rayon, no dependencies), so wall-clock finally scales with the
-//! machine's cores.
+//! macro trace with one worker per shard, dispatched onto the persistent
+//! [`WorkerPool`] the [`ExecConfig`] carries (parked threads woken per
+//! call; `SpawnMode::PerCall` keeps the old spawn-a-scope-per-call
+//! strategy for differential testing) — no rayon, no dependencies — so
+//! wall-clock finally scales with the machine's cores and a
+//! single-instruction `run()` costs a wake + an epoch barrier instead of
+//! N thread spawns (see `workers.rs` and E21/E22).
 //!
 //! Correctness model — where synchronization is (and is not) required:
 //!
@@ -30,34 +34,57 @@
 //!   against `logic::CarryPatternGenerator`/`AllLineDecoder` by
 //!   `tests/sharded_plane.rs`).
 //! * **Global reduces.** Match-line readouts (Rule 6) fan in per-shard
-//!   partials — count, first, last — joined at the scope boundary.
+//!   partials — count, first, last — joined at the dispatch's epoch
+//!   barrier.
 //!
 //! `threads = 1` (the default) delegates every call to the serial engine
 //! unchanged, so the sharded wrapper is bit-identical to the pre-existing
 //! path by construction; `threads = N` is pinned bit-identical to
 //! `threads = 1` (state *and* cost counters) by differential property
-//! tests. Cost accounting is data-independent per instruction, so the
-//! parallel path charges exactly what a serial run would.
+//! tests, for the pool-backed and the scope-backed spawn mode alike.
+//! Cost accounting is data-independent per instruction, so the parallel
+//! path charges exactly what a serial run would.
 
 use std::sync::atomic::{AtomicI32, AtomicU64, Ordering};
 use std::sync::Barrier;
 
 use super::bit_engine::{BitEngine, W};
+use super::bit_kernel::{self, BitRange, WriteBack};
 use super::isa::{Instr, Opcode, Reg, Src, F_COND_M, F_COND_NOT_M, N_REGS};
 use super::word_engine::{apply_slice_op, PePlane, WordEngine};
+use super::workers::{self, Job, WorkerPool};
 use crate::cycles::ConcurrentCost;
 
 /// Default floor on PEs per shard: below this, thread orchestration costs
 /// more than it saves and execution stays serial.
 pub const DEFAULT_MIN_SHARD_PES: usize = 1 << 14;
 
+/// How a sharded plane acquires its worker threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpawnMode {
+    /// Dispatch shard cycles onto the persistent [`WorkerPool`] the
+    /// config carries (the default): parked workers wake per call, so a
+    /// single-instruction `run()` pays a mailbox wake + epoch barrier —
+    /// the step-at-a-time floor E22 measures.
+    Persistent,
+    /// Spawn a `std::thread::scope` per call — the pre-pool strategy,
+    /// kept as the differential-testing reference (`pool-backed ≡
+    /// scope-backed ≡ serial` in `tests/sharded_plane.rs`) and as the
+    /// spawn-cost baseline E22 measures against.
+    PerCall,
+}
+
 /// Plane-execution configuration: how many worker threads a device may
-/// use, and when a plane is big enough to bother.
+/// use, when a plane is big enough to bother, and how the threads are
+/// acquired ([`SpawnMode`]).
 ///
 /// Flows from the CLI (`--threads`) or `CPM_THREADS` through
 /// [`PoolConfig`](crate::pool::PoolConfig) into the serve path, and into
-/// the runtime's trace interpreter.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// the runtime's trace interpreter. The config carries a shared
+/// [`WorkerPool`] handle — clones dispatch onto the *same* parked
+/// workers, so a served process warms its pool once and keeps it for the
+/// process lifetime.
+#[derive(Debug, Clone)]
 pub struct ExecConfig {
     /// Worker threads for plane execution. `1` = serial, bit-identical
     /// to the plain engines.
@@ -65,6 +92,12 @@ pub struct ExecConfig {
     /// Minimum PEs per shard before parallel execution engages; planes
     /// smaller than `2 * min_shard_pes` always run serially.
     pub min_shard_pes: usize,
+    /// How parallel cycles acquire threads: the persistent worker pool
+    /// (default) or a scoped spawn per call.
+    pub spawn: SpawnMode,
+    /// The shared pool of parked workers (lazily spawned; clones share
+    /// it).
+    pool: WorkerPool,
 }
 
 impl Default for ExecConfig {
@@ -72,9 +105,24 @@ impl Default for ExecConfig {
         ExecConfig {
             threads: 1,
             min_shard_pes: DEFAULT_MIN_SHARD_PES,
+            spawn: SpawnMode::Persistent,
+            pool: WorkerPool::new(),
         }
     }
 }
+
+impl PartialEq for ExecConfig {
+    /// Policy equality: two configs are equal when they execute planes
+    /// the same way. Worker-pool *identity* is deliberately excluded —
+    /// which OS threads do the work is not observable in state or cost.
+    fn eq(&self, other: &Self) -> bool {
+        self.threads == other.threads
+            && self.min_shard_pes == other.min_shard_pes
+            && self.spawn == other.spawn
+    }
+}
+
+impl Eq for ExecConfig {}
 
 impl ExecConfig {
     /// Serial execution (the default).
@@ -90,6 +138,16 @@ impl ExecConfig {
         }
     }
 
+    /// `threads` workers with an explicit per-shard floor (tests and
+    /// benches pass a floor of 1 so small planes really shard).
+    pub fn with_min_shard(threads: usize, min_shard_pes: usize) -> Self {
+        ExecConfig {
+            threads: threads.max(1),
+            min_shard_pes,
+            ..ExecConfig::default()
+        }
+    }
+
     /// Read `CPM_THREADS` from the environment (absent/unparsable = 1).
     pub fn from_env() -> Self {
         let threads = std::env::var("CPM_THREADS")
@@ -97,6 +155,19 @@ impl ExecConfig {
             .and_then(|v| v.parse::<usize>().ok())
             .unwrap_or(1);
         ExecConfig::with_threads(threads)
+    }
+
+    /// This config with its [`SpawnMode`] replaced (builder style).
+    pub fn spawn_mode(mut self, spawn: SpawnMode) -> Self {
+        self.spawn = spawn;
+        self
+    }
+
+    /// This config with the per-shard floor raised to at least `floor`
+    /// (never lowered).
+    pub fn floor_at_least(mut self, floor: usize) -> Self {
+        self.min_shard_pes = self.min_shard_pes.max(floor);
+        self
     }
 
     /// Worker count actually used for a plane of `p` PEs: capped so every
@@ -108,6 +179,21 @@ impl ExecConfig {
         }
         let by_size = (p / self.min_shard_pes.max(1)).max(1);
         self.threads.min(by_size).min(p).max(1)
+    }
+
+    /// The persistent worker pool this config — and every clone of it —
+    /// dispatches onto under [`SpawnMode::Persistent`].
+    pub fn worker_pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
+    /// Run one dispatch of shard jobs under this config's spawn policy.
+    /// Returns only after every job completed (both modes are scoped).
+    pub(crate) fn dispatch(&self, jobs: Vec<Job<'_>>) {
+        match self.spawn {
+            SpawnMode::Persistent => self.pool.scope_run(jobs),
+            SpawnMode::PerCall => workers::run_scoped(jobs),
+        }
     }
 }
 
@@ -169,7 +255,7 @@ impl ShardedPlane {
 
     /// The execution configuration.
     pub fn exec_config(&self) -> ExecConfig {
-        self.cfg
+        self.cfg.clone()
     }
 
     /// The wrapped serial engine.
@@ -238,7 +324,9 @@ impl ShardedPlane {
     }
 
     /// Execute a whole macro trace, sharded across worker threads when
-    /// the plane is large enough (serial otherwise).
+    /// the plane is large enough (serial otherwise). Under the default
+    /// [`SpawnMode::Persistent`] the shards dispatch onto the config's
+    /// parked worker pool; `SpawnMode::PerCall` spawns a scope instead.
     pub fn run(&mut self, trace: &[Instr]) {
         let threads = self.cfg.effective_threads(self.engine.len());
         if threads <= 1 {
@@ -279,10 +367,12 @@ impl ShardedPlane {
 
         let snap_ref = &snap;
         let barrier_ref = &barrier;
-        std::thread::scope(|scope| {
-            for (s, regs) in shard_regs.into_iter().enumerate() {
+        let jobs: Vec<Job<'_>> = shard_regs
+            .into_iter()
+            .enumerate()
+            .map(|(s, regs)| {
                 let (lo, hi) = bounds[s];
-                scope.spawn(move || {
+                Box::new(move || {
                     let mut worker = ShardWorker {
                         lo,
                         hi,
@@ -296,9 +386,10 @@ impl ShardedPlane {
                     for instr in trace {
                         worker.step(instr);
                     }
-                });
-            }
-        });
+                }) as Job<'_>
+            })
+            .collect();
+        self.cfg.dispatch(jobs);
     }
 
     /// Rule 6 readout: match count via per-shard partial counts.
@@ -310,16 +401,18 @@ impl ShardedPlane {
         self.engine.account(ConcurrentCost::broadcast(1, 1));
         let m = self.engine.plane(Reg::M);
         let chunk = m.len().div_ceil(threads).max(1);
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = m
-                .chunks(chunk)
-                .map(|seg| scope.spawn(move || seg.iter().filter(|&&v| v != 0).count()))
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("match-count worker panicked"))
-                .sum()
-        })
+        let mut partials = vec![0usize; m.len().div_ceil(chunk)];
+        let jobs: Vec<Job<'_>> = m
+            .chunks(chunk)
+            .zip(partials.iter_mut())
+            .map(|(seg, out)| {
+                Box::new(move || {
+                    *out = seg.iter().filter(|&&v| v != 0).count();
+                }) as Job<'_>
+            })
+            .collect();
+        self.cfg.dispatch(jobs);
+        partials.into_iter().sum()
     }
 
     /// Rule 6 readout: first matching PE via per-shard priority partials.
@@ -331,21 +424,19 @@ impl ShardedPlane {
         self.engine.account(ConcurrentCost::broadcast(1, 1));
         let m = self.engine.plane(Reg::M);
         let chunk = m.len().div_ceil(threads).max(1);
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = m
-                .chunks(chunk)
-                .enumerate()
-                .map(|(ci, seg)| {
-                    scope.spawn(move || {
-                        seg.iter().position(|&v| v != 0).map(|k| ci * chunk + k)
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .filter_map(|h| h.join().expect("first-match worker panicked"))
-                .next()
-        })
+        let mut partials: Vec<Option<usize>> = vec![None; m.len().div_ceil(chunk)];
+        let jobs: Vec<Job<'_>> = m
+            .chunks(chunk)
+            .zip(partials.iter_mut())
+            .enumerate()
+            .map(|(ci, (seg, out))| {
+                Box::new(move || {
+                    *out = seg.iter().position(|&v| v != 0).map(|k| ci * chunk + k);
+                }) as Job<'_>
+            })
+            .collect();
+        self.cfg.dispatch(jobs);
+        partials.into_iter().flatten().next()
     }
 
     /// Rule 6 readout: last matching PE (mirrored priority encoder).
@@ -357,22 +448,19 @@ impl ShardedPlane {
         self.engine.account(ConcurrentCost::broadcast(1, 1));
         let m = self.engine.plane(Reg::M);
         let chunk = m.len().div_ceil(threads).max(1);
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = m
-                .chunks(chunk)
-                .enumerate()
-                .map(|(ci, seg)| {
-                    scope.spawn(move || {
-                        seg.iter().rposition(|&v| v != 0).map(|k| ci * chunk + k)
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .rev()
-                .filter_map(|h| h.join().expect("last-match worker panicked"))
-                .next()
-        })
+        let mut partials: Vec<Option<usize>> = vec![None; m.len().div_ceil(chunk)];
+        let jobs: Vec<Job<'_>> = m
+            .chunks(chunk)
+            .zip(partials.iter_mut())
+            .enumerate()
+            .map(|(ci, (seg, out))| {
+                Box::new(move || {
+                    *out = seg.iter().rposition(|&v| v != 0).map(|k| ci * chunk + k);
+                }) as Job<'_>
+            })
+            .collect();
+        self.cfg.dispatch(jobs);
+        partials.into_iter().rev().flatten().next()
     }
 }
 
@@ -490,8 +578,9 @@ impl ShardWorker<'_> {
     }
 
     /// Dense (`carry == 1`, unconditional) vectorized path over global
-    /// range `[ga, gb]` — the shard-local mirror of the serial engine's
-    /// `step_dense`, with neighbor operands gathered from the snapshot.
+    /// range `[ga, gb]` — the shard-local counterpart of the serial
+    /// engine's `step_dense`, sharing its `apply_slice_op` slice kernels,
+    /// with neighbor operands gathered from the snapshot.
     fn exec_dense(&mut self, instr: &Instr, ga: usize, gb: usize) {
         use Opcode::*;
         let len = gb - ga + 1;
@@ -717,7 +806,8 @@ impl ShardedBitPlane {
     }
 
     /// Execute a whole macro trace, sharding the packed plane words
-    /// across worker threads when the plane is large enough.
+    /// across worker threads when the plane is large enough (dispatching
+    /// per the config's [`SpawnMode`], exactly like [`ShardedPlane`]).
     pub fn run(&mut self, trace: &[Instr]) {
         let p = self.engine.len();
         let words = p.div_ceil(64);
@@ -759,15 +849,19 @@ impl ShardedBitPlane {
 
         let snap_ref = &snap;
         let barrier_ref = &barrier;
-        std::thread::scope(|scope| {
-            for (s, planes) in shard_planes.into_iter().enumerate() {
+        let jobs: Vec<Job<'_>> = shard_planes
+            .into_iter()
+            .enumerate()
+            .map(|(s, planes)| {
                 let (w_lo, w_hi) = bounds[s];
-                scope.spawn(move || {
+                Box::new(move || {
                     let mut worker = BitShardWorker {
-                        w_lo,
-                        w_hi,
-                        words,
-                        p,
+                        range: BitRange {
+                            w_lo,
+                            w_hi,
+                            words,
+                            p,
+                        },
                         planes,
                         snap: snap_ref,
                         barrier: barrier_ref,
@@ -775,30 +869,26 @@ impl ShardedBitPlane {
                     for instr in trace {
                         worker.step(instr);
                     }
-                });
-            }
-        });
+                }) as Job<'_>
+            })
+            .collect();
+        self.cfg.dispatch(jobs);
     }
 }
 
 /// One bit-plane shard: owns plane words `[w_lo, w_hi)` (PE addresses
 /// `[64 * w_lo, 64 * w_hi)`) of every register's every bit plane.
 ///
-/// The opcode kernels below are deliberate range-scoped mirrors of
-/// [`BitEngine::step`]'s (the serial engine's plane primitives count
-/// `plane_ops` through `&mut self`, so they cannot be borrowed by
-/// workers directly). Any semantic change to a serial kernel must land
-/// here too — `tests/sharded_plane.rs` pins the two bit-for-bit across
-/// shard counts, so a one-sided edit fails the differential suite.
-/// Extracting a shared range-parameterized kernel core (as the word
-/// engines share `apply_slice_op`) is tracked in ROADMAP.md.
+/// All bit-serial opcode expansion lives in the shared
+/// [`bit_kernel`](super::bit_kernel) core — the same code the serial
+/// [`BitEngine::step`] runs over the full word range — parameterized by
+/// this shard's [`BitRange`] and reading pre-cycle neighbor bits from
+/// the shared snapshot. There are no per-shard kernel mirrors left to
+/// drift; `tests/sharded_plane.rs` still pins serial ≡ sharded
+/// bit-for-bit across shard counts as the end-to-end seam check.
 struct BitShardWorker<'a> {
-    w_lo: usize,
-    w_hi: usize,
-    /// Total plane words.
-    words: usize,
-    /// Total PEs.
-    p: usize,
+    /// This shard's slice of the word axis.
+    range: BitRange,
     /// `planes[r][k]` = this shard's words of register `r`, bit `k`.
     planes: Vec<Vec<&'a mut [u64]>>,
     /// Shared pre-cycle NB snapshot: plane `k` word `w` at `k * words + w`.
@@ -806,44 +896,18 @@ struct BitShardWorker<'a> {
     barrier: &'a Barrier,
 }
 
-#[inline]
-fn majority(a: u64, b: u64, c: u64) -> u64 {
-    (a & b) | (b & c) | (a & c)
-}
-
 impl BitShardWorker<'_> {
-    fn shard_words(&self) -> usize {
-        self.w_hi - self.w_lo
-    }
-
-    /// Tail mask for the *global* last word (bits >= p are invalid).
-    fn tail_mask(&self) -> u64 {
-        let rem = self.p % 64;
-        if rem == 0 {
-            u64::MAX
-        } else {
-            (1u64 << rem) - 1
-        }
-    }
-
-    /// Mask `plane`'s copy of the global last word, if this shard owns it.
-    fn mask_tail(&self, plane: &mut [u64]) {
-        if self.w_hi == self.words {
-            if let Some(last) = plane.last_mut() {
-                *last &= self.tail_mask();
-            }
-        }
-    }
-
     fn step(&mut self, instr: &Instr) {
         if matches!(instr.opcode, Opcode::Nop) {
             return;
         }
         let neighbor = !matches!(instr.src, Src::Reg(_) | Src::Imm);
         if neighbor {
-            for k in 0..W {
-                let base = k * self.words + self.w_lo;
-                for (j, &v) in self.planes[Reg::Nb as usize][k].iter().enumerate() {
+            // Publish this shard's pre-cycle NB bit planes, then
+            // rendezvous (same two-barrier protocol as the word path).
+            for (k, plane) in self.planes[Reg::Nb as usize].iter().enumerate() {
+                let base = k * self.range.words + self.range.w_lo;
+                for (j, &v) in plane.iter().enumerate() {
                     self.snap[base + j].store(v, Ordering::Relaxed);
                 }
             }
@@ -855,118 +919,37 @@ impl BitShardWorker<'_> {
         }
     }
 
-    /// Rule 4 + conditional-flags enable words for this shard (a pure
-    /// function of global PE addresses; seams need no communication).
-    fn enable_words(&self, instr: &Instr) -> Vec<u64> {
-        let mut en = vec![0u64; self.shard_words()];
-        let start = instr.en_start as usize;
-        let end = (instr.en_end as usize).min(self.p.saturating_sub(1));
-        let carry = (instr.en_carry as usize).max(1);
-        if start <= end && start < self.p {
-            let ga = start.max(self.w_lo * 64);
-            let gb = end.min(self.w_hi * 64 - 1);
-            if ga <= gb {
-                let off = (ga - start) % carry;
-                let mut i = if off == 0 { ga } else { ga + (carry - off) };
-                while i <= gb {
-                    en[i / 64 - self.w_lo] |= 1 << (i % 64);
-                    match i.checked_add(carry) {
-                        Some(n) => i = n,
-                        None => break,
-                    }
-                }
-            }
-        }
-        if instr.flags & (F_COND_M | F_COND_NOT_M) != 0 {
-            // M != 0 plane over this shard's words.
-            let mut mnz = vec![0u64; self.shard_words()];
-            for k in 0..W {
-                for (o, &m) in mnz.iter_mut().zip(self.planes[Reg::M as usize][k].iter()) {
-                    *o |= m;
-                }
-            }
-            if instr.flags & F_COND_M != 0 {
-                for (e, &m) in en.iter_mut().zip(mnz.iter()) {
-                    *e &= m;
-                }
-            }
-            if instr.flags & F_COND_NOT_M != 0 {
-                for (e, &m) in en.iter_mut().zip(mnz.iter()) {
-                    *e &= !m;
-                }
-            }
-        }
-        en
-    }
-
-    /// This shard's words of NB bit plane `k`, shifted `delta` PEs along
-    /// the plane axis (`out[i] = NB[i - delta]`), read from the shared
-    /// pre-cycle snapshot.
-    fn shifted_from_snap(&self, k: usize, delta: i64) -> Vec<u64> {
-        let base = k * self.words;
-        let snap = |w: usize| self.snap[base + w].load(Ordering::Relaxed);
-        let mut out = vec![0u64; self.shard_words()];
-        if delta == 0 {
-            for (j, o) in out.iter_mut().enumerate() {
-                *o = snap(self.w_lo + j);
-            }
-        } else if (delta.unsigned_abs() as usize) >= self.p {
-            // fully shifted out
-        } else if delta > 0 {
-            let d = delta as usize;
-            let (wd, bd) = (d / 64, d % 64);
-            for (j, o) in out.iter_mut().enumerate() {
-                let w = self.w_lo + j;
-                let mut v = 0u64;
-                if w >= wd {
-                    v = snap(w - wd) << bd;
-                    if bd > 0 && w > wd {
-                        v |= snap(w - wd - 1) >> (64 - bd);
-                    }
-                }
-                *o = v;
-            }
-        } else {
-            let d = (-delta) as usize;
-            let (wd, bd) = (d / 64, d % 64);
-            for (j, o) in out.iter_mut().enumerate() {
-                let w = self.w_lo + j;
-                let mut v = 0u64;
-                if w + wd < self.words {
-                    v = snap(w + wd) >> bd;
-                    if bd > 0 && w + wd + 1 < self.words {
-                        v |= snap(w + wd + 1) << (64 - bd);
-                    }
-                }
-                *o = v;
-            }
-        }
-        self.mask_tail(&mut out);
-        out
-    }
-
-    /// Materialize the W source bit planes over this shard's words.
-    fn src_planes(&self, instr: &Instr) -> Vec<Vec<u64>> {
-        match instr.src {
-            Src::Reg(r) => (0..W).map(|k| self.planes[r as usize][k].to_vec()).collect(),
-            Src::Imm => {
-                let imm = instr.imm as u32;
-                (0..W)
-                    .map(|k| {
-                        let fill = if (imm >> k) & 1 == 1 { u64::MAX } else { 0 };
-                        let mut plane = vec![fill; self.shard_words()];
-                        self.mask_tail(&mut plane);
-                        plane
-                    })
-                    .collect()
-            }
-            // Serial convention (`BitEngine::src_planes`): LEFT shifts the
-            // plane by +1 (`out[i] = NB[i-1]`), RIGHT by -1, UP by +nx,
-            // DOWN by -nx.
-            Src::Left => (0..W).map(|k| self.shifted_from_snap(k, 1)).collect(),
-            Src::Right => (0..W).map(|k| self.shifted_from_snap(k, -1)).collect(),
-            Src::Up => (0..W).map(|k| self.shifted_from_snap(k, instr.nx as i64)).collect(),
-            Src::Down => (0..W).map(|k| self.shifted_from_snap(k, -(instr.nx as i64))).collect(),
+    /// Bit-serial execution of one instruction over this shard's words,
+    /// entirely through the shared kernel core.
+    fn exec(&mut self, instr: &Instr) {
+        let range = self.range;
+        let words = range.words;
+        // The kernel's op accounting is discarded here: the sharded
+        // coordinator reproduces plane-op counts on a 1-PE shadow engine
+        // (they are data-independent per instruction).
+        let mut ops = 0u64;
+        let en = bit_kernel::enable_words(
+            &range,
+            instr,
+            |k, j| self.planes[Reg::M as usize][k][j],
+            &mut ops,
+        );
+        let b = bit_kernel::src_planes(
+            &range,
+            instr,
+            |r, k| self.planes[r][k].to_vec(),
+            |k, w| self.snap[k * words + w].load(Ordering::Relaxed),
+            &mut ops,
+        );
+        let dst = instr.dst as usize;
+        let a: Vec<Vec<u64>> = (0..W).map(|k| self.planes[dst][k].to_vec()).collect();
+        let (target, out) = bit_kernel::expand(&range, instr.opcode, instr.imm, &a, b, &mut ops);
+        let wr = match target {
+            WriteBack::M => Reg::M as usize,
+            WriteBack::Dst => dst,
+        };
+        for (k, plane) in out.iter().enumerate() {
+            self.write_masked(wr, k, plane, &en);
         }
     }
 
@@ -977,233 +960,6 @@ impl BitShardWorker<'_> {
             *o = (n & e) | (*o & !e);
         }
     }
-
-    /// Signed less-than plane over this shard (borrowless subtract; the
-    /// word-local carry chains are why whole words are the shard unit).
-    fn less_than(&self, a: &[Vec<u64>], b: &[Vec<u64>]) -> Vec<u64> {
-        let n = self.shard_words();
-        let mut carry = vec![u64::MAX; n];
-        let mut sd = vec![0u64; n];
-        for k in 0..W {
-            let mut sum = vec![0u64; n];
-            let mut next = vec![0u64; n];
-            for j in 0..n {
-                let nb = !b[k][j];
-                sum[j] = a[k][j] ^ nb ^ carry[j];
-                next[j] = majority(a[k][j], nb, carry[j]);
-            }
-            carry = next;
-            if k == W - 1 {
-                sd = sum;
-            }
-        }
-        let sa = &a[W - 1];
-        let sb = &b[W - 1];
-        sa.iter()
-            .zip(sb.iter())
-            .zip(sd.iter())
-            .map(|((&x, &y), &d)| d ^ ((x ^ y) & (x ^ d)))
-            .collect()
-    }
-
-    /// Equality plane over this shard.
-    fn equal(&self, a: &[Vec<u64>], b: &[Vec<u64>]) -> Vec<u64> {
-        let n = self.shard_words();
-        let mut eq = vec![u64::MAX; n];
-        for k in 0..W {
-            for j in 0..n {
-                eq[j] &= !(a[k][j] ^ b[k][j]);
-            }
-        }
-        self.mask_tail(&mut eq);
-        eq
-    }
-
-    fn compare(&self, a: &[Vec<u64>], b: &[Vec<u64>], op: Opcode) -> Vec<u64> {
-        use Opcode::*;
-        let mut res = match op {
-            CmpLt => self.less_than(a, b),
-            CmpGe => {
-                let lt = self.less_than(a, b);
-                lt.iter().map(|&x| !x).collect()
-            }
-            CmpEq => self.equal(a, b),
-            CmpNe => {
-                let eq = self.equal(a, b);
-                eq.iter().map(|&x| !x).collect()
-            }
-            CmpLe => {
-                let lt = self.less_than(a, b);
-                let eq = self.equal(a, b);
-                lt.iter().zip(eq.iter()).map(|(&x, &y)| x | y).collect()
-            }
-            CmpGt => {
-                let lt = self.less_than(a, b);
-                let eq = self.equal(a, b);
-                lt.iter().zip(eq.iter()).map(|(&x, &y)| !(x | y)).collect()
-            }
-            _ => unreachable!("compare() called with non-compare opcode"),
-        };
-        self.mask_tail(&mut res);
-        res
-    }
-
-    /// Bit-serial execution of one instruction over this shard's words
-    /// (mirror of `BitEngine::step`; counters live on the coordinator's
-    /// shadow engine).
-    fn exec(&mut self, instr: &Instr) {
-        let en = self.enable_words(instr);
-        let b = self.src_planes(instr);
-        let dst = instr.dst as usize;
-        let a: Vec<Vec<u64>> = (0..W).map(|k| self.planes[dst][k].to_vec()).collect();
-        let n = self.shard_words();
-        use Opcode::*;
-        match instr.opcode {
-            Nop => {}
-            Copy => {
-                for k in 0..W {
-                    self.write_masked(dst, k, &b[k], &en);
-                }
-            }
-            And | Or | Xor => {
-                for k in 0..W {
-                    let f: fn(u64, u64) -> u64 = match instr.opcode {
-                        And => |x, y| x & y,
-                        Or => |x, y| x | y,
-                        _ => |x, y| x ^ y,
-                    };
-                    let r: Vec<u64> = a[k]
-                        .iter()
-                        .zip(b[k].iter())
-                        .map(|(&x, &y)| f(x, y))
-                        .collect();
-                    self.write_masked(dst, k, &r, &en);
-                }
-            }
-            Add => {
-                let mut carry = vec![0u64; n];
-                for k in 0..W {
-                    let mut sum = vec![0u64; n];
-                    let mut next = vec![0u64; n];
-                    for j in 0..n {
-                        sum[j] = a[k][j] ^ b[k][j] ^ carry[j];
-                        next[j] = majority(a[k][j], b[k][j], carry[j]);
-                    }
-                    carry = next;
-                    self.write_masked(dst, k, &sum, &en);
-                }
-            }
-            Sub => {
-                // a + !b + 1 (borrowless two's-complement subtract).
-                let mut carry = vec![u64::MAX; n];
-                for k in 0..W {
-                    let mut sum = vec![0u64; n];
-                    let mut next = vec![0u64; n];
-                    for j in 0..n {
-                        let nb = !b[k][j];
-                        sum[j] = a[k][j] ^ nb ^ carry[j];
-                        next[j] = majority(a[k][j], nb, carry[j]);
-                    }
-                    carry = next;
-                    self.write_masked(dst, k, &sum, &en);
-                }
-            }
-            CmpLt | CmpLe | CmpEq | CmpNe | CmpGt | CmpGe => {
-                let res = self.compare(&a, &b, instr.opcode);
-                let zero = vec![0u64; n];
-                for k in 1..W {
-                    self.write_masked(Reg::M as usize, k, &zero, &en);
-                }
-                self.write_masked(Reg::M as usize, 0, &res, &en);
-            }
-            Min | Max => {
-                let lt = self.less_than(&a, &b);
-                for k in 0..W {
-                    let r: Vec<u64> = if matches!(instr.opcode, Min) {
-                        lt.iter()
-                            .zip(a[k].iter())
-                            .zip(b[k].iter())
-                            .map(|((&t, &x), &y)| (t & x) | (!t & y))
-                            .collect()
-                    } else {
-                        lt.iter()
-                            .zip(a[k].iter())
-                            .zip(b[k].iter())
-                            .map(|((&t, &x), &y)| (t & y) | (!t & x))
-                            .collect()
-                    };
-                    self.write_masked(dst, k, &r, &en);
-                }
-            }
-            AbsDiff => {
-                // d = a - b; then conditional negate by the sign plane.
-                let mut d: Vec<Vec<u64>> = Vec::with_capacity(W);
-                let mut carry = vec![u64::MAX; n];
-                for k in 0..W {
-                    let mut sum = vec![0u64; n];
-                    let mut next = vec![0u64; n];
-                    for j in 0..n {
-                        let nb = !b[k][j];
-                        sum[j] = a[k][j] ^ nb ^ carry[j];
-                        next[j] = majority(a[k][j], nb, carry[j]);
-                    }
-                    carry = next;
-                    d.push(sum);
-                }
-                let neg = d[W - 1].clone();
-                // r = (d ^ neg) + neg (negate where neg, identity else).
-                let mut c = neg.clone();
-                for k in 0..W {
-                    let mut sum = vec![0u64; n];
-                    let mut next = vec![0u64; n];
-                    for j in 0..n {
-                        let x = d[k][j] ^ neg[j];
-                        sum[j] = x ^ c[j];
-                        next[j] = x & c[j];
-                    }
-                    c = next;
-                    self.write_masked(dst, k, &sum, &en);
-                }
-            }
-            Mul => {
-                // Shift-and-add: product += (a << k) & b[k], W rounds.
-                let mut prod: Vec<Vec<u64>> = vec![vec![0u64; n]; W];
-                for k in 0..W {
-                    let mut carry = vec![0u64; n];
-                    for jk in k..W {
-                        let mut sum = vec![0u64; n];
-                        let mut next = vec![0u64; n];
-                        for j in 0..n {
-                            let addend = a[jk - k][j] & b[k][j];
-                            sum[j] = prod[jk][j] ^ addend ^ carry[j];
-                            next[j] = majority(prod[jk][j], addend, carry[j]);
-                        }
-                        carry = next;
-                        prod[jk] = sum;
-                    }
-                }
-                for k in 0..W {
-                    let row = prod[k].clone();
-                    self.write_masked(dst, k, &row, &en);
-                }
-            }
-            Shr => {
-                let s = instr.imm.clamp(0, 31) as usize;
-                let sign = a[W - 1].clone();
-                for k in 0..W {
-                    let r = if k + s < W { a[k + s].clone() } else { sign.clone() };
-                    self.write_masked(dst, k, &r, &en);
-                }
-            }
-            Shl => {
-                let s = instr.imm.clamp(0, 31) as usize;
-                for k in 0..W {
-                    let r = if k >= s { a[k - s].clone() } else { vec![0u64; n] };
-                    self.write_masked(dst, k, &r, &en);
-                }
-            }
-        }
-    }
 }
 
 #[cfg(test)]
@@ -1211,10 +967,7 @@ mod tests {
     use super::*;
 
     fn par(threads: usize) -> ExecConfig {
-        ExecConfig {
-            threads,
-            min_shard_pes: 1,
-        }
+        ExecConfig::with_min_shard(threads, 1)
     }
 
     #[test]
@@ -1238,15 +991,24 @@ mod tests {
 
     #[test]
     fn effective_threads_respects_floor() {
-        let cfg = ExecConfig {
-            threads: 8,
-            min_shard_pes: 100,
-        };
+        let cfg = ExecConfig::with_min_shard(8, 100);
         assert_eq!(cfg.effective_threads(0), 1);
         assert_eq!(cfg.effective_threads(99), 1);
         assert_eq!(cfg.effective_threads(250), 2);
         assert_eq!(cfg.effective_threads(100_000), 8);
         assert_eq!(ExecConfig::serial().effective_threads(1 << 20), 1);
+    }
+
+    #[test]
+    fn config_equality_ignores_pool_identity() {
+        // Two configs with the same policy but different pools compare
+        // equal: which OS threads run the shards is not observable.
+        assert_eq!(ExecConfig::with_threads(4), ExecConfig::with_threads(4));
+        assert_ne!(ExecConfig::with_threads(4), ExecConfig::with_threads(2));
+        assert_ne!(
+            ExecConfig::with_threads(4),
+            ExecConfig::with_threads(4).spawn_mode(SpawnMode::PerCall)
+        );
     }
 
     #[test]
@@ -1264,11 +1026,13 @@ mod tests {
         serial.load_plane(Reg::Nb, &vals);
         serial.run(&trace);
         for threads in [2usize, 3, 7] {
-            let mut sharded = ShardedPlane::new(p, 16, par(threads));
-            sharded.load_plane(Reg::Nb, &vals);
-            sharded.run(&trace);
-            assert_eq!(sharded.state(), serial.state(), "threads={threads}");
-            assert_eq!(sharded.cost(), serial.cost(), "threads={threads}");
+            for spawn in [SpawnMode::Persistent, SpawnMode::PerCall] {
+                let mut sharded = ShardedPlane::new(p, 16, par(threads).spawn_mode(spawn));
+                sharded.load_plane(Reg::Nb, &vals);
+                sharded.run(&trace);
+                assert_eq!(sharded.state(), serial.state(), "threads={threads} {spawn:?}");
+                assert_eq!(sharded.cost(), serial.cost(), "threads={threads} {spawn:?}");
+            }
         }
     }
 
@@ -1325,12 +1089,39 @@ mod tests {
         serial.load_plane(Reg::Nb, &vals);
         serial.run(&trace);
         for threads in [2usize, 3] {
-            let mut sharded = ShardedBitPlane::new(p, par(threads));
-            sharded.load_plane(Reg::Nb, &vals);
-            sharded.run(&trace);
-            assert_eq!(sharded.state(), serial.state(), "threads={threads}");
-            assert_eq!(sharded.plane_ops(), serial.plane_ops(), "threads={threads}");
-            assert_eq!(sharded.cost(), serial.cost(), "threads={threads}");
+            for spawn in [SpawnMode::Persistent, SpawnMode::PerCall] {
+                let mut sharded = ShardedBitPlane::new(p, par(threads).spawn_mode(spawn));
+                sharded.load_plane(Reg::Nb, &vals);
+                sharded.run(&trace);
+                assert_eq!(sharded.state(), serial.state(), "threads={threads} {spawn:?}");
+                assert_eq!(
+                    sharded.plane_ops(),
+                    serial.plane_ops(),
+                    "threads={threads} {spawn:?}"
+                );
+                assert_eq!(sharded.cost(), serial.cost(), "threads={threads} {spawn:?}");
+            }
         }
+    }
+
+    #[test]
+    fn persistent_pool_parks_and_reuses_workers_across_steps() {
+        // Step-at-a-time on one plane: every parallel step dispatches
+        // onto the same parked workers instead of spawning threads.
+        let cfg = par(4);
+        let mut plane = ShardedPlane::new(64, 16, cfg.clone());
+        for s in 0..10 {
+            plane.step(&Instr::all(Opcode::Add, Src::Imm, Reg::Nb).imm(s));
+        }
+        let pool = cfg.worker_pool();
+        // The dispatching thread runs shard 0 itself: 4 threads -> 3
+        // parked workers, reused for all 10 dispatches.
+        assert_eq!(pool.workers(), 3);
+        assert_eq!(pool.dispatches(), 10);
+        // Serial configs never touch the pool.
+        let serial_cfg = ExecConfig::serial();
+        let mut serial_plane = ShardedPlane::new(64, 16, serial_cfg.clone());
+        serial_plane.step(&Instr::all(Opcode::Add, Src::Imm, Reg::Nb).imm(1));
+        assert_eq!(serial_cfg.worker_pool().workers(), 0);
     }
 }

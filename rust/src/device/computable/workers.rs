@@ -1,0 +1,513 @@
+//! Persistent PE-plane worker pool: parked std threads that shard cycles
+//! dispatch onto, instead of spawning a `std::thread::scope` per `run()`
+//! call.
+//!
+//! The paper's premise is that every PE steps on every instruction cycle,
+//! so step-at-a-time callers — the trace interpreter's per-window match
+//! counts, readout-driven algorithms like sort's √N passes — issue one
+//! `run()` per instruction. With scoped threads each of those calls pays
+//! an OS thread spawn + join per worker, a floor of tens of microseconds
+//! that the cycle-level cost model never sees. This module keeps the
+//! workers alive and **parked** between calls, so a single-instruction
+//! dispatch costs one mailbox post + condvar wake per worker and one
+//! epoch-counted completion barrier — measured by E22 as the per-step
+//! floor dropping well below the spawn-per-call strategy.
+//!
+//! Protocol (one dispatch at a time per pool, serialized by an internal
+//! lock):
+//!
+//! 1. *Post.* The dispatcher claims the next **epoch**, then counts
+//!    each job into the epoch's outstanding total as it posts it into a
+//!    participating worker's **mailbox** (a one-slot `Mutex` + `Condvar`
+//!    pair the worker parks on). The dispatching thread keeps shard 0
+//!    for itself, so `threads = N` wakes only `N - 1` workers.
+//! 2. *Run.* Workers wake, run their job (seam synchronization between
+//!    shards — the pre-cycle NB snapshot barriers — lives inside the job,
+//!    exactly as it did under scoped threads), and decrement the epoch's
+//!    outstanding count; the last one signals the dispatcher.
+//! 3. *Join.* The dispatcher runs its own shard, then blocks until the
+//!    epoch drains. Only then does it return — which is what makes
+//!    lending stack-borrowing jobs to `'static` workers sound (see
+//!    [`WorkerPool::scope_run`]).
+//!
+//! Failure and shutdown semantics:
+//!
+//! * A panicking job (an engine invariant violation) is caught on the
+//!   worker, the epoch still drains, and the payload is re-thrown on the
+//!   dispatcher — the pool itself stays healthy and accepts the next
+//!   dispatch (pinned by the re-dispatch-after-error test below).
+//! * Dropping the last handle posts a shutdown message to every mailbox
+//!   and joins the threads, so a served process exits cleanly with its
+//!   pool (drop-while-parked is the common case and is also tested).
+//!
+//! The pool is a *handle*: cloning shares the same workers, and
+//! [`ExecConfig`](super::sharded::ExecConfig) carries one handle through
+//! `PoolConfig` → `CpmServer` → `BatchExecutor` and into the trace
+//! interpreter, so a served process warms its workers once and reuses
+//! them for every request for the lifetime of the server.
+
+use std::any::Any;
+use std::fmt;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// One shard's work for one dispatch. Jobs may borrow the dispatching
+/// call's stack (plane slices, NB snapshots, seam barriers): the pool
+/// guarantees every job finished before the dispatch returns.
+pub(crate) type Job<'scope> = Box<dyn FnOnce() + Send + 'scope>;
+
+/// Run `jobs` on per-call scoped threads: one OS thread spawn + join per
+/// job, every call. This is the pre-pool execution strategy, kept as
+/// [`SpawnMode::PerCall`](super::sharded::SpawnMode) both as the
+/// differential-testing reference (pool-backed ≡ scope-backed ≡ serial in
+/// `tests/sharded_plane.rs`) and as the cost floor E22 measures the
+/// persistent pool against.
+pub(crate) fn run_scoped(jobs: Vec<Job<'_>>) {
+    std::thread::scope(|scope| {
+        for job in jobs {
+            scope.spawn(job);
+        }
+    });
+}
+
+/// A persistent, lazily spawned pool of parked worker threads.
+///
+/// The handle is cheap to clone and clones share the same workers; no
+/// thread exists until the first parallel dispatch needs it, and the pool
+/// grows to the largest shard count it has ever served (extra workers
+/// stay parked when a smaller plane dispatches — oversubscription is
+/// free). Dropping the last handle shuts the workers down and joins them.
+#[derive(Clone, Default)]
+pub struct WorkerPool {
+    inner: Arc<PoolInner>,
+}
+
+/// Owner of the spawned threads; dropped when the last handle goes away.
+#[derive(Default)]
+struct PoolInner {
+    state: Mutex<PoolState>,
+}
+
+#[derive(Default)]
+struct PoolState {
+    core: Option<Arc<PoolCore>>,
+    mailboxes: Vec<Arc<Mailbox>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// Dispatcher/worker coordination state (shared with every worker).
+struct PoolCore {
+    /// Serializes dispatches: the epoch protocol below assumes the done
+    /// counter belongs to exactly one in-flight dispatch.
+    dispatch: Mutex<()>,
+    done: Mutex<DoneState>,
+    done_cv: Condvar,
+}
+
+/// The epoch-counted completion barrier. Each dispatch claims the next
+/// `epoch`, then increments `remaining` once per job *as it posts it*;
+/// workers decrement as they finish and the last signals the condvar.
+/// Counting per post (rather than pre-setting the total) means a
+/// dispatch that unwinds mid-post still has an accurate outstanding
+/// count to drain against. Epochs are strictly serialized by
+/// [`PoolCore::dispatch`], so a wake can never be attributed to a stale
+/// dispatch.
+#[derive(Default)]
+struct DoneState {
+    epoch: u64,
+    remaining: usize,
+    /// Panic payloads caught from this epoch's workers.
+    panics: Vec<Box<dyn Any + Send>>,
+}
+
+/// Waits, on drop, until the current epoch's posted jobs have all
+/// finished. Expressed as a drop guard so the wait runs on *every* exit
+/// path from a dispatch — a panic unwinding between job posts and the
+/// normal join included — which is what makes lending stack borrows to
+/// the `'static` workers structurally sound rather than sound by
+/// control-flow inspection (see [`WorkerPool::scope_run`]).
+struct EpochDrain<'a> {
+    core: &'a PoolCore,
+}
+
+impl Drop for EpochDrain<'_> {
+    fn drop(&mut self) {
+        let mut done = self
+            .core
+            .done
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        while done.remaining > 0 {
+            done = self
+                .core
+                .done_cv
+                .wait(done)
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+        }
+    }
+}
+
+/// One worker's one-slot mailbox; the worker parks on `cv` while the
+/// slot is empty.
+struct Mailbox {
+    slot: Mutex<Slot>,
+    cv: Condvar,
+}
+
+enum Slot {
+    Empty,
+    Job(Job<'static>),
+    Shutdown,
+}
+
+impl Mailbox {
+    fn new() -> Self {
+        Mailbox {
+            slot: Mutex::new(Slot::Empty),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Post a job and wake the parked worker. The dispatch serialization
+    /// plus the completion barrier guarantee the slot is empty here.
+    fn post(&self, job: Job<'static>) {
+        let mut slot = self.slot.lock().expect("mailbox lock");
+        debug_assert!(matches!(*slot, Slot::Empty), "posted to a busy mailbox");
+        *slot = Slot::Job(job);
+        self.cv.notify_one();
+    }
+
+    /// Post the shutdown message (sticky: every later `take` sees it).
+    fn shutdown(&self) {
+        let mut slot = self.slot.lock().unwrap_or_else(|e| e.into_inner());
+        *slot = Slot::Shutdown;
+        self.cv.notify_one();
+    }
+
+    /// Park until a job or shutdown arrives; `None` means shut down.
+    fn take(&self) -> Option<Job<'static>> {
+        let mut slot = self.slot.lock().expect("mailbox lock");
+        loop {
+            match std::mem::replace(&mut *slot, Slot::Empty) {
+                Slot::Job(job) => return Some(job),
+                Slot::Shutdown => {
+                    *slot = Slot::Shutdown;
+                    return None;
+                }
+                Slot::Empty => slot = self.cv.wait(slot).expect("mailbox wait"),
+            }
+        }
+    }
+}
+
+/// Worker body: park on the mailbox, run jobs, report to the epoch
+/// barrier. Panics are caught so an engine error poisons neither the
+/// worker nor the pool.
+fn worker_loop(mail: Arc<Mailbox>, core: Arc<PoolCore>) {
+    while let Some(job) = mail.take() {
+        let result = catch_unwind(AssertUnwindSafe(job));
+        let mut done = core.done.lock().expect("done lock");
+        if let Err(payload) = result {
+            done.panics.push(payload);
+        }
+        done.remaining -= 1;
+        if done.remaining == 0 {
+            core.done_cv.notify_all();
+        }
+    }
+}
+
+impl WorkerPool {
+    /// Fresh handle with no workers; threads spawn lazily on the first
+    /// dispatch that needs them.
+    pub fn new() -> Self {
+        WorkerPool::default()
+    }
+
+    /// Worker threads currently alive (parked or running). The
+    /// dispatching thread itself executes one shard, so a pool serving
+    /// `threads = N` planes holds `N - 1` workers.
+    pub fn workers(&self) -> usize {
+        let state = self.inner.state.lock().expect("pool state lock");
+        state.handles.len()
+    }
+
+    /// Parallel dispatches *claimed* over the pool's lifetime (the epoch
+    /// counter — a dispatch counts when it starts, so a concurrent
+    /// reader may see one that is still draining; serial and single-job
+    /// calls bypass the pool and are not counted).
+    pub fn dispatches(&self) -> u64 {
+        let state = self.inner.state.lock().expect("pool state lock");
+        match &state.core {
+            Some(core) => core.done.lock().expect("done lock").epoch,
+            None => 0,
+        }
+    }
+
+    /// Spawn workers up to `n` and return the coordination core plus the
+    /// first `n` mailboxes.
+    fn ensure_workers(&self, n: usize) -> (Arc<PoolCore>, Vec<Arc<Mailbox>>) {
+        let mut state = self.inner.state.lock().expect("pool state lock");
+        if state.core.is_none() {
+            state.core = Some(Arc::new(PoolCore {
+                dispatch: Mutex::new(()),
+                done: Mutex::new(DoneState::default()),
+                done_cv: Condvar::new(),
+            }));
+        }
+        let core = state.core.as_ref().expect("core just ensured").clone();
+        while state.handles.len() < n {
+            let mail = Arc::new(Mailbox::new());
+            let worker_mail = mail.clone();
+            let worker_core = core.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("cpm-pe-worker-{}", state.handles.len()))
+                .spawn(move || worker_loop(worker_mail, worker_core))
+                .expect("spawn PE-plane worker");
+            state.mailboxes.push(mail);
+            state.handles.push(handle);
+        }
+        (core, state.mailboxes[..n].to_vec())
+    }
+
+    /// Run `jobs` to completion: job 0 on the calling thread, the rest on
+    /// parked workers, returning only after every job finished. That
+    /// completion guarantee is what lets callers lend stack borrows to
+    /// the `'static` worker threads — the lifetime is erased on the way
+    /// in, and re-established by the epoch barrier on the way out.
+    ///
+    /// A panic in any job (the dispatcher's own included) is re-thrown
+    /// here after the epoch drains; the workers survive and the pool
+    /// accepts the next dispatch.
+    pub(crate) fn scope_run<'scope>(&self, mut jobs: Vec<Job<'scope>>) {
+        let n = jobs.len();
+        if n == 0 {
+            return;
+        }
+        if n == 1 {
+            // No parallelism to buy: run inline, keep the pool cold.
+            return (jobs.pop().expect("one job"))();
+        }
+        let (core, mailboxes) = self.ensure_workers(n - 1);
+        // One dispatch at a time: the done counter below belongs to this
+        // epoch alone.
+        let dispatch_guard = core.dispatch.lock().expect("dispatch lock");
+        {
+            let mut done = core.done.lock().expect("done lock");
+            done.epoch += 1;
+            debug_assert_eq!(done.remaining, 0);
+            debug_assert!(done.panics.is_empty());
+        }
+        // From the first post until this guard drops, the epoch MUST
+        // drain before control can leave this frame — normal return and
+        // panic unwind alike — because the posted jobs borrow it.
+        let drain = EpochDrain { core: &core };
+        let mut jobs = jobs.into_iter();
+        let own = jobs.next().expect("n >= 2");
+        for (mail, job) in mailboxes.iter().zip(jobs) {
+            {
+                // Count before posting, so a fast worker's decrement can
+                // never underflow and an unwind mid-loop drains exactly
+                // the jobs actually posted.
+                let mut done = core.done.lock().expect("done lock");
+                done.remaining += 1;
+            }
+            // SAFETY: erasing 'scope to 'static only changes the
+            // lifetime bound of the trait object; layout is identical.
+            // The job cannot outlive 'scope because `drain` waits for
+            // every posted job on every exit path from this frame (its
+            // Drop runs during unwinds too), and the job was counted
+            // into the epoch before it was posted.
+            let job: Job<'static> =
+                unsafe { std::mem::transmute::<Job<'scope>, Job<'static>>(job) };
+            mail.post(job);
+        }
+        // The dispatcher is worker 0: run its shard while the others go.
+        let own_result = catch_unwind(AssertUnwindSafe(own));
+        // Epoch barrier: block until every posted job completed.
+        drop(drain);
+        let worker_panic = {
+            let mut done = core.done.lock().expect("done lock");
+            debug_assert_eq!(done.remaining, 0);
+            let first = if done.panics.is_empty() {
+                None
+            } else {
+                Some(done.panics.swap_remove(0))
+            };
+            done.panics.clear();
+            first
+        };
+        drop(dispatch_guard);
+        if let Err(payload) = own_result {
+            resume_unwind(payload);
+        }
+        if let Some(payload) = worker_panic {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // try_lock: Debug must never block (or self-deadlock) on a pool
+        // mid-dispatch.
+        match self.inner.state.try_lock() {
+            Ok(state) => write!(f, "WorkerPool({} workers)", state.handles.len()),
+            Err(_) => write!(f, "WorkerPool(busy)"),
+        }
+    }
+}
+
+impl Drop for PoolInner {
+    fn drop(&mut self) {
+        // Last handle gone: no dispatch can be in flight, so every worker
+        // is parked. Wake them all with the shutdown message and join.
+        let mut state = self
+            .state
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        for mail in &state.mailboxes {
+            mail.shutdown();
+        }
+        for handle in state.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn add_jobs(counter: &AtomicUsize, n: usize) -> Vec<Job<'_>> {
+        (0..n)
+            .map(|_| {
+                Box::new(move || {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                }) as Job<'_>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn lazy_spawn_and_single_job_runs_inline() {
+        let pool = WorkerPool::new();
+        assert_eq!(pool.workers(), 0);
+        let counter = AtomicUsize::new(0);
+        pool.scope_run(add_jobs(&counter, 1));
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+        // A single job never wakes (or spawns) a worker.
+        assert_eq!(pool.workers(), 0);
+        assert_eq!(pool.dispatches(), 0);
+    }
+
+    #[test]
+    fn dispatch_runs_every_job_and_parks_workers_for_reuse() {
+        let pool = WorkerPool::new();
+        let counter = AtomicUsize::new(0);
+        for round in 1..=10u64 {
+            pool.scope_run(add_jobs(&counter, 4));
+            assert_eq!(counter.load(Ordering::SeqCst), 4 * round as usize);
+            // Workers persist across dispatches instead of respawning.
+            assert_eq!(pool.workers(), 3, "round {round}");
+            assert_eq!(pool.dispatches(), round);
+        }
+    }
+
+    #[test]
+    fn pool_grows_to_the_largest_dispatch_and_tolerates_smaller_ones() {
+        let pool = WorkerPool::new();
+        let counter = AtomicUsize::new(0);
+        pool.scope_run(add_jobs(&counter, 3));
+        assert_eq!(pool.workers(), 2);
+        pool.scope_run(add_jobs(&counter, 7));
+        assert_eq!(pool.workers(), 6);
+        // Oversubscription the other way: a small dispatch on a big pool
+        // leaves the extra workers parked.
+        pool.scope_run(add_jobs(&counter, 2));
+        assert_eq!(pool.workers(), 6);
+        assert_eq!(counter.load(Ordering::SeqCst), 12);
+    }
+
+    #[test]
+    fn jobs_borrow_the_dispatching_stack() {
+        let pool = WorkerPool::new();
+        let mut outs = vec![0usize; 5];
+        let jobs: Vec<Job<'_>> = outs
+            .iter_mut()
+            .enumerate()
+            .map(|(i, out)| {
+                Box::new(move || {
+                    *out = i * i;
+                }) as Job<'_>
+            })
+            .collect();
+        pool.scope_run(jobs);
+        assert_eq!(outs, vec![0, 1, 4, 9, 16]);
+    }
+
+    #[test]
+    fn clones_share_the_same_workers() {
+        let pool = WorkerPool::new();
+        let alias = pool.clone();
+        let counter = AtomicUsize::new(0);
+        pool.scope_run(add_jobs(&counter, 4));
+        alias.scope_run(add_jobs(&counter, 4));
+        assert_eq!(pool.workers(), 3);
+        assert_eq!(alias.dispatches(), 2);
+    }
+
+    #[test]
+    fn redispatch_after_a_worker_panic() {
+        let pool = WorkerPool::new();
+        let counter = AtomicUsize::new(0);
+        let mut jobs = add_jobs(&counter, 3);
+        // Job 1 lands on a pool worker (job 0 runs on the dispatcher).
+        jobs[1] = Box::new(|| panic!("engine invariant violated"));
+        let caught = catch_unwind(AssertUnwindSafe(|| pool.scope_run(jobs)));
+        let payload = caught.expect_err("worker panic must propagate");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert!(msg.contains("engine invariant"), "payload was {msg:?}");
+        // The epoch drained: the healthy jobs still ran ...
+        assert_eq!(counter.load(Ordering::SeqCst), 2);
+        // ... and the pool accepts the next dispatch on the same workers.
+        pool.scope_run(add_jobs(&counter, 3));
+        assert_eq!(counter.load(Ordering::SeqCst), 5);
+        assert_eq!(pool.workers(), 2);
+    }
+
+    #[test]
+    fn dispatcher_panic_still_drains_the_epoch() {
+        let pool = WorkerPool::new();
+        let counter = AtomicUsize::new(0);
+        let mut jobs = add_jobs(&counter, 4);
+        // Job 0 runs on the dispatching thread itself.
+        jobs[0] = Box::new(|| panic!("dispatcher-side failure"));
+        let caught = catch_unwind(AssertUnwindSafe(|| pool.scope_run(jobs)));
+        assert!(caught.is_err());
+        // Every worker job still completed before the panic re-threw —
+        // the completion guarantee scope_run's soundness rests on.
+        assert_eq!(counter.load(Ordering::SeqCst), 3);
+        pool.scope_run(add_jobs(&counter, 4));
+        assert_eq!(counter.load(Ordering::SeqCst), 7);
+    }
+
+    #[test]
+    fn drop_while_parked_joins_cleanly() {
+        let pool = WorkerPool::new();
+        let counter = AtomicUsize::new(0);
+        pool.scope_run(add_jobs(&counter, 6));
+        assert_eq!(pool.workers(), 5);
+        // All five workers are parked on their mailboxes; dropping the
+        // last handle must wake, stop, and join every one (a hang here
+        // fails the test by timeout).
+        drop(pool);
+    }
+
+    #[test]
+    fn drop_never_spawned_is_a_noop() {
+        drop(WorkerPool::new());
+    }
+}

@@ -19,7 +19,11 @@
 //!
 //! `pool`, `serve`, `netbench`, and `runtime-check` accept `--threads N`
 //! to run large dense PE planes sharded across N std worker threads
-//! (default 1 = the serial engines).
+//! (default 1 = the serial engines). The threads are a persistent pool
+//! of parked workers owned by the process's `ExecConfig`: a served
+//! process warms them once and every request — single-instruction steps
+//! included — dispatches onto the same workers (see DESIGN.md
+//! "Execution model").
 
 use std::time::{Duration, Instant};
 
@@ -299,7 +303,7 @@ fn serve_cmd(cli: &Cli) -> cpm::Result<()> {
     let rows = cli.get("rows", 4096usize);
     let secs = cli.get("secs", 0u64);
     let exec = exec_config(cli);
-    let server = demo_server(rows, cli.get("seed", 42u64), exec)?;
+    let server = demo_server(rows, cli.get("seed", 42u64), exec.clone())?;
     let cfg = net_config(cli, addr);
     let window_us = cfg.window.max_delay.as_micros();
     let max_batch = cfg.window.max_batch;
@@ -398,7 +402,7 @@ fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
     let clients = cli.get("clients", 8usize).max(1);
     let rows = cli.get("rows", 4096usize);
     let exec = exec_config(cli);
-    let server = demo_server(rows, cli.get("seed", 42u64), exec)?;
+    let server = demo_server(rows, cli.get("seed", 42u64), exec.clone())?;
     let cfg = net_config(cli, "127.0.0.1:0");
     let window_us = cfg.window.max_delay.as_micros();
     let max_batch = cfg.window.max_batch;

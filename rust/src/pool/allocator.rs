@@ -18,7 +18,7 @@ use crate::error::{CpmError, Result};
 use crate::sql::{Schema, Table};
 
 /// Allocator policy knobs.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct PoolConfig {
     /// Total PE budget across all resident devices.
     pub capacity_pes: usize,
@@ -198,7 +198,7 @@ impl DevicePool {
 
     /// The allocator policy.
     pub fn config(&self) -> PoolConfig {
-        self.cfg
+        self.cfg.clone()
     }
 
     /// Override one tenant's resident-PE quota.

@@ -83,13 +83,15 @@ impl<'a> AddressedRef<'a> {
 
 /// Groups, executes, and overlap-schedules a queue of requests against a
 /// [`DevicePool`].
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct BatchExecutor {
     /// Largest ad-hoc array a computable-memory job may load.
     engine_capacity: usize,
     /// Plane-execution policy for computable-memory work: large dense
-    /// planes run sharded across std threads
-    /// ([`ShardedPlane`]); `threads = 1` is the serial engines.
+    /// planes run sharded across std threads ([`ShardedPlane`]);
+    /// `threads = 1` is the serial engines. The config carries the
+    /// server's persistent worker-pool handle, so every request's plane
+    /// dispatches onto the same parked workers for the process lifetime.
     exec: ExecConfig,
 }
 
@@ -442,7 +444,7 @@ impl BatchExecutor {
             Err(e) => return (Err(e), ConcurrentCost::default()),
         };
         let n = values.len();
-        let mut e = ShardedPlane::new(n.max(1), 16, self.exec);
+        let mut e = ShardedPlane::new(n.max(1), 16, self.exec.clone());
         e.load_plane(Reg::Nb, &values);
         // The array is resident in the PE plane between jobs: its load was
         // paid at admission, so a job charges execution cycles only.
@@ -481,7 +483,7 @@ impl BatchExecutor {
                 self.engine_capacity
             )));
         }
-        let mut e = ShardedPlane::new(values.len().max(1), 16, self.exec);
+        let mut e = ShardedPlane::new(values.len().max(1), 16, self.exec.clone());
         e.load_plane(Reg::Nb, values);
         Ok(e)
     }

@@ -18,11 +18,12 @@
 //! [`Backend`] aliases whichever backend the feature set selects, so
 //! callers (CLI `runtime-check`, `benches/paper.rs` E19, the
 //! engine-equivalence tests) are written once against the shared API.
+#![warn(missing_docs)]
 
 use std::path::{Path, PathBuf};
 
 use crate::device::computable::isa::{Instr, INSTR_WIDTH, N_REGS};
-use crate::device::computable::{ExecConfig, Reg, ShardedPlane};
+use crate::device::computable::{ExecConfig, Reg, ShardedPlane, SpawnMode};
 use crate::error::{CpmError, Result};
 
 #[cfg(feature = "pjrt")]
@@ -94,9 +95,12 @@ pub(crate) fn encode_window(trace: &[Instr], t: usize) -> Vec<i32> {
     words
 }
 
-/// Per-shard PE floor for the interpreter's step-at-a-time execution:
-/// one scoped spawn/join per instruction only pays off on planes well
-/// past the general [`ExecConfig`] default.
+/// Per-shard PE floor for the interpreter's step-at-a-time execution
+/// under `SpawnMode::PerCall`: one scoped spawn/join per instruction
+/// only pays off on planes well past the general [`ExecConfig`]
+/// default. The persistent pool (the default spawn mode) drops the
+/// per-step floor to a mailbox wake + epoch barrier (E22), so it keeps
+/// the config's own floor instead.
 const STEP_MIN_SHARD_PES: usize = 1 << 16;
 
 /// Dispatch-window shapes the interpreter offers when no artifact
@@ -190,14 +194,17 @@ impl TraceInterpreter {
     ) -> Result<(Vec<i32>, Vec<i32>)> {
         assert_eq!(state.len(), N_REGS * p);
         // The dispatch API requires a match count after *every*
-        // instruction, so the window executes step by step — each
-        // parallel step pays one scoped spawn/join. Raise the per-shard
-        // floor so sharding only engages where a single step outweighs
-        // that orchestration cost; smaller planes stay serial even when
-        // `--threads` asks for more.
-        let exec = ExecConfig {
-            min_shard_pes: self.exec.min_shard_pes.max(STEP_MIN_SHARD_PES),
-            ..self.exec
+        // instruction, so the window executes step by step. Under the
+        // persistent worker pool (the default) a parallel step costs a
+        // wake + epoch barrier, so the config's own shard floor stands —
+        // and the pool handle is shared with the clone, so every window
+        // reuses the same parked workers for the interpreter's lifetime.
+        // Spawn-per-call pays a thread spawn/join per step instead:
+        // raise its floor so sharding only engages where one step
+        // outweighs that orchestration cost.
+        let exec = match self.exec.spawn {
+            SpawnMode::Persistent => self.exec.clone(),
+            SpawnMode::PerCall => self.exec.clone().floor_at_least(STEP_MIN_SHARD_PES),
         };
         let mut engine = ShardedPlane::new(p, 32, exec);
         engine.set_state(state);

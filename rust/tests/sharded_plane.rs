@@ -17,6 +17,13 @@
 //!   sort / threshold / histogram algorithms, which interleave plane
 //!   cycles with host readouts.
 //!
+//! Both spawn modes are under test: the persistent worker pool
+//! (`SpawnMode::Persistent`, the default — parked threads, mailbox
+//! dispatch, epoch barrier) and the per-call `std::thread::scope`
+//! strategy it replaced (`SpawnMode::PerCall`), which stays in the tree
+//! precisely so this suite can require
+//! **pool-backed ≡ scope-backed ≡ serial**.
+//!
 //! CI runs this file single-threaded (`RUST_TEST_THREADS=1`,
 //! `--test-threads=1`) so shard-seam races cannot hide behind
 //! test-runner parallelism.
@@ -25,21 +32,19 @@ use cpm::algos::{histogram, reduce, sort, threshold};
 use cpm::device::computable::bit_engine::BitEngine;
 use cpm::device::computable::isa::{F_COND_M, F_COND_NOT_M};
 use cpm::device::computable::{
-    ExecConfig, Instr, Opcode, Reg, ShardedBitPlane, ShardedPlane, Src, WordEngine,
+    ExecConfig, Instr, Opcode, Reg, ShardedBitPlane, ShardedPlane, SpawnMode, Src, WordEngine,
 };
 use cpm::logic::{AllLineDecoder, CarryPatternGenerator};
 use cpm::util::propcheck::{forall_sized, Config};
 use cpm::util::rng::Rng;
 
 const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 7];
+const SPAWN_MODES: [SpawnMode; 2] = [SpawnMode::Persistent, SpawnMode::PerCall];
 
 /// Parallel config with the size floor disabled, so tiny planes really
-/// do split across workers.
+/// do split across workers (persistent-pool dispatch, the default).
 fn par(threads: usize) -> ExecConfig {
-    ExecConfig {
-        threads,
-        min_shard_pes: 1,
-    }
+    ExecConfig::with_min_shard(threads, 1)
 }
 
 /// One random macro instruction over a `p`-PE plane: any opcode, any
@@ -256,6 +261,144 @@ fn threads_one_is_the_serial_path() {
     assert_eq!(bone.state(), bserial.state());
     assert_eq!(bone.plane_ops(), bserial.plane_ops());
     assert_eq!(bone.cost(), bserial.cost());
+}
+
+#[test]
+fn pool_backed_equals_scope_backed_equals_serial() {
+    // The tentpole differential: for random traces, plane sizes, and
+    // shard counts {1, 2, 3, 7}, dispatching onto the persistent worker
+    // pool and spawning a scope per call are both bit-identical to the
+    // serial engines — state AND cost — on the word and bit planes.
+    forall_sized(
+        Config {
+            iters: 20,
+            base_seed: 0x900_1F00,
+        },
+        |rng, size| {
+            let p = 1 + 5 * size + rng.range(0, 7);
+            let vals = rng.vec_i32(p, -3000, 3000);
+            let trace: Vec<Instr> = (0..6 + size / 6).map(|_| random_instr(rng, p)).collect();
+            (p, vals, trace)
+        },
+        |(p, vals, trace)| {
+            let mut serial = WordEngine::new(*p, 16);
+            serial.load_plane(Reg::Nb, vals);
+            serial.run(trace);
+            let mut bit_serial = BitEngine::new(*p);
+            bit_serial.load_plane(Reg::Nb, vals);
+            bit_serial.run(&trace[..trace.len().min(4)]);
+            for &threads in &SHARD_COUNTS {
+                for spawn in SPAWN_MODES {
+                    let cfg = par(threads).spawn_mode(spawn);
+                    let mut word = ShardedPlane::new(*p, 16, cfg.clone());
+                    word.load_plane(Reg::Nb, vals);
+                    word.run(trace);
+                    cpm::prop_assert!(
+                        word.state() == serial.state(),
+                        "word state diverged at p={p} threads={threads} {spawn:?}"
+                    );
+                    cpm::prop_assert!(
+                        word.cost() == serial.cost(),
+                        "word cost diverged at p={p} threads={threads} {spawn:?}"
+                    );
+                    let mut bit = ShardedBitPlane::new(*p, cfg);
+                    bit.load_plane(Reg::Nb, vals);
+                    bit.run(&trace[..trace.len().min(4)]);
+                    cpm::prop_assert!(
+                        bit.state() == bit_serial.state(),
+                        "bit state diverged at p={p} threads={threads} {spawn:?}"
+                    );
+                    cpm::prop_assert!(
+                        bit.plane_ops() == bit_serial.plane_ops(),
+                        "bit plane-ops diverged at p={p} threads={threads} {spawn:?}"
+                    );
+                    cpm::prop_assert!(
+                        bit.cost() == bit_serial.cost(),
+                        "bit cost diverged at p={p} threads={threads} {spawn:?}"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn oversubscribed_pool_caps_at_the_plane_and_stays_warm() {
+    // threads far beyond the shardable work: effective_threads caps at
+    // the PE count (word plane) / plane-word count (bit plane), the pool
+    // spawns only as many workers as the largest dispatch used, and the
+    // same pool serves planes of different shard counts back to back.
+    let cfg = ExecConfig::with_min_shard(16, 1);
+    let vals: Vec<i32> = (0..40).map(|v| v * 7 - 100).collect();
+    let trace = vec![
+        Instr::all(Opcode::Add, Src::Left, Reg::Nb),
+        Instr::all(Opcode::CmpGt, Src::Imm, Reg::Nb).imm(0),
+    ];
+
+    // 5 PEs, 16 threads -> 5 shards (one PE each).
+    let mut tiny = ShardedPlane::new(5, 16, cfg.clone());
+    tiny.load_plane(Reg::Nb, &vals[..5]);
+    tiny.run(&trace);
+    let mut want = WordEngine::new(5, 16);
+    want.load_plane(Reg::Nb, &vals[..5]);
+    want.run(&trace);
+    assert_eq!(tiny.state(), want.state());
+    assert_eq!(cfg.worker_pool().workers(), 4, "one worker per shard minus the caller");
+
+    // Same pool, a wider plane: grows to 16 shards, workers reused.
+    let mut wide = ShardedPlane::new(40, 16, cfg.clone());
+    wide.load_plane(Reg::Nb, &vals);
+    wide.run(&trace);
+    let mut want = WordEngine::new(40, 16);
+    want.load_plane(Reg::Nb, &vals);
+    want.run(&trace);
+    assert_eq!(wide.state(), want.state());
+    assert_eq!(cfg.worker_pool().workers(), 15);
+
+    // Bit plane: 70 PEs = 2 plane words, so 16 threads cap at 2 shards.
+    let mut bits = ShardedBitPlane::new(70, cfg.clone());
+    bits.load_plane(Reg::Nb, &vals[..40]);
+    bits.run(&trace);
+    let mut want = BitEngine::new(70);
+    want.load_plane(Reg::Nb, &vals[..40]);
+    want.run(&trace);
+    assert_eq!(bits.state(), want.state());
+    assert_eq!(bits.plane_ops(), want.plane_ops());
+    // No growth needed: 2 shards ride the existing 15 workers.
+    assert_eq!(cfg.worker_pool().workers(), 15);
+}
+
+#[test]
+fn step_at_a_time_readouts_reuse_the_pool() {
+    // The workload the pool exists for: single-instruction runs
+    // interleaved with match readouts (the trace interpreter's shape).
+    // Every parallel step and every readout is one dispatch onto the
+    // same parked workers; the results stay pinned to the serial engine.
+    let cfg = par(3);
+    let p = 101;
+    let vals: Vec<i32> = (0..p as i32).map(|v| (v * 11) % 29 - 14).collect();
+    let mut pooled = ShardedPlane::new(p, 16, cfg.clone());
+    pooled.load_plane(Reg::Nb, &vals);
+    let mut serial = WordEngine::new(p, 16);
+    serial.load_plane(Reg::Nb, &vals);
+    for s in 0..12 {
+        let instr = if s % 3 == 2 {
+            Instr::all(Opcode::CmpGt, Src::Imm, Reg::Nb).imm(s)
+        } else {
+            Instr::all(Opcode::Add, Src::Left, Reg::Nb)
+        };
+        pooled.step(&instr);
+        serial.step(&instr);
+        assert_eq!(pooled.match_count(), serial.match_count(), "step {s}");
+        assert_eq!(pooled.first_match(), serial.first_match(), "step {s}");
+        assert_eq!(pooled.last_match(), serial.last_match(), "step {s}");
+    }
+    assert_eq!(pooled.state(), serial.state());
+    assert_eq!(pooled.cost(), serial.cost());
+    // 12 steps + 36 readouts, all on 2 parked workers (3 threads).
+    assert_eq!(cfg.worker_pool().workers(), 2);
+    assert_eq!(cfg.worker_pool().dispatches(), 48);
 }
 
 #[test]
