@@ -1,11 +1,16 @@
 //! The paper-reproduction benchmark harness: one section per experiment in
-//! DESIGN.md's index (E1–E22). `cargo bench` runs everything;
+//! DESIGN.md's index (E1–E23). `cargo bench` runs everything;
 //! `cargo bench -- e7` runs one experiment.
 //!
 //! Each section prints a table of *measured* cycle counts next to the
 //! paper's claimed formula, plus the serial-baseline cost — reproducing
 //! the shape (who wins, by what factor, where crossovers fall) of every
 //! complexity claim in §4–§8. Results are recorded in EXPERIMENTS.md.
+//!
+//! With `CPM_BENCH_JSON=PATH` set, the compute-path sections (E21–E23)
+//! also record machine-readable samples and `main` writes them to PATH
+//! as the `BENCH_compute.json` perf-trajectory artifact (one row per
+//! bench × backend × thread count; see ROADMAP item 5).
 
 use cpm::algos::{histogram, lines, local_ops, reduce, sort, template, threshold};
 use cpm::baseline::{self, SerialMachine, SortedIndex};
@@ -30,6 +35,24 @@ fn engine_with(vals: &[i32]) -> WordEngine {
     e.load_plane(Reg::Nb, vals);
     e.reset_cost();
     e
+}
+
+/// Machine-readable samples for the `BENCH_compute.json` artifact.
+/// `None` (the default) means no sink: `main` installs one when
+/// `CPM_BENCH_JSON` is set, and the compute-path sections record into
+/// it through [`record_sample`].
+static BENCH_JSON: std::sync::Mutex<Option<cpm::bench::JsonReport>> = std::sync::Mutex::new(None);
+
+fn record_sample(bench: &str, backend: &str, threads: usize, cycles: Option<u64>, wall_ns: u64) {
+    if let Some(report) = BENCH_JSON.lock().unwrap().as_mut() {
+        report.push(cpm::bench::JsonRow {
+            bench: bench.into(),
+            backend: backend.into(),
+            threads,
+            cycles,
+            wall_ns,
+        });
+    }
 }
 
 fn e1_decoder() {
@@ -756,12 +779,14 @@ fn e20_pool_batched_serving() {
 
 fn e21_sharded_plane() {
     use cpm::device::computable::{
-        ExecConfig, Instr, Opcode, ShardedBitPlane, ShardedPlane, SpawnMode, Src,
+        BackendKind, ExecConfig, Instr, Opcode, ShardedBitPlane, ShardedPlane, SpawnMode, Src,
     };
 
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let cfg = |threads: usize| ExecConfig::with_min_shard(threads, 1 << 12);
-    let mut r = Report::new(&["plane", "p", "trace", "threads", "spawn", "wall µs", "speedup"]);
+    let cfg = |threads: usize| ExecConfig::new().threads(threads).min_shard_pes(1 << 12);
+    let mut r = Report::new(&[
+        "plane", "backend", "p", "trace", "threads", "spawn", "wall µs", "speedup",
+    ]);
 
     // Dense word-plane path (the L3 hot loop): one long trace of
     // carry=1 unconditional ops, including neighbor seams. Long traces
@@ -782,7 +807,7 @@ fn e21_sharded_plane() {
         })
         .collect();
 
-    let mut reference: Option<Vec<i32>> = None;
+    let mut reference: Option<(Vec<i32>, u64)> = None;
     let mut serial_ns = 0u64;
     let mut speedup4 = 0.0f64;
     for (threads, spawn) in [
@@ -791,21 +816,23 @@ fn e21_sharded_plane() {
         (4, SpawnMode::Persistent),
         (4, SpawnMode::PerCall),
     ] {
-        let mut plane = ShardedPlane::new(p, 16, cfg(threads).spawn_mode(spawn));
+        let mut plane = ShardedPlane::new(p, 16, cfg(threads).spawn(spawn));
         plane.load_plane(Reg::Nb, &vals);
         let ns = cpm::bench::time_median(1, 5, || {
             let mut e = plane.clone();
             e.run(&trace);
             std::hint::black_box(e.plane(Reg::Op)[0]);
         });
-        // Correctness: bit-identical final state at every thread count
-        // and in both spawn modes.
+        // Correctness: bit-identical final state AND ledger at every
+        // thread count and in both spawn modes.
         let mut e = plane.clone();
         e.run(&trace);
+        let cycles = e.cost().macro_cycles;
         match &reference {
-            None => reference = Some(e.state()),
-            Some(want) => {
-                assert_eq!(&e.state(), want, "sharded != serial at {threads} threads {spawn:?}")
+            None => reference = Some((e.state(), cycles)),
+            Some((want, want_cycles)) => {
+                assert_eq!(&e.state(), want, "sharded != serial at {threads} threads {spawn:?}");
+                assert_eq!(cycles, *want_cycles, "cost diverged at {threads} threads {spawn:?}");
             }
         }
         if threads == 1 {
@@ -815,8 +842,10 @@ fn e21_sharded_plane() {
         if threads == 4 && spawn == SpawnMode::Persistent {
             speedup4 = speedup;
         }
+        record_sample("e21.word", "sharded", threads, Some(cycles), ns);
         r.row(&[
             "word".into(),
+            "sharded".into(),
             p.to_string(),
             trace.len().to_string(),
             threads.to_string(),
@@ -826,15 +855,26 @@ fn e21_sharded_plane() {
         ]);
     }
 
-    // Bit-plane path: plane ops over packed u64 words (each macro op is
-    // its full bit-serial expansion, so the plane is smaller).
+    // Bit-plane path, swept across the scalar (sharded) and block-mode
+    // (simd) kernels: each macro op is its full bit-serial expansion, so
+    // the plane is smaller. Every row must land on the reference state
+    // AND the reference ledger (measured plane ops + macro cost) — the
+    // block kernels are a pure execution-order change.
     let pb = 1 << 16;
     let valsb = rng.vec_i32(pb, -500, 500);
     let traceb: Vec<Instr> = trace[..12].to_vec();
-    let mut bit_reference: Option<Vec<i32>> = None;
+    let mut bit_ref = ShardedBitPlane::new(pb, cfg(1));
+    bit_ref.load_plane(Reg::Nb, &valsb);
+    bit_ref.run(&traceb);
+    let (bit_state, bit_ops, bit_cost) = (bit_ref.state(), bit_ref.plane_ops(), bit_ref.cost());
     let mut bit_serial_ns = 0u64;
-    for threads in [1usize, 4] {
-        let mut plane = ShardedBitPlane::new(pb, cfg(threads));
+    for (kind, threads) in [
+        (BackendKind::Sharded, 1usize),
+        (BackendKind::Sharded, 4),
+        (BackendKind::Simd, 1),
+        (BackendKind::Simd, 4),
+    ] {
+        let mut plane = ShardedBitPlane::new(pb, cfg(threads).backend(kind));
         plane.load_plane(Reg::Nb, &valsb);
         let ns = cpm::bench::time_median(1, 3, || {
             let mut e = plane.clone();
@@ -843,17 +883,16 @@ fn e21_sharded_plane() {
         });
         let mut e = plane.clone();
         e.run(&traceb);
-        match &bit_reference {
-            None => bit_reference = Some(e.state()),
-            Some(want) => {
-                assert_eq!(&e.state(), want, "sharded bits != serial at {threads} threads")
-            }
-        }
-        if threads == 1 {
+        assert_eq!(e.state(), bit_state, "{kind} bits != serial at {threads} threads");
+        assert_eq!(e.plane_ops(), bit_ops, "{kind} plane ops != serial at {threads} threads");
+        assert_eq!(e.cost(), bit_cost, "{kind} cost != serial at {threads} threads");
+        if kind == BackendKind::Sharded && threads == 1 {
             bit_serial_ns = ns;
         }
+        record_sample("e21.bit", kind.name(), threads, Some(bit_cost.macro_cycles), ns);
         r.row(&[
             "bit".into(),
+            kind.name().into(),
             pb.to_string(),
             traceb.len().to_string(),
             threads.to_string(),
@@ -875,7 +914,8 @@ fn e21_sharded_plane() {
 
 fn e22_worker_pool_step_floor() {
     use cpm::device::computable::{
-        ExecConfig, Instr, Opcode, ShardedPlane, SpawnMode, Src, WordEngine,
+        BackendKind, ComputeBackend, ExecConfig, Instr, Opcode, PePlane, ShardedPlane, SpawnMode,
+        Src, WordEngine, WordExec,
     };
 
     // Step-at-a-time workload: the trace interpreter's shape — one
@@ -891,6 +931,7 @@ fn e22_worker_pool_step_floor() {
     let threads = 4usize;
     let mut rng = Rng::new(22);
     let vals = rng.vec_i32(p, -500, 500);
+    let zeros = vec![0i32; p];
     let step_instrs: Vec<Instr> = (0..8)
         .map(|k| match k % 4 {
             0 => Instr::all(Opcode::Add, Src::Imm, Reg::Op).imm(1),
@@ -900,7 +941,9 @@ fn e22_worker_pool_step_floor() {
         })
         .collect();
 
-    let drive = |plane: &mut ShardedPlane| -> usize {
+    // Every row constructs its executor through the ComputeBackend
+    // factory — the bench measures exactly what `--backend` selects.
+    let drive = |plane: &mut dyn WordExec| -> usize {
         let mut matches = 0usize;
         for s in 0..steps {
             plane.step(&step_instrs[s % step_instrs.len()]);
@@ -911,33 +954,44 @@ fn e22_worker_pool_step_floor() {
         matches
     };
 
-    let mut r = Report::new(&["mode", "threads", "steps", "wall µs", "µs/step", "speedup"]);
+    let pool_cfg = || ExecConfig::new().threads(threads).min_shard_pes(1 << 12);
+    let mut r = Report::new(&[
+        "mode", "backend", "threads", "steps", "wall µs", "µs/step", "speedup",
+    ]);
     let mut results: Vec<(String, u64)> = Vec::new();
-    let mut reference: Option<(Vec<i32>, usize)> = None;
+    let mut reference: Option<(Vec<i32>, usize, u64)> = None;
     for (label, cfg) in [
-        ("serial", ExecConfig::serial()),
-        (
-            "spawn-per-call",
-            ExecConfig::with_min_shard(threads, 1 << 12).spawn_mode(SpawnMode::PerCall),
-        ),
-        ("persistent-pool", ExecConfig::with_min_shard(threads, 1 << 12)),
+        ("serial", ExecConfig::new().backend(BackendKind::Serial)),
+        ("spawn-per-call", pool_cfg().spawn(SpawnMode::PerCall)),
+        ("persistent-pool", pool_cfg()),
+        ("simd-pool", pool_cfg().backend(BackendKind::Simd)),
     ] {
-        let mut plane = ShardedPlane::new(p, 16, cfg);
-        plane.load_plane(Reg::Nb, &vals);
+        let backend = cfg.compute_backend();
+        let mut plane = backend.word_plane(p, 16);
         let ns = cpm::bench::time_median(1, 5, || {
-            let mut e = plane.clone();
-            std::hint::black_box(drive(&mut e));
+            // Reset to the common initial state, then drive. The two
+            // plane loads are uniform across modes and tiny next to the
+            // per-step orchestration under measurement.
+            plane.load_plane(Reg::Nb, &vals);
+            plane.load_plane(Reg::Op, &zeros);
+            std::hint::black_box(drive(plane.as_mut()));
         });
-        // Correctness: every mode lands on the serial state and readouts.
-        let mut e = plane.clone();
-        let matches = drive(&mut e);
+        // Correctness on a fresh executor: every mode lands on the
+        // serial state, readouts, and cost ledger.
+        let mut e = backend.word_plane(p, 16);
+        e.load_plane(Reg::Nb, &vals);
+        let matches = drive(e.as_mut());
+        let cycles = e.cost().macro_cycles;
         match &reference {
-            None => reference = Some((e.state(), matches)),
-            Some((state, want)) => {
+            None => reference = Some((e.state(), matches, cycles)),
+            Some((state, want, want_cycles)) => {
                 assert_eq!(&e.state(), state, "{label} diverged from serial");
                 assert_eq!(matches, *want, "{label} readouts diverged from serial");
+                assert_eq!(cycles, *want_cycles, "{label} cost diverged from serial");
             }
         }
+        let row_threads = if label == "serial" { 1 } else { threads };
+        record_sample(&format!("e22.{label}"), backend.name(), row_threads, Some(cycles), ns);
         results.push((label.to_string(), ns));
     }
     let scoped_ns = results
@@ -947,8 +1001,16 @@ fn e22_worker_pool_step_floor() {
         .expect("scoped row present");
     for (label, ns) in &results {
         let row_threads = if label == "serial" { 1 } else { threads };
+        let row_backend = if label == "simd-pool" {
+            "simd"
+        } else if label == "serial" {
+            "serial"
+        } else {
+            "sharded"
+        };
         r.row(&[
             label.clone(),
+            row_backend.into(),
             row_threads.to_string(),
             steps.to_string(),
             format!("{:.0}", *ns as f64 / 1e3),
@@ -960,9 +1022,9 @@ fn e22_worker_pool_step_floor() {
     // comparison above really isolates thread acquisition.
     let mut word = WordEngine::new(p, 16);
     word.load_plane(Reg::Nb, &vals);
-    let mut word_plane = ShardedPlane::with_engine(word, ExecConfig::serial());
+    let mut word_plane = ShardedPlane::with_engine(word, ExecConfig::new());
     let word_matches = drive(&mut word_plane);
-    let (ref_state, ref_matches) = reference.expect("serial row ran");
+    let (ref_state, ref_matches, _) = reference.expect("serial row ran");
     assert_eq!(word_plane.state(), ref_state);
     assert_eq!(word_matches, ref_matches);
 
@@ -983,7 +1045,106 @@ fn e22_worker_pool_step_floor() {
     }
 }
 
+fn e23_backends() {
+    use cpm::device::computable::{
+        BackendKind, BitExec, ComputeBackend, ExecConfig, Instr, Opcode, Src,
+    };
+
+    // Bit-plane throughput through the ComputeBackend factory itself:
+    // serial engine vs thread-sharded scalar kernels vs block-mode
+    // (simd) kernels, alone and combined with the worker pool. Every
+    // row constructs its executor via `cfg.compute_backend()`, so the
+    // bench measures exactly what `--backend` selects at the CLI.
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let p = 1 << 16;
+    let mut rng = Rng::new(23);
+    let vals = rng.vec_i32(p, -500, 500);
+    let zeros = vec![0i32; p];
+    let trace: Vec<Instr> = (0..12)
+        .map(|k| match k % 6 {
+            0 => Instr::all(Opcode::Add, Src::Left, Reg::Op),
+            1 => Instr::all(Opcode::Copy, Src::Reg(Reg::Op), Reg::Nb),
+            2 => Instr::all(Opcode::CmpGt, Src::Imm, Reg::Nb).imm(100),
+            3 => Instr::all(Opcode::Mul, Src::Imm, Reg::Op).imm(3),
+            4 => Instr::all(Opcode::Max, Src::Right, Reg::Op),
+            _ => Instr::all(Opcode::AbsDiff, Src::Reg(Reg::Nb), Reg::Op),
+        })
+        .collect();
+
+    // Reference: the serial bit engine's state, measured plane ops, and
+    // macro cost. Every backend below must reproduce all three exactly.
+    let serial_cfg = ExecConfig::new().backend(BackendKind::Serial);
+    let mut reference = serial_cfg.compute_backend().bit_plane(p);
+    reference.load_plane(Reg::Nb, &vals);
+    reference.run(&trace);
+    let (ref_state, ref_ops, ref_cost) =
+        (reference.state(), reference.plane_ops(), reference.cost());
+
+    let mut r = Report::new(&["backend", "threads", "p", "trace", "wall µs", "vs serial"]);
+    let mut serial_ns = 0u64;
+    let mut pool_speedup = 0.0f64;
+    for (label, kind, threads) in [
+        ("serial", BackendKind::Serial, 1usize),
+        ("sharded", BackendKind::Sharded, 4),
+        ("simd", BackendKind::Simd, 1),
+        ("simd-pool", BackendKind::Simd, 4),
+    ] {
+        let cfg = ExecConfig::new().threads(threads).min_shard_pes(1 << 12).backend(kind);
+        let backend = cfg.compute_backend();
+        let mut plane = backend.bit_plane(p);
+        let ns = cpm::bench::time_median(1, 3, || {
+            // Reload both touched register planes so each iteration runs
+            // the trace from the same state (boxed executors are not
+            // clonable; the loads are uniform across backends and small
+            // next to 12 bit-serial macro expansions).
+            plane.load_plane(Reg::Nb, &vals);
+            plane.load_plane(Reg::Op, &zeros);
+            plane.run(&trace);
+            std::hint::black_box(plane.read_plane(Reg::Op)[0]);
+        });
+        // Correctness on a fresh executor: bit-identical state AND an
+        // identical ledger for every backend and thread count.
+        let mut e = backend.bit_plane(p);
+        e.load_plane(Reg::Nb, &vals);
+        e.run(&trace);
+        assert_eq!(e.state(), ref_state, "{label} state != serial");
+        assert_eq!(e.plane_ops(), ref_ops, "{label} plane ops != serial");
+        assert_eq!(e.cost(), ref_cost, "{label} cost != serial");
+        if label == "serial" {
+            serial_ns = ns;
+        }
+        let speedup = serial_ns as f64 / ns.max(1) as f64;
+        if label == "simd-pool" {
+            pool_speedup = speedup;
+        }
+        let cycles = Some(ref_cost.macro_cycles);
+        record_sample(&format!("e23.{label}"), kind.name(), threads, cycles, ns);
+        r.row(&[
+            label.into(),
+            threads.to_string(),
+            p.to_string(),
+            trace.len().to_string(),
+            format!("{:.0}", ns as f64 / 1e3),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+
+    r.print("E23 compute backends: bit-plane throughput, serial vs sharded vs simd vs simd+pool");
+    println!("(machine reports {cores} hardware threads)");
+    if cores >= 4 {
+        assert!(
+            pool_speedup > 1.5,
+            "simd+pool bit-plane speedup was {pool_speedup:.2}x over serial (need > 1.5x on a \
+             >= 4-core machine)"
+        );
+    }
+}
+
 fn main() {
+    let json_path = std::env::var("CPM_BENCH_JSON").ok();
+    if json_path.is_some() {
+        *BENCH_JSON.lock().unwrap() = Some(cpm::bench::JsonReport::new());
+    }
     let filter: Option<String> = std::env::args()
         .skip(1)
         .find(|a| a.starts_with('e') || a.starts_with('E'))
@@ -1011,10 +1172,16 @@ fn main() {
         ("e20", e20_pool_batched_serving),
         ("e21", e21_sharded_plane),
         ("e22", e22_worker_pool_step_floor),
+        ("e23", e23_backends),
     ];
     for (name, f) in experiments {
         if filter.as_deref().map(|f| f == name).unwrap_or(true) {
             f();
         }
+    }
+    if let Some(path) = json_path {
+        let report = BENCH_JSON.lock().unwrap().take().expect("json sink installed");
+        report.write(&path).expect("write CPM_BENCH_JSON artifact");
+        println!("\nwrote machine-readable bench samples to {path}");
     }
 }

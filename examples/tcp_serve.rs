@@ -35,9 +35,11 @@ fn main() -> cpm::Result<()> {
     let schema = Schema::new(&[("price", 2), ("qty", 1)])?;
     let corpus = b"the quick brown fox jumps over the lazy dog";
     let mut server = CpmServer::new(schema, 64, corpus, BIG_SUM_LEN);
-    // Honor CPM_THREADS: with threads > 1 the big ad-hoc sum below runs
-    // on the sharded plane (threads=1, the default, keeps the serial
-    // engines; small planes stay serial either way).
+    // Honor CPM_THREADS and CPM_BACKEND: with threads > 1 the big
+    // ad-hoc sum below runs on the sharded plane (threads=1, the
+    // default, keeps the serial engines; small planes stay serial
+    // either way), and CPM_BACKEND=serial|sharded|simd picks the
+    // compute backend the served planes are constructed through.
     server.set_exec(ExecConfig::from_env());
     let rows: Vec<Vec<u64>> = (0..50).map(|i| vec![(i * 181) % 10_000, i % 100]).collect();
     server.load_rows(&rows)?;

@@ -1,5 +1,7 @@
-//! Benchmark support: a criterion-lite timing harness and a table
-//! reporter (the offline crate set has no criterion).
+//! Benchmark support: a criterion-lite timing harness, a table
+//! reporter (the offline crate set has no criterion), and a
+//! machine-readable JSON sink for the perf-trajectory artifacts
+//! (`BENCH_compute.json`).
 
 use std::time::Instant;
 
@@ -77,6 +79,88 @@ impl Report {
     }
 }
 
+/// One machine-readable benchmark sample: a row in the
+/// `BENCH_compute.json` artifact the paper bench emits when
+/// `CPM_BENCH_JSON=PATH` is set.
+#[derive(Debug, Clone)]
+pub struct JsonRow {
+    /// Bench id, e.g. `e21.bit` or `e23.simd-pool`.
+    pub bench: String,
+    /// Compute backend name (`serial|sharded|simd|pjrt`).
+    pub backend: String,
+    /// Worker threads the row ran with.
+    pub threads: usize,
+    /// Modeled concurrent macro cycles, when the bench tracks them.
+    pub cycles: Option<u64>,
+    /// Measured median wall time in nanoseconds.
+    pub wall_ns: u64,
+}
+
+/// Collects [`JsonRow`]s and renders the `BENCH_compute.json` document:
+/// a schema tag, host environment info, and one object per row. The
+/// committed artifact carries measured rows only from CI runs — never
+/// hand-written numbers.
+#[derive(Debug, Default)]
+pub struct JsonReport {
+    rows: Vec<JsonRow>,
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+impl JsonReport {
+    /// Empty report.
+    pub fn new() -> Self {
+        JsonReport::default()
+    }
+
+    /// Append a sample row.
+    pub fn push(&mut self, row: JsonRow) {
+        self.rows.push(row);
+    }
+
+    /// Render the full JSON document (hand-rolled: the crate set has no
+    /// serde).
+    pub fn render(&self) -> String {
+        let host_threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let simd_feature = cfg!(feature = "simd");
+        let mut out = String::from("{\n");
+        out.push_str("  \"schema\": \"cpm-bench-compute/v1\",\n");
+        out.push_str(&format!("  \"host_threads\": {host_threads},\n"));
+        out.push_str(&format!("  \"simd_feature\": {simd_feature},\n"));
+        out.push_str("  \"rows\": [");
+        for (i, row) in self.rows.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("\n    ");
+            let cycles = match row.cycles {
+                Some(c) => c.to_string(),
+                None => "null".into(),
+            };
+            out.push_str(&format!(
+                "{{\"bench\": \"{}\", \"backend\": \"{}\", \"threads\": {}, \
+                 \"cycles\": {}, \"wall_ns\": {}}}",
+                json_escape(&row.bench),
+                json_escape(&row.backend),
+                row.threads,
+                cycles,
+                row.wall_ns,
+            ));
+        }
+        out.push_str("\n  ]\n}\n");
+        out
+    }
+
+    /// Write the rendered document to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.render())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,5 +188,31 @@ mod tests {
     fn report_rejects_arity_mismatch() {
         let mut r = Report::new(&["a", "b"]);
         r.row(&["1".into()]);
+    }
+
+    #[test]
+    fn json_report_renders_schema_and_rows() {
+        let mut j = JsonReport::new();
+        j.push(JsonRow {
+            bench: "e23.simd-pool".into(),
+            backend: "simd".into(),
+            threads: 4,
+            cycles: None,
+            wall_ns: 1234,
+        });
+        j.push(JsonRow {
+            bench: "e21.bit".into(),
+            backend: "serial".into(),
+            threads: 1,
+            cycles: Some(64),
+            wall_ns: 99,
+        });
+        let s = j.render();
+        assert!(s.contains("\"schema\": \"cpm-bench-compute/v1\""));
+        assert!(s.contains("\"cycles\": null"));
+        assert!(s.contains("\"cycles\": 64"));
+        assert!(s.contains("\"backend\": \"simd\""));
+        // Two rows, comma-separated, inside the rows array.
+        assert_eq!(s.matches("\"bench\":").count(), 2);
     }
 }

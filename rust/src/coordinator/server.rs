@@ -209,8 +209,9 @@ impl CpmServer {
     }
 
     /// Change the plane-execution policy after construction (the CLI
-    /// `--threads` flag and `CPM_THREADS` land here for servers built
-    /// with [`CpmServer::new`]).
+    /// `--threads` / `--backend` flags and the `CPM_THREADS` /
+    /// `CPM_BACKEND` environment land here for servers built with
+    /// [`CpmServer::new`]).
     pub fn set_exec(&mut self, exec: crate::device::computable::ExecConfig) {
         self.executor.set_exec(exec);
     }

@@ -1,0 +1,524 @@
+//! Pluggable compute backends: one dispatch seam for every way a PE
+//! plane can execute.
+//!
+//! The paper's §7 PE plane is an abstract machine; PRs 1–5 grew four
+//! concrete ways to run it — the serial word/bit engines, the
+//! thread-sharded executors, the vectorization-shaped block kernels, and
+//! the feature-gated PJRT runtime. This module lifts that choice behind
+//! an object-safe [`ComputeBackend`] trait (the MASIM premise from
+//! PAPERS.md: a scheduler picks among heterogeneous array executors), so
+//! the pool, the coordinator, and the runtime construct planes through
+//! one factory instead of naming engine types:
+//!
+//! * [`SerialBackend`] — the plain [`WordEngine`] / [`BitEngine`], one
+//!   core, the semantic reference.
+//! * [`ShardedBackend`] — [`ShardedPlane`] / [`ShardedBitPlane`] on the
+//!   persistent worker pool (PRs 4–5). With `threads = 1` this *is* the
+//!   serial path (the sharded wrappers delegate), which is why it can be
+//!   the default kind without changing any existing behavior.
+//! * [`SimdBackend`] — the sharded executors with the bit kernel's
+//!   block-mode inner loops: whole-`u64`-word passes with no per-bit
+//!   branches, shaped for autovectorization (explicit AVX2 lanes behind
+//!   the `simd` cargo feature). Bit-identical to serial in state, cost,
+//!   and `plane_ops` — pinned by `tests/sharded_plane.rs` and the
+//!   in-kernel mode-sweep tests.
+//! * [`PjrtBridgeBackend`] — the bridge to the AOT-compiled JAX/Pallas
+//!   plane. Plane construction delegates to the sharded executors (XLA
+//!   executes whole traces, not incremental plane calls); trace-level
+//!   dispatch through XLA lives in [`crate::runtime`] behind the `pjrt`
+//!   cargo feature.
+//!
+//! Selection precedence is CLI `--backend` > `CPM_BACKEND` env > config
+//! default ([`BackendKind::Sharded`]); see DESIGN.md "Compute backends".
+
+use std::fmt;
+use std::str::FromStr;
+
+use super::bit_engine::BitEngine;
+use super::isa::{Instr, Reg};
+use super::sharded::{ExecConfig, ShardedBitPlane, ShardedPlane};
+use super::word_engine::{PePlane, WordEngine};
+use crate::cycles::ConcurrentCost;
+
+/// Which compute backend executes PE planes. Carried by
+/// [`ExecConfig::backend`]; turned into a live [`ComputeBackend`] by
+/// [`ExecConfig::compute_backend`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// The plain serial engines, ignoring the thread knobs.
+    Serial,
+    /// The thread-sharded executors (the default; serial when
+    /// `threads = 1`).
+    #[default]
+    Sharded,
+    /// The sharded executors running the block-mode (vectorization-
+    /// shaped) bit kernels.
+    Simd,
+    /// The PJRT bridge (plane calls delegate to sharded; trace dispatch
+    /// through XLA needs the `pjrt` cargo feature).
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Every backend kind, in CLI listing order.
+    pub const ALL: [BackendKind; 4] = [
+        BackendKind::Serial,
+        BackendKind::Sharded,
+        BackendKind::Simd,
+        BackendKind::Pjrt,
+    ];
+
+    /// Stable lowercase name: the CLI/env spelling, the metrics label,
+    /// and the bench-row `backend` column value.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Serial => "serial",
+            BackendKind::Sharded => "sharded",
+            BackendKind::Simd => "simd",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+impl fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for BackendKind {
+    type Err = String;
+
+    /// Parse a CLI/env spelling (case-insensitive [`BackendKind::name`]).
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let lower = s.to_ascii_lowercase();
+        BackendKind::ALL
+            .into_iter()
+            .find(|k| k.name() == lower)
+            .ok_or_else(|| format!("unknown backend `{s}` (expected serial|sharded|simd|pjrt)"))
+    }
+}
+
+/// A word-plane executor constructed by a backend: the [`PePlane`]
+/// algorithm surface plus the single-step and state-snapshot entry
+/// points the pool and runtime layers need.
+pub trait WordExec: PePlane + fmt::Debug {
+    /// Execute one broadcast macro instruction.
+    fn step(&mut self, instr: &Instr);
+
+    /// Snapshot the full state (`[r * p + i]` layout).
+    fn state(&self) -> Vec<i32>;
+
+    /// Restore a full state snapshot.
+    fn set_state(&mut self, state: &[i32]);
+}
+
+impl WordExec for WordEngine {
+    fn step(&mut self, instr: &Instr) {
+        WordEngine::step(self, instr)
+    }
+
+    fn state(&self) -> Vec<i32> {
+        WordEngine::state(self)
+    }
+
+    fn set_state(&mut self, state: &[i32]) {
+        WordEngine::set_state(self, state)
+    }
+}
+
+impl WordExec for ShardedPlane {
+    fn step(&mut self, instr: &Instr) {
+        ShardedPlane::step(self, instr)
+    }
+
+    fn state(&self) -> Vec<i32> {
+        ShardedPlane::state(self)
+    }
+
+    fn set_state(&mut self, state: &[i32]) {
+        ShardedPlane::set_state(self, state)
+    }
+}
+
+/// Boxed word executors keep the full [`PePlane`] algorithm surface, so
+/// `algos`-style generic code runs on whatever a backend constructed.
+impl PePlane for Box<dyn WordExec> {
+    fn len(&self) -> usize {
+        (**self).len()
+    }
+
+    fn load_plane(&mut self, r: Reg, data: &[i32]) {
+        (**self).load_plane(r, data)
+    }
+
+    fn plane(&self, r: Reg) -> &[i32] {
+        (**self).plane(r)
+    }
+
+    fn plane_mut(&mut self, r: Reg) -> &mut [i32] {
+        (**self).plane_mut(r)
+    }
+
+    fn run(&mut self, trace: &[Instr]) {
+        (**self).run(trace)
+    }
+
+    fn match_count(&mut self) -> usize {
+        (**self).match_count()
+    }
+
+    fn first_match(&mut self) -> Option<usize> {
+        (**self).first_match()
+    }
+
+    fn last_match(&mut self) -> Option<usize> {
+        (**self).last_match()
+    }
+
+    fn cost(&self) -> ConcurrentCost {
+        (**self).cost()
+    }
+
+    fn reset_cost(&mut self) {
+        (**self).reset_cost()
+    }
+}
+
+/// A bit-plane executor constructed by a backend: load, run, and the
+/// readout/ledger entry points (state, macro cost, measured plane ops,
+/// Rule 6 match count) the differential tests and benches compare
+/// across backends.
+pub trait BitExec: fmt::Debug {
+    /// Number of PEs.
+    fn len(&self) -> usize;
+
+    /// True if the plane has no PEs.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Load a register plane from words.
+    fn load_plane(&mut self, r: Reg, data: &[i32]);
+
+    /// Read a register plane as words.
+    fn read_plane(&self, r: Reg) -> Vec<i32>;
+
+    /// Full state (`[r * p + i]`, same layout as the word engine).
+    fn state(&self) -> Vec<i32>;
+
+    /// Execute one broadcast macro instruction.
+    fn step(&mut self, instr: &Instr);
+
+    /// Execute a whole macro trace.
+    fn run(&mut self, trace: &[Instr]);
+
+    /// Measured plane operations (≈ concurrent bit-cycles).
+    fn plane_ops(&self) -> u64;
+
+    /// Accumulated macro-level cost.
+    fn cost(&self) -> ConcurrentCost;
+
+    /// Rule 6 readout: number of PEs asserting the match line.
+    fn match_count(&mut self) -> usize;
+}
+
+impl BitExec for BitEngine {
+    fn len(&self) -> usize {
+        BitEngine::len(self)
+    }
+
+    fn load_plane(&mut self, r: Reg, data: &[i32]) {
+        BitEngine::load_plane(self, r, data)
+    }
+
+    fn read_plane(&self, r: Reg) -> Vec<i32> {
+        BitEngine::read_plane(self, r)
+    }
+
+    fn state(&self) -> Vec<i32> {
+        BitEngine::state(self)
+    }
+
+    fn step(&mut self, instr: &Instr) {
+        BitEngine::step(self, instr)
+    }
+
+    fn run(&mut self, trace: &[Instr]) {
+        BitEngine::run(self, trace)
+    }
+
+    fn plane_ops(&self) -> u64 {
+        BitEngine::plane_ops(self)
+    }
+
+    fn cost(&self) -> ConcurrentCost {
+        BitEngine::cost(self)
+    }
+
+    fn match_count(&mut self) -> usize {
+        BitEngine::match_count(self)
+    }
+}
+
+impl BitExec for ShardedBitPlane {
+    fn len(&self) -> usize {
+        ShardedBitPlane::len(self)
+    }
+
+    fn load_plane(&mut self, r: Reg, data: &[i32]) {
+        ShardedBitPlane::load_plane(self, r, data)
+    }
+
+    fn read_plane(&self, r: Reg) -> Vec<i32> {
+        ShardedBitPlane::read_plane(self, r)
+    }
+
+    fn state(&self) -> Vec<i32> {
+        ShardedBitPlane::state(self)
+    }
+
+    fn step(&mut self, instr: &Instr) {
+        ShardedBitPlane::step(self, instr)
+    }
+
+    fn run(&mut self, trace: &[Instr]) {
+        ShardedBitPlane::run(self, trace)
+    }
+
+    fn plane_ops(&self) -> u64 {
+        ShardedBitPlane::plane_ops(self)
+    }
+
+    fn cost(&self) -> ConcurrentCost {
+        ShardedBitPlane::cost(self)
+    }
+
+    fn match_count(&mut self) -> usize {
+        ShardedBitPlane::match_count(self)
+    }
+}
+
+/// A way to execute PE planes: constructs word- and bit-plane executors
+/// and names itself for metrics/bench rows. Object-safe — the pool,
+/// coordinator, and runtime hold `Box<dyn ComputeBackend>` and never
+/// name engine types.
+pub trait ComputeBackend: fmt::Debug {
+    /// Stable backend name (the [`BackendKind::name`] spelling).
+    fn name(&self) -> &'static str;
+
+    /// Construct a word-plane executor over `p` PEs (`word_width` feeds
+    /// bit-cycle cost accounting).
+    fn word_plane(&self, p: usize, word_width: u64) -> Box<dyn WordExec>;
+
+    /// Construct a bit-plane executor over `p` PEs.
+    fn bit_plane(&self, p: usize) -> Box<dyn BitExec>;
+}
+
+/// The serial backend: plain engines, one core, no thread knobs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SerialBackend;
+
+impl ComputeBackend for SerialBackend {
+    fn name(&self) -> &'static str {
+        BackendKind::Serial.name()
+    }
+
+    fn word_plane(&self, p: usize, word_width: u64) -> Box<dyn WordExec> {
+        Box::new(WordEngine::new(p, word_width))
+    }
+
+    fn bit_plane(&self, p: usize) -> Box<dyn BitExec> {
+        Box::new(BitEngine::new(p))
+    }
+}
+
+/// The thread-sharded backend: planes spread across the config's worker
+/// pool (serial when `threads = 1`).
+#[derive(Debug, Clone)]
+pub struct ShardedBackend {
+    cfg: ExecConfig,
+}
+
+impl ShardedBackend {
+    /// Sharded backend driven by `cfg`'s thread knobs (the kind is
+    /// pinned to [`BackendKind::Sharded`] so the reference kernels run
+    /// regardless of what the incoming config carried).
+    pub fn new(cfg: ExecConfig) -> Self {
+        ShardedBackend {
+            cfg: cfg.backend(BackendKind::Sharded),
+        }
+    }
+}
+
+impl ComputeBackend for ShardedBackend {
+    fn name(&self) -> &'static str {
+        BackendKind::Sharded.name()
+    }
+
+    fn word_plane(&self, p: usize, word_width: u64) -> Box<dyn WordExec> {
+        Box::new(ShardedPlane::new(p, word_width, self.cfg.clone()))
+    }
+
+    fn bit_plane(&self, p: usize) -> Box<dyn BitExec> {
+        Box::new(ShardedBitPlane::new(p, self.cfg.clone()))
+    }
+}
+
+/// The SIMD backend: the sharded executors with the bit kernel's
+/// block-mode inner loops (and AVX2 lanes under the `simd` feature).
+///
+/// Only the *bit* path has a vectorized variant — the word engine's
+/// dense loops are already straight-line slice passes the compiler
+/// vectorizes on its own — so [`ComputeBackend::word_plane`] is the
+/// sharded word plane unchanged.
+#[derive(Debug, Clone)]
+pub struct SimdBackend {
+    cfg: ExecConfig,
+}
+
+impl SimdBackend {
+    /// SIMD backend driven by `cfg`'s thread knobs (the kind is pinned
+    /// to [`BackendKind::Simd`] so constructed bit planes run the block
+    /// kernels).
+    pub fn new(cfg: ExecConfig) -> Self {
+        SimdBackend {
+            cfg: cfg.backend(BackendKind::Simd),
+        }
+    }
+}
+
+impl ComputeBackend for SimdBackend {
+    fn name(&self) -> &'static str {
+        BackendKind::Simd.name()
+    }
+
+    fn word_plane(&self, p: usize, word_width: u64) -> Box<dyn WordExec> {
+        Box::new(ShardedPlane::new(p, word_width, self.cfg.clone()))
+    }
+
+    fn bit_plane(&self, p: usize) -> Box<dyn BitExec> {
+        Box::new(ShardedBitPlane::new(p, self.cfg.clone()))
+    }
+}
+
+/// The PJRT bridge backend: incremental plane calls delegate to the
+/// sharded executors (XLA executes whole AOT-compiled traces, not
+/// per-instruction plane steps); trace-level XLA dispatch lives in
+/// [`crate::runtime`] and needs the `pjrt` cargo feature. The kind
+/// exists unconditionally so `BackendKind::Pjrt` always names a working
+/// plane — the CLI rejects `--backend pjrt` when the feature is off.
+#[derive(Debug, Clone)]
+pub struct PjrtBridgeBackend {
+    cfg: ExecConfig,
+}
+
+impl PjrtBridgeBackend {
+    /// PJRT bridge driven by `cfg`'s thread knobs for the delegated
+    /// plane calls.
+    pub fn new(cfg: ExecConfig) -> Self {
+        PjrtBridgeBackend {
+            cfg: cfg.backend(BackendKind::Sharded),
+        }
+    }
+}
+
+impl ComputeBackend for PjrtBridgeBackend {
+    fn name(&self) -> &'static str {
+        BackendKind::Pjrt.name()
+    }
+
+    fn word_plane(&self, p: usize, word_width: u64) -> Box<dyn WordExec> {
+        Box::new(ShardedPlane::new(p, word_width, self.cfg.clone()))
+    }
+
+    fn bit_plane(&self, p: usize) -> Box<dyn BitExec> {
+        Box::new(ShardedBitPlane::new(p, self.cfg.clone()))
+    }
+}
+
+impl ExecConfig {
+    /// The live [`ComputeBackend`] this config selects — the single
+    /// factory the pool, coordinator, and runtime construct planes
+    /// through.
+    pub fn compute_backend(&self) -> Box<dyn ComputeBackend> {
+        match self.backend {
+            BackendKind::Serial => Box::new(SerialBackend),
+            BackendKind::Sharded => Box::new(ShardedBackend::new(self.clone())),
+            BackendKind::Simd => Box::new(SimdBackend::new(self.clone())),
+            BackendKind::Pjrt => Box::new(PjrtBridgeBackend::new(self.clone())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::isa::{Opcode, Src};
+
+    #[test]
+    fn kind_names_round_trip_through_parse() {
+        for kind in BackendKind::ALL {
+            assert_eq!(kind.name().parse::<BackendKind>(), Ok(kind));
+            assert_eq!(
+                kind.name().to_ascii_uppercase().parse::<BackendKind>(),
+                Ok(kind)
+            );
+        }
+        assert!("gpu".parse::<BackendKind>().is_err());
+        assert_eq!(BackendKind::default(), BackendKind::Sharded);
+    }
+
+    #[test]
+    fn factory_names_match_the_kind() {
+        for kind in BackendKind::ALL {
+            let cfg = ExecConfig::new().backend(kind);
+            assert_eq!(cfg.compute_backend().name(), kind.name());
+        }
+    }
+
+    #[test]
+    fn every_backend_executes_the_same_word_plane() {
+        let vals: Vec<i32> = (0..100).map(|v| v * 7 - 350).collect();
+        let trace = vec![
+            Instr::all(Opcode::Copy, Src::Reg(Reg::Nb), Reg::Op),
+            Instr::all(Opcode::Mul, Src::Imm, Reg::Op).imm(3),
+            Instr::all(Opcode::CmpGt, Src::Imm, Reg::Op).imm(0),
+        ];
+        let mut reference = WordEngine::new(vals.len(), 16);
+        reference.load_plane(Reg::Nb, &vals);
+        reference.run(&trace);
+        for kind in BackendKind::ALL {
+            let cfg = ExecConfig::new().threads(3).min_shard_pes(1).backend(kind);
+            let mut plane = cfg.compute_backend().word_plane(vals.len(), 16);
+            plane.load_plane(Reg::Nb, &vals);
+            plane.run(&trace);
+            assert_eq!(plane.state(), reference.state(), "{kind}");
+            assert_eq!(plane.cost(), reference.cost(), "{kind}");
+            assert_eq!(plane.match_count(), reference.match_count(), "{kind}");
+        }
+    }
+
+    #[test]
+    fn every_backend_executes_the_same_bit_plane() {
+        let vals: Vec<i32> = (0..200).map(|v| v * 13 - 900).collect();
+        let trace = vec![
+            Instr::all(Opcode::Copy, Src::Left, Reg::Op),
+            Instr::all(Opcode::Add, Src::Reg(Reg::Nb), Reg::Op),
+            Instr::all(Opcode::CmpGt, Src::Imm, Reg::Op).imm(50),
+        ];
+        let mut reference = BitEngine::new(vals.len());
+        reference.load_plane(Reg::Nb, &vals);
+        reference.run(&trace);
+        for kind in BackendKind::ALL {
+            let cfg = ExecConfig::new().threads(3).min_shard_pes(1).backend(kind);
+            let mut plane = cfg.compute_backend().bit_plane(vals.len());
+            plane.load_plane(Reg::Nb, &vals);
+            plane.run(&trace);
+            assert_eq!(plane.state(), reference.state(), "{kind}");
+            assert_eq!(plane.plane_ops(), reference.plane_ops(), "{kind}");
+            assert_eq!(plane.cost(), reference.cost(), "{kind}");
+            assert_eq!(plane.match_count(), reference.match_count(), "{kind}");
+        }
+    }
+}

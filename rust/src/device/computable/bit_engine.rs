@@ -18,7 +18,7 @@
 //! run the *same code* over their owned word ranges and the pre-cycle
 //! snapshot, so the serial and parallel bit paths cannot diverge.
 
-use super::bit_kernel::{self, BitRange, WriteBack};
+use super::bit_kernel::{self, BitRange, KernelMode, WriteBack};
 use super::isa::{Instr, Opcode, Reg, N_REGS};
 use crate::cycles::ConcurrentCost;
 
@@ -38,6 +38,10 @@ pub struct BitEngine {
     /// Measured plane operations (≈ concurrent bit-cycles).
     plane_ops: u64,
     cost: ConcurrentCost,
+    /// Which kernel inner-loop flavor to run (`Reference` per-bit walks or
+    /// `Block` whole-word passes). Both are bit-identical in state and
+    /// accounting; `Block` is the SIMD backend's vectorization-friendly path.
+    kernel: KernelMode,
 }
 
 impl BitEngine {
@@ -50,7 +54,14 @@ impl BitEngine {
             planes: vec![vec![vec![0u64; words]; W]; N_REGS],
             plane_ops: 0,
             cost: ConcurrentCost::default(),
+            kernel: KernelMode::default(),
         }
+    }
+
+    /// Select the kernel inner-loop flavor (backend plumbing; both modes
+    /// produce bit-identical state and accounting).
+    pub(crate) fn set_kernel(&mut self, kernel: KernelMode) {
+        self.kernel = kernel;
     }
 
     /// Number of PEs.
@@ -160,6 +171,7 @@ impl BitEngine {
         let en = bit_kernel::enable_words(
             &range,
             instr,
+            self.kernel,
             |k, j| self.planes[Reg::M as usize][k][j],
             &mut ops,
         );
@@ -172,7 +184,8 @@ impl BitEngine {
         );
         let dst = instr.dst as usize;
         let a: Vec<Plane> = self.planes[dst].clone();
-        let (target, out) = bit_kernel::expand(&range, instr.opcode, instr.imm, &a, b, &mut ops);
+        let (target, out) =
+            bit_kernel::expand(&range, self.kernel, instr.opcode, instr.imm, &a, b, &mut ops);
         // Fold the kernel's compute charges in; writes are charged below.
         self.plane_ops += ops;
         let wr = match target {

@@ -20,9 +20,40 @@
 //! exactly — the serial engine folds it into `plane_ops`, the shard
 //! workers discard it (the sharded coordinator reproduces counters on a
 //! 1-PE shadow engine, keeping them data-independently bit-identical).
+//!
+//! The kernel carries two interchangeable inner-loop implementations,
+//! selected by [`KernelMode`]: the per-bit/indexed **reference** loops
+//! (the historical serial code, kept as the semantics spec) and the
+//! **block** passes the SIMD backend runs — whole-word masks for the
+//! dense Rule 4 enable window and chunked zip ripple rounds shaped for
+//! autovectorization, with `core::arch` AVX2 lanes behind the `simd`
+//! cargo feature. Every `ops` charge sits *outside* the inner loops
+//! (per round / per plane, never per word), so the two modes are
+//! bit-identical in output *and* in accounting by construction — pinned
+//! by the mode sweeps in the tests below and by the cross-backend
+//! differentials in `tests/sharded_plane.rs`.
 
 use super::bit_engine::W;
 use super::isa::{Instr, Opcode, Src, F_COND_M, F_COND_NOT_M};
+
+/// Which inner-loop implementation expands the bit planes.
+///
+/// Single-pass folds (equality AND-folds, the compare sign combine, the
+/// min/max mux, the logic ops, neighbor word shifts) are already
+/// one-`u64`-op-per-word passes shared by both modes; the mode switches
+/// the ripple-carry rounds and the dense enable fill, where the
+/// reference code walks bits or indexes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub(crate) enum KernelMode {
+    /// The per-bit / indexed reference loops (the historical serial
+    /// code) — the semantics spec the block mode is pinned against.
+    #[default]
+    Reference,
+    /// `u64`-block passes: whole-word enable masks and chunked zip
+    /// ripple rounds shaped for autovectorization (plus AVX2 lanes under
+    /// `--features simd` on hosts that report the capability).
+    Block,
+}
 
 /// One caller's view of the bit-plane word axis: the whole plane for the
 /// serial engine (`w_lo = 0`, `w_hi = words`), one shard's owned words
@@ -42,6 +73,230 @@ pub(crate) struct BitRange {
 #[inline]
 pub(crate) fn majority(a: u64, b: u64, c: u64) -> u64 {
     (a & b) | (b & c) | (a & c)
+}
+
+/// One full-adder ripple round over the word block: `sum = a ^ b ^ cin`,
+/// `cout = majority(a, b, cin)`, with `b` optionally inverted first (the
+/// borrowless subtract / signed-compare rounds). Charges nothing — the
+/// per-round `ops` accounting stays with the callers, outside the loop.
+fn adder_round(
+    mode: KernelMode,
+    a: &[u64],
+    b: &[u64],
+    invert_b: bool,
+    cin: &[u64],
+    sum: &mut [u64],
+    cout: &mut [u64],
+) {
+    match mode {
+        KernelMode::Reference => {
+            for j in 0..a.len() {
+                let bv = if invert_b { !b[j] } else { b[j] };
+                sum[j] = a[j] ^ bv ^ cin[j];
+                cout[j] = majority(a[j], bv, cin[j]);
+            }
+        }
+        KernelMode::Block => {
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            {
+                if avx2::available() {
+                    // SAFETY: AVX2 presence was just checked; the slices
+                    // all share one length (staged planes of this range).
+                    unsafe { avx2::adder_round(a, b, invert_b, cin, sum, cout) };
+                    return;
+                }
+            }
+            let inv = if invert_b { u64::MAX } else { 0 };
+            for ((((s, c), &av), &bv0), &ci) in sum
+                .iter_mut()
+                .zip(cout.iter_mut())
+                .zip(a)
+                .zip(b)
+                .zip(cin)
+            {
+                let bv = bv0 ^ inv;
+                let x = av ^ bv;
+                *s = x ^ ci;
+                *c = (av & bv) | (ci & x);
+            }
+        }
+    }
+}
+
+/// One shift-and-add partial-product round: `addend = a_row & b_k`, then
+/// a full-adder round of `addend` into the product row.
+fn mul_round(
+    mode: KernelMode,
+    a_row: &[u64],
+    b_k: &[u64],
+    prod: &[u64],
+    cin: &[u64],
+    sum: &mut [u64],
+    cout: &mut [u64],
+) {
+    match mode {
+        KernelMode::Reference => {
+            for j in 0..a_row.len() {
+                let addend = a_row[j] & b_k[j];
+                sum[j] = prod[j] ^ addend ^ cin[j];
+                cout[j] = majority(prod[j], addend, cin[j]);
+            }
+        }
+        KernelMode::Block => {
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            {
+                if avx2::available() {
+                    // SAFETY: AVX2 presence was just checked; the slices
+                    // all share one length (staged planes of this range).
+                    unsafe { avx2::mul_round(a_row, b_k, prod, cin, sum, cout) };
+                    return;
+                }
+            }
+            for (((((s, c), &av), &bv), &pv), &ci) in sum
+                .iter_mut()
+                .zip(cout.iter_mut())
+                .zip(a_row)
+                .zip(b_k)
+                .zip(prod)
+                .zip(cin)
+            {
+                let addend = av & bv;
+                let x = pv ^ addend;
+                *s = x ^ ci;
+                *c = (pv & addend) | (ci & x);
+            }
+        }
+    }
+}
+
+/// One half-adder round (the conditional-negate +neg pass of AbsDiff):
+/// `x = row ^ neg`, `sum = x ^ cin`, `cout = x & cin`.
+fn half_add_round(
+    mode: KernelMode,
+    row: &[u64],
+    neg: &[u64],
+    cin: &[u64],
+    sum: &mut [u64],
+    cout: &mut [u64],
+) {
+    match mode {
+        KernelMode::Reference => {
+            for j in 0..row.len() {
+                let x = row[j] ^ neg[j];
+                sum[j] = x ^ cin[j];
+                cout[j] = x & cin[j];
+            }
+        }
+        KernelMode::Block => {
+            for ((((s, c), &rv), &nv), &ci) in sum
+                .iter_mut()
+                .zip(cout.iter_mut())
+                .zip(row)
+                .zip(neg)
+                .zip(cin)
+            {
+                let x = rv ^ nv;
+                *s = x ^ ci;
+                *c = x & ci;
+            }
+        }
+    }
+}
+
+/// `core::arch` AVX2 lanes for the hot ripple rounds (4 plane words per
+/// vector op). Only compiled under `--features simd` on x86_64; callers
+/// runtime-gate on [`available`] and fall back to the safe block loops,
+/// so the feature changes throughput, never results.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use std::arch::x86_64::{
+        __m256i, _mm256_and_si256, _mm256_loadu_si256, _mm256_or_si256, _mm256_set1_epi64x,
+        _mm256_storeu_si256, _mm256_xor_si256,
+    };
+
+    /// Host capability gate (the detection result is cached by std).
+    #[inline]
+    pub(super) fn available() -> bool {
+        std::arch::is_x86_64_feature_detected!("avx2")
+    }
+
+    /// Vectorized [`super::adder_round`] body.
+    ///
+    /// # Safety
+    ///
+    /// Requires AVX2 (check [`available`] first). All slices must share
+    /// one length.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn adder_round(
+        a: &[u64],
+        b: &[u64],
+        invert_b: bool,
+        cin: &[u64],
+        sum: &mut [u64],
+        cout: &mut [u64],
+    ) {
+        let n = a.len();
+        let inv = _mm256_set1_epi64x(if invert_b { -1 } else { 0 });
+        let mut j = 0;
+        while j + 4 <= n {
+            let av = _mm256_loadu_si256(a.as_ptr().add(j) as *const __m256i);
+            let bv = _mm256_xor_si256(_mm256_loadu_si256(b.as_ptr().add(j) as *const __m256i), inv);
+            let cv = _mm256_loadu_si256(cin.as_ptr().add(j) as *const __m256i);
+            let x = _mm256_xor_si256(av, bv);
+            let s = _mm256_xor_si256(x, cv);
+            let c = _mm256_or_si256(_mm256_and_si256(av, bv), _mm256_and_si256(cv, x));
+            _mm256_storeu_si256(sum.as_mut_ptr().add(j) as *mut __m256i, s);
+            _mm256_storeu_si256(cout.as_mut_ptr().add(j) as *mut __m256i, c);
+            j += 4;
+        }
+        let invs = if invert_b { u64::MAX } else { 0 };
+        while j < n {
+            let (av, bv, cv) = (a[j], b[j] ^ invs, cin[j]);
+            let x = av ^ bv;
+            sum[j] = x ^ cv;
+            cout[j] = (av & bv) | (cv & x);
+            j += 1;
+        }
+    }
+
+    /// Vectorized [`super::mul_round`] body.
+    ///
+    /// # Safety
+    ///
+    /// Requires AVX2 (check [`available`] first). All slices must share
+    /// one length.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn mul_round(
+        a_row: &[u64],
+        b_k: &[u64],
+        prod: &[u64],
+        cin: &[u64],
+        sum: &mut [u64],
+        cout: &mut [u64],
+    ) {
+        let n = a_row.len();
+        let mut j = 0;
+        while j + 4 <= n {
+            let av = _mm256_loadu_si256(a_row.as_ptr().add(j) as *const __m256i);
+            let bv = _mm256_loadu_si256(b_k.as_ptr().add(j) as *const __m256i);
+            let pv = _mm256_loadu_si256(prod.as_ptr().add(j) as *const __m256i);
+            let cv = _mm256_loadu_si256(cin.as_ptr().add(j) as *const __m256i);
+            let addend = _mm256_and_si256(av, bv);
+            let x = _mm256_xor_si256(pv, addend);
+            let s = _mm256_xor_si256(x, cv);
+            let c = _mm256_or_si256(_mm256_and_si256(pv, addend), _mm256_and_si256(cv, x));
+            _mm256_storeu_si256(sum.as_mut_ptr().add(j) as *mut __m256i, s);
+            _mm256_storeu_si256(cout.as_mut_ptr().add(j) as *mut __m256i, c);
+            j += 4;
+        }
+        while j < n {
+            let addend = a_row[j] & b_k[j];
+            let x = prod[j] ^ addend;
+            sum[j] = x ^ cin[j];
+            cout[j] = (prod[j] & addend) | (cin[j] & x);
+            j += 1;
+        }
+    }
 }
 
 impl BitRange {
@@ -101,7 +356,13 @@ pub(crate) enum WriteBack {
 ///
 /// `ops` accrues the serial engine's charges: 1 for the general decoder,
 /// plus `W` for the M≠0 reduction and 1 per flag when flags gate.
-pub(crate) fn enable_words<M>(range: &BitRange, instr: &Instr, m_word: M, ops: &mut u64) -> Vec<u64>
+pub(crate) fn enable_words<M>(
+    range: &BitRange,
+    instr: &Instr,
+    mode: KernelMode,
+    m_word: M,
+    ops: &mut u64,
+) -> Vec<u64>
 where
     M: Fn(usize, usize) -> u64,
 {
@@ -118,14 +379,21 @@ where
         let ga = start.max(range.w_lo * 64);
         let gb = end.min(range.w_hi * 64 - 1);
         if ga <= gb {
-            // First chain address >= ga on the global carry chain.
-            let off = (ga - start) % carry;
-            let mut i = if off == 0 { ga } else { ga + (carry - off) };
-            while i <= gb {
-                en[i / 64 - range.w_lo] |= 1 << (i % 64);
-                match i.checked_add(carry) {
-                    Some(next) => i = next,
-                    None => break,
+            if carry == 1 && mode == KernelMode::Block {
+                // Dense window: whole-word masks instead of a bit walk.
+                fill_dense_span(&mut en, range, ga, gb);
+            } else {
+                // First chain address >= ga on the global carry chain
+                // (strided chains touch few bits — the stepped walk is
+                // the right shape in both modes).
+                let off = (ga - start) % carry;
+                let mut i = if off == 0 { ga } else { ga + (carry - off) };
+                while i <= gb {
+                    en[i / 64 - range.w_lo] |= 1 << (i % 64);
+                    match i.checked_add(carry) {
+                        Some(next) => i = next,
+                        None => break,
+                    }
                 }
             }
         }
@@ -153,6 +421,27 @@ where
         }
     }
     en
+}
+
+/// Set bits `ga..=gb` (global PE addresses, already clipped to the
+/// range) of the enable words as whole-word masks — the `en_carry == 1`
+/// block-mode fast path.
+fn fill_dense_span(en: &mut [u64], range: &BitRange, ga: usize, gb: usize) {
+    for (j, word) in en.iter_mut().enumerate() {
+        let base = (range.w_lo + j) * 64;
+        let lo = ga.max(base);
+        let hi = gb.min(base + 63);
+        if lo > hi {
+            continue;
+        }
+        let width = hi - lo + 1;
+        let mask = if width == 64 {
+            u64::MAX
+        } else {
+            ((1u64 << width) - 1) << (lo - base)
+        };
+        *word |= mask;
+    }
 }
 
 /// This range's words of NB bit plane `k`, shifted `delta` PEs along the
@@ -254,19 +543,21 @@ where
 /// Signed less-than plane via full borrowless subtraction (`lt = sd ^ V`,
 /// `V = (sa ^ sb) & (sa ^ sd)`). The word-local ripple chain is why
 /// whole plane words are the shard unit.
-fn less_than(n: usize, a: &[Vec<u64>], b: &[Vec<u64>], ops: &mut u64) -> Vec<u64> {
+fn less_than(
+    mode: KernelMode,
+    n: usize,
+    a: &[Vec<u64>],
+    b: &[Vec<u64>],
+    ops: &mut u64,
+) -> Vec<u64> {
     let mut carry = vec![u64::MAX; n];
+    let mut next = vec![0u64; n];
     let mut sd = vec![0u64; n];
     for k in 0..W {
         *ops += 3; // !b, sum, carry
         let mut sum = vec![0u64; n];
-        let mut next = vec![0u64; n];
-        for j in 0..n {
-            let nb = !b[k][j];
-            sum[j] = a[k][j] ^ nb ^ carry[j];
-            next[j] = majority(a[k][j], nb, carry[j]);
-        }
-        carry = next;
+        adder_round(mode, &a[k], &b[k], true, &carry, &mut sum, &mut next);
+        std::mem::swap(&mut carry, &mut next);
         if k == W - 1 {
             sd = sum;
         }
@@ -281,7 +572,8 @@ fn less_than(n: usize, a: &[Vec<u64>], b: &[Vec<u64>], ops: &mut u64) -> Vec<u64
         .collect()
 }
 
-/// Equality plane: AND over all bit positions of `!(a ^ b)`.
+/// Equality plane: AND over all bit positions of `!(a ^ b)` — already a
+/// one-op-per-word fold, shared by both kernel modes.
 fn equal(range: &BitRange, a: &[Vec<u64>], b: &[Vec<u64>], ops: &mut u64) -> Vec<u64> {
     let n = range.len();
     let mut eq = vec![u64::MAX; n];
@@ -297,6 +589,7 @@ fn equal(range: &BitRange, a: &[Vec<u64>], b: &[Vec<u64>], ops: &mut u64) -> Vec
 
 fn compare(
     range: &BitRange,
+    mode: KernelMode,
     a: &[Vec<u64>],
     b: &[Vec<u64>],
     op: Opcode,
@@ -304,9 +597,9 @@ fn compare(
 ) -> Vec<u64> {
     use Opcode::*;
     let mut res = match op {
-        CmpLt => less_than(range.len(), a, b, ops),
+        CmpLt => less_than(mode, range.len(), a, b, ops),
         CmpGe => {
-            let lt = less_than(range.len(), a, b, ops);
+            let lt = less_than(mode, range.len(), a, b, ops);
             *ops += 1;
             lt.iter().map(|&x| !x).collect()
         }
@@ -317,13 +610,13 @@ fn compare(
             eq.iter().map(|&x| !x).collect()
         }
         CmpLe => {
-            let lt = less_than(range.len(), a, b, ops);
+            let lt = less_than(mode, range.len(), a, b, ops);
             let eq = equal(range, a, b, ops);
             *ops += 1;
             lt.iter().zip(eq.iter()).map(|(&x, &y)| x | y).collect()
         }
         CmpGt => {
-            let lt = less_than(range.len(), a, b, ops);
+            let lt = less_than(mode, range.len(), a, b, ops);
             let eq = equal(range, a, b, ops);
             *ops += 1;
             lt.iter().zip(eq.iter()).map(|(&x, &y)| !(x | y)).collect()
@@ -346,6 +639,7 @@ fn compare(
 /// accounting cannot diverge. `Nop` must be filtered by the caller.
 pub(crate) fn expand(
     range: &BitRange,
+    mode: KernelMode,
     opcode: Opcode,
     imm: i32,
     a: &[Vec<u64>],
@@ -373,16 +667,13 @@ pub(crate) fn expand(
         }
         Add => {
             let mut carry = vec![0u64; n];
+            let mut next = vec![0u64; n];
             let mut planes = Vec::with_capacity(W);
             for k in 0..W {
                 *ops += 2; // sum, carry
                 let mut sum = vec![0u64; n];
-                let mut next = vec![0u64; n];
-                for j in 0..n {
-                    sum[j] = a[k][j] ^ b[k][j] ^ carry[j];
-                    next[j] = majority(a[k][j], b[k][j], carry[j]);
-                }
-                carry = next;
+                adder_round(mode, &a[k], &b[k], false, &carry, &mut sum, &mut next);
+                std::mem::swap(&mut carry, &mut next);
                 planes.push(sum);
             }
             (WriteBack::Dst, planes)
@@ -390,17 +681,13 @@ pub(crate) fn expand(
         Sub => {
             // a + !b + 1 (borrowless two's-complement subtract).
             let mut carry = vec![u64::MAX; n];
+            let mut next = vec![0u64; n];
             let mut planes = Vec::with_capacity(W);
             for k in 0..W {
                 *ops += 3; // !b, sum, carry
                 let mut sum = vec![0u64; n];
-                let mut next = vec![0u64; n];
-                for j in 0..n {
-                    let nb = !b[k][j];
-                    sum[j] = a[k][j] ^ nb ^ carry[j];
-                    next[j] = majority(a[k][j], nb, carry[j]);
-                }
-                carry = next;
+                adder_round(mode, &a[k], &b[k], true, &carry, &mut sum, &mut next);
+                std::mem::swap(&mut carry, &mut next);
                 planes.push(sum);
             }
             (WriteBack::Dst, planes)
@@ -408,13 +695,13 @@ pub(crate) fn expand(
         CmpLt | CmpLe | CmpEq | CmpNe | CmpGt | CmpGe => {
             // Bit registers hold 0/1: plane 0 carries the verdict, the
             // high M planes clear.
-            let res = compare(range, a, &b, opcode, ops);
+            let res = compare(range, mode, a, &b, opcode, ops);
             let mut planes = vec![vec![0u64; n]; W];
             planes[0] = res;
             (WriteBack::M, planes)
         }
         Min | Max => {
-            let lt = less_than(n, a, &b, ops);
+            let lt = less_than(mode, n, a, &b, ops);
             let planes = (0..W)
                 .map(|k| {
                     *ops += 1;
@@ -441,32 +728,24 @@ pub(crate) fn expand(
             // d = a - b; then conditional negate by the sign plane.
             let mut d: Vec<Vec<u64>> = Vec::with_capacity(W);
             let mut carry = vec![u64::MAX; n];
+            let mut next = vec![0u64; n];
             for k in 0..W {
                 *ops += 3; // !b, sum, carry
                 let mut sum = vec![0u64; n];
-                let mut next = vec![0u64; n];
-                for j in 0..n {
-                    let nb = !b[k][j];
-                    sum[j] = a[k][j] ^ nb ^ carry[j];
-                    next[j] = majority(a[k][j], nb, carry[j]);
-                }
-                carry = next;
+                adder_round(mode, &a[k], &b[k], true, &carry, &mut sum, &mut next);
+                std::mem::swap(&mut carry, &mut next);
                 d.push(sum);
             }
             let neg = d[W - 1].clone();
             // r = (d ^ neg) + neg (negate where neg, identity elsewhere).
             let mut c = neg.clone();
+            let mut cnext = vec![0u64; n];
             let mut planes = Vec::with_capacity(W);
             for row in d.iter().take(W) {
                 *ops += 3; // d ^ neg, sum, carry
                 let mut sum = vec![0u64; n];
-                let mut next = vec![0u64; n];
-                for j in 0..n {
-                    let x = row[j] ^ neg[j];
-                    sum[j] = x ^ c[j];
-                    next[j] = x & c[j];
-                }
-                c = next;
+                half_add_round(mode, row, &neg, &c, &mut sum, &mut cnext);
+                std::mem::swap(&mut c, &mut cnext);
                 planes.push(sum);
             }
             (WriteBack::Dst, planes)
@@ -476,16 +755,20 @@ pub(crate) fn expand(
             let mut prod: Vec<Vec<u64>> = vec![vec![0u64; n]; W];
             for k in 0..W {
                 let mut carry = vec![0u64; n];
+                let mut next = vec![0u64; n];
                 for jk in k..W {
                     *ops += 3; // addend, sum, carry
                     let mut sum = vec![0u64; n];
-                    let mut next = vec![0u64; n];
-                    for j in 0..n {
-                        let addend = a[jk - k][j] & b[k][j];
-                        sum[j] = prod[jk][j] ^ addend ^ carry[j];
-                        next[j] = majority(prod[jk][j], addend, carry[j]);
-                    }
-                    carry = next;
+                    mul_round(
+                        mode,
+                        &a[jk - k],
+                        &b[k],
+                        &prod[jk],
+                        &carry,
+                        &mut sum,
+                        &mut next,
+                    );
+                    std::mem::swap(&mut carry, &mut next);
                     prod[jk] = sum;
                 }
             }
@@ -544,6 +827,8 @@ mod tests {
             .collect()
     }
 
+    const MODES: [KernelMode; 2] = [KernelMode::Reference, KernelMode::Block];
+
     #[test]
     fn expand_add_matches_wrapping_i32() {
         let p = 70; // crosses a word boundary
@@ -552,16 +837,18 @@ mod tests {
         let b_vals: Vec<i32> = (0..p as i32).map(|v| i32::MAX - v * 7).collect();
         let a = encode(&a_vals, range.len());
         let b = encode(&b_vals, range.len());
-        let mut ops = 0;
-        let (target, planes) = expand(&range, Opcode::Add, 0, &a, b, &mut ops);
-        assert_eq!(target, WriteBack::Dst);
-        let want: Vec<i32> = a_vals
-            .iter()
-            .zip(&b_vals)
-            .map(|(&x, &y)| x.wrapping_add(y))
-            .collect();
-        assert_eq!(decode(&planes, p), want);
-        assert_eq!(ops, 2 * W as u64);
+        for mode in MODES {
+            let mut ops = 0;
+            let (target, planes) = expand(&range, mode, Opcode::Add, 0, &a, b.clone(), &mut ops);
+            assert_eq!(target, WriteBack::Dst);
+            let want: Vec<i32> = a_vals
+                .iter()
+                .zip(&b_vals)
+                .map(|(&x, &y)| x.wrapping_add(y))
+                .collect();
+            assert_eq!(decode(&planes, p), want, "{mode:?}");
+            assert_eq!(ops, 2 * W as u64, "{mode:?}");
+        }
     }
 
     #[test]
@@ -570,14 +857,75 @@ mod tests {
         let range = BitRange::full(p);
         let a = encode(&[1, -2, i32::MIN, 7, 0], range.len());
         let b = encode(&[2, 1, 1, 7, -1], range.len());
-        let mut ops = 0;
-        let (target, planes) = expand(&range, Opcode::CmpLt, 0, &a, b, &mut ops);
-        assert_eq!(target, WriteBack::M);
-        assert_eq!(decode(&planes, p), vec![1, 1, 1, 0, 0]);
-        for plane in planes.iter().skip(1) {
-            assert!(plane.iter().all(|&w| w == 0));
+        for mode in MODES {
+            let mut ops = 0;
+            let (target, planes) =
+                expand(&range, mode, Opcode::CmpLt, 0, &a, b.clone(), &mut ops);
+            assert_eq!(target, WriteBack::M);
+            assert_eq!(decode(&planes, p), vec![1, 1, 1, 0, 0], "{mode:?}");
+            for plane in planes.iter().skip(1) {
+                assert!(plane.iter().all(|&w| w == 0));
+            }
+            // less_than's exact charge, identical in both modes.
+            assert_eq!(ops, 3 * W as u64 + 1, "{mode:?}");
         }
-        assert_eq!(ops, 3 * W as u64 + 1); // less_than's exact charge
+    }
+
+    #[test]
+    fn block_mode_is_bit_identical_to_reference_across_opcodes() {
+        // The tentpole parity pin at the kernel level: every opcode's
+        // block expansion must match the reference loops word for word,
+        // with identical op charges, on a ragged multi-word plane.
+        let p = 203; // 4 words, 11 valid bits in the last
+        let range = BitRange::full(p);
+        let a_vals: Vec<i32> = (0..p as i32).map(|v| v.wrapping_mul(0x9E37) ^ 0x5A5A).collect();
+        let b_vals: Vec<i32> = (0..p as i32).map(|v| (v - 101).wrapping_mul(-77)).collect();
+        let a = encode(&a_vals, range.len());
+        let b = encode(&b_vals, range.len());
+        for opcode in [
+            Opcode::Copy,
+            Opcode::Add,
+            Opcode::Sub,
+            Opcode::And,
+            Opcode::Or,
+            Opcode::Xor,
+            Opcode::CmpLt,
+            Opcode::CmpEq,
+            Opcode::CmpNe,
+            Opcode::CmpLe,
+            Opcode::CmpGt,
+            Opcode::CmpGe,
+            Opcode::Min,
+            Opcode::Max,
+            Opcode::AbsDiff,
+            Opcode::Mul,
+            Opcode::Shr,
+            Opcode::Shl,
+        ] {
+            let mut ops_ref = 0;
+            let (tgt_ref, want) = expand(
+                &range,
+                KernelMode::Reference,
+                opcode,
+                5,
+                &a,
+                b.clone(),
+                &mut ops_ref,
+            );
+            let mut ops_blk = 0;
+            let (tgt_blk, got) = expand(
+                &range,
+                KernelMode::Block,
+                opcode,
+                5,
+                &a,
+                b.clone(),
+                &mut ops_blk,
+            );
+            assert_eq!(tgt_ref, tgt_blk, "{opcode:?}");
+            assert_eq!(want, got, "{opcode:?} planes diverged");
+            assert_eq!(ops_ref, ops_blk, "{opcode:?} op charges diverged");
+        }
     }
 
     #[test]
@@ -600,35 +948,51 @@ mod tests {
             Opcode::CmpLe,
             Opcode::Shr,
         ] {
-            let mut full_ops = 0;
-            let (_, want) = expand(&full, opcode, 3, &a, b.clone(), &mut full_ops);
-            for split in [1usize, 2, 3] {
-                let lo = BitRange {
-                    w_lo: 0,
-                    w_hi: split,
-                    ..full
-                };
-                let hi = BitRange {
-                    w_lo: split,
-                    w_hi: full.words,
-                    ..full
-                };
-                let slice = |r: &BitRange, planes: &[Vec<u64>]| -> Vec<Vec<u64>> {
-                    planes.iter().map(|pl| pl[r.w_lo..r.w_hi].to_vec()).collect()
-                };
-                let mut ops_lo = 0;
-                let (_, got_lo) =
-                    expand(&lo, opcode, 3, &slice(&lo, &a), slice(&lo, &b), &mut ops_lo);
-                let mut ops_hi = 0;
-                let (_, got_hi) =
-                    expand(&hi, opcode, 3, &slice(&hi, &a), slice(&hi, &b), &mut ops_hi);
-                for k in 0..W {
-                    assert_eq!(got_lo[k], want[k][..split], "{opcode:?} lo k={k}");
-                    assert_eq!(got_hi[k], want[k][split..], "{opcode:?} hi k={k}");
+            for mode in MODES {
+                let mut full_ops = 0;
+                let (_, want) = expand(&full, mode, opcode, 3, &a, b.clone(), &mut full_ops);
+                for split in [1usize, 2, 3] {
+                    let lo = BitRange {
+                        w_lo: 0,
+                        w_hi: split,
+                        ..full
+                    };
+                    let hi = BitRange {
+                        w_lo: split,
+                        w_hi: full.words,
+                        ..full
+                    };
+                    let slice = |r: &BitRange, planes: &[Vec<u64>]| -> Vec<Vec<u64>> {
+                        planes.iter().map(|pl| pl[r.w_lo..r.w_hi].to_vec()).collect()
+                    };
+                    let mut ops_lo = 0;
+                    let (_, got_lo) = expand(
+                        &lo,
+                        mode,
+                        opcode,
+                        3,
+                        &slice(&lo, &a),
+                        slice(&lo, &b),
+                        &mut ops_lo,
+                    );
+                    let mut ops_hi = 0;
+                    let (_, got_hi) = expand(
+                        &hi,
+                        mode,
+                        opcode,
+                        3,
+                        &slice(&hi, &a),
+                        slice(&hi, &b),
+                        &mut ops_hi,
+                    );
+                    for k in 0..W {
+                        assert_eq!(got_lo[k], want[k][..split], "{opcode:?} {mode:?} lo k={k}");
+                        assert_eq!(got_hi[k], want[k][split..], "{opcode:?} {mode:?} hi k={k}");
+                    }
+                    // Compute-op counts are range-independent per chunk.
+                    assert_eq!(ops_lo, full_ops, "{opcode:?} {mode:?}");
+                    assert_eq!(ops_hi, full_ops, "{opcode:?} {mode:?}");
                 }
-                // Compute-op counts are range-independent per word chunk.
-                assert_eq!(ops_lo, full_ops, "{opcode:?}");
-                assert_eq!(ops_hi, full_ops, "{opcode:?}");
             }
         }
     }
@@ -638,14 +1002,51 @@ mod tests {
         let p = 130;
         let range = BitRange::full(p);
         let instr = Instr::all(Opcode::Copy, Src::Imm, Reg::D0).range(5, 200, 7);
-        let mut ops = 0;
-        let en = enable_words(&range, &instr, |_, _| 0, &mut ops);
-        for i in 0..p {
-            let want = i >= 5 && (i - 5) % 7 == 0;
-            let got = (en[i / 64] >> (i % 64)) & 1 == 1;
-            assert_eq!(got, want, "i={i}");
+        for mode in MODES {
+            let mut ops = 0;
+            let en = enable_words(&range, &instr, mode, |_, _| 0, &mut ops);
+            for i in 0..p {
+                let want = i >= 5 && (i - 5) % 7 == 0;
+                let got = (en[i / 64] >> (i % 64)) & 1 == 1;
+                assert_eq!(got, want, "{mode:?} i={i}");
+            }
+            assert_eq!(ops, 1); // decoder only; no flags
         }
-        assert_eq!(ops, 1); // decoder only; no flags
+    }
+
+    #[test]
+    fn dense_enable_fill_matches_the_bit_walk() {
+        // The block mode's whole-word mask fill vs the reference per-bit
+        // walk, across window edges that start/end mid-word, span whole
+        // words, clip at the plane tail, and collapse to empty.
+        let p = 193; // 4 words, 1 valid bit in the last
+        for (w_lo, w_hi) in [(0usize, 4usize), (1, 3), (2, 4)] {
+            let range = BitRange {
+                w_lo,
+                w_hi,
+                words: 4,
+                p,
+            };
+            for (start, end) in [
+                (0u32, 500u32),
+                (0, 63),
+                (5, 5),
+                (7, 130),
+                (64, 127),
+                (63, 64),
+                (100, 99),
+                (190, 400),
+                (192, 192),
+            ] {
+                let instr = Instr::all(Opcode::Copy, Src::Imm, Reg::D0).range(start, end, 1);
+                let mut ops_a = 0;
+                let walk = enable_words(&range, &instr, KernelMode::Reference, |_, _| 0, &mut ops_a);
+                let mut ops_b = 0;
+                let fill = enable_words(&range, &instr, KernelMode::Block, |_, _| 0, &mut ops_b);
+                assert_eq!(walk, fill, "[{w_lo},{w_hi}) window {start}..={end}");
+                assert_eq!(ops_a, ops_b);
+            }
+        }
     }
 
     #[test]

@@ -17,9 +17,14 @@
 //! config carries, so step-at-a-time callers pay a wake instead of a
 //! spawn per instruction — and the bit-serial opcode expansions both
 //! engines execute live once in the range-parameterized `bit_kernel`
-//! core. See DESIGN.md "Execution model".
+//! core. The choice between all of these is one seam: the
+//! [`backend::ComputeBackend`] trait, selected by
+//! [`sharded::ExecConfig::backend`] (a [`backend::BackendKind`]) and
+//! driveable from the CLI (`--backend`) or `CPM_BACKEND`. See DESIGN.md
+//! "Execution model" and "Compute backends".
 #![warn(missing_docs)]
 
+pub mod backend;
 pub mod bit_engine;
 pub(crate) mod bit_kernel;
 pub mod isa;
@@ -29,6 +34,10 @@ pub mod superconn;
 pub mod word_engine;
 pub mod workers;
 
+pub use backend::{
+    BackendKind, BitExec, ComputeBackend, PjrtBridgeBackend, SerialBackend, ShardedBackend,
+    SimdBackend, WordExec,
+};
 pub use isa::{Instr, Opcode, Reg, Src};
 pub use macroasm::TraceBuilder;
 pub use sharded::{ExecConfig, ShardedBitPlane, ShardedPlane, SpawnMode};

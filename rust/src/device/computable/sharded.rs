@@ -48,8 +48,9 @@
 use std::sync::atomic::{AtomicI32, AtomicU64, Ordering};
 use std::sync::Barrier;
 
+use super::backend::BackendKind;
 use super::bit_engine::{BitEngine, W};
-use super::bit_kernel::{self, BitRange, WriteBack};
+use super::bit_kernel::{self, BitRange, KernelMode, WriteBack};
 use super::isa::{Instr, Opcode, Reg, Src, F_COND_M, F_COND_NOT_M, N_REGS};
 use super::word_engine::{apply_slice_op, PePlane, WordEngine};
 use super::workers::{self, Job, WorkerPool};
@@ -74,18 +75,31 @@ pub enum SpawnMode {
     PerCall,
 }
 
-/// Plane-execution configuration: how many worker threads a device may
-/// use, when a plane is big enough to bother, and how the threads are
-/// acquired ([`SpawnMode`]).
+/// Plane-execution configuration: which [`BackendKind`] executes planes,
+/// how many worker threads a device may use, when a plane is big enough
+/// to bother, and how the threads are acquired ([`SpawnMode`]).
 ///
-/// Flows from the CLI (`--threads`) or `CPM_THREADS` through
+/// Flows from the CLI (`--threads` / `--backend`) or the `CPM_THREADS` /
+/// `CPM_BACKEND` environment through
 /// [`PoolConfig`](crate::pool::PoolConfig) into the serve path, and into
 /// the runtime's trace interpreter. The config carries a shared
 /// [`WorkerPool`] handle — clones dispatch onto the *same* parked
 /// workers, so a served process warms its pool once and keeps it for the
 /// process lifetime.
+///
+/// Built with a single builder chain (one constructor, consuming
+/// setters):
+///
+/// ```
+/// use cpm::device::computable::{BackendKind, ExecConfig};
+/// let cfg = ExecConfig::new().threads(4).min_shard_pes(1).backend(BackendKind::Simd);
+/// assert_eq!(cfg.threads, 4);
+/// ```
 #[derive(Debug, Clone)]
 pub struct ExecConfig {
+    /// Which compute backend executes planes (dispatch goes through the
+    /// [`ComputeBackend`](super::ComputeBackend) trait).
+    pub backend: BackendKind,
     /// Worker threads for plane execution. `1` = serial, bit-identical
     /// to the plain engines.
     pub threads: usize,
@@ -103,6 +117,7 @@ pub struct ExecConfig {
 impl Default for ExecConfig {
     fn default() -> Self {
         ExecConfig {
+            backend: BackendKind::default(),
             threads: 1,
             min_shard_pes: DEFAULT_MIN_SHARD_PES,
             spawn: SpawnMode::Persistent,
@@ -116,7 +131,8 @@ impl PartialEq for ExecConfig {
     /// the same way. Worker-pool *identity* is deliberately excluded —
     /// which OS threads do the work is not observable in state or cost.
     fn eq(&self, other: &Self) -> bool {
-        self.threads == other.threads
+        self.backend == other.backend
+            && self.threads == other.threads
             && self.min_shard_pes == other.min_shard_pes
             && self.spawn == other.spawn
     }
@@ -125,49 +141,62 @@ impl PartialEq for ExecConfig {
 impl Eq for ExecConfig {}
 
 impl ExecConfig {
-    /// Serial execution (the default).
-    pub fn serial() -> Self {
+    /// The default configuration: the default backend, one thread
+    /// (serial, bit-identical to the plain engines), the default shard
+    /// floor, pool-backed dispatch. Chain the builder setters to change
+    /// any of it.
+    pub fn new() -> Self {
         ExecConfig::default()
     }
 
-    /// `threads` workers with the default shard-size floor.
-    pub fn with_threads(threads: usize) -> Self {
-        ExecConfig {
-            threads: threads.max(1),
-            ..ExecConfig::default()
-        }
-    }
-
-    /// `threads` workers with an explicit per-shard floor (tests and
-    /// benches pass a floor of 1 so small planes really shard).
-    pub fn with_min_shard(threads: usize, min_shard_pes: usize) -> Self {
-        ExecConfig {
-            threads: threads.max(1),
-            min_shard_pes,
-            ..ExecConfig::default()
-        }
-    }
-
-    /// Read `CPM_THREADS` from the environment (absent/unparsable = 1).
+    /// Read the environment: `CPM_THREADS` (absent/unparsable = 1) and
+    /// `CPM_BACKEND` (absent/unparsable = the default backend; values
+    /// are the [`BackendKind`] names `serial|sharded|simd|pjrt`).
     pub fn from_env() -> Self {
         let threads = std::env::var("CPM_THREADS")
             .ok()
             .and_then(|v| v.parse::<usize>().ok())
             .unwrap_or(1);
-        ExecConfig::with_threads(threads)
+        let backend = std::env::var("CPM_BACKEND")
+            .ok()
+            .and_then(|v| v.parse::<BackendKind>().ok())
+            .unwrap_or_default();
+        ExecConfig::new().threads(threads).backend(backend)
     }
 
-    /// This config with its [`SpawnMode`] replaced (builder style).
-    pub fn spawn_mode(mut self, spawn: SpawnMode) -> Self {
+    /// This config with its worker-thread count replaced (floored at 1).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// This config with its per-shard PE floor replaced (tests and
+    /// benches pass a floor of 1 so small planes really shard).
+    pub fn min_shard_pes(mut self, min_shard_pes: usize) -> Self {
+        self.min_shard_pes = min_shard_pes;
+        self
+    }
+
+    /// This config with its [`SpawnMode`] replaced.
+    pub fn spawn(mut self, spawn: SpawnMode) -> Self {
         self.spawn = spawn;
         self
     }
 
-    /// This config with the per-shard floor raised to at least `floor`
-    /// (never lowered).
-    pub fn floor_at_least(mut self, floor: usize) -> Self {
-        self.min_shard_pes = self.min_shard_pes.max(floor);
+    /// This config with its [`BackendKind`] replaced.
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
         self
+    }
+
+    /// The kernel inner-loop flavor this config's backend runs: the SIMD
+    /// backend uses the block kernels, everything else the reference
+    /// walks (both bit-identical in state and accounting).
+    pub(crate) fn kernel_mode(&self) -> KernelMode {
+        match self.backend {
+            BackendKind::Simd => KernelMode::Block,
+            _ => KernelMode::Reference,
+        }
     }
 
     /// Worker count actually used for a plane of `p` PEs: capped so every
@@ -739,14 +768,15 @@ pub struct ShardedBitPlane {
 impl ShardedBitPlane {
     /// Sharded bit plane over `p` PEs.
     pub fn new(p: usize, cfg: ExecConfig) -> Self {
-        ShardedBitPlane {
-            engine: BitEngine::new(p),
-            cfg,
-        }
+        let mut engine = BitEngine::new(p);
+        engine.set_kernel(cfg.kernel_mode());
+        ShardedBitPlane { engine, cfg }
     }
 
-    /// Wrap an existing bit engine (state and counters carry over).
-    pub fn with_engine(engine: BitEngine, cfg: ExecConfig) -> Self {
+    /// Wrap an existing bit engine (state and counters carry over; the
+    /// kernel flavor is taken from `cfg`).
+    pub fn with_engine(mut engine: BitEngine, cfg: ExecConfig) -> Self {
+        engine.set_kernel(cfg.kernel_mode());
         ShardedBitPlane { engine, cfg }
     }
 
@@ -820,6 +850,7 @@ impl ShardedBitPlane {
         // data-independent per instruction: reproduce them exactly on a
         // 1-PE shadow and fold them in.
         let mut shadow = BitEngine::new(1);
+        shadow.set_kernel(self.cfg.kernel_mode());
         shadow.run(trace);
         self.engine.absorb_accounting(shadow.plane_ops(), shadow.cost());
 
@@ -849,6 +880,7 @@ impl ShardedBitPlane {
 
         let snap_ref = &snap;
         let barrier_ref = &barrier;
+        let kernel = self.cfg.kernel_mode();
         let jobs: Vec<Job<'_>> = shard_planes
             .into_iter()
             .enumerate()
@@ -862,6 +894,7 @@ impl ShardedBitPlane {
                             words,
                             p,
                         },
+                        kernel,
                         planes,
                         snap: snap_ref,
                         barrier: barrier_ref,
@@ -889,6 +922,8 @@ impl ShardedBitPlane {
 struct BitShardWorker<'a> {
     /// This shard's slice of the word axis.
     range: BitRange,
+    /// Kernel inner-loop flavor (from the config's backend).
+    kernel: KernelMode,
     /// `planes[r][k]` = this shard's words of register `r`, bit `k`.
     planes: Vec<Vec<&'a mut [u64]>>,
     /// Shared pre-cycle NB snapshot: plane `k` word `w` at `k * words + w`.
@@ -931,6 +966,7 @@ impl BitShardWorker<'_> {
         let en = bit_kernel::enable_words(
             &range,
             instr,
+            self.kernel,
             |k, j| self.planes[Reg::M as usize][k][j],
             &mut ops,
         );
@@ -943,7 +979,8 @@ impl BitShardWorker<'_> {
         );
         let dst = instr.dst as usize;
         let a: Vec<Vec<u64>> = (0..W).map(|k| self.planes[dst][k].to_vec()).collect();
-        let (target, out) = bit_kernel::expand(&range, instr.opcode, instr.imm, &a, b, &mut ops);
+        let (target, out) =
+            bit_kernel::expand(&range, self.kernel, instr.opcode, instr.imm, &a, b, &mut ops);
         let wr = match target {
             WriteBack::M => Reg::M as usize,
             WriteBack::Dst => dst,
@@ -967,7 +1004,7 @@ mod tests {
     use super::*;
 
     fn par(threads: usize) -> ExecConfig {
-        ExecConfig::with_min_shard(threads, 1)
+        ExecConfig::new().threads(threads).min_shard_pes(1)
     }
 
     #[test]
@@ -991,24 +1028,23 @@ mod tests {
 
     #[test]
     fn effective_threads_respects_floor() {
-        let cfg = ExecConfig::with_min_shard(8, 100);
+        let cfg = ExecConfig::new().threads(8).min_shard_pes(100);
         assert_eq!(cfg.effective_threads(0), 1);
         assert_eq!(cfg.effective_threads(99), 1);
         assert_eq!(cfg.effective_threads(250), 2);
         assert_eq!(cfg.effective_threads(100_000), 8);
-        assert_eq!(ExecConfig::serial().effective_threads(1 << 20), 1);
+        assert_eq!(ExecConfig::new().effective_threads(1 << 20), 1);
     }
 
     #[test]
     fn config_equality_ignores_pool_identity() {
         // Two configs with the same policy but different pools compare
         // equal: which OS threads run the shards is not observable.
-        assert_eq!(ExecConfig::with_threads(4), ExecConfig::with_threads(4));
-        assert_ne!(ExecConfig::with_threads(4), ExecConfig::with_threads(2));
-        assert_ne!(
-            ExecConfig::with_threads(4),
-            ExecConfig::with_threads(4).spawn_mode(SpawnMode::PerCall)
-        );
+        let four = || ExecConfig::new().threads(4);
+        assert_eq!(four(), four());
+        assert_ne!(four(), ExecConfig::new().threads(2));
+        assert_ne!(four(), four().spawn(SpawnMode::PerCall));
+        assert_ne!(four(), four().backend(BackendKind::Simd));
     }
 
     #[test]
@@ -1027,7 +1063,7 @@ mod tests {
         serial.run(&trace);
         for threads in [2usize, 3, 7] {
             for spawn in [SpawnMode::Persistent, SpawnMode::PerCall] {
-                let mut sharded = ShardedPlane::new(p, 16, par(threads).spawn_mode(spawn));
+                let mut sharded = ShardedPlane::new(p, 16, par(threads).spawn(spawn));
                 sharded.load_plane(Reg::Nb, &vals);
                 sharded.run(&trace);
                 assert_eq!(sharded.state(), serial.state(), "threads={threads} {spawn:?}");
@@ -1090,7 +1126,7 @@ mod tests {
         serial.run(&trace);
         for threads in [2usize, 3] {
             for spawn in [SpawnMode::Persistent, SpawnMode::PerCall] {
-                let mut sharded = ShardedBitPlane::new(p, par(threads).spawn_mode(spawn));
+                let mut sharded = ShardedBitPlane::new(p, par(threads).spawn(spawn));
                 sharded.load_plane(Reg::Nb, &vals);
                 sharded.run(&trace);
                 assert_eq!(sharded.state(), serial.state(), "threads={threads} {spawn:?}");
@@ -1119,7 +1155,7 @@ mod tests {
         assert_eq!(pool.workers(), 3);
         assert_eq!(pool.dispatches(), 10);
         // Serial configs never touch the pool.
-        let serial_cfg = ExecConfig::serial();
+        let serial_cfg = ExecConfig::new();
         let mut serial_plane = ShardedPlane::new(64, 16, serial_cfg.clone());
         serial_plane.step(&Instr::all(Opcode::Add, Src::Imm, Reg::Nb).imm(1));
         assert_eq!(serial_cfg.worker_pool().workers(), 0);

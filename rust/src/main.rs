@@ -19,11 +19,15 @@
 //!
 //! `pool`, `serve`, `netbench`, and `runtime-check` accept `--threads N`
 //! to run large dense PE planes sharded across N std worker threads
-//! (default 1 = the serial engines). The threads are a persistent pool
+//! (default 1 = the serial engines) and `--backend
+//! serial|sharded|simd|pjrt` to pick the compute backend the planes
+//! execute on (default sharded; `pjrt` needs `--features pjrt`).
+//! Selection precedence is CLI flag > `CPM_THREADS`/`CPM_BACKEND`
+//! environment > config default. The threads are a persistent pool
 //! of parked workers owned by the process's `ExecConfig`: a served
 //! process warms them once and every request — single-instruction steps
 //! included — dispatches onto the same workers (see DESIGN.md
-//! "Execution model").
+//! "Execution model" and "Compute backends").
 
 use std::time::{Duration, Instant};
 
@@ -33,7 +37,7 @@ use cpm::coordinator::{
     DEFAULT_TENANT,
 };
 use cpm::device::computable::isa::N_REGS;
-use cpm::device::computable::{ExecConfig, Instr, Opcode, Reg, Src};
+use cpm::device::computable::{BackendKind, ExecConfig, Instr, Opcode, Reg, Src};
 use cpm::device::control::ControlUnit;
 use cpm::net::{CpmClient, NetConfig, NetServer, WindowConfig};
 use cpm::physics;
@@ -139,7 +143,7 @@ fn pool_cmd(cli: &Cli) -> cpm::Result<()> {
         capacity_pes: 1 << 18,
         tenant_quota_pes: 1 << 17,
         corpus_slack: 1024,
-        exec: exec_config(cli),
+        exec: exec_config(cli)?,
     });
     let schema = Schema::new(&[("price", 2), ("qty", 1)])?;
     pool.create_table("alice", "orders", schema, rows)?;
@@ -218,10 +222,25 @@ fn pool_cmd(cli: &Cli) -> cpm::Result<()> {
     Ok(())
 }
 
-/// Plane-execution policy from the CLI: `--threads N` (default 1, i.e.
-/// the serial engines).
-fn exec_config(cli: &Cli) -> ExecConfig {
-    ExecConfig::with_threads(cli.get("threads", 1usize))
+/// Plane-execution policy from the CLI and environment: `--threads N`
+/// and `--backend serial|sharded|simd|pjrt`. CLI flags beat the
+/// `CPM_THREADS` / `CPM_BACKEND` environment, which beats the defaults
+/// (1 thread, the sharded backend — serial at one thread).
+fn exec_config(cli: &Cli) -> cpm::Result<ExecConfig> {
+    let env = ExecConfig::from_env();
+    let threads = cli.get("threads", env.threads);
+    let backend = match cli.get_str("backend") {
+        Some(name) => name
+            .parse::<BackendKind>()
+            .map_err(cpm::CpmError::Coordinator)?,
+        None => env.backend,
+    };
+    if backend == BackendKind::Pjrt && cfg!(not(feature = "pjrt")) {
+        return Err(cpm::CpmError::Coordinator(
+            "backend `pjrt` needs a build with --features pjrt (see rust/Cargo.toml)".into(),
+        ));
+    }
+    Ok(env.threads(threads).backend(backend))
 }
 
 /// Resident scratch-array size on the network demo server (large enough
@@ -302,18 +321,19 @@ fn serve_cmd(cli: &Cli) -> cpm::Result<()> {
     let addr = cli.get_str("addr").unwrap_or("127.0.0.1:7070");
     let rows = cli.get("rows", 4096usize);
     let secs = cli.get("secs", 0u64);
-    let exec = exec_config(cli);
+    let exec = exec_config(cli)?;
     let server = demo_server(rows, cli.get("seed", 42u64), exec.clone())?;
     let cfg = net_config(cli, addr);
     let window_us = cfg.window.max_delay.as_micros();
     let max_batch = cfg.window.max_batch;
     let net = NetServer::spawn(server, cfg)?;
     println!(
-        "cpm serving on {} (window {} us, max batch {}, {} exec thread(s)); demo devices: default/table ({} rows), default/corpus, default/array ({} words)",
+        "cpm serving on {} (window {} us, max batch {}, {} exec thread(s), backend {}); demo devices: default/table ({} rows), default/corpus, default/array ({} words)",
         net.addr(),
         window_us,
         max_batch,
         exec.threads,
+        exec.backend,
         rows,
         DEMO_ARRAY_WORDS
     );
@@ -401,7 +421,7 @@ fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
     let requests = cli.get("requests", 1024usize);
     let clients = cli.get("clients", 8usize).max(1);
     let rows = cli.get("rows", 4096usize);
-    let exec = exec_config(cli);
+    let exec = exec_config(cli)?;
     let server = demo_server(rows, cli.get("seed", 42u64), exec.clone())?;
     let cfg = net_config(cli, "127.0.0.1:0");
     let window_us = cfg.window.max_delay.as_micros();
@@ -448,10 +468,11 @@ fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
     );
     print_wire_metrics(&server);
     println!(
-        "markdown row (threads | max_batch | window_us | requests | req/s | mean window | coalesced):"
+        "markdown row (backend | threads | max_batch | window_us | requests | req/s | mean window | coalesced):"
     );
     println!(
-        "| {} | {} | {} | {} | {:.0} | {:.2} | {} |",
+        "| {} | {} | {} | {} | {} | {:.0} | {:.2} | {} |",
+        exec.backend,
         exec.threads,
         max_batch,
         window_us,
@@ -460,6 +481,34 @@ fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
         server.metrics.wire.mean_occupancy(),
         server.metrics.wire.coalesced_windows
     );
+    // Machine-readable row for the ROADMAP item-5 perf trajectory
+    // (BENCH_net.json): one JSON object per run, appended by the caller.
+    if let Some(path) = cli.get_str("json") {
+        let host_threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let row = format!(
+            "{{\"bench\":\"netbench\",\"backend\":\"{}\",\"threads\":{},\"clients\":{},\
+             \"max_batch\":{},\"window_us\":{},\"requests\":{},\"ok\":{},\
+             \"elapsed_ms\":{:.3},\"req_per_s\":{:.1},\"mean_window\":{:.3},\
+             \"coalesced_windows\":{},\"host_threads\":{}}}\n",
+            exec.backend,
+            exec.threads,
+            clients,
+            max_batch,
+            window_us,
+            total,
+            ok,
+            elapsed.as_secs_f64() * 1e3,
+            rps,
+            server.metrics.wire.mean_occupancy(),
+            server.metrics.wire.coalesced_windows,
+            host_threads
+        );
+        std::fs::write(path, row)
+            .map_err(|e| cpm::CpmError::Coordinator(format!("writing {path}: {e}")))?;
+        println!("wrote bench row to {path}");
+    }
     Ok(())
 }
 
@@ -484,10 +533,10 @@ fn physics_cmd(_cli: &Cli) -> cpm::Result<()> {
 fn runtime_check(cli: &Cli) -> cpm::Result<()> {
     let dir = cli.get_str("artifacts").unwrap_or("artifacts").to_string();
     let mut backend = Backend::new(&dir)?;
-    // The pure-Rust interpreter honors `--threads`; the PJRT backend
-    // parallelizes inside XLA instead.
+    // The pure-Rust interpreter honors `--threads` / `--backend`; the
+    // PJRT backend parallelizes inside XLA instead.
     #[cfg(not(feature = "pjrt"))]
-    backend.set_exec(exec_config(cli));
+    backend.set_exec(exec_config(cli)?);
     let shapes = backend.available_traces();
     println!("trace shapes from {dir}: {shapes:?}");
     let shape = shapes

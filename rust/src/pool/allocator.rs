@@ -30,9 +30,11 @@ pub struct PoolConfig {
     /// the server previously hard-coded.
     pub corpus_slack: usize,
     /// Plane-execution policy for compute on this pool's devices: the
-    /// batch executor runs dense computable-memory work on a
-    /// [`ShardedPlane`](crate::device::computable::ShardedPlane) with
-    /// this configuration (`threads = 1` keeps the serial engines).
+    /// batch executor constructs planes for dense computable-memory work
+    /// through this config's
+    /// [`ComputeBackend`](crate::device::computable::ComputeBackend)
+    /// (`backend` selects the executor; `threads = 1` keeps the serial
+    /// engines).
     pub exec: ExecConfig,
 }
 

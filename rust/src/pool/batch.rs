@@ -23,7 +23,7 @@ use crate::algos::{histogram, reduce, sort, threshold};
 use crate::coordinator::scheduler::{OverlapScheduler, TaskPhase};
 use crate::coordinator::server::{default_device, Addressed, ArrayJob, Request, Response};
 use crate::cycles::ConcurrentCost;
-use crate::device::computable::{ExecConfig, Reg, ShardedPlane};
+use crate::device::computable::{ExecConfig, PePlane, Reg, WordExec};
 use crate::error::{CpmError, Result};
 use crate::sql::Query;
 
@@ -87,11 +87,13 @@ impl<'a> AddressedRef<'a> {
 pub struct BatchExecutor {
     /// Largest ad-hoc array a computable-memory job may load.
     engine_capacity: usize,
-    /// Plane-execution policy for computable-memory work: large dense
-    /// planes run sharded across std threads ([`ShardedPlane`]);
-    /// `threads = 1` is the serial engines. The config carries the
-    /// server's persistent worker-pool handle, so every request's plane
-    /// dispatches onto the same parked workers for the process lifetime.
+    /// Plane-execution policy for computable-memory work: every ad-hoc
+    /// plane is constructed through the config's
+    /// [`ComputeBackend`](crate::device::computable::ComputeBackend)
+    /// (`backend` selects the executor, `threads = 1` is the serial
+    /// engines). The config carries the server's persistent worker-pool
+    /// handle, so every request's plane dispatches onto the same parked
+    /// workers for the process lifetime.
     exec: ExecConfig,
 }
 
@@ -444,7 +446,7 @@ impl BatchExecutor {
             Err(e) => return (Err(e), ConcurrentCost::default()),
         };
         let n = values.len();
-        let mut e = ShardedPlane::new(n.max(1), 16, self.exec.clone());
+        let mut e = self.exec.compute_backend().word_plane(n.max(1), 16);
         e.load_plane(Reg::Nb, &values);
         // The array is resident in the PE plane between jobs: its load was
         // paid at admission, so a job charges execution cycles only.
@@ -475,7 +477,7 @@ impl BatchExecutor {
         (Ok(r), e.cost())
     }
 
-    fn engine_for(&self, values: &[i32]) -> Result<ShardedPlane> {
+    fn engine_for(&self, values: &[i32]) -> Result<Box<dyn WordExec>> {
         if values.len() > self.engine_capacity {
             return Err(CpmError::Coordinator(format!(
                 "array of {} exceeds device capacity {}",
@@ -483,7 +485,7 @@ impl BatchExecutor {
                 self.engine_capacity
             )));
         }
-        let mut e = ShardedPlane::new(values.len().max(1), 16, self.exec.clone());
+        let mut e = self.exec.compute_backend().word_plane(values.len().max(1), 16);
         e.load_plane(Reg::Nb, values);
         Ok(e)
     }

@@ -23,7 +23,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::device::computable::isa::{Instr, INSTR_WIDTH, N_REGS};
-use crate::device::computable::{ExecConfig, Reg, ShardedPlane, SpawnMode};
+use crate::device::computable::{ExecConfig, PePlane, Reg, SpawnMode, WordExec};
 use crate::error::{CpmError, Result};
 
 #[cfg(feature = "pjrt")]
@@ -114,8 +114,10 @@ const DEFAULT_TRACE_SHAPES: &[TraceShape] = &[
 
 /// The pure-Rust trace executor (default backend).
 ///
-/// Functionally it is the word engine (behind [`ShardedPlane`], so big
-/// planes parallelize) driven through the compiled backend's
+/// Functionally it is the word plane the config's
+/// [`ComputeBackend`](crate::device::computable::ComputeBackend)
+/// constructs (so big planes parallelize, and `--backend` selects the
+/// executor) driven through the compiled backend's
 /// dispatch API: every instruction goes through the wire encoding
 /// (`Instr::encode` → `Instr::decode`), traces are NOP-padded to the
 /// shape's window length, and longer traces are chained window by window —
@@ -204,9 +206,14 @@ impl TraceInterpreter {
         // outweighs that orchestration cost.
         let exec = match self.exec.spawn {
             SpawnMode::Persistent => self.exec.clone(),
-            SpawnMode::PerCall => self.exec.clone().floor_at_least(STEP_MIN_SHARD_PES),
+            SpawnMode::PerCall => {
+                let floor = self.exec.min_shard_pes.max(STEP_MIN_SHARD_PES);
+                self.exec.clone().min_shard_pes(floor)
+            }
         };
-        let mut engine = ShardedPlane::new(p, 32, exec);
+        // Plane construction goes through the ComputeBackend seam: the
+        // config's backend kind decides what actually executes.
+        let mut engine = exec.compute_backend().word_plane(p, 32);
         engine.set_state(state);
         let mut counts = Vec::with_capacity(words.len() / INSTR_WIDTH);
         for chunk in words.chunks_exact(INSTR_WIDTH) {

@@ -24,6 +24,17 @@
 //! precisely so this suite can require
 //! **pool-backed ≡ scope-backed ≡ serial**.
 //!
+//! Compute backends are under test two ways. The dedicated
+//! cross-backend differential
+//! (`every_backend_is_bit_identical_through_the_factory`) pins
+//! serial ≡ sharded ≡ simd (and the pjrt bridge) through the
+//! `ComputeBackend` factory. And the `par()` config every other test
+//! uses starts from `ExecConfig::from_env()`, so CI's backend-matrix
+//! leg (`CPM_BACKEND=serial|sharded|simd`, including a `--features
+//! simd` build) re-runs this whole suite with each backend doing the
+//! executing — the serial references never change, so any backend that
+//! drifts from them fails the same assertions.
+//!
 //! CI runs this file single-threaded (`RUST_TEST_THREADS=1`,
 //! `--test-threads=1`) so shard-seam races cannot hide behind
 //! test-runner parallelism.
@@ -32,7 +43,8 @@ use cpm::algos::{histogram, reduce, sort, threshold};
 use cpm::device::computable::bit_engine::BitEngine;
 use cpm::device::computable::isa::{F_COND_M, F_COND_NOT_M};
 use cpm::device::computable::{
-    ExecConfig, Instr, Opcode, Reg, ShardedBitPlane, ShardedPlane, SpawnMode, Src, WordEngine,
+    BackendKind, BitExec, ExecConfig, Instr, Opcode, PePlane, Reg, ShardedBitPlane, ShardedPlane,
+    SpawnMode, Src, WordEngine, WordExec,
 };
 use cpm::logic::{AllLineDecoder, CarryPatternGenerator};
 use cpm::util::propcheck::{forall_sized, Config};
@@ -43,8 +55,10 @@ const SPAWN_MODES: [SpawnMode; 2] = [SpawnMode::Persistent, SpawnMode::PerCall];
 
 /// Parallel config with the size floor disabled, so tiny planes really
 /// do split across workers (persistent-pool dispatch, the default).
+/// Starts from the environment so CI's `CPM_BACKEND` matrix leg swaps
+/// the backend under every test in this file.
 fn par(threads: usize) -> ExecConfig {
-    ExecConfig::with_min_shard(threads, 1)
+    ExecConfig::from_env().threads(threads).min_shard_pes(1)
 }
 
 /// One random macro instruction over a `p`-PE plane: any opcode, any
@@ -244,7 +258,7 @@ fn threads_one_is_the_serial_path() {
     let mut serial = WordEngine::new(p, 16);
     serial.load_plane(Reg::Nb, &vals);
     serial.run(&trace);
-    for cfg in [ExecConfig::default(), ExecConfig::with_threads(1)] {
+    for cfg in [ExecConfig::default(), ExecConfig::new().threads(1)] {
         let mut one = ShardedPlane::new(p, 16, cfg);
         one.load_plane(Reg::Nb, &vals);
         one.run(&trace);
@@ -255,7 +269,7 @@ fn threads_one_is_the_serial_path() {
     let mut bserial = BitEngine::new(p);
     bserial.load_plane(Reg::Nb, &vals);
     bserial.run(&trace[..6]);
-    let mut bone = ShardedBitPlane::new(p, ExecConfig::with_threads(1));
+    let mut bone = ShardedBitPlane::new(p, ExecConfig::new().threads(1));
     bone.load_plane(Reg::Nb, &vals);
     bone.run(&trace[..6]);
     assert_eq!(bone.state(), bserial.state());
@@ -289,7 +303,7 @@ fn pool_backed_equals_scope_backed_equals_serial() {
             bit_serial.run(&trace[..trace.len().min(4)]);
             for &threads in &SHARD_COUNTS {
                 for spawn in SPAWN_MODES {
-                    let cfg = par(threads).spawn_mode(spawn);
+                    let cfg = par(threads).spawn(spawn);
                     let mut word = ShardedPlane::new(*p, 16, cfg.clone());
                     word.load_plane(Reg::Nb, vals);
                     word.run(trace);
@@ -329,7 +343,7 @@ fn oversubscribed_pool_caps_at_the_plane_and_stays_warm() {
     // the PE count (word plane) / plane-word count (bit plane), the pool
     // spawns only as many workers as the largest dispatch used, and the
     // same pool serves planes of different shard counts back to back.
-    let cfg = ExecConfig::with_min_shard(16, 1);
+    let cfg = ExecConfig::new().threads(16).min_shard_pes(1);
     let vals: Vec<i32> = (0..40).map(|v| v * 7 - 100).collect();
     let trace = vec![
         Instr::all(Opcode::Add, Src::Left, Reg::Nb),
@@ -438,6 +452,87 @@ fn sharded_bit_plane_is_bit_identical_across_shard_counts() {
                     sharded.cost() == serial.cost(),
                     "bit cost diverged at p={p} threads={threads}"
                 );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn every_backend_is_bit_identical_through_the_factory() {
+    // The ComputeBackend seam itself: planes constructed through
+    // `ExecConfig::compute_backend()` — serial, sharded, simd, and the
+    // pjrt bridge — are bit-identical to the serial engines in state,
+    // cost, and measured plane ops, across shard counts {1, 2, 3, 7}
+    // and plane sizes no shard count divides. This is the differential
+    // that lets the pool/net/runtime layers dispatch through the trait
+    // without knowing which executor is behind it.
+    forall_sized(
+        Config {
+            iters: 12,
+            base_seed: 0xBAC0FF,
+        },
+        |rng, size| {
+            let p = 1 + 6 * size + rng.range(0, 8);
+            let vals = rng.vec_i32(p, -4000, 4000);
+            let trace: Vec<Instr> = (0..5).map(|_| random_instr(rng, p)).collect();
+            (p, vals, trace)
+        },
+        |(p, vals, trace)| {
+            let mut word_ref = WordEngine::new(*p, 16);
+            word_ref.load_plane(Reg::Nb, vals);
+            word_ref.run(trace);
+            // Snapshot before match_count: the readout itself charges a
+            // broadcast, and each backend's plane is compared pre-readout.
+            let (ref_state, ref_cost) = (word_ref.state(), word_ref.cost());
+            let ref_matches = word_ref.match_count();
+            let mut bit_ref = BitEngine::new(*p);
+            bit_ref.load_plane(Reg::Nb, vals);
+            bit_ref.run(trace);
+            for kind in BackendKind::ALL {
+                for &threads in &SHARD_COUNTS {
+                    let cfg = ExecConfig::new()
+                        .threads(threads)
+                        .min_shard_pes(1)
+                        .backend(kind);
+                    let backend = cfg.compute_backend();
+                    cpm::prop_assert!(
+                        backend.name() == kind.name(),
+                        "factory name mismatch for {kind:?}"
+                    );
+                    let mut word = backend.word_plane(*p, 16);
+                    word.load_plane(Reg::Nb, vals);
+                    word.run(trace);
+                    cpm::prop_assert!(
+                        word.state() == ref_state,
+                        "word state diverged at p={p} backend={kind} threads={threads}"
+                    );
+                    cpm::prop_assert!(
+                        word.cost() == ref_cost,
+                        "word cost diverged at p={p} backend={kind} threads={threads}"
+                    );
+                    cpm::prop_assert!(
+                        word.match_count() == ref_matches,
+                        "word match count diverged at p={p} backend={kind} threads={threads}"
+                    );
+                    let mut bit = backend.bit_plane(*p);
+                    bit.load_plane(Reg::Nb, vals);
+                    bit.run(trace);
+                    cpm::prop_assert!(
+                        bit.state() == bit_ref.state(),
+                        "bit state diverged at p={p} backend={kind} threads={threads}"
+                    );
+                    cpm::prop_assert!(
+                        bit.plane_ops() == bit_ref.plane_ops(),
+                        "bit plane-ops diverged at p={p} backend={kind} threads={threads}: {} vs {}",
+                        bit.plane_ops(),
+                        bit_ref.plane_ops()
+                    );
+                    cpm::prop_assert!(
+                        bit.cost() == bit_ref.cost(),
+                        "bit cost diverged at p={p} backend={kind} threads={threads}"
+                    );
+                }
             }
             Ok(())
         },
