@@ -503,6 +503,7 @@ fn e17_sql_end_to_end() {
             scan.scan_compare(&price, |v| v < 5000);
         }
     }
+    let m = server.metrics();
     let mut r = Report::new(&["metric", "value"]);
     r.row(&["rows".into(), n.to_string()]);
     r.row(&["queries served".into(), served.to_string()]);
@@ -514,13 +515,13 @@ fn e17_sql_end_to_end() {
         "p50 / p99 latency (µs)".into(),
         format!(
             "{} / {}",
-            server.metrics.latency.percentile_us(50.0),
-            server.metrics.latency.percentile_us(99.0)
+            m.latency.percentile_us(50.0),
+            m.latency.percentile_us(99.0)
         ),
     ]);
     r.row(&[
         "CPM device cycles / query".into(),
-        format!("{:.1}", server.metrics.device_macro_cycles as f64 / served as f64),
+        format!("{:.1}", m.device_macro_cycles as f64 / served as f64),
     ]);
     r.row(&[
         "serial scan cycles / query".into(),
@@ -530,7 +531,7 @@ fn e17_sql_end_to_end() {
         "cycle-level speedup".into(),
         format!(
             "{:.0}x",
-            scan.cost.cpu_cycles as f64 / server.metrics.device_macro_cycles.max(1) as f64
+            scan.cost.cpu_cycles as f64 / m.device_macro_cycles.max(1) as f64
         ),
     ]);
     r.print("E17 end-to-end SQL engine on comparable memory (§6.2)");
@@ -721,7 +722,7 @@ fn e20_pool_batched_serving() {
     let t0 = std::time::Instant::now();
     let serial_responses: Vec<_> = batch.iter().map(|a| serial.handle_addressed(a)).collect();
     let serial_wall = t0.elapsed();
-    let one_at_a_time = serial.metrics.makespan_serial_cycles;
+    let one_at_a_time = serial.metrics().makespan_serial_cycles;
 
     // Mode B: the same queue as one batch.
     let mut batched = build_server();
@@ -736,7 +737,7 @@ fn e20_pool_batched_serving() {
             other => panic!("batched/serial divergence: {other:?}"),
         }
     }
-    let m = &batched.metrics;
+    let m = batched.metrics();
     assert!(
         m.makespan_overlapped_cycles < one_at_a_time,
         "batched-overlapped {} must beat one-at-a-time {}",

@@ -104,21 +104,22 @@ fn main() -> cpm::Result<()> {
         "\n{} requests, responses identical in both modes (0 divergences)",
         batch.len()
     );
+    let sm = serial.metrics();
+    let bm = batched.metrics();
     println!(
         "one-at-a-time device makespan : {} cycles",
-        serial.metrics.makespan_serial_cycles
+        sm.makespan_serial_cycles
     );
     println!(
         "batched, no overlap           : {} cycles ({} shared passes)",
-        batched.metrics.makespan_serial_cycles, batched.metrics.shared_passes_saved
+        bm.makespan_serial_cycles, bm.shared_passes_saved
     );
     println!(
         "batched + load/exec overlap   : {} cycles ({:.2}x vs one-at-a-time)",
-        batched.metrics.makespan_overlapped_cycles,
-        serial.metrics.makespan_serial_cycles as f64
-            / batched.metrics.makespan_overlapped_cycles.max(1) as f64
+        bm.makespan_overlapped_cycles,
+        sm.makespan_serial_cycles as f64 / bm.makespan_overlapped_cycles.max(1) as f64
     );
-    for (tenant, t) in &batched.metrics.per_tenant {
+    for (tenant, t) in &bm.per_tenant {
         println!(
             "  tenant {tenant}: {} req, {} err, {} concurrent cycles, {} exclusive ops",
             t.requests, t.errors, t.macro_cycles, t.exclusive_ops

@@ -97,12 +97,13 @@ fn main() -> cpm::Result<()> {
         "  throughput          : {:.0} queries/s",
         trace.len() as f64 / dt.as_secs_f64()
     );
+    let m = server.metrics();
     println!(
         "  latency p50 / p99   : {} / {} µs",
-        server.metrics.latency.percentile_us(50.0),
-        server.metrics.latency.percentile_us(99.0)
+        m.latency.percentile_us(50.0),
+        m.latency.percentile_us(99.0)
     );
-    let cpm_per_q = server.metrics.device_macro_cycles as f64 / trace.len() as f64;
+    let cpm_per_q = m.device_macro_cycles as f64 / trace.len() as f64;
     let scan_per_q = scan.cost.cpu_cycles as f64 / trace.len() as f64;
     let idx_per_q =
         (index_m.cost.cpu_cycles - build_cost) as f64 / trace.len() as f64;
@@ -113,7 +114,7 @@ fn main() -> cpm::Result<()> {
     );
     println!(
         "  bus words (CPM)     : {} exclusive readouts only — no processing streams (§2)",
-        server.metrics.device_exclusive_ops
+        m.device_exclusive_ops
     );
     Ok(())
 }

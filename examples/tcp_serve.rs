@@ -103,7 +103,8 @@ fn main() -> cpm::Result<()> {
     }
 
     let server = net.shutdown();
-    let w = &server.metrics.wire;
+    let m = server.metrics();
+    let w = &m.wire;
     println!(
         "wire: {} connections, {} requests in {} windows ({} coalesced, max occupancy {}, mean {:.2})",
         w.connections,
@@ -115,11 +116,11 @@ fn main() -> cpm::Result<()> {
     );
     println!(
         "serving: {} requests, {} shared passes saved",
-        server.metrics.requests, server.metrics.shared_passes_saved
+        m.requests, m.shared_passes_saved
     );
     assert_eq!(w.connections as usize, CLIENTS);
     assert_eq!(w.window_requests as usize, TOTAL_OPS);
-    assert_eq!(server.metrics.requests as usize, TOTAL_OPS);
+    assert_eq!(m.requests as usize, TOTAL_OPS);
     println!("tcp_serve: OK");
     Ok(())
 }

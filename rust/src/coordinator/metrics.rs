@@ -1,215 +1,17 @@
-//! Service metrics: request counters, per-tenant accounting, batching
-//! gains, and latency percentiles.
+//! Service metrics — the types now live in the observability layer
+//! ([`crate::obs`]) so the recorder, the Prometheus exporter, and the
+//! wire codec share one definition. This module re-exports them under
+//! the original `coordinator::metrics` paths.
+//!
+//! The old in-place mutable `Metrics` (unbounded latency sample vector,
+//! `&mut self` percentile reads) is gone: [`CpmServer`] records into a
+//! shared [`Recorder`](crate::obs::Recorder) and
+//! [`CpmServer::metrics`] returns an owned snapshot whose reads all
+//! take `&self`.
+//!
+//! [`CpmServer`]: super::CpmServer
+//! [`CpmServer::metrics`]: super::CpmServer::metrics
 
-use std::collections::BTreeMap;
-use std::time::Duration;
-
-/// Latency aggregation (wall-clock per request).
-///
-/// Percentile queries are served from a cached sorted snapshot of the
-/// samples: recording stays an O(1) push, and the snapshot is re-sorted
-/// at most once per batch of new recordings instead of on every
-/// percentile read. The cache is a plain field (no interior
-/// mutability), so the type stays `Sync`; percentile reads therefore
-/// take `&mut self`.
-#[derive(Debug, Default, Clone)]
-pub struct LatencyStats {
-    samples_us: Vec<u64>,
-    /// Sorted snapshot of `samples_us`; valid iff it has the same length
-    /// (recording only ever appends).
-    sorted: Vec<u64>,
-}
-
-impl LatencyStats {
-    /// Record one sample.
-    pub fn record(&mut self, d: Duration) {
-        self.samples_us.push(d.as_micros() as u64);
-    }
-
-    /// Sample count.
-    pub fn count(&self) -> usize {
-        self.samples_us.len()
-    }
-
-    /// Percentile in microseconds (p in 0..=100, nearest-rank over the
-    /// sorted samples). Re-sorts the cached snapshot only if new samples
-    /// arrived since the last call.
-    pub fn percentile_us(&mut self, p: f64) -> u64 {
-        if self.samples_us.is_empty() {
-            return 0;
-        }
-        if self.sorted.len() != self.samples_us.len() {
-            self.sorted.clear();
-            self.sorted.extend_from_slice(&self.samples_us);
-            self.sorted.sort_unstable();
-        }
-        let idx = ((p / 100.0) * (self.sorted.len() - 1) as f64).round() as usize;
-        self.sorted[idx.min(self.sorted.len() - 1)]
-    }
-
-    /// Mean in microseconds.
-    pub fn mean_us(&self) -> f64 {
-        if self.samples_us.is_empty() {
-            return 0.0;
-        }
-        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64
-    }
-}
-
-/// Wire-level counters from the TCP front-end (`net/`): connection and
-/// admission-window accounting on top of the in-process serving metrics.
-#[derive(Debug, Default, Clone)]
-pub struct WireMetrics {
-    /// TCP connections accepted.
-    pub connections: u64,
-    /// Admission windows dispatched to the batch executor.
-    pub windows: u64,
-    /// Windows that coalesced more than one request into a single
-    /// `handle_batch` call.
-    pub coalesced_windows: u64,
-    /// Largest window occupancy observed (requests in one window).
-    pub max_window: u64,
-    /// Requests admitted through the window (across all windows).
-    pub window_requests: u64,
-}
-
-impl WireMetrics {
-    /// Mean window occupancy (requests per dispatched window).
-    pub fn mean_occupancy(&self) -> f64 {
-        if self.windows == 0 {
-            return 0.0;
-        }
-        self.window_requests as f64 / self.windows as f64
-    }
-}
-
-/// Per-tenant service counters (quota attribution and billing view).
-#[derive(Debug, Default, Clone)]
-pub struct TenantMetrics {
-    /// Requests attributed to this tenant.
-    pub requests: u64,
-    /// Failed requests.
-    pub errors: u64,
-    /// Concurrent macro cycles spent on this tenant's devices.
-    pub macro_cycles: u64,
-    /// Exclusive (addressed) ops spent on this tenant's devices.
-    pub exclusive_ops: u64,
-}
-
-/// Server metrics.
-#[derive(Debug, Default, Clone)]
-pub struct Metrics {
-    /// Requests served.
-    pub requests: u64,
-    /// Requests that failed.
-    pub errors: u64,
-    /// Concurrent macro cycles spent on devices.
-    pub device_macro_cycles: u64,
-    /// Exclusive ops spent on devices.
-    pub device_exclusive_ops: u64,
-    /// Batches admitted through the batch executor.
-    pub batches: u64,
-    /// Requests that arrived inside an explicit batch.
-    pub batched_requests: u64,
-    /// Device passes avoided by sharing compare/search passes in batches.
-    pub shared_passes_saved: u64,
-    /// Groups executed across all batches (a batch of n compatible
-    /// requests can collapse to one group).
-    pub groups_executed: u64,
-    /// Makespan had each grouped (load, exec) phase run back-to-back.
-    pub makespan_serial_cycles: u64,
-    /// Makespan with exclusive-bus loads overlapped under concurrent
-    /// execution (§3.1's two-phase pipeline).
-    pub makespan_overlapped_cycles: u64,
-    /// Per-tenant counters keyed by tenant name.
-    pub per_tenant: BTreeMap<String, TenantMetrics>,
-    /// Request latency.
-    pub latency: LatencyStats,
-    /// Wire-level counters (populated by the TCP front-end in `net/`).
-    pub wire: WireMetrics,
-}
-
-impl Metrics {
-    /// Mutable per-tenant counters (created on first use).
-    pub fn tenant(&mut self, name: &str) -> &mut TenantMetrics {
-        self.per_tenant.entry(name.to_string()).or_default()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn percentiles_ordered() {
-        let mut l = LatencyStats::default();
-        for us in [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 100] {
-            l.record(Duration::from_micros(us));
-        }
-        assert_eq!(l.count(), 10);
-        assert!(l.percentile_us(50.0) <= l.percentile_us(99.0));
-        assert_eq!(l.percentile_us(0.0), 10);
-        assert_eq!(l.percentile_us(100.0), 100);
-        assert!((l.mean_us() - 55.0).abs() < 1e-9);
-    }
-
-    #[test]
-    fn empty_stats_are_zero() {
-        let mut l = LatencyStats::default();
-        assert_eq!(l.percentile_us(99.0), 0);
-        assert_eq!(l.mean_us(), 0.0);
-    }
-
-    #[test]
-    fn percentile_semantics_are_nearest_rank() {
-        // Pin the exact interpolation: idx = round(p/100 * (len-1)).
-        let mut l = LatencyStats::default();
-        for us in [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 100] {
-            l.record(Duration::from_micros(us));
-        }
-        assert_eq!(l.percentile_us(25.0), 30); // round(2.25) = 2
-        assert_eq!(l.percentile_us(50.0), 60); // round(4.5)  = 5
-        assert_eq!(l.percentile_us(75.0), 80); // round(6.75) = 7
-        assert_eq!(l.percentile_us(90.0), 90); // round(8.1)  = 8
-        assert_eq!(l.percentile_us(99.0), 100); // round(8.91) = 9
-    }
-
-    #[test]
-    fn cached_sort_refreshes_after_new_samples() {
-        // Out-of-order recording must still read off the sorted order,
-        // and recording after a percentile call must invalidate the cache.
-        let mut l = LatencyStats::default();
-        for us in [50u64, 10, 40] {
-            l.record(Duration::from_micros(us));
-        }
-        assert_eq!(l.percentile_us(0.0), 10);
-        assert_eq!(l.percentile_us(50.0), 40);
-        assert_eq!(l.percentile_us(100.0), 50);
-        l.record(Duration::from_micros(5));
-        assert_eq!(l.percentile_us(0.0), 5);
-        assert_eq!(l.percentile_us(100.0), 50);
-    }
-
-    #[test]
-    fn wire_occupancy_is_requests_per_window() {
-        let mut w = WireMetrics::default();
-        assert_eq!(w.mean_occupancy(), 0.0);
-        w.windows = 4;
-        w.window_requests = 10;
-        w.coalesced_windows = 2;
-        w.max_window = 5;
-        assert!((w.mean_occupancy() - 2.5).abs() < 1e-9);
-    }
-
-    #[test]
-    fn tenant_counters_accumulate() {
-        let mut m = Metrics::default();
-        m.tenant("acme").requests += 3;
-        m.tenant("acme").errors += 1;
-        m.tenant("umbrella").requests += 2;
-        assert_eq!(m.per_tenant["acme"].requests, 3);
-        assert_eq!(m.per_tenant["acme"].errors, 1);
-        assert_eq!(m.per_tenant["umbrella"].requests, 2);
-        assert_eq!(m.per_tenant.len(), 2);
-    }
-}
+pub use crate::obs::{
+    GaugeStats, LatencyStats, Metrics, Percentiles, SpanStats, TenantMetrics, WireMetrics,
+};

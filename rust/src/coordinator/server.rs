@@ -11,13 +11,13 @@
 //! overlap; E17/E20 end-to-end drivers). All four CPM family members are
 //! reachable through [`CpmServer::handle`].
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::error::Result;
+use crate::obs::{Metrics, Recorder};
 use crate::pool::{AddressedRef, BatchExecutor, DevicePool, PoolConfig};
 use crate::sql::{QueryResult, Schema, Table};
-
-use super::metrics::Metrics;
 
 /// Tenant used when a request carries no explicit tenant.
 pub const DEFAULT_TENANT: &str = "default";
@@ -88,6 +88,9 @@ pub enum Response {
     Sorted(Vec<i32>),
     /// Histogram counts.
     Histogram(Vec<usize>),
+    /// Live metrics snapshot (reply to a wire `Stats` scrape; boxed —
+    /// the snapshot is much larger than the other variants).
+    Stats(Box<Metrics>),
 }
 
 /// A request addressed to a tenant's named device — the multi-tenant
@@ -160,13 +163,17 @@ impl From<Request> for Addressed {
     }
 }
 
-/// The server: a device pool, a batch executor, and service metrics.
+/// The server: a device pool, a batch executor, and a shared metrics
+/// recorder. Every serving path records into the recorder (`&self`
+/// atomics), and [`CpmServer::metrics`] reads an owned snapshot — other
+/// threads holding the [`Recorder`] through [`CpmServer::recorder`]
+/// (the TCP front-end, scrape answerers) observe the same ledger
+/// without touching the server.
 #[derive(Debug)]
 pub struct CpmServer {
     pool: DevicePool,
     executor: BatchExecutor,
-    /// Service metrics.
-    pub metrics: Metrics,
+    obs: Arc<Recorder>,
 }
 
 impl CpmServer {
@@ -204,8 +211,28 @@ impl CpmServer {
         CpmServer {
             pool,
             executor: BatchExecutor::with_exec(engine_capacity, exec),
-            metrics: Metrics::default(),
+            obs: Arc::new(Recorder::new()),
         }
+    }
+
+    /// Snapshot of every service metric (counters, per-tenant ledger,
+    /// latency histogram, wire counters, spans, gauges). Owned plain
+    /// data: all reads on it take `&self`.
+    pub fn metrics(&self) -> Metrics {
+        self.obs.snapshot()
+    }
+
+    /// The shared metrics recorder. The TCP front-end clones this to
+    /// record wire counters and spans, and to answer `Stats` scrapes
+    /// from reader threads without involving the dispatcher.
+    pub fn recorder(&self) -> Arc<Recorder> {
+        Arc::clone(&self.obs)
+    }
+
+    /// The plane-execution policy in force (carries the worker-pool
+    /// handle gauges are sampled from).
+    pub fn exec(&self) -> &crate::device::computable::ExecConfig {
+        self.executor.exec()
     }
 
     /// Change the plane-execution policy after construction (the CLI
@@ -286,8 +313,7 @@ impl CpmServer {
     /// phases are overlap-scheduled. Responses align with `batch` order
     /// and are identical to serving the queue one request at a time.
     pub fn handle_batch(&mut self, batch: &[Addressed]) -> Vec<Result<Response>> {
-        self.metrics.batches += 1;
-        self.metrics.batched_requests += batch.len() as u64;
+        self.obs.batch_admitted(batch.len() as u64);
         let refs: Vec<AddressedRef<'_>> = batch.iter().map(AddressedRef::from).collect();
         self.run_refs(&refs)
     }
@@ -296,34 +322,37 @@ impl CpmServer {
         let start = Instant::now();
         let (responses, report) = self.executor.execute(&mut self.pool, batch);
         let elapsed = start.elapsed();
-        self.metrics.requests += batch.len() as u64;
+        self.obs.requests_served(batch.len() as u64);
         for (a, r) in batch.iter().zip(&responses) {
-            if r.is_err() {
-                self.metrics.errors += 1;
+            let failed = r.is_err();
+            if failed {
+                self.obs.request_error();
             }
-            let t = self.metrics.tenant(a.tenant);
-            t.requests += 1;
-            if r.is_err() {
-                t.errors += 1;
-            }
+            self.obs.tenant(a.tenant, |t| {
+                t.requests += 1;
+                if failed {
+                    t.errors += 1;
+                }
+            });
         }
         for (tenant, cost) in &report.group_costs {
-            self.metrics.device_macro_cycles += cost.macro_cycles;
-            self.metrics.device_exclusive_ops += cost.exclusive_ops;
-            let t = self.metrics.tenant(tenant);
-            t.macro_cycles += cost.macro_cycles;
-            t.exclusive_ops += cost.exclusive_ops;
+            self.obs.device_cost(cost.macro_cycles, cost.exclusive_ops);
+            self.obs.tenant(tenant, |t| {
+                t.macro_cycles += cost.macro_cycles;
+                t.exclusive_ops += cost.exclusive_ops;
+            });
         }
-        self.metrics.shared_passes_saved += report.shared_passes;
-        self.metrics.groups_executed += report.groups;
-        self.metrics.makespan_serial_cycles += report.makespan_serial;
-        self.metrics.makespan_overlapped_cycles += report.makespan_overlapped;
+        self.obs.batch_totals(
+            report.shared_passes,
+            report.groups,
+            report.makespan_serial,
+            report.makespan_overlapped,
+            report.plan_ns,
+        );
         // Per-request latency: the batch's wall time amortized over its
         // requests (they all complete when the batch completes).
         let per_request = elapsed / batch.len().max(1) as u32;
-        for _ in 0..batch.len() {
-            self.metrics.latency.record(per_request);
-        }
+        self.obs.record_latency_n(per_request, batch.len() as u64);
         responses
     }
 }
@@ -358,8 +387,9 @@ mod tests {
             .table()
             .query_reference(&Query::parse("SELECT COUNT WHERE price < 5000").unwrap());
         assert_eq!(r, Response::Sql(want));
-        assert_eq!(s.metrics.requests, 1);
-        assert!(s.metrics.device_macro_cycles > 0);
+        let m = s.metrics();
+        assert_eq!(m.requests, 1);
+        assert!(m.device_macro_cycles > 0);
     }
 
     #[test]
@@ -403,8 +433,9 @@ mod tests {
         } else {
             panic!("expected histogram");
         }
-        assert_eq!(s.metrics.requests, 5);
-        assert_eq!(s.metrics.errors, 0);
+        let m = s.metrics();
+        assert_eq!(m.requests, 5);
+        assert_eq!(m.errors, 0);
     }
 
     #[test]
@@ -412,7 +443,7 @@ mod tests {
         let mut s = server();
         assert!(s.serve(&Request::Max(Vec::new())).is_err());
         assert!(s.serve(&Request::Sql("garbage".into())).is_err());
-        assert_eq!(s.metrics.errors, 2);
+        assert_eq!(s.metrics().errors, 2);
         let schema = Schema::new(&[("x", 1)]).unwrap();
         let mut tiny = CpmServer::new(schema, 4, b"", 8);
         assert!(tiny.serve(&Request::Sum(vec![1; 100])).is_err());
@@ -481,10 +512,11 @@ mod tests {
         assert!(s
             .handle_addressed(&Addressed::new("carol", "notes", Request::Search(b"x".to_vec())))
             .is_err());
-        assert_eq!(s.metrics.per_tenant["alice"].requests, 1);
-        assert_eq!(s.metrics.per_tenant["bob"].requests, 1);
-        assert_eq!(s.metrics.per_tenant["carol"].errors, 1);
-        assert!(s.metrics.per_tenant["alice"].macro_cycles > 0);
+        let m = s.metrics();
+        assert_eq!(m.per_tenant["alice"].requests, 1);
+        assert_eq!(m.per_tenant["bob"].requests, 1);
+        assert_eq!(m.per_tenant["carol"].errors, 1);
+        assert!(m.per_tenant["alice"].macro_cycles > 0);
     }
 
     #[test]
@@ -508,13 +540,11 @@ mod tests {
                 other => panic!("batched/serial divergence: {other:?}"),
             }
         }
-        assert_eq!(batched.metrics.batches, 1);
-        assert_eq!(batched.metrics.batched_requests, 6);
-        assert!(batched.metrics.shared_passes_saved >= 1);
-        assert!(
-            batched.metrics.makespan_overlapped_cycles
-                <= batched.metrics.makespan_serial_cycles
-        );
-        assert!(batched.metrics.latency.count() == 6);
+        let m = batched.metrics();
+        assert_eq!(m.batches, 1);
+        assert_eq!(m.batched_requests, 6);
+        assert!(m.shared_passes_saved >= 1);
+        assert!(m.makespan_overlapped_cycles <= m.makespan_serial_cycles);
+        assert_eq!(m.latency.count(), 6);
     }
 }

@@ -245,6 +245,17 @@ impl WorkerPool {
         }
     }
 
+    /// Whether a parallel dispatch is in flight right now (the
+    /// worker-busy gauge). Observational only: the answer can be stale
+    /// by the time the caller reads it.
+    pub fn is_busy(&self) -> bool {
+        let state = self.inner.state.lock().expect("pool state lock");
+        match &state.core {
+            Some(core) => core.dispatch.try_lock().is_err(),
+            None => false,
+        }
+    }
+
     /// Spawn workers up to `n` and return the coordination core plus the
     /// first `n` mailboxes.
     fn ensure_workers(&self, n: usize) -> (Arc<PoolCore>, Vec<Arc<Mailbox>>) {

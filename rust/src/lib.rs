@@ -20,6 +20,7 @@ pub mod device;
 pub mod error;
 pub mod logic;
 pub mod net;
+pub mod obs;
 pub mod physics;
 pub mod pool;
 pub mod runtime;

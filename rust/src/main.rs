@@ -12,6 +12,9 @@
 //!   `--sum`, `--repeat N` for pipelined bursts, `--tenant`, `--device`)
 //! * `netbench --max-batch B`   — loopback throughput: N client threads
 //!   pipelining against the TCP front-end, reported as requests/sec
+//! * `stats --addr A`           — scrape a serving front-end's live
+//!   metrics over the wire (`--format text|prometheus`, `--check` to
+//!   validate the Prometheus exposition before printing)
 //! * `physics`                  — §8 feasibility numbers (Eq 8-1)
 //! * `runtime-check`            — execute a trace on the active backend
 //!   (the pure-Rust interpreter by default; PJRT with `--features pjrt`)
@@ -40,6 +43,7 @@ use cpm::device::computable::isa::N_REGS;
 use cpm::device::computable::{BackendKind, ExecConfig, Instr, Opcode, Reg, Src};
 use cpm::device::control::ControlUnit;
 use cpm::net::{CpmClient, NetConfig, NetServer, WindowConfig};
+use cpm::obs::{export, Metrics};
 use cpm::physics;
 use cpm::pool::{DevicePool, PoolConfig};
 use cpm::runtime::Backend;
@@ -56,11 +60,12 @@ fn main() {
         Some("serve") => serve_cmd(&cli),
         Some("client") => client_cmd(&cli),
         Some("netbench") => netbench_cmd(&cli),
+        Some("stats") => stats_cmd(&cli),
         Some("physics") => physics_cmd(&cli),
         Some("runtime-check") => runtime_check(&cli),
         _ => {
             eprintln!(
-                "usage: cpm <info|sql|search|pool|serve|client|netbench|physics|runtime-check> [--flags]\n\
+                "usage: cpm <info|sql|search|pool|serve|client|netbench|stats|physics|runtime-check> [--flags]\n\
                  benches: cargo bench (see benches/paper.rs)\n\
                  examples: cargo run --release --example <quickstart|sql_engine|image_pipeline|text_search|multi_tenant|tcp_serve>"
             );
@@ -106,11 +111,10 @@ fn sql(cli: &Cli) -> cpm::Result<()> {
         let r = server.serve(&Request::Sql(q.to_string()))?;
         println!("{q}\n  -> {r:?}");
     }
+    let m = server.metrics();
     println!(
         "served {} queries; device concurrent cycles {} (vs serial scan ~{} per query)",
-        server.metrics.requests,
-        server.metrics.device_macro_cycles,
-        n
+        m.requests, m.device_macro_cycles, n
     );
     Ok(())
 }
@@ -129,7 +133,7 @@ fn search(cli: &Cli) -> cpm::Result<()> {
         String::from_utf8_lossy(&pattern),
         n,
         r,
-        server.metrics.device_macro_cycles
+        server.metrics().device_macro_cycles
     );
     Ok(())
 }
@@ -198,7 +202,7 @@ fn pool_cmd(cli: &Cli) -> cpm::Result<()> {
             if r.pinned { " [pinned]" } else { "" }
         );
     }
-    let m = &server.metrics;
+    let m = server.metrics();
     println!(
         "served {} requests ({} errors) in {} batch(es), {} device groups",
         m.requests, errors, m.batches, m.groups_executed
@@ -296,8 +300,8 @@ fn net_config(cli: &Cli, addr: &str) -> NetConfig {
     }
 }
 
-fn print_wire_metrics(server: &CpmServer) {
-    let w = &server.metrics.wire;
+fn print_wire_metrics(m: &Metrics) {
+    let w = &m.wire;
     println!(
         "wire: {} connections, {} requests in {} windows ({} coalesced, max occupancy {}, mean {:.2})",
         w.connections,
@@ -309,12 +313,74 @@ fn print_wire_metrics(server: &CpmServer) {
     );
     println!(
         "serving: {} requests, {} errors, {} shared passes saved, makespan {} -> {} device cycles",
-        server.metrics.requests,
-        server.metrics.errors,
-        server.metrics.shared_passes_saved,
-        server.metrics.makespan_serial_cycles,
-        server.metrics.makespan_overlapped_cycles
+        m.requests,
+        m.errors,
+        m.shared_passes_saved,
+        m.makespan_serial_cycles,
+        m.makespan_overlapped_cycles
     );
+}
+
+/// Human-readable summary of a full metrics snapshot: the wire/serving
+/// lines plus latency percentiles, the span-stage ledger, and the gauges
+/// sampled at the answering scrape.
+fn print_stats_text(m: &Metrics) {
+    print_wire_metrics(m);
+    let lat = m.latency.summary();
+    println!(
+        "latency: {} samples, mean {:.1} us, p50 <= {} us, p90 <= {} us, p99 <= {} us, max {} us",
+        lat.count, lat.mean, lat.p50, lat.p90, lat.p99, lat.max
+    );
+    let s = &m.spans;
+    println!(
+        "spans: {} closed; stage totals wait {} us + exec {} us + write {} us = total {} us",
+        s.recorded,
+        s.wait_ns / 1_000,
+        s.exec_ns / 1_000,
+        s.write_ns / 1_000,
+        s.total_ns / 1_000
+    );
+    let g = &m.gauges;
+    println!(
+        "gauges at scrape: queue depth {}, {} worker thread(s) ({}), {} pool dispatches",
+        g.queue_depth,
+        g.worker_threads,
+        if g.worker_busy != 0 { "busy" } else { "idle" },
+        g.worker_dispatches
+    );
+    for (tenant, t) in &m.per_tenant {
+        println!(
+            "  tenant {tenant}: {} req, {} err, {} concurrent cycles, {} exclusive ops",
+            t.requests, t.errors, t.macro_cycles, t.exclusive_ops
+        );
+    }
+    println!("scrapes served: {}", m.scrapes);
+}
+
+fn stats_cmd(cli: &Cli) -> cpm::Result<()> {
+    let addr = cli
+        .get_str("addr")
+        .map(str::to_string)
+        .or_else(|| cli.positional.first().cloned())
+        .unwrap_or_else(|| "127.0.0.1:7070".to_string());
+    let mut client = CpmClient::connect(&addr)?;
+    let m = client.stats()?;
+    match cli.get_str("format").unwrap_or("text") {
+        "text" => print_stats_text(&m),
+        "prometheus" => {
+            let text = export::prometheus(&m);
+            if cli.has("check") {
+                export::check(&text).map_err(cpm::CpmError::Coordinator)?;
+            }
+            print!("{text}");
+        }
+        other => {
+            return Err(cpm::CpmError::Coordinator(format!(
+                "unknown --format {other:?}; pass text or prometheus"
+            )));
+        }
+    }
+    Ok(())
 }
 
 fn serve_cmd(cli: &Cli) -> cpm::Result<()> {
@@ -345,7 +411,7 @@ fn serve_cmd(cli: &Cli) -> cpm::Result<()> {
     }
     std::thread::sleep(Duration::from_secs(secs));
     let server = net.shutdown();
-    print_wire_metrics(&server);
+    print_wire_metrics(&server.metrics());
     Ok(())
 }
 
@@ -460,13 +526,14 @@ fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
     }
     let elapsed = started.elapsed();
     let server = net.shutdown();
+    let m = server.metrics();
     let total = per_client * clients;
     let rps = total as f64 / elapsed.as_secs_f64().max(1e-9);
     println!(
         "netbench: {total} requests ({ok} ok) from {clients} clients in {:.1} ms",
         elapsed.as_secs_f64() * 1e3
     );
-    print_wire_metrics(&server);
+    print_wire_metrics(&m);
     println!(
         "markdown row (backend | threads | max_batch | window_us | requests | req/s | mean window | coalesced):"
     );
@@ -478,8 +545,8 @@ fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
         window_us,
         total,
         rps,
-        server.metrics.wire.mean_occupancy(),
-        server.metrics.wire.coalesced_windows
+        m.wire.mean_occupancy(),
+        m.wire.coalesced_windows
     );
     // Machine-readable row for the ROADMAP item-5 perf trajectory
     // (BENCH_net.json): one JSON object per run, appended by the caller.
@@ -491,7 +558,8 @@ fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
             "{{\"bench\":\"netbench\",\"backend\":\"{}\",\"threads\":{},\"clients\":{},\
              \"max_batch\":{},\"window_us\":{},\"requests\":{},\"ok\":{},\
              \"elapsed_ms\":{:.3},\"req_per_s\":{:.1},\"mean_window\":{:.3},\
-             \"coalesced_windows\":{},\"host_threads\":{}}}\n",
+             \"coalesced_windows\":{},\"p50_us\":{},\"p99_us\":{},\"max_window\":{},\
+             \"shared_passes_saved\":{},\"host_threads\":{}}}\n",
             exec.backend,
             exec.threads,
             clients,
@@ -501,8 +569,12 @@ fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
             ok,
             elapsed.as_secs_f64() * 1e3,
             rps,
-            server.metrics.wire.mean_occupancy(),
-            server.metrics.wire.coalesced_windows,
+            m.wire.mean_occupancy(),
+            m.wire.coalesced_windows,
+            m.latency.percentile_us(50.0),
+            m.latency.percentile_us(99.0),
+            m.wire.max_window,
+            m.shared_passes_saved,
             host_threads
         );
         std::fs::write(path, row)

@@ -14,6 +14,7 @@ use std::net::{TcpStream, ToSocketAddrs};
 
 use crate::coordinator::{Request, Response};
 use crate::error::{CpmError, Result};
+use crate::obs::Metrics;
 
 use super::wire;
 
@@ -92,6 +93,31 @@ impl CpmClient {
         match wire::read_frame(&mut self.stream)? {
             Some(payload) => wire::decode_reply(&payload),
             None => Err(CpmError::Wire("server closed the connection".into())),
+        }
+    }
+
+    /// Scrape the server's live metrics snapshot. Answered by the
+    /// connection's reader thread straight from the shared recorder —
+    /// never queued behind the admission window — so a dedicated
+    /// monitoring connection observes a saturated server without adding
+    /// to its batch load. On a connection with requests still in flight,
+    /// the reply ordering is matched by id like any other reply, but
+    /// prefer an idle or dedicated connection for monitoring loops.
+    pub fn stats(&mut self) -> Result<Metrics> {
+        let id = self.next_id;
+        self.next_id += 1;
+        wire::write_frame(&mut self.stream, &wire::encode_stats_request(id))?;
+        let (rid, result) = self.recv()?;
+        if rid != id {
+            return Err(CpmError::Wire(format!(
+                "reply id {rid} does not match stats request id {id}"
+            )));
+        }
+        match result? {
+            Response::Stats(m) => Ok(*m),
+            other => Err(CpmError::Wire(format!(
+                "expected a stats reply, got {other:?}"
+            ))),
         }
     }
 

@@ -14,11 +14,14 @@
 //! * [`server`] — accept loop, per-connection reader threads with tenant
 //!   pinning, the single dispatcher that owns the `CpmServer`, and
 //!   graceful draining shutdown.
-//! * [`client`] — a blocking client with one-shot calls and pipelined
-//!   bursts.
+//! * [`client`] — a blocking client with one-shot calls, pipelined
+//!   bursts, and a live [`stats`](CpmClient::stats) scrape.
 //!
-//! Wire-level counters (connections, windows, occupancy) land in
-//! [`Metrics::wire`](crate::coordinator::Metrics).
+//! Every wire-path event (connections, windows, occupancy, per-request
+//! spans) reports into the server's shared
+//! [`Recorder`](crate::obs::Recorder); a `Stats` frame scrapes a full
+//! [`Metrics`](crate::obs::Metrics) snapshot from the reader thread
+//! without touching the dispatcher.
 //!
 //! [`CpmServer`]: crate::coordinator::CpmServer
 //! [`CpmServer::handle_batch`]: crate::coordinator::CpmServer::handle_batch

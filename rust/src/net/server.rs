@@ -16,11 +16,20 @@
 //! [`DEFAULT_TENANT`](crate::coordinator::DEFAULT_TENANT)). Requests that
 //! carry no explicit tenant are attributed to it.
 //!
+//! Every stage reports into the server's shared
+//! [`Recorder`](crate::obs::Recorder): the accept loop counts
+//! connections, the dispatcher counts windows and closes one span per
+//! request (wait → exec → write, stamped from the arrival `Instant` the
+//! reader took at frame-decode time), and `Stats` scrapes are answered
+//! *by the reader thread itself* from a lock-cheap snapshot — a scrape
+//! never queues behind the admission window and never blocks the
+//! dispatcher.
+//!
 //! Shutdown is graceful and drains: [`NetServer::shutdown`] closes the
 //! admission queue (already-admitted requests are still answered), wakes
-//! and joins every thread, folds the wire counters into
-//! [`Metrics::wire`](crate::coordinator::Metrics), and hands the
-//! `CpmServer` back to the caller.
+//! and joins every thread, and hands the `CpmServer` back to the caller;
+//! everything the wire path counted is already in the recorder, so
+//! [`CpmServer::metrics`] reflects the whole run with no fold-in step.
 
 use std::io::{self, Read, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -30,7 +39,9 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{Addressed, CpmServer, Response, DEFAULT_TENANT};
+use crate::device::computable::WorkerPool;
 use crate::error::{CpmError, Result};
+use crate::obs::{Recorder, SpanEvent};
 
 use super::window::{AdmissionQueue, WindowConfig};
 use super::wire::{self, ClientMsg};
@@ -71,15 +82,36 @@ impl Default for NetConfig {
     }
 }
 
+/// The write half of one connection, shared between the dispatcher
+/// (request replies) and the connection's own reader thread (`Stats`
+/// replies). The mutex keeps the two writers' frames from interleaving
+/// on the wire; it is uncontended unless a scrape lands mid-reply.
+#[derive(Debug)]
+struct ConnShared {
+    stream: TcpStream,
+    write: Mutex<()>,
+}
+
+impl ConnShared {
+    /// Write one reply frame under the interleaving lock and the hard
+    /// wall-clock deadline.
+    fn write(&self, frame: &[u8], timeout: Duration) -> io::Result<()> {
+        let _guard = self.write.lock().unwrap_or_else(|p| p.into_inner());
+        write_deadline(&self.stream, frame, timeout)
+    }
+}
+
 /// One admitted request waiting in the window: the reply route (id +
-/// shared write half; only the single dispatcher thread ever writes, so
-/// no lock is needed — `Write` is implemented for `&TcpStream`) and the
-/// addressed operation.
+/// shared write half), the addressed operation, and the arrival stamp
+/// taken by the reader at frame-decode time. The same stamp drives the
+/// admission-window deadline and the span ledger's wait stage, so the
+/// stages decompose against one clock read.
 #[derive(Debug)]
 struct Pending {
     id: u64,
-    reply: Arc<TcpStream>,
+    reply: Arc<ConnShared>,
     req: Addressed,
+    arrived: Instant,
 }
 
 /// A running TCP front-end. Dropping the handle without calling
@@ -91,7 +123,7 @@ pub struct NetServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     queue: Arc<AdmissionQueue<Pending>>,
-    connections: Arc<AtomicU64>,
+    recorder: Arc<Recorder>,
     readers: Arc<Mutex<Vec<JoinHandle<()>>>>,
     accept: Option<JoinHandle<()>>,
     dispatch: Option<JoinHandle<CpmServer>>,
@@ -99,15 +131,20 @@ pub struct NetServer {
 
 impl NetServer {
     /// Bind `cfg.addr` and start serving `server` over TCP. The server
-    /// moves into the dispatcher thread; get it back (with wire metrics
-    /// folded in) from [`NetServer::shutdown`].
+    /// moves into the dispatcher thread; get it back from
+    /// [`NetServer::shutdown`]. Its [`Recorder`] stays shared, so live
+    /// metrics are scrapable the whole time it serves.
     pub fn spawn(server: CpmServer, cfg: NetConfig) -> Result<NetServer> {
         let listener = TcpListener::bind(&cfg.addr)?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let queue = Arc::new(AdmissionQueue::new(cfg.window));
-        let connections = Arc::new(AtomicU64::new(0));
         let readers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        // Cloned out before the server moves into the dispatcher: readers
+        // answer scrapes from the recorder and sample worker-pool gauges
+        // without ever touching the CpmServer itself.
+        let recorder = server.recorder();
+        let pool = server.exec().worker_pool().clone();
 
         let dispatch = {
             let queue = Arc::clone(&queue);
@@ -119,17 +156,17 @@ impl NetServer {
         let accept = {
             let stop = Arc::clone(&stop);
             let queue = Arc::clone(&queue);
-            let connections = Arc::clone(&connections);
             let readers = Arc::clone(&readers);
-            let limits = AcceptLimits {
+            let ctx = ReaderCtx {
+                recorder: Arc::clone(&recorder),
+                pool,
                 read_poll: cfg.read_poll,
+                write_timeout: cfg.write_timeout,
                 max_connections: cfg.max_connections,
             };
             let spawned = std::thread::Builder::new()
                 .name("cpm-net-accept".to_string())
-                .spawn(move || {
-                    accept_loop(&listener, &stop, &queue, &connections, &readers, limits)
-                });
+                .spawn(move || accept_loop(&listener, &stop, &queue, &readers, ctx));
             match spawned {
                 Ok(h) => h,
                 Err(e) => {
@@ -145,7 +182,7 @@ impl NetServer {
             addr,
             stop,
             queue,
-            connections,
+            recorder,
             readers,
             accept: Some(accept),
             dispatch: Some(dispatch),
@@ -157,9 +194,15 @@ impl NetServer {
         self.addr
     }
 
+    /// The shared recorder behind this front-end — the same registry the
+    /// wire `Stats` scrape reads, for in-process observers.
+    pub fn recorder(&self) -> Arc<Recorder> {
+        Arc::clone(&self.recorder)
+    }
+
     /// Stop accepting, drain already-admitted requests, join every
-    /// thread, and return the `CpmServer` with
-    /// [`Metrics::wire`](crate::coordinator::Metrics) filled in.
+    /// thread, and return the `CpmServer`. All wire activity is already
+    /// in its recorder; read it with [`CpmServer::metrics`].
     pub fn shutdown(mut self) -> CpmServer {
         self.stop.store(true, Ordering::Relaxed);
         self.queue.close();
@@ -187,69 +230,82 @@ impl NetServer {
         for h in readers {
             let _ = h.join();
         }
-        let mut server = self
-            .dispatch
+        self.dispatch
             .take()
             .expect("shutdown runs once")
             .join()
-            .expect("dispatcher thread panicked");
-        server.metrics.wire.connections = self.connections.load(Ordering::Relaxed);
-        server
+            .expect("dispatcher thread panicked")
+    }
+}
+
+/// Encode one reply frame, downgrading an over-cap reply (e.g. millions
+/// of match positions) to a typed error: nothing was written yet, the
+/// stream is still in sync, so it is a per-request failure rather than a
+/// dead connection. `None` only if even the error cannot be framed.
+fn encode_reply_frame(id: u64, result: &Result<Response>) -> Option<Vec<u8>> {
+    match wire::frame_bytes(&wire::encode_reply(id, result)) {
+        Ok(f) => Some(f),
+        Err(_) => {
+            let err: Result<Response> = Err(CpmError::Wire(format!(
+                "reply exceeds the {} byte frame cap; narrow the request",
+                wire::MAX_FRAME
+            )));
+            wire::frame_bytes(&wire::encode_reply(id, &err)).ok()
+        }
     }
 }
 
 /// The dispatcher: drains admission windows, executes each as one batch,
-/// and routes reply frames back per connection.
+/// routes reply frames back per connection, and closes one span per
+/// request in the recorder.
 fn dispatch_loop(
     mut server: CpmServer,
     queue: &AdmissionQueue<Pending>,
     write_timeout: Duration,
 ) -> CpmServer {
+    let recorder = server.recorder();
     while let Some(pending) = queue.next_window() {
-        let n = pending.len() as u64;
-        {
-            let w = &mut server.metrics.wire;
-            w.windows += 1;
-            w.window_requests += n;
-            if n > 1 {
-                w.coalesced_windows += 1;
-            }
-            if n > w.max_window {
-                w.max_window = n;
-            }
-        }
-        let mut routes = Vec::with_capacity(pending.len());
-        let mut batch = Vec::with_capacity(pending.len());
+        let window_len = pending.len();
+        recorder.window_dispatched(window_len as u64);
+        let dispatched = Instant::now();
+        let cycles_before = recorder.device_cycles_total();
+        let mut routes = Vec::with_capacity(window_len);
+        let mut batch = Vec::with_capacity(window_len);
         for p in pending {
-            routes.push((p.id, p.reply));
+            routes.push((p.id, p.reply, p.arrived));
             batch.push(p.req);
         }
         let results = server.handle_batch(&batch);
-        for ((id, reply), result) in routes.into_iter().zip(results) {
-            let frame = match wire::frame_bytes(&wire::encode_reply(id, &result)) {
-                Ok(f) => f,
-                // An over-cap reply (e.g. millions of match positions) is
-                // a per-request failure, not a dead connection: nothing
-                // was written, the stream is still in sync, so answer
-                // with a typed error instead.
-                Err(_) => {
-                    let err: Result<Response> = Err(CpmError::Wire(format!(
-                        "reply exceeds the {} byte frame cap; narrow the request",
-                        wire::MAX_FRAME
-                    )));
-                    match wire::frame_bytes(&wire::encode_reply(id, &err)) {
-                        Ok(f) => f,
-                        Err(_) => continue,
-                    }
+        let executed = Instant::now();
+        // The batch runs as one unit, so exec time and modeled device
+        // cycles are window-level figures stamped onto each member's span.
+        let device_cycles = recorder.device_cycles_total() - cycles_before;
+        let exec_ns = executed.duration_since(dispatched).as_nanos() as u64;
+        // Each reply's write stage is its slice of the write phase,
+        // measured from the previous reply's completion — the window's
+        // write stages sum to the whole phase with no double counting.
+        let mut write_from = executed;
+        for ((id, reply, arrived), result) in routes.into_iter().zip(results) {
+            if let Some(frame) = encode_reply_frame(id, &result) {
+                // A dead or too-slow peer is not a server error: the
+                // write carries a hard wall-clock deadline, and on
+                // failure the peer is disconnected so later replies to it
+                // fail fast instead of re-paying the timeout.
+                if reply.write(&frame, write_timeout).is_err() {
+                    let _ = reply.stream.shutdown(Shutdown::Both);
                 }
-            };
-            // A dead or too-slow peer is not a server error: the write
-            // carries a hard wall-clock deadline, and on failure the peer
-            // is disconnected so later replies to it fail fast instead of
-            // re-paying the timeout.
-            if write_deadline(&reply, &frame, write_timeout).is_err() {
-                let _ = reply.shutdown(Shutdown::Both);
             }
+            let done = Instant::now();
+            let wait_ns = dispatched.saturating_duration_since(arrived).as_nanos() as u64;
+            let write_ns = done.duration_since(write_from).as_nanos() as u64;
+            write_from = done;
+            recorder.record_span(SpanEvent::closed(
+                wait_ns,
+                exec_ns,
+                write_ns,
+                window_len as u32,
+                device_cycles,
+            ));
         }
     }
     server
@@ -291,10 +347,15 @@ fn write_deadline(stream: &TcpStream, bytes: &[u8], timeout: Duration) -> io::Re
     writer.flush()
 }
 
-/// Accept-loop knobs carried into the accept thread.
-#[derive(Debug, Clone, Copy)]
-struct AcceptLimits {
+/// Shared context carried into the accept thread and cloned into each
+/// connection's reader: the recorder (connection counting, scrape
+/// answers), a worker-pool handle (gauge sampling), and the socket knobs.
+#[derive(Clone)]
+struct ReaderCtx {
+    recorder: Arc<Recorder>,
+    pool: WorkerPool,
     read_poll: Duration,
+    write_timeout: Duration,
     max_connections: usize,
 }
 
@@ -304,9 +365,8 @@ fn accept_loop(
     listener: &TcpListener,
     stop: &Arc<AtomicBool>,
     queue: &Arc<AdmissionQueue<Pending>>,
-    connections: &AtomicU64,
     readers: &Mutex<Vec<JoinHandle<()>>>,
-    limits: AcceptLimits,
+    ctx: ReaderCtx,
 ) {
     let active = Arc::new(AtomicU64::new(0));
     loop {
@@ -327,20 +387,20 @@ fn accept_loop(
         }
         // Connection cap: bound thread count and per-reader buffers
         // under a connection flood. Dropping the stream closes it.
-        if active.load(Ordering::Relaxed) >= limits.max_connections as u64 {
+        if active.load(Ordering::Relaxed) >= ctx.max_connections as u64 {
             continue;
         }
-        connections.fetch_add(1, Ordering::Relaxed);
+        ctx.recorder.connection_accepted();
         active.fetch_add(1, Ordering::Relaxed);
         let spawned = {
             let stop = Arc::clone(stop);
             let queue = Arc::clone(queue);
             let active = Arc::clone(&active);
-            let read_poll = limits.read_poll;
+            let ctx = ctx.clone();
             std::thread::Builder::new()
                 .name("cpm-net-conn".to_string())
                 .spawn(move || {
-                    reader_loop(stream, &stop, &queue, read_poll);
+                    reader_loop(stream, &stop, &queue, &ctx);
                     active.fetch_sub(1, Ordering::Relaxed);
                 })
         };
@@ -362,21 +422,25 @@ fn accept_loop(
 }
 
 /// One connection's reader: decode frames, resolve the pinned tenant,
-/// admit requests. Exits on EOF, protocol violation, or shutdown.
+/// admit requests, and answer `Stats` scrapes in place. Exits on EOF,
+/// protocol violation, or shutdown.
 fn reader_loop(
     stream: TcpStream,
     stop: &AtomicBool,
     queue: &AdmissionQueue<Pending>,
-    read_poll: Duration,
+    ctx: &ReaderCtx,
 ) {
     // The read timeout is how this thread polls the stop flag; write
-    // deadlines are set per reply by the dispatcher.
-    if stream.set_read_timeout(Some(read_poll)).is_err() {
+    // deadlines are set per reply frame.
+    if stream.set_read_timeout(Some(ctx.read_poll)).is_err() {
         return;
     }
     let _ = stream.set_nodelay(true);
     let writer = match stream.try_clone() {
-        Ok(w) => Arc::new(w),
+        Ok(w) => Arc::new(ConnShared {
+            stream: w,
+            write: Mutex::new(()),
+        }),
         Err(_) => return,
     };
     let mut reader = InterruptibleStream { stream, stop };
@@ -390,6 +454,10 @@ fn reader_loop(
             // EOF, shutdown, or an I/O error: close the connection.
             Ok(None) | Err(_) => break,
         };
+        // Stamped once, here, at frame-decode time: the same Instant
+        // feeds the admission-window deadline and the span ledger's wait
+        // stage, so wait + exec + write equals end-to-end exactly.
+        let arrived = Instant::now();
         match wire::decode_client_msg(&payload) {
             Ok(ClientMsg::Hello { tenant }) => pinned = tenant,
             Ok(ClientMsg::Request {
@@ -403,12 +471,38 @@ fn reader_loop(
                     device,
                     op,
                 };
-                let admitted = queue.push(Pending {
-                    id,
-                    reply: Arc::clone(&writer),
-                    req,
-                });
+                let admitted = queue.push_with_arrival(
+                    Pending {
+                        id,
+                        reply: Arc::clone(&writer),
+                        req,
+                        arrived,
+                    },
+                    arrived,
+                );
                 if !admitted {
+                    break;
+                }
+            }
+            // Answered right here on the reader thread: a scrape reads a
+            // snapshot of the shared recorder and never queues behind the
+            // admission window, so stats stay live even when the
+            // dispatcher is saturated or a window is being held open.
+            Ok(ClientMsg::Stats { id }) => {
+                ctx.recorder.sample_gauges(
+                    queue.len() as u64,
+                    ctx.pool.workers() as u64,
+                    u64::from(ctx.pool.is_busy()),
+                    ctx.pool.dispatches(),
+                );
+                ctx.recorder.scraped();
+                let snap = ctx.recorder.snapshot();
+                let reply: Result<Response> = Ok(Response::Stats(Box::new(snap)));
+                let frame = match wire::frame_bytes(&wire::encode_reply(id, &reply)) {
+                    Ok(f) => f,
+                    Err(_) => break,
+                };
+                if writer.write(&frame, ctx.write_timeout).is_err() {
                     break;
                 }
             }

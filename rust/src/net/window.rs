@@ -86,6 +86,16 @@ impl<T> AdmissionQueue<T> {
     /// (backpressure: the producer stops consuming its input). Returns
     /// `false` (dropping the item) if the queue has been closed.
     pub fn push(&self, item: T) -> bool {
+        self.push_with_arrival(item, Instant::now())
+    }
+
+    /// Admit one item carrying an explicit arrival stamp (same blocking
+    /// and close semantics as [`AdmissionQueue::push`]). The producer
+    /// stamps arrival once — at frame-decode time — and hands the same
+    /// `Instant` to both the window deadline and its own span ledger, so
+    /// window-wait and end-to-end latency decompose against one clock
+    /// read instead of two.
+    pub fn push_with_arrival(&self, item: T, arrived: Instant) -> bool {
         let max_queue = self.cfg.max_queue.max(1);
         let mut st = self.state.lock().expect("admission queue poisoned");
         while !st.closed && st.queue.len() >= max_queue {
@@ -94,7 +104,7 @@ impl<T> AdmissionQueue<T> {
         if st.closed {
             return false;
         }
-        st.queue.push_back((Instant::now(), item));
+        st.queue.push_back((arrived, item));
         self.arrived.notify_all();
         true
     }
@@ -223,6 +233,20 @@ mod tests {
         let w = q.next_window().unwrap();
         producer.join().unwrap();
         assert_eq!(w, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn stale_arrival_stamp_closes_the_window_immediately() {
+        // An item whose stamped arrival already waited out max_delay
+        // dispatches without re-waiting: the deadline is measured from
+        // the producer's stamp, not from when the consumer looked.
+        // (max_delay far beyond the test timeout: a re-wait would hang.)
+        let q = queue(600_000, 32);
+        let Some(arrived) = Instant::now().checked_sub(Duration::from_secs(1_200)) else {
+            return; // platform clock too young to back-date; skip
+        };
+        assert!(q.push_with_arrival(9, arrived));
+        assert_eq!(q.next_window().unwrap(), vec![9]);
     }
 
     #[test]

@@ -19,6 +19,10 @@ use std::io::{self, Read, Write};
 
 use crate::coordinator::{ArrayJob, Request, Response};
 use crate::error::{CpmError, Result};
+use crate::obs::{
+    GaugeStats, LatencyStats, Log2Histogram, Metrics, SpanEvent, SpanStats, TenantMetrics,
+    WireMetrics, BUCKETS,
+};
 use crate::sql::QueryResult;
 
 /// Largest accepted frame payload (64 MiB) — a decode-side guard so a
@@ -96,10 +100,18 @@ pub enum ClientMsg {
         /// The operation.
         op: Request,
     },
+    /// Scrape the server's live metrics snapshot. Answered from the
+    /// reader thread (never queued behind the admission window), with a
+    /// [`Response::Stats`] reply echoing the id.
+    Stats {
+        /// Client-assigned request id.
+        id: u64,
+    },
 }
 
 const MSG_HELLO: u8 = 0;
 const MSG_REQUEST: u8 = 1;
+const MSG_STATS: u8 = 2;
 
 /// Encode a `Hello` payload pinning `tenant`.
 pub fn encode_hello(tenant: &str) -> Vec<u8> {
@@ -125,6 +137,14 @@ pub fn encode_request(
     out
 }
 
+/// Encode a `Stats` scrape payload.
+pub fn encode_stats_request(id: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(9);
+    out.push(MSG_STATS);
+    put_u64(&mut out, id);
+    out
+}
+
 /// Decode a client → server payload.
 pub fn decode_client_msg(payload: &[u8]) -> Result<ClientMsg> {
     let mut d = Dec::new(payload);
@@ -138,6 +158,7 @@ pub fn decode_client_msg(payload: &[u8]) -> Result<ClientMsg> {
             device: d.take_opt_str()?,
             op: take_op(&mut d)?,
         },
+        MSG_STATS => ClientMsg::Stats { id: d.take_u64()? },
         t => return Err(wire_err(format!("unknown client message tag {t}"))),
     };
     d.done()?;
@@ -462,6 +483,7 @@ const RESP_MATCHES: u8 = 2;
 const RESP_SCALAR: u8 = 3;
 const RESP_SORTED: u8 = 4;
 const RESP_HISTOGRAM: u8 = 5;
+const RESP_STATS: u8 = 6;
 
 fn put_response(out: &mut Vec<u8>, resp: &Response) {
     match resp {
@@ -489,6 +511,10 @@ fn put_response(out: &mut Vec<u8>, resp: &Response) {
             out.push(RESP_HISTOGRAM);
             put_usizes(out, counts);
         }
+        Response::Stats(m) => {
+            out.push(RESP_STATS);
+            put_metrics(out, m);
+        }
     }
 }
 
@@ -500,7 +526,189 @@ fn take_response(d: &mut Dec<'_>) -> Result<Response> {
         RESP_SCALAR => Response::Scalar(d.take_i64()?),
         RESP_SORTED => Response::Sorted(d.take_i32s()?),
         RESP_HISTOGRAM => Response::Histogram(d.take_usizes()?),
+        RESP_STATS => Response::Stats(Box::new(take_metrics(d)?)),
         t => return Err(wire_err(format!("unknown response tag {t}"))),
+    })
+}
+
+// ---- metrics snapshot ----
+
+fn put_hist(out: &mut Vec<u8>, h: &Log2Histogram) {
+    for &b in h.buckets() {
+        put_u64(out, b);
+    }
+    put_u64(out, h.sum());
+    put_u64(out, h.min());
+    put_u64(out, h.max());
+}
+
+fn take_hist(d: &mut Dec<'_>) -> Result<Log2Histogram> {
+    let mut buckets = [0u64; BUCKETS];
+    for b in buckets.iter_mut() {
+        *b = d.take_u64()?;
+    }
+    let sum = d.take_u64()?;
+    let min = d.take_u64()?;
+    let max = d.take_u64()?;
+    Ok(Log2Histogram::from_parts(buckets, sum, min, max))
+}
+
+fn put_tenant_metrics(out: &mut Vec<u8>, t: &TenantMetrics) {
+    put_u64(out, t.requests);
+    put_u64(out, t.errors);
+    put_u64(out, t.macro_cycles);
+    put_u64(out, t.exclusive_ops);
+}
+
+fn take_tenant_metrics(d: &mut Dec<'_>) -> Result<TenantMetrics> {
+    Ok(TenantMetrics {
+        requests: d.take_u64()?,
+        errors: d.take_u64()?,
+        macro_cycles: d.take_u64()?,
+        exclusive_ops: d.take_u64()?,
+    })
+}
+
+fn put_span_event(out: &mut Vec<u8>, ev: &SpanEvent) {
+    put_u64(out, ev.wait_ns);
+    put_u64(out, ev.exec_ns);
+    put_u64(out, ev.write_ns);
+    put_u64(out, ev.total_ns);
+    put_u32(out, ev.window_len);
+    put_u64(out, ev.device_cycles);
+}
+
+fn take_span_event(d: &mut Dec<'_>) -> Result<SpanEvent> {
+    Ok(SpanEvent {
+        wait_ns: d.take_u64()?,
+        exec_ns: d.take_u64()?,
+        write_ns: d.take_u64()?,
+        total_ns: d.take_u64()?,
+        window_len: d.take_u32()?,
+        device_cycles: d.take_u64()?,
+    })
+}
+
+fn put_metrics(out: &mut Vec<u8>, m: &Metrics) {
+    put_u64(out, m.requests);
+    put_u64(out, m.errors);
+    put_u64(out, m.device_macro_cycles);
+    put_u64(out, m.device_exclusive_ops);
+    put_u64(out, m.batches);
+    put_u64(out, m.batched_requests);
+    put_u64(out, m.shared_passes_saved);
+    put_u64(out, m.groups_executed);
+    put_u64(out, m.makespan_serial_cycles);
+    put_u64(out, m.makespan_overlapped_cycles);
+    put_u64(out, m.group_plan_ns);
+    put_u64(out, m.scrapes);
+    put_u32(out, m.per_tenant.len() as u32);
+    for (name, t) in &m.per_tenant {
+        put_str(out, name);
+        put_tenant_metrics(out, t);
+    }
+    put_hist(out, m.latency.hist());
+    put_u64(out, m.wire.connections);
+    put_u64(out, m.wire.windows);
+    put_u64(out, m.wire.coalesced_windows);
+    put_u64(out, m.wire.max_window);
+    put_u64(out, m.wire.window_requests);
+    put_u64(out, m.spans.recorded);
+    put_u64(out, m.spans.wait_ns);
+    put_u64(out, m.spans.exec_ns);
+    put_u64(out, m.spans.write_ns);
+    put_u64(out, m.spans.total_ns);
+    for h in &m.spans.stages {
+        put_hist(out, h);
+    }
+    put_u32(out, m.spans.recent.len() as u32);
+    for ev in &m.spans.recent {
+        put_span_event(out, ev);
+    }
+    put_u64(out, m.gauges.queue_depth);
+    put_u64(out, m.gauges.worker_threads);
+    put_u64(out, m.gauges.worker_busy);
+    put_u64(out, m.gauges.worker_dispatches);
+}
+
+fn take_metrics(d: &mut Dec<'_>) -> Result<Metrics> {
+    let requests = d.take_u64()?;
+    let errors = d.take_u64()?;
+    let device_macro_cycles = d.take_u64()?;
+    let device_exclusive_ops = d.take_u64()?;
+    let batches = d.take_u64()?;
+    let batched_requests = d.take_u64()?;
+    let shared_passes_saved = d.take_u64()?;
+    let groups_executed = d.take_u64()?;
+    let makespan_serial_cycles = d.take_u64()?;
+    let makespan_overlapped_cycles = d.take_u64()?;
+    let group_plan_ns = d.take_u64()?;
+    let scrapes = d.take_u64()?;
+    let n_tenants = d.take_u32()? as usize;
+    // Minimum 36 bytes per entry (empty name + four counters): bounds
+    // the allocation against a hostile length prefix.
+    d.need(n_tenants.saturating_mul(36))?;
+    let mut per_tenant = std::collections::BTreeMap::new();
+    for _ in 0..n_tenants {
+        let name = d.take_str()?;
+        per_tenant.insert(name, take_tenant_metrics(d)?);
+    }
+    let latency = LatencyStats::from_hist(take_hist(d)?);
+    let wire = WireMetrics {
+        connections: d.take_u64()?,
+        windows: d.take_u64()?,
+        coalesced_windows: d.take_u64()?,
+        max_window: d.take_u64()?,
+        window_requests: d.take_u64()?,
+    };
+    let recorded = d.take_u64()?;
+    let wait_ns = d.take_u64()?;
+    let exec_ns = d.take_u64()?;
+    let write_ns = d.take_u64()?;
+    let total_ns = d.take_u64()?;
+    let mut stages: [Log2Histogram; 4] = Default::default();
+    for h in stages.iter_mut() {
+        *h = take_hist(d)?;
+    }
+    let n_events = d.take_u32()? as usize;
+    // 44 bytes per encoded span event.
+    d.need(n_events.saturating_mul(44))?;
+    let mut recent = Vec::with_capacity(n_events);
+    for _ in 0..n_events {
+        recent.push(take_span_event(d)?);
+    }
+    let gauges = GaugeStats {
+        queue_depth: d.take_u64()?,
+        worker_threads: d.take_u64()?,
+        worker_busy: d.take_u64()?,
+        worker_dispatches: d.take_u64()?,
+    };
+    Ok(Metrics {
+        requests,
+        errors,
+        device_macro_cycles,
+        device_exclusive_ops,
+        batches,
+        batched_requests,
+        shared_passes_saved,
+        groups_executed,
+        makespan_serial_cycles,
+        makespan_overlapped_cycles,
+        group_plan_ns,
+        scrapes,
+        per_tenant,
+        latency,
+        wire,
+        spans: SpanStats {
+            recorded,
+            wait_ns,
+            exec_ns,
+            write_ns,
+            total_ns,
+            stages,
+            recent,
+        },
+        gauges,
     })
 }
 
@@ -646,6 +854,7 @@ mod tests {
                 device,
                 op,
             } => encode_request(*id, tenant.as_deref(), device.as_deref(), op),
+            ClientMsg::Stats { id } => encode_stats_request(*id),
         };
         let back = decode_client_msg(&payload).unwrap();
         assert_eq!(&back, msg);
@@ -656,6 +865,7 @@ mod tests {
         roundtrip_msg(&ClientMsg::Hello {
             tenant: "acme".into(),
         });
+        roundtrip_msg(&ClientMsg::Stats { id: 91 });
         let ops = vec![
             Request::Sql("SELECT COUNT WHERE price < 5000".into()),
             Request::Search(b"needle".to_vec()),
@@ -722,6 +932,48 @@ mod tests {
                 (Err(a), Err(b)) => assert_eq!(a.to_string(), b.to_string()),
                 other => panic!("ok/err flip: {other:?}"),
             }
+        }
+    }
+
+    #[test]
+    fn stats_reply_roundtrips_a_populated_snapshot() {
+        use crate::obs::{Recorder, SpanEvent};
+        use std::time::Duration;
+        // Build a snapshot through the recorder so every block (tenants,
+        // latency histogram, spans, gauges) is non-trivially populated.
+        let r = Recorder::new();
+        r.batch_admitted(4);
+        r.requests_served(4);
+        r.request_error();
+        r.device_cost(321, 9);
+        r.batch_totals(2, 3, 1_000, 700, 4_200);
+        r.record_latency_n(Duration::from_micros(85), 4);
+        r.connection_accepted();
+        r.window_dispatched(4);
+        r.record_span(SpanEvent::closed(1_500, 9_000, 300, 4, 321));
+        r.tenant("acme", |t| {
+            t.requests = 4;
+            t.errors = 1;
+            t.macro_cycles = 321;
+            t.exclusive_ops = 9;
+        });
+        r.sample_gauges(2, 4, 1, 17);
+        r.scraped();
+        let snap = r.snapshot();
+        let payload = encode_reply(7, &Ok(Response::Stats(Box::new(snap.clone()))));
+        let (id, back) = decode_reply(&payload).unwrap();
+        assert_eq!(id, 7);
+        match back.unwrap() {
+            Response::Stats(m) => assert_eq!(*m, snap),
+            other => panic!("expected stats, got {other:?}"),
+        }
+        // An empty snapshot round-trips too (min/max sentinels normalize).
+        let empty = Metrics::default();
+        let payload = encode_reply(8, &Ok(Response::Stats(Box::new(empty.clone()))));
+        let (_, back) = decode_reply(&payload).unwrap();
+        match back.unwrap() {
+            Response::Stats(m) => assert_eq!(*m, empty),
+            other => panic!("expected stats, got {other:?}"),
         }
     }
 

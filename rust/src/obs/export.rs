@@ -1,0 +1,378 @@
+//! Prometheus exposition-format text exporter over a [`Metrics`]
+//! snapshot, plus the scrape checker CI runs against a live server.
+//!
+//! Every registered metric always appears in the output — `# HELP` and
+//! `# TYPE` lines are emitted even when a family has no series yet (for
+//! example the per-tenant counters before any tenant exists) — so
+//! [`check`] can insist on the complete [`METRIC_NAMES`] roster against
+//! any scrape, including one taken before traffic.
+
+use std::fmt::Write as _;
+
+use super::hist::Log2Histogram;
+use super::snapshot::Metrics;
+use super::Stage;
+
+/// Every metric name the exporter emits. [`check`] requires each of
+/// these to appear in a scrape; the CI scrape leg runs that check
+/// against a live `cpm serve`.
+pub const METRIC_NAMES: [&str; 29] = [
+    "cpm_requests_total",
+    "cpm_errors_total",
+    "cpm_batches_total",
+    "cpm_batched_requests_total",
+    "cpm_groups_executed_total",
+    "cpm_shared_passes_saved_total",
+    "cpm_device_macro_cycles_total",
+    "cpm_device_exclusive_ops_total",
+    "cpm_makespan_serial_cycles_total",
+    "cpm_makespan_overlapped_cycles_total",
+    "cpm_group_plan_ns_total",
+    "cpm_connections_total",
+    "cpm_windows_total",
+    "cpm_coalesced_windows_total",
+    "cpm_window_requests_total",
+    "cpm_stats_scrapes_total",
+    "cpm_spans_recorded_total",
+    "cpm_span_stage_ns_total",
+    "cpm_window_max_occupancy",
+    "cpm_queue_depth",
+    "cpm_worker_threads",
+    "cpm_worker_busy",
+    "cpm_worker_dispatches_total",
+    "cpm_request_latency_us",
+    "cpm_span_stage_us",
+    "cpm_tenant_requests_total",
+    "cpm_tenant_errors_total",
+    "cpm_tenant_macro_cycles_total",
+    "cpm_tenant_exclusive_ops_total",
+];
+
+fn header(out: &mut String, name: &str, kind: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+fn counter(out: &mut String, name: &str, help: &str, v: u64) {
+    header(out, name, "counter", help);
+    let _ = writeln!(out, "{name} {v}");
+}
+
+fn gauge(out: &mut String, name: &str, help: &str, v: f64) {
+    header(out, name, "gauge", help);
+    let _ = writeln!(out, "{name} {v}");
+}
+
+/// Escape a label value per the exposition format.
+fn escape(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Emit one histogram series (`_bucket`/`_sum`/`_count`) with optional
+/// extra labels such as `stage="wait"`. Buckets are cumulative up to the
+/// highest non-empty log2 bucket, then `+Inf`.
+fn hist_series(out: &mut String, name: &str, labels: &str, h: &Log2Histogram) {
+    let sep = if labels.is_empty() { "" } else { "," };
+    let hi = h
+        .buckets()
+        .iter()
+        .take(64)
+        .rposition(|&n| n > 0)
+        .unwrap_or(0);
+    let mut cum = 0u64;
+    for (i, &n) in h.buckets().iter().enumerate().take(hi + 1) {
+        cum += n;
+        let le = Log2Histogram::bucket_bound(i);
+        let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"{le}\"}} {cum}");
+    }
+    let count = h.count();
+    let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"+Inf\"}} {count}");
+    let _ = writeln!(out, "{name}_sum{{{labels}}} {}", h.sum());
+    let _ = writeln!(out, "{name}_count{{{labels}}} {count}");
+}
+
+/// Render a snapshot in Prometheus exposition format.
+pub fn prometheus(m: &Metrics) -> String {
+    let mut out = String::new();
+    counter(&mut out, "cpm_requests_total", "Requests served (ok or error).", m.requests);
+    counter(&mut out, "cpm_errors_total", "Requests that returned an error.", m.errors);
+    counter(&mut out, "cpm_batches_total", "Batches admitted through handle_batch.", m.batches);
+    counter(
+        &mut out,
+        "cpm_batched_requests_total",
+        "Requests that arrived inside batches.",
+        m.batched_requests,
+    );
+    counter(
+        &mut out,
+        "cpm_groups_executed_total",
+        "Execution groups formed by the batch planner.",
+        m.groups_executed,
+    );
+    counter(
+        &mut out,
+        "cpm_shared_passes_saved_total",
+        "Device passes saved by shared-execution grouping.",
+        m.shared_passes_saved,
+    );
+    counter(
+        &mut out,
+        "cpm_device_macro_cycles_total",
+        "Modeled device macro-op cycles consumed.",
+        m.device_macro_cycles,
+    );
+    counter(
+        &mut out,
+        "cpm_device_exclusive_ops_total",
+        "Exclusive (serializing) device ops issued.",
+        m.device_exclusive_ops,
+    );
+    counter(
+        &mut out,
+        "cpm_makespan_serial_cycles_total",
+        "Modeled serial makespan of executed groups (cycles).",
+        m.makespan_serial_cycles,
+    );
+    counter(
+        &mut out,
+        "cpm_makespan_overlapped_cycles_total",
+        "Modeled overlapped makespan of executed groups (cycles).",
+        m.makespan_overlapped_cycles,
+    );
+    counter(
+        &mut out,
+        "cpm_group_plan_ns_total",
+        "Wall nanoseconds spent forming batch groups.",
+        m.group_plan_ns,
+    );
+    counter(
+        &mut out,
+        "cpm_connections_total",
+        "Connections accepted by the listener.",
+        m.wire.connections,
+    );
+    counter(&mut out, "cpm_windows_total", "Admission windows dispatched.", m.wire.windows);
+    counter(
+        &mut out,
+        "cpm_coalesced_windows_total",
+        "Windows that coalesced more than one request.",
+        m.wire.coalesced_windows,
+    );
+    counter(
+        &mut out,
+        "cpm_window_requests_total",
+        "Requests admitted through windows.",
+        m.wire.window_requests,
+    );
+    counter(&mut out, "cpm_stats_scrapes_total", "Stats scrapes answered.", m.scrapes);
+    counter(
+        &mut out,
+        "cpm_spans_recorded_total",
+        "Request-path spans recorded.",
+        m.spans.recorded,
+    );
+    header(
+        &mut out,
+        "cpm_span_stage_ns_total",
+        "counter",
+        "Wall nanoseconds per request-path stage (wait + exec + write = total).",
+    );
+    let stage_ns = [m.spans.wait_ns, m.spans.exec_ns, m.spans.write_ns, m.spans.total_ns];
+    for s in Stage::ALL {
+        let _ = writeln!(
+            out,
+            "cpm_span_stage_ns_total{{stage=\"{}\"}} {}",
+            s.name(),
+            stage_ns[s as usize]
+        );
+    }
+    gauge(
+        &mut out,
+        "cpm_window_max_occupancy",
+        "Largest admission window dispatched.",
+        m.wire.max_window as f64,
+    );
+    gauge(
+        &mut out,
+        "cpm_queue_depth",
+        "Requests waiting in the admission queue at sample time.",
+        m.gauges.queue_depth as f64,
+    );
+    gauge(
+        &mut out,
+        "cpm_worker_threads",
+        "Worker-pool threads alive.",
+        m.gauges.worker_threads as f64,
+    );
+    gauge(
+        &mut out,
+        "cpm_worker_busy",
+        "1 if a worker-pool dispatch was in flight at sample time.",
+        m.gauges.worker_busy as f64,
+    );
+    counter(
+        &mut out,
+        "cpm_worker_dispatches_total",
+        "Worker-pool dispatches completed.",
+        m.gauges.worker_dispatches,
+    );
+    header(&mut out, "cpm_request_latency_us", "histogram", "Request latency (microseconds).");
+    hist_series(&mut out, "cpm_request_latency_us", "", m.latency.hist());
+    header(
+        &mut out,
+        "cpm_span_stage_us",
+        "histogram",
+        "Per-stage request-path wall time (microseconds).",
+    );
+    for s in Stage::ALL {
+        let labels = format!("stage=\"{}\"", s.name());
+        hist_series(&mut out, "cpm_span_stage_us", &labels, m.spans.stage(s));
+    }
+    header(&mut out, "cpm_tenant_requests_total", "counter", "Requests per tenant.");
+    for (name, t) in &m.per_tenant {
+        let _ = writeln!(
+            out,
+            "cpm_tenant_requests_total{{tenant=\"{}\"}} {}",
+            escape(name),
+            t.requests
+        );
+    }
+    header(&mut out, "cpm_tenant_errors_total", "counter", "Errors per tenant.");
+    for (name, t) in &m.per_tenant {
+        let _ = writeln!(
+            out,
+            "cpm_tenant_errors_total{{tenant=\"{}\"}} {}",
+            escape(name),
+            t.errors
+        );
+    }
+    header(
+        &mut out,
+        "cpm_tenant_macro_cycles_total",
+        "counter",
+        "Modeled device macro-op cycles per tenant.",
+    );
+    for (name, t) in &m.per_tenant {
+        let _ = writeln!(
+            out,
+            "cpm_tenant_macro_cycles_total{{tenant=\"{}\"}} {}",
+            escape(name),
+            t.macro_cycles
+        );
+    }
+    header(
+        &mut out,
+        "cpm_tenant_exclusive_ops_total",
+        "counter",
+        "Exclusive device ops per tenant.",
+    );
+    for (name, t) in &m.per_tenant {
+        let _ = writeln!(
+            out,
+            "cpm_tenant_exclusive_ops_total{{tenant=\"{}\"}} {}",
+            escape(name),
+            t.exclusive_ops
+        );
+    }
+    out
+}
+
+/// Validate a scrape: every non-comment line must parse as
+/// `name[{labels}] value`, at least one series must be present, and
+/// every name in [`METRIC_NAMES`] must appear somewhere in the text.
+/// Returns the first problem found.
+pub fn check(text: &str) -> Result<(), String> {
+    let mut series = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim_end();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name_part, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("line {}: no value: {line:?}", lineno + 1))?;
+        let name = match name_part.split_once('{') {
+            Some((n, labels)) => {
+                if !labels.ends_with('}') {
+                    return Err(format!("line {}: unclosed labels: {line:?}", lineno + 1));
+                }
+                n
+            }
+            None => name_part,
+        };
+        if name.is_empty()
+            || !name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+        {
+            return Err(format!("line {}: bad metric name: {name:?}", lineno + 1));
+        }
+        if value.parse::<f64>().is_err() {
+            return Err(format!("line {}: bad value {value:?}", lineno + 1));
+        }
+        series += 1;
+    }
+    if series == 0 {
+        return Err("no series in scrape".to_string());
+    }
+    for name in METRIC_NAMES {
+        if !text.contains(name) {
+            return Err(format!("scrape is missing metric: {name}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::recorder::{Recorder, SpanEvent};
+
+    #[test]
+    fn empty_snapshot_exports_every_metric_name() {
+        let text = prometheus(&Metrics::default());
+        check(&text).expect("empty snapshot must still scrape clean");
+        for name in METRIC_NAMES {
+            assert!(text.contains(name), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn populated_snapshot_round_trips_the_checker() {
+        let r = Recorder::new();
+        r.requests_served(3);
+        r.batch_admitted(3);
+        r.record_latency_n(std::time::Duration::from_micros(100), 3);
+        r.record_span(SpanEvent::closed(1_000, 2_000, 500, 3, 42));
+        r.tenant("alice", |t| t.requests += 3);
+        r.window_dispatched(3);
+        let text = prometheus(&r.snapshot());
+        check(&text).expect("populated snapshot must scrape clean");
+        assert!(text.contains("cpm_requests_total 3"));
+        assert!(text.contains("cpm_tenant_requests_total{tenant=\"alice\"} 3"));
+        assert!(text.contains("cpm_span_stage_ns_total{stage=\"exec\"} 2000"));
+        assert!(text.contains("cpm_request_latency_us_bucket{le=\"127\"} 3"));
+        assert!(text.contains("cpm_request_latency_us_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("cpm_request_latency_us_sum{} 300"));
+        assert!(text.contains("cpm_request_latency_us_count{} 3"));
+        assert!(text.contains("cpm_span_stage_us_bucket{stage=\"wait\",le=\"1\"} 1"));
+    }
+
+    #[test]
+    fn tenant_labels_are_escaped() {
+        let mut m = Metrics::default();
+        m.tenant("we\"ird\\name").requests = 1;
+        let text = prometheus(&m);
+        check(&text).expect("escaped labels must scrape clean");
+        assert!(text.contains("cpm_tenant_requests_total{tenant=\"we\\\"ird\\\\name\"} 1"));
+    }
+
+    #[test]
+    fn checker_rejects_garbage() {
+        assert!(check("").is_err());
+        assert!(check("cpm_requests_total not-a-number\n").is_err());
+        assert!(check("bad name{ 1\n").is_err());
+        // Valid lines but an incomplete metric roster still fails.
+        assert!(check("cpm_requests_total 1\n").is_err());
+    }
+}

@@ -1,0 +1,434 @@
+//! Bounded log2-bucket histograms.
+//!
+//! A [`Log2Histogram`] is a fixed array of [`BUCKETS`] counters: bucket 0
+//! holds the value 0, bucket `i` (for `i >= 1`) holds values in
+//! `[2^(i-1), 2^i)` — i.e. a value lands in the bucket indexed by its bit
+//! length. Recording is O(1), memory is a compile-time constant no matter
+//! how many samples arrive (the property the old unbounded
+//! `samples_us: Vec<u64>` latency store lacked), and two histograms merge
+//! by adding buckets — which is what lets per-thread recorders be folded
+//! into one ledger without locks on the hot path.
+//!
+//! Percentiles are nearest-rank over the bucket counts and answer with
+//! the containing bucket's upper bound (clamped to the observed max), so
+//! a reported percentile is always ≥ the true sample percentile and
+//! within 2× of it; the exact `min`, `max`, `count`, and `sum` (hence the
+//! mean) are tracked losslessly on the side.
+//!
+//! [`AtomicHistogram`] is the lock-free sibling used by the shared
+//! [`Recorder`](crate::obs::Recorder): `record` from any thread, then
+//! [`AtomicHistogram::snapshot`] into a plain [`Log2Histogram`] to read.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bucket count: one bucket per possible `u64` bit length, plus bucket 0
+/// for the value 0. Fixed at compile time — the memory bound.
+pub const BUCKETS: usize = 65;
+
+/// Bucket index for a value: its bit length (0 for the value 0).
+fn bucket_index(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+/// Inclusive upper bound of bucket `i` (`u64::MAX` for the last bucket).
+fn bucket_ceil(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else if i >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// Inclusive lower bound of bucket `i`.
+fn bucket_floor(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << (i - 1)
+    }
+}
+
+/// A bounded histogram over `u64` samples (see the module docs for the
+/// bucket scheme). `count` is derived from the buckets, so a merge or a
+/// racy atomic snapshot can never disagree with itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Log2Histogram {
+    buckets: [u64; BUCKETS],
+    sum: u64,
+    /// Smallest recorded value; `u64::MAX` while empty.
+    min: u64,
+    max: u64,
+}
+
+impl Default for Log2Histogram {
+    fn default() -> Self {
+        Log2Histogram::new()
+    }
+}
+
+/// Summary of a histogram readable without the histogram itself: the
+/// snapshot-based percentile surface (reads take `&self`, never `&mut`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Percentiles {
+    /// Samples recorded.
+    pub count: u64,
+    /// Exact mean (sum and count are tracked losslessly).
+    pub mean: f64,
+    /// Exact minimum (0 while empty).
+    pub min: u64,
+    /// Exact maximum (0 while empty).
+    pub max: u64,
+    /// Median (bucket-resolved; see [`Log2Histogram::percentile`]).
+    pub p50: u64,
+    /// 90th percentile.
+    pub p90: u64,
+    /// 99th percentile.
+    pub p99: u64,
+}
+
+impl Log2Histogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Log2Histogram {
+            buckets: [0; BUCKETS],
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Rebuild from wire parts (bucket counts plus the exact side
+    /// stats). An all-zero bucket array yields an empty histogram
+    /// regardless of `min`/`max`.
+    pub fn from_parts(buckets: [u64; BUCKETS], sum: u64, min: u64, max: u64) -> Self {
+        let mut h = Log2Histogram {
+            buckets,
+            sum,
+            min,
+            max,
+        };
+        if h.count() == 0 {
+            h.min = u64::MAX;
+            h.max = 0;
+            h.sum = 0;
+        }
+        h
+    }
+
+    /// Record one sample. O(1), no allocation.
+    pub fn record(&mut self, v: u64) {
+        self.record_n(v, 1);
+    }
+
+    /// Record `n` samples of the same value (amortized batch latency).
+    pub fn record_n(&mut self, v: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.buckets[bucket_index(v)] += n;
+        self.sum = self.sum.saturating_add(v.saturating_mul(n));
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold another histogram into this one (cross-thread merge).
+    pub fn merge(&mut self, other: &Log2Histogram) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// The bucket counters (bucket `i` covers `[2^(i-1), 2^i)`).
+    pub fn buckets(&self) -> &[u64; BUCKETS] {
+        &self.buckets
+    }
+
+    /// Samples recorded (derived from the buckets).
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Exact sum of all recorded values (saturating).
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Exact minimum recorded value (0 while empty).
+    pub fn min(&self) -> u64 {
+        if self.max == 0 && self.min == u64::MAX {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum recorded value (0 while empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Exact mean (0.0 while empty).
+    pub fn mean(&self) -> f64 {
+        let count = self.count();
+        if count == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / count as f64
+    }
+
+    /// Nearest-rank percentile (`p` in `0..=100`): the rank is
+    /// `round(p/100 * (count-1))`; rank 0 answers the exact min, the top
+    /// rank the exact max, and anything between answers the containing
+    /// bucket's upper bound clamped to the max — always ≥ the true
+    /// sample percentile and within 2× of it.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * (count - 1) as f64).round() as u64;
+        if rank == 0 {
+            return self.min();
+        }
+        if rank >= count - 1 {
+            return self.max;
+        }
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen > rank {
+                return bucket_ceil(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Snapshot summary: count, mean, min/max, p50/p90/p99.
+    pub fn summary(&self) -> Percentiles {
+        Percentiles {
+            count: self.count(),
+            mean: self.mean(),
+            min: self.min(),
+            max: self.max(),
+            p50: self.percentile(50.0),
+            p90: self.percentile(90.0),
+            p99: self.percentile(99.0),
+        }
+    }
+
+    /// Inclusive upper bound of bucket `i` (`u64::MAX` for the last) —
+    /// the `le` boundary the exporter publishes.
+    pub fn bucket_bound(i: usize) -> u64 {
+        bucket_ceil(i)
+    }
+}
+
+/// Lock-free histogram for concurrent recording: same bucket scheme as
+/// [`Log2Histogram`], all counters relaxed atomics. Recording is O(1)
+/// and wait-free; [`AtomicHistogram::snapshot`] reads a plain
+/// [`Log2Histogram`] that is racy across fields under concurrent writes
+/// but internally consistent (its count derives from its buckets) and
+/// monotone between quiesced points.
+#[derive(Debug)]
+pub struct AtomicHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        AtomicHistogram::new()
+    }
+}
+
+impl AtomicHistogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        AtomicHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample from any thread.
+    pub fn record(&self, v: u64) {
+        self.record_n(v, 1);
+    }
+
+    /// Record `n` samples of the same value from any thread.
+    pub fn record_n(&self, v: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.buckets[bucket_index(v)].fetch_add(n, Ordering::Relaxed);
+        self.sum.fetch_add(v.saturating_mul(n), Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Read the current contents as a plain histogram.
+    pub fn snapshot(&self) -> Log2Histogram {
+        let buckets = std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed));
+        Log2Histogram::from_parts(
+            buckets,
+            self.sum.load(Ordering::Relaxed),
+            self.min.load(Ordering::Relaxed),
+            self.max.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::thread;
+
+    #[test]
+    fn bucket_scheme_is_bit_length() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(1023), 10);
+        assert_eq!(bucket_index(1024), 11);
+        assert_eq!(bucket_index(u64::MAX), 64);
+        for i in 0..BUCKETS {
+            assert_eq!(bucket_index(bucket_floor(i)), i);
+            assert_eq!(bucket_index(bucket_ceil(i)), i);
+        }
+    }
+
+    #[test]
+    fn records_exact_side_stats() {
+        let mut h = Log2Histogram::new();
+        for v in [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 100] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.sum(), 550);
+        assert_eq!(h.min(), 10);
+        assert_eq!(h.max(), 100);
+        assert!((h.mean() - 55.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_semantics_are_bucketed_nearest_rank() {
+        // Values 10..=100 land in buckets 4 (10), 5 (20, 30), 6 (40..60),
+        // 7 (70..100). Rank 0 and the top rank answer exactly; middle
+        // ranks answer the containing bucket's ceiling.
+        let mut h = Log2Histogram::new();
+        for v in [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 100] {
+            h.record(v);
+        }
+        assert_eq!(h.percentile(0.0), 10);
+        assert_eq!(h.percentile(50.0), 63); // rank 5 -> bucket 6 ceil
+        assert_eq!(h.percentile(90.0), 100); // rank 8 -> bucket 7, clamped
+        assert_eq!(h.percentile(99.0), 100); // top rank -> exact max
+        assert_eq!(h.percentile(100.0), 100);
+        assert!(h.percentile(50.0) <= h.percentile(99.0));
+    }
+
+    #[test]
+    fn empty_histogram_answers_zero() {
+        let h = Log2Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(99.0), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.summary(), Percentiles::default());
+    }
+
+    #[test]
+    fn merge_equals_serial_recount() {
+        let mut rng = Rng::new(77);
+        let values: Vec<u64> = (0..10_000).map(|_| rng.below(1 << 30)).collect();
+        let mut serial = Log2Histogram::new();
+        for &v in &values {
+            serial.record(v);
+        }
+        let mut merged = Log2Histogram::new();
+        for chunk in values.chunks(997) {
+            let mut part = Log2Histogram::new();
+            for &v in chunk {
+                part.record(v);
+            }
+            merged.merge(&part);
+        }
+        assert_eq!(merged, serial);
+    }
+
+    #[test]
+    fn memory_is_bounded_at_a_million_records() {
+        // The bound itself is the type's size: fixed buckets plus three
+        // side counters, no heap, regardless of sample count.
+        assert_eq!(
+            std::mem::size_of::<Log2Histogram>(),
+            (BUCKETS + 3) * std::mem::size_of::<u64>()
+        );
+        let mut rng = Rng::new(2024);
+        let mut h = Log2Histogram::new();
+        let mut reference: Vec<u64> = Vec::with_capacity(1_000_000);
+        for _ in 0..1_000_000 {
+            let v = rng.below(1 << 20);
+            h.record(v);
+            reference.push(v);
+        }
+        assert_eq!(h.count(), 1_000_000);
+        reference.sort_unstable();
+        // Property: every percentile answers >= the true sample
+        // percentile and <= 2x it (bucket ceilings double at worst).
+        for p in [1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 99.9] {
+            let rank = ((p / 100.0) * (reference.len() - 1) as f64).round() as usize;
+            let truth = reference[rank];
+            let got = h.percentile(p);
+            assert!(got >= truth, "p{p}: {got} < true {truth}");
+            assert!(got <= 2 * truth.max(1), "p{p}: {got} > 2x true {truth}");
+        }
+        assert_eq!(h.percentile(0.0), reference[0]);
+        assert_eq!(h.percentile(100.0), *reference.last().unwrap());
+    }
+
+    #[test]
+    fn atomic_histogram_matches_serial_across_threads() {
+        let atomic = AtomicHistogram::new();
+        let mut serial = Log2Histogram::new();
+        let per_thread = 4096u64;
+        let threads = 4u64;
+        for t in 0..threads {
+            let mut rng = Rng::new(300 + t);
+            for _ in 0..per_thread {
+                serial.record(rng.below(1 << 24));
+            }
+        }
+        thread::scope(|scope| {
+            for t in 0..threads {
+                let atomic = &atomic;
+                scope.spawn(move || {
+                    let mut rng = Rng::new(300 + t);
+                    for _ in 0..per_thread {
+                        atomic.record(rng.below(1 << 24));
+                    }
+                });
+            }
+        });
+        assert_eq!(atomic.snapshot(), serial);
+    }
+
+    #[test]
+    fn from_parts_normalizes_empty() {
+        let h = Log2Histogram::from_parts([0; BUCKETS], 0, 0, 0);
+        assert_eq!(h, Log2Histogram::new());
+    }
+}

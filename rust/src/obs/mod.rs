@@ -1,0 +1,67 @@
+//! End-to-end observability: bounded histograms, a lock-cheap metrics
+//! recorder, request-path span tracing, and a Prometheus-format exporter.
+//!
+//! The paper's claims are cycle counts; the serving stack's claims are
+//! wall clock. This module is where the two ledgers meet so they can be
+//! compared side by side:
+//!
+//! * [`hist`] — fixed-size log2-bucket histograms: O(1) record, bounded
+//!   memory no matter how many samples arrive, mergeable across threads,
+//!   with an atomic sibling for lock-free recording.
+//! * [`recorder`] — the [`Recorder`]: every serving-path counter
+//!   (requests, errors, device cycles, batching gains, wire activity) as
+//!   relaxed atomics, plus the span ring that traces each request through
+//!   its `wait` → `exec` → `write` stages with wall time *and* modeled
+//!   device cycles per window.
+//! * [`snapshot`] — the plain-data [`Metrics`] snapshot the recorder
+//!   produces: the pre-existing `Metrics`/`WireMetrics`/`TenantMetrics`
+//!   field surface, extended with [`SpanStats`] and [`GaugeStats`], and
+//!   readable through `&` (no server lock, no `&mut`).
+//! * [`export`] — the Prometheus exposition-format text exporter and the
+//!   scrape checker CI runs against a live server.
+//!
+//! One [`Recorder`] is shared by every layer: the coordinator records
+//! request/device/batch counters, the TCP front-end records wire counters
+//! and spans, readers answer `Stats` scrapes from it directly (the
+//! dispatcher is never blocked by a scrape), and `cpm stats` renders the
+//! snapshot.
+#![warn(missing_docs)]
+
+pub mod export;
+pub mod hist;
+pub mod recorder;
+pub mod snapshot;
+
+pub use hist::{AtomicHistogram, Log2Histogram, Percentiles, BUCKETS};
+pub use recorder::{Recorder, SpanEvent, SPAN_RING_CAPACITY};
+pub use snapshot::{GaugeStats, LatencyStats, Metrics, SpanStats, TenantMetrics, WireMetrics};
+
+/// Request-path span stages, in ledger order. Each served request is
+/// decomposed into admission-window wait, batch execution, and reply
+/// write; `Total` is their exact sum (one shared arrival stamp, no
+/// independent clock reads — see `net/server.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Admission-window wait: frame decoded → window dispatched.
+    Wait = 0,
+    /// Batch execution: window dispatched → `handle_batch` returned.
+    Exec = 1,
+    /// Reply encode + write back to the peer.
+    Write = 2,
+    /// End to end: `wait + exec + write`, exactly.
+    Total = 3,
+}
+
+/// Stage names as exported (`cpm_span_stage_us{stage="..."}`) and as
+/// documented in DESIGN.md's span stage table (CI greps this list).
+pub const STAGE_NAMES: [&str; 4] = ["wait", "exec", "write", "total"];
+
+impl Stage {
+    /// Every stage, in ledger order.
+    pub const ALL: [Stage; 4] = [Stage::Wait, Stage::Exec, Stage::Write, Stage::Total];
+
+    /// The exported name of this stage.
+    pub fn name(self) -> &'static str {
+        STAGE_NAMES[self as usize]
+    }
+}

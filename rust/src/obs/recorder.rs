@@ -1,0 +1,383 @@
+//! The shared [`Recorder`]: one instance per server, written by every
+//! serving layer, read by scrapes.
+//!
+//! All counters are relaxed atomics and every write path takes `&self`,
+//! so the coordinator, the dispatcher thread, and the per-connection
+//! reader threads all record into the same instance without a lock on
+//! the hot path. The only mutexes guard the per-tenant map and the span
+//! ring — both touched once per request at most, never per device op —
+//! and a scrape reads everything through [`Recorder::snapshot`] without
+//! ever taking the dispatcher's time.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use super::hist::AtomicHistogram;
+use super::snapshot::{GaugeStats, LatencyStats, Metrics, SpanStats, TenantMetrics, WireMetrics};
+use super::Stage;
+
+/// Capacity of the span event ring: the most recent spans kept for the
+/// `recent` block of a snapshot. Fixed — span memory is bounded no
+/// matter how long the server runs.
+pub const SPAN_RING_CAPACITY: usize = 512;
+
+/// One closed request-path span: per-stage wall time plus the modeled
+/// device cycles the window consumed, so the wall-clock ledger and the
+/// paper's cycle ledger can be compared per request.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// Nanoseconds from frame decode to window dispatch.
+    pub wait_ns: u64,
+    /// Nanoseconds from window dispatch to `handle_batch` return.
+    pub exec_ns: u64,
+    /// Nanoseconds encoding + writing the reply.
+    pub write_ns: u64,
+    /// End-to-end nanoseconds: exactly `wait_ns + exec_ns + write_ns`.
+    pub total_ns: u64,
+    /// Requests in the admission window this span rode in.
+    pub window_len: u32,
+    /// Modeled device cycles the window's batch consumed.
+    pub device_cycles: u64,
+}
+
+impl SpanEvent {
+    /// Close a span from its three stage durations; `total_ns` is their
+    /// sum by construction, so the ledger decomposes exactly.
+    pub fn closed(
+        wait_ns: u64,
+        exec_ns: u64,
+        write_ns: u64,
+        window_len: u32,
+        device_cycles: u64,
+    ) -> Self {
+        SpanEvent {
+            wait_ns,
+            exec_ns,
+            write_ns,
+            total_ns: wait_ns + exec_ns + write_ns,
+            window_len,
+            device_cycles,
+        }
+    }
+}
+
+/// Fixed-capacity overwrite-oldest ring of span events.
+#[derive(Debug, Default)]
+struct SpanRing {
+    events: Vec<SpanEvent>,
+    next: usize,
+}
+
+impl SpanRing {
+    fn push(&mut self, ev: SpanEvent) {
+        if self.events.len() < SPAN_RING_CAPACITY {
+            self.events.push(ev);
+        } else {
+            self.events[self.next] = ev;
+        }
+        self.next = (self.next + 1) % SPAN_RING_CAPACITY;
+    }
+
+    /// Events oldest-first.
+    fn recent(&self) -> Vec<SpanEvent> {
+        if self.events.len() < SPAN_RING_CAPACITY {
+            return self.events.clone();
+        }
+        let mut out = Vec::with_capacity(SPAN_RING_CAPACITY);
+        out.extend_from_slice(&self.events[self.next..]);
+        out.extend_from_slice(&self.events[..self.next]);
+        out
+    }
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// The live metrics registry shared by every serving layer. All methods
+/// take `&self`; share it as an `Arc<Recorder>`.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    // Coordinator counters.
+    requests: AtomicU64,
+    errors: AtomicU64,
+    device_macro_cycles: AtomicU64,
+    device_exclusive_ops: AtomicU64,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    shared_passes_saved: AtomicU64,
+    groups_executed: AtomicU64,
+    makespan_serial_cycles: AtomicU64,
+    makespan_overlapped_cycles: AtomicU64,
+    group_plan_ns: AtomicU64,
+    // Wire counters.
+    connections: AtomicU64,
+    windows: AtomicU64,
+    coalesced_windows: AtomicU64,
+    max_window: AtomicU64,
+    window_requests: AtomicU64,
+    scrapes: AtomicU64,
+    // Span stage totals (nanoseconds).
+    spans_recorded: AtomicU64,
+    span_wait_ns: AtomicU64,
+    span_exec_ns: AtomicU64,
+    span_write_ns: AtomicU64,
+    span_total_ns: AtomicU64,
+    // Gauges (sampled at scrape time).
+    queue_depth: AtomicU64,
+    worker_threads: AtomicU64,
+    worker_busy: AtomicU64,
+    worker_dispatches: AtomicU64,
+    // Distributions.
+    latency_us: AtomicHistogram,
+    stage_us: [AtomicHistogram; 4],
+    // Cold-path state.
+    tenants: Mutex<BTreeMap<String, TenantMetrics>>,
+    ring: Mutex<SpanRing>,
+}
+
+impl Recorder {
+    /// Fresh recorder with every counter at zero.
+    pub fn new() -> Self {
+        Recorder::default()
+    }
+
+    /// A batch entered `handle_batch` carrying `n` requests.
+    pub fn batch_admitted(&self, n: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// `n` requests finished (ok or error).
+    pub fn requests_served(&self, n: u64) {
+        self.requests.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// One request returned an error.
+    pub fn request_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Update one tenant's counters under the tenant-map lock.
+    pub fn tenant(&self, name: &str, update: impl FnOnce(&mut TenantMetrics)) {
+        let mut tenants = lock(&self.tenants);
+        update(tenants.entry(name.to_string()).or_default());
+    }
+
+    /// Modeled device cost consumed by a request.
+    pub fn device_cost(&self, macro_cycles: u64, exclusive_ops: u64) {
+        self.device_macro_cycles.fetch_add(macro_cycles, Ordering::Relaxed);
+        self.device_exclusive_ops.fetch_add(exclusive_ops, Ordering::Relaxed);
+    }
+
+    /// Batch-plan outcome: grouping gains, makespans, and the wall time
+    /// the planner itself took.
+    pub fn batch_totals(
+        &self,
+        shared_passes_saved: u64,
+        groups: u64,
+        makespan_serial: u64,
+        makespan_overlapped: u64,
+        plan_ns: u64,
+    ) {
+        self.shared_passes_saved.fetch_add(shared_passes_saved, Ordering::Relaxed);
+        self.groups_executed.fetch_add(groups, Ordering::Relaxed);
+        self.makespan_serial_cycles.fetch_add(makespan_serial, Ordering::Relaxed);
+        self.makespan_overlapped_cycles.fetch_add(makespan_overlapped, Ordering::Relaxed);
+        self.group_plan_ns.fetch_add(plan_ns, Ordering::Relaxed);
+    }
+
+    /// Record the same per-request latency for `n` requests (amortized
+    /// share of a batch).
+    pub fn record_latency_n(&self, d: Duration, n: u64) {
+        self.latency_us.record_n(d.as_micros() as u64, n);
+    }
+
+    /// The listener accepted a connection.
+    pub fn connection_accepted(&self) {
+        self.connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An admission window of `n` requests was dispatched.
+    pub fn window_dispatched(&self, n: u64) {
+        self.windows.fetch_add(1, Ordering::Relaxed);
+        self.window_requests.fetch_add(n, Ordering::Relaxed);
+        if n > 1 {
+            self.coalesced_windows.fetch_add(1, Ordering::Relaxed);
+        }
+        self.max_window.fetch_max(n, Ordering::Relaxed);
+    }
+
+    /// Record one closed request-path span.
+    pub fn record_span(&self, ev: SpanEvent) {
+        self.spans_recorded.fetch_add(1, Ordering::Relaxed);
+        self.span_wait_ns.fetch_add(ev.wait_ns, Ordering::Relaxed);
+        self.span_exec_ns.fetch_add(ev.exec_ns, Ordering::Relaxed);
+        self.span_write_ns.fetch_add(ev.write_ns, Ordering::Relaxed);
+        self.span_total_ns.fetch_add(ev.total_ns, Ordering::Relaxed);
+        self.stage_us[Stage::Wait as usize].record(ev.wait_ns / 1_000);
+        self.stage_us[Stage::Exec as usize].record(ev.exec_ns / 1_000);
+        self.stage_us[Stage::Write as usize].record(ev.write_ns / 1_000);
+        self.stage_us[Stage::Total as usize].record(ev.total_ns / 1_000);
+        lock(&self.ring).push(ev);
+    }
+
+    /// Store the point-in-time gauges a scrape observed.
+    pub fn sample_gauges(
+        &self,
+        queue_depth: u64,
+        worker_threads: u64,
+        worker_busy: u64,
+        worker_dispatches: u64,
+    ) {
+        self.queue_depth.store(queue_depth, Ordering::Relaxed);
+        self.worker_threads.store(worker_threads, Ordering::Relaxed);
+        self.worker_busy.store(worker_busy, Ordering::Relaxed);
+        self.worker_dispatches.store(worker_dispatches, Ordering::Relaxed);
+    }
+
+    /// A stats scrape was answered.
+    pub fn scraped(&self) {
+        self.scrapes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total modeled device cycles so far (macro + exclusive). The
+    /// dispatcher is the sole writer of device costs, so deltas taken
+    /// around a `handle_batch` call on that thread are exact.
+    pub fn device_cycles_total(&self) -> u64 {
+        self.device_macro_cycles.load(Ordering::Relaxed)
+            + self.device_exclusive_ops.load(Ordering::Relaxed)
+    }
+
+    /// Read everything into a plain-data [`Metrics`] snapshot. Never
+    /// blocks recording threads beyond the two cold-path mutexes.
+    pub fn snapshot(&self) -> Metrics {
+        let load = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        Metrics {
+            requests: load(&self.requests),
+            errors: load(&self.errors),
+            device_macro_cycles: load(&self.device_macro_cycles),
+            device_exclusive_ops: load(&self.device_exclusive_ops),
+            batches: load(&self.batches),
+            batched_requests: load(&self.batched_requests),
+            shared_passes_saved: load(&self.shared_passes_saved),
+            groups_executed: load(&self.groups_executed),
+            makespan_serial_cycles: load(&self.makespan_serial_cycles),
+            makespan_overlapped_cycles: load(&self.makespan_overlapped_cycles),
+            group_plan_ns: load(&self.group_plan_ns),
+            scrapes: load(&self.scrapes),
+            per_tenant: lock(&self.tenants).clone(),
+            latency: LatencyStats::from_hist(self.latency_us.snapshot()),
+            wire: WireMetrics {
+                connections: load(&self.connections),
+                windows: load(&self.windows),
+                coalesced_windows: load(&self.coalesced_windows),
+                max_window: load(&self.max_window),
+                window_requests: load(&self.window_requests),
+            },
+            spans: SpanStats {
+                recorded: load(&self.spans_recorded),
+                wait_ns: load(&self.span_wait_ns),
+                exec_ns: load(&self.span_exec_ns),
+                write_ns: load(&self.span_write_ns),
+                total_ns: load(&self.span_total_ns),
+                stages: std::array::from_fn(|i| self.stage_us[i].snapshot()),
+                recent: lock(&self.ring).recent(),
+            },
+            gauges: GaugeStats {
+                queue_depth: load(&self.queue_depth),
+                worker_threads: load(&self.worker_threads),
+                worker_busy: load(&self.worker_busy),
+                worker_dispatches: load(&self.worker_dispatches),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Stage;
+
+    #[test]
+    fn counters_land_in_the_snapshot() {
+        let r = Recorder::new();
+        r.batch_admitted(3);
+        r.requests_served(3);
+        r.request_error();
+        r.device_cost(120, 2);
+        r.batch_totals(5, 2, 900, 640, 1_500);
+        r.record_latency_n(Duration::from_micros(250), 3);
+        r.connection_accepted();
+        r.window_dispatched(3);
+        r.window_dispatched(1);
+        r.scraped();
+        r.tenant("alice", |t| t.requests += 3);
+        let m = r.snapshot();
+        assert_eq!(m.requests, 3);
+        assert_eq!(m.errors, 1);
+        assert_eq!(m.batches, 1);
+        assert_eq!(m.batched_requests, 3);
+        assert_eq!(m.device_macro_cycles, 120);
+        assert_eq!(m.device_exclusive_ops, 2);
+        assert_eq!(m.shared_passes_saved, 5);
+        assert_eq!(m.groups_executed, 2);
+        assert_eq!(m.makespan_serial_cycles, 900);
+        assert_eq!(m.makespan_overlapped_cycles, 640);
+        assert_eq!(m.group_plan_ns, 1_500);
+        assert_eq!(m.scrapes, 1);
+        assert_eq!(m.latency.count(), 3);
+        assert_eq!(m.wire.connections, 1);
+        assert_eq!(m.wire.windows, 2);
+        assert_eq!(m.wire.coalesced_windows, 1);
+        assert_eq!(m.wire.max_window, 3);
+        assert_eq!(m.wire.window_requests, 4);
+        assert_eq!(m.per_tenant["alice"].requests, 3);
+    }
+
+    #[test]
+    fn spans_decompose_exactly_and_fill_stage_hists() {
+        let r = Recorder::new();
+        r.record_span(SpanEvent::closed(1_000, 2_000, 500, 2, 77));
+        r.record_span(SpanEvent::closed(4_000, 8_000, 1_000, 1, 33));
+        let m = r.snapshot();
+        assert_eq!(m.spans.recorded, 2);
+        assert_eq!(m.spans.wait_ns + m.spans.exec_ns + m.spans.write_ns, m.spans.total_ns);
+        assert_eq!(m.spans.total_ns, 3_500 + 13_000);
+        assert_eq!(m.spans.stage(Stage::Exec).count(), 2);
+        assert_eq!(m.spans.stage(Stage::Exec).sum(), 2 + 8);
+        assert_eq!(m.spans.recent.len(), 2);
+        assert_eq!(m.spans.recent[1].device_cycles, 33);
+    }
+
+    #[test]
+    fn span_ring_is_bounded_and_keeps_the_newest() {
+        let r = Recorder::new();
+        let extra = 100u64;
+        for i in 0..SPAN_RING_CAPACITY as u64 + extra {
+            r.record_span(SpanEvent::closed(i, 0, 0, 1, 0));
+        }
+        let m = r.snapshot();
+        assert_eq!(m.spans.recorded, SPAN_RING_CAPACITY as u64 + extra);
+        assert_eq!(m.spans.recent.len(), SPAN_RING_CAPACITY);
+        assert_eq!(m.spans.recent[0].wait_ns, extra);
+        assert_eq!(
+            m.spans.recent.last().unwrap().wait_ns,
+            SPAN_RING_CAPACITY as u64 + extra - 1
+        );
+    }
+
+    #[test]
+    fn gauges_store_latest_sample() {
+        let r = Recorder::new();
+        r.sample_gauges(7, 4, 1, 99);
+        r.sample_gauges(0, 4, 0, 120);
+        let g = r.snapshot().gauges;
+        assert_eq!(g.queue_depth, 0);
+        assert_eq!(g.worker_threads, 4);
+        assert_eq!(g.worker_busy, 0);
+        assert_eq!(g.worker_dispatches, 120);
+    }
+}

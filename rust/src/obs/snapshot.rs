@@ -1,0 +1,246 @@
+//! Plain-data snapshot of the recorder: the [`Metrics`] struct and its
+//! parts. A snapshot is an owned value — every read (`percentile_us`,
+//! `mean_us`, the exporter) takes `&self`, so callers never need `&mut`
+//! access to the server or any lock to look at numbers. The field
+//! surface extends the pre-observability `Metrics`/`WireMetrics`/
+//! `TenantMetrics` trio with span ([`SpanStats`]) and gauge
+//! ([`GaugeStats`]) blocks.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use super::hist::{Log2Histogram, Percentiles};
+use super::recorder::SpanEvent;
+use super::Stage;
+
+/// Request-latency distribution in microseconds, backed by a bounded
+/// [`Log2Histogram`] (the old implementation kept every sample in an
+/// unbounded `Vec<u64>`; this one is fixed-size no matter the traffic).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LatencyStats {
+    hist: Log2Histogram,
+}
+
+impl LatencyStats {
+    /// Record one request latency.
+    pub fn record(&mut self, d: Duration) {
+        self.hist.record(d.as_micros() as u64);
+    }
+
+    /// Wrap an already-populated histogram (recorder snapshots).
+    pub fn from_hist(hist: Log2Histogram) -> Self {
+        LatencyStats { hist }
+    }
+
+    /// The underlying microsecond histogram.
+    pub fn hist(&self) -> &Log2Histogram {
+        &self.hist
+    }
+
+    /// Latencies recorded.
+    pub fn count(&self) -> u64 {
+        self.hist.count()
+    }
+
+    /// Nearest-rank percentile in microseconds, bucket-resolved (see
+    /// [`Log2Histogram::percentile`]). Reads take `&self`.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        self.hist.percentile(p)
+    }
+
+    /// Exact mean latency in microseconds.
+    pub fn mean_us(&self) -> f64 {
+        self.hist.mean()
+    }
+
+    /// Snapshot summary (count, mean, min/max, p50/p90/p99).
+    pub fn summary(&self) -> Percentiles {
+        self.hist.summary()
+    }
+}
+
+/// Wire-level counters from the TCP front-end.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireMetrics {
+    /// Connections accepted by the listener.
+    pub connections: u64,
+    /// Admission windows dispatched.
+    pub windows: u64,
+    /// Windows that coalesced more than one request.
+    pub coalesced_windows: u64,
+    /// Largest window dispatched.
+    pub max_window: u64,
+    /// Requests admitted through windows (sum of window sizes).
+    pub window_requests: u64,
+}
+
+impl WireMetrics {
+    /// Mean requests per dispatched window (0.0 before any window).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.windows == 0 {
+            return 0.0;
+        }
+        self.window_requests as f64 / self.windows as f64
+    }
+}
+
+/// Per-tenant counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TenantMetrics {
+    /// Requests attributed to the tenant.
+    pub requests: u64,
+    /// Failed requests attributed to the tenant.
+    pub errors: u64,
+    /// Modeled device macro-op cycles the tenant consumed.
+    pub macro_cycles: u64,
+    /// Exclusive (serializing) device ops the tenant issued.
+    pub exclusive_ops: u64,
+}
+
+/// Request-path span ledger: per-stage nanosecond totals that decompose
+/// exactly (`wait + exec + write == total`, enforced by construction in
+/// `net/server.rs`), per-stage microsecond histograms, and the most
+/// recent span events from the fixed-capacity ring.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SpanStats {
+    /// Spans recorded since the server started.
+    pub recorded: u64,
+    /// Total nanoseconds spent in admission-window wait.
+    pub wait_ns: u64,
+    /// Total nanoseconds spent in batch execution.
+    pub exec_ns: u64,
+    /// Total nanoseconds spent encoding + writing replies.
+    pub write_ns: u64,
+    /// Total end-to-end nanoseconds (equals the sum of the above).
+    pub total_ns: u64,
+    /// Per-stage wall-time histograms in microseconds, indexed by
+    /// [`Stage`] (`wait`, `exec`, `write`, `total`).
+    pub stages: [Log2Histogram; 4],
+    /// Most recent span events, oldest first (bounded by
+    /// [`SPAN_RING_CAPACITY`](super::SPAN_RING_CAPACITY)).
+    pub recent: Vec<SpanEvent>,
+}
+
+impl SpanStats {
+    /// The wall-time histogram for one stage.
+    pub fn stage(&self, s: Stage) -> &Log2Histogram {
+        &self.stages[s as usize]
+    }
+}
+
+/// Point-in-time gauges sampled when a scrape is answered.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GaugeStats {
+    /// Requests waiting in the admission queue at sample time.
+    pub queue_depth: u64,
+    /// Worker-pool threads alive.
+    pub worker_threads: u64,
+    /// 1 if a worker-pool dispatch was in flight at sample time.
+    pub worker_busy: u64,
+    /// Worker-pool dispatches completed since startup.
+    pub worker_dispatches: u64,
+}
+
+/// Snapshot of every served-path counter, histogram, span, and gauge.
+/// Produced by [`Recorder::snapshot`](super::Recorder::snapshot); plain
+/// data, cheap to clone, serializable over the wire as a `Stats` reply.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Metrics {
+    /// Requests served (ok or error).
+    pub requests: u64,
+    /// Requests that returned an error.
+    pub errors: u64,
+    /// Modeled device macro-op cycles consumed.
+    pub device_macro_cycles: u64,
+    /// Exclusive (serializing) device ops issued.
+    pub device_exclusive_ops: u64,
+    /// Batches admitted through `handle_batch`.
+    pub batches: u64,
+    /// Requests that arrived inside those batches.
+    pub batched_requests: u64,
+    /// Device passes saved by shared-execution grouping.
+    pub shared_passes_saved: u64,
+    /// Execution groups the batch planner formed.
+    pub groups_executed: u64,
+    /// Modeled serial makespan (cycles) of all executed groups.
+    pub makespan_serial_cycles: u64,
+    /// Modeled overlapped makespan (cycles) of all executed groups.
+    pub makespan_overlapped_cycles: u64,
+    /// Wall nanoseconds spent forming batch groups (plan phase).
+    pub group_plan_ns: u64,
+    /// Stats scrapes answered.
+    pub scrapes: u64,
+    /// Per-tenant counters, keyed by tenant name.
+    pub per_tenant: BTreeMap<String, TenantMetrics>,
+    /// Request-latency distribution (microseconds).
+    pub latency: LatencyStats,
+    /// TCP front-end counters.
+    pub wire: WireMetrics,
+    /// Request-path span ledger.
+    pub spans: SpanStats,
+    /// Point-in-time gauges from the latest scrape sample.
+    pub gauges: GaugeStats,
+}
+
+impl Metrics {
+    /// The (created-on-first-use) counters for one tenant.
+    pub fn tenant(&mut self, name: &str) -> &mut TenantMetrics {
+        self.per_tenant.entry(name.to_string()).or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_percentiles_read_through_shared_ref() {
+        let mut lat = LatencyStats::default();
+        for us in [100u64, 200, 300, 400, 500] {
+            lat.record(Duration::from_micros(us));
+        }
+        // Reads take &self: no &mut needed once recorded.
+        let lat = &lat;
+        assert_eq!(lat.count(), 5);
+        assert!((lat.mean_us() - 300.0).abs() < 1e-9);
+        assert_eq!(lat.percentile_us(0.0), 100);
+        assert_eq!(lat.percentile_us(100.0), 500);
+        // Middle ranks answer the containing log2 bucket's ceiling.
+        assert!(lat.percentile_us(50.0) >= 300);
+        assert!(lat.percentile_us(50.0) <= 511);
+        let s = lat.summary();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.min, 100);
+        assert_eq!(s.max, 500);
+    }
+
+    #[test]
+    fn wire_mean_occupancy() {
+        let w = WireMetrics {
+            windows: 4,
+            window_requests: 10,
+            ..WireMetrics::default()
+        };
+        assert!((w.mean_occupancy() - 2.5).abs() < 1e-9);
+        assert_eq!(WireMetrics::default().mean_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn tenant_entry_created_on_first_use() {
+        let mut m = Metrics::default();
+        m.tenant("alice").requests += 1;
+        m.tenant("alice").requests += 1;
+        m.tenant("bob").errors += 1;
+        assert_eq!(m.per_tenant["alice"].requests, 2);
+        assert_eq!(m.per_tenant["bob"].errors, 1);
+        assert_eq!(m.per_tenant.len(), 2);
+    }
+
+    #[test]
+    fn span_stats_stage_indexing() {
+        let mut s = SpanStats::default();
+        s.stages[Stage::Exec as usize].record(42);
+        assert_eq!(s.stage(Stage::Exec).count(), 1);
+        assert_eq!(s.stage(Stage::Wait).count(), 0);
+    }
+}

@@ -18,6 +18,7 @@
 //! `tests/pool_props.rs`).
 
 use std::collections::BTreeMap;
+use std::time::Instant;
 
 use crate::algos::{histogram, reduce, sort, threshold};
 use crate::coordinator::scheduler::{OverlapScheduler, TaskPhase};
@@ -45,6 +46,9 @@ pub struct BatchReport {
     /// Makespan with task k+1's exclusive-bus load streamed while task k
     /// executes on the concurrent bus (§3.1).
     pub makespan_overlapped: u64,
+    /// Wall nanoseconds the planner spent forming the groups (the
+    /// observability layer's `group_plan_ns` counter).
+    pub plan_ns: u64,
 }
 
 /// Borrowed view of an [`Addressed`] request. The executor works on
@@ -204,6 +208,12 @@ impl BatchExecutor {
         self.exec = exec;
     }
 
+    /// The plane-execution policy in force (gauge sampling reads the
+    /// worker-pool handle through this).
+    pub fn exec(&self) -> &ExecConfig {
+        &self.exec
+    }
+
     /// Execute a batch. Responses align with `batch` order; the report
     /// carries the per-group phases, costs, and makespans.
     pub fn execute(
@@ -211,10 +221,14 @@ impl BatchExecutor {
         pool: &mut DevicePool,
         batch: &[AddressedRef<'_>],
     ) -> (Vec<Result<Response>>, BatchReport) {
+        let plan_start = Instant::now();
         let groups = plan(batch);
         let mut responses: Vec<Option<Result<Response>>> =
             (0..batch.len()).map(|_| None).collect();
-        let mut report = BatchReport::default();
+        let mut report = BatchReport {
+            plan_ns: plan_start.elapsed().as_nanos() as u64,
+            ..BatchReport::default()
+        };
         for g in &groups {
             match g.kind {
                 GroupKind::Sql => self.run_sql_group(pool, g, batch, &mut responses, &mut report),

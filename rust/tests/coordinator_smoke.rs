@@ -125,7 +125,8 @@ fn handle_counts_requests_and_charges_device_cycles() {
     s.handle(&Request::Sql("SELECT COUNT WHERE qty > 1".into()))
         .unwrap();
     s.handle(&Request::Sum(vec![1, 2, 3])).unwrap();
-    assert_eq!(s.metrics.requests, 4);
-    assert_eq!(s.metrics.errors, 0);
-    assert!(s.metrics.device_macro_cycles > 0);
+    let m = s.metrics();
+    assert_eq!(m.requests, 4);
+    assert_eq!(m.errors, 0);
+    assert!(m.device_macro_cycles > 0);
 }

@@ -160,7 +160,8 @@ fn concurrent_tcp_clients_match_serial_in_process_serving() {
 
     // The window must have genuinely coalesced concurrent wire traffic.
     let server = net.shutdown();
-    let w = &server.metrics.wire;
+    let m = server.metrics();
+    let w = &m.wire;
     assert_eq!(w.connections as usize, CLIENTS);
     assert_eq!(w.window_requests as usize, CLIENTS * script(0).len());
     assert!(
@@ -168,7 +169,15 @@ fn concurrent_tcp_clients_match_serial_in_process_serving() {
         "no multi-request window formed: {w:?}"
     );
     assert!(w.windows < w.window_requests, "every request got its own window");
-    assert_eq!(server.metrics.requests as usize, CLIENTS * script(0).len());
+    assert_eq!(m.requests as usize, CLIENTS * script(0).len());
+    // Every served request closed a span, and the ledger adds up exactly:
+    // wait + exec + write == total, by construction at span close.
+    assert_eq!(m.spans.recorded, m.requests);
+    assert_eq!(
+        m.spans.wait_ns + m.spans.exec_ns + m.spans.write_ns,
+        m.spans.total_ns,
+        "span stage ledger does not decompose"
+    );
 }
 
 #[test]
@@ -196,7 +205,7 @@ fn tenant_pinning_scopes_default_requests() {
     let err = c.call(Request::Search(b"alpha".to_vec())).unwrap_err();
     assert_eq!(err.to_string(), "pool error: no resident device default/corpus");
     let server = net.shutdown();
-    assert_eq!(server.metrics.wire.connections, 3);
+    assert_eq!(server.metrics().wire.connections, 3);
 }
 
 #[test]

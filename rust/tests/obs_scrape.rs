@@ -1,0 +1,190 @@
+//! Live observability under concurrent wire traffic.
+//!
+//! Four clients drive pipelined read-only bursts at a TCP front-end
+//! while a fifth, dedicated connection scrapes `Stats` the whole time.
+//! The scrape path is answered by the reader thread straight from the
+//! shared recorder — it must stay live (never queue behind the admission
+//! window), its counters must only ever move forward, and after
+//! shutdown the span ledger must decompose end-to-end latency exactly:
+//! wait + exec + write == total, one span per served request.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use cpm::coordinator::{
+    CpmServer, Request, DEFAULT_CORPUS, DEFAULT_TABLE, DEFAULT_TENANT,
+};
+use cpm::net::{CpmClient, NetConfig, NetServer};
+use cpm::obs::{Log2Histogram, Stage, SPAN_RING_CAPACITY};
+use cpm::pool::{DevicePool, PoolConfig};
+use cpm::sql::Schema;
+use cpm::util::rng::Rng;
+
+const CLIENTS: usize = 4;
+const OPS_PER_CLIENT: usize = 128;
+
+/// Default-tenant demo pool (a priced table and a small corpus), so
+/// unpinned clients can issue `Request`s directly.
+fn build_server() -> CpmServer {
+    let schema = Schema::new(&[("price", 2), ("qty", 1)]).unwrap();
+    let rows = 256usize;
+    let corpus: &[u8] = b"alpha beta gamma alpha delta";
+    let corpus_slack = 64usize;
+    let capacity = schema.row_size() * rows + corpus.len() + corpus_slack + 64;
+    let mut pool = DevicePool::new(PoolConfig {
+        capacity_pes: capacity,
+        tenant_quota_pes: capacity,
+        corpus_slack,
+        ..PoolConfig::default()
+    });
+    pool.create_table(DEFAULT_TENANT, DEFAULT_TABLE, schema, rows)
+        .unwrap();
+    pool.create_corpus(DEFAULT_TENANT, DEFAULT_CORPUS, corpus)
+        .unwrap();
+    let mut server = CpmServer::with_pool(pool, 1 << 12);
+    let mut rng = Rng::new(11);
+    let table_rows: Vec<Vec<u64>> = (0..rows)
+        .map(|_| vec![rng.below(10_000), rng.below(100)])
+        .collect();
+    server.load_rows(&table_rows).unwrap();
+    server
+}
+
+#[test]
+fn stats_scrape_stays_live_and_exact_under_concurrent_traffic() {
+    let net = NetServer::spawn(build_server(), NetConfig::default()).unwrap();
+    let addr = net.addr();
+
+    // Baseline scrape before any traffic: the counters start from zero
+    // and the scrape itself is counted.
+    let mut monitor = CpmClient::connect(addr).unwrap();
+    let m0 = monitor.stats().unwrap();
+    assert_eq!(m0.requests, 0);
+    assert_eq!(m0.wire.windows, 0);
+    assert!(m0.scrapes >= 1);
+
+    // Dedicated monitoring connection scraping throughout the burst. The
+    // loop floor guarantees several scrapes land even on a machine fast
+    // enough to finish the whole burst between two schedulings.
+    let done = Arc::new(AtomicBool::new(false));
+    let scraper = {
+        let done = Arc::clone(&done);
+        thread::spawn(move || -> Vec<(u64, u64, u64)> {
+            let mut seen = Vec::new();
+            while seen.len() < 3 || !done.load(Ordering::Relaxed) {
+                let m = monitor.stats().unwrap();
+                seen.push((m.requests, m.wire.windows, m.scrapes));
+                thread::sleep(Duration::from_millis(1));
+            }
+            seen
+        })
+    };
+
+    let mut clients = Vec::new();
+    for c in 0..CLIENTS {
+        clients.push(thread::spawn(move || {
+            let mut client = CpmClient::connect(addr).unwrap();
+            // Read-only mix, so concurrent interleavings cannot change
+            // any response and every request must succeed.
+            let ops: Vec<Request> = (0..OPS_PER_CLIENT)
+                .map(|i| match (c + i) % 2 {
+                    0 => {
+                        let cap = 1000 * (1 + i % 8);
+                        Request::Sql(format!("SELECT COUNT WHERE price < {cap}"))
+                    }
+                    _ => Request::Search(b"alpha".to_vec()),
+                })
+                .collect();
+            let responses = client.pipeline(&ops).unwrap();
+            assert!(responses.iter().all(|r| r.is_ok()));
+        }));
+    }
+    for h in clients {
+        h.join().unwrap();
+    }
+    done.store(true, Ordering::Relaxed);
+    let seen = scraper.join().unwrap();
+
+    // Counter streams read over the wire only ever move forward, and
+    // every scrape was counted (same connection, so strictly ordered).
+    assert!(seen.len() >= 3);
+    for pair in seen.windows(2) {
+        assert!(pair[0].0 <= pair[1].0, "requests went backwards: {pair:?}");
+        assert!(pair[0].1 <= pair[1].1, "windows went backwards: {pair:?}");
+        assert!(pair[0].2 < pair[1].2, "scrapes must strictly increase: {pair:?}");
+    }
+
+    // Final scrape over the wire sees the whole burst.
+    let total = (CLIENTS * OPS_PER_CLIENT) as u64;
+    let mut last = CpmClient::connect(addr).unwrap();
+    let m = last.stats().unwrap();
+    assert_eq!(m.requests, total);
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.wire.window_requests, total);
+    assert!(m.scrapes as usize > seen.len());
+
+    // The in-process snapshot after shutdown agrees, and the span ledger
+    // decomposes exactly: one span per request, wait + exec + write ==
+    // total by construction at span close.
+    let server = net.shutdown();
+    let m = server.metrics();
+    assert_eq!(m.requests, total);
+    assert_eq!(m.latency.count(), total);
+    assert_eq!(m.spans.recorded, total);
+    assert_eq!(
+        m.spans.wait_ns + m.spans.exec_ns + m.spans.write_ns,
+        m.spans.total_ns,
+        "span stage ledger does not decompose"
+    );
+    for stage in Stage::ALL {
+        assert_eq!(
+            m.spans.stage(stage).count(),
+            total,
+            "stage {} histogram missed spans",
+            stage.name()
+        );
+    }
+    assert!(m.spans.recent.len() <= SPAN_RING_CAPACITY);
+    assert!(!m.spans.recent.is_empty());
+    for ev in &m.spans.recent {
+        assert_eq!(ev.wait_ns + ev.exec_ns + ev.write_ns, ev.total_ns);
+        assert!(ev.window_len >= 1);
+    }
+}
+
+#[test]
+fn per_thread_histogram_merge_equals_serial_recount() {
+    // Four threads each fill a private histogram from a seeded stream;
+    // merging the parts must equal one histogram fed every stream
+    // serially — merge loses nothing and double-counts nothing.
+    let parts: Vec<Log2Histogram> = thread::scope(|s| {
+        let handles: Vec<_> = (0..4u64)
+            .map(|t| {
+                s.spawn(move || {
+                    let mut h = Log2Histogram::new();
+                    let mut rng = Rng::new(1000 + t);
+                    for _ in 0..10_000 {
+                        h.record(rng.below(1 << 20));
+                    }
+                    h
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut merged = Log2Histogram::new();
+    for p in &parts {
+        merged.merge(p);
+    }
+    let mut serial = Log2Histogram::new();
+    for t in 0..4u64 {
+        let mut rng = Rng::new(1000 + t);
+        for _ in 0..10_000 {
+            serial.record(rng.below(1 << 20));
+        }
+    }
+    assert_eq!(merged, serial);
+    assert_eq!(merged.count(), 40_000);
+}

@@ -237,17 +237,17 @@ fn batched_equals_serial_on_shuffled_mixed_workload() {
                     }
                 }
             }
+            let bm = batched.metrics();
+            let sm = serial.metrics();
             prop_assert!(
-                batched.metrics.makespan_overlapped_cycles
-                    <= batched.metrics.makespan_serial_cycles,
+                bm.makespan_overlapped_cycles <= bm.makespan_serial_cycles,
                 "overlap made the makespan worse"
             );
             prop_assert!(
-                batched.metrics.makespan_serial_cycles
-                    <= serial.metrics.makespan_serial_cycles,
+                bm.makespan_serial_cycles <= sm.makespan_serial_cycles,
                 "grouping increased total device work: {} > {}",
-                batched.metrics.makespan_serial_cycles,
-                serial.metrics.makespan_serial_cycles
+                bm.makespan_serial_cycles,
+                sm.makespan_serial_cycles
             );
             Ok(())
         },
@@ -292,6 +292,6 @@ fn corpus_capacity_errors_do_not_corrupt_state() {
         serial.pool().corpus(DEFAULT_TENANT, DEFAULT_CORPUS).unwrap().content(),
         batched.pool().corpus(DEFAULT_TENANT, DEFAULT_CORPUS).unwrap().content()
     );
-    assert_eq!(serial.metrics.errors, 4);
-    assert_eq!(batched.metrics.errors, 4);
+    assert_eq!(serial.metrics().errors, 4);
+    assert_eq!(batched.metrics().errors, 4);
 }
