@@ -46,7 +46,10 @@ fn main() -> cpm::Result<()> {
     let below_5000 = rows.iter().filter(|r| r[0] < 5000).count();
 
     // A generous window so every client's burst lands in few batches —
-    // the coalescing is what exercises the shared-pass machinery.
+    // the coalescing is what exercises the shared-pass machinery. Two
+    // reader cores multiplex the four connections (thread count is a
+    // config constant, not per-connection) and two dispatcher lanes
+    // share the server.
     let net = NetServer::spawn(
         server,
         NetConfig {
@@ -56,6 +59,8 @@ fn main() -> cpm::Result<()> {
                 max_batch: 64,
                 ..WindowConfig::default()
             },
+            reader_cores: 2,
+            dispatch_lanes: 2,
             ..NetConfig::default()
         },
     )?;
@@ -106,8 +111,10 @@ fn main() -> cpm::Result<()> {
     let m = server.metrics();
     let w = &m.wire;
     println!(
-        "wire: {} connections, {} requests in {} windows ({} coalesced, max occupancy {}, mean {:.2})",
+        "wire: {} connections ({} multiplexed onto {} reader cores), {} requests in {} windows ({} coalesced, max occupancy {}, mean {:.2})",
         w.connections,
+        w.connections_multiplexed,
+        m.gauges.reader_cores,
         w.window_requests,
         w.windows,
         w.coalesced_windows,
@@ -119,6 +126,8 @@ fn main() -> cpm::Result<()> {
         m.requests, m.shared_passes_saved
     );
     assert_eq!(w.connections as usize, CLIENTS);
+    assert_eq!(w.connections_multiplexed as usize, CLIENTS);
+    assert_eq!(m.gauges.reader_cores, 2);
     assert_eq!(w.window_requests as usize, TOTAL_OPS);
     assert_eq!(m.requests as usize, TOTAL_OPS);
     println!("tcp_serve: OK");

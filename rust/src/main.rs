@@ -20,6 +20,12 @@
 //!   (the pure-Rust interpreter by default; PJRT with `--features pjrt`)
 //!   and cross-check it against the word engine
 //!
+//! `serve` and `netbench` accept `--reader-cores N` (default 4) to size
+//! the fixed set of readiness reader cores multiplexing all connections,
+//! and `--lanes N` (default 2) to run N parallel dispatcher lanes over
+//! the admission window — thread count stays flat in the number of
+//! connected clients (see DESIGN.md "Serving path").
+//!
 //! `pool`, `serve`, `netbench`, and `runtime-check` accept `--threads N`
 //! to run large dense PE planes sharded across N std worker threads
 //! (default 1 = the serial engines) and `--backend
@@ -296,6 +302,8 @@ fn net_config(cli: &Cli, addr: &str) -> NetConfig {
             max_batch: cli.get("max-batch", 32usize),
             ..WindowConfig::default()
         },
+        reader_cores: cli.get("reader-cores", 4usize).max(1),
+        dispatch_lanes: cli.get("lanes", 2usize).max(1),
         ..NetConfig::default()
     }
 }
@@ -348,6 +356,13 @@ fn print_stats_text(m: &Metrics) {
         if g.worker_busy != 0 { "busy" } else { "idle" },
         g.worker_dispatches
     );
+    let depths: Vec<String> = g.lane_queue_depths.iter().map(u64::to_string).collect();
+    println!(
+        "net tier: {} reader core(s), {} multiplexed connection(s), lane depths [{}]",
+        g.reader_cores,
+        m.wire.connections_multiplexed,
+        depths.join(", ")
+    );
     for (tenant, t) in &m.per_tenant {
         println!(
             "  tenant {tenant}: {} req, {} err, {} concurrent cycles, {} exclusive ops",
@@ -392,10 +407,14 @@ fn serve_cmd(cli: &Cli) -> cpm::Result<()> {
     let cfg = net_config(cli, addr);
     let window_us = cfg.window.max_delay.as_micros();
     let max_batch = cfg.window.max_batch;
+    let reader_cores = cfg.reader_cores;
+    let lanes = cfg.dispatch_lanes;
     let net = NetServer::spawn(server, cfg)?;
     println!(
-        "cpm serving on {} (window {} us, max batch {}, {} exec thread(s), backend {}); demo devices: default/table ({} rows), default/corpus, default/array ({} words)",
+        "cpm serving on {} ({} reader core(s), {} lane(s), window {} us, max batch {}, {} exec thread(s), backend {}); demo devices: default/table ({} rows), default/corpus, default/array ({} words)",
         net.addr(),
+        reader_cores,
+        lanes,
         window_us,
         max_batch,
         exec.threads,
@@ -492,6 +511,8 @@ fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
     let cfg = net_config(cli, "127.0.0.1:0");
     let window_us = cfg.window.max_delay.as_micros();
     let max_batch = cfg.window.max_batch;
+    let reader_cores = cfg.reader_cores;
+    let lanes = cfg.dispatch_lanes;
     let net = NetServer::spawn(server, cfg)?;
     let addr = net.addr();
     let per_client = requests.div_ceil(clients);
@@ -535,12 +556,14 @@ fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
     );
     print_wire_metrics(&m);
     println!(
-        "markdown row (backend | threads | max_batch | window_us | requests | req/s | mean window | coalesced):"
+        "markdown row (backend | threads | reader_cores | conns | max_batch | window_us | requests | req/s | mean window | coalesced):"
     );
     println!(
-        "| {} | {} | {} | {} | {} | {:.0} | {:.2} | {} |",
+        "| {} | {} | {} | {} | {} | {} | {} | {:.0} | {:.2} | {} |",
         exec.backend,
         exec.threads,
+        reader_cores,
+        clients,
         max_batch,
         window_us,
         total,
@@ -556,6 +579,7 @@ fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
             .unwrap_or(1);
         let row = format!(
             "{{\"bench\":\"netbench\",\"backend\":\"{}\",\"threads\":{},\"clients\":{},\
+             \"reader_cores\":{},\"lanes\":{},\
              \"max_batch\":{},\"window_us\":{},\"requests\":{},\"ok\":{},\
              \"elapsed_ms\":{:.3},\"req_per_s\":{:.1},\"mean_window\":{:.3},\
              \"coalesced_windows\":{},\"p50_us\":{},\"p99_us\":{},\"max_window\":{},\
@@ -563,6 +587,8 @@ fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
             exec.backend,
             exec.threads,
             clients,
+            reader_cores,
+            lanes,
             max_batch,
             window_us,
             total,

@@ -96,9 +96,9 @@ impl CpmClient {
         }
     }
 
-    /// Scrape the server's live metrics snapshot. Answered by the
-    /// connection's reader thread straight from the shared recorder —
-    /// never queued behind the admission window — so a dedicated
+    /// Scrape the server's live metrics snapshot. Answered on the
+    /// reader core that owns this connection, straight from the shared
+    /// recorder — never admitted to a dispatcher lane — so a dedicated
     /// monitoring connection observes a saturated server without adding
     /// to its batch load. On a connection with requests still in flight,
     /// the reply ordering is matched by id like any other reply, but
@@ -128,8 +128,9 @@ impl CpmClient {
     ///
     /// Bursts of any size are safe: at most [`MAX_IN_FLIGHT`] requests
     /// are outstanding at a time — past that, the client drains a reply
-    /// per send, so neither side's socket buffer can fill up and stall
-    /// the server's dispatcher against a non-reading peer.
+    /// per send, so the server's bounded per-connection outbound queue
+    /// never grows against a non-reading peer (the server would reap
+    /// the connection rather than buffer without limit).
     pub fn pipeline(&mut self, ops: &[Request]) -> Result<Vec<Result<Response>>> {
         let mut ids: Vec<u64> = Vec::with_capacity(ops.len());
         let mut got: BTreeMap<u64, Result<Response>> = BTreeMap::new();

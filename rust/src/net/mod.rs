@@ -1,38 +1,48 @@
 //! Std-only TCP serving front-end for [`CpmServer`] — the network edge
 //! of the "networked SQL engine" the paper pitches in §2.
 //!
-//! Zero dependencies, std threads and blocking sockets only:
+//! Zero dependencies, std threads and nonblocking sockets only:
 //!
 //! * [`wire`] — the length-prefixed frame codec: `Addressed` request
 //!   envelopes in, `Result<Response, CpmError>` replies out, with every
-//!   typed error surviving the hop.
-//! * [`window`] — the batching **admission window**: requests arriving
-//!   within a configurable delay (or up to a size cap) coalesce into one
-//!   [`CpmServer::handle_batch`] call, so the pool's shared SQL compare
-//!   passes, search dedup, and §3.1 load/exec overlap apply across real
-//!   concurrent clients, not just in-process batches.
-//! * [`server`] — accept loop, per-connection reader threads with tenant
-//!   pinning, the single dispatcher that owns the `CpmServer`, and
-//!   graceful draining shutdown.
+//!   typed error surviving the hop; [`wire::FrameBuf`] resumes
+//!   partially-read frames across readiness ticks.
+//! * [`poll`] — the level-triggered readiness shim over `poll(2)` the
+//!   reader cores multiplex their sockets through (a bounded-sleep
+//!   fallback on non-unix targets).
+//! * [`window`] — the batching **admission window** with round-robin
+//!   tenant lanes: requests arriving within a configurable delay (or up
+//!   to a size cap) coalesce into one [`CpmServer::handle_batch`] call —
+//!   drained fairly across tenants, so one chatty tenant cannot starve
+//!   the others — and the pool's shared SQL compare passes, search
+//!   dedup, and §3.1 load/exec overlap apply across real concurrent
+//!   clients, not just in-process batches.
+//! * [`server`] — the readiness-driven connection tier: an accept
+//!   thread, a small fixed set of reader cores multiplexing all
+//!   connections (tenant pinning, incremental frame reassembly,
+//!   admission backpressure via parked reads), multiple dispatcher
+//!   lanes sharing the `CpmServer`, and graceful draining shutdown.
+//!   Thread count stays flat no matter how many clients connect.
 //! * [`client`] — a blocking client with one-shot calls, pipelined
 //!   bursts, and a live [`stats`](CpmClient::stats) scrape.
 //!
-//! Every wire-path event (connections, windows, occupancy, per-request
-//! spans) reports into the server's shared
-//! [`Recorder`](crate::obs::Recorder); a `Stats` frame scrapes a full
-//! [`Metrics`](crate::obs::Metrics) snapshot from the reader thread
-//! without touching the dispatcher.
+//! Every wire-path event (connections, adopted connections, windows,
+//! occupancy, per-lane queue depths, per-request spans) reports into
+//! the server's shared [`Recorder`](crate::obs::Recorder); a `Stats`
+//! frame scrapes a full [`Metrics`](crate::obs::Metrics) snapshot on
+//! the reader core without touching any dispatcher lane.
 //!
 //! [`CpmServer`]: crate::coordinator::CpmServer
 //! [`CpmServer::handle_batch`]: crate::coordinator::CpmServer::handle_batch
 #![warn(missing_docs)]
 
 pub mod client;
+pub mod poll;
 pub mod server;
 pub mod window;
 pub mod wire;
 
 pub use client::{CpmClient, MAX_IN_FLIGHT};
 pub use server::{NetConfig, NetServer};
-pub use window::{AdmissionQueue, WindowConfig};
+pub use window::{AdmissionQueue, TryPush, WindowConfig};
 pub use wire::ClientMsg;

@@ -1,0 +1,333 @@
+//! Level-triggered readiness over `poll(2)` — the std-only shim the
+//! reader cores multiplex their nonblocking sockets through.
+//!
+//! The crate promise is zero default dependencies, so there is no
+//! `libc` crate here: on unix this module hand-declares the few bytes
+//! of FFI surface it needs — the `pollfd` layout and the `poll(2)`
+//! entry point, both fixed by POSIX and identical across the unix
+//! targets this crate builds on — and std already links the platform
+//! libc, so the symbol resolves with no build-system work. On non-unix
+//! targets the shim degrades to a bounded sleep that reports every
+//! registered socket as ready per its interest: with *nonblocking*
+//! sockets under *level-triggered* semantics, spurious readiness is
+//! harmless (the next read/write just returns `WouldBlock`); only a
+//! *missed* readiness would be a correctness bug, and the fallback
+//! never misses.
+//!
+//! The API is deliberately tiny and allocation-shy: callers keep a
+//! [`Poller`] (which owns the reusable `pollfd` scratch vector) and a
+//! slice of [`PollEntry`] values they rebuild per tick; one
+//! [`Poller::poll`] call fills in each entry's [`Readiness`].
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// The socket handle type readiness is polled on: a raw fd on unix, an
+/// opaque (ignored) token elsewhere.
+#[cfg(unix)]
+pub type SockFd = std::os::fd::RawFd;
+
+/// The socket handle type readiness is polled on: a raw fd on unix, an
+/// opaque (ignored) token elsewhere.
+#[cfg(not(unix))]
+pub type SockFd = u64;
+
+/// The raw handle of a socket, for registering it in a [`PollEntry`].
+#[cfg(unix)]
+pub fn fd_of(stream: &TcpStream) -> SockFd {
+    use std::os::fd::AsRawFd;
+    stream.as_raw_fd()
+}
+
+/// The raw handle of a socket, for registering it in a [`PollEntry`].
+#[cfg(all(not(unix), windows))]
+pub fn fd_of(stream: &TcpStream) -> SockFd {
+    use std::os::windows::io::AsRawSocket;
+    stream.as_raw_socket()
+}
+
+/// The raw handle of a socket, for registering it in a [`PollEntry`].
+/// On targets with neither fds nor sockets the handle is unused (the
+/// sleep-tick fallback reports readiness without consulting it).
+#[cfg(all(not(unix), not(windows)))]
+pub fn fd_of(_stream: &TcpStream) -> SockFd {
+    0
+}
+
+/// What a caller wants to hear about one socket.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Interest {
+    /// Wake when the socket is readable (or the peer hung up — a
+    /// hangup is delivered as read-readiness so the reader observes
+    /// the EOF).
+    pub read: bool,
+    /// Wake when the socket accepts more outbound bytes.
+    pub write: bool,
+}
+
+impl Interest {
+    /// Neither read nor write — the entry only reports errors/hangups.
+    pub fn none() -> Self {
+        Interest::default()
+    }
+
+    /// True if no readiness was requested.
+    pub fn is_none(&self) -> bool {
+        !self.read && !self.write
+    }
+}
+
+/// What the poll reported about one socket. Level-triggered: the same
+/// condition reports again on the next poll until the caller consumes
+/// it (reads to `WouldBlock`, writes to `WouldBlock`, or drops the
+/// connection).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Readiness {
+    /// Readable now (data, EOF, or an error the next read will surface).
+    pub read: bool,
+    /// Writable now.
+    pub write: bool,
+    /// The peer hung up or the fd is in an error state; reads/writes
+    /// will surface the specific error. Also sets `read`.
+    pub hangup: bool,
+}
+
+impl Readiness {
+    /// True if anything at all was reported.
+    pub fn any(&self) -> bool {
+        self.read || self.write || self.hangup
+    }
+}
+
+/// One registered socket for a poll tick: its handle, what the caller
+/// cares about, and (after [`Poller::poll`]) what was reported.
+#[derive(Debug, Clone, Copy)]
+pub struct PollEntry {
+    /// The socket handle ([`fd_of`]).
+    pub fd: SockFd,
+    /// Requested wakeup conditions.
+    pub interest: Interest,
+    /// Reported conditions; overwritten by every [`Poller::poll`] call.
+    pub ready: Readiness,
+}
+
+impl PollEntry {
+    /// A fresh entry with no readiness reported yet.
+    pub fn new(fd: SockFd, interest: Interest) -> Self {
+        PollEntry {
+            fd,
+            interest,
+            ready: Readiness::default(),
+        }
+    }
+}
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_short};
+
+    // POSIX nfds_t: unsigned long on the glibc/musl targets, unsigned
+    // int on the BSD-derived ones. Either way the value is a small
+    // entry count, so the widest unsigned type per target is safe.
+    #[cfg(any(target_os = "macos", target_os = "ios", target_os = "freebsd"))]
+    pub type NFds = std::os::raw::c_uint;
+    #[cfg(not(any(target_os = "macos", target_os = "ios", target_os = "freebsd")))]
+    pub type NFds = std::os::raw::c_ulong;
+
+    /// The POSIX `struct pollfd` layout (identical on every unix this
+    /// crate targets; the constants below likewise).
+    #[repr(C)]
+    #[derive(Debug, Clone, Copy)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: c_short,
+        pub revents: c_short,
+    }
+
+    pub const POLLIN: c_short = 0x001;
+    pub const POLLOUT: c_short = 0x004;
+    pub const POLLERR: c_short = 0x008;
+    pub const POLLHUP: c_short = 0x010;
+    pub const POLLNVAL: c_short = 0x020;
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: NFds, timeout: c_int) -> c_int;
+    }
+}
+
+/// Reusable poll state: owns the `pollfd` scratch buffer so a steady
+/// tick loop allocates nothing.
+#[derive(Debug, Default)]
+pub struct Poller {
+    #[cfg(unix)]
+    scratch: Vec<sys::PollFd>,
+}
+
+impl Poller {
+    /// A fresh poller.
+    pub fn new() -> Self {
+        Poller::default()
+    }
+
+    /// Block until at least one entry is ready or `timeout` elapses,
+    /// then fill in every entry's [`Readiness`]. Returns how many
+    /// entries reported anything. A signal interruption reports as
+    /// zero ready entries (the caller's tick loop just re-polls).
+    #[cfg(unix)]
+    pub fn poll(&mut self, entries: &mut [PollEntry], timeout: Duration) -> std::io::Result<usize> {
+        use sys::{POLLERR, POLLHUP, POLLIN, POLLNVAL, POLLOUT};
+        self.scratch.clear();
+        for e in entries.iter_mut() {
+            e.ready = Readiness::default();
+            let mut events = 0;
+            if e.interest.read {
+                events |= POLLIN;
+            }
+            if e.interest.write {
+                events |= POLLOUT;
+            }
+            self.scratch.push(sys::PollFd {
+                fd: e.fd,
+                events,
+                revents: 0,
+            });
+        }
+        let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+        let ms = if ms == 0 && !timeout.is_zero() { 1 } else { ms };
+        let rc = unsafe {
+            sys::poll(
+                self.scratch.as_mut_ptr(),
+                self.scratch.len() as sys::NFds,
+                ms,
+            )
+        };
+        if rc < 0 {
+            let err = std::io::Error::last_os_error();
+            if err.kind() == std::io::ErrorKind::Interrupted {
+                return Ok(0);
+            }
+            return Err(err);
+        }
+        let mut ready = 0usize;
+        for (e, p) in entries.iter_mut().zip(&self.scratch) {
+            let r = p.revents;
+            // Errors and hangups are delivered regardless of the
+            // requested events; fold them into read-readiness so the
+            // owner's next read surfaces EOF / the error.
+            e.ready.hangup = r & (POLLHUP | POLLERR | POLLNVAL) != 0;
+            e.ready.read = r & POLLIN != 0 || e.ready.hangup;
+            e.ready.write = r & POLLOUT != 0;
+            if e.ready.any() {
+                ready += 1;
+            }
+        }
+        Ok(ready)
+    }
+
+    /// Fallback for targets without `poll(2)`: sleep a bounded tick,
+    /// then report every entry ready per its interest. Spurious
+    /// readiness is safe — the sockets are nonblocking, so a reader
+    /// that was not actually ready just sees `WouldBlock` — and no
+    /// readiness is ever missed.
+    #[cfg(not(unix))]
+    pub fn poll(&mut self, entries: &mut [PollEntry], timeout: Duration) -> std::io::Result<usize> {
+        std::thread::sleep(timeout.min(Duration::from_millis(1)));
+        for e in entries.iter_mut() {
+            e.ready = Readiness {
+                read: e.interest.read,
+                write: e.interest.write,
+                hangup: false,
+            };
+        }
+        Ok(entries.iter().filter(|e| e.ready.any()).count())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::TcpListener;
+
+    #[cfg(unix)]
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (b, _) = listener.accept().unwrap();
+        a.set_nonblocking(true).unwrap();
+        b.set_nonblocking(true).unwrap();
+        (a, b)
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn fresh_socket_is_write_ready_not_read_ready() {
+        let (a, _b) = pair();
+        let mut poller = Poller::new();
+        let mut entries = [PollEntry::new(
+            fd_of(&a),
+            Interest {
+                read: true,
+                write: true,
+            },
+        )];
+        let n = poller.poll(&mut entries, Duration::from_millis(200)).unwrap();
+        assert_eq!(n, 1);
+        assert!(entries[0].ready.write, "fresh socket must accept writes");
+        assert!(!entries[0].ready.read, "nothing was sent yet");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn read_readiness_follows_peer_write_and_levels_until_drained() {
+        let (a, mut b) = pair();
+        let mut poller = Poller::new();
+        let interest = Interest {
+            read: true,
+            write: false,
+        };
+        let mut entries = [PollEntry::new(fd_of(&a), interest)];
+        // Quiet socket: the poll times out with nothing ready.
+        let n = poller.poll(&mut entries, Duration::from_millis(20)).unwrap();
+        assert_eq!(n, 0);
+        b.write_all(b"ping").unwrap();
+        // Level-triggered: readiness reports on every poll until read.
+        for _ in 0..2 {
+            let n = poller.poll(&mut entries, Duration::from_secs(5)).unwrap();
+            assert_eq!(n, 1);
+            assert!(entries[0].ready.read);
+        }
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn peer_close_reports_as_read_readiness() {
+        let (a, b) = pair();
+        drop(b);
+        let mut poller = Poller::new();
+        let mut entries = [PollEntry::new(
+            fd_of(&a),
+            Interest {
+                read: true,
+                write: false,
+            },
+        )];
+        let n = poller.poll(&mut entries, Duration::from_secs(5)).unwrap();
+        assert_eq!(n, 1);
+        assert!(
+            entries[0].ready.read,
+            "hangup must surface as read-readiness so the owner sees EOF"
+        );
+    }
+
+    #[test]
+    fn empty_entry_set_just_sleeps_the_timeout() {
+        let mut poller = Poller::new();
+        let started = std::time::Instant::now();
+        let n = poller.poll(&mut [], Duration::from_millis(30)).unwrap();
+        assert_eq!(n, 0);
+        // Lower bound only: CI schedulers can oversleep freely.
+        assert!(started.elapsed() >= Duration::from_millis(1));
+        let _ = TcpListener::bind("127.0.0.1:0").unwrap(); // keep import used on non-unix
+    }
+}

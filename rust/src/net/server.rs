@@ -1,40 +1,62 @@
-//! The std-only TCP front-end: accept loop, connection threads, and the
-//! batching dispatcher.
+//! The std-only TCP front-end: a readiness-driven connection tier.
 //!
-//! Topology: one *accept* thread turns incoming connections into
-//! per-connection *reader* threads; readers decode frames
-//! ([`wire`](crate::net::wire)) and push admitted requests into the
-//! shared [`AdmissionQueue`]; one *dispatcher* thread owns the
-//! [`CpmServer`] outright (no lock on the serve path), drains the queue
-//! window by window, executes each window as a single
-//! [`CpmServer::handle_batch`] call, and writes each reply frame back to
-//! the originating connection. Responses carry the client-assigned
-//! request id, so clients may pipeline freely.
+//! Topology: one *accept* thread hands incoming connections to a small
+//! fixed set of *reader cores* — each a thread multiplexing hundreds of
+//! nonblocking sockets through the level-triggered
+//! [`poll`](crate::net::poll) shim — which decode frames incrementally
+//! ([`wire::FrameBuf`]), resolve the pinned tenant, and admit requests
+//! into per-core-assigned *dispatcher lanes*. Each lane is an
+//! [`AdmissionQueue`] with round-robin tenant fairness drained by its
+//! own dispatcher thread; dispatchers share the [`CpmServer`] behind a
+//! mutex held for exactly the [`CpmServer::handle_batch`] call, so
+//! device execution serializes while windowing, encode, and reply
+//! enqueue overlap across lanes. Replies are *enqueued* onto the owning
+//! connection's outbound buffer and flushed by its reader core — the
+//! dispatcher never writes to a socket and therefore never blocks on a
+//! slow peer. Responses carry the client-assigned request id, so
+//! clients may pipeline freely.
 //!
-//! Per-connection state is exactly one value: the *pinned tenant* (set by
-//! a `Hello` frame, defaulting to
-//! [`DEFAULT_TENANT`](crate::coordinator::DEFAULT_TENANT)). Requests that
-//! carry no explicit tenant are attributed to it.
+//! Thread count is flat in the connection count: `reader_cores` +
+//! `dispatch_lanes` + 1 accept thread serve any number of connections
+//! up to `max_connections`.
+//!
+//! Per-connection state held by a core: the *pinned tenant* (set by a
+//! `Hello` frame, defaulting to
+//! [`DEFAULT_TENANT`](crate::coordinator::DEFAULT_TENANT)), a
+//! [`wire::FrameBuf`] resuming partially-read frames across readiness
+//! ticks, the outbound reply buffer, and at most one *parked* request
+//! (admission backpressure: when the connection's lane is full, the
+//! core stops reading that socket — TCP flow control pushes back on the
+//! peer — and retries the parked request every tick until it admits).
+//!
+//! Ordering: requests from one connection to one tenant are admitted,
+//! executed, and answered in arrival order (they share a lane FIFO). A
+//! single connection interleaving *explicit* tenant overrides may see
+//! its requests reordered across tenants by lane fairness; replies are
+//! matched by id, so clients observe this only as reply order.
 //!
 //! Every stage reports into the server's shared
 //! [`Recorder`](crate::obs::Recorder): the accept loop counts
-//! connections, the dispatcher counts windows and closes one span per
-//! request (wait → exec → write, stamped from the arrival `Instant` the
-//! reader took at frame-decode time), and `Stats` scrapes are answered
-//! *by the reader thread itself* from a lock-cheap snapshot — a scrape
-//! never queues behind the admission window and never blocks the
-//! dispatcher.
+//! connections, cores count adopted connections
+//! (`connections_multiplexed`), dispatchers count windows and close one
+//! span per request (wait → exec → write, stamped from the arrival
+//! `Instant` the core took at frame-decode time; the write stage is the
+//! reply's encode + enqueue slice, since the socket write happens
+//! asynchronously on the core), and `Stats` scrapes are answered *on
+//! the reader core* from a lock-cheap snapshot — a scrape never queues
+//! behind the admission window and never blocks a dispatcher.
 //!
 //! Shutdown is graceful and drains: [`NetServer::shutdown`] closes the
-//! admission queue (already-admitted requests are still answered), wakes
-//! and joins every thread, and hands the `CpmServer` back to the caller;
-//! everything the wire path counted is already in the recorder, so
-//! [`CpmServer::metrics`] reflects the whole run with no fold-in step.
+//! lanes (already-admitted requests are still answered), joins the
+//! dispatchers, then flips the cores into drain mode — they flush every
+//! connection's outbound buffer (bounded by `write_timeout`) before
+//! exiting — and hands the `CpmServer` back to the caller.
 
+use std::collections::VecDeque;
 use std::io::{self, Read, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -43,8 +65,22 @@ use crate::device::computable::WorkerPool;
 use crate::error::{CpmError, Result};
 use crate::obs::{Recorder, SpanEvent};
 
-use super::window::{AdmissionQueue, WindowConfig};
-use super::wire::{self, ClientMsg};
+use super::poll::{fd_of, Interest, PollEntry, Poller};
+use super::window::{AdmissionQueue, TryPush, WindowConfig};
+use super::wire::{self, ClientMsg, FrameBuf};
+
+/// Per-connection outbound buffer cap. A peer that stops draining
+/// replies accumulates at most this many queued bytes before the
+/// connection is declared dead and reaped — the bound that lets
+/// [`ConnShared::send`] never block.
+const MAX_OUTBOUND: usize = 128 * 1024 * 1024;
+
+/// Most bytes one connection may read per readiness tick, so a
+/// firehosing peer cannot starve its core's other connections.
+const READ_BUDGET: usize = 256 * 1024;
+
+/// Read chunk size (one scratch buffer per core, reused every tick).
+const READ_CHUNK: usize = 64 * 1024;
 
 /// TCP front-end configuration.
 #[derive(Debug, Clone)]
@@ -52,22 +88,29 @@ pub struct NetConfig {
     /// Bind address; port 0 picks an ephemeral port (read it back with
     /// [`NetServer::addr`]).
     pub addr: String,
-    /// Admission-window policy.
+    /// Admission-window policy (shared by every dispatcher lane).
     pub window: WindowConfig,
-    /// Socket read timeout used by reader threads to poll the shutdown
-    /// flag; bounds how long shutdown can take, not request latency.
+    /// Readiness-poll tick: the longest a reader core sleeps when no
+    /// socket reports anything. Bounds shutdown and parked-admission
+    /// retry latency, not request latency (readiness wakes the poll).
     pub read_poll: Duration,
-    /// Hard wall-clock bound on writing one reply frame. A peer that
-    /// cannot absorb a reply within this bound — stopped reading, or
-    /// draining a byte at a time — fails the write and is disconnected,
-    /// so it can stall the dispatcher for at most this long instead of
-    /// indefinitely.
+    /// Hard wall-clock bound on flushing one queued reply frame to a
+    /// peer. A peer that cannot absorb the frame within this bound —
+    /// stopped reading, or draining a byte at a time — is disconnected,
+    /// so it holds per-connection buffer, never a thread.
     pub write_timeout: Duration,
-    /// Cap on concurrently served connections (one reader thread each).
-    /// Connections past the cap are accepted and immediately closed, so
-    /// thread count and per-reader buffers stay bounded under a
-    /// connection flood.
+    /// Cap on concurrently served connections. Connections past the cap
+    /// are accepted and immediately closed, so per-connection buffers
+    /// stay bounded under a connection flood (thread count is flat
+    /// regardless — see `reader_cores`).
     pub max_connections: usize,
+    /// Reader cores: fixed threads multiplexing all connections via the
+    /// readiness poll. Values below 1 are treated as 1.
+    pub reader_cores: usize,
+    /// Dispatcher lanes: independent admission queues + dispatcher
+    /// threads feeding the server. Connections are assigned round-robin
+    /// at accept. Values below 1 are treated as 1.
+    pub dispatch_lanes: usize,
 }
 
 impl Default for NetConfig {
@@ -78,32 +121,115 @@ impl Default for NetConfig {
             read_poll: Duration::from_millis(25),
             write_timeout: Duration::from_secs(5),
             max_connections: 1024,
+            reader_cores: 4,
+            dispatch_lanes: 2,
         }
     }
 }
 
-/// The write half of one connection, shared between the dispatcher
-/// (request replies) and the connection's own reader thread (`Stats`
-/// replies). The mutex keeps the two writers' frames from interleaving
-/// on the wire; it is uncontended unless a scrape lands mid-reply.
-#[derive(Debug)]
-struct ConnShared {
-    stream: TcpStream,
-    write: Mutex<()>,
+/// Lock a mutex, riding through poisoning (serving threads must survive
+/// a panicked peer thread; the guarded state is counters and buffers).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
 }
 
-impl ConnShared {
-    /// Write one reply frame under the interleaving lock and the hard
-    /// wall-clock deadline.
-    fn write(&self, frame: &[u8], timeout: Duration) -> io::Result<()> {
-        let _guard = self.write.lock().unwrap_or_else(|p| p.into_inner());
-        write_deadline(&self.stream, frame, timeout)
+/// A core's connection-injection queue: sockets handed over by the
+/// accept thread, tagged with their dispatcher-lane assignment.
+type Injector = Arc<Mutex<Vec<(TcpStream, usize)>>>;
+
+/// Wakes one reader core out of its readiness poll. Built on a loopback
+/// socket pair so the wake lands *in* the poll set (std exposes no
+/// pipes); the `pending` flag coalesces bursts to at most one in-flight
+/// wake byte.
+#[derive(Debug)]
+struct Waker {
+    tx: TcpStream,
+    pending: AtomicBool,
+}
+
+impl Waker {
+    fn wake(&self) {
+        if !self.pending.swap(true, Ordering::AcqRel) {
+            let _ = (&self.tx).write(&[1u8]);
+        }
     }
 }
 
-/// One admitted request waiting in the window: the reply route (id +
-/// shared write half), the addressed operation, and the arrival stamp
-/// taken by the reader at frame-decode time. The same stamp drives the
+/// A connected loopback pair for a core's waker: `tx` is the senders'
+/// half, `rx` sits in the core's poll set.
+fn wake_pair() -> io::Result<(TcpStream, TcpStream)> {
+    let listener = TcpListener::bind((Ipv4Addr::LOCALHOST, 0))?;
+    let tx = TcpStream::connect(listener.local_addr()?)?;
+    let tx_addr = tx.local_addr()?;
+    loop {
+        let (rx, peer) = listener.accept()?;
+        // Guard against a stray local connection racing onto the
+        // ephemeral port: only pair with our own connect.
+        if peer != tx_addr {
+            continue;
+        }
+        tx.set_nonblocking(true)?;
+        rx.set_nonblocking(true)?;
+        let _ = tx.set_nodelay(true);
+        return Ok((tx, rx));
+    }
+}
+
+/// Queued-but-unwritten reply bytes for one connection. Frames are
+/// written head-first with a partial-write offset, so a flush can stop
+/// at `WouldBlock` mid-frame and resume next tick.
+#[derive(Debug, Default)]
+struct Outbound {
+    frames: VecDeque<Vec<u8>>,
+    /// Bytes of the head frame already written.
+    head_off: usize,
+    /// Total queued bytes (cap accounting).
+    bytes: usize,
+    /// Set when the connection is dead or its buffer overflowed; the
+    /// owning core reaps it on the next tick.
+    closed: bool,
+}
+
+/// The reply route for one connection, shared between its reader core
+/// (which flushes) and the dispatcher lanes (which enqueue).
+#[derive(Debug)]
+struct ConnShared {
+    out: Mutex<Outbound>,
+    waker: Arc<Waker>,
+}
+
+impl ConnShared {
+    /// Enqueue one reply frame and wake the owning core to flush it.
+    /// Never blocks: a peer that stopped draining accumulates queued
+    /// bytes up to [`MAX_OUTBOUND`], after which the connection is
+    /// marked dead for its core to reap. Returns whether the frame was
+    /// queued.
+    fn send(&self, frame: Vec<u8>) -> bool {
+        let queued = {
+            let mut out = lock(&self.out);
+            if out.closed {
+                return false;
+            }
+            if out.bytes + frame.len() > MAX_OUTBOUND {
+                out.closed = true;
+                out.frames.clear();
+                out.bytes = 0;
+                out.head_off = 0;
+                false
+            } else {
+                out.bytes += frame.len();
+                out.frames.push_back(frame);
+                true
+            }
+        };
+        self.waker.wake();
+        queued
+    }
+}
+
+/// One admitted request waiting in a lane: the reply route (id + shared
+/// outbound), the addressed operation, and the arrival stamp taken by
+/// the core at frame-decode time. The same stamp drives the
 /// admission-window deadline and the span ledger's wait stage, so the
 /// stages decompose against one clock read.
 #[derive(Debug)]
@@ -118,75 +244,142 @@ struct Pending {
 /// [`NetServer::shutdown`] leaves the serving threads running until
 /// process exit — always shut down to stop the listener and recover the
 /// [`CpmServer`] (with its metrics).
-#[derive(Debug)]
 pub struct NetServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
-    queue: Arc<AdmissionQueue<Pending>>,
+    draining: Arc<AtomicBool>,
+    lanes: Vec<Arc<AdmissionQueue<Pending>>>,
     recorder: Arc<Recorder>,
-    readers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    server: Arc<Mutex<CpmServer>>,
+    wakers: Vec<Arc<Waker>>,
+    cores: Vec<JoinHandle<()>>,
+    dispatchers: Vec<JoinHandle<()>>,
     accept: Option<JoinHandle<()>>,
-    dispatch: Option<JoinHandle<CpmServer>>,
+}
+
+impl std::fmt::Debug for NetServer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("NetServer")
+            .field("addr", &self.addr)
+            .field("reader_cores", &self.cores.len())
+            .field("dispatch_lanes", &self.lanes.len())
+            .finish_non_exhaustive()
+    }
 }
 
 impl NetServer {
     /// Bind `cfg.addr` and start serving `server` over TCP. The server
-    /// moves into the dispatcher thread; get it back from
+    /// moves behind the dispatcher lanes' shared lock; get it back from
     /// [`NetServer::shutdown`]. Its [`Recorder`] stays shared, so live
     /// metrics are scrapable the whole time it serves.
     pub fn spawn(server: CpmServer, cfg: NetConfig) -> Result<NetServer> {
         let listener = TcpListener::bind(&cfg.addr)?;
         let addr = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let queue = Arc::new(AdmissionQueue::new(cfg.window));
-        let readers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
-        // Cloned out before the server moves into the dispatcher: readers
+        let reader_cores = cfg.reader_cores.max(1);
+        let dispatch_lanes = cfg.dispatch_lanes.max(1);
+        // Cloned out before the server moves behind the lock: cores
         // answer scrapes from the recorder and sample worker-pool gauges
         // without ever touching the CpmServer itself.
         let recorder = server.recorder();
         let pool = server.exec().worker_pool().clone();
+        recorder.set_reader_cores(reader_cores as u64);
 
-        let dispatch = {
-            let queue = Arc::clone(&queue);
-            let write_timeout = cfg.write_timeout;
-            std::thread::Builder::new()
-                .name("cpm-net-dispatch".to_string())
-                .spawn(move || dispatch_loop(server, &queue, write_timeout))?
+        let mut net = NetServer {
+            addr,
+            stop: Arc::new(AtomicBool::new(false)),
+            draining: Arc::new(AtomicBool::new(false)),
+            lanes: (0..dispatch_lanes)
+                .map(|_| Arc::new(AdmissionQueue::new(cfg.window)))
+                .collect(),
+            recorder,
+            server: Arc::new(Mutex::new(server)),
+            wakers: Vec::with_capacity(reader_cores),
+            cores: Vec::with_capacity(reader_cores),
+            dispatchers: Vec::with_capacity(dispatch_lanes),
+            accept: None,
         };
-        let accept = {
-            let stop = Arc::clone(&stop);
-            let queue = Arc::clone(&queue);
-            let readers = Arc::clone(&readers);
-            let ctx = ReaderCtx {
-                recorder: Arc::clone(&recorder),
-                pool,
-                read_poll: cfg.read_poll,
+        let active = Arc::new(AtomicU64::new(0));
+        let mut injectors: Vec<Injector> = Vec::with_capacity(reader_cores);
+
+        for i in 0..reader_cores {
+            let (tx, rx) = match wake_pair() {
+                Ok(pair) => pair,
+                Err(e) => {
+                    net.teardown();
+                    return Err(e.into());
+                }
+            };
+            let waker = Arc::new(Waker {
+                tx,
+                pending: AtomicBool::new(false),
+            });
+            let injected: Injector = Arc::new(Mutex::new(Vec::new()));
+            let ctx = CoreCtx {
+                rx,
+                waker: Arc::clone(&waker),
+                injected: Arc::clone(&injected),
+                lanes: net.lanes.clone(),
+                recorder: Arc::clone(&net.recorder),
+                pool: pool.clone(),
+                draining: Arc::clone(&net.draining),
+                active: Arc::clone(&active),
+                tick: cfg.read_poll,
                 write_timeout: cfg.write_timeout,
-                max_connections: cfg.max_connections,
             };
             let spawned = std::thread::Builder::new()
-                .name("cpm-net-accept".to_string())
-                .spawn(move || accept_loop(&listener, &stop, &queue, &readers, ctx));
+                .name(format!("cpm-net-read{i}"))
+                .spawn(move || core_loop(ctx));
             match spawned {
-                Ok(h) => h,
+                Ok(h) => {
+                    net.cores.push(h);
+                    net.wakers.push(waker);
+                    injectors.push(injected);
+                }
                 Err(e) => {
-                    // The dispatcher already owns the CpmServer; unwind it
-                    // rather than leaking the thread and the server.
-                    queue.close();
-                    let _ = dispatch.join();
+                    net.teardown();
                     return Err(e.into());
                 }
             }
+        }
+
+        let lane_handles = net.lanes.clone();
+        for (i, lane) in lane_handles.into_iter().enumerate() {
+            let server = Arc::clone(&net.server);
+            let recorder = Arc::clone(&net.recorder);
+            let spawned = std::thread::Builder::new()
+                .name(format!("cpm-net-lane{i}"))
+                .spawn(move || dispatch_loop(&server, &lane, &recorder));
+            match spawned {
+                Ok(h) => net.dispatchers.push(h),
+                Err(e) => {
+                    net.teardown();
+                    return Err(e.into());
+                }
+            }
+        }
+
+        let spawned = {
+            let stop = Arc::clone(&net.stop);
+            let ctx = AcceptCtx {
+                recorder: Arc::clone(&net.recorder),
+                active,
+                injectors,
+                wakers: net.wakers.clone(),
+                dispatch_lanes,
+                max_connections: cfg.max_connections,
+            };
+            std::thread::Builder::new()
+                .name("cpm-net-accept".to_string())
+                .spawn(move || accept_loop(&listener, &stop, ctx))
         };
-        Ok(NetServer {
-            addr,
-            stop,
-            queue,
-            recorder,
-            readers,
-            accept: Some(accept),
-            dispatch: Some(dispatch),
-        })
+        match spawned {
+            Ok(h) => net.accept = Some(h),
+            Err(e) => {
+                net.teardown();
+                return Err(e.into());
+            }
+        }
+        Ok(net)
     }
 
     /// The bound address (resolves port 0).
@@ -200,41 +393,59 @@ impl NetServer {
         Arc::clone(&self.recorder)
     }
 
-    /// Stop accepting, drain already-admitted requests, join every
-    /// thread, and return the `CpmServer`. All wire activity is already
-    /// in its recorder; read it with [`CpmServer::metrics`].
+    /// Stop accepting, drain already-admitted requests and queued reply
+    /// bytes, join every thread, and return the `CpmServer`. All wire
+    /// activity is already in its recorder; read it with
+    /// [`CpmServer::metrics`].
     pub fn shutdown(mut self) -> CpmServer {
+        self.teardown();
+        let NetServer { server, .. } = self;
+        let Ok(m) = Arc::try_unwrap(server) else {
+            panic!("serving threads joined but a CpmServer handle leaked");
+        };
+        m.into_inner().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Ordered stop: close the lanes (admitted requests still get
+    /// answered), wake + join accept, join the dispatchers (their last
+    /// replies land in outbound buffers), then flip cores into drain
+    /// mode so those buffers flush before the cores exit. Also the
+    /// unwind path for a half-built `spawn`.
+    fn teardown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        self.queue.close();
-        // Wake the accept loop with a throwaway connection; it checks the
-        // stop flag right after `accept` returns. A wildcard bind address
-        // is not connectable everywhere, so aim at loopback instead.
-        let mut wake = self.addr;
-        match wake.ip() {
-            IpAddr::V4(ip) if ip.is_unspecified() => {
-                wake.set_ip(IpAddr::V4(Ipv4Addr::LOCALHOST));
-            }
-            IpAddr::V6(ip) if ip.is_unspecified() => {
-                wake.set_ip(IpAddr::V6(Ipv6Addr::LOCALHOST));
-            }
-            _ => {}
+        for lane in &self.lanes {
+            lane.close();
         }
-        let _ = TcpStream::connect(wake);
+        if self.accept.is_some() {
+            // Wake the accept loop with a throwaway connection; it
+            // checks the stop flag right after `accept` returns. A
+            // wildcard bind address is not connectable everywhere, so
+            // aim at loopback instead.
+            let mut wake = self.addr;
+            match wake.ip() {
+                IpAddr::V4(ip) if ip.is_unspecified() => {
+                    wake.set_ip(IpAddr::V4(Ipv4Addr::LOCALHOST));
+                }
+                IpAddr::V6(ip) if ip.is_unspecified() => {
+                    wake.set_ip(IpAddr::V6(Ipv6Addr::LOCALHOST));
+                }
+                _ => {}
+            }
+            let _ = TcpStream::connect(wake);
+        }
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
-        let readers: Vec<JoinHandle<()>> = {
-            let mut guard = self.readers.lock().expect("reader registry poisoned");
-            guard.drain(..).collect()
-        };
-        for h in readers {
+        for h in self.dispatchers.drain(..) {
             let _ = h.join();
         }
-        self.dispatch
-            .take()
-            .expect("shutdown runs once")
-            .join()
-            .expect("dispatcher thread panicked")
+        self.draining.store(true, Ordering::Relaxed);
+        for w in &self.wakers {
+            w.wake();
+        }
+        for h in self.cores.drain(..) {
+            let _ = h.join();
+        }
     }
 }
 
@@ -255,45 +466,49 @@ fn encode_reply_frame(id: u64, result: &Result<Response>) -> Option<Vec<u8>> {
     }
 }
 
-/// The dispatcher: drains admission windows, executes each as one batch,
-/// routes reply frames back per connection, and closes one span per
-/// request in the recorder.
-fn dispatch_loop(
-    mut server: CpmServer,
-    queue: &AdmissionQueue<Pending>,
-    write_timeout: Duration,
-) -> CpmServer {
-    let recorder = server.recorder();
-    while let Some(pending) = queue.next_window() {
+/// One dispatcher lane: drains its admission queue window by window,
+/// executes each window as one batch under the shared server lock,
+/// enqueues reply frames onto the owning connections (never blocking on
+/// a socket), and closes one span per request in the recorder.
+fn dispatch_loop(server: &Mutex<CpmServer>, lane: &AdmissionQueue<Pending>, recorder: &Recorder) {
+    while let Some(pending) = lane.next_window() {
         let window_len = pending.len();
         recorder.window_dispatched(window_len as u64);
         let dispatched = Instant::now();
-        let cycles_before = recorder.device_cycles_total();
         let mut routes = Vec::with_capacity(window_len);
         let mut batch = Vec::with_capacity(window_len);
         for p in pending {
             routes.push((p.id, p.reply, p.arrived));
             batch.push(p.req);
         }
-        let results = server.handle_batch(&batch);
+        // Exclusive server access for exactly the batch call: lanes
+        // serialize on device execution but overlap their windowing,
+        // encode, and enqueue phases. The device-cycle delta is read
+        // under the same access, so it is exact even with multiple
+        // lanes executing.
+        let (results, device_cycles) = {
+            let mut srv = lock(server);
+            let cycles_before = recorder.device_cycles_total();
+            let results = srv.handle_batch(&batch);
+            (results, recorder.device_cycles_total() - cycles_before)
+        };
         let executed = Instant::now();
-        // The batch runs as one unit, so exec time and modeled device
-        // cycles are window-level figures stamped onto each member's span.
-        let device_cycles = recorder.device_cycles_total() - cycles_before;
+        // The batch runs as one unit, so exec time (including any wait
+        // for another lane's batch) and modeled device cycles are
+        // window-level figures stamped onto each member's span.
         let exec_ns = executed.duration_since(dispatched).as_nanos() as u64;
-        // Each reply's write stage is its slice of the write phase,
+        // Each reply's write stage is its encode + enqueue slice,
         // measured from the previous reply's completion — the window's
         // write stages sum to the whole phase with no double counting.
+        // The socket write itself happens asynchronously on the
+        // connection's reader core.
         let mut write_from = executed;
         for ((id, reply, arrived), result) in routes.into_iter().zip(results) {
             if let Some(frame) = encode_reply_frame(id, &result) {
                 // A dead or too-slow peer is not a server error: the
-                // write carries a hard wall-clock deadline, and on
-                // failure the peer is disconnected so later replies to it
-                // fail fast instead of re-paying the timeout.
-                if reply.write(&frame, write_timeout).is_err() {
-                    let _ = reply.stream.shutdown(Shutdown::Both);
-                }
+                // enqueue is dropped once the connection's outbound is
+                // closed, and the core reaps the connection.
+                let _ = reply.send(frame);
             }
             let done = Instant::now();
             let wait_ns = dispatched.saturating_duration_since(arrived).as_nanos() as u64;
@@ -308,67 +523,23 @@ fn dispatch_loop(
             ));
         }
     }
-    server
 }
 
-/// Write `bytes` to the peer under a hard wall-clock deadline. Unlike a
-/// bare socket write timeout — which restarts whenever any bytes move —
-/// this bounds the *total* time, so a peer draining one byte per second
-/// cannot hold the dispatcher beyond `timeout`.
-fn write_deadline(stream: &TcpStream, bytes: &[u8], timeout: Duration) -> io::Result<()> {
-    let deadline = Instant::now() + timeout;
-    let mut writer = stream;
-    let mut off = 0;
-    while off < bytes.len() {
-        let now = Instant::now();
-        if now >= deadline {
-            return Err(io::Error::new(
-                io::ErrorKind::TimedOut,
-                "reply write deadline exceeded",
-            ));
-        }
-        stream.set_write_timeout(Some(deadline - now))?;
-        match writer.write(&bytes[off..]) {
-            Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
-            Ok(n) => off += n,
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    io::ErrorKind::WouldBlock
-                        | io::ErrorKind::TimedOut
-                        | io::ErrorKind::Interrupted
-                ) =>
-            {
-                continue;
-            }
-            Err(e) => return Err(e),
-        }
-    }
-    writer.flush()
-}
-
-/// Shared context carried into the accept thread and cloned into each
-/// connection's reader: the recorder (connection counting, scrape
-/// answers), a worker-pool handle (gauge sampling), and the socket knobs.
-#[derive(Clone)]
-struct ReaderCtx {
+/// Context carried into the accept thread.
+struct AcceptCtx {
     recorder: Arc<Recorder>,
-    pool: WorkerPool,
-    read_poll: Duration,
-    write_timeout: Duration,
+    active: Arc<AtomicU64>,
+    injectors: Vec<Injector>,
+    wakers: Vec<Arc<Waker>>,
+    dispatch_lanes: usize,
     max_connections: usize,
 }
 
-/// The accept loop: one reader thread per connection, capped at
-/// `max_connections` live readers.
-fn accept_loop(
-    listener: &TcpListener,
-    stop: &Arc<AtomicBool>,
-    queue: &Arc<AdmissionQueue<Pending>>,
-    readers: &Mutex<Vec<JoinHandle<()>>>,
-    ctx: ReaderCtx,
-) {
-    let active = Arc::new(AtomicU64::new(0));
+/// The accept loop: assigns each connection a reader core and a
+/// dispatcher lane round-robin, hands the socket to the core's
+/// injection queue, and wakes the core to adopt it.
+fn accept_loop(listener: &TcpListener, stop: &AtomicBool, ctx: AcceptCtx) {
+    let mut next_conn = 0usize;
     loop {
         let stream = match listener.accept() {
             Ok((stream, _)) => stream,
@@ -385,81 +556,261 @@ fn accept_loop(
         if stop.load(Ordering::Relaxed) {
             break;
         }
-        // Connection cap: bound thread count and per-reader buffers
-        // under a connection flood. Dropping the stream closes it.
-        if active.load(Ordering::Relaxed) >= ctx.max_connections as u64 {
+        // Every accept is counted, including ones the cap bounces: the
+        // gap between `connections` and `connections_multiplexed` is
+        // how a flood hitting the cap shows up in the metrics.
+        ctx.recorder.connection_accepted();
+        // Connection cap: bound per-connection buffers under a
+        // connection flood. Dropping the stream closes it.
+        if ctx.active.load(Ordering::Relaxed) >= ctx.max_connections as u64 {
             continue;
         }
-        ctx.recorder.connection_accepted();
-        active.fetch_add(1, Ordering::Relaxed);
-        let spawned = {
-            let stop = Arc::clone(stop);
-            let queue = Arc::clone(queue);
-            let active = Arc::clone(&active);
-            let ctx = ctx.clone();
-            std::thread::Builder::new()
-                .name("cpm-net-conn".to_string())
-                .spawn(move || {
-                    reader_loop(stream, &stop, &queue, &ctx);
-                    active.fetch_sub(1, Ordering::Relaxed);
-                })
-        };
-        match spawned {
-            Ok(h) => {
-                if let Ok(mut guard) = readers.lock() {
-                    // Reap finished readers as connections churn, so a
-                    // long-running server does not accumulate handles.
-                    guard.retain(|h| !h.is_finished());
-                    guard.push(h);
-                }
+        ctx.active.fetch_add(1, Ordering::Relaxed);
+        let core = next_conn % ctx.injectors.len();
+        let lane = next_conn % ctx.dispatch_lanes;
+        next_conn = next_conn.wrapping_add(1);
+        lock(&ctx.injectors[core]).push((stream, lane));
+        ctx.wakers[core].wake();
+    }
+}
+
+/// Context owned by one reader core.
+struct CoreCtx {
+    /// Receive half of the core's waker pair; lives in the poll set.
+    rx: TcpStream,
+    waker: Arc<Waker>,
+    injected: Injector,
+    lanes: Vec<Arc<AdmissionQueue<Pending>>>,
+    recorder: Arc<Recorder>,
+    pool: WorkerPool,
+    draining: Arc<AtomicBool>,
+    active: Arc<AtomicU64>,
+    tick: Duration,
+    write_timeout: Duration,
+}
+
+/// One multiplexed connection as its core sees it.
+struct Conn {
+    stream: TcpStream,
+    shared: Arc<ConnShared>,
+    inbound: FrameBuf,
+    pinned: String,
+    lane: usize,
+    /// A request refused by a full lane, retried every tick. While
+    /// parked the core does not read this socket: TCP flow control
+    /// turns lane backpressure into peer backpressure.
+    parked: Option<Pending>,
+    /// Wall-clock bound on flushing the current head frame.
+    head_deadline: Option<Instant>,
+    ready_read: bool,
+}
+
+/// One reader core: a readiness-poll tick loop multiplexing all its
+/// adopted connections.
+fn core_loop(ctx: CoreCtx) {
+    let mut poller = Poller::new();
+    let mut conns: Vec<Option<Conn>> = Vec::new();
+    let mut entries: Vec<PollEntry> = Vec::new();
+    let mut slots: Vec<usize> = Vec::new();
+    let mut scratch = vec![0u8; READ_CHUNK];
+    let mut drain_deadline: Option<Instant> = None;
+    loop {
+        let draining = ctx.draining.load(Ordering::Relaxed);
+
+        // Build the poll set: the waker pipe first, then every live
+        // connection. Read interest is dropped while parked (that is
+        // the backpressure) or draining; write interest only when bytes
+        // are queued.
+        entries.clear();
+        slots.clear();
+        entries.push(PollEntry::new(
+            fd_of(&ctx.rx),
+            Interest {
+                read: true,
+                write: false,
+            },
+        ));
+        for (i, slot) in conns.iter().enumerate() {
+            let Some(c) = slot else { continue };
+            let out = lock(&c.shared.out);
+            let want_write = !out.frames.is_empty() || out.closed;
+            drop(out);
+            entries.push(PollEntry::new(
+                fd_of(&c.stream),
+                Interest {
+                    read: !draining && c.parked.is_none(),
+                    write: want_write,
+                },
+            ));
+            slots.push(i);
+        }
+        let _ = poller.poll(&mut entries, ctx.tick);
+        for (k, &i) in slots.iter().enumerate() {
+            if let Some(c) = conns[i].as_mut() {
+                c.ready_read = entries[k + 1].ready.read;
             }
-            Err(_) => {
-                active.fetch_sub(1, Ordering::Relaxed);
+        }
+
+        // Acknowledge wakes before acting on their causes: a wake that
+        // lands after the clear writes a fresh byte, so the next poll
+        // returns immediately and nothing is ever missed.
+        ctx.waker.pending.store(false, Ordering::Release);
+        drain_wake_pipe(&ctx.rx);
+
+        // Adopt connections the accept thread injected.
+        let injected: Vec<(TcpStream, usize)> = {
+            let mut guard = lock(&ctx.injected);
+            guard.drain(..).collect()
+        };
+        for (stream, lane) in injected {
+            if draining || stream.set_nonblocking(true).is_err() {
+                ctx.active.fetch_sub(1, Ordering::Relaxed);
                 continue;
             }
+            let _ = stream.set_nodelay(true);
+            ctx.recorder.connection_multiplexed();
+            let conn = Conn {
+                shared: Arc::new(ConnShared {
+                    out: Mutex::new(Outbound::default()),
+                    waker: Arc::clone(&ctx.waker),
+                }),
+                stream,
+                inbound: FrameBuf::new(),
+                pinned: DEFAULT_TENANT.to_string(),
+                lane,
+                parked: None,
+                head_deadline: None,
+                // Read immediately: the peer may have sent before the
+                // socket entered the poll set.
+                ready_read: true,
+            };
+            match conns.iter_mut().find(|s| s.is_none()) {
+                Some(slot) => *slot = Some(conn),
+                None => conns.push(Some(conn)),
+            }
+        }
+
+        // Service every live connection; reap the ones that died.
+        for slot in conns.iter_mut() {
+            let Some(mut conn) = slot.take() else {
+                continue;
+            };
+            if service_conn(&ctx, &mut conn, draining, &mut scratch) {
+                *slot = Some(conn);
+            } else {
+                reap_conn(&ctx, conn);
+            }
+        }
+
+        if draining {
+            let deadline = *drain_deadline.get_or_insert_with(|| Instant::now() + ctx.write_timeout);
+            let flushed = conns
+                .iter()
+                .flatten()
+                .all(|c| lock(&c.shared.out).frames.is_empty());
+            if flushed || Instant::now() >= deadline {
+                break;
+            }
+        }
+    }
+    for conn in conns.into_iter().flatten() {
+        reap_conn(&ctx, conn);
+    }
+}
+
+/// Empty the waker pipe (reads to `WouldBlock`).
+fn drain_wake_pipe(rx: &TcpStream) {
+    let mut buf = [0u8; 64];
+    let mut r = rx;
+    loop {
+        match r.read(&mut buf) {
+            Ok(0) => break,
+            Ok(_) => continue,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => break,
         }
     }
 }
 
-/// One connection's reader: decode frames, resolve the pinned tenant,
-/// admit requests, and answer `Stats` scrapes in place. Exits on EOF,
-/// protocol violation, or shutdown.
-fn reader_loop(
-    stream: TcpStream,
-    stop: &AtomicBool,
-    queue: &AdmissionQueue<Pending>,
-    ctx: &ReaderCtx,
-) {
-    // The read timeout is how this thread polls the stop flag; write
-    // deadlines are set per reply frame.
-    if stream.set_read_timeout(Some(ctx.read_poll)).is_err() {
-        return;
+/// One connection's slice of a core tick: retry a parked admission,
+/// read + process frames if readable, flush queued replies. Returns
+/// whether the connection is still alive.
+fn service_conn(ctx: &CoreCtx, conn: &mut Conn, draining: bool, scratch: &mut [u8]) -> bool {
+    if !retry_parked(ctx, conn) {
+        return false;
     }
-    let _ = stream.set_nodelay(true);
-    let writer = match stream.try_clone() {
-        Ok(w) => Arc::new(ConnShared {
-            stream: w,
-            write: Mutex::new(()),
-        }),
-        Err(_) => return,
+    if !draining && conn.ready_read && conn.parked.is_none() && !service_read(ctx, conn, scratch) {
+        return false;
+    }
+    flush_outbound(conn, ctx.write_timeout)
+}
+
+/// Re-offer a parked request to its lane. On admission, resume
+/// processing any frames that buffered while parked.
+fn retry_parked(ctx: &CoreCtx, conn: &mut Conn) -> bool {
+    let Some(p) = conn.parked.take() else {
+        return true;
     };
-    let mut reader = InterruptibleStream { stream, stop };
-    let mut pinned = DEFAULT_TENANT.to_string();
-    loop {
-        // One frame decoder for client and server: `wire::read_frame`
-        // over a stop-aware reader. Shutdown mid-frame surfaces as an
-        // UnexpectedEof error; between frames as a clean `None`.
-        let payload = match wire::read_frame(&mut reader) {
+    let key = p.req.tenant.clone();
+    let arrived = p.arrived;
+    match ctx.lanes[conn.lane].try_push_keyed(&key, p, arrived) {
+        TryPush::Admitted => process_frames(ctx, conn),
+        TryPush::Full(p) => {
+            conn.parked = Some(p);
+            true
+        }
+        TryPush::Closed(_) => false,
+    }
+}
+
+/// Read the socket (bounded per tick) and process complete frames.
+/// Returns whether the connection is still alive; EOF, an I/O error, a
+/// framing violation, or a closed lane all end it.
+fn service_read(ctx: &CoreCtx, conn: &mut Conn, scratch: &mut [u8]) -> bool {
+    let mut budget = READ_BUDGET;
+    while conn.parked.is_none() && budget > 0 {
+        let got = {
+            let mut r = &conn.stream;
+            r.read(scratch)
+        };
+        match got {
+            Ok(0) => return false,
+            Ok(n) => {
+                budget = budget.saturating_sub(n);
+                conn.inbound.extend(&scratch[..n]);
+                if !process_frames(ctx, conn) {
+                    return false;
+                }
+                if n < scratch.len() {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    true
+}
+
+/// Drain complete frames out of the connection's reassembly buffer:
+/// pin tenants, admit requests (parking on a full lane), and answer
+/// `Stats` scrapes in place. Returns whether the connection survives.
+fn process_frames(ctx: &CoreCtx, conn: &mut Conn) -> bool {
+    while conn.parked.is_none() {
+        let payload = match conn.inbound.next_frame() {
             Ok(Some(p)) => p,
-            // EOF, shutdown, or an I/O error: close the connection.
-            Ok(None) | Err(_) => break,
+            Ok(None) => return true,
+            // Oversized or desynced framing: drop the connection rather
+            // than guess at where the next frame starts.
+            Err(_) => return false,
         };
         // Stamped once, here, at frame-decode time: the same Instant
-        // feeds the admission-window deadline and the span ledger's wait
-        // stage, so wait + exec + write equals end-to-end exactly.
+        // feeds the admission-window deadline and the span ledger's
+        // wait stage, so wait + exec + write equals end-to-end exactly.
         let arrived = Instant::now();
         match wire::decode_client_msg(&payload) {
-            Ok(ClientMsg::Hello { tenant }) => pinned = tenant,
+            Ok(ClientMsg::Hello { tenant }) => conn.pinned = tenant,
             Ok(ClientMsg::Request {
                 id,
                 tenant,
@@ -467,81 +818,116 @@ fn reader_loop(
                 op,
             }) => {
                 let req = Addressed {
-                    tenant: tenant.unwrap_or_else(|| pinned.clone()),
+                    tenant: tenant.unwrap_or_else(|| conn.pinned.clone()),
                     device,
                     op,
                 };
-                let admitted = queue.push_with_arrival(
-                    Pending {
-                        id,
-                        reply: Arc::clone(&writer),
-                        req,
-                        arrived,
-                    },
+                let key = req.tenant.clone();
+                let pending = Pending {
+                    id,
+                    reply: Arc::clone(&conn.shared),
+                    req,
                     arrived,
-                );
-                if !admitted {
-                    break;
+                };
+                match ctx.lanes[conn.lane].try_push_keyed(&key, pending, arrived) {
+                    TryPush::Admitted => {}
+                    // Lane full: park and stop reading this socket until
+                    // the parked request admits.
+                    TryPush::Full(p) => conn.parked = Some(p),
+                    TryPush::Closed(_) => return false,
                 }
             }
-            // Answered right here on the reader thread: a scrape reads a
-            // snapshot of the shared recorder and never queues behind the
-            // admission window, so stats stay live even when the
-            // dispatcher is saturated or a window is being held open.
+            // Answered right here on the reader core: a scrape reads a
+            // snapshot of the shared recorder and never queues behind
+            // the admission window, so stats stay live even when every
+            // dispatcher lane is saturated or holding a window open.
             Ok(ClientMsg::Stats { id }) => {
+                let depths: Vec<u64> = ctx.lanes.iter().map(|l| l.len() as u64).collect();
                 ctx.recorder.sample_gauges(
-                    queue.len() as u64,
+                    depths.iter().sum(),
                     ctx.pool.workers() as u64,
                     u64::from(ctx.pool.is_busy()),
                     ctx.pool.dispatches(),
                 );
+                ctx.recorder.sample_lane_depths(&depths);
                 ctx.recorder.scraped();
                 let snap = ctx.recorder.snapshot();
                 let reply: Result<Response> = Ok(Response::Stats(Box::new(snap)));
-                let frame = match wire::frame_bytes(&wire::encode_reply(id, &reply)) {
-                    Ok(f) => f,
-                    Err(_) => break,
-                };
-                if writer.write(&frame, ctx.write_timeout).is_err() {
-                    break;
+                match encode_reply_frame(id, &reply) {
+                    Some(frame) => {
+                        if !conn.shared.send(frame) {
+                            return false;
+                        }
+                    }
+                    None => return false,
                 }
             }
             // Protocol violation: drop the connection rather than guess
             // at framing.
-            Err(_) => break,
+            Err(_) => return false,
         }
     }
+    true
 }
 
-/// A [`Read`] view of the connection socket that treats read timeouts as
-/// a cue to re-check the shutdown flag, and reports shutdown as
-/// end-of-stream. Framing stays solely in [`wire::read_frame`]; this
-/// wrapper only adds interruptibility.
-struct InterruptibleStream<'a> {
-    stream: TcpStream,
-    stop: &'a AtomicBool,
-}
-
-impl Read for InterruptibleStream<'_> {
-    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
-        loop {
-            if self.stop.load(Ordering::Relaxed) {
-                return Ok(0);
-            }
-            match self.stream.read(buf) {
-                Ok(n) => return Ok(n),
-                Err(e)
-                    if matches!(
-                        e.kind(),
-                        io::ErrorKind::WouldBlock
-                            | io::ErrorKind::TimedOut
-                            | io::ErrorKind::Interrupted
-                    ) =>
-                {
-                    continue;
+/// Write queued reply bytes until done or `WouldBlock`. The head frame
+/// carries a hard wall-clock deadline (set when its first byte queues
+/// for the wire): a peer draining a byte a second cannot pin the
+/// buffer beyond `write_timeout` — it is disconnected instead, exactly
+/// like the old per-reply write deadline, but enforced by the core
+/// rather than a blocked dispatcher. Returns whether the connection is
+/// still alive.
+fn flush_outbound(conn: &mut Conn, write_timeout: Duration) -> bool {
+    let mut out = lock(&conn.shared.out);
+    if out.closed {
+        return false;
+    }
+    loop {
+        let head_len = match out.frames.front() {
+            Some(h) => h.len(),
+            None => return true,
+        };
+        if conn.head_deadline.is_none() {
+            conn.head_deadline = Some(Instant::now() + write_timeout);
+        }
+        let wrote = {
+            let head = out.frames.front().expect("head frame checked above");
+            let mut w = &conn.stream;
+            w.write(&head[out.head_off..])
+        };
+        match wrote {
+            Ok(0) => return false,
+            Ok(n) => {
+                out.head_off += n;
+                if out.head_off == head_len {
+                    out.frames.pop_front();
+                    out.bytes -= head_len;
+                    out.head_off = 0;
+                    conn.head_deadline = None;
                 }
-                Err(e) => return Err(e),
             }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                return conn.head_deadline.is_some_and(|d| Instant::now() < d);
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => return false,
         }
     }
+}
+
+/// Tear down one dead connection: purge its queued requests (and their
+/// arrival stamps) from its lane so a dead peer cannot pin the window
+/// deadline, close its outbound, shut the socket, and release its
+/// connection-cap slot.
+fn reap_conn(ctx: &CoreCtx, conn: Conn) {
+    let _ = ctx.lanes[conn.lane].reap(|p| Arc::ptr_eq(&p.reply, &conn.shared));
+    {
+        let mut out = lock(&conn.shared.out);
+        out.closed = true;
+        out.frames.clear();
+        out.bytes = 0;
+        out.head_off = 0;
+    }
+    let _ = conn.stream.shutdown(Shutdown::Both);
+    ctx.active.fetch_sub(1, Ordering::Relaxed);
 }

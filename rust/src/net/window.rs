@@ -1,22 +1,43 @@
 //! The batching admission window: coalesce concurrently arriving
-//! requests into one batch.
+//! requests into one batch, fairly across tenants.
 //!
-//! The TCP front-end's connection threads push admitted requests into an
-//! [`AdmissionQueue`]; a single dispatcher thread pulls *windows* out of
-//! it. A window opens when the first request arrives and closes when
-//! either [`WindowConfig::max_delay`] elapses or
-//! [`WindowConfig::max_batch`] requests are waiting — whichever comes
-//! first — so an idle server adds at most `max_delay` of latency while a
-//! busy one dispatches full batches back to back. Everything drained from
-//! one window becomes a single
+//! The TCP front-end's reader cores push admitted requests into an
+//! [`AdmissionQueue`]; a dispatcher thread pulls *windows* out of it. A
+//! window opens when the first request arrives and closes when either
+//! [`WindowConfig::max_delay`] elapses or [`WindowConfig::max_batch`]
+//! requests are waiting — whichever comes first — so an idle server adds
+//! at most `max_delay` of latency while a busy one dispatches full
+//! batches back to back. Everything drained from one window becomes a
+//! single
 //! [`CpmServer::handle_batch`](crate::coordinator::CpmServer::handle_batch)
 //! call, which is where the pool's shared SQL compare passes, search
 //! dedup, and §3.1 load/exec overlap pay off across independent clients.
 //!
+//! Internally the queue keeps one FIFO *lane per key* (the serving tier
+//! keys by tenant) and drains windows round-robin across non-empty
+//! lanes, one item per lane per turn. A chatty tenant that keeps a
+//! hundred requests pipelined therefore cannot starve a quiet one: the
+//! quiet tenant's lone request rides in the very next window regardless
+//! of how deep the chatty lane is. Keyless pushes share the `""` lane,
+//! which keeps the single-producer behaviour exactly FIFO.
+//!
+//! Two details matter for the readiness loop. First,
+//! [`AdmissionQueue::try_push_keyed`] never blocks — a reader core
+//! multiplexing hundreds of sockets cannot park on a full queue, so it
+//! gets the item handed back ([`TryPush::Full`]) and simply stops
+//! reading that socket (TCP backpressure) until the dispatcher drains.
+//! Second, [`AdmissionQueue::reap`] removes a dead connection's queued
+//! items *and their arrival stamps*. The window deadline is measured
+//! from the oldest waiting arrival and is re-evaluated every time the
+//! consumer wakes, so reaping the item that pinned the deadline lets
+//! the window stretch back out for the requests still alive — a
+//! reconnect during drain can no longer leave a stale `Instant` that
+//! slams every subsequent window shut early.
+//!
 //! The queue is deliberately generic over its item type so the batching
-//! policy is testable without sockets.
+//! and fairness policy is testable without sockets.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -27,10 +48,10 @@ pub struct WindowConfig {
     pub max_delay: Duration,
     /// Cap on requests per window: a full window dispatches immediately.
     pub max_batch: usize,
-    /// Cap on requests waiting in the queue. Producers *block* when the
-    /// queue is full — the reader stops reading its socket, so TCP flow
-    /// control pushes back on the client instead of the server buffering
-    /// without bound.
+    /// Cap on requests waiting in the queue. Blocking producers wait for
+    /// space; readiness-loop producers use
+    /// [`AdmissionQueue::try_push_keyed`] and translate [`TryPush::Full`]
+    /// into TCP backpressure (stop reading the socket) instead.
     pub max_queue: usize,
 }
 
@@ -44,17 +65,71 @@ impl Default for WindowConfig {
     }
 }
 
+/// Outcome of a non-blocking admission attempt. The rejected variants
+/// hand the item back so the caller can park it (and retry) or drop it.
 #[derive(Debug)]
-struct State<T> {
+pub enum TryPush<T> {
+    /// The item was admitted.
+    Admitted,
+    /// The queue is at `max_queue`; the item is handed back. Park it and
+    /// stop consuming input until the dispatcher drains.
+    Full(T),
+    /// The queue has been closed; the item is handed back.
+    Closed(T),
+}
+
+#[derive(Debug)]
+struct Lane<T> {
     /// Waiting items, each stamped with its arrival time so the window
     /// deadline is measured from when the *request* arrived, not from
     /// when the dispatcher got around to looking.
-    queue: VecDeque<(Instant, T)>,
+    items: VecDeque<(Instant, T)>,
+}
+
+#[derive(Debug)]
+struct State<T> {
+    /// One FIFO per key, in first-seen order. Lanes are never removed
+    /// (the set is bounded by the tenant population), so the round-robin
+    /// cursor stays meaningful across windows.
+    lanes: Vec<Lane<T>>,
+    /// Key → lane position.
+    index: HashMap<String, usize>,
+    /// Next lane the round-robin drain offers a turn to.
+    cursor: usize,
+    /// Total items across all lanes.
+    len: usize,
     closed: bool,
 }
 
-/// A blocking multi-producer, single-consumer queue whose consumer drains
-/// it in admission windows (see the module docs for the policy).
+impl<T> State<T> {
+    fn admit(&mut self, key: &str, item: T, arrived: Instant) {
+        let lane = match self.index.get(key) {
+            Some(&i) => i,
+            None => {
+                self.lanes.push(Lane {
+                    items: VecDeque::new(),
+                });
+                self.index.insert(key.to_string(), self.lanes.len() - 1);
+                self.lanes.len() - 1
+            }
+        };
+        self.lanes[lane].items.push_back((arrived, item));
+        self.len += 1;
+    }
+
+    /// The oldest arrival stamp across every lane front — the stamp the
+    /// current window deadline is measured from.
+    fn oldest_arrival(&self) -> Option<Instant> {
+        self.lanes
+            .iter()
+            .filter_map(|l| l.items.front().map(|(at, _)| *at))
+            .min()
+    }
+}
+
+/// A multi-producer, single-consumer queue whose consumer drains it in
+/// admission windows, round-robin across per-key lanes (see the module
+/// docs for the policy).
 #[derive(Debug)]
 pub struct AdmissionQueue<T> {
     cfg: WindowConfig,
@@ -69,7 +144,10 @@ impl<T> AdmissionQueue<T> {
         AdmissionQueue {
             cfg,
             state: Mutex::new(State {
-                queue: VecDeque::new(),
+                lanes: Vec::new(),
+                index: HashMap::new(),
+                cursor: 0,
+                len: 0,
                 closed: false,
             }),
             arrived: Condvar::new(),
@@ -82,31 +160,80 @@ impl<T> AdmissionQueue<T> {
         self.cfg
     }
 
-    /// Admit one item. Blocks while the queue is at `max_queue`
-    /// (backpressure: the producer stops consuming its input). Returns
-    /// `false` (dropping the item) if the queue has been closed.
+    /// Admit one item into the shared `""` lane. Blocks while the queue
+    /// is at `max_queue` (backpressure: the producer stops consuming its
+    /// input). Returns `false` (dropping the item) if the queue has been
+    /// closed.
     pub fn push(&self, item: T) -> bool {
         self.push_with_arrival(item, Instant::now())
     }
 
-    /// Admit one item carrying an explicit arrival stamp (same blocking
-    /// and close semantics as [`AdmissionQueue::push`]). The producer
-    /// stamps arrival once — at frame-decode time — and hands the same
-    /// `Instant` to both the window deadline and its own span ledger, so
-    /// window-wait and end-to-end latency decompose against one clock
-    /// read instead of two.
+    /// Admit one item into the shared `""` lane carrying an explicit
+    /// arrival stamp (same blocking and close semantics as
+    /// [`AdmissionQueue::push`]). The producer stamps arrival once — at
+    /// frame-decode time — and hands the same `Instant` to both the
+    /// window deadline and its own span ledger, so window-wait and
+    /// end-to-end latency decompose against one clock read instead of
+    /// two.
     pub fn push_with_arrival(&self, item: T, arrived: Instant) -> bool {
+        self.push_keyed("", item, arrived)
+    }
+
+    /// Admit one item into `key`'s fairness lane, blocking while the
+    /// queue is full. Returns `false` (dropping the item) once closed.
+    pub fn push_keyed(&self, key: &str, item: T, arrived: Instant) -> bool {
         let max_queue = self.cfg.max_queue.max(1);
         let mut st = self.state.lock().expect("admission queue poisoned");
-        while !st.closed && st.queue.len() >= max_queue {
+        while !st.closed && st.len >= max_queue {
             st = self.drained.wait(st).expect("admission queue poisoned");
         }
         if st.closed {
             return false;
         }
-        st.queue.push_back((arrived, item));
+        st.admit(key, item, arrived);
         self.arrived.notify_all();
         true
+    }
+
+    /// Non-blocking admission into `key`'s fairness lane. Never parks
+    /// the caller: a full or closed queue hands the item straight back
+    /// so a reader core multiplexing many sockets can translate
+    /// [`TryPush::Full`] into per-connection TCP backpressure instead of
+    /// stalling every connection it owns.
+    pub fn try_push_keyed(&self, key: &str, item: T, arrived: Instant) -> TryPush<T> {
+        let max_queue = self.cfg.max_queue.max(1);
+        let mut st = self.state.lock().expect("admission queue poisoned");
+        if st.closed {
+            return TryPush::Closed(item);
+        }
+        if st.len >= max_queue {
+            return TryPush::Full(item);
+        }
+        st.admit(key, item, arrived);
+        self.arrived.notify_all();
+        TryPush::Admitted
+    }
+
+    /// Remove every queued item matching `dead` (a reaped connection's
+    /// leftovers), returning how many were removed. Clearing an item also
+    /// clears its arrival stamp, so a window deadline pinned by a dead
+    /// connection's oldest request unpins — the waiting consumer is woken
+    /// to re-derive its deadline from the requests still alive. Frees
+    /// backpressure space.
+    pub fn reap<F: FnMut(&T) -> bool>(&self, mut dead: F) -> usize {
+        let mut st = self.state.lock().expect("admission queue poisoned");
+        let mut removed = 0usize;
+        for lane in st.lanes.iter_mut() {
+            let before = lane.items.len();
+            lane.items.retain(|(_, item)| !dead(item));
+            removed += before - lane.items.len();
+        }
+        st.len -= removed;
+        if removed > 0 {
+            self.drained.notify_all();
+            self.arrived.notify_all();
+        }
+        removed
     }
 
     /// Close the queue: producers are refused from now on, and the
@@ -120,7 +247,7 @@ impl<T> AdmissionQueue<T> {
 
     /// Items currently waiting (diagnostics only — racy by nature).
     pub fn len(&self) -> usize {
-        self.state.lock().expect("admission queue poisoned").queue.len()
+        self.state.lock().expect("admission queue poisoned").len
     }
 
     /// True if nothing is waiting (diagnostics only — racy by nature).
@@ -128,43 +255,74 @@ impl<T> AdmissionQueue<T> {
         self.len() == 0
     }
 
-    /// Block until a window closes, then drain it. The window opens when
-    /// its first item *arrives* and closes `max_delay` later or at
-    /// `max_batch` items, whichever comes first — so if the oldest
+    /// Block until a window closes, then drain it round-robin across the
+    /// non-empty lanes (one item per lane per turn, so every key gets a
+    /// seat in every window it has something waiting for). The window
+    /// opens when its first item *arrives* and closes `max_delay` later
+    /// or at `max_batch` items, whichever comes first — so if the oldest
     /// waiting item already waited out the delay (e.g. while the
     /// previous batch executed), the window closes immediately and no
     /// request ever waits more than `max_delay` beyond execution time.
+    /// The deadline is re-derived from the oldest *surviving* arrival on
+    /// every wake, so a [`AdmissionQueue::reap`] mid-wait stretches the
+    /// window back out instead of leaving it pinned to a dead stamp.
     /// Returns `None` once the queue is closed *and* fully drained.
     pub fn next_window(&self) -> Option<Vec<T>> {
         let max_batch = self.cfg.max_batch.max(1);
         let mut st = self.state.lock().expect("admission queue poisoned");
-        // Wait for the window-opening item.
-        while st.queue.is_empty() {
+        loop {
+            // Wait for the window-opening item.
+            while st.len == 0 {
+                if st.closed {
+                    return None;
+                }
+                st = self.arrived.wait(st).expect("admission queue poisoned");
+            }
+            // Keep the window open until the deadline (measured from the
+            // oldest surviving arrival — recomputed every wake so a reap
+            // can move it) or a full batch.
+            while st.len < max_batch && !st.closed {
+                let Some(opened) = st.oldest_arrival() else {
+                    break; // reaped to empty mid-wait
+                };
+                let deadline = opened + self.cfg.max_delay;
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _timeout) = self
+                    .arrived
+                    .wait_timeout(st, deadline - now)
+                    .expect("admission queue poisoned");
+                st = guard;
+            }
+            if st.len > 0 {
+                break;
+            }
             if st.closed {
                 return None;
             }
-            st = self.arrived.wait(st).expect("admission queue poisoned");
+            // Everything was reaped while we waited: no window to serve.
         }
-        // Keep the window open until the deadline (measured from the
-        // oldest item's arrival) or a full batch.
-        let opened = st.queue.front().expect("non-empty above").0;
-        let deadline = opened + self.cfg.max_delay;
-        while st.queue.len() < max_batch && !st.closed {
-            let now = Instant::now();
-            if now >= deadline {
+        let n = st.len.min(max_batch);
+        let mut window = Vec::with_capacity(n);
+        let lane_count = st.lanes.len();
+        while window.len() < n {
+            let mut popped = false;
+            for off in 0..lane_count {
+                let i = (st.cursor + off) % lane_count;
+                if let Some((_, item)) = st.lanes[i].items.pop_front() {
+                    window.push(item);
+                    st.cursor = (i + 1) % lane_count;
+                    popped = true;
+                    break;
+                }
+            }
+            if !popped {
                 break;
             }
-            let (guard, timeout) = self
-                .arrived
-                .wait_timeout(st, deadline - now)
-                .expect("admission queue poisoned");
-            st = guard;
-            if timeout.timed_out() {
-                break;
-            }
         }
-        let n = st.queue.len().min(max_batch);
-        let window = st.queue.drain(..n).map(|(_, item)| item).collect();
+        st.len -= window.len();
         // Space freed: wake producers blocked on the max_queue bound.
         self.drained.notify_all();
         Some(window)
@@ -309,5 +467,140 @@ mod tests {
         thread::sleep(Duration::from_millis(20));
         q.close();
         assert!(consumer.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn round_robin_interleaves_tenant_lanes() {
+        let q = queue(100, 32);
+        let now = Instant::now();
+        for v in [0u32, 2, 4] {
+            assert!(q.push_keyed("a", v, now));
+        }
+        for v in [1u32, 3, 5] {
+            assert!(q.push_keyed("b", v, now));
+        }
+        // One item per lane per turn: a, b, a, b, ...
+        assert_eq!(q.next_window().unwrap(), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn chatty_tenant_cannot_starve_the_quiet_one() {
+        // Tenant "a" has 8 requests pipelined; tenant "b" arrives last
+        // with one. A 4-slot window must still seat "b" — under FIFO it
+        // would wait behind two full windows of "a".
+        let q = queue(100, 4);
+        let now = Instant::now();
+        for v in 0..8u32 {
+            assert!(q.push_keyed("a", v, now));
+        }
+        assert!(q.push_keyed("b", 100, now));
+        let w = q.next_window().unwrap();
+        assert_eq!(w.len(), 4);
+        assert!(
+            w.contains(&100),
+            "quiet tenant missed the first window: {w:?}"
+        );
+        // The chatty tenant still gets the remaining seats.
+        assert_eq!(w.iter().filter(|&&v| v < 100).count(), 3);
+    }
+
+    #[test]
+    fn reap_clears_stale_arrival_stamps_regression() {
+        // Regression for the reconnect-during-drain bug: a dead
+        // connection's queued request carried an ancient arrival stamp;
+        // because the deadline is measured from the oldest arrival, that
+        // stamp slammed every subsequent window shut immediately. Reap
+        // must clear the item *and* its stamp so surviving requests get
+        // their full coalescing window back.
+        let q = Arc::new(queue(600_000, 2));
+        let Some(stale) = Instant::now().checked_sub(Duration::from_secs(1_200)) else {
+            return; // platform clock too young to back-date; skip
+        };
+        assert!(q.push_keyed("dead-conn", 1, stale));
+        assert_eq!(q.reap(|&v| v == 1), 1);
+        assert!(q.push_keyed("live-conn", 2, Instant::now()));
+        let started = Instant::now();
+        let consumer = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || q.next_window())
+        };
+        // With the stale stamp gone the deadline derives from item 2
+        // (10 minutes out), so the window stays open for item 3 and
+        // closes at max_batch. Unfixed, the consumer dispatches [2]
+        // alone the instant it wakes.
+        thread::sleep(Duration::from_millis(60));
+        assert!(q.push_keyed("live-conn", 3, Instant::now()));
+        let w = consumer.join().unwrap().unwrap();
+        assert_eq!(w, vec![2, 3]);
+        assert!(
+            started.elapsed() >= Duration::from_millis(50),
+            "window closed before the straggler could coalesce"
+        );
+    }
+
+    #[test]
+    fn reap_mid_wait_unpins_the_deadline_without_a_ghost_window() {
+        // The consumer is already parked inside next_window when the only
+        // queued item is reaped: it must go back to waiting for a real
+        // arrival (no empty window, no panic) and then serve the fresh
+        // item normally.
+        // max_delay is far beyond the test timeout and max_batch is 2,
+        // so the parked consumer can only return once two live items
+        // are waiting — it cannot dispatch the doomed item early.
+        let q = Arc::new(queue(600_000, 2));
+        assert!(q.push_keyed("dead-conn", 7, Instant::now()));
+        let q2 = Arc::clone(&q);
+        let consumer = thread::spawn(move || q2.next_window());
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.reap(|&v| v == 7), 1);
+        thread::sleep(Duration::from_millis(20));
+        assert!(q.push_keyed("live-conn", 8, Instant::now()));
+        assert!(q.push_keyed("live-conn", 9, Instant::now()));
+        assert_eq!(consumer.join().unwrap().unwrap(), vec![8, 9]);
+    }
+
+    #[test]
+    fn reap_frees_backpressure_space() {
+        let q = Arc::new(AdmissionQueue::new(WindowConfig {
+            max_delay: Duration::from_millis(10),
+            max_batch: 4,
+            max_queue: 2,
+        }));
+        assert!(q.push(1));
+        assert!(q.push(2));
+        let producer = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || q.push(3))
+        };
+        thread::sleep(Duration::from_millis(30));
+        assert_eq!(q.len(), 2, "third push must wait on the full queue");
+        // Reaping makes room: the blocked producer is admitted without
+        // any window being drained.
+        assert_eq!(q.reap(|&v| v == 1), 1);
+        assert!(producer.join().unwrap());
+        let mut w = q.next_window().unwrap();
+        w.sort_unstable();
+        assert_eq!(w, vec![2, 3]);
+    }
+
+    #[test]
+    fn try_push_reports_full_and_closed_without_blocking() {
+        let q = AdmissionQueue::new(WindowConfig {
+            max_delay: Duration::from_millis(10),
+            max_batch: 4,
+            max_queue: 1,
+        });
+        let now = Instant::now();
+        assert!(matches!(q.try_push_keyed("a", 1, now), TryPush::Admitted));
+        // Full queue hands the item straight back.
+        match q.try_push_keyed("a", 2, now) {
+            TryPush::Full(v) => assert_eq!(v, 2),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        q.close();
+        match q.try_push_keyed("a", 3, now) {
+            TryPush::Closed(v) => assert_eq!(v, 3),
+            other => panic!("expected Closed, got {other:?}"),
+        }
     }
 }

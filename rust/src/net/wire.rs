@@ -79,6 +79,86 @@ pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Vec<u8>>> {
     Ok(Some(payload))
 }
 
+/// Incremental frame reassembly for nonblocking sockets.
+///
+/// The readiness loop reads whatever bytes a socket has — which can cut
+/// a frame anywhere, including mid-length-prefix — and feeds them in via
+/// [`FrameBuf::extend`]; [`FrameBuf::next_frame`] yields each completed
+/// payload and `Ok(None)` while one is still partial, so a stalled peer
+/// parks its half-frame here without blocking a reader core. The
+/// `MAX_FRAME` guard fires as soon as the four prefix bytes are present
+/// — *before* any payload is buffered — so a hostile length prefix can
+/// never trigger a large allocation.
+#[derive(Debug, Default)]
+pub struct FrameBuf {
+    buf: Vec<u8>,
+    start: usize,
+}
+
+/// Consumed-prefix threshold beyond which the buffer compacts (drops the
+/// already-yielded bytes) instead of growing without bound.
+const FRAMEBUF_COMPACT: usize = 64 * 1024;
+
+impl FrameBuf {
+    /// An empty reassembly buffer.
+    pub fn new() -> Self {
+        FrameBuf::default()
+    }
+
+    /// Append bytes read off the socket.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes currently buffered but not yet yielded as a frame.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Pop the next completed frame payload, if the buffer holds one.
+    /// `Ok(None)` means "keep reading"; an oversized length prefix is a
+    /// typed [`CpmError::Wire`] and poisons the connection (the caller
+    /// must drop it — the stream offset is no longer trustworthy).
+    pub fn next_frame(&mut self) -> Result<Option<Vec<u8>>> {
+        let avail = self.buf.len() - self.start;
+        if avail < 4 {
+            self.compact();
+            return Ok(None);
+        }
+        let p = self.start;
+        let len = u32::from_le_bytes([
+            self.buf[p],
+            self.buf[p + 1],
+            self.buf[p + 2],
+            self.buf[p + 3],
+        ]);
+        if len > MAX_FRAME {
+            return Err(wire_err(format!(
+                "frame length {len} exceeds the {MAX_FRAME} byte cap"
+            )));
+        }
+        let len = len as usize;
+        if avail < 4 + len {
+            self.compact();
+            return Ok(None);
+        }
+        let payload = self.buf[p + 4..p + 4 + len].to_vec();
+        self.start = p + 4 + len;
+        self.compact();
+        Ok(Some(payload))
+    }
+
+    fn compact(&mut self) {
+        if self.start == self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+        } else if self.start > FRAMEBUF_COMPACT {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+    }
+}
+
 /// A decoded client → server message.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ClientMsg {
@@ -613,6 +693,7 @@ fn put_metrics(out: &mut Vec<u8>, m: &Metrics) {
     put_u64(out, m.wire.coalesced_windows);
     put_u64(out, m.wire.max_window);
     put_u64(out, m.wire.window_requests);
+    put_u64(out, m.wire.connections_multiplexed);
     put_u64(out, m.spans.recorded);
     put_u64(out, m.spans.wait_ns);
     put_u64(out, m.spans.exec_ns);
@@ -629,6 +710,11 @@ fn put_metrics(out: &mut Vec<u8>, m: &Metrics) {
     put_u64(out, m.gauges.worker_threads);
     put_u64(out, m.gauges.worker_busy);
     put_u64(out, m.gauges.worker_dispatches);
+    put_u64(out, m.gauges.reader_cores);
+    put_u32(out, m.gauges.lane_queue_depths.len() as u32);
+    for &d in &m.gauges.lane_queue_depths {
+        put_u64(out, d);
+    }
 }
 
 fn take_metrics(d: &mut Dec<'_>) -> Result<Metrics> {
@@ -660,6 +746,7 @@ fn take_metrics(d: &mut Dec<'_>) -> Result<Metrics> {
         coalesced_windows: d.take_u64()?,
         max_window: d.take_u64()?,
         window_requests: d.take_u64()?,
+        connections_multiplexed: d.take_u64()?,
     };
     let recorded = d.take_u64()?;
     let wait_ns = d.take_u64()?;
@@ -677,11 +764,24 @@ fn take_metrics(d: &mut Dec<'_>) -> Result<Metrics> {
     for _ in 0..n_events {
         recent.push(take_span_event(d)?);
     }
+    let queue_depth = d.take_u64()?;
+    let worker_threads = d.take_u64()?;
+    let worker_busy = d.take_u64()?;
+    let worker_dispatches = d.take_u64()?;
+    let reader_cores = d.take_u64()?;
+    let n_lanes = d.take_u32()? as usize;
+    d.need(n_lanes.saturating_mul(8))?;
+    let mut lane_queue_depths = Vec::with_capacity(n_lanes);
+    for _ in 0..n_lanes {
+        lane_queue_depths.push(d.take_u64()?);
+    }
     let gauges = GaugeStats {
-        queue_depth: d.take_u64()?,
-        worker_threads: d.take_u64()?,
-        worker_busy: d.take_u64()?,
-        worker_dispatches: d.take_u64()?,
+        queue_depth,
+        worker_threads,
+        worker_busy,
+        worker_dispatches,
+        reader_cores,
+        lane_queue_depths,
     };
     Ok(Metrics {
         requests,
@@ -957,7 +1057,10 @@ mod tests {
             t.macro_cycles = 321;
             t.exclusive_ops = 9;
         });
+        r.connection_multiplexed();
+        r.set_reader_cores(4);
         r.sample_gauges(2, 4, 1, 17);
+        r.sample_lane_depths(&[3, 0, 1]);
         r.scraped();
         let snap = r.snapshot();
         let payload = encode_reply(7, &Ok(Response::Stats(Box::new(snap.clone()))));
@@ -988,6 +1091,58 @@ mod tests {
         assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
         assert_eq!(read_frame(&mut r).unwrap().unwrap(), vec![0xAB; 300]);
         assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn framebuf_reassembles_across_arbitrary_splits() {
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&frame_bytes(b"hello").unwrap());
+        stream.extend_from_slice(&frame_bytes(b"").unwrap());
+        stream.extend_from_slice(&frame_bytes(&[0xAB; 300]).unwrap());
+        // Feed one byte at a time: every possible split point is hit.
+        let mut fb = FrameBuf::new();
+        let mut frames = Vec::new();
+        for &b in &stream {
+            fb.extend(&[b]);
+            while let Some(f) = fb.next_frame().unwrap() {
+                frames.push(f);
+            }
+        }
+        assert_eq!(frames.len(), 3);
+        assert_eq!(frames[0], b"hello");
+        assert_eq!(frames[1], b"");
+        assert_eq!(frames[2], vec![0xAB; 300]);
+        assert_eq!(fb.buffered(), 0);
+    }
+
+    #[test]
+    fn framebuf_rejects_oversized_prefix_before_buffering_payload() {
+        let mut fb = FrameBuf::new();
+        // Three prefix bytes: not decodable yet.
+        let prefix = (MAX_FRAME + 1).to_le_bytes();
+        fb.extend(&prefix[..3]);
+        assert!(fb.next_frame().unwrap().is_none());
+        // Fourth byte completes the hostile prefix: typed error, and no
+        // payload bytes were ever required (nothing was allocated).
+        fb.extend(&prefix[3..]);
+        assert!(matches!(fb.next_frame(), Err(CpmError::Wire(_))));
+    }
+
+    #[test]
+    fn framebuf_compacts_consumed_bytes() {
+        let mut fb = FrameBuf::new();
+        let frame = frame_bytes(&vec![7u8; 40 * 1024]).unwrap();
+        for _ in 0..4 {
+            fb.extend(&frame);
+            assert_eq!(fb.next_frame().unwrap().unwrap().len(), 40 * 1024);
+        }
+        assert_eq!(fb.buffered(), 0);
+        // Partial trailing frame survives compaction.
+        fb.extend(&frame[..10]);
+        assert!(fb.next_frame().unwrap().is_none());
+        assert_eq!(fb.buffered(), 10);
+        fb.extend(&frame[10..]);
+        assert_eq!(fb.next_frame().unwrap().unwrap().len(), 40 * 1024);
     }
 
     #[test]

@@ -16,7 +16,7 @@ use super::Stage;
 /// Every metric name the exporter emits. [`check`] requires each of
 /// these to appear in a scrape; the CI scrape leg runs that check
 /// against a live `cpm serve`.
-pub const METRIC_NAMES: [&str; 29] = [
+pub const METRIC_NAMES: [&str; 32] = [
     "cpm_requests_total",
     "cpm_errors_total",
     "cpm_batches_total",
@@ -29,6 +29,7 @@ pub const METRIC_NAMES: [&str; 29] = [
     "cpm_makespan_overlapped_cycles_total",
     "cpm_group_plan_ns_total",
     "cpm_connections_total",
+    "cpm_connections_multiplexed_total",
     "cpm_windows_total",
     "cpm_coalesced_windows_total",
     "cpm_window_requests_total",
@@ -37,6 +38,8 @@ pub const METRIC_NAMES: [&str; 29] = [
     "cpm_span_stage_ns_total",
     "cpm_window_max_occupancy",
     "cpm_queue_depth",
+    "cpm_reader_cores",
+    "cpm_lane_queue_depth",
     "cpm_worker_threads",
     "cpm_worker_busy",
     "cpm_worker_dispatches_total",
@@ -151,6 +154,12 @@ pub fn prometheus(m: &Metrics) -> String {
         "Connections accepted by the listener.",
         m.wire.connections,
     );
+    counter(
+        &mut out,
+        "cpm_connections_multiplexed_total",
+        "Connections adopted by a readiness reader core.",
+        m.wire.connections_multiplexed,
+    );
     counter(&mut out, "cpm_windows_total", "Admission windows dispatched.", m.wire.windows);
     counter(
         &mut out,
@@ -195,9 +204,24 @@ pub fn prometheus(m: &Metrics) -> String {
     gauge(
         &mut out,
         "cpm_queue_depth",
-        "Requests waiting in the admission queue at sample time.",
+        "Requests waiting across all admission lanes at sample time.",
         m.gauges.queue_depth as f64,
     );
+    gauge(
+        &mut out,
+        "cpm_reader_cores",
+        "Readiness reader cores multiplexing connections.",
+        m.gauges.reader_cores as f64,
+    );
+    header(
+        &mut out,
+        "cpm_lane_queue_depth",
+        "gauge",
+        "Requests waiting per dispatcher lane at sample time.",
+    );
+    for (lane, depth) in m.gauges.lane_queue_depths.iter().enumerate() {
+        let _ = writeln!(out, "cpm_lane_queue_depth{{lane=\"{lane}\"}} {depth}");
+    }
     gauge(
         &mut out,
         "cpm_worker_threads",
@@ -346,9 +370,16 @@ mod tests {
         r.record_span(SpanEvent::closed(1_000, 2_000, 500, 3, 42));
         r.tenant("alice", |t| t.requests += 3);
         r.window_dispatched(3);
+        r.connection_multiplexed();
+        r.set_reader_cores(4);
+        r.sample_lane_depths(&[2, 0]);
         let text = prometheus(&r.snapshot());
         check(&text).expect("populated snapshot must scrape clean");
         assert!(text.contains("cpm_requests_total 3"));
+        assert!(text.contains("cpm_connections_multiplexed_total 1"));
+        assert!(text.contains("cpm_reader_cores 4"));
+        assert!(text.contains("cpm_lane_queue_depth{lane=\"0\"} 2"));
+        assert!(text.contains("cpm_lane_queue_depth{lane=\"1\"} 0"));
         assert!(text.contains("cpm_tenant_requests_total{tenant=\"alice\"} 3"));
         assert!(text.contains("cpm_span_stage_ns_total{stage=\"exec\"} 2000"));
         assert!(text.contains("cpm_request_latency_us_bucket{le=\"127\"} 3"));

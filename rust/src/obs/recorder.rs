@@ -114,6 +114,7 @@ pub struct Recorder {
     group_plan_ns: AtomicU64,
     // Wire counters.
     connections: AtomicU64,
+    connections_multiplexed: AtomicU64,
     windows: AtomicU64,
     coalesced_windows: AtomicU64,
     max_window: AtomicU64,
@@ -130,12 +131,14 @@ pub struct Recorder {
     worker_threads: AtomicU64,
     worker_busy: AtomicU64,
     worker_dispatches: AtomicU64,
+    reader_cores: AtomicU64,
     // Distributions.
     latency_us: AtomicHistogram,
     stage_us: [AtomicHistogram; 4],
     // Cold-path state.
     tenants: Mutex<BTreeMap<String, TenantMetrics>>,
     ring: Mutex<SpanRing>,
+    lane_depths: Mutex<Vec<u64>>,
 }
 
 impl Recorder {
@@ -200,6 +203,18 @@ impl Recorder {
         self.connections.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A readiness reader core adopted an accepted connection into its
+    /// multiplexed set.
+    pub fn connection_multiplexed(&self) {
+        self.connections_multiplexed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record how many reader cores the serving tier is running (a
+    /// startup-time gauge, so `cpm stats` shows the live topology).
+    pub fn set_reader_cores(&self, n: u64) {
+        self.reader_cores.store(n, Ordering::Relaxed);
+    }
+
     /// An admission window of `n` requests was dispatched.
     pub fn window_dispatched(&self, n: u64) {
         self.windows.fetch_add(1, Ordering::Relaxed);
@@ -238,14 +253,23 @@ impl Recorder {
         self.worker_dispatches.store(worker_dispatches, Ordering::Relaxed);
     }
 
+    /// Store the per-dispatcher-lane queue depths a scrape observed.
+    pub fn sample_lane_depths(&self, depths: &[u64]) {
+        let mut lanes = lock(&self.lane_depths);
+        lanes.clear();
+        lanes.extend_from_slice(depths);
+    }
+
     /// A stats scrape was answered.
     pub fn scraped(&self) {
         self.scrapes.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Total modeled device cycles so far (macro + exclusive). The
-    /// dispatcher is the sole writer of device costs, so deltas taken
-    /// around a `handle_batch` call on that thread are exact.
+    /// Total modeled device cycles so far (macro + exclusive). Device
+    /// costs are only recorded inside `handle_batch`, which every
+    /// dispatcher lane calls while holding the server exclusively, so a
+    /// delta taken around one `handle_batch` call under that access is
+    /// exact even with multiple lanes.
     pub fn device_cycles_total(&self) -> u64 {
         self.device_macro_cycles.load(Ordering::Relaxed)
             + self.device_exclusive_ops.load(Ordering::Relaxed)
@@ -276,6 +300,7 @@ impl Recorder {
                 coalesced_windows: load(&self.coalesced_windows),
                 max_window: load(&self.max_window),
                 window_requests: load(&self.window_requests),
+                connections_multiplexed: load(&self.connections_multiplexed),
             },
             spans: SpanStats {
                 recorded: load(&self.spans_recorded),
@@ -291,6 +316,8 @@ impl Recorder {
                 worker_threads: load(&self.worker_threads),
                 worker_busy: load(&self.worker_busy),
                 worker_dispatches: load(&self.worker_dispatches),
+                reader_cores: load(&self.reader_cores),
+                lane_queue_depths: lock(&self.lane_depths).clone(),
             },
         }
     }
@@ -374,10 +401,28 @@ mod tests {
         let r = Recorder::new();
         r.sample_gauges(7, 4, 1, 99);
         r.sample_gauges(0, 4, 0, 120);
+        r.set_reader_cores(4);
+        r.sample_lane_depths(&[5, 2]);
+        r.sample_lane_depths(&[0, 3]);
         let g = r.snapshot().gauges;
         assert_eq!(g.queue_depth, 0);
         assert_eq!(g.worker_threads, 4);
         assert_eq!(g.worker_busy, 0);
         assert_eq!(g.worker_dispatches, 120);
+        assert_eq!(g.reader_cores, 4);
+        assert_eq!(g.lane_queue_depths, vec![0, 3]);
+    }
+
+    #[test]
+    fn multiplexed_connections_count_separately_from_accepts() {
+        let r = Recorder::new();
+        r.connection_accepted();
+        r.connection_accepted();
+        // Only one of the two accepts was adopted by a reader core
+        // (the other was dropped at the accept cap).
+        r.connection_multiplexed();
+        let w = r.snapshot().wire;
+        assert_eq!(w.connections, 2);
+        assert_eq!(w.connections_multiplexed, 1);
     }
 }

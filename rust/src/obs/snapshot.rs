@@ -72,6 +72,10 @@ pub struct WireMetrics {
     pub max_window: u64,
     /// Requests admitted through windows (sum of window sizes).
     pub window_requests: u64,
+    /// Connections taken over by a readiness reader core (each also
+    /// counts in `connections`; the two diverge only for connections
+    /// dropped at the accept cap before a core adopted them).
+    pub connections_multiplexed: u64,
 }
 
 impl WireMetrics {
@@ -129,9 +133,9 @@ impl SpanStats {
 }
 
 /// Point-in-time gauges sampled when a scrape is answered.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct GaugeStats {
-    /// Requests waiting in the admission queue at sample time.
+    /// Requests waiting across all admission lanes at sample time.
     pub queue_depth: u64,
     /// Worker-pool threads alive.
     pub worker_threads: u64,
@@ -139,6 +143,12 @@ pub struct GaugeStats {
     pub worker_busy: u64,
     /// Worker-pool dispatches completed since startup.
     pub worker_dispatches: u64,
+    /// Readiness reader cores multiplexing connections (0 when the
+    /// server is not fronted by the TCP tier).
+    pub reader_cores: u64,
+    /// Requests waiting per dispatcher lane at sample time, indexed by
+    /// lane id (empty when the server is not fronted by the TCP tier).
+    pub lane_queue_depths: Vec<u64>,
 }
 
 /// Snapshot of every served-path counter, histogram, span, and gauge.

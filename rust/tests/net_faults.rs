@@ -1,0 +1,323 @@
+//! Fault injection against the readiness-driven connection tier.
+//!
+//! Every scenario wounds one connection — stalls mid-frame, truncates a
+//! length prefix, floods an oversized frame, or stops draining replies —
+//! and asserts two things: the wounded connection gets a typed
+//! [`CpmError::Wire`]-style outcome (a correct late reply, or a clean
+//! disconnect), and the serving tier never blocks — healthy traffic on
+//! other connections keeps completing *during* the fault, proven under a
+//! watchdog that fails the test if any scenario wedges.
+//!
+//! Run with `RUST_TEST_THREADS=1` (CI does): the scenarios assert
+//! liveness windows that parallel test noise would blur.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::thread;
+use std::time::Duration;
+
+use cpm::coordinator::{CpmServer, Request, Response};
+use cpm::net::{wire, CpmClient, NetConfig, NetServer, WindowConfig};
+use cpm::pool::{DevicePool, PoolConfig};
+
+/// Fail the test if `f` does not finish within `secs` — the tier-wide
+/// "the dispatcher never blocks" assertion every scenario runs under.
+fn with_watchdog<F: FnOnce() + Send + 'static>(secs: u64, f: F) {
+    let (tx, rx) = mpsc::channel();
+    let h = thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) => h.join().expect("scenario thread panicked"),
+        Err(RecvTimeoutError::Disconnected) => h.join().expect("scenario thread panicked"),
+        Err(RecvTimeoutError::Timeout) => {
+            panic!("watchdog: scenario still running after {secs}s — a serving thread is blocked")
+        }
+    }
+}
+
+/// A server with one small searchable corpus per listed tenant, plus a
+/// `flood/notes` corpus big enough that its search replies are ~256 KiB
+/// each (the reply-write-timeout scenario needs bulk).
+fn build_server(tenants: &[&str]) -> CpmServer {
+    let mut pool = DevicePool::new(PoolConfig {
+        capacity_pes: 1 << 22,
+        tenant_quota_pes: 1 << 20,
+        corpus_slack: 64,
+        ..PoolConfig::default()
+    });
+    for t in tenants {
+        let content = format!("alpha beta gamma alpha delta {t}");
+        pool.create_corpus(t, "notes", content.as_bytes()).unwrap();
+    }
+    let bulk: Vec<u8> = b"ab".repeat(32 * 1024);
+    pool.create_corpus("flood", "notes", &bulk).unwrap();
+    CpmServer::with_pool(pool, 1 << 20)
+}
+
+fn healthy_roundtrip(addr: std::net::SocketAddr, tenant: &str) {
+    let mut client = CpmClient::connect(addr).unwrap();
+    client.hello(tenant).unwrap();
+    let r = client
+        .call_addressed(None, Some("notes"), &Request::Search(b"alpha".to_vec()))
+        .unwrap();
+    let Response::Matches(hits) = r else {
+        panic!("expected matches, got {r:?}");
+    };
+    assert_eq!(hits.len(), 2, "both 'alpha' occurrences must match");
+}
+
+#[test]
+fn stalled_peer_mid_frame_resumes_and_serving_continues() {
+    with_watchdog(120, || {
+        let net = NetServer::spawn(build_server(&["t0", "mid"]), NetConfig::default()).unwrap();
+        let addr = net.addr();
+
+        // Write the frame's prefix and a few payload bytes, then stall:
+        // the reader core must park the partial frame in the
+        // connection's reassembly buffer without holding anything else.
+        let payload = wire::encode_request(
+            7,
+            Some("mid"),
+            Some("notes"),
+            &Request::Search(b"alpha".to_vec()),
+        );
+        let framed = wire::frame_bytes(&payload).unwrap();
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        raw.write_all(&framed[..10]).unwrap();
+        raw.flush().unwrap();
+
+        // While the frame dangles, other connections serve normally.
+        for _ in 0..5 {
+            healthy_roundtrip(addr, "t0");
+        }
+
+        // Finish the frame: the buffered prefix must resume, not restart.
+        raw.write_all(&framed[10..]).unwrap();
+        let reply = wire::read_frame(&mut raw).unwrap().expect("late reply");
+        let (id, result) = wire::decode_reply(&reply).unwrap();
+        assert_eq!(id, 7);
+        let Ok(Response::Matches(hits)) = result else {
+            panic!("stalled-then-resumed request must succeed, got {result:?}");
+        };
+        assert_eq!(hits.len(), 2);
+        net.shutdown();
+    });
+}
+
+#[test]
+fn truncated_length_prefix_then_close_is_a_clean_disconnect() {
+    with_watchdog(120, || {
+        let net = NetServer::spawn(build_server(&["t0"]), NetConfig::default()).unwrap();
+        let addr = net.addr();
+
+        // Two bytes of the four-byte length prefix, then gone.
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.write_all(&[0x10, 0x00]).unwrap();
+        drop(raw);
+
+        // The tier shrugs: the half-open connection reaps without taking
+        // a thread or a window down with it.
+        healthy_roundtrip(addr, "t0");
+        let server = net.shutdown();
+        let m = server.metrics();
+        assert_eq!(m.wire.connections, 2);
+        assert_eq!(m.wire.connections_multiplexed, 2);
+        assert_eq!(m.errors, 0);
+    });
+}
+
+#[test]
+fn oversized_frame_prefix_is_rejected_before_buffering() {
+    with_watchdog(120, || {
+        let net = NetServer::spawn(build_server(&["t0"]), NetConfig::default()).unwrap();
+        let addr = net.addr();
+
+        // Claim a frame one byte over the cap, then flood garbage. The
+        // server must reject on the prefix alone — the connection dies
+        // long before the claimed payload could ever be buffered.
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let oversized = (wire::MAX_FRAME as u32) + 1;
+        raw.write_all(&oversized.to_le_bytes()).unwrap();
+        let chunk = vec![0u8; 64 * 1024];
+        let mut sent = 0usize;
+        let cap = 64 * 1024 * 1024;
+        while sent < cap {
+            match raw.write(&chunk) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => sent += n,
+            }
+        }
+        assert!(
+            sent < cap,
+            "server kept accepting an oversized frame ({sent} bytes in)"
+        );
+
+        // And the flood harmed nobody else.
+        healthy_roundtrip(addr, "t0");
+        net.shutdown();
+    });
+}
+
+#[test]
+fn reply_write_timeout_disconnects_the_stalled_peer_not_the_server() {
+    with_watchdog(120, || {
+        let net = NetServer::spawn(
+            build_server(&["t0"]),
+            NetConfig {
+                write_timeout: Duration::from_millis(300),
+                ..NetConfig::default()
+            },
+        )
+        .unwrap();
+        let addr = net.addr();
+
+        // 40 bulk searches (~256 KiB of reply each) from a peer that
+        // never reads: replies queue on the connection's outbound, the
+        // socket jams, and the head-frame deadline must cut the peer
+        // loose — without any dispatcher ever waiting on the socket.
+        let mut stalled = TcpStream::connect(addr).unwrap();
+        stalled
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        for id in 0..40u64 {
+            let payload = wire::encode_request(
+                id,
+                Some("flood"),
+                Some("notes"),
+                &Request::Search(b"ab".to_vec()),
+            );
+            stalled.write_all(&wire::frame_bytes(&payload).unwrap()).unwrap();
+        }
+        stalled.flush().unwrap();
+
+        // Healthy traffic flows *during* the jam — the old design made
+        // every reply risk a dispatcher stall up to the write timeout;
+        // the readiness tier must not even hiccup.
+        for _ in 0..20 {
+            healthy_roundtrip(addr, "t0");
+            thread::sleep(Duration::from_millis(25));
+        }
+
+        // The stalled peer was disconnected: draining what the socket
+        // buffers already absorbed hits EOF/reset well short of the ~10
+        // MiB the 40 replies would total.
+        let mut drained = 0usize;
+        let mut buf = vec![0u8; 64 * 1024];
+        loop {
+            match stalled.read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => drained += n,
+            }
+        }
+        assert!(
+            drained < 5 * 1024 * 1024,
+            "server delivered {drained} bytes to a peer that stopped reading"
+        );
+        net.shutdown();
+    });
+}
+
+#[test]
+fn vanishing_peer_with_queued_requests_is_reaped() {
+    with_watchdog(120, || {
+        let net = NetServer::spawn(build_server(&["t0", "ghost"]), NetConfig::default()).unwrap();
+        let addr = net.addr();
+
+        // Pipeline a burst and vanish without reading a single reply.
+        let mut ghost = CpmClient::connect(addr).unwrap();
+        ghost.hello("ghost").unwrap();
+        for _ in 0..50 {
+            ghost
+                .send(None, Some("notes"), &Request::Search(b"alpha".to_vec()))
+                .unwrap();
+        }
+        drop(ghost);
+
+        // Whatever was admitted either executes (replies dropped on the
+        // closed outbound) or is reaped with its arrival stamp — either
+        // way the window deadline unpins and serving continues.
+        for _ in 0..5 {
+            healthy_roundtrip(addr, "t0");
+        }
+        let server = net.shutdown();
+        let m = server.metrics();
+        assert_eq!(
+            m.spans.wait_ns + m.spans.exec_ns + m.spans.write_ns,
+            m.spans.total_ns,
+            "span ledger must decompose even with reaped connections"
+        );
+    });
+}
+
+#[test]
+fn admission_backpressure_parks_the_connection_and_stats_stay_live() {
+    with_watchdog(120, || {
+        let net = NetServer::spawn(
+            build_server(&["t0"]),
+            NetConfig {
+                window: WindowConfig {
+                    max_delay: Duration::from_millis(800),
+                    max_batch: 8,
+                    max_queue: 4,
+                },
+                reader_cores: 1,
+                dispatch_lanes: 1,
+                ..NetConfig::default()
+            },
+        )
+        .unwrap();
+        let addr = net.addr();
+
+        // 12 pipelined requests against a 4-deep queue: the lane fills,
+        // the connection parks, and TCP backpressure carries the rest.
+        let mut client = CpmClient::connect(addr).unwrap();
+        client.hello("t0").unwrap();
+        let mut ids = Vec::new();
+        for _ in 0..12 {
+            ids.push(
+                client
+                    .send(None, Some("notes"), &Request::Search(b"alpha".to_vec()))
+                    .unwrap(),
+            );
+        }
+
+        // Mid-stall, a scrape on another connection answers from the
+        // reader core — never queued behind the jammed window.
+        thread::sleep(Duration::from_millis(100));
+        let mut monitor = CpmClient::connect(addr).unwrap();
+        let m = monitor.stats().unwrap();
+        assert!(
+            m.gauges.queue_depth >= 1,
+            "scrape must land while the lane is backed up, saw {:?}",
+            m.gauges
+        );
+        assert_eq!(
+            m.gauges.lane_queue_depths.iter().sum::<u64>(),
+            m.gauges.queue_depth,
+            "lane depths must sum to the queue-depth gauge"
+        );
+        assert_eq!(m.gauges.reader_cores, 1);
+
+        // Backpressure releases: every parked and buffered request is
+        // eventually admitted and answered correctly, in order by id.
+        let mut got = std::collections::BTreeMap::new();
+        while got.len() < ids.len() {
+            let (id, result) = client.recv().unwrap();
+            got.insert(id, result);
+        }
+        for id in ids {
+            let r = got.remove(&id).expect("reply for every request");
+            let Ok(Response::Matches(hits)) = r else {
+                panic!("backpressured request {id} failed: {r:?}");
+            };
+            assert_eq!(hits.len(), 2);
+        }
+        let server = net.shutdown();
+        assert_eq!(server.metrics().errors, 0);
+    });
+}

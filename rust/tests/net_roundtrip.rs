@@ -208,6 +208,110 @@ fn tenant_pinning_scopes_default_requests() {
     assert_eq!(server.metrics().wire.connections, 3);
 }
 
+/// Recover every complete frame a [`wire::FrameBuf`] can yield.
+fn drain_frames(fb: &mut wire::FrameBuf) -> Vec<Vec<u8>> {
+    let mut out = Vec::new();
+    while let Some(frame) = fb.next_frame().expect("well-formed stream") {
+        out.push(frame);
+    }
+    out
+}
+
+#[test]
+fn wire_frames_survive_every_split_boundary() {
+    // A stream of frames including the 0-length edge, cut at *every*
+    // byte position: the reassembly buffer must hand back the identical
+    // frame sequence no matter where the network fragments it.
+    let payloads: Vec<Vec<u8>> = vec![
+        Vec::new(),
+        vec![0xAB],
+        (0..64u8).collect(),
+        b"framing".to_vec(),
+    ];
+    let mut stream = Vec::new();
+    for p in &payloads {
+        stream.extend_from_slice(&wire::frame_bytes(p).unwrap());
+    }
+    for split in 0..=stream.len() {
+        let mut fb = wire::FrameBuf::new();
+        fb.extend(&stream[..split]);
+        let mut got = drain_frames(&mut fb);
+        fb.extend(&stream[split..]);
+        got.extend(drain_frames(&mut fb));
+        assert_eq!(got, payloads, "split at byte {split}");
+        assert_eq!(fb.buffered(), 0, "split at byte {split} left residue");
+    }
+}
+
+#[test]
+fn wire_frames_survive_randomized_chunking() {
+    use cpm::util::propcheck::{forall, Config};
+    forall(
+        Config {
+            iters: 128,
+            base_seed: 0xF8A3E,
+        },
+        |rng| {
+            // Random frame sizes (0-length included) delivered in random
+            // chunk sizes, modeling arbitrary TCP segmentation.
+            let n = rng.range(1, 7);
+            let payloads: Vec<Vec<u8>> = (0..n)
+                .map(|_| {
+                    let len = if rng.bool() { rng.below(8) } else { rng.below(2048) };
+                    (0..len).map(|_| rng.below(256) as u8).collect()
+                })
+                .collect();
+            let mut stream = Vec::new();
+            for p in &payloads {
+                stream.extend_from_slice(&wire::frame_bytes(p).unwrap());
+            }
+            let mut chunks = Vec::new();
+            let mut off = 0usize;
+            while off < stream.len() {
+                let take = 1 + rng.below((stream.len() - off).min(97) as u64) as usize;
+                chunks.push(stream[off..off + take].to_vec());
+                off += take;
+            }
+            (payloads, chunks)
+        },
+        |(payloads, chunks)| {
+            let mut fb = wire::FrameBuf::new();
+            let mut got = Vec::new();
+            for chunk in chunks {
+                fb.extend(chunk);
+                got.extend(drain_frames(&mut fb));
+            }
+            cpm::prop_assert_eq!(&got, payloads);
+            cpm::prop_assert!(fb.buffered() == 0, "residue after the final chunk");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn frame_length_edges_round_trip_and_overflow_is_typed() {
+    // Exactly MAX_FRAME bytes: legal, and reassembly survives the
+    // prefix and payload arriving separately.
+    let payload = vec![0x5Au8; wire::MAX_FRAME];
+    let framed = wire::frame_bytes(&payload).unwrap();
+    let mut fb = wire::FrameBuf::new();
+    fb.extend(&framed[..4]);
+    assert!(fb.next_frame().unwrap().is_none(), "payload not arrived yet");
+    fb.extend(&framed[4..]);
+    let got = fb.next_frame().unwrap().expect("max-length frame");
+    assert_eq!(got.len(), wire::MAX_FRAME);
+    assert_eq!(got, payload);
+
+    // One byte over: rejected from the prefix alone, as a typed wire
+    // error, before any payload is buffered.
+    let mut fb = wire::FrameBuf::new();
+    fb.extend(&((wire::MAX_FRAME as u32) + 1).to_le_bytes());
+    assert!(
+        matches!(fb.next_frame(), Err(cpm::CpmError::Wire(_))),
+        "oversized prefix must be a typed wire error"
+    );
+}
+
 #[test]
 fn protocol_violation_closes_the_connection() {
     let net = NetServer::spawn(build_server(), NetConfig::default()).unwrap();

@@ -1,0 +1,327 @@
+//! Soak: 1000 pipelined connections against the readiness tier.
+//!
+//! 100 tenants × 10 connections each drive mixed edit/read scripts over
+//! real sockets, every connection against its own private corpus, while
+//! a monitor connection scrapes live stats throughout. Asserted:
+//!
+//! * **Semantics** — every wire response equals the same script replayed
+//!   serially in-process through `handle_addressed`.
+//! * **Flat threads** — with 1000 connections live, the serving process
+//!   runs exactly `reader_cores` reader threads (plus the dispatcher
+//!   lanes and the accept thread); thread count does not scale with
+//!   connections.
+//! * **Monotonic observability** — counters sampled mid-soak never move
+//!   backwards, and the final ledger accounts for every request.
+//! * **Tenant fairness** — pooling each tenant's per-chunk round-trip
+//!   times (the client-visible proxy for window wait), the worst
+//!   tenant's p99 stays within 4× the median tenant's p99, modulo a
+//!   floor that absorbs scheduler noise.
+//!
+//! Ignored by default (it opens ~2k fds and runs for seconds); the CI
+//! soak leg runs it with `--ignored`. Skips gracefully when the fd
+//! rlimit is too small.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use cpm::coordinator::{Addressed, CpmServer, Request, Response};
+use cpm::net::{CpmClient, NetConfig, NetServer};
+use cpm::obs::Metrics;
+use cpm::pool::{DevicePool, PoolConfig};
+
+/// What one soak connection brings home: its responses in script order,
+/// and the round-trip time of each pipelined chunk.
+type ConnOutcome = (Vec<cpm::Result<Response>>, Vec<Duration>);
+
+const TENANTS: usize = 100;
+const CONNS_PER_TENANT: usize = 10;
+const CONNS: usize = TENANTS * CONNS_PER_TENANT;
+const CHUNK: usize = 4;
+const READER_CORES: usize = 4;
+const LANES: usize = 2;
+
+fn tenant(t: usize) -> String {
+    format!("tenant{t}")
+}
+
+/// Connection `c` of tenant `t` edits only its own corpus, so wire
+/// concurrency cannot reorder anything observable: per-connection serial
+/// replay is the exact reference.
+fn device(c: usize) -> String {
+    format!("notes{c}")
+}
+
+fn build_server() -> CpmServer {
+    let mut pool = DevicePool::new(PoolConfig {
+        capacity_pes: 1 << 22,
+        tenant_quota_pes: 1 << 16,
+        corpus_slack: 64,
+        ..PoolConfig::default()
+    });
+    for t in 0..TENANTS {
+        for c in 0..CONNS_PER_TENANT {
+            let content = format!("alpha beta gamma alpha delta {t}-{c}");
+            pool.create_corpus(&tenant(t), &device(c), content.as_bytes())
+                .unwrap();
+        }
+    }
+    CpmServer::with_pool(pool, 1 << 16)
+}
+
+/// The 16-op mixed edit/read script for connection `(t, c)`.
+fn script(t: usize, c: usize) -> Vec<Addressed> {
+    let me = tenant(t);
+    let dev = device(c);
+    let mut ops = vec![
+        Addressed::new(&me, &dev, Request::Search(b"alpha".to_vec())),
+        Addressed::new(&me, &dev, Request::Insert(0, format!("z{t}-{c} ").into_bytes())),
+        Addressed::new(&me, &dev, Request::Search(b"alpha".to_vec())),
+        Addressed::for_tenant(&me, Request::Sum(vec![t as i32, c as i32, 7])),
+        Addressed::new(&me, &dev, Request::Replace(b"beta".to_vec(), b"BET".to_vec())),
+        Addressed::new(&me, &dev, Request::Search(b"BET".to_vec())),
+        Addressed::new(&me, &dev, Request::Search(b"gamma".to_vec())),
+        Addressed::for_tenant(&me, Request::Sort(vec![9, 1, (t % 7) as i32, 4])),
+    ];
+    let more: Vec<Addressed> = ops
+        .iter()
+        .map(|a| {
+            // Second lap of reads/compute (no further edits, so the lap
+            // is order-insensitive relative to itself).
+            match &a.op {
+                Request::Insert(..) => {
+                    Addressed::new(&me, &dev, Request::Search(format!("z{t}-{c}").into_bytes()))
+                }
+                Request::Replace(..) => {
+                    Addressed::new(&me, &dev, Request::Search(b"delta".to_vec()))
+                }
+                other => Addressed {
+                    tenant: a.tenant.clone(),
+                    device: a.device.clone(),
+                    op: other.clone(),
+                },
+            }
+        })
+        .collect();
+    ops.extend(more);
+    ops
+}
+
+fn connect_retry(addr: std::net::SocketAddr) -> CpmClient {
+    let mut delay = Duration::from_millis(1);
+    for _ in 0..80 {
+        match CpmClient::connect(addr) {
+            Ok(c) => return c,
+            Err(_) => {
+                thread::sleep(delay);
+                delay = (delay * 2).min(Duration::from_millis(100));
+            }
+        }
+    }
+    panic!("could not connect to the soak server at {addr}");
+}
+
+/// Soft fd rlimit, if readable (linux).
+fn fd_soft_limit() -> Option<u64> {
+    let limits = std::fs::read_to_string("/proc/self/limits").ok()?;
+    let line = limits.lines().find(|l| l.starts_with("Max open files"))?;
+    line.split_whitespace().nth(3)?.parse().ok()
+}
+
+/// Names of this process's `cpm-net-*` threads, if readable (linux).
+fn net_thread_names() -> Option<Vec<String>> {
+    let dir = std::fs::read_dir("/proc/self/task").ok()?;
+    let mut names = Vec::new();
+    for entry in dir.flatten() {
+        if let Ok(comm) = std::fs::read_to_string(entry.path().join("comm")) {
+            let name = comm.trim().to_string();
+            if name.starts_with("cpm-net-") {
+                names.push(name);
+            }
+        }
+    }
+    Some(names)
+}
+
+fn p99(samples: &mut [Duration]) -> Duration {
+    samples.sort_unstable();
+    samples[(samples.len() - 1) * 99 / 100]
+}
+
+fn assert_same(wire_r: &cpm::Result<Response>, local_r: &cpm::Result<Response>, ctx: &str) {
+    match (wire_r, local_r) {
+        (Ok(a), Ok(b)) => assert_eq!(a, b, "{ctx}"),
+        (Err(a), Err(b)) => assert_eq!(a.to_string(), b.to_string(), "{ctx}"),
+        other => panic!("wire/local divergence at {ctx}: {other:?}"),
+    }
+}
+
+#[test]
+#[ignore = "soak: 1000 connections, ~2k fds; the CI soak leg runs it with --ignored"]
+fn soak_1k_connections_matches_serial_serving_with_flat_threads() {
+    if let Some(limit) = fd_soft_limit() {
+        if limit < 2500 {
+            eprintln!("skipping soak: fd soft limit {limit} < 2500 (raise with ulimit -n)");
+            return;
+        }
+    }
+
+    let net = NetServer::spawn(
+        build_server(),
+        NetConfig {
+            addr: "127.0.0.1:0".into(),
+            max_connections: CONNS + 8,
+            reader_cores: READER_CORES,
+            dispatch_lanes: LANES,
+            ..NetConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = net.addr();
+
+    // Live monitor: scrape throughout the soak, then prove no counter
+    // ever moved backwards.
+    let stop = Arc::new(AtomicBool::new(false));
+    let monitor = {
+        let stop = Arc::clone(&stop);
+        thread::spawn(move || -> Vec<Metrics> {
+            let mut client = connect_retry(addr);
+            let mut samples = Vec::new();
+            while !stop.load(Ordering::Relaxed) {
+                samples.push(client.stats().expect("mid-soak scrape"));
+                thread::sleep(Duration::from_millis(25));
+            }
+            samples
+        })
+    };
+
+    // All 1000 connections come up before any traffic flows (the
+    // barrier includes the main thread, which samples the serving
+    // process's thread roster while every connection is live).
+    let barrier = Arc::new(Barrier::new(CONNS + 1));
+    let mut handles = Vec::with_capacity(CONNS);
+    for t in 0..TENANTS {
+        for c in 0..CONNS_PER_TENANT {
+            let barrier = Arc::clone(&barrier);
+            let h = thread::Builder::new()
+                .stack_size(512 * 1024)
+                .spawn(move || -> ConnOutcome {
+                    let me = tenant(t);
+                    let mut client = connect_retry(addr);
+                    client.hello(&me).unwrap();
+                    barrier.wait();
+                    let script = script(t, c);
+                    let mut responses = Vec::with_capacity(script.len());
+                    let mut rtts = Vec::new();
+                    for chunk in script.chunks(CHUNK) {
+                        // Pipelined: send the whole chunk, then collect,
+                        // timing the chunk round-trip as this tenant's
+                        // wait proxy.
+                        let started = Instant::now();
+                        let mut ids = Vec::with_capacity(chunk.len());
+                        for a in chunk {
+                            ids.push(client.send(None, a.device.as_deref(), &a.op).unwrap());
+                        }
+                        let mut got = std::collections::BTreeMap::new();
+                        while got.len() < ids.len() {
+                            let (id, result) = client.recv().unwrap();
+                            got.insert(id, result);
+                        }
+                        rtts.push(started.elapsed());
+                        for id in ids {
+                            responses.push(got.remove(&id).expect("reply for every id"));
+                        }
+                    }
+                    (responses, rtts)
+                })
+                .expect("spawning soak client");
+            handles.push(h);
+        }
+    }
+    barrier.wait();
+
+    // Flat thread count with 1000 connections live: exactly the
+    // configured reader cores + lanes + the accept thread, nothing
+    // per-connection.
+    if let Some(names) = net_thread_names() {
+        let readers = names.iter().filter(|n| n.starts_with("cpm-net-read")).count();
+        let lanes = names.iter().filter(|n| n.starts_with("cpm-net-lane")).count();
+        let accepts = names.iter().filter(|n| n.starts_with("cpm-net-accept")).count();
+        assert_eq!(readers, READER_CORES, "reader threads must stay flat: {names:?}");
+        assert_eq!(lanes, LANES, "dispatcher lanes: {names:?}");
+        assert_eq!(accepts, 1, "accept threads: {names:?}");
+        assert_eq!(names.len(), READER_CORES + LANES + 1, "stray net threads: {names:?}");
+    }
+
+    let results: Vec<ConnOutcome> = handles
+        .into_iter()
+        .map(|h| h.join().expect("soak client panicked"))
+        .collect();
+    stop.store(true, Ordering::Relaxed);
+    let samples = monitor.join().expect("monitor panicked");
+
+    // Monotonic observability under churn.
+    assert!(samples.len() >= 3, "monitor took too few samples");
+    for pair in samples.windows(2) {
+        assert!(pair[1].requests >= pair[0].requests, "requests went backwards");
+        assert!(pair[1].wire.windows >= pair[0].wire.windows, "windows went backwards");
+        assert!(
+            pair[1].spans.recorded >= pair[0].spans.recorded,
+            "spans went backwards"
+        );
+        assert!(pair[1].scrapes > pair[0].scrapes, "scrapes must strictly increase");
+    }
+
+    // Wire serving ≡ serial in-process serving, connection by connection.
+    let mut local = build_server();
+    let total_ops: usize = CONNS * script(0, 0).len();
+    for (i, (responses, _)) in results.iter().enumerate() {
+        let (t, c) = (i / CONNS_PER_TENANT, i % CONNS_PER_TENANT);
+        let reference: Vec<cpm::Result<Response>> = script(t, c)
+            .iter()
+            .map(|a| local.handle_addressed(a))
+            .collect();
+        assert_eq!(responses.len(), reference.len());
+        for (k, (w, l)) in responses.iter().zip(&reference).enumerate() {
+            assert_same(w, l, &format!("tenant {t} conn {c} op {k}"));
+        }
+    }
+
+    // Tenant fairness: pool each tenant's chunk round-trips; the worst
+    // p99 stays within 4× the median tenant's p99 (floored so µs-level
+    // medians on an idle machine don't turn noise into failures).
+    let mut per_tenant_p99 = Vec::with_capacity(TENANTS);
+    for tenant_conns in results.chunks(CONNS_PER_TENANT) {
+        let mut pooled: Vec<Duration> = tenant_conns
+            .iter()
+            .flat_map(|(_, rtts)| rtts.iter().copied())
+            .collect();
+        per_tenant_p99.push(p99(&mut pooled));
+    }
+    per_tenant_p99.sort_unstable();
+    let median = per_tenant_p99[TENANTS / 2];
+    let worst = *per_tenant_p99.last().unwrap();
+    let bound = (median * 4).max(Duration::from_millis(100));
+    assert!(
+        worst <= bound,
+        "tenant fairness violated: worst p99 {worst:?} vs median {median:?} (bound {bound:?})"
+    );
+
+    // Final ledger: every request accounted, nothing lost or doubled.
+    let server = net.shutdown();
+    let m = server.metrics();
+    assert_eq!(m.requests as usize, total_ops);
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.wire.window_requests as usize, total_ops);
+    assert_eq!(m.spans.recorded as usize, total_ops);
+    assert_eq!(m.latency.count() as usize, total_ops);
+    assert_eq!(m.wire.connections as usize, CONNS + 1, "1000 clients + 1 monitor");
+    assert_eq!(m.wire.connections_multiplexed as usize, CONNS + 1);
+    assert_eq!(m.gauges.reader_cores as usize, READER_CORES);
+    assert_eq!(
+        m.spans.wait_ns + m.spans.exec_ns + m.spans.write_ns,
+        m.spans.total_ns,
+        "span stage ledger does not decompose"
+    );
+}
