@@ -1,5 +1,5 @@
 //! The paper-reproduction benchmark harness: one section per experiment in
-//! DESIGN.md's index (E1–E23). `cargo bench` runs everything;
+//! DESIGN.md's index (E1–E24). `cargo bench` runs everything;
 //! `cargo bench -- e7` runs one experiment.
 //!
 //! Each section prints a table of *measured* cycle counts next to the
@@ -1141,6 +1141,151 @@ fn e23_backends() {
     }
 }
 
+fn e24_multi_plane_scheduling() {
+    // The E20 headline workload at an *equal PE budget*, served on one
+    // plane vs two: same total capacity, same residents, same shuffled
+    // 120-request mix. The multi-plane schedule overlaps per-plane
+    // (load, exec) chains, so its modeled makespan must strictly beat
+    // the single-plane overlapped makespan; turning on the §8 DMA side
+    // bus (`dma 4`) can only shave load phases further. All three
+    // servers answer bit-identically — placement and DMA are cost-model
+    // concerns only.
+    fn build_server(planes: usize, dma: u64) -> CpmServer {
+        let mut rng = Rng::new(201);
+        let cfg = cpm::ServerConfig::new()
+            .capacity(1 << 18)
+            .quota(1 << 18)
+            .corpus_slack(1024)
+            .planes(planes)
+            .dma(dma)
+            .engine_capacity(1 << 16);
+        let mut pool = cfg.device_pool();
+        let schema = Schema::new(&[("price", 2), ("qty", 1)]).unwrap();
+        pool.create_table(DEFAULT_TENANT, DEFAULT_TABLE, schema, 4096)
+            .unwrap();
+        let corpus: Vec<u8> = (0..4096).map(|_| b'a' + rng.range(0, 4) as u8).collect();
+        pool.create_corpus(DEFAULT_TENANT, DEFAULT_CORPUS, &corpus)
+            .unwrap();
+        pool.create_array(DEFAULT_TENANT, DEFAULT_ARRAY, &rng.vec_i32(2048, 0, 1000), 2048)
+            .unwrap();
+        let mut s = cfg.server(pool);
+        let rows: Vec<Vec<u64>> = (0..4096)
+            .map(|_| vec![rng.below(10_000), rng.below(100)])
+            .collect();
+        s.load_rows(&rows).unwrap();
+        s
+    }
+
+    let mut rng = Rng::new(202);
+    let mut batch: Vec<Addressed> = Vec::new();
+    for k in 0..48usize {
+        batch.push(Addressed::local(Request::Sql(format!(
+            "SELECT COUNT WHERE price < {}",
+            1000 * (1 + k % 8)
+        ))));
+    }
+    for k in 0..16usize {
+        batch.push(Addressed::local(Request::Sql(format!(
+            "SELECT ROWS WHERE price < {} AND qty >= 50",
+            2000 * (1 + k % 4)
+        ))));
+    }
+    let patterns: [&[u8]; 4] = [b"ab", b"bca", b"aabb", b"cd"];
+    for k in 0..24usize {
+        batch.push(Addressed::local(Request::Search(patterns[k % 4].to_vec())));
+    }
+    for _ in 0..4 {
+        batch.push(Addressed::local(Request::Insert(0, b"zz".to_vec())));
+    }
+    for _ in 0..4 {
+        batch.push(Addressed::local(Request::Delete(0, 2)));
+    }
+    for _ in 0..16 {
+        batch.push(Addressed::local(Request::Threshold(
+            rng.vec_i32(2048, 0, 1000),
+            500,
+        )));
+    }
+    for _ in 0..8 {
+        batch.push(Addressed::local(Request::Array(ArrayJob::Sum)));
+    }
+    rng.shuffle(&mut batch);
+
+    let mut single = build_server(1, 0);
+    let single_responses = single.handle_batch(&batch);
+    let mut multi = build_server(2, 0);
+    let multi_responses = multi.handle_batch(&batch);
+    let mut dma = build_server(2, 4);
+    let dma_responses = dma.handle_batch(&batch);
+    for (i, (s, m)) in single_responses.iter().zip(&multi_responses).enumerate() {
+        match (s, m) {
+            (Ok(x), Ok(y)) => assert_eq!(x, y, "multi-plane response {i} diverged"),
+            (Err(_), Err(_)) => {}
+            other => panic!("multi-plane ok/err divergence at {i}: {other:?}"),
+        }
+    }
+    for (i, (s, d)) in single_responses.iter().zip(&dma_responses).enumerate() {
+        match (s, d) {
+            (Ok(x), Ok(y)) => assert_eq!(x, y, "dma response {i} diverged"),
+            (Err(_), Err(_)) => {}
+            other => panic!("dma ok/err divergence at {i}: {other:?}"),
+        }
+    }
+
+    let sm = single.metrics();
+    let mm = multi.metrics();
+    let dm = dma.metrics();
+    assert_eq!(
+        sm.makespan_multi_cycles, sm.makespan_overlapped_cycles,
+        "planes=1 must reproduce the overlapped makespan exactly"
+    );
+    assert!(
+        mm.makespan_multi_cycles < sm.makespan_multi_cycles,
+        "2 planes at an equal PE budget must beat 1 plane: {} >= {}",
+        mm.makespan_multi_cycles,
+        sm.makespan_multi_cycles
+    );
+    assert_eq!(
+        dm.makespan_multi_cycles, mm.makespan_multi_cycles,
+        "the DMA knob must not change the no-dma schedule"
+    );
+    let dma_makespan = dm.makespan_multi_cycles - dm.dma_saved_cycles;
+    assert!(
+        dma_makespan <= mm.makespan_multi_cycles,
+        "the §8 side bus made the makespan worse: {} > {}",
+        dma_makespan,
+        mm.makespan_multi_cycles
+    );
+
+    let mut r = Report::new(&["metric", "value"]);
+    r.row(&["requests (mixed, shuffled)".into(), batch.len().to_string()]);
+    r.row(&["PE budget (total, both modes)".into(), (1 << 18).to_string()]);
+    r.row(&[
+        "1 plane, batched + overlap (cycles)".into(),
+        sm.makespan_multi_cycles.to_string(),
+    ]);
+    r.row(&[
+        "2 planes, same budget (cycles)".into(),
+        mm.makespan_multi_cycles.to_string(),
+    ]);
+    r.row(&[
+        "multi-plane speedup".into(),
+        format!(
+            "{:.2}x",
+            sm.makespan_multi_cycles as f64 / mm.makespan_multi_cycles.max(1) as f64
+        ),
+    ]);
+    r.row(&[
+        "2 planes + dma x4 (cycles)".into(),
+        dma_makespan.to_string(),
+    ]);
+    r.row(&[
+        "cycles saved by the §8 side bus".into(),
+        dm.dma_saved_cycles.to_string(),
+    ]);
+    r.print("E24 multi-plane placement + §8 DMA side bus: 2 planes at an equal PE budget");
+}
+
 fn main() {
     let json_path = std::env::var("CPM_BENCH_JSON").ok();
     if json_path.is_some() {
@@ -1174,6 +1319,7 @@ fn main() {
         ("e21", e21_sharded_plane),
         ("e22", e22_worker_pool_step_floor),
         ("e23", e23_backends),
+        ("e24", e24_multi_plane_scheduling),
     ];
     for (name, f) in experiments {
         if filter.as_deref().map(|f| f == name).unwrap_or(true) {

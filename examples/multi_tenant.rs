@@ -10,17 +10,19 @@
 //!     cargo run --release --example multi_tenant
 
 use cpm::coordinator::{Addressed, ArrayJob, CpmServer, Request};
-use cpm::pool::{DevicePool, PoolConfig};
 use cpm::sql::Schema;
 use cpm::util::rng::Rng;
+use cpm::ServerConfig;
 
 fn build_server(seed: u64) -> cpm::Result<CpmServer> {
-    let mut pool = DevicePool::new(PoolConfig {
-        capacity_pes: 64 * 1024,
-        tenant_quota_pes: 48 * 1024,
-        corpus_slack: 512,
-        ..PoolConfig::default()
-    });
+    // One front door for pool + engine sizing; `CPM_PLANES`/`CPM_DMA`
+    // (and the other `CPM_*` knobs) layer over these program defaults.
+    let cfg = ServerConfig::from_env()
+        .capacity(64 * 1024)
+        .quota(48 * 1024)
+        .corpus_slack(512)
+        .engine_capacity(1 << 14);
+    let mut pool = cfg.device_pool();
     let mut rng = Rng::new(seed);
     let schema = Schema::new(&[("price", 2), ("qty", 1), ("region", 1)])?;
     pool.create_table("shop", "orders", schema, 2048)?;
@@ -29,7 +31,7 @@ fn build_server(seed: u64) -> cpm::Result<CpmServer> {
     pool.create_corpus("wiki", "articles", &text)?;
     pool.pin("shop", "orders", true)?;
 
-    let mut server = CpmServer::with_pool(pool, 1 << 14);
+    let mut server = cfg.server(pool);
     let rows: Vec<Vec<u64>> = (0..2048)
         .map(|_| vec![rng.below(10_000), rng.below(100), rng.below(8)])
         .collect();
@@ -118,6 +120,12 @@ fn main() -> cpm::Result<()> {
         "batched + load/exec overlap   : {} cycles ({:.2}x vs one-at-a-time)",
         bm.makespan_overlapped_cycles,
         sm.makespan_serial_cycles as f64 / bm.makespan_overlapped_cycles.max(1) as f64
+    );
+    println!(
+        "multi-plane ({} plane(s))      : {} cycles ({} saved by the §8 side bus)",
+        batched.pool().plane_count(),
+        bm.makespan_multi_cycles,
+        bm.dma_saved_cycles
     );
     for (tenant, t) in &bm.per_tenant {
         println!(

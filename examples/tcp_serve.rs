@@ -17,9 +17,9 @@ use std::thread;
 use std::time::Duration;
 
 use cpm::coordinator::{CpmServer, Request, Response};
-use cpm::device::computable::ExecConfig;
-use cpm::net::{CpmClient, NetConfig, NetServer, WindowConfig};
+use cpm::net::{CpmClient, NetServer};
 use cpm::sql::{QueryResult, Schema};
+use cpm::ServerConfig;
 
 const CLIENTS: usize = 4;
 const OPS_PER_CLIENT: usize = 3;
@@ -35,12 +35,12 @@ fn main() -> cpm::Result<()> {
     let schema = Schema::new(&[("price", 2), ("qty", 1)])?;
     let corpus = b"the quick brown fox jumps over the lazy dog";
     let mut server = CpmServer::new(schema, 64, corpus, BIG_SUM_LEN);
-    // Honor CPM_THREADS and CPM_BACKEND: with threads > 1 the big
-    // ad-hoc sum below runs on the sharded plane (threads=1, the
-    // default, keeps the serial engines; small planes stay serial
-    // either way), and CPM_BACKEND=serial|sharded|simd picks the
-    // compute backend the served planes are constructed through.
-    server.set_exec(ExecConfig::from_env());
+    // The one config front door: `CPM_THREADS`/`CPM_BACKEND` size the
+    // execution policy (with threads > 1 the big ad-hoc sum below runs
+    // on the sharded plane; small planes stay serial either way), and
+    // the net block below tunes the same `ServerConfig`'s front-end.
+    let mut cfg = ServerConfig::from_env().addr("127.0.0.1:0");
+    server.set_exec(cfg.pool.exec.clone());
     let rows: Vec<Vec<u64>> = (0..50).map(|i| vec![(i * 181) % 10_000, i % 100]).collect();
     server.load_rows(&rows)?;
     let below_5000 = rows.iter().filter(|r| r[0] < 5000).count();
@@ -50,20 +50,11 @@ fn main() -> cpm::Result<()> {
     // reader cores multiplex the four connections (thread count is a
     // config constant, not per-connection) and two dispatcher lanes
     // share the server.
-    let net = NetServer::spawn(
-        server,
-        NetConfig {
-            addr: "127.0.0.1:0".into(),
-            window: WindowConfig {
-                max_delay: Duration::from_millis(50),
-                max_batch: 64,
-                ..WindowConfig::default()
-            },
-            reader_cores: 2,
-            dispatch_lanes: 2,
-            ..NetConfig::default()
-        },
-    )?;
+    cfg.net.window.max_delay = Duration::from_millis(50);
+    cfg.net.window.max_batch = 64;
+    cfg.net.reader_cores = 2;
+    cfg.net.dispatch_lanes = 2;
+    let net = NetServer::spawn(server, cfg.net)?;
     let addr = net.addr();
     println!("serving on {addr}");
 

@@ -1,0 +1,244 @@
+//! One front door for server construction: [`ServerConfig`] owns the
+//! device-pool, execution, and network configuration and applies the
+//! single documented precedence ladder — **CLI flag > `CPM_*`
+//! environment > built-in default** — by construction: start from
+//! [`ServerConfig::default`], layer the environment with
+//! [`ServerConfig::from_env`], then layer the command line with
+//! [`ServerConfig::with_cli`]. Each layer only overrides the knobs it
+//! actually names, so the ladder holds per knob, not per layer.
+//!
+//! | knob | CLI flag | environment | default |
+//! |---|---|---|---|
+//! | compute backend | `--backend` | `CPM_BACKEND` | sharded |
+//! | worker threads | `--threads` | `CPM_THREADS` | 1 |
+//! | §8 DMA speedup | `--dma` | `CPM_DMA` | 0 (off) |
+//! | PE planes | `--planes` | `CPM_PLANES` | 1 |
+//! | reader cores | `--reader-cores` | `CPM_READER_CORES` | 4 |
+//! | dispatcher lanes | `--lanes` | `CPM_LANES` | 2 |
+//! | window delay (us) | `--window-us` | — | 2000 |
+//! | window batch cap | `--max-batch` | — | 32 |
+//!
+//! The binary's `serve`/`pool`/`netbench` paths and the examples all
+//! construct through this type; nothing else assembles a
+//! [`PoolConfig`]/[`NetConfig`] pair by hand.
+
+use std::time::Duration;
+
+use crate::cli::Cli;
+use crate::coordinator::CpmServer;
+use crate::device::computable::BackendKind;
+use crate::error::{CpmError, Result};
+use crate::net::NetConfig;
+use crate::pool::{DevicePool, PoolConfig};
+
+/// Everything needed to stand up a serving process: pool sizing and
+/// placement, plane-execution policy, and the TCP front-end.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Device-pool sizing, plane partitioning, and the execution policy
+    /// (`pool.exec`) its devices compute under.
+    pub pool: PoolConfig,
+    /// TCP front-end configuration (bind address, admission window,
+    /// reader cores, dispatcher lanes).
+    pub net: NetConfig,
+    /// Scratch-engine PE capacity for ad-hoc (non-resident) requests.
+    pub engine_capacity: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            pool: PoolConfig::default(),
+            net: NetConfig::default(),
+            engine_capacity: 1 << 20,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// The built-in defaults (the bottom rung of the ladder).
+    pub fn new() -> Self {
+        ServerConfig::default()
+    }
+
+    /// Layer the process environment over the defaults: `CPM_BACKEND`,
+    /// `CPM_THREADS`, `CPM_DMA`, `CPM_PLANES`, `CPM_READER_CORES`,
+    /// `CPM_LANES`. Absent or unparsable variables leave the default in
+    /// place.
+    pub fn from_env() -> Self {
+        ServerConfig::from_env_with(|k| std::env::var(k).ok())
+    }
+
+    /// [`ServerConfig::from_env`] against an explicit variable lookup
+    /// instead of the process environment — tests pin the ladder
+    /// without racing on `set_var`.
+    pub fn from_env_with(lookup: impl Fn(&str) -> Option<String>) -> Self {
+        fn get<T: std::str::FromStr>(
+            lookup: &impl Fn(&str) -> Option<String>,
+            key: &str,
+        ) -> Option<T> {
+            lookup(key).and_then(|v| v.parse().ok())
+        }
+        let mut cfg = ServerConfig::default();
+        let mut exec = cfg.pool.exec.clone();
+        if let Some(t) = get::<usize>(&lookup, "CPM_THREADS") {
+            exec = exec.threads(t);
+        }
+        if let Some(b) = get::<BackendKind>(&lookup, "CPM_BACKEND") {
+            exec = exec.backend(b);
+        }
+        if let Some(d) = get::<u64>(&lookup, "CPM_DMA") {
+            exec = exec.dma(d);
+        }
+        cfg.pool.exec = exec;
+        if let Some(p) = get::<usize>(&lookup, "CPM_PLANES") {
+            cfg.pool.planes = p.max(1);
+        }
+        if let Some(r) = get::<usize>(&lookup, "CPM_READER_CORES") {
+            cfg.net.reader_cores = r.max(1);
+        }
+        if let Some(l) = get::<usize>(&lookup, "CPM_LANES") {
+            cfg.net.dispatch_lanes = l.max(1);
+        }
+        cfg
+    }
+
+    /// Layer the command line over this config (the top rung):
+    /// `--backend`, `--threads`, `--dma`, `--planes`, `--reader-cores`,
+    /// `--lanes`, `--window-us`, `--max-batch`. Flags not passed leave
+    /// the lower rungs' values in place. Ends with
+    /// [`ServerConfig::validate`].
+    pub fn with_cli(mut self, cli: &Cli) -> Result<Self> {
+        let mut exec = self.pool.exec.clone();
+        exec = exec.threads(cli.get("threads", exec.threads));
+        if let Some(name) = cli.get_str("backend") {
+            let backend = name
+                .parse::<BackendKind>()
+                .map_err(CpmError::Coordinator)?;
+            exec = exec.backend(backend);
+        }
+        let dma = cli.get("dma", exec.dma_speedup);
+        self.pool.exec = exec.dma(dma);
+        self.pool.planes = cli.get("planes", self.pool.planes).max(1);
+        self.net.reader_cores = cli.get("reader-cores", self.net.reader_cores).max(1);
+        self.net.dispatch_lanes = cli.get("lanes", self.net.dispatch_lanes).max(1);
+        self.net.window.max_delay = Duration::from_micros(
+            cli.get("window-us", self.net.window.max_delay.as_micros() as u64),
+        );
+        self.net.window.max_batch = cli.get("max-batch", self.net.window.max_batch);
+        self.validate()
+    }
+
+    /// Reject configurations the build cannot serve (today: the PJRT
+    /// backend without the `pjrt` feature).
+    pub fn validate(self) -> Result<Self> {
+        if self.pool.exec.backend == BackendKind::Pjrt && cfg!(not(feature = "pjrt")) {
+            return Err(CpmError::Coordinator(
+                "backend `pjrt` needs a build with --features pjrt (see rust/Cargo.toml)".into(),
+            ));
+        }
+        Ok(self)
+    }
+
+    /// This config with its bind address replaced.
+    pub fn addr(mut self, addr: &str) -> Self {
+        self.net.addr = addr.to_string();
+        self
+    }
+
+    /// This config with its total PE capacity replaced.
+    pub fn capacity(mut self, capacity_pes: usize) -> Self {
+        self.pool.capacity_pes = capacity_pes;
+        self
+    }
+
+    /// This config with its default per-tenant quota replaced.
+    pub fn quota(mut self, tenant_quota_pes: usize) -> Self {
+        self.pool.tenant_quota_pes = tenant_quota_pes;
+        self
+    }
+
+    /// This config with its corpus slack replaced.
+    pub fn corpus_slack(mut self, corpus_slack: usize) -> Self {
+        self.pool.corpus_slack = corpus_slack;
+        self
+    }
+
+    /// This config with its PE plane count replaced (floored at 1).
+    pub fn planes(mut self, planes: usize) -> Self {
+        self.pool.planes = planes.max(1);
+        self
+    }
+
+    /// This config with its §8 DMA side-bus speedup replaced (`0`/`1` =
+    /// off).
+    pub fn dma(mut self, dma_speedup: u64) -> Self {
+        self.pool.exec = self.pool.exec.clone().dma(dma_speedup);
+        self
+    }
+
+    /// This config with its ad-hoc engine capacity replaced.
+    pub fn engine_capacity(mut self, engine_capacity: usize) -> Self {
+        self.engine_capacity = engine_capacity;
+        self
+    }
+
+    /// A fresh (empty) device pool under this config. Create residents
+    /// on it, then hand it to [`ServerConfig::server`].
+    pub fn device_pool(&self) -> DevicePool {
+        DevicePool::new(self.pool.clone())
+    }
+
+    /// A [`CpmServer`] over a populated pool, with this config's ad-hoc
+    /// engine capacity.
+    pub fn server(&self, pool: DevicePool) -> CpmServer {
+        CpmServer::with_pool(pool, self.engine_capacity)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_the_bottom_rung() {
+        let cfg = ServerConfig::from_env_with(|_| None);
+        assert_eq!(cfg.pool.exec.threads, 1);
+        assert_eq!(cfg.pool.exec.dma_speedup, 0);
+        assert_eq!(cfg.pool.planes, 1);
+        assert_eq!(cfg.net.reader_cores, 4);
+        assert_eq!(cfg.net.dispatch_lanes, 2);
+    }
+
+    #[test]
+    fn unparsable_environment_falls_through_to_defaults() {
+        let cfg = ServerConfig::from_env_with(|k| match k {
+            "CPM_THREADS" => Some("not-a-number".into()),
+            "CPM_PLANES" => Some("".into()),
+            _ => None,
+        });
+        assert_eq!(cfg.pool.exec.threads, 1);
+        assert_eq!(cfg.pool.planes, 1);
+    }
+
+    #[test]
+    fn builder_setters_floor_planes_at_one() {
+        let cfg = ServerConfig::new().planes(0).dma(4).capacity(1 << 10);
+        assert_eq!(cfg.pool.planes, 1);
+        assert_eq!(cfg.pool.exec.dma_speedup, 4);
+        assert_eq!(cfg.pool.capacity_pes, 1 << 10);
+    }
+
+    #[test]
+    fn validate_rejects_pjrt_without_the_feature() {
+        let cfg = ServerConfig::from_env_with(|k| {
+            (k == "CPM_BACKEND").then(|| "pjrt".to_string())
+        });
+        let validated = cfg.validate();
+        if cfg!(feature = "pjrt") {
+            assert!(validated.is_ok());
+        } else {
+            assert!(validated.is_err());
+        }
+    }
+}

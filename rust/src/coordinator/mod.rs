@@ -10,12 +10,10 @@
 //! concurrently, other addressable registers in the same CPM can be
 //! prepared for other tasks by exclusive operations").
 
-pub mod metrics;
 pub mod scheduler;
 pub mod server;
 
-pub use metrics::{LatencyStats, Metrics, TenantMetrics};
-pub use scheduler::{OverlapScheduler, TaskPhase};
+pub use scheduler::{OverlapScheduler, PlacedTask, TaskPhase};
 pub use server::{
     Addressed, ArrayJob, CpmServer, Request, Response, DEFAULT_ARRAY, DEFAULT_CORPUS,
     DEFAULT_TABLE, DEFAULT_TENANT,

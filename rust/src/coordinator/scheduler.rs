@@ -1,4 +1,4 @@
-//! Overlap scheduler (§3.1, §8 — E18).
+//! Overlap scheduler (§3.1, §8 — E18, E24).
 //!
 //! A CPM's concurrent bus and exclusive bus are independent: while one
 //! task's registers are driven by broadcast instructions, another task's
@@ -6,6 +6,17 @@
 //! two-phase task pipeline (load → execute) and computes the makespan
 //! with and without overlap, plus the §8 DMA-bus variant where loads go
 //! through a dedicated side bus.
+//!
+//! The multi-plane variants ([`OverlapScheduler::makespan_multi`],
+//! [`OverlapScheduler::makespan_multi_with_dma`]) schedule
+//! [`PlacedTask`]s across several PE planes: each plane runs its own
+//! load/exec pipeline, executing a resident task away from its home
+//! plane pays the cross-plane move cost, and the DMA side bus scales the
+//! load phases. Both pick the best of a small deterministic candidate
+//! set that always contains the home-partition schedule, so
+//! `makespan_multi <= makespan_overlapped` and
+//! `makespan_multi_with_dma <= makespan_multi` hold by construction —
+//! the inequalities the E24 bench and the propcheck suite assert.
 
 /// One task's device-cycle demands.
 #[derive(Debug, Clone, Copy)]
@@ -14,6 +25,31 @@ pub struct TaskPhase {
     pub load_cycles: u64,
     /// Concurrent-bus cycles to execute it.
     pub exec_cycles: u64,
+}
+
+/// A task with a plane placement: its (load, exec) phases, the home
+/// plane of the resident device it targets (`None` for ad-hoc compute,
+/// which can run anywhere for free), and the device-cycle price of
+/// executing it away from home.
+#[derive(Debug, Clone, Copy)]
+pub struct PlacedTask {
+    /// Device-cycle demands of the task.
+    pub phase: TaskPhase,
+    /// Home plane of the target resident device (`None` = unplaced).
+    pub home: Option<usize>,
+    /// Extra exclusive-bus cycles to execute off the home plane.
+    pub move_cycles: u64,
+}
+
+impl PlacedTask {
+    /// An unplaced (ad-hoc) task: runs on any plane without a move.
+    pub fn adhoc(phase: TaskPhase) -> Self {
+        PlacedTask {
+            phase,
+            home: None,
+            move_cycles: 0,
+        }
+    }
 }
 
 /// Schedules a sequence of (load, exec) tasks on one device.
@@ -57,6 +93,98 @@ impl OverlapScheduler {
             })
             .collect();
         Self::makespan_overlapped(&scaled)
+    }
+
+    /// Multi-plane makespan: schedule the tasks across `planes` PE
+    /// planes, each running its own load/exec pipeline. Picks the better
+    /// of a greedy earliest-finish assignment and the home-partition
+    /// assignment (every task on its home plane, move-free) — the latter
+    /// guarantees the result never exceeds
+    /// [`OverlapScheduler::makespan_overlapped`] on the same phases, and
+    /// one plane reproduces it exactly.
+    pub fn makespan_multi(tasks: &[PlacedTask], planes: usize) -> u64 {
+        let planes = planes.max(1);
+        let greedy = Self::greedy_assign(tasks, planes, 1);
+        let home = Self::home_assign(tasks, planes);
+        Self::finish(tasks, &greedy, planes, 1).min(Self::finish(tasks, &home, planes, 1))
+    }
+
+    /// Multi-plane makespan with the §8 DMA side bus carrying the load
+    /// phases (`dma_speedup` divides every load; 0 and 1 both mean the
+    /// side bus is off). The candidate set re-evaluates the no-DMA
+    /// assignments under DMA, so the result never exceeds
+    /// [`OverlapScheduler::makespan_multi`] on the same tasks.
+    pub fn makespan_multi_with_dma(tasks: &[PlacedTask], planes: usize, dma_speedup: u64) -> u64 {
+        let planes = planes.max(1);
+        let candidates = [
+            Self::greedy_assign(tasks, planes, dma_speedup),
+            Self::greedy_assign(tasks, planes, 1),
+            Self::home_assign(tasks, planes),
+        ];
+        candidates
+            .iter()
+            .map(|a| Self::finish(tasks, a, planes, dma_speedup))
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Every task on its home plane (unplaced tasks on plane 0): each
+    /// plane then runs a move-free subsequence of the original order, and
+    /// the pipeline recurrence is monotone under dropping tasks, so no
+    /// plane finishes later than the single-plane schedule.
+    fn home_assign(tasks: &[PlacedTask], planes: usize) -> Vec<usize> {
+        tasks
+            .iter()
+            .map(|t| t.home.unwrap_or(0).min(planes - 1))
+            .collect()
+    }
+
+    /// Greedy earliest-finish assignment: each task (in order) goes to
+    /// the plane where it would finish soonest, move cost and DMA scaling
+    /// included; ties go to the lowest plane id. Deterministic.
+    fn greedy_assign(tasks: &[PlacedTask], planes: usize, dma_speedup: u64) -> Vec<usize> {
+        let dma = dma_speedup.max(1);
+        let mut load_done = vec![0u64; planes];
+        let mut exec_done = vec![0u64; planes];
+        let mut assign = Vec::with_capacity(tasks.len());
+        for t in tasks {
+            let mut best = 0usize;
+            let mut best_finish = u64::MAX;
+            for p in 0..planes {
+                let ld = load_done[p] + Self::effective_load(t, p) / dma;
+                let fin = ld.max(exec_done[p]) + t.phase.exec_cycles;
+                if fin < best_finish {
+                    best_finish = fin;
+                    best = p;
+                }
+            }
+            load_done[best] += Self::effective_load(t, best) / dma;
+            exec_done[best] = load_done[best].max(exec_done[best]) + t.phase.exec_cycles;
+            assign.push(best);
+        }
+        assign
+    }
+
+    /// Finish time of one fixed assignment: per-plane pipeline
+    /// recurrences, off-home moves added to the load phase, DMA dividing
+    /// every load. Monotone in `dma_speedup`, so re-evaluating a no-DMA
+    /// assignment under DMA never increases its makespan.
+    fn finish(tasks: &[PlacedTask], assign: &[usize], planes: usize, dma_speedup: u64) -> u64 {
+        let dma = dma_speedup.max(1);
+        let mut load_done = vec![0u64; planes];
+        let mut exec_done = vec![0u64; planes];
+        for (t, &p) in tasks.iter().zip(assign) {
+            load_done[p] += Self::effective_load(t, p) / dma;
+            exec_done[p] = load_done[p].max(exec_done[p]) + t.phase.exec_cycles;
+        }
+        exec_done.into_iter().max().unwrap_or(0)
+    }
+
+    /// Load cycles of `t` when executed on plane `p`: the task's own load
+    /// plus the cross-plane move when `p` is not its home.
+    fn effective_load(t: &PlacedTask, p: usize) -> u64 {
+        let moved = t.home.is_some_and(|h| h != p);
+        t.phase.load_cycles + if moved { t.move_cycles } else { 0 }
     }
 
     /// Overlap efficiency: serial / overlapped (1.0 = no gain, →2.0 for
@@ -111,6 +239,77 @@ mod tests {
         let o = OverlapScheduler::makespan_overlapped(&tasks);
         assert!(o >= 50 * 100, "load-bound: makespan ~ total load");
         assert!(o <= 50 * 100 + 10);
+    }
+
+    fn placed(load: u64, exec: u64, home: usize) -> PlacedTask {
+        PlacedTask {
+            phase: TaskPhase {
+                load_cycles: load,
+                exec_cycles: exec,
+            },
+            home: Some(home),
+            move_cycles: 50,
+        }
+    }
+
+    #[test]
+    fn one_plane_reproduces_the_single_plane_schedule() {
+        let tasks: Vec<PlacedTask> = (0..20).map(|i| placed(10 + i % 7, 5 + i % 5, 0)).collect();
+        let phases: Vec<TaskPhase> = tasks.iter().map(|t| t.phase).collect();
+        assert_eq!(
+            OverlapScheduler::makespan_multi(&tasks, 1),
+            OverlapScheduler::makespan_overlapped(&phases)
+        );
+        assert_eq!(
+            OverlapScheduler::makespan_multi_with_dma(&tasks, 1, 8),
+            OverlapScheduler::makespan_with_dma(&phases, 8)
+        );
+    }
+
+    #[test]
+    fn multi_plane_never_loses_and_splits_balanced_homes() {
+        // Tasks alternate between two home planes with equal costs: two
+        // planes must run them genuinely in parallel.
+        let tasks: Vec<PlacedTask> = (0..10).map(|i| placed(100, 100, i % 2)).collect();
+        let phases: Vec<TaskPhase> = tasks.iter().map(|t| t.phase).collect();
+        let single = OverlapScheduler::makespan_overlapped(&phases);
+        let multi = OverlapScheduler::makespan_multi(&tasks, 2);
+        assert!(multi < single, "balanced two-home workload must split: {multi} vs {single}");
+        // The DMA side bus can only help further.
+        let dma = OverlapScheduler::makespan_multi_with_dma(&tasks, 2, 16);
+        assert!(dma <= multi, "{dma} vs {multi}");
+    }
+
+    #[test]
+    fn prohibitive_moves_fall_back_to_the_home_partition() {
+        let mut tasks: Vec<PlacedTask> = (0..8).map(|i| placed(10, 90, i % 2)).collect();
+        for t in &mut tasks {
+            t.move_cycles = 1_000_000;
+        }
+        // The schedule never pays a move it did not have to: the home
+        // partition is always in the candidate set.
+        let multi = OverlapScheduler::makespan_multi(&tasks, 2);
+        assert!(multi < 1_000_000, "{multi}");
+        let phases: Vec<TaskPhase> = tasks.iter().map(|t| t.phase).collect();
+        assert!(multi <= OverlapScheduler::makespan_overlapped(&phases));
+    }
+
+    #[test]
+    fn adhoc_tasks_fill_idle_planes() {
+        // Residents all homed on plane 0 plus ad-hoc compute: the greedy
+        // assignment sends the ad-hoc tasks (which move for free) to the
+        // idle plane and beats the single-plane schedule.
+        let mut tasks: Vec<PlacedTask> = (0..6).map(|_| placed(50, 50, 0)).collect();
+        for _ in 0..6 {
+            tasks.push(PlacedTask::adhoc(TaskPhase {
+                load_cycles: 50,
+                exec_cycles: 50,
+            }));
+        }
+        let phases: Vec<TaskPhase> = tasks.iter().map(|t| t.phase).collect();
+        let single = OverlapScheduler::makespan_overlapped(&phases);
+        let multi = OverlapScheduler::makespan_multi(&tasks, 2);
+        assert!(multi < single, "{multi} vs {single}");
     }
 
     #[test]

@@ -208,10 +208,13 @@ impl CpmServer {
     /// so compute on large planes runs sharded across threads.
     pub fn with_pool(pool: DevicePool, engine_capacity: usize) -> Self {
         let exec = pool.config().exec;
+        let obs = Arc::new(Recorder::new());
+        obs.set_planes(pool.plane_count() as u64);
+        obs.sample_planes(&pool.plane_used_pes());
         CpmServer {
             pool,
             executor: BatchExecutor::with_exec(engine_capacity, exec),
-            obs: Arc::new(Recorder::new()),
+            obs,
         }
     }
 
@@ -349,6 +352,13 @@ impl CpmServer {
             report.makespan_overlapped,
             report.plan_ns,
         );
+        // Multi-plane accounting: the placed makespan and what the §8 DMA
+        // side bus shaved off it, plus fresh per-plane occupancy.
+        self.obs.record_multi(
+            report.makespan_multi,
+            report.makespan_multi.saturating_sub(report.makespan_dma),
+        );
+        self.obs.sample_planes(&self.pool.plane_used_pes());
         // Per-request latency: the batch's wall time amortized over its
         // requests (they all complete when the batch completes).
         let per_request = elapsed / batch.len().max(1) as u32;
@@ -545,6 +555,11 @@ mod tests {
         assert_eq!(m.batched_requests, 6);
         assert!(m.shared_passes_saved >= 1);
         assert!(m.makespan_overlapped_cycles <= m.makespan_serial_cycles);
+        assert!(m.makespan_multi_cycles <= m.makespan_overlapped_cycles);
+        // Single-plane server, DMA off: nothing for the side bus to save.
+        assert_eq!(m.dma_saved_cycles, 0);
+        assert_eq!(m.gauges.planes, 1);
+        assert_eq!(m.gauges.plane_used_pes.len(), 1);
         assert_eq!(m.latency.count(), 6);
     }
 }

@@ -109,6 +109,12 @@ pub struct ExecConfig {
     /// How parallel cycles acquire threads: the persistent worker pool
     /// (default) or a scoped spawn per call.
     pub spawn: SpawnMode,
+    /// §8 DMA side-bus speedup for load phases in the batch executor's
+    /// cost accounting: `0` (the default) and `1` both mean the side bus
+    /// is off; `n >= 2` divides every load phase by `n` in
+    /// `makespan_with_dma`. Purely a cost-model knob — results are
+    /// unchanged.
+    pub dma_speedup: u64,
     /// The shared pool of parked workers (lazily spawned; clones share
     /// it).
     pool: WorkerPool,
@@ -121,6 +127,7 @@ impl Default for ExecConfig {
             threads: 1,
             min_shard_pes: DEFAULT_MIN_SHARD_PES,
             spawn: SpawnMode::Persistent,
+            dma_speedup: 0,
             pool: WorkerPool::new(),
         }
     }
@@ -135,6 +142,7 @@ impl PartialEq for ExecConfig {
             && self.threads == other.threads
             && self.min_shard_pes == other.min_shard_pes
             && self.spawn == other.spawn
+            && self.dma_speedup == other.dma_speedup
     }
 }
 
@@ -149,9 +157,10 @@ impl ExecConfig {
         ExecConfig::default()
     }
 
-    /// Read the environment: `CPM_THREADS` (absent/unparsable = 1) and
+    /// Read the environment: `CPM_THREADS` (absent/unparsable = 1),
     /// `CPM_BACKEND` (absent/unparsable = the default backend; values
-    /// are the [`BackendKind`] names `serial|sharded|simd|pjrt`).
+    /// are the [`BackendKind`] names `serial|sharded|simd|pjrt`), and
+    /// `CPM_DMA` (absent/unparsable = 0, side bus off).
     pub fn from_env() -> Self {
         let threads = std::env::var("CPM_THREADS")
             .ok()
@@ -161,7 +170,11 @@ impl ExecConfig {
             .ok()
             .and_then(|v| v.parse::<BackendKind>().ok())
             .unwrap_or_default();
-        ExecConfig::new().threads(threads).backend(backend)
+        let dma = std::env::var("CPM_DMA")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap_or(0);
+        ExecConfig::new().threads(threads).backend(backend).dma(dma)
     }
 
     /// This config with its worker-thread count replaced (floored at 1).
@@ -186,6 +199,13 @@ impl ExecConfig {
     /// This config with its [`BackendKind`] replaced.
     pub fn backend(mut self, backend: BackendKind) -> Self {
         self.backend = backend;
+        self
+    }
+
+    /// This config with its §8 DMA side-bus speedup replaced (`0`/`1` =
+    /// off).
+    pub fn dma(mut self, dma_speedup: u64) -> Self {
+        self.dma_speedup = dma_speedup;
         self
     }
 

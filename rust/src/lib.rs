@@ -14,6 +14,7 @@ pub mod algos;
 pub mod baseline;
 pub mod bench;
 pub mod cli;
+pub mod config;
 pub mod coordinator;
 pub mod cycles;
 pub mod device;
@@ -27,5 +28,6 @@ pub mod runtime;
 pub mod sql;
 pub mod util;
 
+pub use config::ServerConfig;
 pub use cycles::{ClaimPoint, ConcurrentCost, SerialCost};
 pub use error::{CpmError, Result};

@@ -28,15 +28,15 @@
 //!
 //! `pool`, `serve`, `netbench`, and `runtime-check` accept `--threads N`
 //! to run large dense PE planes sharded across N std worker threads
-//! (default 1 = the serial engines) and `--backend
+//! (default 1 = the serial engines), `--backend
 //! serial|sharded|simd|pjrt` to pick the compute backend the planes
-//! execute on (default sharded; `pjrt` needs `--features pjrt`).
-//! Selection precedence is CLI flag > `CPM_THREADS`/`CPM_BACKEND`
-//! environment > config default. The threads are a persistent pool
-//! of parked workers owned by the process's `ExecConfig`: a served
-//! process warms them once and every request — single-instruction steps
-//! included — dispatches onto the same workers (see DESIGN.md
-//! "Execution model" and "Compute backends").
+//! execute on (default sharded; `pjrt` needs `--features pjrt`),
+//! `--planes N` to partition the device pool's PE capacity into N
+//! placement planes the batch executor overlaps across, and `--dma N`
+//! to model the paper's §8 DMA side bus (load phases divided by N in
+//! the cost accounting; results unchanged). Every knob rides the one
+//! `ServerConfig` precedence ladder: CLI flag > `CPM_*` environment >
+//! config default (see DESIGN.md "Configuration & public API").
 
 use std::time::{Duration, Instant};
 
@@ -46,15 +46,15 @@ use cpm::coordinator::{
     DEFAULT_TENANT,
 };
 use cpm::device::computable::isa::N_REGS;
-use cpm::device::computable::{BackendKind, ExecConfig, Instr, Opcode, Reg, Src};
+use cpm::device::computable::{Instr, Opcode, Reg, Src};
 use cpm::device::control::ControlUnit;
-use cpm::net::{CpmClient, NetConfig, NetServer, WindowConfig};
+use cpm::net::{CpmClient, NetServer};
 use cpm::obs::{export, Metrics};
 use cpm::physics;
-use cpm::pool::{DevicePool, PoolConfig};
 use cpm::runtime::Backend;
 use cpm::sql::Schema;
 use cpm::util::rng::Rng;
+use cpm::ServerConfig;
 
 fn main() {
     let cli = Cli::from_env();
@@ -149,18 +149,19 @@ fn pool_cmd(cli: &Cli) -> cpm::Result<()> {
     let rows = cli.get("rows", 4096usize);
     let mut rng = Rng::new(cli.get("seed", 2020u64));
 
-    let mut pool = DevicePool::new(PoolConfig {
-        capacity_pes: 1 << 18,
-        tenant_quota_pes: 1 << 17,
-        corpus_slack: 1024,
-        exec: exec_config(cli)?,
-    });
+    let cfg = ServerConfig::from_env()
+        .capacity(1 << 18)
+        .quota(1 << 17)
+        .corpus_slack(1024)
+        .engine_capacity(1 << 16)
+        .with_cli(cli)?;
+    let mut pool = cfg.device_pool();
     let schema = Schema::new(&[("price", 2), ("qty", 1)])?;
     pool.create_table("alice", "orders", schema, rows)?;
     let corpus: Vec<u8> = (0..8192).map(|_| b'a' + rng.range(0, 4) as u8).collect();
     pool.create_corpus("bob", "logs", &corpus)?;
     pool.create_array("alice", "readings", &rng.vec_i32(2048, 0, 1000), 2048)?;
-    let mut server = CpmServer::with_pool(pool, 1 << 16);
+    let mut server = cfg.server(pool);
     let table_rows: Vec<Vec<u64>> = (0..rows)
         .map(|_| vec![rng.below(10_000), rng.below(100)])
         .collect();
@@ -223,6 +224,12 @@ fn pool_cmd(cli: &Cli) -> cpm::Result<()> {
         m.makespan_overlapped_cycles,
         m.makespan_serial_cycles as f64 / m.makespan_overlapped_cycles.max(1) as f64
     );
+    println!(
+        "planes: {} plane(s), multi-plane makespan {} cycles, {} cycles saved by the §8 side bus",
+        server.pool().plane_count(),
+        m.makespan_multi_cycles,
+        m.dma_saved_cycles
+    );
     for (tenant, t) in &m.per_tenant {
         println!(
             "  tenant {tenant}: {} req, {} err, {} concurrent cycles, {} exclusive ops",
@@ -230,27 +237,6 @@ fn pool_cmd(cli: &Cli) -> cpm::Result<()> {
         );
     }
     Ok(())
-}
-
-/// Plane-execution policy from the CLI and environment: `--threads N`
-/// and `--backend serial|sharded|simd|pjrt`. CLI flags beat the
-/// `CPM_THREADS` / `CPM_BACKEND` environment, which beats the defaults
-/// (1 thread, the sharded backend — serial at one thread).
-fn exec_config(cli: &Cli) -> cpm::Result<ExecConfig> {
-    let env = ExecConfig::from_env();
-    let threads = cli.get("threads", env.threads);
-    let backend = match cli.get_str("backend") {
-        Some(name) => name
-            .parse::<BackendKind>()
-            .map_err(cpm::CpmError::Coordinator)?,
-        None => env.backend,
-    };
-    if backend == BackendKind::Pjrt && cfg!(not(feature = "pjrt")) {
-        return Err(cpm::CpmError::Coordinator(
-            "backend `pjrt` needs a build with --features pjrt (see rust/Cargo.toml)".into(),
-        ));
-    }
-    Ok(env.threads(threads).backend(backend))
 }
 
 /// Resident scratch-array size on the network demo server (large enough
@@ -261,20 +247,23 @@ const DEMO_ARRAY_WORDS: usize = 1 << 18;
 /// (`default/table`, price/qty/region), a small text corpus
 /// (`default/corpus`), and a resident scratch array (`default/array`)
 /// whose jobs exercise the dense compute path.
-fn demo_server(rows: usize, seed: u64, exec: ExecConfig) -> cpm::Result<CpmServer> {
+fn demo_server(rows: usize, seed: u64, cfg: &ServerConfig) -> cpm::Result<CpmServer> {
     let schema = Schema::new(&[("price", 2), ("qty", 1), ("region", 1)])?;
     let corpus: &[u8] =
         b"the quick brown fox jumps over the lazy dog; pack my box with five dozen jugs";
     let mut rng = Rng::new(seed);
     let corpus_slack = 1024usize;
     let table_pes = schema.row_size() * rows.max(1);
-    let capacity = table_pes + corpus.len() + corpus_slack + DEMO_ARRAY_WORDS + 64;
-    let mut pool = DevicePool::new(PoolConfig {
-        capacity_pes: capacity,
-        tenant_quota_pes: capacity,
-        corpus_slack,
-        exec,
-    });
+    // Sized per plane: every demo resident must fit within one plane's
+    // share of the capacity, so scale the budget by the plane count.
+    let capacity =
+        (table_pes + corpus.len() + corpus_slack + DEMO_ARRAY_WORDS + 64) * cfg.pool.planes.max(1);
+    let cfg = cfg
+        .clone()
+        .capacity(capacity)
+        .quota(capacity)
+        .corpus_slack(corpus_slack);
+    let mut pool = cfg.device_pool();
     pool.create_table(DEFAULT_TENANT, DEFAULT_TABLE, schema, rows)?;
     pool.create_corpus(DEFAULT_TENANT, DEFAULT_CORPUS, corpus)?;
     pool.create_array(
@@ -286,26 +275,12 @@ fn demo_server(rows: usize, seed: u64, exec: ExecConfig) -> cpm::Result<CpmServe
     pool.pin(DEFAULT_TENANT, DEFAULT_TABLE, true)?;
     pool.pin(DEFAULT_TENANT, DEFAULT_CORPUS, true)?;
     pool.pin(DEFAULT_TENANT, DEFAULT_ARRAY, true)?;
-    let mut server = CpmServer::with_pool(pool, 1 << 20);
+    let mut server = cfg.server(pool);
     let table_rows: Vec<Vec<u64>> = (0..rows)
         .map(|_| vec![rng.below(10_000), rng.below(100), rng.below(8)])
         .collect();
     server.load_rows(&table_rows)?;
     Ok(server)
-}
-
-fn net_config(cli: &Cli, addr: &str) -> NetConfig {
-    NetConfig {
-        addr: addr.to_string(),
-        window: WindowConfig {
-            max_delay: Duration::from_micros(cli.get("window-us", 2000u64)),
-            max_batch: cli.get("max-batch", 32usize),
-            ..WindowConfig::default()
-        },
-        reader_cores: cli.get("reader-cores", 4usize).max(1),
-        dispatch_lanes: cli.get("lanes", 2usize).max(1),
-        ..NetConfig::default()
-    }
 }
 
 fn print_wire_metrics(m: &Metrics) {
@@ -358,10 +333,19 @@ fn print_stats_text(m: &Metrics) {
     );
     let depths: Vec<String> = g.lane_queue_depths.iter().map(u64::to_string).collect();
     println!(
-        "net tier: {} reader core(s), {} multiplexed connection(s), lane depths [{}]",
+        "net tier: {} reader core(s), {} multiplexed connection(s), lane depths [{}], {} window(s) stolen",
         g.reader_cores,
         m.wire.connections_multiplexed,
-        depths.join(", ")
+        depths.join(", "),
+        m.wire.windows_stolen
+    );
+    let used: Vec<String> = g.plane_used_pes.iter().map(u64::to_string).collect();
+    println!(
+        "planes: {} plane(s), used PEs [{}]; multi-plane makespan {} cycles, {} cycles saved by the §8 side bus",
+        g.planes,
+        used.join(", "),
+        m.makespan_multi_cycles,
+        m.dma_saved_cycles
     );
     for (tenant, t) in &m.per_tenant {
         println!(
@@ -402,16 +386,17 @@ fn serve_cmd(cli: &Cli) -> cpm::Result<()> {
     let addr = cli.get_str("addr").unwrap_or("127.0.0.1:7070");
     let rows = cli.get("rows", 4096usize);
     let secs = cli.get("secs", 0u64);
-    let exec = exec_config(cli)?;
-    let server = demo_server(rows, cli.get("seed", 42u64), exec.clone())?;
-    let cfg = net_config(cli, addr);
-    let window_us = cfg.window.max_delay.as_micros();
-    let max_batch = cfg.window.max_batch;
-    let reader_cores = cfg.reader_cores;
-    let lanes = cfg.dispatch_lanes;
-    let net = NetServer::spawn(server, cfg)?;
+    let cfg = ServerConfig::from_env().addr(addr).with_cli(cli)?;
+    let server = demo_server(rows, cli.get("seed", 42u64), &cfg)?;
+    let exec = cfg.pool.exec.clone();
+    let planes = cfg.pool.planes;
+    let window_us = cfg.net.window.max_delay.as_micros();
+    let max_batch = cfg.net.window.max_batch;
+    let reader_cores = cfg.net.reader_cores;
+    let lanes = cfg.net.dispatch_lanes;
+    let net = NetServer::spawn(server, cfg.net)?;
     println!(
-        "cpm serving on {} ({} reader core(s), {} lane(s), window {} us, max batch {}, {} exec thread(s), backend {}); demo devices: default/table ({} rows), default/corpus, default/array ({} words)",
+        "cpm serving on {} ({} reader core(s), {} lane(s), window {} us, max batch {}, {} exec thread(s), backend {}, {} plane(s), dma x{}); demo devices: default/table ({} rows), default/corpus, default/array ({} words)",
         net.addr(),
         reader_cores,
         lanes,
@@ -419,6 +404,8 @@ fn serve_cmd(cli: &Cli) -> cpm::Result<()> {
         max_batch,
         exec.threads,
         exec.backend,
+        planes,
+        exec.dma_speedup.max(1),
         rows,
         DEMO_ARRAY_WORDS
     );
@@ -506,14 +493,15 @@ fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
     let requests = cli.get("requests", 1024usize);
     let clients = cli.get("clients", 8usize).max(1);
     let rows = cli.get("rows", 4096usize);
-    let exec = exec_config(cli)?;
-    let server = demo_server(rows, cli.get("seed", 42u64), exec.clone())?;
-    let cfg = net_config(cli, "127.0.0.1:0");
-    let window_us = cfg.window.max_delay.as_micros();
-    let max_batch = cfg.window.max_batch;
-    let reader_cores = cfg.reader_cores;
-    let lanes = cfg.dispatch_lanes;
-    let net = NetServer::spawn(server, cfg)?;
+    let cfg = ServerConfig::from_env().addr("127.0.0.1:0").with_cli(cli)?;
+    let server = demo_server(rows, cli.get("seed", 42u64), &cfg)?;
+    let exec = cfg.pool.exec.clone();
+    let planes = cfg.pool.planes;
+    let window_us = cfg.net.window.max_delay.as_micros();
+    let max_batch = cfg.net.window.max_batch;
+    let reader_cores = cfg.net.reader_cores;
+    let lanes = cfg.net.dispatch_lanes;
+    let net = NetServer::spawn(server, cfg.net)?;
     let addr = net.addr();
     let per_client = requests.div_ceil(clients);
 
@@ -579,16 +567,18 @@ fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
             .unwrap_or(1);
         let row = format!(
             "{{\"bench\":\"netbench\",\"backend\":\"{}\",\"threads\":{},\"clients\":{},\
-             \"reader_cores\":{},\"lanes\":{},\
+             \"reader_cores\":{},\"lanes\":{},\"planes\":{},\"dma\":{},\
              \"max_batch\":{},\"window_us\":{},\"requests\":{},\"ok\":{},\
              \"elapsed_ms\":{:.3},\"req_per_s\":{:.1},\"mean_window\":{:.3},\
-             \"coalesced_windows\":{},\"p50_us\":{},\"p99_us\":{},\"max_window\":{},\
-             \"shared_passes_saved\":{},\"host_threads\":{}}}\n",
+             \"coalesced_windows\":{},\"windows_stolen\":{},\"p50_us\":{},\"p99_us\":{},\
+             \"max_window\":{},\"shared_passes_saved\":{},\"host_threads\":{}}}\n",
             exec.backend,
             exec.threads,
             clients,
             reader_cores,
             lanes,
+            planes,
+            exec.dma_speedup,
             max_batch,
             window_us,
             total,
@@ -597,6 +587,7 @@ fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
             rps,
             m.wire.mean_occupancy(),
             m.wire.coalesced_windows,
+            m.wire.windows_stolen,
             m.latency.percentile_us(50.0),
             m.latency.percentile_us(99.0),
             m.wire.max_window,
@@ -634,7 +625,7 @@ fn runtime_check(cli: &Cli) -> cpm::Result<()> {
     // The pure-Rust interpreter honors `--threads` / `--backend`; the
     // PJRT backend parallelizes inside XLA instead.
     #[cfg(not(feature = "pjrt"))]
-    backend.set_exec(exec_config(cli)?);
+    backend.set_exec(ServerConfig::from_env().with_cli(cli)?.pool.exec);
     let shapes = backend.available_traces();
     println!("trace shapes from {dir}: {shapes:?}");
     let shape = shapes

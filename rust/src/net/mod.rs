@@ -44,5 +44,5 @@ pub mod wire;
 
 pub use client::{CpmClient, MAX_IN_FLIGHT};
 pub use server::{NetConfig, NetServer};
-pub use window::{AdmissionQueue, TryPush, WindowConfig};
+pub use window::{AdmissionQueue, Pull, TryPush, WindowConfig};
 pub use wire::ClientMsg;

@@ -10,7 +10,14 @@
 //! own dispatcher thread; dispatchers share the [`CpmServer`] behind a
 //! mutex held for exactly the [`CpmServer::handle_batch`] call, so
 //! device execution serializes while windowing, encode, and reply
-//! enqueue overlap across lanes. Replies are *enqueued* onto the owning
+//! enqueue overlap across lanes. An idle dispatcher does not sit out a
+//! burst on a sibling lane: after [`STEAL_PATIENCE`] with nothing on
+//! its own lane it *steals* a ready window from the deepest sibling
+//! ([`AdmissionQueue::try_steal`] — only windows already past their
+//! coalescing deadline move, so stealing never shortens a window).
+//! Every window executes through its home lane's [`LaneTurn`]
+//! turnstile in drain order, so per-lane FIFO survives stealing; stolen
+//! windows count in `windows_stolen`. Replies are *enqueued* onto the owning
 //! connection's outbound buffer and flushed by its reader core — the
 //! dispatcher never writes to a socket and therefore never blocks on a
 //! slow peer. Responses carry the client-assigned request id, so
@@ -22,7 +29,10 @@
 //!
 //! Per-connection state held by a core: the *pinned tenant* (set by a
 //! `Hello` frame, defaulting to
-//! [`DEFAULT_TENANT`](crate::coordinator::DEFAULT_TENANT)), a
+//! [`DEFAULT_TENANT`](crate::coordinator::DEFAULT_TENANT)); a `Hello`
+//! carrying a protocol version other than
+//! [`wire::PROTOCOL_VERSION`] is answered with a typed
+//! [`CpmError::Wire`] reply and the connection is closed), a
 //! [`wire::FrameBuf`] resuming partially-read frames across readiness
 //! ticks, the outbound reply buffer, and at most one *parked* request
 //! (admission backpressure: when the connection's lane is full, the
@@ -56,7 +66,7 @@ use std::collections::VecDeque;
 use std::io::{self, Read, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -66,7 +76,7 @@ use crate::error::{CpmError, Result};
 use crate::obs::{Recorder, SpanEvent};
 
 use super::poll::{fd_of, Interest, PollEntry, Poller};
-use super::window::{AdmissionQueue, TryPush, WindowConfig};
+use super::window::{AdmissionQueue, Pull, TryPush, WindowConfig};
 use super::wire::{self, ClientMsg, FrameBuf};
 
 /// Per-connection outbound buffer cap. A peer that stops draining
@@ -81,6 +91,12 @@ const READ_BUDGET: usize = 256 * 1024;
 
 /// Read chunk size (one scratch buffer per core, reused every tick).
 const READ_CHUNK: usize = 64 * 1024;
+
+/// How long an idle dispatcher waits on its own empty lane before
+/// trying to steal a ready window from the deepest sibling lane. Only
+/// engaged when more than one lane exists — a lone lane has nobody to
+/// steal from and waits on itself indefinitely.
+const STEAL_PATIENCE: Duration = Duration::from_millis(5);
 
 /// TCP front-end configuration.
 #[derive(Debug, Clone)]
@@ -131,6 +147,38 @@ impl Default for NetConfig {
 /// a panicked peer thread; the guarded state is counters and buffers).
 fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Per-lane execution turnstile. Every window drained from a lane
+/// carries a consecutive sequence number (stamped by the
+/// [`AdmissionQueue`]), and whichever thread executes it — the lane's
+/// own dispatcher or a stealing sibling — waits for that sequence's
+/// turn here before touching the server. Stealing therefore moves
+/// *where* a window executes without reordering *when* relative to its
+/// lane siblings: per-lane FIFO survives work stealing.
+#[derive(Debug, Default)]
+struct LaneTurn {
+    next: Mutex<u64>,
+    advanced: Condvar,
+}
+
+impl LaneTurn {
+    /// Block until sequence `seq` holds the lane's turn.
+    fn wait_for(&self, seq: u64) {
+        let mut next = lock(&self.next);
+        while *next != seq {
+            next = self
+                .advanced
+                .wait(next)
+                .unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Release the turn to the next sequence.
+    fn advance(&self) {
+        *lock(&self.next) += 1;
+        self.advanced.notify_all();
+    }
 }
 
 /// A core's connection-injection queue: sockets handed over by the
@@ -342,13 +390,17 @@ impl NetServer {
             }
         }
 
-        let lane_handles = net.lanes.clone();
-        for (i, lane) in lane_handles.into_iter().enumerate() {
+        let turns: Vec<Arc<LaneTurn>> = (0..dispatch_lanes)
+            .map(|_| Arc::new(LaneTurn::default()))
+            .collect();
+        for me in 0..dispatch_lanes {
             let server = Arc::clone(&net.server);
             let recorder = Arc::clone(&net.recorder);
+            let lanes = net.lanes.clone();
+            let turns = turns.clone();
             let spawned = std::thread::Builder::new()
-                .name(format!("cpm-net-lane{i}"))
-                .spawn(move || dispatch_loop(&server, &lane, &recorder));
+                .name(format!("cpm-net-lane{me}"))
+                .spawn(move || dispatch_loop(&server, &lanes, &turns, me, &recorder));
             match spawned {
                 Ok(h) => net.dispatchers.push(h),
                 Err(e) => {
@@ -466,62 +518,120 @@ fn encode_reply_frame(id: u64, result: &Result<Response>) -> Option<Vec<u8>> {
     }
 }
 
-/// One dispatcher lane: drains its admission queue window by window,
-/// executes each window as one batch under the shared server lock,
-/// enqueues reply frames onto the owning connections (never blocking on
-/// a socket), and closes one span per request in the recorder.
-fn dispatch_loop(server: &Mutex<CpmServer>, lane: &AdmissionQueue<Pending>, recorder: &Recorder) {
-    while let Some(pending) = lane.next_window() {
-        let window_len = pending.len();
-        recorder.window_dispatched(window_len as u64);
-        let dispatched = Instant::now();
-        let mut routes = Vec::with_capacity(window_len);
-        let mut batch = Vec::with_capacity(window_len);
-        for p in pending {
-            routes.push((p.id, p.reply, p.arrived));
-            batch.push(p.req);
-        }
-        // Exclusive server access for exactly the batch call: lanes
-        // serialize on device execution but overlap their windowing,
-        // encode, and enqueue phases. The device-cycle delta is read
-        // under the same access, so it is exact even with multiple
-        // lanes executing.
-        let (results, device_cycles) = {
-            let mut srv = lock(server);
-            let cycles_before = recorder.device_cycles_total();
-            let results = srv.handle_batch(&batch);
-            (results, recorder.device_cycles_total() - cycles_before)
-        };
-        let executed = Instant::now();
-        // The batch runs as one unit, so exec time (including any wait
-        // for another lane's batch) and modeled device cycles are
-        // window-level figures stamped onto each member's span.
-        let exec_ns = executed.duration_since(dispatched).as_nanos() as u64;
-        // Each reply's write stage is its encode + enqueue slice,
-        // measured from the previous reply's completion — the window's
-        // write stages sum to the whole phase with no double counting.
-        // The socket write itself happens asynchronously on the
-        // connection's reader core.
-        let mut write_from = executed;
-        for ((id, reply, arrived), result) in routes.into_iter().zip(results) {
-            if let Some(frame) = encode_reply_frame(id, &result) {
-                // A dead or too-slow peer is not a server error: the
-                // enqueue is dropped once the connection's outbound is
-                // closed, and the core reaps the connection.
-                let _ = reply.send(frame);
+/// One dispatcher lane: drains its admission queue window by window and
+/// runs each through [`run_window`]. When its own lane stays empty past
+/// [`STEAL_PATIENCE`], it steals a *ready* window from the deepest
+/// sibling lane instead of idling — stolen windows still execute in
+/// their home lane's drain order through that lane's [`LaneTurn`].
+fn dispatch_loop(
+    server: &Mutex<CpmServer>,
+    lanes: &[Arc<AdmissionQueue<Pending>>],
+    turns: &[Arc<LaneTurn>],
+    me: usize,
+    recorder: &Recorder,
+) {
+    // A lone lane has nobody to steal from: park on the lane itself
+    // instead of cycling an idle-steal loop every few milliseconds.
+    let patience = if lanes.len() > 1 {
+        STEAL_PATIENCE
+    } else {
+        Duration::from_secs(3600)
+    };
+    loop {
+        match lanes[me].next_window_for(patience) {
+            Pull::Window(seq, pending) => {
+                run_window(server, &turns[me], seq, pending, recorder);
             }
-            let done = Instant::now();
-            let wait_ns = dispatched.saturating_duration_since(arrived).as_nanos() as u64;
-            let write_ns = done.duration_since(write_from).as_nanos() as u64;
-            write_from = done;
-            recorder.record_span(SpanEvent::closed(
-                wait_ns,
-                exec_ns,
-                write_ns,
-                window_len as u32,
-                device_cycles,
-            ));
+            Pull::Idle => {
+                // Steal from the deepest sibling. `try_steal` only
+                // yields windows already past their coalescing
+                // deadline (or full, or closed), so stealing never
+                // shortens a window another lane is still building.
+                let victim = lanes
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| *i != me)
+                    .max_by_key(|(_, l)| l.len())
+                    .map(|(i, _)| i);
+                if let Some(v) = victim {
+                    if let Some((seq, pending)) = lanes[v].try_steal() {
+                        recorder.window_stolen();
+                        run_window(server, &turns[v], seq, pending, recorder);
+                    }
+                }
+            }
+            Pull::Closed => break,
         }
+    }
+}
+
+/// Execute one admitted window as a batch: wait for its home lane's
+/// turn (sequence order within a lane is preserved even when the
+/// window was stolen), run the batch under the shared server lock,
+/// release the turn, then enqueue reply frames onto the owning
+/// connections (never blocking on a socket) and close one span per
+/// request in the recorder.
+fn run_window(
+    server: &Mutex<CpmServer>,
+    turn: &LaneTurn,
+    seq: u64,
+    pending: Vec<Pending>,
+    recorder: &Recorder,
+) {
+    let window_len = pending.len();
+    recorder.window_dispatched(window_len as u64);
+    let dispatched = Instant::now();
+    let mut routes = Vec::with_capacity(window_len);
+    let mut batch = Vec::with_capacity(window_len);
+    for p in pending {
+        routes.push((p.id, p.reply, p.arrived));
+        batch.push(p.req);
+    }
+    // The turnstile admits windows in drain order; nothing is held
+    // while waiting, so the thread executing the preceding sequence
+    // can always finish and advance.
+    turn.wait_for(seq);
+    // Exclusive server access for exactly the batch call: lanes
+    // serialize on device execution but overlap their windowing,
+    // encode, and enqueue phases. The device-cycle delta is read
+    // under the same access, so it is exact even with multiple
+    // lanes executing.
+    let (results, device_cycles) = {
+        let mut srv = lock(server);
+        let cycles_before = recorder.device_cycles_total();
+        let results = srv.handle_batch(&batch);
+        (results, recorder.device_cycles_total() - cycles_before)
+    };
+    turn.advance();
+    let executed = Instant::now();
+    // The batch runs as one unit, so exec time (including any wait
+    // for another lane's batch) and modeled device cycles are
+    // window-level figures stamped onto each member's span.
+    let exec_ns = executed.duration_since(dispatched).as_nanos() as u64;
+    // Each reply's write stage is its encode + enqueue slice,
+    // measured from the previous reply's completion — the window's
+    // write stages sum to the whole phase with no double counting.
+    // The socket write itself happens asynchronously on the
+    // connection's reader core.
+    let mut write_from = executed;
+    for ((id, reply, arrived), result) in routes.into_iter().zip(results) {
+        if let Some(frame) = encode_reply_frame(id, &result) {
+            // A dead or too-slow peer is not a server error: the
+            // enqueue is dropped once the connection's outbound is
+            // closed, and the core reaps the connection.
+            let _ = reply.send(frame);
+        }
+        let done = Instant::now();
+        let wait_ns = dispatched.saturating_duration_since(arrived).as_nanos() as u64;
+        let write_ns = done.duration_since(write_from).as_nanos() as u64;
+        write_from = done;
+        recorder.record_span(SpanEvent::closed(
+            wait_ns,
+            exec_ns,
+            write_ns,
+            window_len as u32,
+            device_cycles,
+        ));
     }
 }
 
@@ -810,7 +920,25 @@ fn process_frames(ctx: &CoreCtx, conn: &mut Conn) -> bool {
         // wait stage, so wait + exec + write equals end-to-end exactly.
         let arrived = Instant::now();
         match wire::decode_client_msg(&payload) {
-            Ok(ClientMsg::Hello { tenant }) => conn.pinned = tenant,
+            Ok(ClientMsg::Hello { version, tenant }) => {
+                if version != wire::PROTOCOL_VERSION {
+                    // A mismatched peer gets a reason, not a silent
+                    // hangup: answer a typed error on request id 0 (a
+                    // client's first id), best-effort flush it — the
+                    // reap below purges anything still queued — and
+                    // close the connection.
+                    let err: Result<Response> = Err(CpmError::Wire(format!(
+                        "protocol version mismatch: client speaks v{version}, server speaks v{}",
+                        wire::PROTOCOL_VERSION
+                    )));
+                    if let Some(frame) = encode_reply_frame(0, &err) {
+                        let _ = conn.shared.send(frame);
+                        let _ = flush_outbound(conn, ctx.write_timeout);
+                    }
+                    return false;
+                }
+                conn.pinned = tenant;
+            }
             Ok(ClientMsg::Request {
                 id,
                 tenant,
@@ -930,4 +1058,31 @@ fn reap_conn(ctx: &CoreCtx, conn: Conn) {
     }
     let _ = conn.stream.shutdown(Shutdown::Both);
     ctx.active.fetch_sub(1, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_turn_admits_sequences_in_order() {
+        let turn = Arc::new(LaneTurn::default());
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        // Spawned out of order; the turnstile serializes 0, 1, 2 — the
+        // property that lets a stolen window keep its lane's FIFO.
+        for seq in [2u64, 0, 1] {
+            let turn = Arc::clone(&turn);
+            let order = Arc::clone(&order);
+            handles.push(std::thread::spawn(move || {
+                turn.wait_for(seq);
+                lock(&order).push(seq);
+                turn.advance();
+            }));
+        }
+        for h in handles {
+            h.join().expect("turnstile thread panicked");
+        }
+        assert_eq!(*lock(&order), vec![0, 1, 2]);
+    }
 }

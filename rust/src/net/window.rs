@@ -34,6 +34,18 @@
 //! reconnect during drain can no longer leave a stale `Instant` that
 //! slams every subsequent window shut early.
 //!
+//! With several dispatcher lanes the consumer side grows two more
+//! entry points. [`AdmissionQueue::next_window_for`] is a bounded pull:
+//! it waits at most the caller's patience and hands back [`Pull::Idle`]
+//! — consuming nothing — so a dispatcher can look sideways instead of
+//! parking forever on its own empty lane. [`AdmissionQueue::try_steal`]
+//! is that sideways look: it drains a window from a *sibling* queue only
+//! if one is already ready (full, past its deadline, or closing), never
+//! shortening a window that is still coalescing. Every drained window
+//! carries a per-queue sequence number so the executing side can keep
+//! one lane's windows in FIFO order no matter which dispatcher runs
+//! them.
+//!
 //! The queue is deliberately generic over its item type so the batching
 //! and fairness policy is testable without sockets.
 
@@ -63,6 +75,20 @@ impl Default for WindowConfig {
             max_queue: 1024,
         }
     }
+}
+
+/// Outcome of a bounded window pull ([`AdmissionQueue::next_window_for`]).
+#[derive(Debug)]
+pub enum Pull<T> {
+    /// A window closed within the caller's patience: its drain sequence
+    /// number (consecutive per queue, shared with
+    /// [`AdmissionQueue::try_steal`]) and its items.
+    Window(u64, Vec<T>),
+    /// No window became ready within the caller's patience. Nothing was
+    /// consumed — the caller may steal elsewhere and pull again.
+    Idle,
+    /// The queue is closed and fully drained.
+    Closed,
 }
 
 /// Outcome of a non-blocking admission attempt. The rejected variants
@@ -98,6 +124,10 @@ struct State<T> {
     cursor: usize,
     /// Total items across all lanes.
     len: usize,
+    /// Windows drained so far — the next window's sequence number, which
+    /// the executing side uses to keep this queue's windows in FIFO
+    /// order across dispatchers.
+    windows_drained: u64,
     closed: bool,
 }
 
@@ -125,6 +155,34 @@ impl<T> State<T> {
             .filter_map(|l| l.items.front().map(|(at, _)| *at))
             .min()
     }
+
+    /// Drain one window (up to `max_batch` items) round-robin across the
+    /// non-empty lanes, one item per lane per turn, and stamp it with
+    /// its drain sequence number.
+    fn drain(&mut self, max_batch: usize) -> (u64, Vec<T>) {
+        let n = self.len.min(max_batch);
+        let mut window = Vec::with_capacity(n);
+        let lane_count = self.lanes.len();
+        while window.len() < n {
+            let mut popped = false;
+            for off in 0..lane_count {
+                let i = (self.cursor + off) % lane_count;
+                if let Some((_, item)) = self.lanes[i].items.pop_front() {
+                    window.push(item);
+                    self.cursor = (i + 1) % lane_count;
+                    popped = true;
+                    break;
+                }
+            }
+            if !popped {
+                break;
+            }
+        }
+        self.len -= window.len();
+        let seq = self.windows_drained;
+        self.windows_drained += 1;
+        (seq, window)
+    }
 }
 
 /// A multi-producer, single-consumer queue whose consumer drains it in
@@ -148,6 +206,7 @@ impl<T> AdmissionQueue<T> {
                 index: HashMap::new(),
                 cursor: 0,
                 len: 0,
+                windows_drained: 0,
                 closed: false,
             }),
             arrived: Condvar::new(),
@@ -268,19 +327,44 @@ impl<T> AdmissionQueue<T> {
     /// window back out instead of leaving it pinned to a dead stamp.
     /// Returns `None` once the queue is closed *and* fully drained.
     pub fn next_window(&self) -> Option<Vec<T>> {
+        loop {
+            match self.next_window_for(Duration::from_secs(3600)) {
+                Pull::Window(_, w) => return Some(w),
+                Pull::Idle => continue,
+                Pull::Closed => return None,
+            }
+        }
+    }
+
+    /// Bounded [`AdmissionQueue::next_window`]: wait at most `patience`
+    /// for a window to close, answering [`Pull::Idle`] — with nothing
+    /// consumed — if none did. A multi-lane dispatcher uses a short
+    /// patience so an idle lane frees its thread to steal ready windows
+    /// from busier siblings instead of parking forever on its own queue.
+    pub fn next_window_for(&self, patience: Duration) -> Pull<T> {
         let max_batch = self.cfg.max_batch.max(1);
+        let give_up = Instant::now() + patience;
         let mut st = self.state.lock().expect("admission queue poisoned");
         loop {
             // Wait for the window-opening item.
             while st.len == 0 {
                 if st.closed {
-                    return None;
+                    return Pull::Closed;
                 }
-                st = self.arrived.wait(st).expect("admission queue poisoned");
+                let now = Instant::now();
+                if now >= give_up {
+                    return Pull::Idle;
+                }
+                let (guard, _timeout) = self
+                    .arrived
+                    .wait_timeout(st, give_up - now)
+                    .expect("admission queue poisoned");
+                st = guard;
             }
             // Keep the window open until the deadline (measured from the
             // oldest surviving arrival — recomputed every wake so a reap
-            // can move it) or a full batch.
+            // can move it) or a full batch, without overstaying the
+            // caller's patience.
             while st.len < max_batch && !st.closed {
                 let Some(opened) = st.oldest_arrival() else {
                     break; // reaped to empty mid-wait
@@ -290,9 +374,12 @@ impl<T> AdmissionQueue<T> {
                 if now >= deadline {
                     break;
                 }
+                if now >= give_up {
+                    return Pull::Idle;
+                }
                 let (guard, _timeout) = self
                     .arrived
-                    .wait_timeout(st, deadline - now)
+                    .wait_timeout(st, deadline.min(give_up) - now)
                     .expect("admission queue poisoned");
                 st = guard;
             }
@@ -300,32 +387,40 @@ impl<T> AdmissionQueue<T> {
                 break;
             }
             if st.closed {
-                return None;
+                return Pull::Closed;
             }
             // Everything was reaped while we waited: no window to serve.
         }
-        let n = st.len.min(max_batch);
-        let mut window = Vec::with_capacity(n);
-        let lane_count = st.lanes.len();
-        while window.len() < n {
-            let mut popped = false;
-            for off in 0..lane_count {
-                let i = (st.cursor + off) % lane_count;
-                if let Some((_, item)) = st.lanes[i].items.pop_front() {
-                    window.push(item);
-                    st.cursor = (i + 1) % lane_count;
-                    popped = true;
-                    break;
-                }
-            }
-            if !popped {
-                break;
-            }
-        }
-        st.len -= window.len();
+        let (seq, window) = st.drain(max_batch);
         // Space freed: wake producers blocked on the max_queue bound.
         self.drained.notify_all();
-        Some(window)
+        Pull::Window(seq, window)
+    }
+
+    /// Take one window *if one is already ready*: the queue is closing,
+    /// a full batch is waiting, or the oldest arrival has waited out
+    /// `max_delay`. Never blocks and never shortens a window that is
+    /// still coalescing, so a steal changes who executes a window but
+    /// not how it was formed. Returns the window with its drain
+    /// sequence number (same numbering as
+    /// [`AdmissionQueue::next_window_for`]).
+    pub fn try_steal(&self) -> Option<(u64, Vec<T>)> {
+        let max_batch = self.cfg.max_batch.max(1);
+        let mut st = self.state.lock().expect("admission queue poisoned");
+        if st.len == 0 {
+            return None;
+        }
+        let ready = st.closed
+            || st.len >= max_batch
+            || st
+                .oldest_arrival()
+                .is_some_and(|at| at.elapsed() >= self.cfg.max_delay);
+        if !ready {
+            return None;
+        }
+        let out = st.drain(max_batch);
+        self.drained.notify_all();
+        Some(out)
     }
 }
 
@@ -581,6 +676,76 @@ mod tests {
         let mut w = q.next_window().unwrap();
         w.sort_unstable();
         assert_eq!(w, vec![2, 3]);
+    }
+
+    #[test]
+    fn bounded_pull_goes_idle_without_consuming() {
+        let q = queue(600_000, 4);
+        // Nothing queued: the pull gives up after its patience.
+        assert!(matches!(
+            q.next_window_for(Duration::from_millis(10)),
+            Pull::Idle
+        ));
+        // A freshly arrived item is still coalescing (10-minute window):
+        // the bounded pull must leave it in place for a later pull.
+        assert!(q.push(1));
+        assert!(matches!(
+            q.next_window_for(Duration::from_millis(10)),
+            Pull::Idle
+        ));
+        assert_eq!(q.len(), 1);
+        q.close();
+        // Closing makes the window ready regardless of its deadline.
+        match q.next_window_for(Duration::from_millis(10)) {
+            Pull::Window(seq, w) => {
+                assert_eq!(seq, 0);
+                assert_eq!(w, vec![1]);
+            }
+            other => panic!("expected a window, got {other:?}"),
+        }
+        assert!(matches!(
+            q.next_window_for(Duration::from_millis(10)),
+            Pull::Closed
+        ));
+    }
+
+    #[test]
+    fn steal_takes_only_ready_windows() {
+        let q = queue(600_000, 2);
+        assert!(q.push(1));
+        // Still coalescing (neither full, aged, nor closing): a steal
+        // must not shorten the window.
+        assert!(q.try_steal().is_none());
+        assert!(q.push(2));
+        // Full window: stealable, stamped with its drain sequence.
+        let (seq, w) = q.try_steal().expect("full window must be stealable");
+        assert_eq!(seq, 0);
+        assert_eq!(w, vec![1, 2]);
+        assert!(q.try_steal().is_none());
+    }
+
+    #[test]
+    fn steal_takes_windows_past_their_deadline() {
+        let q = queue(600_000, 32);
+        let Some(stale) = Instant::now().checked_sub(Duration::from_secs(1_200)) else {
+            return; // platform clock too young to back-date; skip
+        };
+        assert!(q.push_with_arrival(5, stale));
+        let (_, w) = q.try_steal().expect("aged window must be stealable");
+        assert_eq!(w, vec![5]);
+    }
+
+    #[test]
+    fn drain_sequences_are_consecutive_across_pull_paths() {
+        let q = queue(600_000, 2);
+        for i in 0..4 {
+            assert!(q.push(i));
+        }
+        let (s0, _) = q.try_steal().unwrap();
+        match q.next_window_for(Duration::from_millis(10)) {
+            Pull::Window(s1, _) => assert_eq!((s0, s1), (0, 1)),
+            other => panic!("expected a window, got {other:?}"),
+        }
     }
 
     #[test]

@@ -9,11 +9,14 @@
 //! round-trips — so typed errors (capacity, quota, SQL, pool) survive the
 //! network hop instead of collapsing into strings.
 //!
-//! Client → server messages are [`ClientMsg`]: a `Hello` that pins the
-//! connection's default tenant, or a `Request` envelope carrying a
-//! connection-local id, optional tenant/device overrides, and the
-//! operation. Server → client replies echo the id and carry
-//! `Result<Response, CpmError>`.
+//! Client → server messages are [`ClientMsg`]: a `Hello` that carries
+//! the client's [`PROTOCOL_VERSION`] and pins the connection's default
+//! tenant, or a `Request` envelope carrying a connection-local id,
+//! optional tenant/device overrides, and the operation. Server → client
+//! replies echo the id and carry `Result<Response, CpmError>`. A server
+//! seeing a `Hello` with a version other than its own answers a typed
+//! [`CpmError::Wire`] reply and closes the connection, so incompatible
+//! peers fail loud instead of mis-decoding each other's frames.
 
 use std::io::{self, Read, Write};
 
@@ -159,12 +162,20 @@ impl FrameBuf {
     }
 }
 
+/// Version of the frame payload layout. Bumped whenever an encoding
+/// changes shape; `Hello` carries it so a server can reject a peer
+/// speaking a different layout with a typed error instead of a silent
+/// mis-decode further into the stream.
+pub const PROTOCOL_VERSION: u32 = 1;
+
 /// A decoded client → server message.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ClientMsg {
     /// Pin the connection's default tenant: later requests that carry no
     /// explicit tenant are attributed to it.
     Hello {
+        /// The client's [`PROTOCOL_VERSION`].
+        version: u32,
         /// Tenant to pin.
         tenant: String,
     },
@@ -193,10 +204,12 @@ const MSG_HELLO: u8 = 0;
 const MSG_REQUEST: u8 = 1;
 const MSG_STATS: u8 = 2;
 
-/// Encode a `Hello` payload pinning `tenant`.
+/// Encode a `Hello` payload pinning `tenant`, stamped with this build's
+/// [`PROTOCOL_VERSION`].
 pub fn encode_hello(tenant: &str) -> Vec<u8> {
-    let mut out = Vec::with_capacity(5 + tenant.len());
+    let mut out = Vec::with_capacity(9 + tenant.len());
     out.push(MSG_HELLO);
+    put_u32(&mut out, PROTOCOL_VERSION);
     put_str(&mut out, tenant);
     out
 }
@@ -230,6 +243,7 @@ pub fn decode_client_msg(payload: &[u8]) -> Result<ClientMsg> {
     let mut d = Dec::new(payload);
     let msg = match d.take_u8()? {
         MSG_HELLO => ClientMsg::Hello {
+            version: d.take_u32()?,
             tenant: d.take_str()?,
         },
         MSG_REQUEST => ClientMsg::Request {
@@ -680,6 +694,8 @@ fn put_metrics(out: &mut Vec<u8>, m: &Metrics) {
     put_u64(out, m.groups_executed);
     put_u64(out, m.makespan_serial_cycles);
     put_u64(out, m.makespan_overlapped_cycles);
+    put_u64(out, m.makespan_multi_cycles);
+    put_u64(out, m.dma_saved_cycles);
     put_u64(out, m.group_plan_ns);
     put_u64(out, m.scrapes);
     put_u32(out, m.per_tenant.len() as u32);
@@ -694,6 +710,7 @@ fn put_metrics(out: &mut Vec<u8>, m: &Metrics) {
     put_u64(out, m.wire.max_window);
     put_u64(out, m.wire.window_requests);
     put_u64(out, m.wire.connections_multiplexed);
+    put_u64(out, m.wire.windows_stolen);
     put_u64(out, m.spans.recorded);
     put_u64(out, m.spans.wait_ns);
     put_u64(out, m.spans.exec_ns);
@@ -715,6 +732,11 @@ fn put_metrics(out: &mut Vec<u8>, m: &Metrics) {
     for &d in &m.gauges.lane_queue_depths {
         put_u64(out, d);
     }
+    put_u64(out, m.gauges.planes);
+    put_u32(out, m.gauges.plane_used_pes.len() as u32);
+    for &p in &m.gauges.plane_used_pes {
+        put_u64(out, p);
+    }
 }
 
 fn take_metrics(d: &mut Dec<'_>) -> Result<Metrics> {
@@ -728,6 +750,8 @@ fn take_metrics(d: &mut Dec<'_>) -> Result<Metrics> {
     let groups_executed = d.take_u64()?;
     let makespan_serial_cycles = d.take_u64()?;
     let makespan_overlapped_cycles = d.take_u64()?;
+    let makespan_multi_cycles = d.take_u64()?;
+    let dma_saved_cycles = d.take_u64()?;
     let group_plan_ns = d.take_u64()?;
     let scrapes = d.take_u64()?;
     let n_tenants = d.take_u32()? as usize;
@@ -747,6 +771,7 @@ fn take_metrics(d: &mut Dec<'_>) -> Result<Metrics> {
         max_window: d.take_u64()?,
         window_requests: d.take_u64()?,
         connections_multiplexed: d.take_u64()?,
+        windows_stolen: d.take_u64()?,
     };
     let recorded = d.take_u64()?;
     let wait_ns = d.take_u64()?;
@@ -775,6 +800,13 @@ fn take_metrics(d: &mut Dec<'_>) -> Result<Metrics> {
     for _ in 0..n_lanes {
         lane_queue_depths.push(d.take_u64()?);
     }
+    let planes = d.take_u64()?;
+    let n_planes = d.take_u32()? as usize;
+    d.need(n_planes.saturating_mul(8))?;
+    let mut plane_used_pes = Vec::with_capacity(n_planes);
+    for _ in 0..n_planes {
+        plane_used_pes.push(d.take_u64()?);
+    }
     let gauges = GaugeStats {
         queue_depth,
         worker_threads,
@@ -782,6 +814,8 @@ fn take_metrics(d: &mut Dec<'_>) -> Result<Metrics> {
         worker_dispatches,
         reader_cores,
         lane_queue_depths,
+        planes,
+        plane_used_pes,
     };
     Ok(Metrics {
         requests,
@@ -794,6 +828,8 @@ fn take_metrics(d: &mut Dec<'_>) -> Result<Metrics> {
         groups_executed,
         makespan_serial_cycles,
         makespan_overlapped_cycles,
+        makespan_multi_cycles,
+        dma_saved_cycles,
         group_plan_ns,
         scrapes,
         per_tenant,
@@ -947,7 +983,7 @@ mod tests {
 
     fn roundtrip_msg(msg: &ClientMsg) {
         let payload = match msg {
-            ClientMsg::Hello { tenant } => encode_hello(tenant),
+            ClientMsg::Hello { version: _, tenant } => encode_hello(tenant),
             ClientMsg::Request {
                 id,
                 tenant,
@@ -963,6 +999,7 @@ mod tests {
     #[test]
     fn client_messages_roundtrip() {
         roundtrip_msg(&ClientMsg::Hello {
+            version: PROTOCOL_VERSION,
             tenant: "acme".into(),
         });
         roundtrip_msg(&ClientMsg::Stats { id: 91 });
@@ -1061,6 +1098,10 @@ mod tests {
         r.set_reader_cores(4);
         r.sample_gauges(2, 4, 1, 17);
         r.sample_lane_depths(&[3, 0, 1]);
+        r.record_multi(600, 100);
+        r.window_stolen();
+        r.set_planes(2);
+        r.sample_planes(&[5_000, 1_200]);
         r.scraped();
         let snap = r.snapshot();
         let payload = encode_reply(7, &Ok(Response::Stats(Box::new(snap.clone()))));
@@ -1077,6 +1118,18 @@ mod tests {
         match back.unwrap() {
             Response::Stats(m) => assert_eq!(*m, empty),
             other => panic!("expected stats, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hello_carries_the_protocol_version() {
+        let payload = encode_hello("acme");
+        match decode_client_msg(&payload).unwrap() {
+            ClientMsg::Hello { version, tenant } => {
+                assert_eq!(version, PROTOCOL_VERSION);
+                assert_eq!(tenant, "acme");
+            }
+            other => panic!("expected hello, got {other:?}"),
         }
     }
 

@@ -16,7 +16,7 @@ use super::Stage;
 /// Every metric name the exporter emits. [`check`] requires each of
 /// these to appear in a scrape; the CI scrape leg runs that check
 /// against a live `cpm serve`.
-pub const METRIC_NAMES: [&str; 32] = [
+pub const METRIC_NAMES: [&str; 37] = [
     "cpm_requests_total",
     "cpm_errors_total",
     "cpm_batches_total",
@@ -27,12 +27,15 @@ pub const METRIC_NAMES: [&str; 32] = [
     "cpm_device_exclusive_ops_total",
     "cpm_makespan_serial_cycles_total",
     "cpm_makespan_overlapped_cycles_total",
+    "cpm_makespan_multi_cycles_total",
+    "cpm_dma_saved_cycles_total",
     "cpm_group_plan_ns_total",
     "cpm_connections_total",
     "cpm_connections_multiplexed_total",
     "cpm_windows_total",
     "cpm_coalesced_windows_total",
     "cpm_window_requests_total",
+    "cpm_windows_stolen_total",
     "cpm_stats_scrapes_total",
     "cpm_spans_recorded_total",
     "cpm_span_stage_ns_total",
@@ -40,6 +43,8 @@ pub const METRIC_NAMES: [&str; 32] = [
     "cpm_queue_depth",
     "cpm_reader_cores",
     "cpm_lane_queue_depth",
+    "cpm_planes",
+    "cpm_plane_used_pes",
     "cpm_worker_threads",
     "cpm_worker_busy",
     "cpm_worker_dispatches_total",
@@ -144,6 +149,18 @@ pub fn prometheus(m: &Metrics) -> String {
     );
     counter(
         &mut out,
+        "cpm_makespan_multi_cycles_total",
+        "Modeled multi-plane makespan of executed groups (cycles).",
+        m.makespan_multi_cycles,
+    );
+    counter(
+        &mut out,
+        "cpm_dma_saved_cycles_total",
+        "Cycles the DMA side bus shaved off the multi-plane makespan.",
+        m.dma_saved_cycles,
+    );
+    counter(
+        &mut out,
         "cpm_group_plan_ns_total",
         "Wall nanoseconds spent forming batch groups.",
         m.group_plan_ns,
@@ -172,6 +189,12 @@ pub fn prometheus(m: &Metrics) -> String {
         "cpm_window_requests_total",
         "Requests admitted through windows.",
         m.wire.window_requests,
+    );
+    counter(
+        &mut out,
+        "cpm_windows_stolen_total",
+        "Ready windows executed by a lane other than the one they arrived on.",
+        m.wire.windows_stolen,
     );
     counter(&mut out, "cpm_stats_scrapes_total", "Stats scrapes answered.", m.scrapes);
     counter(
@@ -221,6 +244,21 @@ pub fn prometheus(m: &Metrics) -> String {
     );
     for (lane, depth) in m.gauges.lane_queue_depths.iter().enumerate() {
         let _ = writeln!(out, "cpm_lane_queue_depth{{lane=\"{lane}\"}} {depth}");
+    }
+    gauge(
+        &mut out,
+        "cpm_planes",
+        "PE planes the device pool is partitioned into.",
+        m.gauges.planes as f64,
+    );
+    header(
+        &mut out,
+        "cpm_plane_used_pes",
+        "gauge",
+        "PEs claimed by residents per plane at the last sample.",
+    );
+    for (plane, used) in m.gauges.plane_used_pes.iter().enumerate() {
+        let _ = writeln!(out, "cpm_plane_used_pes{{plane=\"{plane}\"}} {used}");
     }
     gauge(
         &mut out,
@@ -373,6 +411,10 @@ mod tests {
         r.connection_multiplexed();
         r.set_reader_cores(4);
         r.sample_lane_depths(&[2, 0]);
+        r.set_planes(2);
+        r.sample_planes(&[320, 64]);
+        r.record_multi(480, 80);
+        r.window_stolen();
         let text = prometheus(&r.snapshot());
         check(&text).expect("populated snapshot must scrape clean");
         assert!(text.contains("cpm_requests_total 3"));
@@ -380,6 +422,12 @@ mod tests {
         assert!(text.contains("cpm_reader_cores 4"));
         assert!(text.contains("cpm_lane_queue_depth{lane=\"0\"} 2"));
         assert!(text.contains("cpm_lane_queue_depth{lane=\"1\"} 0"));
+        assert!(text.contains("cpm_planes 2"));
+        assert!(text.contains("cpm_plane_used_pes{plane=\"0\"} 320"));
+        assert!(text.contains("cpm_plane_used_pes{plane=\"1\"} 64"));
+        assert!(text.contains("cpm_makespan_multi_cycles_total 480"));
+        assert!(text.contains("cpm_dma_saved_cycles_total 80"));
+        assert!(text.contains("cpm_windows_stolen_total 1"));
         assert!(text.contains("cpm_tenant_requests_total{tenant=\"alice\"} 3"));
         assert!(text.contains("cpm_span_stage_ns_total{stage=\"exec\"} 2000"));
         assert!(text.contains("cpm_request_latency_us_bucket{le=\"127\"} 3"));

@@ -111,6 +111,8 @@ pub struct Recorder {
     groups_executed: AtomicU64,
     makespan_serial_cycles: AtomicU64,
     makespan_overlapped_cycles: AtomicU64,
+    makespan_multi_cycles: AtomicU64,
+    dma_saved_cycles: AtomicU64,
     group_plan_ns: AtomicU64,
     // Wire counters.
     connections: AtomicU64,
@@ -119,6 +121,7 @@ pub struct Recorder {
     coalesced_windows: AtomicU64,
     max_window: AtomicU64,
     window_requests: AtomicU64,
+    windows_stolen: AtomicU64,
     scrapes: AtomicU64,
     // Span stage totals (nanoseconds).
     spans_recorded: AtomicU64,
@@ -132,6 +135,7 @@ pub struct Recorder {
     worker_busy: AtomicU64,
     worker_dispatches: AtomicU64,
     reader_cores: AtomicU64,
+    planes: AtomicU64,
     // Distributions.
     latency_us: AtomicHistogram,
     stage_us: [AtomicHistogram; 4],
@@ -139,6 +143,7 @@ pub struct Recorder {
     tenants: Mutex<BTreeMap<String, TenantMetrics>>,
     ring: Mutex<SpanRing>,
     lane_depths: Mutex<Vec<u64>>,
+    plane_used: Mutex<Vec<u64>>,
 }
 
 impl Recorder {
@@ -192,6 +197,13 @@ impl Recorder {
         self.group_plan_ns.fetch_add(plan_ns, Ordering::Relaxed);
     }
 
+    /// Multi-plane batch outcome: the placed makespan and the cycles the
+    /// §8 DMA side bus shaved off it.
+    pub fn record_multi(&self, makespan_multi: u64, dma_saved: u64) {
+        self.makespan_multi_cycles.fetch_add(makespan_multi, Ordering::Relaxed);
+        self.dma_saved_cycles.fetch_add(dma_saved, Ordering::Relaxed);
+    }
+
     /// Record the same per-request latency for `n` requests (amortized
     /// share of a batch).
     pub fn record_latency_n(&self, d: Duration, n: u64) {
@@ -223,6 +235,12 @@ impl Recorder {
             self.coalesced_windows.fetch_add(1, Ordering::Relaxed);
         }
         self.max_window.fetch_max(n, Ordering::Relaxed);
+    }
+
+    /// A ready admission window was executed by a dispatcher lane other
+    /// than the one it arrived on.
+    pub fn window_stolen(&self) {
+        self.windows_stolen.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one closed request-path span.
@@ -260,6 +278,20 @@ impl Recorder {
         lanes.extend_from_slice(depths);
     }
 
+    /// Record how many PE planes the device pool is partitioned into (a
+    /// startup-time gauge, like `set_reader_cores`).
+    pub fn set_planes(&self, n: u64) {
+        self.planes.store(n, Ordering::Relaxed);
+    }
+
+    /// Store the per-plane resident PE occupancy observed after a batch
+    /// (or at scrape time).
+    pub fn sample_planes(&self, used: &[u64]) {
+        let mut planes = lock(&self.plane_used);
+        planes.clear();
+        planes.extend_from_slice(used);
+    }
+
     /// A stats scrape was answered.
     pub fn scraped(&self) {
         self.scrapes.fetch_add(1, Ordering::Relaxed);
@@ -290,6 +322,8 @@ impl Recorder {
             groups_executed: load(&self.groups_executed),
             makespan_serial_cycles: load(&self.makespan_serial_cycles),
             makespan_overlapped_cycles: load(&self.makespan_overlapped_cycles),
+            makespan_multi_cycles: load(&self.makespan_multi_cycles),
+            dma_saved_cycles: load(&self.dma_saved_cycles),
             group_plan_ns: load(&self.group_plan_ns),
             scrapes: load(&self.scrapes),
             per_tenant: lock(&self.tenants).clone(),
@@ -301,6 +335,7 @@ impl Recorder {
                 max_window: load(&self.max_window),
                 window_requests: load(&self.window_requests),
                 connections_multiplexed: load(&self.connections_multiplexed),
+                windows_stolen: load(&self.windows_stolen),
             },
             spans: SpanStats {
                 recorded: load(&self.spans_recorded),
@@ -318,6 +353,8 @@ impl Recorder {
                 worker_dispatches: load(&self.worker_dispatches),
                 reader_cores: load(&self.reader_cores),
                 lane_queue_depths: lock(&self.lane_depths).clone(),
+                planes: load(&self.planes),
+                plane_used_pes: lock(&self.plane_used).clone(),
             },
         }
     }
@@ -336,6 +373,8 @@ mod tests {
         r.request_error();
         r.device_cost(120, 2);
         r.batch_totals(5, 2, 900, 640, 1_500);
+        r.record_multi(480, 80);
+        r.window_stolen();
         r.record_latency_n(Duration::from_micros(250), 3);
         r.connection_accepted();
         r.window_dispatched(3);
@@ -353,6 +392,8 @@ mod tests {
         assert_eq!(m.groups_executed, 2);
         assert_eq!(m.makespan_serial_cycles, 900);
         assert_eq!(m.makespan_overlapped_cycles, 640);
+        assert_eq!(m.makespan_multi_cycles, 480);
+        assert_eq!(m.dma_saved_cycles, 80);
         assert_eq!(m.group_plan_ns, 1_500);
         assert_eq!(m.scrapes, 1);
         assert_eq!(m.latency.count(), 3);
@@ -361,6 +402,7 @@ mod tests {
         assert_eq!(m.wire.coalesced_windows, 1);
         assert_eq!(m.wire.max_window, 3);
         assert_eq!(m.wire.window_requests, 4);
+        assert_eq!(m.wire.windows_stolen, 1);
         assert_eq!(m.per_tenant["alice"].requests, 3);
     }
 
@@ -404,6 +446,9 @@ mod tests {
         r.set_reader_cores(4);
         r.sample_lane_depths(&[5, 2]);
         r.sample_lane_depths(&[0, 3]);
+        r.set_planes(2);
+        r.sample_planes(&[100, 40]);
+        r.sample_planes(&[90, 50]);
         let g = r.snapshot().gauges;
         assert_eq!(g.queue_depth, 0);
         assert_eq!(g.worker_threads, 4);
@@ -411,6 +456,8 @@ mod tests {
         assert_eq!(g.worker_dispatches, 120);
         assert_eq!(g.reader_cores, 4);
         assert_eq!(g.lane_queue_depths, vec![0, 3]);
+        assert_eq!(g.planes, 2);
+        assert_eq!(g.plane_used_pes, vec![90, 50]);
     }
 
     #[test]

@@ -76,6 +76,9 @@ pub struct WireMetrics {
     /// counts in `connections`; the two diverge only for connections
     /// dropped at the accept cap before a core adopted them).
     pub connections_multiplexed: u64,
+    /// Ready admission windows executed by a dispatcher lane other than
+    /// the one they arrived on (work stealing between lanes).
+    pub windows_stolen: u64,
 }
 
 impl WireMetrics {
@@ -149,6 +152,11 @@ pub struct GaugeStats {
     /// Requests waiting per dispatcher lane at sample time, indexed by
     /// lane id (empty when the server is not fronted by the TCP tier).
     pub lane_queue_depths: Vec<u64>,
+    /// PE planes the device pool is partitioned into (1 = single-plane).
+    pub planes: u64,
+    /// PEs claimed by residents per plane at the last sample, indexed by
+    /// plane id.
+    pub plane_used_pes: Vec<u64>,
 }
 
 /// Snapshot of every served-path counter, histogram, span, and gauge.
@@ -176,6 +184,12 @@ pub struct Metrics {
     pub makespan_serial_cycles: u64,
     /// Modeled overlapped makespan (cycles) of all executed groups.
     pub makespan_overlapped_cycles: u64,
+    /// Modeled multi-plane makespan (cycles) of all executed groups —
+    /// never exceeds `makespan_overlapped_cycles`.
+    pub makespan_multi_cycles: u64,
+    /// Cycles the §8 DMA side bus shaved off the multi-plane makespan
+    /// (0 while `dma_speedup` is off).
+    pub dma_saved_cycles: u64,
     /// Wall nanoseconds spent forming batch groups (plan phase).
     pub group_plan_ns: u64,
     /// Stats scrapes answered.

@@ -17,6 +17,8 @@ use crate::device::mutable_search::MutableSearchableMemory;
 use crate::error::{CpmError, Result};
 use crate::sql::{Schema, Table};
 
+use super::placement::PlaneRegistry;
+
 /// Allocator policy knobs.
 #[derive(Debug, Clone)]
 pub struct PoolConfig {
@@ -29,6 +31,11 @@ pub struct PoolConfig {
     /// have room to shift into (§4's copy-free edits) — the slack policy
     /// the server previously hard-coded.
     pub corpus_slack: usize,
+    /// Number of PE planes the capacity is split into (MASIM-style
+    /// multi-array deployments). Each resident lives on one plane; the
+    /// batch executor overlaps per-plane schedules. `1` (the default)
+    /// is the single-plane pool of the earlier tiers.
+    pub planes: usize,
     /// Plane-execution policy for compute on this pool's devices: the
     /// batch executor constructs planes for dense computable-memory work
     /// through this config's
@@ -44,6 +51,7 @@ impl Default for PoolConfig {
             capacity_pes: 1 << 22,
             tenant_quota_pes: 1 << 22,
             corpus_slack: 4096,
+            planes: 1,
             exec: ExecConfig::default(),
         }
     }
@@ -120,6 +128,7 @@ struct Entry {
     pes: usize,
     pinned: bool,
     last_use: u64,
+    plane: usize,
     device: ResidentDevice,
 }
 
@@ -132,6 +141,7 @@ impl Entry {
             pes: self.pes,
             pinned: self.pinned,
             last_use: self.last_use,
+            plane: self.plane,
         }
     }
 }
@@ -151,6 +161,8 @@ pub struct ResidentInfo {
     pub pinned: bool,
     /// LRU logical timestamp of the last access.
     pub last_use: u64,
+    /// PE plane the device is resident on (its home plane).
+    pub plane: usize,
 }
 
 /// Pool-level counters.
@@ -174,6 +186,7 @@ pub struct DevicePool {
     quotas: BTreeMap<String, usize>,
     entries: Vec<Entry>,
     clock: u64,
+    planes: PlaneRegistry,
     /// Admission/eviction counters.
     pub stats: PoolStats,
 }
@@ -189,11 +202,13 @@ pub(crate) fn wrong_kind(tenant: &str, name: &str, got: &str, want: &str) -> Cpm
 impl DevicePool {
     /// Empty pool with the given policy.
     pub fn new(cfg: PoolConfig) -> Self {
+        let planes = PlaneRegistry::new(cfg.capacity_pes, cfg.planes);
         DevicePool {
             cfg,
             quotas: BTreeMap::new(),
             entries: Vec::new(),
             clock: 0,
+            planes,
             stats: PoolStats::default(),
         }
     }
@@ -277,28 +292,39 @@ impl DevicePool {
             });
         }
         // Feasibility first, so a failed admission never evicts anything:
-        // even with every unpinned resident gone, does the device fit?
-        let evictable: usize = self
-            .entries
-            .iter()
-            .filter(|e| !e.pinned)
-            .map(|e| e.pes)
-            .sum();
-        let floor = self.used_pes() - evictable;
-        if floor + entry.pes > self.cfg.capacity_pes {
+        // even with every unpinned resident gone, does the device fit
+        // *some* plane? (One plane degenerates to the whole-pool check.)
+        let cap = self.planes.capacity_per_plane();
+        let pinned_floor = self.plane_pes(|e| e.pinned);
+        let feasible: Vec<usize> = (0..pinned_floor.len())
+            .filter(|&p| pinned_floor[p] + entry.pes <= cap)
+            .collect();
+        if feasible.is_empty() {
+            let available = pinned_floor
+                .iter()
+                .map(|&f| cap.saturating_sub(f))
+                .max()
+                .unwrap_or(0);
             return Err(CpmError::CapacityExceeded {
                 device: format!("{}/{}", entry.tenant, entry.name),
                 needed: entry.pes,
-                available: self.cfg.capacity_pes.saturating_sub(floor),
+                available,
             });
         }
+        // Evict coldest-first until a feasible plane fits, taking victims
+        // only from feasible planes (evicting elsewhere frees nothing the
+        // new device could use).
         let mut evicted = Vec::new();
-        while self.used_pes() + entry.pes > self.cfg.capacity_pes {
+        loop {
+            let used = self.plane_pes(|_| true);
+            if feasible.iter().any(|&p| used[p] + entry.pes <= cap) {
+                break;
+            }
             let victim = self
                 .entries
                 .iter()
                 .enumerate()
-                .filter(|(_, e)| !e.pinned)
+                .filter(|(_, e)| !e.pinned && feasible.contains(&e.plane))
                 .min_by_key(|(_, e)| e.last_use)
                 .map(|(i, _)| i)
                 .expect("feasibility checked above");
@@ -307,13 +333,59 @@ impl DevicePool {
             self.stats.evicted_pes += gone.pes as u64;
             evicted.push(gone.info());
         }
+        let used = self.plane_pes(|_| true);
+        let plane = self
+            .planes
+            .place(&used, entry.pes)
+            .expect("a plane fits after eviction");
         self.clock += 1;
         self.stats.admissions += 1;
         self.entries.push(Entry {
             last_use: self.clock,
+            plane,
             ..entry
         });
         Ok(evicted)
+    }
+
+    /// Per-plane PE totals over the entries `keep` selects.
+    fn plane_pes<F: Fn(&Entry) -> bool>(&self, keep: F) -> Vec<usize> {
+        let mut used = vec![0usize; self.planes.plane_count()];
+        for e in self.entries.iter().filter(|e| keep(e)) {
+            used[e.plane] += e.pes;
+        }
+        used
+    }
+
+    /// Number of PE planes the pool's capacity is split into.
+    pub fn plane_count(&self) -> usize {
+        self.planes.plane_count()
+    }
+
+    /// Per-plane PEs currently claimed by residents (gauge-friendly).
+    pub fn plane_used_pes(&self) -> Vec<u64> {
+        self.plane_pes(|_| true).iter().map(|&u| u as u64).collect()
+    }
+
+    /// Home plane of a resident, if it exists.
+    pub fn plane_of(&self, tenant: &str, name: &str) -> Option<usize> {
+        self.find(tenant, name).map(|i| self.entries[i].plane)
+    }
+
+    /// Cycles to move a `pes`-PE resident to another plane (the
+    /// cross-plane data-movement cost model).
+    pub fn move_cycles(&self, pes: usize) -> u64 {
+        self.planes.transfer_cycles(pes)
+    }
+
+    /// Home plane and cross-plane move cost of a resident, if it exists
+    /// (what the batch executor records per group as its
+    /// [`PlacedTask`](crate::coordinator::PlacedTask)).
+    pub fn placement_of(&self, tenant: &str, name: &str) -> Option<(usize, u64)> {
+        self.find(tenant, name).map(|i| {
+            let e = &self.entries[i];
+            (e.plane, self.planes.transfer_cycles(e.pes))
+        })
     }
 
     /// Admit a SQL table with capacity for `max_rows`.
@@ -331,6 +403,7 @@ impl DevicePool {
             pes,
             pinned: false,
             last_use: 0,
+            plane: 0,
             device: ResidentDevice::Table(Table::new(schema, max_rows)),
         })
     }
@@ -362,6 +435,7 @@ impl DevicePool {
             pes,
             pinned: false,
             last_use: 0,
+            plane: 0,
             device: ResidentDevice::Corpus(mem),
         })
     }
@@ -383,6 +457,7 @@ impl DevicePool {
             pes,
             pinned: false,
             last_use: 0,
+            plane: 0,
             device: ResidentDevice::Array(arr),
         })
     }
@@ -575,6 +650,54 @@ mod tests {
         assert!(p.table("a", "c").is_none());
         assert!(p.corpus("a", "c").is_some());
         assert!(p.corpus_mut("a", "missing").is_err());
+    }
+
+    #[test]
+    fn placement_spreads_residents_across_planes() {
+        let mut p = DevicePool::new(PoolConfig {
+            capacity_pes: 400,
+            tenant_quota_pes: 1600,
+            corpus_slack: 8,
+            planes: 2,
+            ..PoolConfig::default()
+        });
+        assert_eq!(p.plane_count(), 2);
+        // Worst-fit: equal planes tie to plane 0, then the emptier plane
+        // takes the next device.
+        p.create_array("a", "x", &[0; 8], 100).unwrap();
+        p.create_array("a", "y", &[0; 8], 100).unwrap();
+        assert_eq!(p.plane_of("a", "x"), Some(0));
+        assert_eq!(p.plane_of("a", "y"), Some(1));
+        assert_eq!(p.plane_used_pes(), vec![100, 100]);
+        // A device larger than one plane's 200-PE capacity fails typed
+        // even though the pool as a whole has 400 PEs.
+        let err = p.create_array("a", "big", &[0; 8], 300).unwrap_err();
+        assert!(
+            matches!(err, CpmError::CapacityExceeded { needed: 300, available: 200, .. }),
+            "{err}"
+        );
+        // Filling both planes forces an eviction of the coldest resident
+        // on a feasible plane; the newcomer lands on the freed plane.
+        p.create_array("a", "z", &[0; 8], 100).unwrap();
+        p.create_array("a", "w", &[0; 8], 100).unwrap();
+        assert_eq!(p.plane_used_pes(), vec![200, 200]);
+        let evicted = p.create_array("a", "new", &[0; 8], 100).unwrap();
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].name, "x", "globally coldest resident goes");
+        assert_eq!(p.plane_of("a", "new"), Some(0), "lands on the freed plane");
+        assert_eq!(p.plane_used_pes(), vec![200, 200]);
+    }
+
+    #[test]
+    fn move_cycles_follow_the_cost_model() {
+        let p = DevicePool::new(PoolConfig {
+            planes: 4,
+            ..PoolConfig::default()
+        });
+        assert_eq!(p.plane_count(), 4);
+        // setup + per-PE streaming, from MoveCost::default().
+        let base = p.move_cycles(0);
+        assert_eq!(p.move_cycles(1000), base + 1000);
     }
 
     #[test]

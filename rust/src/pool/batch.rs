@@ -21,7 +21,7 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::algos::{histogram, reduce, sort, threshold};
-use crate::coordinator::scheduler::{OverlapScheduler, TaskPhase};
+use crate::coordinator::scheduler::{OverlapScheduler, PlacedTask, TaskPhase};
 use crate::coordinator::server::{default_device, Addressed, ArrayJob, Request, Response};
 use crate::cycles::ConcurrentCost;
 use crate::device::computable::{ExecConfig, PePlane, Reg, WordExec};
@@ -35,6 +35,11 @@ use super::allocator::{missing, wrong_kind, DevicePool};
 pub struct BatchReport {
     /// One (load, exec) phase per executed group, in execution order.
     pub phases: Vec<TaskPhase>,
+    /// One placed task per executed group — the phase plus the home
+    /// plane of the group's resident device and its cross-plane move
+    /// cost — feeding the multi-plane schedulers. Ad-hoc compute has no
+    /// home and moves for free.
+    pub placed: Vec<PlacedTask>,
     /// Device cost per group, attributed to the group's tenant.
     pub group_costs: Vec<(String, ConcurrentCost)>,
     /// Device passes avoided by sharing compare/search passes.
@@ -46,6 +51,14 @@ pub struct BatchReport {
     /// Makespan with task k+1's exclusive-bus load streamed while task k
     /// executes on the concurrent bus (§3.1).
     pub makespan_overlapped: u64,
+    /// Makespan with the grouped phases placed across the pool's PE
+    /// planes ([`OverlapScheduler::makespan_multi`]); equals
+    /// `makespan_overlapped` on a single-plane pool.
+    pub makespan_multi: u64,
+    /// `makespan_multi` recomputed with the §8 DMA side bus carrying
+    /// load phases ([`ExecConfig::dma_speedup`]); equals
+    /// `makespan_multi` when the side bus is off.
+    pub makespan_dma: u64,
     /// Wall nanoseconds the planner spent forming the groups (the
     /// observability layer's `group_plan_ns` counter).
     pub plan_ns: u64,
@@ -180,10 +193,27 @@ fn plan(batch: &[AddressedRef<'_>]) -> Vec<Group> {
     groups
 }
 
-fn push_phase(report: &mut BatchReport, tenant: &str, cost: ConcurrentCost) {
-    report.phases.push(TaskPhase {
+/// Record one executed group: its (load, exec) phase, its placement
+/// (home plane + move cost for groups on a resident device, ad-hoc
+/// otherwise), and its tenant-attributed cost.
+fn push_phase(
+    report: &mut BatchReport,
+    tenant: &str,
+    cost: ConcurrentCost,
+    placement: Option<(usize, u64)>,
+) {
+    let phase = TaskPhase {
         load_cycles: cost.exclusive_ops,
         exec_cycles: cost.macro_cycles,
+    };
+    report.phases.push(phase);
+    report.placed.push(match placement {
+        Some((home, move_cycles)) => PlacedTask {
+            phase,
+            home: Some(home),
+            move_cycles,
+        },
+        None => PlacedTask::adhoc(phase),
     });
     report.group_costs.push((tenant.to_string(), cost));
 }
@@ -240,13 +270,23 @@ impl BatchExecutor {
                     let (resp, cost) =
                         self.dispatch_solo(pool, &g.tenant, &g.device, batch[i].op);
                     responses[i] = Some(resp);
-                    push_phase(&mut report, &g.tenant, cost);
+                    // Resident devices (corpus edits, array jobs) carry
+                    // their home plane; ad-hoc compute is unplaced.
+                    let placement = pool.placement_of(&g.tenant, &g.device);
+                    push_phase(&mut report, &g.tenant, cost, placement);
                 }
             }
         }
         report.groups = groups.len() as u64;
         report.makespan_serial = OverlapScheduler::makespan_serial(&report.phases);
         report.makespan_overlapped = OverlapScheduler::makespan_overlapped(&report.phases);
+        report.makespan_multi =
+            OverlapScheduler::makespan_multi(&report.placed, pool.plane_count());
+        report.makespan_dma = OverlapScheduler::makespan_multi_with_dma(
+            &report.placed,
+            pool.plane_count(),
+            self.exec.dma_speedup,
+        );
         let responses = responses
             .into_iter()
             .map(|r| r.expect("every request answered"))
@@ -299,7 +339,8 @@ impl BatchExecutor {
             responses[i] = Some(r.map(Response::Sql));
         }
         report.shared_passes += stats.shared_passes();
-        push_phase(report, &g.tenant, cost);
+        let placement = pool.placement_of(&g.tenant, &g.device);
+        push_phase(report, &g.tenant, cost, placement);
     }
 
     fn run_search_group(
@@ -348,7 +389,8 @@ impl BatchExecutor {
             }
         }
         let cost = corpus.cost();
-        push_phase(report, &g.tenant, cost);
+        let placement = pool.placement_of(&g.tenant, &g.device);
+        push_phase(report, &g.tenant, cost, placement);
     }
 
     /// Execute one non-groupable request (corpus edits, ad-hoc compute,
@@ -588,6 +630,38 @@ mod tests {
         assert_eq!(report.shared_passes, 1);
         assert!(report.makespan_overlapped <= report.makespan_serial);
         assert!(report.groups >= 3);
+        // Every phase got a placement record; on the default single-plane
+        // pool with DMA off, the multi-plane and DMA makespans collapse
+        // onto the overlapped one exactly.
+        assert_eq!(report.placed.len(), report.phases.len());
+        assert_eq!(report.makespan_multi, report.makespan_overlapped);
+        assert_eq!(report.makespan_dma, report.makespan_multi);
+    }
+
+    #[test]
+    fn multi_plane_report_places_groups_on_their_home_planes() {
+        let mut pool = DevicePool::new(PoolConfig {
+            capacity_pes: 1 << 16,
+            tenant_quota_pes: 1 << 16,
+            corpus_slack: 64,
+            planes: 2,
+            ..PoolConfig::default()
+        });
+        pool.create_corpus("a", "corpus", b"abc abc").unwrap();
+        pool.create_corpus("b", "corpus", b"xyz xyz").unwrap();
+        let ex = BatchExecutor::new(1 << 12);
+        let batch = vec![
+            Addressed::new("a", "corpus", Request::Search(b"abc".to_vec())),
+            Addressed::new("b", "corpus", Request::Search(b"xyz".to_vec())),
+        ];
+        let (responses, report) = ex.execute(&mut pool, &refs(&batch));
+        assert!(responses.iter().all(|r| r.is_ok()));
+        // Worst-fit placement spread the two corpora across the planes,
+        // and the report records each group's home.
+        let homes: Vec<_> = report.placed.iter().map(|p| p.home).collect();
+        assert_eq!(homes, vec![Some(0), Some(1)]);
+        assert!(report.makespan_multi <= report.makespan_overlapped);
+        assert_eq!(report.makespan_dma, report.makespan_multi);
     }
 
     #[test]

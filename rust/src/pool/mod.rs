@@ -20,8 +20,10 @@
 
 pub mod allocator;
 pub mod batch;
+pub mod placement;
 
 pub use allocator::{
     DevicePool, PoolConfig, PoolStats, ResidentDevice, ResidentInfo, ScratchArray,
 };
 pub use batch::{AddressedRef, BatchExecutor, BatchReport};
+pub use placement::{MoveCost, PlaneRegistry};

@@ -1,0 +1,151 @@
+//! Multi-plane placement: PE-capacity accounting across several PE
+//! planes and the data-movement cost model for crossing them.
+//!
+//! The paper budgets one CPM array (§8); MASIM-style deployments tile
+//! *many* arrays behind one coordinator, so the pool splits its PE
+//! budget into `planes` equal PE planes. A resident device lives
+//! entirely on one plane (its home); executing a resident group on a
+//! different plane first streams the device's content across the
+//! exclusive bus, which the [`MoveCost`] model prices in device cycles.
+//! The registry is pure policy — the allocator owns the per-entry plane
+//! assignments and derives per-plane usage from them, so accounting can
+//! never drift out of sync with the resident list.
+
+/// Device-cycle price of moving a resident device between planes: one
+/// fixed setup charge (bus arbitration, §3.2's exclusive-access setup)
+/// plus a per-PE streaming charge over the exclusive bus (§4: content
+/// moves one word per exclusive operation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MoveCost {
+    /// Fixed cycles to set up a cross-plane transfer.
+    pub setup_cycles: u64,
+    /// Cycles per PE streamed across planes.
+    pub cycles_per_pe: u64,
+}
+
+impl Default for MoveCost {
+    fn default() -> Self {
+        MoveCost {
+            setup_cycles: 64,
+            cycles_per_pe: 1,
+        }
+    }
+}
+
+impl MoveCost {
+    /// Cycles to move a `pes`-PE resident between planes.
+    pub fn transfer_cycles(&self, pes: usize) -> u64 {
+        self.setup_cycles + self.cycles_per_pe * pes as u64
+    }
+}
+
+/// The plane layout of a pool: how many planes its PE budget is split
+/// into, the per-plane capacity, and the cross-plane move price.
+///
+/// Placement is worst-fit (the plane with the most free PEs wins, ties
+/// to the lowest plane id) so resident devices spread across planes and
+/// the multi-plane scheduler has independent work per plane to overlap.
+/// One plane (the default) makes every decision degenerate to the
+/// single-plane pool the earlier tiers were built on.
+#[derive(Debug, Clone)]
+pub struct PlaneRegistry {
+    planes: usize,
+    cap_per_plane: usize,
+    move_cost: MoveCost,
+}
+
+impl PlaneRegistry {
+    /// Split `capacity_pes` into `planes` equal planes (at least one;
+    /// a remainder that does not divide evenly is left unused).
+    pub fn new(capacity_pes: usize, planes: usize) -> Self {
+        let planes = planes.max(1);
+        PlaneRegistry {
+            planes,
+            cap_per_plane: capacity_pes / planes,
+            move_cost: MoveCost::default(),
+        }
+    }
+
+    /// Number of PE planes.
+    pub fn plane_count(&self) -> usize {
+        self.planes
+    }
+
+    /// PE capacity of each plane.
+    pub fn capacity_per_plane(&self) -> usize {
+        self.cap_per_plane
+    }
+
+    /// The cross-plane data-movement cost model.
+    pub fn move_cost(&self) -> MoveCost {
+        self.move_cost
+    }
+
+    /// Cycles to move a `pes`-PE resident between planes.
+    pub fn transfer_cycles(&self, pes: usize) -> u64 {
+        self.move_cost.transfer_cycles(pes)
+    }
+
+    /// Worst-fit placement: the plane with the most free PEs that still
+    /// fits `pes` (ties to the lowest plane id), or `None` when no plane
+    /// fits. `used` is the current per-plane usage (one slot per plane).
+    pub fn place(&self, used: &[usize], pes: usize) -> Option<usize> {
+        debug_assert_eq!(used.len(), self.planes);
+        used.iter()
+            .enumerate()
+            .filter(|&(_, &u)| u + pes <= self.cap_per_plane)
+            .max_by(|a, b| {
+                // Most free PEs wins; on a tie the *lower* id wins, so
+                // reverse the id ordering inside the max.
+                let free = |&(_, &u): &(usize, &usize)| self.cap_per_plane - u;
+                free(a).cmp(&free(b)).then(b.0.cmp(&a.0))
+            })
+            .map(|(i, _)| i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_plane_owns_the_whole_budget() {
+        let r = PlaneRegistry::new(1024, 1);
+        assert_eq!(r.plane_count(), 1);
+        assert_eq!(r.capacity_per_plane(), 1024);
+        assert_eq!(r.place(&[0], 1024), Some(0));
+        assert_eq!(r.place(&[1], 1024), None);
+    }
+
+    #[test]
+    fn worst_fit_balances_and_ties_to_lowest_id() {
+        let r = PlaneRegistry::new(1000, 2);
+        assert_eq!(r.capacity_per_plane(), 500);
+        // Empty planes tie: lowest id wins.
+        assert_eq!(r.place(&[0, 0], 100), Some(0));
+        // Plane 1 has more free room once plane 0 is loaded.
+        assert_eq!(r.place(&[100, 0], 100), Some(1));
+        // A device that only fits the emptier plane goes there.
+        assert_eq!(r.place(&[450, 100], 200), Some(1));
+        // Nothing fits anywhere.
+        assert_eq!(r.place(&[450, 450], 100), None);
+    }
+
+    #[test]
+    fn zero_planes_clamps_to_one() {
+        let r = PlaneRegistry::new(512, 0);
+        assert_eq!(r.plane_count(), 1);
+        assert_eq!(r.capacity_per_plane(), 512);
+    }
+
+    #[test]
+    fn move_cost_prices_setup_plus_streaming() {
+        let r = PlaneRegistry::new(1 << 20, 4);
+        let mc = r.move_cost();
+        assert_eq!(r.transfer_cycles(0), mc.setup_cycles);
+        assert_eq!(
+            r.transfer_cycles(1000),
+            mc.setup_cycles + 1000 * mc.cycles_per_pe
+        );
+    }
+}

@@ -1,0 +1,141 @@
+//! Pins the `ServerConfig` precedence ladder — **CLI flag > `CPM_*`
+//! environment > built-in default** — knob by knob: backend, threads,
+//! reader cores, dispatcher lanes, planes, dma, and the admission
+//! window. Environment layering goes through
+//! `ServerConfig::from_env_with` with an explicit lookup, so the suite
+//! never touches (or races on) the real process environment.
+
+use std::time::Duration;
+
+use cpm::cli::Cli;
+use cpm::device::computable::BackendKind;
+use cpm::ServerConfig;
+
+fn cli(s: &str) -> Cli {
+    Cli::parse(s.split_whitespace().map(String::from))
+}
+
+/// An explicit environment: a lookup over a literal `(key, value)` set.
+fn env(pairs: &'static [(&'static str, &'static str)]) -> impl Fn(&str) -> Option<String> {
+    move |k| {
+        pairs
+            .iter()
+            .find(|(key, _)| *key == k)
+            .map(|(_, v)| v.to_string())
+    }
+}
+
+/// Every `CPM_*` knob set, to values distinct from every default.
+const FULL_ENV: &[(&str, &str)] = &[
+    ("CPM_BACKEND", "simd"),
+    ("CPM_THREADS", "3"),
+    ("CPM_DMA", "2"),
+    ("CPM_PLANES", "2"),
+    ("CPM_READER_CORES", "6"),
+    ("CPM_LANES", "3"),
+];
+
+#[test]
+fn defaults_hold_with_nothing_set() {
+    let cfg = ServerConfig::from_env_with(|_| None)
+        .with_cli(&cli("serve"))
+        .unwrap();
+    assert_eq!(cfg.pool.exec.backend, BackendKind::default());
+    assert_eq!(cfg.pool.exec.threads, 1);
+    assert_eq!(cfg.pool.exec.dma_speedup, 0);
+    assert_eq!(cfg.pool.planes, 1);
+    assert_eq!(cfg.net.reader_cores, 4);
+    assert_eq!(cfg.net.dispatch_lanes, 2);
+    assert_eq!(cfg.net.window.max_delay, Duration::from_micros(2000));
+    assert_eq!(cfg.net.window.max_batch, 32);
+}
+
+#[test]
+fn environment_beats_defaults_for_every_knob() {
+    let cfg = ServerConfig::from_env_with(env(FULL_ENV))
+        .with_cli(&cli("serve"))
+        .unwrap();
+    assert_eq!(cfg.pool.exec.backend, BackendKind::Simd);
+    assert_eq!(cfg.pool.exec.threads, 3);
+    assert_eq!(cfg.pool.exec.dma_speedup, 2);
+    assert_eq!(cfg.pool.planes, 2);
+    assert_eq!(cfg.net.reader_cores, 6);
+    assert_eq!(cfg.net.dispatch_lanes, 3);
+}
+
+#[test]
+fn cli_beats_defaults_for_every_knob() {
+    let cfg = ServerConfig::from_env_with(|_| None)
+        .with_cli(&cli(
+            "serve --backend serial --threads 5 --dma 8 --planes 4 \
+             --reader-cores 2 --lanes 4 --window-us 700 --max-batch 16",
+        ))
+        .unwrap();
+    assert_eq!(cfg.pool.exec.backend, BackendKind::Serial);
+    assert_eq!(cfg.pool.exec.threads, 5);
+    assert_eq!(cfg.pool.exec.dma_speedup, 8);
+    assert_eq!(cfg.pool.planes, 4);
+    assert_eq!(cfg.net.reader_cores, 2);
+    assert_eq!(cfg.net.dispatch_lanes, 4);
+    assert_eq!(cfg.net.window.max_delay, Duration::from_micros(700));
+    assert_eq!(cfg.net.window.max_batch, 16);
+}
+
+#[test]
+fn cli_beats_environment_for_every_knob() {
+    let cfg = ServerConfig::from_env_with(env(FULL_ENV))
+        .with_cli(&cli(
+            "serve --backend serial --threads 5 --dma 8 --planes 4 \
+             --reader-cores 2 --lanes 4",
+        ))
+        .unwrap();
+    assert_eq!(cfg.pool.exec.backend, BackendKind::Serial);
+    assert_eq!(cfg.pool.exec.threads, 5);
+    assert_eq!(cfg.pool.exec.dma_speedup, 8);
+    assert_eq!(cfg.pool.planes, 4);
+    assert_eq!(cfg.net.reader_cores, 2);
+    assert_eq!(cfg.net.dispatch_lanes, 4);
+}
+
+#[test]
+fn unnamed_cli_knobs_leave_the_environment_rung_in_place() {
+    // Only --threads on the command line: the rest of FULL_ENV holds.
+    let cfg = ServerConfig::from_env_with(env(FULL_ENV))
+        .with_cli(&cli("serve --threads 7"))
+        .unwrap();
+    assert_eq!(cfg.pool.exec.threads, 7);
+    assert_eq!(cfg.pool.exec.backend, BackendKind::Simd);
+    assert_eq!(cfg.pool.exec.dma_speedup, 2);
+    assert_eq!(cfg.pool.planes, 2);
+    assert_eq!(cfg.net.reader_cores, 6);
+    assert_eq!(cfg.net.dispatch_lanes, 3);
+}
+
+#[test]
+fn zero_planes_lanes_and_cores_floor_at_one() {
+    let cfg = ServerConfig::from_env_with(|_| None)
+        .with_cli(&cli("serve --planes 0 --lanes 0 --reader-cores 0"))
+        .unwrap();
+    assert_eq!(cfg.pool.planes, 1);
+    assert_eq!(cfg.net.dispatch_lanes, 1);
+    assert_eq!(cfg.net.reader_cores, 1);
+}
+
+#[test]
+fn unknown_backend_on_the_cli_is_a_typed_error() {
+    let err = ServerConfig::from_env_with(|_| None)
+        .with_cli(&cli("serve --backend warp-drive"))
+        .unwrap_err();
+    assert!(err.to_string().contains("warp-drive"));
+}
+
+#[test]
+fn pjrt_backend_requires_the_feature() {
+    let validated = ServerConfig::from_env_with(env(&[("CPM_BACKEND", "pjrt")]))
+        .with_cli(&cli("serve"));
+    if cfg!(feature = "pjrt") {
+        assert!(validated.is_ok());
+    } else {
+        assert!(validated.is_err());
+    }
+}

@@ -7,6 +7,10 @@
 //! * Serving equivalence: a shuffled mixed workload produces identical
 //!   responses whether served one request at a time or as one batch, and
 //!   the overlapped makespan never exceeds the back-to-back makespan.
+//! * Multi-plane equivalence: the same workload on a plane-partitioned
+//!   pool (and with the §8 DMA side bus on) produces identical
+//!   responses, and the modeled makespans only ever improve:
+//!   `multi <= overlapped` and `with_dma <= multi`.
 
 use cpm::coordinator::{
     Addressed, ArrayJob, CpmServer, Request, DEFAULT_ARRAY, DEFAULT_CORPUS, DEFAULT_TABLE,
@@ -17,6 +21,7 @@ use cpm::prop_assert;
 use cpm::sql::Schema;
 use cpm::util::propcheck::{forall_sized, Config};
 use cpm::util::rng::Rng;
+use cpm::ServerConfig;
 
 /// One scripted allocator operation: `(op selector, size knob, tenant)`.
 type AllocOp = (u8, usize, usize);
@@ -157,12 +162,21 @@ fn pool_allocator_invariants() {
 }
 
 fn pool_server() -> CpmServer {
-    let mut pool = DevicePool::new(PoolConfig {
-        capacity_pes: 1 << 16,
-        tenant_quota_pes: 1 << 16,
-        corpus_slack: 256,
-        ..PoolConfig::default()
-    });
+    pool_server_with(1, 0)
+}
+
+/// The property-test server on a plane-partitioned pool with an optional
+/// §8 DMA side-bus speedup — `pool_server_with(1, 0)` is the classic
+/// single-plane server.
+fn pool_server_with(planes: usize, dma: u64) -> CpmServer {
+    let cfg = ServerConfig::new()
+        .capacity(1 << 16)
+        .quota(1 << 16)
+        .corpus_slack(256)
+        .planes(planes)
+        .dma(dma)
+        .engine_capacity(1 << 14);
+    let mut pool = cfg.device_pool();
     let schema = Schema::new(&[("price", 2), ("qty", 1)]).unwrap();
     pool.create_table(DEFAULT_TENANT, DEFAULT_TABLE, schema, 256)
         .unwrap();
@@ -175,7 +189,7 @@ fn pool_server() -> CpmServer {
     let mut rng = Rng::new(0x5EED);
     pool.create_array(DEFAULT_TENANT, DEFAULT_ARRAY, &rng.vec_i32(512, -1000, 1000), 512)
         .unwrap();
-    let mut s = CpmServer::with_pool(pool, 1 << 14);
+    let mut s = cfg.server(pool);
     let rows: Vec<Vec<u64>> = (0..200)
         .map(|_| vec![rng.below(10_000), rng.below(100)])
         .collect();
@@ -248,6 +262,107 @@ fn batched_equals_serial_on_shuffled_mixed_workload() {
                 "grouping increased total device work: {} > {}",
                 bm.makespan_serial_cycles,
                 sm.makespan_serial_cycles
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn multi_plane_serving_matches_single_plane_and_never_slows() {
+    forall_sized(
+        Config {
+            iters: 32,
+            base_seed: 0x91A7E5,
+        },
+        |rng, size| {
+            let n = 8 + 2 * size;
+            let mut batch = Vec::with_capacity(n);
+            for _ in 0..n {
+                let op = match rng.below(8) {
+                    0 | 1 => Request::Sql(format!(
+                        "SELECT COUNT WHERE price < {}",
+                        1000 * rng.below(8)
+                    )),
+                    2 => Request::Sql(format!(
+                        "SELECT ROWS WHERE price >= {} AND qty < {}",
+                        1000 * rng.below(8),
+                        10 * rng.below(9) + 1
+                    )),
+                    3 => Request::Search(match rng.below(4) {
+                        0 => b"the".to_vec(),
+                        1 => b"fox".to_vec(),
+                        2 => b"o".to_vec(),
+                        _ => b"lazy".to_vec(),
+                    }),
+                    4 => Request::Insert(0, b"ab".to_vec()),
+                    5 => Request::Delete(0, 1),
+                    6 => Request::Sum(rng.vec_i32(64, -50, 50)),
+                    _ => Request::Array(ArrayJob::Threshold(rng.i32_range(-500, 500))),
+                };
+                batch.push(Addressed::local(op));
+            }
+            rng.shuffle(&mut batch);
+            batch
+        },
+        |batch| {
+            let mut single = pool_server_with(1, 0);
+            let mut multi = pool_server_with(2, 0);
+            let mut dma = pool_server_with(2, 4);
+            let single_responses = single.handle_batch(batch);
+            let multi_responses = multi.handle_batch(batch);
+            let dma_responses = dma.handle_batch(batch);
+            // Cross-plane placement and the DMA side bus are cost-model
+            // concerns: every response is bit-identical to single-plane.
+            for (i, (s, m)) in single_responses.iter().zip(&multi_responses).enumerate() {
+                match (s, m) {
+                    (Ok(x), Ok(y)) => {
+                        prop_assert!(x == y, "multi-plane response {i} diverged: {x:?} vs {y:?}")
+                    }
+                    (Err(_), Err(_)) => {}
+                    other => return Err(format!("multi-plane ok/err divergence at {i}: {other:?}")),
+                }
+            }
+            for (i, (s, d)) in single_responses.iter().zip(&dma_responses).enumerate() {
+                match (s, d) {
+                    (Ok(x), Ok(y)) => {
+                        prop_assert!(x == y, "dma response {i} diverged: {x:?} vs {y:?}")
+                    }
+                    (Err(_), Err(_)) => {}
+                    other => return Err(format!("dma ok/err divergence at {i}: {other:?}")),
+                }
+            }
+            let sm = single.metrics();
+            let mm = multi.metrics();
+            let dm = dma.metrics();
+            // Two planes never schedule worse than the overlapped
+            // single-plane baseline, and planes=1 reproduces it exactly.
+            prop_assert!(
+                sm.makespan_multi_cycles == sm.makespan_overlapped_cycles,
+                "planes=1 multi {} != overlapped {}",
+                sm.makespan_multi_cycles,
+                sm.makespan_overlapped_cycles
+            );
+            prop_assert!(
+                mm.makespan_multi_cycles <= mm.makespan_overlapped_cycles,
+                "2 planes slowed the schedule: {} > {}",
+                mm.makespan_multi_cycles,
+                mm.makespan_overlapped_cycles
+            );
+            // The side bus only ever helps, and is off when unset.
+            prop_assert!(mm.dma_saved_cycles == 0, "dma saved cycles while off");
+            prop_assert!(
+                dm.makespan_multi_cycles == mm.makespan_multi_cycles,
+                "dma changed the no-dma schedule: {} vs {}",
+                dm.makespan_multi_cycles,
+                mm.makespan_multi_cycles
+            );
+            let dma_makespan = dm.makespan_multi_cycles - dm.dma_saved_cycles;
+            prop_assert!(
+                dma_makespan <= mm.makespan_multi_cycles,
+                "dma made the makespan worse: {} > {}",
+                dma_makespan,
+                mm.makespan_multi_cycles
             );
             Ok(())
         },
