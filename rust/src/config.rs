@@ -15,6 +15,7 @@
 //! | PE planes | `--planes` | `CPM_PLANES` | 1 |
 //! | reader cores | `--reader-cores` | `CPM_READER_CORES` | 4 |
 //! | dispatcher lanes | `--lanes` | `CPM_LANES` | 2 |
+//! | poll backend | `--poll-backend` | `CPM_POLL_BACKEND` | auto |
 //! | window delay (us) | `--window-us` | — | 2000 |
 //! | window batch cap | `--max-batch` | — | 32 |
 //!
@@ -28,7 +29,7 @@ use crate::cli::Cli;
 use crate::coordinator::CpmServer;
 use crate::device::computable::BackendKind;
 use crate::error::{CpmError, Result};
-use crate::net::NetConfig;
+use crate::net::{NetConfig, PollBackend};
 use crate::pool::{DevicePool, PoolConfig};
 
 /// Everything needed to stand up a serving process: pool sizing and
@@ -63,8 +64,8 @@ impl ServerConfig {
 
     /// Layer the process environment over the defaults: `CPM_BACKEND`,
     /// `CPM_THREADS`, `CPM_DMA`, `CPM_PLANES`, `CPM_READER_CORES`,
-    /// `CPM_LANES`. Absent or unparsable variables leave the default in
-    /// place.
+    /// `CPM_LANES`, `CPM_POLL_BACKEND`. Absent or unparsable variables
+    /// leave the default in place.
     pub fn from_env() -> Self {
         ServerConfig::from_env_with(|k| std::env::var(k).ok())
     }
@@ -100,13 +101,16 @@ impl ServerConfig {
         if let Some(l) = get::<usize>(&lookup, "CPM_LANES") {
             cfg.net.dispatch_lanes = l.max(1);
         }
+        if let Some(p) = get::<PollBackend>(&lookup, "CPM_POLL_BACKEND") {
+            cfg.net.poll_backend = p;
+        }
         cfg
     }
 
     /// Layer the command line over this config (the top rung):
     /// `--backend`, `--threads`, `--dma`, `--planes`, `--reader-cores`,
-    /// `--lanes`, `--window-us`, `--max-batch`. Flags not passed leave
-    /// the lower rungs' values in place. Ends with
+    /// `--lanes`, `--poll-backend`, `--window-us`, `--max-batch`. Flags
+    /// not passed leave the lower rungs' values in place. Ends with
     /// [`ServerConfig::validate`].
     pub fn with_cli(mut self, cli: &Cli) -> Result<Self> {
         let mut exec = self.pool.exec.clone();
@@ -122,6 +126,11 @@ impl ServerConfig {
         self.pool.planes = cli.get("planes", self.pool.planes).max(1);
         self.net.reader_cores = cli.get("reader-cores", self.net.reader_cores).max(1);
         self.net.dispatch_lanes = cli.get("lanes", self.net.dispatch_lanes).max(1);
+        if let Some(name) = cli.get_str("poll-backend") {
+            self.net.poll_backend = name
+                .parse::<PollBackend>()
+                .map_err(CpmError::Coordinator)?;
+        }
         self.net.window.max_delay = Duration::from_micros(
             cli.get("window-us", self.net.window.max_delay.as_micros() as u64),
         );
@@ -208,6 +217,7 @@ mod tests {
         assert_eq!(cfg.pool.planes, 1);
         assert_eq!(cfg.net.reader_cores, 4);
         assert_eq!(cfg.net.dispatch_lanes, 2);
+        assert_eq!(cfg.net.poll_backend, PollBackend::Auto);
     }
 
     #[test]
@@ -215,10 +225,12 @@ mod tests {
         let cfg = ServerConfig::from_env_with(|k| match k {
             "CPM_THREADS" => Some("not-a-number".into()),
             "CPM_PLANES" => Some("".into()),
+            "CPM_POLL_BACKEND" => Some("kqueue".into()),
             _ => None,
         });
         assert_eq!(cfg.pool.exec.threads, 1);
         assert_eq!(cfg.pool.planes, 1);
+        assert_eq!(cfg.net.poll_backend, PollBackend::Auto);
     }
 
     #[test]

@@ -9,7 +9,12 @@
 //! * `serve --addr A`           — TCP front-end over a demo server
 //!   (batching admission window feeding `handle_batch`)
 //! * `client --addr A --sql Q`  — blocking TCP client (`--search`,
-//!   `--sum`, `--repeat N` for pipelined bursts, `--tenant`, `--device`)
+//!   `--sum`, `--repeat N` for pipelined bursts, `--tenant`, `--device`;
+//!   `--conns N` holds N concurrent connections open as a load-driver
+//!   worker: prints `ready`, waits for a line on stdin, then runs the
+//!   pipelined op on every connection and prints one line per
+//!   connection — the 10k soak spawns these so no single process owns
+//!   every fd)
 //! * `netbench --max-batch B`   — loopback throughput: N client threads
 //!   pipelining against the TCP front-end, reported as requests/sec
 //! * `stats --addr A`           — scrape a serving front-end's live
@@ -22,9 +27,11 @@
 //!
 //! `serve` and `netbench` accept `--reader-cores N` (default 4) to size
 //! the fixed set of readiness reader cores multiplexing all connections,
-//! and `--lanes N` (default 2) to run N parallel dispatcher lanes over
-//! the admission window — thread count stays flat in the number of
-//! connected clients (see DESIGN.md "Serving path").
+//! `--lanes N` (default 2) to run N parallel dispatcher lanes over
+//! the admission window, and `--poll-backend auto|poll|epoll` (default
+//! auto: epoll on Linux, poll elsewhere) to pick the poll-ladder rung
+//! the reader cores multiplex through — thread count stays flat in the
+//! number of connected clients (see DESIGN.md "Serving path").
 //!
 //! `pool`, `serve`, `netbench`, and `runtime-check` accept `--threads N`
 //! to run large dense PE planes sharded across N std worker threads
@@ -333,8 +340,13 @@ fn print_stats_text(m: &Metrics) {
     );
     let depths: Vec<String> = g.lane_queue_depths.iter().map(u64::to_string).collect();
     println!(
-        "net tier: {} reader core(s), {} multiplexed connection(s), lane depths [{}], {} window(s) stolen",
+        "net tier: {} reader core(s) on {}, {} multiplexed connection(s), lane depths [{}], {} window(s) stolen",
         g.reader_cores,
+        if g.poll_backend.is_empty() {
+            "-"
+        } else {
+            g.poll_backend.as_str()
+        },
         m.wire.connections_multiplexed,
         depths.join(", "),
         m.wire.windows_stolen
@@ -394,11 +406,13 @@ fn serve_cmd(cli: &Cli) -> cpm::Result<()> {
     let max_batch = cfg.net.window.max_batch;
     let reader_cores = cfg.net.reader_cores;
     let lanes = cfg.net.dispatch_lanes;
+    let poll_backend = cfg.net.poll_backend.resolved_name();
     let net = NetServer::spawn(server, cfg.net)?;
     println!(
-        "cpm serving on {} ({} reader core(s), {} lane(s), window {} us, max batch {}, {} exec thread(s), backend {}, {} plane(s), dma x{}); demo devices: default/table ({} rows), default/corpus, default/array ({} words)",
+        "cpm serving on {} ({} reader core(s) on {}, {} lane(s), window {} us, max batch {}, {} exec thread(s), backend {}, {} plane(s), dma x{}); demo devices: default/table ({} rows), default/corpus, default/array ({} words)",
         net.addr(),
         reader_cores,
+        poll_backend,
         lanes,
         window_us,
         max_batch,
@@ -443,12 +457,16 @@ fn client_cmd(cli: &Cli) -> cpm::Result<()> {
             "pass one of --sql QUERY | --search PATTERN | --sum a,b,c".into(),
         ));
     };
+    let device = cli.get_str("device");
+    let repeat = cli.get("repeat", 1usize).max(1);
+    let conns = cli.get("conns", 1usize).max(1);
+    if conns > 1 {
+        return client_fanout(addr, &op, cli.get_str("tenant"), device, repeat, conns);
+    }
     let mut client = CpmClient::connect(addr)?;
     if let Some(tenant) = cli.get_str("tenant") {
         client.hello(tenant)?;
     }
-    let device = cli.get_str("device");
-    let repeat = cli.get("repeat", 1usize).max(1);
     if repeat == 1 {
         let response = client.call_addressed(None, device, &op)?;
         println!("{response:?}");
@@ -489,6 +507,79 @@ fn client_cmd(cli: &Cli) -> cpm::Result<()> {
     Ok(())
 }
 
+/// Connection-scaling worker mode for `cpm client --conns N`: hold N
+/// concurrent connections open, report `ready`, wait for one line on
+/// stdin (the orchestrator's go signal, sent once every worker is
+/// connected), then run the pipelined op on each connection in turn and
+/// print one parseable line per connection. The 10k-connection soak
+/// spawns a fleet of these so no single process — the test least of
+/// all — has to own every fd.
+fn client_fanout(
+    addr: &str,
+    op: &Request,
+    tenant: Option<&str>,
+    device: Option<&str>,
+    repeat: usize,
+    conns: usize,
+) -> cpm::Result<()> {
+    use std::io::{BufRead, Write};
+    let mut clients = Vec::with_capacity(conns);
+    for _ in 0..conns {
+        let mut client = CpmClient::connect(addr)?;
+        if let Some(t) = tenant {
+            client.hello(t)?;
+        }
+        clients.push(client);
+    }
+    let stdout = std::io::stdout();
+    {
+        let mut out = stdout.lock();
+        writeln!(out, "ready {conns}")
+            .and_then(|()| out.flush())
+            .map_err(|e| cpm::CpmError::Coordinator(format!("reporting ready: {e}")))?;
+    }
+    let mut go = String::new();
+    std::io::stdin()
+        .lock()
+        .read_line(&mut go)
+        .map_err(|e| cpm::CpmError::Coordinator(format!("waiting for go: {e}")))?;
+    let mut total_ok = 0usize;
+    let mut out = stdout.lock();
+    for (i, client) in clients.iter_mut().enumerate() {
+        // Bounded-in-flight pipelining (same policy as the single-client
+        // --repeat path) rather than CpmClient::pipeline, so --device
+        // addressing carries through to fanout mode.
+        let mut responses = Vec::with_capacity(repeat);
+        let mut sent = 0usize;
+        while responses.len() < repeat {
+            while sent < repeat && sent - responses.len() < cpm::net::MAX_IN_FLIGHT {
+                client.send(None, device, op)?;
+                sent += 1;
+            }
+            let (_, result) = client.recv()?;
+            responses.push(result);
+        }
+        let ok = responses.iter().filter(|r| r.is_ok()).count();
+        total_ok += ok;
+        // Identical read-only requests must draw identical replies; the
+        // orchestrator compares the printed head against a serial
+        // in-process replay. Typed errors carry no PartialEq, so the
+        // comparison is on the full Debug rendering.
+        let rendered: Vec<String> = responses.iter().map(|r| format!("{r:?}")).collect();
+        let uniform = rendered.windows(2).all(|w| w[0] == w[1]);
+        let head = rendered
+            .first()
+            .cloned()
+            .unwrap_or_else(|| "none".to_string());
+        writeln!(out, "conn {i} ok {ok} uniform {} {head}", u8::from(uniform))
+            .map_err(|e| cpm::CpmError::Coordinator(format!("reporting conn {i}: {e}")))?;
+    }
+    writeln!(out, "done {conns} {total_ok}")
+        .and_then(|()| out.flush())
+        .map_err(|e| cpm::CpmError::Coordinator(format!("reporting done: {e}")))?;
+    Ok(())
+}
+
 fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
     let requests = cli.get("requests", 1024usize);
     let clients = cli.get("clients", 8usize).max(1);
@@ -501,6 +592,7 @@ fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
     let max_batch = cfg.net.window.max_batch;
     let reader_cores = cfg.net.reader_cores;
     let lanes = cfg.net.dispatch_lanes;
+    let poll_backend = cfg.net.poll_backend.resolved_name();
     let net = NetServer::spawn(server, cfg.net)?;
     let addr = net.addr();
     let per_client = requests.div_ceil(clients);
@@ -544,13 +636,14 @@ fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
     );
     print_wire_metrics(&m);
     println!(
-        "markdown row (backend | threads | reader_cores | conns | max_batch | window_us | requests | req/s | mean window | coalesced):"
+        "markdown row (backend | threads | reader_cores | poll_backend | conns | max_batch | window_us | requests | req/s | mean window | coalesced):"
     );
     println!(
-        "| {} | {} | {} | {} | {} | {} | {} | {:.0} | {:.2} | {} |",
+        "| {} | {} | {} | {} | {} | {} | {} | {} | {:.0} | {:.2} | {} |",
         exec.backend,
         exec.threads,
         reader_cores,
+        poll_backend,
         clients,
         max_batch,
         window_us,
@@ -567,7 +660,7 @@ fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
             .unwrap_or(1);
         let row = format!(
             "{{\"bench\":\"netbench\",\"backend\":\"{}\",\"threads\":{},\"clients\":{},\
-             \"reader_cores\":{},\"lanes\":{},\"planes\":{},\"dma\":{},\
+             \"reader_cores\":{},\"lanes\":{},\"poll_backend\":\"{}\",\"planes\":{},\"dma\":{},\
              \"max_batch\":{},\"window_us\":{},\"requests\":{},\"ok\":{},\
              \"elapsed_ms\":{:.3},\"req_per_s\":{:.1},\"mean_window\":{:.3},\
              \"coalesced_windows\":{},\"windows_stolen\":{},\"p50_us\":{},\"p99_us\":{},\
@@ -577,6 +670,7 @@ fn netbench_cmd(cli: &Cli) -> cpm::Result<()> {
             clients,
             reader_cores,
             lanes,
+            poll_backend,
             planes,
             exec.dma_speedup,
             max_batch,

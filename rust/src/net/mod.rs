@@ -7,9 +7,11 @@
 //!   envelopes in, `Result<Response, CpmError>` replies out, with every
 //!   typed error surviving the hop; [`wire::FrameBuf`] resumes
 //!   partially-read frames across readiness ticks.
-//! * [`poll`] — the level-triggered readiness shim over `poll(2)` the
-//!   reader cores multiplex their sockets through (a bounded-sleep
-//!   fallback on non-unix targets).
+//! * [`poll`] — the level-triggered readiness **poll ladder** the
+//!   reader cores multiplex their sockets through: a `poll(2)` rung and
+//!   an `epoll(7)` rung behind one [`poll::Poller`] trait, selected by
+//!   [`PollBackend`] (`auto` picks epoll on Linux, poll elsewhere; a
+//!   bounded-sleep fallback covers non-unix targets).
 //! * [`window`] — the batching **admission window** with round-robin
 //!   tenant lanes: requests arriving within a configurable delay (or up
 //!   to a size cap) coalesce into one [`CpmServer::handle_batch`] call —
@@ -43,6 +45,7 @@ pub mod window;
 pub mod wire;
 
 pub use client::{CpmClient, MAX_IN_FLIGHT};
+pub use poll::PollBackend;
 pub use server::{NetConfig, NetServer};
 pub use window::{AdmissionQueue, Pull, TryPush, WindowConfig};
 pub use wire::ClientMsg;

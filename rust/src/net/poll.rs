@@ -1,25 +1,47 @@
-//! Level-triggered readiness over `poll(2)` — the std-only shim the
-//! reader cores multiplex their nonblocking sockets through.
+//! Level-triggered readiness — the std-only **poll ladder** the reader
+//! cores multiplex their nonblocking sockets through.
+//!
+//! The ladder has two rungs, both behind the [`Poller`] trait:
+//!
+//! * [`PollShim`] — a thin shim over `poll(2)`. Every tick hands the
+//!   kernel the full entry set, so each call is O(n) in registered
+//!   sockets. Simple, portable, and the reference semantics.
+//! * [`EpollShim`] — `epoll(7)` on Linux. Registrations persist in the
+//!   kernel between ticks (the shim diffs the entry set against what it
+//!   last installed and issues only the delta of `epoll_ctl` calls), so
+//!   a quiet tick costs one `epoll_wait` regardless of how many
+//!   thousands of sockets are registered. Off Linux the rung degrades
+//!   to the same bounded-sleep report-all-ready fallback as the
+//!   non-unix `poll` rung.
+//!
+//! Which rung a reader core climbs is a [`PollBackend`] knob
+//! (`--poll-backend auto|poll|epoll`, `CPM_POLL_BACKEND`): `auto`
+//! resolves to `epoll` on Linux and `poll` elsewhere.
 //!
 //! The crate promise is zero default dependencies, so there is no
 //! `libc` crate here: on unix this module hand-declares the few bytes
-//! of FFI surface it needs — the `pollfd` layout and the `poll(2)`
-//! entry point, both fixed by POSIX and identical across the unix
-//! targets this crate builds on — and std already links the platform
-//! libc, so the symbol resolves with no build-system work. On non-unix
-//! targets the shim degrades to a bounded sleep that reports every
-//! registered socket as ready per its interest: with *nonblocking*
-//! sockets under *level-triggered* semantics, spurious readiness is
-//! harmless (the next read/write just returns `WouldBlock`); only a
-//! *missed* readiness would be a correctness bug, and the fallback
-//! never misses.
+//! of FFI surface it needs — the `pollfd` / `epoll_event` layouts and
+//! the `poll(2)` / `epoll(7)` entry points, all fixed by the platform
+//! ABI — and std already links the platform libc, so the symbols
+//! resolve with no build-system work. On non-unix targets the ladder
+//! degrades to a bounded sleep that reports every registered socket as
+//! ready per its interest: with *nonblocking* sockets under
+//! *level-triggered* semantics, spurious readiness is harmless (the
+//! next read/write just returns `WouldBlock`); only a *missed*
+//! readiness would be a correctness bug, and the fallback never misses.
+//!
+//! Both real rungs report the same [`Readiness`] semantics — errors and
+//! hangups fold into read-readiness so the owner's next read surfaces
+//! EOF — and `tests/poll_conformance.rs` pins the equivalence with
+//! randomized differential socket scripts.
 //!
 //! The API is deliberately tiny and allocation-shy: callers keep a
-//! [`Poller`] (which owns the reusable `pollfd` scratch vector) and a
-//! slice of [`PollEntry`] values they rebuild per tick; one
-//! [`Poller::poll`] call fills in each entry's [`Readiness`].
+//! boxed [`Poller`] (which owns its reusable scratch state) and a slice
+//! of [`PollEntry`] values they rebuild per tick; one [`Poller::poll`]
+//! call fills in each entry's [`Readiness`].
 
 use std::net::TcpStream;
+use std::str::FromStr;
 use std::time::Duration;
 
 /// The socket handle type readiness is polled on: a raw fd on unix, an
@@ -122,6 +144,117 @@ impl PollEntry {
     }
 }
 
+/// One rung of the poll ladder: a level-triggered readiness multiplexer
+/// a reader core owns for its lifetime.
+///
+/// Contract (identical for every rung, pinned by the conformance
+/// suite):
+///
+/// * Entries are rebuilt by the caller per tick; each `fd` appears at
+///   most once per call.
+/// * `poll` blocks until at least one entry is ready or `timeout`
+///   elapses, overwrites every entry's [`Readiness`], and returns how
+///   many entries reported anything. A signal interruption reports as
+///   zero ready entries (the caller's tick loop just re-polls).
+/// * Readiness is level-triggered, and errors/hangups fold into
+///   read-readiness.
+/// * A closed fd must be **absent from at least one `poll` call**
+///   before its number is reused by a new socket — rungs with
+///   persistent kernel registrations ([`EpollShim`]) purge an fd when
+///   they first see it missing, and the serving tier's tick structure
+///   (conns leave the entry set the tick after they are reaped, and
+///   adopted conns first appear the tick after adoption) guarantees
+///   the gap.
+pub trait Poller: Send {
+    /// Block until at least one entry is ready or `timeout` elapses,
+    /// then fill in every entry's [`Readiness`]. Returns how many
+    /// entries reported anything.
+    fn poll(&mut self, entries: &mut [PollEntry], timeout: Duration) -> std::io::Result<usize>;
+
+    /// The rung's stable name (`"poll"` / `"epoll"`), as surfaced in
+    /// the serve banner, bench rows and the `poll_backend` gauge.
+    fn name(&self) -> &'static str;
+}
+
+/// Which rung of the poll ladder a reader core climbs.
+///
+/// Selected by `--poll-backend` / `CPM_POLL_BACKEND` with the
+/// crate-wide CLI > env > default precedence; the default is
+/// [`PollBackend::Auto`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum PollBackend {
+    /// Pick the best rung for the target: `epoll` on Linux, `poll`
+    /// elsewhere.
+    #[default]
+    Auto,
+    /// The `poll(2)` shim ([`PollShim`]): O(n) per tick, portable.
+    Poll,
+    /// The `epoll(7)` shim ([`EpollShim`]): persistent registrations,
+    /// O(ready) per tick on Linux; report-all-ready fallback off Linux.
+    Epoll,
+}
+
+impl PollBackend {
+    /// Resolve `auto` to the concrete rung for this target: `epoll` on
+    /// Linux, `poll` everywhere else. `poll` and `epoll` resolve to
+    /// themselves.
+    pub fn resolve(self) -> PollBackend {
+        match self {
+            PollBackend::Auto => {
+                if cfg!(target_os = "linux") {
+                    PollBackend::Epoll
+                } else {
+                    PollBackend::Poll
+                }
+            }
+            other => other,
+        }
+    }
+
+    /// The resolved rung's stable name (`"poll"` / `"epoll"`).
+    pub fn resolved_name(self) -> &'static str {
+        match self.resolve() {
+            PollBackend::Epoll => "epoll",
+            _ => "poll",
+        }
+    }
+
+    /// Build a fresh poller for the resolved rung. Each reader core
+    /// calls this once and owns the returned rung for its lifetime.
+    pub fn poller(self) -> Box<dyn Poller> {
+        match self.resolve() {
+            PollBackend::Epoll => Box::new(EpollShim::new()),
+            _ => Box::new(PollShim::new()),
+        }
+    }
+}
+
+impl std::fmt::Display for PollBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let name = match self {
+            PollBackend::Auto => "auto",
+            PollBackend::Poll => "poll",
+            PollBackend::Epoll => "epoll",
+        };
+        f.write_str(name)
+    }
+}
+
+impl FromStr for PollBackend {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "auto" => Ok(PollBackend::Auto),
+            "poll" => Ok(PollBackend::Poll),
+            "epoll" => Ok(PollBackend::Epoll),
+            other => Err(format!(
+                "unknown poll backend `{other}` (expected auto, poll or epoll)"
+            )),
+        }
+    }
+}
+
 #[cfg(unix)]
 mod sys {
     use std::os::raw::{c_int, c_short};
@@ -155,26 +288,105 @@ mod sys {
     }
 }
 
-/// Reusable poll state: owns the `pollfd` scratch buffer so a steady
-/// tick loop allocates nothing.
+#[cfg(target_os = "linux")]
+mod esys {
+    use std::os::raw::c_int;
+
+    pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+
+    // Event bits share poll(2)'s numeric values for IN/OUT/ERR/HUP —
+    // one reason the two rungs can report bit-identical semantics.
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+
+    /// The kernel's `struct epoll_event`. The x86-64 ABI packs it (no
+    /// padding after `events`); other architectures use natural
+    /// alignment.
+    #[cfg(target_arch = "x86_64")]
+    #[repr(C, packed)]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    /// The kernel's `struct epoll_event` (naturally aligned layout).
+    #[cfg(not(target_arch = "x86_64"))]
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        pub fn close(fd: c_int) -> c_int;
+    }
+}
+
+/// The kernel-facing millisecond timeout, clamped so a sub-millisecond
+/// (but nonzero) request still blocks for one tick instead of spinning.
+#[cfg(unix)]
+fn timeout_ms(timeout: Duration) -> i32 {
+    let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+    if ms == 0 && !timeout.is_zero() {
+        1
+    } else {
+        ms
+    }
+}
+
+/// Bounded-sleep fallback for targets without the bound syscall: sleep
+/// a short tick, then report every entry ready per its interest.
+/// Spurious readiness is safe — the sockets are nonblocking, so a
+/// reader that was not actually ready just sees `WouldBlock` — and no
+/// readiness is ever missed.
+#[cfg(not(target_os = "linux"))]
+fn report_all_ready(entries: &mut [PollEntry], timeout: Duration) -> std::io::Result<usize> {
+    std::thread::sleep(timeout.min(Duration::from_millis(1)));
+    for e in entries.iter_mut() {
+        e.ready = Readiness {
+            read: e.interest.read,
+            write: e.interest.write,
+            hangup: false,
+        };
+    }
+    Ok(entries.iter().filter(|e| e.ready.any()).count())
+}
+
+/// The `poll(2)` rung: the whole entry set crosses the syscall boundary
+/// every tick. Owns the reusable `pollfd` scratch buffer so a steady
+/// tick loop allocates nothing. On non-unix targets it degrades to the
+/// bounded-sleep report-all-ready fallback.
 #[derive(Debug, Default)]
-pub struct Poller {
+pub struct PollShim {
     #[cfg(unix)]
     scratch: Vec<sys::PollFd>,
 }
 
-impl Poller {
-    /// A fresh poller.
+impl PollShim {
+    /// A fresh poll(2) rung.
     pub fn new() -> Self {
-        Poller::default()
+        PollShim::default()
     }
+}
 
-    /// Block until at least one entry is ready or `timeout` elapses,
-    /// then fill in every entry's [`Readiness`]. Returns how many
-    /// entries reported anything. A signal interruption reports as
-    /// zero ready entries (the caller's tick loop just re-polls).
+impl Poller for PollShim {
     #[cfg(unix)]
-    pub fn poll(&mut self, entries: &mut [PollEntry], timeout: Duration) -> std::io::Result<usize> {
+    fn poll(&mut self, entries: &mut [PollEntry], timeout: Duration) -> std::io::Result<usize> {
         use sys::{POLLERR, POLLHUP, POLLIN, POLLNVAL, POLLOUT};
         self.scratch.clear();
         for e in entries.iter_mut() {
@@ -192,13 +404,11 @@ impl Poller {
                 revents: 0,
             });
         }
-        let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
-        let ms = if ms == 0 && !timeout.is_zero() { 1 } else { ms };
         let rc = unsafe {
             sys::poll(
                 self.scratch.as_mut_ptr(),
                 self.scratch.len() as sys::NFds,
-                ms,
+                timeout_ms(timeout),
             )
         };
         if rc < 0 {
@@ -224,22 +434,271 @@ impl Poller {
         Ok(ready)
     }
 
-    /// Fallback for targets without `poll(2)`: sleep a bounded tick,
-    /// then report every entry ready per its interest. Spurious
-    /// readiness is safe — the sockets are nonblocking, so a reader
-    /// that was not actually ready just sees `WouldBlock` — and no
-    /// readiness is ever missed.
     #[cfg(not(unix))]
-    pub fn poll(&mut self, entries: &mut [PollEntry], timeout: Duration) -> std::io::Result<usize> {
-        std::thread::sleep(timeout.min(Duration::from_millis(1)));
-        for e in entries.iter_mut() {
-            e.ready = Readiness {
-                read: e.interest.read,
-                write: e.interest.write,
-                hangup: false,
+    fn poll(&mut self, entries: &mut [PollEntry], timeout: Duration) -> std::io::Result<usize> {
+        report_all_ready(entries, timeout)
+    }
+
+    fn name(&self) -> &'static str {
+        "poll"
+    }
+}
+
+/// The `epoll(7)` rung (Linux): registrations persist in the kernel
+/// between ticks, so a quiet tick costs one `epoll_wait` instead of
+/// re-submitting every socket.
+///
+/// Per [`Poller::poll`] call the shim diffs the entry set against the
+/// registrations it last installed and issues only the delta:
+/// `EPOLL_CTL_ADD` for new fds, `MOD` where the interest changed, `DEL`
+/// for fds that vanished (failures ignored — the kernel already
+/// auto-deregisters an fd when its last reference closes). An `ADD`
+/// racing a stale registration retries as `MOD`, a `MOD` racing kernel
+/// auto-removal retries as `ADD`, so registration state self-heals. An
+/// fd the kernel refuses outright is reported as hangup+read (the
+/// `poll(2)` rung's `POLLNVAL` folding) so the owner reaps it.
+///
+/// Events carry the fd in their user data; readiness folds exactly as
+/// the poll(2) rung: `EPOLLERR`/`EPOLLHUP` fold into read-readiness.
+/// `EPOLLRDHUP` is deliberately **not** requested — `poll(2)` is not
+/// asked for `POLLRDHUP` either, keeping the rungs' reported semantics
+/// bit-identical.
+#[cfg(target_os = "linux")]
+pub struct EpollShim {
+    epfd: std::os::raw::c_int,
+    /// fd → event mask currently installed in the kernel.
+    registered: std::collections::HashMap<SockFd, u32>,
+    /// fd → (entry index, desired mask) for the current tick.
+    desired: std::collections::HashMap<SockFd, (usize, u32)>,
+    /// Reusable `epoll_wait` output buffer.
+    events: Vec<esys::EpollEvent>,
+}
+
+/// The `epoll(7)` rung off Linux: the bounded-sleep report-all-ready
+/// fallback (selectable for symmetry; `auto` never picks it here).
+#[cfg(not(target_os = "linux"))]
+#[derive(Debug, Default)]
+pub struct EpollShim;
+
+#[cfg(target_os = "linux")]
+impl EpollShim {
+    /// A fresh epoll rung; the kernel instance is created lazily on the
+    /// first poll.
+    pub fn new() -> Self {
+        EpollShim {
+            epfd: -1,
+            registered: std::collections::HashMap::new(),
+            desired: std::collections::HashMap::new(),
+            events: Vec::new(),
+        }
+    }
+
+    fn ensure_epfd(&mut self) -> std::io::Result<()> {
+        if self.epfd >= 0 {
+            return Ok(());
+        }
+        let fd = unsafe { esys::epoll_create1(esys::EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        self.epfd = fd;
+        Ok(())
+    }
+
+    fn ctl(&self, op: std::os::raw::c_int, fd: SockFd, mask: u32) -> std::io::Result<()> {
+        let mut ev = esys::EpollEvent {
+            events: mask,
+            data: fd as u64,
+        };
+        let rc = unsafe { esys::epoll_ctl(self.epfd, op, fd, &mut ev) };
+        if rc == 0 {
+            Ok(())
+        } else {
+            Err(std::io::Error::last_os_error())
+        }
+    }
+
+    /// Bring the kernel's registrations in line with this tick's entry
+    /// set. Returns how many entries were synthetically marked ready
+    /// (fds the kernel refused — reported as hangup so the owner reaps
+    /// them).
+    fn sync_registrations(&mut self, entries: &mut [PollEntry]) -> usize {
+        self.desired.clear();
+        for (i, e) in entries.iter().enumerate() {
+            let mut mask = 0u32;
+            if e.interest.read {
+                mask |= esys::EPOLLIN;
+            }
+            if e.interest.write {
+                mask |= esys::EPOLLOUT;
+            }
+            self.desired.insert(e.fd, (i, mask));
+        }
+        // Purge fds that left the entry set. DEL failures are ignored:
+        // the fd usually closed already, and the kernel deregisters a
+        // closed fd on its own.
+        let epfd = self.epfd;
+        let desired = &self.desired;
+        self.registered.retain(|&fd, _| {
+            if desired.contains_key(&fd) {
+                return true;
+            }
+            let mut ev = esys::EpollEvent {
+                events: 0,
+                data: fd as u64,
             };
+            let _ = unsafe { esys::epoll_ctl(epfd, esys::EPOLL_CTL_DEL, fd, &mut ev) };
+            false
+        });
+        // Install the delta for fds that are present this tick.
+        let mut synthetic = 0usize;
+        for (&fd, &(i, mask)) in &self.desired {
+            let res = match self.registered.get(&fd) {
+                Some(&have) if have == mask => Ok(()),
+                Some(_) => {
+                    // Interest changed: MOD, healing a registration the
+                    // kernel dropped behind our back as ADD.
+                    match self.ctl(esys::EPOLL_CTL_MOD, fd, mask) {
+                        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                            self.ctl(esys::EPOLL_CTL_ADD, fd, mask)
+                        }
+                        r => r,
+                    }
+                }
+                None => {
+                    // New fd: ADD, healing a stale kernel registration
+                    // (same fd number, different socket) as MOD.
+                    match self.ctl(esys::EPOLL_CTL_ADD, fd, mask) {
+                        Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                            self.ctl(esys::EPOLL_CTL_MOD, fd, mask)
+                        }
+                        r => r,
+                    }
+                }
+            };
+            match res {
+                Ok(()) => {
+                    self.registered.insert(fd, mask);
+                }
+                Err(_) => {
+                    // The kernel refuses this fd outright (closed under
+                    // us, or not pollable). Surface it the way poll(2)
+                    // surfaces POLLNVAL: hangup folded into read, so
+                    // the owner reaps the connection. Retry next tick.
+                    self.registered.remove(&fd);
+                    entries[i].ready = Readiness {
+                        read: true,
+                        write: false,
+                        hangup: true,
+                    };
+                    synthetic += 1;
+                }
+            }
+        }
+        synthetic
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Default for EpollShim {
+    fn default() -> Self {
+        EpollShim::new()
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl std::fmt::Debug for EpollShim {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EpollShim")
+            .field("epfd", &self.epfd)
+            .field("registered", &self.registered.len())
+            .finish()
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for EpollShim {
+    fn drop(&mut self) {
+        if self.epfd >= 0 {
+            let _ = unsafe { esys::close(self.epfd) };
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Poller for EpollShim {
+    fn poll(&mut self, entries: &mut [PollEntry], timeout: Duration) -> std::io::Result<usize> {
+        self.ensure_epfd()?;
+        for e in entries.iter_mut() {
+            e.ready = Readiness::default();
+        }
+        let synthetic = self.sync_registrations(entries);
+        // With a synthetic hangup pending, only sweep what is already
+        // ready — the caller should see the hangup now, not after a
+        // full quiet-tick timeout.
+        let ms = if synthetic > 0 { 0 } else { timeout_ms(timeout) };
+        let cap = entries.len().max(1);
+        if self.events.len() < cap {
+            self.events.resize(
+                cap,
+                esys::EpollEvent {
+                    events: 0,
+                    data: 0,
+                },
+            );
+        }
+        let rc = unsafe {
+            esys::epoll_wait(
+                self.epfd,
+                self.events.as_mut_ptr(),
+                cap as std::os::raw::c_int,
+                ms,
+            )
+        };
+        if rc < 0 {
+            let err = std::io::Error::last_os_error();
+            if err.kind() != std::io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+            // Interrupted: report only the synthetic readiness (if
+            // any); the caller's tick loop re-polls.
+            return Ok(entries.iter().filter(|e| e.ready.any()).count());
+        }
+        for ev in &self.events[..rc as usize] {
+            // Copy out of the (possibly packed) struct before use.
+            let bits = ev.events;
+            let fd = ev.data as SockFd;
+            if let Some(&(i, _)) = self.desired.get(&fd) {
+                let e = &mut entries[i];
+                e.ready.hangup = bits & (esys::EPOLLERR | esys::EPOLLHUP) != 0;
+                e.ready.read = bits & esys::EPOLLIN != 0 || e.ready.hangup;
+                e.ready.write = bits & esys::EPOLLOUT != 0;
+            }
         }
         Ok(entries.iter().filter(|e| e.ready.any()).count())
+    }
+
+    fn name(&self) -> &'static str {
+        "epoll"
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+impl EpollShim {
+    /// A fresh epoll rung (fallback flavour off Linux).
+    pub fn new() -> Self {
+        EpollShim
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+impl Poller for EpollShim {
+    fn poll(&mut self, entries: &mut [PollEntry], timeout: Duration) -> std::io::Result<usize> {
+        report_all_ready(entries, timeout)
+    }
+
+    fn name(&self) -> &'static str {
+        "epoll"
     }
 }
 
@@ -263,7 +722,7 @@ mod tests {
     #[test]
     fn fresh_socket_is_write_ready_not_read_ready() {
         let (a, _b) = pair();
-        let mut poller = Poller::new();
+        let mut poller = PollShim::new();
         let mut entries = [PollEntry::new(
             fd_of(&a),
             Interest {
@@ -281,7 +740,7 @@ mod tests {
     #[test]
     fn read_readiness_follows_peer_write_and_levels_until_drained() {
         let (a, mut b) = pair();
-        let mut poller = Poller::new();
+        let mut poller = PollShim::new();
         let interest = Interest {
             read: true,
             write: false,
@@ -304,7 +763,7 @@ mod tests {
     fn peer_close_reports_as_read_readiness() {
         let (a, b) = pair();
         drop(b);
-        let mut poller = Poller::new();
+        let mut poller = PollShim::new();
         let mut entries = [PollEntry::new(
             fd_of(&a),
             Interest {
@@ -322,12 +781,169 @@ mod tests {
 
     #[test]
     fn empty_entry_set_just_sleeps_the_timeout() {
-        let mut poller = Poller::new();
+        let mut poller = PollShim::new();
         let started = std::time::Instant::now();
         let n = poller.poll(&mut [], Duration::from_millis(30)).unwrap();
         assert_eq!(n, 0);
         // Lower bound only: CI schedulers can oversleep freely.
         assert!(started.elapsed() >= Duration::from_millis(1));
         let _ = TcpListener::bind("127.0.0.1:0").unwrap(); // keep import used on non-unix
+    }
+
+    #[test]
+    fn backend_knob_parses_displays_and_rejects() {
+        for (s, want) in [
+            ("auto", PollBackend::Auto),
+            ("poll", PollBackend::Poll),
+            ("epoll", PollBackend::Epoll),
+        ] {
+            let parsed: PollBackend = s.parse().unwrap();
+            assert_eq!(parsed, want);
+            assert_eq!(parsed.to_string(), s);
+        }
+        let err = "kqueue".parse::<PollBackend>().unwrap_err();
+        assert!(err.contains("kqueue"), "error must name the bad rung: {err}");
+        assert_eq!(PollBackend::default(), PollBackend::Auto);
+    }
+
+    #[test]
+    fn auto_resolves_to_the_target_rung() {
+        let resolved = PollBackend::Auto.resolve();
+        if cfg!(target_os = "linux") {
+            assert_eq!(resolved, PollBackend::Epoll);
+            assert_eq!(PollBackend::Auto.resolved_name(), "epoll");
+        } else {
+            assert_eq!(resolved, PollBackend::Poll);
+            assert_eq!(PollBackend::Auto.resolved_name(), "poll");
+        }
+        // Explicit rungs resolve to themselves everywhere.
+        assert_eq!(PollBackend::Poll.resolve(), PollBackend::Poll);
+        assert_eq!(PollBackend::Epoll.resolve(), PollBackend::Epoll);
+        assert_eq!(PollBackend::Poll.poller().name(), "poll");
+        assert_eq!(PollBackend::Epoll.poller().name(), "epoll");
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_reports_fresh_socket_write_ready_not_read_ready() {
+        let (a, _b) = pair();
+        let mut poller = EpollShim::new();
+        let mut entries = [PollEntry::new(
+            fd_of(&a),
+            Interest {
+                read: true,
+                write: true,
+            },
+        )];
+        let n = poller.poll(&mut entries, Duration::from_millis(200)).unwrap();
+        assert_eq!(n, 1);
+        assert!(entries[0].ready.write);
+        assert!(!entries[0].ready.read);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_levels_read_readiness_and_peer_close_folds_into_read() {
+        let (a, mut b) = pair();
+        let mut poller = EpollShim::new();
+        let interest = Interest {
+            read: true,
+            write: false,
+        };
+        let mut entries = [PollEntry::new(fd_of(&a), interest)];
+        let n = poller.poll(&mut entries, Duration::from_millis(20)).unwrap();
+        assert_eq!(n, 0, "quiet socket reports nothing");
+        b.write_all(b"ping").unwrap();
+        for _ in 0..2 {
+            let n = poller.poll(&mut entries, Duration::from_secs(5)).unwrap();
+            assert_eq!(n, 1, "level-triggered: reports until drained");
+            assert!(entries[0].ready.read);
+        }
+        drop(b);
+        let n = poller.poll(&mut entries, Duration::from_secs(5)).unwrap();
+        assert_eq!(n, 1);
+        assert!(
+            entries[0].ready.read,
+            "hangup must fold into read-readiness"
+        );
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_tracks_interest_changes_across_ticks() {
+        let (a, _b) = pair();
+        let mut poller = EpollShim::new();
+        // Tick 1: read+write interest — a fresh socket is write-ready.
+        let mut entries = [PollEntry::new(
+            fd_of(&a),
+            Interest {
+                read: true,
+                write: true,
+            },
+        )];
+        let n = poller.poll(&mut entries, Duration::from_millis(200)).unwrap();
+        assert_eq!(n, 1);
+        assert!(entries[0].ready.write);
+        // Tick 2: interest drops to read-only — the still-writable
+        // socket must no longer report (the MOD delta took effect).
+        entries[0].interest = Interest {
+            read: true,
+            write: false,
+        };
+        let n = poller.poll(&mut entries, Duration::from_millis(20)).unwrap();
+        assert_eq!(n, 0, "write readiness must stop reporting after MOD");
+        assert!(!entries[0].ready.write);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_survives_fd_reuse_after_close() {
+        let mut poller = EpollShim::new();
+        let interest = Interest {
+            read: true,
+            write: true,
+        };
+        // Register a socket, then close it.
+        let (a, b) = pair();
+        let reused = fd_of(&a);
+        let mut entries = [PollEntry::new(reused, interest)];
+        poller.poll(&mut entries, Duration::from_millis(50)).unwrap();
+        drop(a);
+        drop(b);
+        // Per the Poller contract the fd is absent from one tick (the
+        // serving tier's reap → rebuild gap) — the shim purges it here.
+        poller.poll(&mut [], Duration::from_millis(1)).unwrap();
+        // A new socket pair typically reuses the lowest free fd
+        // numbers. Whether or not the number actually recurs, the new
+        // registration must report fresh readiness.
+        let (c, mut d) = pair();
+        d.write_all(b"ping").unwrap();
+        let mut entries = [PollEntry::new(fd_of(&c), interest)];
+        let n = poller.poll(&mut entries, Duration::from_secs(5)).unwrap();
+        assert_eq!(n, 1);
+        assert!(entries[0].ready.read, "reused fd must report new data");
+        assert!(entries[0].ready.write);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_purges_vanished_fds_and_readds_on_return() {
+        let (a, mut b) = pair();
+        let mut poller = EpollShim::new();
+        let interest = Interest {
+            read: true,
+            write: false,
+        };
+        let mut entries = [PollEntry::new(fd_of(&a), interest)];
+        poller.poll(&mut entries, Duration::from_millis(10)).unwrap();
+        // The fd leaves the entry set for a tick (parked connection):
+        // its registration is purged, and nothing is reported for it.
+        let n = poller.poll(&mut [], Duration::from_millis(10)).unwrap();
+        assert_eq!(n, 0);
+        // It returns with data pending: re-added, readiness reported.
+        b.write_all(b"pong").unwrap();
+        let n = poller.poll(&mut entries, Duration::from_secs(5)).unwrap();
+        assert_eq!(n, 1);
+        assert!(entries[0].ready.read);
     }
 }

@@ -75,7 +75,7 @@ use crate::device::computable::WorkerPool;
 use crate::error::{CpmError, Result};
 use crate::obs::{Recorder, SpanEvent};
 
-use super::poll::{fd_of, Interest, PollEntry, Poller};
+use super::poll::{fd_of, Interest, PollBackend, PollEntry, Poller};
 use super::window::{AdmissionQueue, Pull, TryPush, WindowConfig};
 use super::wire::{self, ClientMsg, FrameBuf};
 
@@ -127,6 +127,11 @@ pub struct NetConfig {
     /// threads feeding the server. Connections are assigned round-robin
     /// at accept. Values below 1 are treated as 1.
     pub dispatch_lanes: usize,
+    /// Which rung of the poll ladder the reader cores multiplex
+    /// through: `auto` (epoll on Linux, poll elsewhere), `poll`, or
+    /// `epoll`. Resolved once at spawn; every core climbs the same
+    /// rung. CLI `--poll-backend`, env `CPM_POLL_BACKEND`.
+    pub poll_backend: PollBackend,
 }
 
 impl Default for NetConfig {
@@ -139,6 +144,7 @@ impl Default for NetConfig {
             max_connections: 1024,
             reader_cores: 4,
             dispatch_lanes: 2,
+            poll_backend: PollBackend::Auto,
         }
     }
 }
@@ -325,12 +331,16 @@ impl NetServer {
         let addr = listener.local_addr()?;
         let reader_cores = cfg.reader_cores.max(1);
         let dispatch_lanes = cfg.dispatch_lanes.max(1);
+        // Resolve `auto` once so every core climbs the same rung and
+        // the gauge reports what actually runs.
+        let poll_backend = cfg.poll_backend.resolve();
         // Cloned out before the server moves behind the lock: cores
         // answer scrapes from the recorder and sample worker-pool gauges
         // without ever touching the CpmServer itself.
         let recorder = server.recorder();
         let pool = server.exec().worker_pool().clone();
         recorder.set_reader_cores(reader_cores as u64);
+        recorder.set_poll_backend(poll_backend.resolved_name());
 
         let mut net = NetServer {
             addr,
@@ -373,6 +383,7 @@ impl NetServer {
                 active: Arc::clone(&active),
                 tick: cfg.read_poll,
                 write_timeout: cfg.write_timeout,
+                poll_backend,
             };
             let spawned = std::thread::Builder::new()
                 .name(format!("cpm-net-read{i}"))
@@ -697,6 +708,8 @@ struct CoreCtx {
     active: Arc<AtomicU64>,
     tick: Duration,
     write_timeout: Duration,
+    /// The resolved poll-ladder rung every core builds its poller from.
+    poll_backend: PollBackend,
 }
 
 /// One multiplexed connection as its core sees it.
@@ -718,7 +731,7 @@ struct Conn {
 /// One reader core: a readiness-poll tick loop multiplexing all its
 /// adopted connections.
 fn core_loop(ctx: CoreCtx) {
-    let mut poller = Poller::new();
+    let mut poller: Box<dyn Poller> = ctx.poll_backend.poller();
     let mut conns: Vec<Option<Conn>> = Vec::new();
     let mut entries: Vec<PollEntry> = Vec::new();
     let mut slots: Vec<usize> = Vec::new();

@@ -737,6 +737,7 @@ fn put_metrics(out: &mut Vec<u8>, m: &Metrics) {
     for &p in &m.gauges.plane_used_pes {
         put_u64(out, p);
     }
+    put_str(out, &m.gauges.poll_backend);
 }
 
 fn take_metrics(d: &mut Dec<'_>) -> Result<Metrics> {
@@ -807,6 +808,7 @@ fn take_metrics(d: &mut Dec<'_>) -> Result<Metrics> {
     for _ in 0..n_planes {
         plane_used_pes.push(d.take_u64()?);
     }
+    let poll_backend = d.take_str()?;
     let gauges = GaugeStats {
         queue_depth,
         worker_threads,
@@ -816,6 +818,7 @@ fn take_metrics(d: &mut Dec<'_>) -> Result<Metrics> {
         lane_queue_depths,
         planes,
         plane_used_pes,
+        poll_backend,
     };
     Ok(Metrics {
         requests,
@@ -1102,8 +1105,10 @@ mod tests {
         r.window_stolen();
         r.set_planes(2);
         r.sample_planes(&[5_000, 1_200]);
+        r.set_poll_backend("epoll");
         r.scraped();
         let snap = r.snapshot();
+        assert_eq!(snap.gauges.poll_backend, "epoll");
         let payload = encode_reply(7, &Ok(Response::Stats(Box::new(snap.clone()))));
         let (id, back) = decode_reply(&payload).unwrap();
         assert_eq!(id, 7);

@@ -16,7 +16,7 @@ use super::Stage;
 /// Every metric name the exporter emits. [`check`] requires each of
 /// these to appear in a scrape; the CI scrape leg runs that check
 /// against a live `cpm serve`.
-pub const METRIC_NAMES: [&str; 37] = [
+pub const METRIC_NAMES: [&str; 38] = [
     "cpm_requests_total",
     "cpm_errors_total",
     "cpm_batches_total",
@@ -42,6 +42,7 @@ pub const METRIC_NAMES: [&str; 37] = [
     "cpm_window_max_occupancy",
     "cpm_queue_depth",
     "cpm_reader_cores",
+    "cpm_poll_backend",
     "cpm_lane_queue_depth",
     "cpm_planes",
     "cpm_plane_used_pes",
@@ -236,6 +237,20 @@ pub fn prometheus(m: &Metrics) -> String {
         "Readiness reader cores multiplexing connections.",
         m.gauges.reader_cores as f64,
     );
+    // Info-style gauge: the resolved rung rides in the label, the value
+    // says whether a TCP tier is serving at all.
+    header(
+        &mut out,
+        "cpm_poll_backend",
+        "gauge",
+        "Poll-ladder rung the reader cores resolved to (1 = serving).",
+    );
+    let _ = writeln!(
+        out,
+        "cpm_poll_backend{{backend=\"{}\"}} {}",
+        escape(&m.gauges.poll_backend),
+        u64::from(!m.gauges.poll_backend.is_empty())
+    );
     header(
         &mut out,
         "cpm_lane_queue_depth",
@@ -397,6 +412,8 @@ mod tests {
         for name in METRIC_NAMES {
             assert!(text.contains(name), "missing {name}");
         }
+        // No TCP tier: the info gauge reports an empty rung at 0.
+        assert!(text.contains("cpm_poll_backend{backend=\"\"} 0"));
     }
 
     #[test]
@@ -415,11 +432,13 @@ mod tests {
         r.sample_planes(&[320, 64]);
         r.record_multi(480, 80);
         r.window_stolen();
+        r.set_poll_backend("epoll");
         let text = prometheus(&r.snapshot());
         check(&text).expect("populated snapshot must scrape clean");
         assert!(text.contains("cpm_requests_total 3"));
         assert!(text.contains("cpm_connections_multiplexed_total 1"));
         assert!(text.contains("cpm_reader_cores 4"));
+        assert!(text.contains("cpm_poll_backend{backend=\"epoll\"} 1"));
         assert!(text.contains("cpm_lane_queue_depth{lane=\"0\"} 2"));
         assert!(text.contains("cpm_lane_queue_depth{lane=\"1\"} 0"));
         assert!(text.contains("cpm_planes 2"));

@@ -144,6 +144,7 @@ pub struct Recorder {
     ring: Mutex<SpanRing>,
     lane_depths: Mutex<Vec<u64>>,
     plane_used: Mutex<Vec<u64>>,
+    poll_backend: Mutex<String>,
 }
 
 impl Recorder {
@@ -284,6 +285,15 @@ impl Recorder {
         self.planes.store(n, Ordering::Relaxed);
     }
 
+    /// Record which poll-ladder rung the reader cores resolved to
+    /// (`"poll"` / `"epoll"`) — a startup-time gauge like
+    /// `set_reader_cores`; empty while no TCP tier serves.
+    pub fn set_poll_backend(&self, name: &str) {
+        let mut backend = lock(&self.poll_backend);
+        backend.clear();
+        backend.push_str(name);
+    }
+
     /// Store the per-plane resident PE occupancy observed after a batch
     /// (or at scrape time).
     pub fn sample_planes(&self, used: &[u64]) {
@@ -355,6 +365,7 @@ impl Recorder {
                 lane_queue_depths: lock(&self.lane_depths).clone(),
                 planes: load(&self.planes),
                 plane_used_pes: lock(&self.plane_used).clone(),
+                poll_backend: lock(&self.poll_backend).clone(),
             },
         }
     }
@@ -449,6 +460,8 @@ mod tests {
         r.set_planes(2);
         r.sample_planes(&[100, 40]);
         r.sample_planes(&[90, 50]);
+        r.set_poll_backend("poll");
+        r.set_poll_backend("epoll");
         let g = r.snapshot().gauges;
         assert_eq!(g.queue_depth, 0);
         assert_eq!(g.worker_threads, 4);
@@ -458,6 +471,7 @@ mod tests {
         assert_eq!(g.lane_queue_depths, vec![0, 3]);
         assert_eq!(g.planes, 2);
         assert_eq!(g.plane_used_pes, vec![90, 50]);
+        assert_eq!(g.poll_backend, "epoll", "latest set wins");
     }
 
     #[test]

@@ -157,6 +157,10 @@ pub struct GaugeStats {
     /// PEs claimed by residents per plane at the last sample, indexed by
     /// plane id.
     pub plane_used_pes: Vec<u64>,
+    /// The poll-ladder rung the reader cores resolved to (`"poll"` /
+    /// `"epoll"`; empty when the server is not fronted by the TCP
+    /// tier).
+    pub poll_backend: String,
 }
 
 /// Snapshot of every served-path counter, histogram, span, and gauge.

@@ -1,6 +1,8 @@
 //! Shared utilities built from scratch for the offline environment:
-//! a deterministic PRNG and a property-testing mini-framework.
+//! a deterministic PRNG, a property-testing mini-framework, and an
+//! fd-rlimit shim for the connection soaks.
 
+pub mod fdlimit;
 pub mod propcheck;
 pub mod rng;
 

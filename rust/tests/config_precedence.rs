@@ -1,7 +1,7 @@
 //! Pins the `ServerConfig` precedence ladder — **CLI flag > `CPM_*`
 //! environment > built-in default** — knob by knob: backend, threads,
-//! reader cores, dispatcher lanes, planes, dma, and the admission
-//! window. Environment layering goes through
+//! reader cores, dispatcher lanes, poll backend, planes, dma, and the
+//! admission window. Environment layering goes through
 //! `ServerConfig::from_env_with` with an explicit lookup, so the suite
 //! never touches (or races on) the real process environment.
 
@@ -9,6 +9,7 @@ use std::time::Duration;
 
 use cpm::cli::Cli;
 use cpm::device::computable::BackendKind;
+use cpm::net::PollBackend;
 use cpm::ServerConfig;
 
 fn cli(s: &str) -> Cli {
@@ -33,6 +34,7 @@ const FULL_ENV: &[(&str, &str)] = &[
     ("CPM_PLANES", "2"),
     ("CPM_READER_CORES", "6"),
     ("CPM_LANES", "3"),
+    ("CPM_POLL_BACKEND", "poll"),
 ];
 
 #[test]
@@ -46,6 +48,7 @@ fn defaults_hold_with_nothing_set() {
     assert_eq!(cfg.pool.planes, 1);
     assert_eq!(cfg.net.reader_cores, 4);
     assert_eq!(cfg.net.dispatch_lanes, 2);
+    assert_eq!(cfg.net.poll_backend, PollBackend::Auto);
     assert_eq!(cfg.net.window.max_delay, Duration::from_micros(2000));
     assert_eq!(cfg.net.window.max_batch, 32);
 }
@@ -61,6 +64,7 @@ fn environment_beats_defaults_for_every_knob() {
     assert_eq!(cfg.pool.planes, 2);
     assert_eq!(cfg.net.reader_cores, 6);
     assert_eq!(cfg.net.dispatch_lanes, 3);
+    assert_eq!(cfg.net.poll_backend, PollBackend::Poll);
 }
 
 #[test]
@@ -68,7 +72,8 @@ fn cli_beats_defaults_for_every_knob() {
     let cfg = ServerConfig::from_env_with(|_| None)
         .with_cli(&cli(
             "serve --backend serial --threads 5 --dma 8 --planes 4 \
-             --reader-cores 2 --lanes 4 --window-us 700 --max-batch 16",
+             --reader-cores 2 --lanes 4 --poll-backend epoll \
+             --window-us 700 --max-batch 16",
         ))
         .unwrap();
     assert_eq!(cfg.pool.exec.backend, BackendKind::Serial);
@@ -77,6 +82,7 @@ fn cli_beats_defaults_for_every_knob() {
     assert_eq!(cfg.pool.planes, 4);
     assert_eq!(cfg.net.reader_cores, 2);
     assert_eq!(cfg.net.dispatch_lanes, 4);
+    assert_eq!(cfg.net.poll_backend, PollBackend::Epoll);
     assert_eq!(cfg.net.window.max_delay, Duration::from_micros(700));
     assert_eq!(cfg.net.window.max_batch, 16);
 }
@@ -86,7 +92,7 @@ fn cli_beats_environment_for_every_knob() {
     let cfg = ServerConfig::from_env_with(env(FULL_ENV))
         .with_cli(&cli(
             "serve --backend serial --threads 5 --dma 8 --planes 4 \
-             --reader-cores 2 --lanes 4",
+             --reader-cores 2 --lanes 4 --poll-backend epoll",
         ))
         .unwrap();
     assert_eq!(cfg.pool.exec.backend, BackendKind::Serial);
@@ -95,6 +101,11 @@ fn cli_beats_environment_for_every_knob() {
     assert_eq!(cfg.pool.planes, 4);
     assert_eq!(cfg.net.reader_cores, 2);
     assert_eq!(cfg.net.dispatch_lanes, 4);
+    assert_eq!(
+        cfg.net.poll_backend,
+        PollBackend::Epoll,
+        "--poll-backend must beat CPM_POLL_BACKEND"
+    );
 }
 
 #[test]
@@ -109,6 +120,11 @@ fn unnamed_cli_knobs_leave_the_environment_rung_in_place() {
     assert_eq!(cfg.pool.planes, 2);
     assert_eq!(cfg.net.reader_cores, 6);
     assert_eq!(cfg.net.dispatch_lanes, 3);
+    assert_eq!(
+        cfg.net.poll_backend,
+        PollBackend::Poll,
+        "an unnamed --poll-backend leaves the environment rung in place"
+    );
 }
 
 #[test]
@@ -127,6 +143,45 @@ fn unknown_backend_on_the_cli_is_a_typed_error() {
         .with_cli(&cli("serve --backend warp-drive"))
         .unwrap_err();
     assert!(err.to_string().contains("warp-drive"));
+}
+
+#[test]
+fn unknown_poll_backend_on_the_cli_is_a_typed_error() {
+    let err = ServerConfig::from_env_with(|_| None)
+        .with_cli(&cli("serve --poll-backend kqueue"))
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("kqueue"), "error must name the bad rung: {msg}");
+    assert!(
+        msg.contains("auto") && msg.contains("epoll"),
+        "error must list the valid rungs: {msg}"
+    );
+}
+
+#[test]
+fn unparsable_poll_backend_environment_falls_through() {
+    let cfg = ServerConfig::from_env_with(env(&[("CPM_POLL_BACKEND", "io-uring")]))
+        .with_cli(&cli("serve"))
+        .unwrap();
+    assert_eq!(cfg.net.poll_backend, PollBackend::Auto);
+}
+
+#[test]
+fn auto_resolves_to_epoll_on_linux_and_poll_elsewhere() {
+    let auto = ServerConfig::from_env_with(|_| None)
+        .with_cli(&cli("serve --poll-backend auto"))
+        .unwrap()
+        .net
+        .poll_backend;
+    assert_eq!(auto, PollBackend::Auto, "the knob stores the request");
+    let resolved = auto.resolve();
+    if cfg!(target_os = "linux") {
+        assert_eq!(resolved, PollBackend::Epoll);
+        assert_eq!(auto.resolved_name(), "epoll");
+    } else {
+        assert_eq!(resolved, PollBackend::Poll);
+        assert_eq!(auto.resolved_name(), "poll");
+    }
 }
 
 #[test]

@@ -9,7 +9,11 @@
 //! watchdog that fails the test if any scenario wedges.
 //!
 //! Run with `RUST_TEST_THREADS=1` (CI does): the scenarios assert
-//! liveness windows that parallel test noise would blur.
+//! liveness windows that parallel test noise would blur. CI runs the
+//! whole suite once per poll-ladder rung by exporting
+//! `CPM_POLL_BACKEND=poll` / `=epoll`; every scenario builds its
+//! [`NetConfig`] through [`net_config`], which honours that variable,
+//! so the fault matrix covers both rungs without duplicating scenarios.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -20,6 +24,19 @@ use std::time::Duration;
 use cpm::coordinator::{CpmServer, Request, Response};
 use cpm::net::{wire, CpmClient, NetConfig, NetServer, WindowConfig};
 use cpm::pool::{DevicePool, PoolConfig};
+
+/// The scenarios' base [`NetConfig`]: defaults, except the poll backend,
+/// which the CI fault matrix steers via `CPM_POLL_BACKEND` (unset or
+/// unparsable falls back to `auto`, like the serving binary).
+fn net_config() -> NetConfig {
+    NetConfig {
+        poll_backend: std::env::var("CPM_POLL_BACKEND")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_default(),
+        ..NetConfig::default()
+    }
+}
 
 /// Fail the test if `f` does not finish within `secs` — the tier-wide
 /// "the dispatcher never blocks" assertion every scenario runs under.
@@ -72,7 +89,7 @@ fn healthy_roundtrip(addr: std::net::SocketAddr, tenant: &str) {
 #[test]
 fn stalled_peer_mid_frame_resumes_and_serving_continues() {
     with_watchdog(120, || {
-        let net = NetServer::spawn(build_server(&["t0", "mid"]), NetConfig::default()).unwrap();
+        let net = NetServer::spawn(build_server(&["t0", "mid"]), net_config()).unwrap();
         let addr = net.addr();
 
         // Write the frame's prefix and a few payload bytes, then stall:
@@ -111,7 +128,7 @@ fn stalled_peer_mid_frame_resumes_and_serving_continues() {
 #[test]
 fn truncated_length_prefix_then_close_is_a_clean_disconnect() {
     with_watchdog(120, || {
-        let net = NetServer::spawn(build_server(&["t0"]), NetConfig::default()).unwrap();
+        let net = NetServer::spawn(build_server(&["t0"]), net_config()).unwrap();
         let addr = net.addr();
 
         // Two bytes of the four-byte length prefix, then gone.
@@ -133,7 +150,7 @@ fn truncated_length_prefix_then_close_is_a_clean_disconnect() {
 #[test]
 fn oversized_frame_prefix_is_rejected_before_buffering() {
     with_watchdog(120, || {
-        let net = NetServer::spawn(build_server(&["t0"]), NetConfig::default()).unwrap();
+        let net = NetServer::spawn(build_server(&["t0"]), net_config()).unwrap();
         let addr = net.addr();
 
         // Claim a frame one byte over the cap, then flood garbage. The
@@ -170,7 +187,7 @@ fn reply_write_timeout_disconnects_the_stalled_peer_not_the_server() {
             build_server(&["t0"]),
             NetConfig {
                 write_timeout: Duration::from_millis(300),
-                ..NetConfig::default()
+                ..net_config()
             },
         )
         .unwrap();
@@ -225,7 +242,7 @@ fn reply_write_timeout_disconnects_the_stalled_peer_not_the_server() {
 #[test]
 fn vanishing_peer_with_queued_requests_is_reaped() {
     with_watchdog(120, || {
-        let net = NetServer::spawn(build_server(&["t0", "ghost"]), NetConfig::default()).unwrap();
+        let net = NetServer::spawn(build_server(&["t0", "ghost"]), net_config()).unwrap();
         let addr = net.addr();
 
         // Pipeline a burst and vanish without reading a single reply.
@@ -267,7 +284,7 @@ fn admission_backpressure_parks_the_connection_and_stats_stay_live() {
                 },
                 reader_cores: 1,
                 dispatch_lanes: 1,
-                ..NetConfig::default()
+                ..net_config()
             },
         )
         .unwrap();
@@ -319,5 +336,128 @@ fn admission_backpressure_parks_the_connection_and_stats_stay_live() {
         }
         let server = net.shutdown();
         assert_eq!(server.metrics().errors, 0);
+    });
+}
+
+#[test]
+fn peer_reset_mid_frame_is_reaped_and_serving_continues() {
+    with_watchdog(120, || {
+        let net = NetServer::spawn(build_server(&["t0", "rst"]), net_config()).unwrap();
+        let addr = net.addr();
+
+        // A full request (so a reply lands in the peer's receive queue)
+        // plus half of a second frame — then the peer vanishes without
+        // reading. Closing with undrained inbound data sends a reset,
+        // so the reader core sees the hangup/error readiness fold
+        // (EPOLLHUP/EPOLLERR on the epoll rung) on a connection that
+        // still owes half a frame. It must reap, not spin or block.
+        let payload = wire::encode_request(
+            3,
+            Some("rst"),
+            Some("notes"),
+            &Request::Search(b"alpha".to_vec()),
+        );
+        let framed = wire::frame_bytes(&payload).unwrap();
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.write_all(&framed).unwrap();
+        raw.write_all(&framed[..9]).unwrap();
+        raw.flush().unwrap();
+        thread::sleep(Duration::from_millis(100));
+        drop(raw);
+
+        // Serving continues while (and after) the wounded connection
+        // reaps; nothing leaks into other connections' windows.
+        for _ in 0..5 {
+            healthy_roundtrip(addr, "t0");
+        }
+        let server = net.shutdown();
+        let m = server.metrics();
+        assert_eq!(
+            m.spans.wait_ns + m.spans.exec_ns + m.spans.write_ns,
+            m.spans.total_ns,
+            "span ledger must decompose with a reset mid-frame"
+        );
+    });
+}
+
+#[test]
+fn connection_churn_reuses_fds_without_stale_registrations() {
+    with_watchdog(120, || {
+        let net = NetServer::spawn(build_server(&["t0"]), net_config()).unwrap();
+        let addr = net.addr();
+
+        // Rapid connect/close churn: each short-lived connection's fd
+        // number is promptly reused by the next accept, so a rung with
+        // persistent kernel registrations (epoll) must purge the dead
+        // registration and re-add the newcomer every time. A stale
+        // registration would either miss readiness (the healthy
+        // roundtrip below would hang into the watchdog) or wake on a
+        // dead fd forever.
+        for round in 0..40 {
+            let mut churn = TcpStream::connect(addr).unwrap();
+            if round % 3 == 0 {
+                // Sometimes leave half a length prefix behind so the
+                // reap happens with a partial frame buffered.
+                churn.write_all(&[0x08, 0x00]).unwrap();
+            }
+            drop(churn);
+            if round % 8 == 0 {
+                healthy_roundtrip(addr, "t0");
+            }
+        }
+        // The tier is still fully live after the churn storm.
+        for _ in 0..5 {
+            healthy_roundtrip(addr, "t0");
+        }
+        let server = net.shutdown();
+        assert_eq!(server.metrics().errors, 0);
+    });
+}
+
+#[test]
+fn dribbled_frames_tolerate_spurious_wakes_without_duplicating_replies() {
+    with_watchdog(120, || {
+        let net = NetServer::spawn(build_server(&["t0", "drip"]), net_config()).unwrap();
+        let addr = net.addr();
+
+        // Dribble three pipelined requests one byte at a time: every
+        // byte re-arms level-triggered readiness, so the reader core
+        // wakes dozens of times per frame with nothing dispatchable —
+        // the spurious-wake regime. It must neither busy-loop a partial
+        // frame into the dispatcher nor double-deliver once the frame
+        // completes: exactly one reply per request id, all correct.
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut ids = Vec::new();
+        for id in 20..23u64 {
+            ids.push(id);
+            let payload = wire::encode_request(
+                id,
+                Some("drip"),
+                Some("notes"),
+                &Request::Search(b"alpha".to_vec()),
+            );
+            let framed = wire::frame_bytes(&payload).unwrap();
+            for byte in framed {
+                raw.write_all(&[byte]).unwrap();
+                raw.flush().unwrap();
+            }
+        }
+
+        // Healthy traffic flows between the drips.
+        healthy_roundtrip(addr, "t0");
+
+        let mut got = std::collections::BTreeMap::new();
+        for _ in 0..ids.len() {
+            let reply = wire::read_frame(&mut raw).unwrap().expect("dripped reply");
+            let (id, result) = wire::decode_reply(&reply).unwrap();
+            let Ok(Response::Matches(hits)) = result else {
+                panic!("dripped request {id} failed: {result:?}");
+            };
+            assert_eq!(hits.len(), 2);
+            assert!(got.insert(id, ()).is_none(), "duplicate reply for id {id}");
+        }
+        assert_eq!(got.len(), ids.len(), "every dripped request answered once");
+        net.shutdown();
     });
 }

@@ -1,0 +1,456 @@
+//! Cross-backend conformance for the poll ladder: the `poll(2)` and
+//! `epoll(7)` rungs must be observationally identical.
+//!
+//! Two layers of proof:
+//!
+//! * **Readiness differential** (Linux) — seeded random socket scripts
+//!   (partial frames, bursts, mid-write stalls, peer resets, connection
+//!   churn) drive the *same* socket set through a [`PollShim`] and an
+//!   [`EpollShim`] side by side, asserting the full [`Readiness`]
+//!   (read/write/hangup) reported for every fd on every tick is
+//!   bit-identical. Off Linux the epoll rung is a report-all-ready
+//!   fallback, so the differential only runs where both rungs are real.
+//! * **Response differential** (everywhere) — the same mixed edit/read
+//!   client scripts served once under `--poll-backend poll` and once
+//!   under `--poll-backend epoll` must produce responses identical to
+//!   each other *and* to a serial in-process replay through
+//!   `handle_addressed`.
+//!
+//! CI runs this suite single-threaded in tier 1.
+
+use cpm::net::poll::{EpollShim, Poller, PollShim};
+use cpm::net::PollBackend;
+
+#[cfg(target_os = "linux")]
+mod readiness {
+    use super::*;
+    use cpm::net::poll::{fd_of, Interest, PollEntry, Readiness};
+    use cpm::util::rng::Rng;
+    use std::io::{ErrorKind, Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::time::Duration;
+
+    /// One scripted connection: the polled side, its peer, and the
+    /// interest the script currently registers for it.
+    struct Conn {
+        near: TcpStream,
+        peer: Option<TcpStream>,
+        interest: Interest,
+    }
+
+    fn pair(listener: &TcpListener) -> (TcpStream, TcpStream) {
+        let a = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (b, _) = listener.accept().unwrap();
+        a.set_nonblocking(true).unwrap();
+        b.set_nonblocking(true).unwrap();
+        (a, b)
+    }
+
+    fn open(listener: &TcpListener) -> Conn {
+        let (near, peer) = pair(listener);
+        Conn {
+            near,
+            peer: Some(peer),
+            interest: Interest {
+                read: true,
+                write: false,
+            },
+        }
+    }
+
+    /// Poll both rungs over the same live socket set and assert the
+    /// reported readiness is bit-identical, fd by fd.
+    fn assert_identical_readiness(
+        poll: &mut PollShim,
+        epoll: &mut EpollShim,
+        slots: &[Option<Conn>],
+        ctx: &str,
+    ) -> Vec<Readiness> {
+        let build = || -> Vec<PollEntry> {
+            slots
+                .iter()
+                .flatten()
+                .map(|c| PollEntry::new(fd_of(&c.near), c.interest))
+                .collect()
+        };
+        let timeout = Duration::from_millis(25);
+        let mut via_poll = build();
+        let n_poll = poll.poll(&mut via_poll, timeout).unwrap();
+        let mut via_epoll = build();
+        let n_epoll = epoll.poll(&mut via_epoll, timeout).unwrap();
+        assert_eq!(
+            n_poll, n_epoll,
+            "{ctx}: ready counts diverge (poll {n_poll} vs epoll {n_epoll})"
+        );
+        for (p, e) in via_poll.iter().zip(&via_epoll) {
+            assert_eq!(p.fd, e.fd, "{ctx}: entry sets drifted");
+            assert_eq!(
+                p.ready, e.ready,
+                "{ctx}: fd {} readiness diverges (interest {:?}): poll {:?} vs epoll {:?}",
+                p.fd, p.interest, p.ready, e.ready
+            );
+        }
+        via_poll.iter().map(|e| e.ready).collect()
+    }
+
+    /// Fill the near side's send buffer until the kernel pushes back —
+    /// the mid-write-stall state where write-readiness must go dark.
+    fn stall_writes(near: &mut TcpStream) {
+        let chunk = [0x5au8; 16 * 1024];
+        loop {
+            match near.write(&chunk) {
+                Ok(0) => break,
+                Ok(_) => {}
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn drain(stream: &mut TcpStream, cap: usize) {
+        let mut buf = vec![0u8; 4096];
+        let mut taken = 0usize;
+        while taken < cap {
+            match stream.read(&mut buf) {
+                Ok(0) => break,
+                Ok(n) => taken += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => break,
+            }
+        }
+    }
+
+    #[test]
+    fn randomized_socket_scripts_report_identical_readiness() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        for seed in [7u64, 40_499, 0xCAFE] {
+            let mut rng = Rng::new(seed);
+            let mut poll = PollShim::new();
+            let mut epoll = EpollShim::new();
+            let mut slots: Vec<Option<Conn>> = (0..6).map(|_| Some(open(&listener))).collect();
+            for step in 0..120 {
+                let ctx = format!("seed {seed} step {step}");
+                let live: Vec<usize> = (0..slots.len())
+                    .filter(|&i| slots[i].is_some())
+                    .collect();
+                match rng.below(100) {
+                    // Partial frame / burst: the peer pushes 1..=512
+                    // bytes; the polled side must go read-ready.
+                    0..=34 if !live.is_empty() => {
+                        let i = live[rng.below(live.len() as u64) as usize];
+                        let conn = slots[i].as_mut().unwrap();
+                        if let Some(peer) = conn.peer.as_mut() {
+                            let n = rng.range(1, 513);
+                            let _ = peer.write(&vec![0xabu8; n]);
+                        }
+                    }
+                    // Drain: the polled side consumes; readiness must
+                    // level back down identically once empty.
+                    35..=49 if !live.is_empty() => {
+                        let i = live[rng.below(live.len() as u64) as usize];
+                        let conn = slots[i].as_mut().unwrap();
+                        drain(&mut conn.near, rng.range(64, 64 * 1024));
+                    }
+                    // Interest churn: flip write interest (the epoll
+                    // rung's MOD path).
+                    50..=64 if !live.is_empty() => {
+                        let i = live[rng.below(live.len() as u64) as usize];
+                        let conn = slots[i].as_mut().unwrap();
+                        conn.interest.write = !conn.interest.write;
+                    }
+                    // Mid-write stall: jam the near side's send buffer;
+                    // write-readiness must go dark on both rungs.
+                    65..=74 if !live.is_empty() => {
+                        let i = live[rng.below(live.len() as u64) as usize];
+                        let conn = slots[i].as_mut().unwrap();
+                        if conn.peer.is_some() {
+                            stall_writes(&mut conn.near);
+                            conn.interest.write = true;
+                        }
+                    }
+                    // Peer departure: orderly close (or reset, when the
+                    // peer abandons undrained data) — hangup semantics
+                    // must fold identically.
+                    75..=84 if !live.is_empty() => {
+                        let i = live[rng.below(live.len() as u64) as usize];
+                        let conn = slots[i].as_mut().unwrap();
+                        conn.peer = None;
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    // Connection churn: close a pair outright, give both
+                    // rungs one purge tick without the fd (the trait's
+                    // fd-reuse contract), then open a replacement that
+                    // likely reuses the fd number.
+                    85..=91 if !live.is_empty() => {
+                        let i = live[rng.below(live.len() as u64) as usize];
+                        slots[i] = None;
+                        assert_identical_readiness(
+                            &mut poll,
+                            &mut epoll,
+                            &slots,
+                            &format!("{ctx} (purge tick)"),
+                        );
+                        slots[i] = Some(open(&listener));
+                    }
+                    // Fresh connection into a free slot, if any.
+                    _ => {
+                        if let Some(i) = (0..slots.len()).find(|&i| slots[i].is_none()) {
+                            slots[i] = Some(open(&listener));
+                        }
+                    }
+                }
+                assert_identical_readiness(&mut poll, &mut epoll, &slots, &ctx);
+            }
+        }
+    }
+
+    #[test]
+    fn peer_reset_mid_frame_folds_identically() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut poll = PollShim::new();
+        let mut epoll = EpollShim::new();
+
+        // The near side sends half a frame, then the peer vanishes with
+        // that data undrained — the classic reset path. Both rungs must
+        // report the same read/hangup folding.
+        let mut conn = open(&listener);
+        conn.near.write_all(b"\x20\x00\x00\x00partial").unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        conn.peer = None;
+        std::thread::sleep(Duration::from_millis(5));
+        conn.interest = Interest {
+            read: true,
+            write: true,
+        };
+        let slots = vec![Some(conn)];
+        let seen = assert_identical_readiness(&mut poll, &mut epoll, &slots, "post-reset");
+        assert!(
+            seen[0].read,
+            "a reset peer must surface as read-readiness so the owner reaps: {seen:?}"
+        );
+    }
+
+    #[test]
+    fn spurious_wake_tolerance_reports_level_not_edge() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut poll = PollShim::new();
+        let mut epoll = EpollShim::new();
+        let mut conn = open(&listener);
+        conn.peer.as_mut().unwrap().write_all(b"ping").unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+        let slots = vec![Some(conn)];
+        // Poll the same undrained state five times: level-triggered
+        // rungs must re-report identical readiness on every tick (a
+        // consumer that tolerates spurious wakes relies on exactly
+        // this).
+        for tick in 0..5 {
+            let seen = assert_identical_readiness(
+                &mut poll,
+                &mut epoll,
+                &slots,
+                &format!("spurious tick {tick}"),
+            );
+            assert!(seen[0].read, "undrained data must re-report on tick {tick}");
+        }
+    }
+
+    #[test]
+    fn stale_fd_reregistration_after_churn_stays_identical() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut poll = PollShim::new();
+        let mut epoll = EpollShim::new();
+        // Rapid open/close churn with a purge tick between — every
+        // reopened slot tends to reuse the just-closed fd number, so
+        // the epoll rung's ADD-after-DEL path runs hot.
+        for round in 0..20 {
+            let mut conn = open(&listener);
+            conn.peer.as_mut().unwrap().write_all(b"hot").unwrap();
+            std::thread::sleep(Duration::from_millis(1));
+            let slots = vec![Some(conn)];
+            let seen = assert_identical_readiness(
+                &mut poll,
+                &mut epoll,
+                &slots,
+                &format!("churn round {round}"),
+            );
+            assert!(seen[0].read, "round {round}: reused fd lost its readiness");
+            // Close, then give both rungs their contractual fd-absent
+            // tick before the next round reuses the number.
+            drop(slots);
+            assert_identical_readiness(
+                &mut poll,
+                &mut epoll,
+                &[],
+                &format!("churn round {round} purge"),
+            );
+        }
+    }
+}
+
+mod responses {
+    use super::*;
+    use cpm::coordinator::{Addressed, CpmServer, Request, Response};
+    use cpm::net::{CpmClient, NetConfig, NetServer};
+    use cpm::pool::{DevicePool, PoolConfig};
+    use std::sync::{Arc, Barrier};
+    use std::thread;
+
+    const TENANTS: usize = 4;
+    const CONNS_PER_TENANT: usize = 2;
+
+    fn tenant(t: usize) -> String {
+        format!("tenant{t}")
+    }
+
+    fn device(c: usize) -> String {
+        format!("notes{c}")
+    }
+
+    fn build_server() -> CpmServer {
+        let mut pool = DevicePool::new(PoolConfig {
+            capacity_pes: 1 << 20,
+            tenant_quota_pes: 1 << 16,
+            corpus_slack: 64,
+            ..PoolConfig::default()
+        });
+        for t in 0..TENANTS {
+            for c in 0..CONNS_PER_TENANT {
+                let content = format!("alpha beta gamma alpha delta {t}-{c}");
+                pool.create_corpus(&tenant(t), &device(c), content.as_bytes())
+                    .unwrap();
+            }
+        }
+        CpmServer::with_pool(pool, 1 << 16)
+    }
+
+    /// The mixed edit/read script for connection `(t, c)`: each
+    /// connection edits only its own corpus, so wire concurrency cannot
+    /// reorder anything observable and serial replay is exact.
+    fn script(t: usize, c: usize) -> Vec<Addressed> {
+        let me = tenant(t);
+        let dev = device(c);
+        vec![
+            Addressed::new(&me, &dev, Request::Search(b"alpha".to_vec())),
+            Addressed::new(&me, &dev, Request::Insert(0, format!("q{t}-{c} ").into_bytes())),
+            Addressed::new(&me, &dev, Request::Search(format!("q{t}-{c}").into_bytes())),
+            Addressed::for_tenant(&me, Request::Sum(vec![t as i32, c as i32, 11])),
+            Addressed::new(&me, &dev, Request::Replace(b"beta".to_vec(), b"BET".to_vec())),
+            Addressed::new(&me, &dev, Request::Search(b"BET".to_vec())),
+            Addressed::for_tenant(&me, Request::Sort(vec![5, (t % 3) as i32, 9, 1])),
+            Addressed::new(&me, &dev, Request::Search(b"gamma".to_vec())),
+        ]
+    }
+
+    /// Serve every connection's script over real sockets under the
+    /// given rung and return the responses in `(t, c, op)` order.
+    fn serve_under(backend: PollBackend) -> Vec<Vec<cpm::Result<Response>>> {
+        let net = NetServer::spawn(
+            build_server(),
+            NetConfig {
+                addr: "127.0.0.1:0".into(),
+                poll_backend: backend,
+                reader_cores: 2,
+                ..NetConfig::default()
+            },
+        )
+        .unwrap();
+        let addr = net.addr();
+        let conns = TENANTS * CONNS_PER_TENANT;
+        let barrier = Arc::new(Barrier::new(conns));
+        let mut handles = Vec::with_capacity(conns);
+        for t in 0..TENANTS {
+            for c in 0..CONNS_PER_TENANT {
+                let barrier = Arc::clone(&barrier);
+                handles.push(thread::spawn(move || -> Vec<cpm::Result<Response>> {
+                    let mut client = CpmClient::connect(addr).unwrap();
+                    client.hello(&tenant(t)).unwrap();
+                    barrier.wait();
+                    script(t, c)
+                        .iter()
+                        .map(|a| client.call_addressed(None, a.device.as_deref(), &a.op))
+                        .collect()
+                }));
+            }
+        }
+        let out = handles
+            .into_iter()
+            .map(|h| h.join().expect("conformance client panicked"))
+            .collect();
+        net.shutdown();
+        out
+    }
+
+    fn assert_same(a: &cpm::Result<Response>, b: &cpm::Result<Response>, ctx: &str) {
+        match (a, b) {
+            (Ok(x), Ok(y)) => assert_eq!(x, y, "{ctx}"),
+            (Err(x), Err(y)) => assert_eq!(x.to_string(), y.to_string(), "{ctx}"),
+            other => panic!("divergence at {ctx}: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn both_rungs_serve_bit_identical_responses() {
+        let under_poll = serve_under(PollBackend::Poll);
+        let under_epoll = serve_under(PollBackend::Epoll);
+
+        // Serial in-process replay: the ground truth both rungs must hit.
+        let mut local = build_server();
+        for (i, (p, e)) in under_poll.iter().zip(&under_epoll).enumerate() {
+            let (t, c) = (i / CONNS_PER_TENANT, i % CONNS_PER_TENANT);
+            let reference: Vec<cpm::Result<Response>> = script(t, c)
+                .iter()
+                .map(|a| local.handle_addressed(a))
+                .collect();
+            assert_eq!(p.len(), reference.len());
+            assert_eq!(e.len(), reference.len());
+            for (k, ((rp, re), rl)) in p.iter().zip(e).zip(&reference).enumerate() {
+                let ctx = format!("tenant {t} conn {c} op {k}");
+                assert_same(rp, re, &format!("poll vs epoll at {ctx}"));
+                assert_same(rp, rl, &format!("poll vs serial at {ctx}"));
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_rungs_name_themselves_in_the_gauge() {
+        for (backend, want) in [(PollBackend::Poll, "poll"), (PollBackend::Epoll, "epoll")] {
+            let net = NetServer::spawn(
+                build_server(),
+                NetConfig {
+                    addr: "127.0.0.1:0".into(),
+                    poll_backend: backend,
+                    ..NetConfig::default()
+                },
+            )
+            .unwrap();
+            let mut client = CpmClient::connect(net.addr()).unwrap();
+            let m = client.stats().unwrap();
+            assert_eq!(
+                m.gauges.poll_backend, want,
+                "the scraped gauge must name the serving rung"
+            );
+            net.shutdown();
+        }
+    }
+}
+
+/// Off-Linux sanity: both rungs still exist, still name themselves, and
+/// the epoll rung's fallback never misses readiness (report-all-ready is
+/// allowed to be spurious, never silent).
+#[test]
+fn every_rung_constructs_and_names_itself() {
+    let mut poll: Box<dyn Poller> = Box::new(PollShim::new());
+    let mut epoll: Box<dyn Poller> = Box::new(EpollShim::new());
+    assert_eq!(poll.name(), "poll");
+    assert_eq!(epoll.name(), "epoll");
+    let n = poll
+        .poll(&mut [], std::time::Duration::from_millis(5))
+        .unwrap();
+    assert_eq!(n, 0);
+    let n = epoll
+        .poll(&mut [], std::time::Duration::from_millis(5))
+        .unwrap();
+    assert_eq!(n, 0);
+}
